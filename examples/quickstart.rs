@@ -1,0 +1,74 @@
+//! Quickstart: offload one convolution to the (simulated) RBE, get the
+//! functional result through the AOT-compiled Pallas artifact, and read
+//! the cycle/power estimates from the calibrated models.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use marsellus::power::{OperatingPoint, PowerModel, Workload};
+use marsellus::rbe::functional::{conv_bitserial, NormQuant};
+use marsellus::rbe::{RbeJob, RbeTiming};
+use marsellus::runtime::{Runtime, TensorArg};
+use marsellus::util::{Args, Rng};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let rt = Runtime::cpu(args.get_or("artifacts", "artifacts"))?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // The quickstart artifact: 16x16x32 -> 32 channels, 3x3, W4/I4/O4.
+    let (h, cin, cout, bits, shift) = (16usize, 32usize, 32usize, 4usize, 10);
+    let name = format!(
+        "conv3x3_h{h}_ci{cin}_co{cout}_s1_w{bits}i{bits}o{bits}"
+    );
+    let exe = rt.load(&name)?;
+
+    let mut rng = Rng::new(7);
+    let hp = h + 2;
+    let x: Vec<i32> =
+        (0..hp * hp * cin).map(|_| rng.range_i32(0, 16)).collect();
+    let w: Vec<i32> =
+        (0..cout * cin * 9).map(|_| rng.range_i32(-8, 8)).collect();
+    let scale: Vec<i32> = (0..cout).map(|_| rng.range_i32(1, 16)).collect();
+    let bias: Vec<i32> = (0..cout).map(|_| rng.range_i32(-500, 500)).collect();
+
+    // 1) functional result via the L1 Pallas kernel, AOT-compiled to HLO
+    let out = exe.execute_i32(&[
+        TensorArg::new(x.clone(), vec![hp, hp, cin]),
+        TensorArg::new(w.clone(), vec![cout, cin, 3, 3]),
+        TensorArg::scalar_vec(scale.clone()),
+        TensorArg::scalar_vec(bias.clone()),
+    ])?;
+    println!("artifact {name}: output {} values", out[0].len());
+
+    // 2) cross-check against the Rust bit-serial datapath model (Eq. 1-2)
+    let job = RbeJob::conv3x3(h, h, cin, cout, 1, bits, bits, bits)?;
+    let nq = NormQuant { scale, bias, shift };
+    let ours = conv_bitserial(&job, &x, &w, &nq)?;
+    assert_eq!(ours, out[0], "bit-serial model vs PJRT artifact");
+    println!("bit-exact against the Rust bit-serial RBE model ✓");
+
+    // 3) timing + power at the nominal operating point
+    let phases = RbeTiming::phases(&job);
+    let op = OperatingPoint::nominal();
+    let p = PowerModel.total_mw(Workload::Rbe { duty_pct: 100 }, &op);
+    let us = phases.total() as f64 / op.freq_mhz;
+    println!(
+        "RBE estimate @{:.2} V/{:.0} MHz: {} cycles ({:.1} µs), {:.1} mW, \
+         {:.1} Gop/s",
+        op.vdd,
+        op.freq_mhz,
+        phases.total(),
+        us,
+        p,
+        job.ops() as f64 / us / 1.0e3
+    );
+    println!(
+        "  phases: setup {} load {} compute {} normquant {} streamout {}",
+        phases.setup, phases.load, phases.compute, phases.normquant,
+        phases.streamout
+    );
+    Ok(())
+}

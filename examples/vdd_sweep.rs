@@ -1,0 +1,19 @@
+//! Voltage/frequency/power sweep: regenerates Fig. 9 (f_max & power vs
+//! V_DD), Fig. 10 (fixed-frequency undervolting with ABB) and Fig. 15
+//! (efficiency vs performance) from the calibrated models + ISS.
+//!
+//! ```sh
+//! cargo run --release --example vdd_sweep [--fast]
+//! ```
+
+use anyhow::Result;
+use marsellus::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let fast = args.flag("fast");
+    println!("{}\n", marsellus::figures::fig9());
+    println!("{}\n", marsellus::figures::fig10());
+    println!("{}", marsellus::figures::fig15(fast)?);
+    Ok(())
+}

@@ -1,0 +1,129 @@
+"""AOT compilation driver: lower every L2 layer graph to an HLO-text
+artifact the rust runtime loads via PJRT.
+
+Interchange format is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` rust crate) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE, at build time (`make artifacts`); the rust binary is
+self-contained afterwards.
+
+Outputs into --out-dir (default ../artifacts):
+  <name>.hlo.txt   one per unique (op, shape, precision) tuple across all
+                   network configs, plus the quickstart demo artifact
+  manifest.json    contract consumed by the rust `dnn`/`runtime` modules:
+                   op, shapes, precisions, shift, and argument order per
+                   artifact
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+
+from . import model
+from .model import LayerSpec
+
+
+def to_hlo_text(fn, arg_shapes) -> str:
+    """jit-lower `fn` for int32 args of `arg_shapes` and emit HLO text."""
+    import jax.numpy as jnp
+    from jax._src.lib import xla_client as xc
+
+    specs = [jax.ShapeDtypeStruct(s, jnp.int32) for s in arg_shapes]
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def quickstart_spec() -> LayerSpec:
+    """Small standalone conv used by examples/quickstart.rs."""
+    return LayerSpec(op="conv3x3", name="quickstart", h=16, cin=32, cout=32,
+                     stride=1, w_bits=4, i_bits=4, o_bits=4, shift=10)
+
+
+def gather_specs(configs) -> dict:
+    """Unique artifact name -> LayerSpec over all requested configs."""
+    specs = {}
+    for cfg in configs:
+        for spec in model.resnet20_layers(cfg):
+            specs.setdefault(spec.artifact(), spec)
+    qs = quickstart_spec()
+    specs.setdefault(qs.artifact(), qs)
+    return specs
+
+
+def manifest_entry(name: str, spec: LayerSpec, arg_shapes) -> dict:
+    return {
+        "name": name,
+        "op": spec.op,
+        "h": spec.h,
+        "cin": spec.cin,
+        "cout": spec.cout,
+        "stride": spec.stride,
+        "w_bits": spec.w_bits,
+        "i_bits": spec.i_bits,
+        "o_bits": spec.o_bits,
+        "shift": spec.shift,
+        "arg_shapes": [list(s) for s in arg_shapes],
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None,
+                    help="artifact output directory (default: ../artifacts)")
+    ap.add_argument("--out", default=None,
+                    help="(compat) single-file target; triggers full build "
+                         "into its directory")
+    ap.add_argument("--configs", nargs="*",
+                    default=["uniform8", "mixed"])
+    ap.add_argument("--only", default=None,
+                    help="only build the artifact with this name")
+    args = ap.parse_args()
+
+    if args.out_dir:
+        out_dir = pathlib.Path(args.out_dir)
+    elif args.out:
+        out_dir = pathlib.Path(args.out).parent
+    else:
+        out_dir = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    specs = gather_specs(args.configs)
+    manifest = []
+    for name, spec in sorted(specs.items()):
+        fn, shapes = model.layer_fn(spec)
+        manifest.append(manifest_entry(name, spec, shapes))
+        if args.only and name != args.only:
+            continue
+        path = out_dir / f"{name}.hlo.txt"
+        text = to_hlo_text(fn, shapes)
+        path.write_text(text)
+        print(f"  {name}: {len(text)} chars", flush=True)
+
+    (out_dir / "manifest.json").write_text(
+        json.dumps({"artifacts": manifest}, indent=1))
+    # Rust-side contract: no JSON dependency is vendored in the build
+    # environment, so the runtime parses this TSV twin instead.
+    rows = ["name\top\th\tcin\tcout\tstride\tw_bits\ti_bits\to_bits\tshift"]
+    for m in manifest:
+        rows.append("\t".join(str(m[k]) for k in
+                              ("name", "op", "h", "cin", "cout", "stride",
+                               "w_bits", "i_bits", "o_bits", "shift")))
+    (out_dir / "manifest.tsv").write_text("\n".join(rows) + "\n")
+    # Sentinel consumed by the Makefile dependency check.
+    (out_dir / "model.hlo.txt").write_text(
+        "# sentinel: see manifest.json for the real artifact list\n"
+        + json.dumps([m["name"] for m in manifest]))
+    print(f"wrote {len(manifest)} artifacts + manifest to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+"""Bit-decomposition helpers shared by the RBE Pallas kernels.
+
+The RBE (paper SS II-B) computes a W-bit x I-bit product as W*I single-bit
+AND contributions, scaled by powers of two and accumulated in 32-bit
+registers (Eq. 1).  Activations are unsigned I-bit; weights are *signed*
+W-bit in two's complement, which bit-serial hardware realizes by giving the
+weight MSB plane a negative scale (-2^(W-1) instead of +2^(W-1)).  These
+helpers express exactly that decomposition in jnp so the Pallas kernel's
+arithmetic mirrors the datapath gate-for-gate.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def unsigned_bitplanes(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Stack the `bits` LSB planes of unsigned `x` along a new axis 0.
+
+    x: int32 tensor with values in [0, 2^bits).  Returns (bits, *x.shape)
+    int32 tensor of 0/1 values — the hardware's input bit streams.
+    """
+    planes = [(x >> j) & 1 for j in range(bits)]
+    return jnp.stack(planes, axis=0)
+
+
+def weight_bitplanes(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Bit planes of signed two's-complement `w` (values in [-2^(b-1), 2^(b-1))).
+
+    Planes are of the *unsigned offset pattern* (w & mask); the sign is
+    reintroduced by `bit_coefficients`, which weights the MSB plane
+    negatively.  Returns (bits, *w.shape) of 0/1 int32.
+    """
+    wu = w & ((1 << bits) - 1)  # two's-complement pattern as unsigned
+    planes = [(wu >> i) & 1 for i in range(bits)]
+    return jnp.stack(planes, axis=0)
+
+
+def bit_coefficients(w_bits: int, i_bits: int) -> np.ndarray:
+    """coef[i, j] = (+|-)2^(i+j): the Eq. 1 shift factor for weight-bit i and
+    input-bit j, with the weight MSB plane negative (two's complement)."""
+    coef = np.zeros((w_bits, i_bits), dtype=np.int64)
+    for i in range(w_bits):
+        sign = -1 if i == w_bits - 1 and w_bits > 1 else 1
+        for j in range(i_bits):
+            coef[i, j] = sign * (1 << (i + j))
+    return coef
+
+
+def normquant(acc: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              shift: int, o_bits: int) -> jnp.ndarray:
+    """Eq. 2 + ReLU: out = clip((scale*acc + bias) >> shift, 0, 2^O - 1).
+
+    scale/bias are per-output-channel int32 (broadcast over leading dims);
+    the right shift is arithmetic, exactly as the RBE Quantizer.
+    """
+    v = scale * acc + bias
+    v = jnp.right_shift(v, shift)  # arithmetic shift on signed int32
+    return jnp.clip(v, 0, (1 << o_bits) - 1)

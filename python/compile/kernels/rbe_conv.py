@@ -1,0 +1,238 @@
+"""L1 Pallas kernels: the RBE datapath (paper SS II-B, Eqs. 1-2).
+
+Each kernel computes a quantized convolution exactly the way the RBE
+hardware does:
+
+  1. decompose the unsigned I-bit activations and signed W-bit weights into
+     single-bit planes (`bitserial.py`);
+  2. form all binary dot-products between planes -- in hardware these are
+     the 32-wide AND+popcount BinConv units; here they are a single integer
+     einsum over the channel (and filter-tap) dimensions, summing 0/1
+     products;
+  3. recombine the (W x I) partial planes with +/-2^(i+j) shift
+     coefficients into the 32-bit accumulator (Eq. 1, two's-complement MSB
+     negative);
+  4. normalize/quantize with per-channel scale+bias, arithmetic right shift
+     and ReLU clipping to O bits (Eq. 2, the per-Core Quantizer).
+
+Kernels are lowered with ``interpret=True``: on CPU-PJRT a real Mosaic
+lowering cannot run, and the interpret path emits plain HLO integer ops the
+rust runtime executes bit-exactly.  See DESIGN.md SSTPU-mapping for how the
+same kernel tiles onto a real TPU (bit-plane einsum on the MXU, 5x5x32
+patches in VMEM standing in for the RBE input buffer).
+
+All tensors are int32 (the simulator's unpacked representation of the
+chip's packed 2-8 bit streams); accumulation is int32 like the RBE Accums,
+and the normquant product is widened to int64 before the shift, matching a
+>32-bit quantizer multiply datapath.
+"""
+
+import functools
+
+import jax
+
+# The normquant multiply (Eq. 2) is wider than 32 bits; the artifacts carry
+# s64 intermediates, which XLA:CPU executes natively.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .bitserial import (bit_coefficients, normquant, unsigned_bitplanes,
+                        weight_bitplanes)
+
+__all__ = ["rbe_conv3x3", "rbe_conv1x1", "rbe_linear", "add_requant",
+           "avgpool_quant"]
+
+
+def _recombine(part: jnp.ndarray, w_bits: int, i_bits: int) -> jnp.ndarray:
+    """Eq. 1 shift-add reassociation: acc = sum_{i,j} (+/-)2^(i+j) part[i,j].
+
+    Coefficients are compile-time python ints (pallas kernels may not
+    capture constant arrays), mirroring the RBE's static shifters.
+    """
+    coef = bit_coefficients(w_bits, i_bits)
+    acc = jnp.zeros(part.shape[2:], dtype=jnp.int32)
+    for i in range(w_bits):
+        for j in range(i_bits):
+            acc = acc + part[i, j] * jnp.int32(coef[i, j])
+    return acc
+
+
+def _conv3x3_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, *,
+                    w_bits, i_bits, o_bits, shift, stride):
+    """x: (H+2, W+2, Kin) unsigned; w: (Kout, Kin, 3, 3) signed;
+    o: (Ho, Wo, Kout)."""
+    x = x_ref[...]
+    w = w_ref[...]
+    ho, wo, kout = o_ref.shape
+    kin = x.shape[2]
+
+    x_b = unsigned_bitplanes(x, i_bits)          # (I, H+2, W+2, Kin)
+    w_b = weight_bitplanes(w, w_bits)            # (W, Kout, Kin, 3, 3)
+
+    # Gather the 9 filter-tap views of the input bit planes; each view is
+    # the stream one RBE Block consumes (one tap across 32-channel groups).
+    taps = []
+    for fy in range(3):
+        for fx in range(3):
+            v = jax.lax.slice(
+                x_b,
+                (0, fy, fx, 0),
+                (i_bits, fy + (ho - 1) * stride + 1,
+                 fx + (wo - 1) * stride + 1, kin),
+                (1, stride, stride, 1))
+            taps.append(v)                        # (I, Ho, Wo, Kin)
+    patches = jnp.stack(taps, axis=0)            # (9, I, Ho, Wo, Kin)
+
+    wt = jnp.transpose(w_b.reshape(w_bits, kout, kin, 9), (3, 0, 1, 2))
+
+    # Binary-domain dot products: contract filter taps (t) and channels (c)
+    # for every (weight-bit i, input-bit j) pair -- the BinConv AND arrays.
+    part = jnp.einsum("tjhwc,tikc->ijhwk", patches, wt,
+                      preferred_element_type=jnp.int32)
+
+    acc = _recombine(part, w_bits, i_bits)
+
+    scale = scale_ref[...].astype(jnp.int64)
+    bias = bias_ref[...].astype(jnp.int64)
+    out = normquant(acc.astype(jnp.int64), scale[None, None, :],
+                    bias[None, None, :], shift, o_bits)
+    o_ref[...] = out.astype(jnp.int32)
+
+
+def _conv1x1_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, *,
+                    w_bits, i_bits, o_bits, shift, stride):
+    """x: (H, W, Kin) unsigned; w: (Kout, Kin) signed; o: (Ho, Wo, Kout).
+
+    In 1x1 mode the RBE maps the W weight bits bit-parallel across the
+    Blocks of each Core; arithmetically this is the same plane einsum
+    without the tap dimension.
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    ho, wo, kout = o_ref.shape
+    kin = x.shape[2]
+
+    if stride != 1:
+        x = jax.lax.slice(x, (0, 0, 0),
+                          ((ho - 1) * stride + 1, (wo - 1) * stride + 1, kin),
+                          (stride, stride, 1))
+
+    x_b = unsigned_bitplanes(x, i_bits)          # (I, Ho, Wo, Kin)
+    w_b = weight_bitplanes(w, w_bits)            # (W, Kout, Kin)
+
+    part = jnp.einsum("jhwc,ikc->ijhwk", x_b, w_b,
+                      preferred_element_type=jnp.int32)
+    acc = _recombine(part, w_bits, i_bits)
+
+    scale = scale_ref[...].astype(jnp.int64)
+    bias = bias_ref[...].astype(jnp.int64)
+    out = normquant(acc.astype(jnp.int64), scale[None, None, :],
+                    bias[None, None, :], shift, o_bits)
+    o_ref[...] = out.astype(jnp.int32)
+
+
+def _linear_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, *,
+                   w_bits, i_bits, o_bits, shift):
+    """Fully-connected as the RBE's 1x1 corner case: x (Kin,), w (Kout, Kin)."""
+    x = x_ref[...]
+    w = w_ref[...]
+    x_b = unsigned_bitplanes(x, i_bits)          # (I, Kin)
+    w_b = weight_bitplanes(w, w_bits)            # (W, Kout, Kin)
+    part = jnp.einsum("jc,ikc->ijk", x_b, w_b,
+                      preferred_element_type=jnp.int32)
+    acc = _recombine(part, w_bits, i_bits)
+    scale = scale_ref[...].astype(jnp.int64)
+    bias = bias_ref[...].astype(jnp.int64)
+    out = normquant(acc.astype(jnp.int64), scale, bias, shift, o_bits)
+    o_ref[...] = out.astype(jnp.int32)
+
+
+def _add_requant_kernel(a_ref, b_ref, o_ref, *, scale_a, scale_b, shift,
+                        o_bits):
+    """Residual add + requantization (runs on the RISC-V cores on-chip)."""
+    a = a_ref[...].astype(jnp.int64)
+    b = b_ref[...].astype(jnp.int64)
+    v = jnp.right_shift(scale_a * a + scale_b * b, shift)
+    o_ref[...] = jnp.clip(v, 0, (1 << o_bits) - 1).astype(jnp.int32)
+
+
+def _avgpool_kernel(x_ref, o_ref, *, shift):
+    """Global average pool: sum over H,W then arithmetic shift (8x8 = 2^6)."""
+    x = x_ref[...].astype(jnp.int32)
+    s = jnp.sum(x, axis=(0, 1))
+    o_ref[...] = jnp.right_shift(s, shift)
+
+
+def rbe_conv3x3(x, w, scale, bias, *, w_bits, i_bits, o_bits, shift,
+                stride=1):
+    """3x3 quantized convolution on an already-padded input.
+
+    x: (H+2p, W+2p, Kin) int32 in [0, 2^i_bits); w: (Kout, Kin, 3, 3) int32
+    in [-2^(w_bits-1), 2^(w_bits-1)); returns (Ho, Wo, Kout) int32 in
+    [0, 2^o_bits).
+    """
+    hp, wp, _ = x.shape
+    kout = w.shape[0]
+    ho = (hp - 3) // stride + 1
+    wo = (wp - 3) // stride + 1
+    kern = functools.partial(_conv3x3_kernel, w_bits=w_bits, i_bits=i_bits,
+                             o_bits=o_bits, shift=shift, stride=stride)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((ho, wo, kout), jnp.int32),
+        interpret=True,
+    )(x, w, scale, bias)
+
+
+def rbe_conv1x1(x, w, scale, bias, *, w_bits, i_bits, o_bits, shift,
+                stride=1):
+    """1x1 (pointwise) quantized convolution.
+
+    x: (H, W, Kin); w: (Kout, Kin); returns (Ho, Wo, Kout).
+    """
+    h, wd, _ = x.shape
+    kout = w.shape[0]
+    ho = (h - 1) // stride + 1
+    wo = (wd - 1) // stride + 1
+    kern = functools.partial(_conv1x1_kernel, w_bits=w_bits, i_bits=i_bits,
+                             o_bits=o_bits, shift=shift, stride=stride)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((ho, wo, kout), jnp.int32),
+        interpret=True,
+    )(x, w, scale, bias)
+
+
+def rbe_linear(x, w, scale, bias, *, w_bits, i_bits, o_bits, shift):
+    """Fully-connected layer: x (Kin,), w (Kout, Kin) -> (Kout,)."""
+    kout = w.shape[0]
+    kern = functools.partial(_linear_kernel, w_bits=w_bits, i_bits=i_bits,
+                             o_bits=o_bits, shift=shift)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((kout,), jnp.int32),
+        interpret=True,
+    )(x, w, scale, bias)
+
+
+def add_requant(a, b, *, scale_a, scale_b, shift, o_bits):
+    """Residual add with requantization; a, b same shape."""
+    kern = functools.partial(_add_requant_kernel, scale_a=scale_a,
+                             scale_b=scale_b, shift=shift, o_bits=o_bits)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+def avgpool_quant(x, *, shift):
+    """Global average pooling via sum + arithmetic shift: (H, W, K) -> (K,)."""
+    kern = functools.partial(_avgpool_kernel, shift=shift)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((x.shape[2],), jnp.int32),
+        interpret=True,
+    )(x)

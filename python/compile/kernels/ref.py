@@ -1,0 +1,62 @@
+"""Pure-numpy oracle for the RBE kernels.
+
+This is the *specification*: a plain signed-integer convolution followed by
+Eq. 2 normquant, with none of the bit-serial restructuring.  The Pallas
+kernels in `rbe_conv.py` must agree bit-exactly with these functions for
+every shape and precision -- that equality is the core L1 correctness
+signal (pytest + hypothesis in python/tests/), and the same semantics are
+re-implemented a third time in rust (`rbe::functional`) and cross-checked
+against the AOT artifacts.
+"""
+
+import numpy as np
+
+
+def _normquant(acc, scale, bias, shift, o_bits):
+    v = (scale.astype(np.int64) * acc.astype(np.int64) +
+         bias.astype(np.int64)) >> shift
+    return np.clip(v, 0, (1 << o_bits) - 1).astype(np.int32)
+
+
+def conv3x3_ref(x, w, scale, bias, *, o_bits, shift, stride=1):
+    """x: (H+2p, W+2p, Kin) unsigned; w: (Kout, Kin, 3, 3) signed."""
+    x = np.asarray(x, dtype=np.int64)
+    w = np.asarray(w, dtype=np.int64)
+    hp, wp, kin = x.shape
+    kout = w.shape[0]
+    ho = (hp - 3) // stride + 1
+    wo = (wp - 3) // stride + 1
+    acc = np.zeros((ho, wo, kout), dtype=np.int64)
+    for h in range(ho):
+        for c in range(wo):
+            patch = x[h * stride:h * stride + 3, c * stride:c * stride + 3, :]
+            # (3,3,Kin) x (Kout,Kin,3,3) -> Kout
+            acc[h, c, :] = np.einsum("yxc,kcyx->k", patch, w)
+    return _normquant(acc, np.asarray(scale)[None, None, :],
+                      np.asarray(bias)[None, None, :], shift, o_bits)
+
+
+def conv1x1_ref(x, w, scale, bias, *, o_bits, shift, stride=1):
+    """x: (H, W, Kin) unsigned; w: (Kout, Kin) signed."""
+    x = np.asarray(x, dtype=np.int64)[::stride, ::stride, :]
+    w = np.asarray(w, dtype=np.int64)
+    acc = np.einsum("hwc,kc->hwk", x, w)
+    return _normquant(acc, np.asarray(scale)[None, None, :],
+                      np.asarray(bias)[None, None, :], shift, o_bits)
+
+
+def linear_ref(x, w, scale, bias, *, o_bits, shift):
+    """x: (Kin,) unsigned; w: (Kout, Kin) signed."""
+    acc = np.asarray(w, dtype=np.int64) @ np.asarray(x, dtype=np.int64)
+    return _normquant(acc, np.asarray(scale), np.asarray(bias), shift, o_bits)
+
+
+def add_requant_ref(a, b, *, scale_a, scale_b, shift, o_bits):
+    v = (np.asarray(a, dtype=np.int64) * scale_a +
+         np.asarray(b, dtype=np.int64) * scale_b) >> shift
+    return np.clip(v, 0, (1 << o_bits) - 1).astype(np.int32)
+
+
+def avgpool_ref(x, *, shift):
+    s = np.sum(np.asarray(x, dtype=np.int64), axis=(0, 1))
+    return (s >> shift).astype(np.int32)

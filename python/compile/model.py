@@ -1,0 +1,243 @@
+"""L2: quantized DNN layer graphs (paper SS IV) built on the L1 kernels.
+
+Defines the ResNet-20/CIFAR-10 network the paper deploys (Figs. 17-18),
+in two precision configurations:
+
+* ``uniform8`` -- every tensor 8-bit (the paper's "8-bit" baseline);
+* ``mixed``    -- a representative HAWQ assignment (weights in {2,3,6,8}
+  bits, activations in {4,8} bits) following SS IV: sensitive first/last
+  layers keep 8-bit weights, inner stages drop to 6/3/2 bits.
+
+The layer list here is the **single source of truth for artifact names**:
+`aot.py` lowers one PJRT artifact per unique (op, shape, precision) tuple
+using `artifact_name()`, and the rust `dnn` module re-derives the same
+names when scheduling layers (validated by rust integration tests against
+`artifacts/manifest.json`).
+
+Functional weights are randomly initialized: the paper's latency/energy
+results (the ones we reproduce) depend only on shapes, precisions and
+tiling, not on learned values -- see DESIGN.md substitution table.
+"""
+
+import dataclasses
+import math
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import rbe_conv as k
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One schedulable layer. `h` is the *unpadded* input spatial size."""
+    op: str                  # conv3x3 | conv1x1 | add | avgpool | linear
+    name: str                # human-readable position in the network
+    h: int                   # input spatial size (square); 0 for linear
+    cin: int
+    cout: int
+    stride: int = 1
+    w_bits: int = 8
+    i_bits: int = 8
+    o_bits: int = 8
+    shift: int = 0           # normquant right-shift (Eq. 2)
+    residual_of: Optional[str] = None  # for `add`: name of shortcut source
+
+    @property
+    def h_out(self) -> int:
+        return (self.h + self.stride - 1) // self.stride if self.h else 0
+
+    def artifact(self) -> str:
+        return artifact_name(self)
+
+
+def artifact_name(s: LayerSpec) -> str:
+    """Stable artifact naming shared with rust (`dnn::layer::artifact_name`)."""
+    if s.op in ("conv3x3", "conv1x1"):
+        return (f"{s.op}_h{s.h}_ci{s.cin}_co{s.cout}_s{s.stride}"
+                f"_w{s.w_bits}i{s.i_bits}o{s.o_bits}")
+    if s.op == "add":
+        return f"add_h{s.h}_k{s.cin}_o{s.o_bits}_sh{s.shift}"
+    if s.op == "avgpool":
+        return f"avgpool_h{s.h}_k{s.cin}"
+    if s.op == "linear":
+        return f"linear_ci{s.cin}_co{s.cout}_w{s.w_bits}i{s.i_bits}o{s.o_bits}"
+    raise ValueError(f"unknown op {s.op}")
+
+
+# Per-stage precision assignment: (w_bits, i_bits, o_bits) for convs.
+PRECISIONS = {
+    "uniform8": {
+        "stem": (8, 8, 8), "stage1": (8, 8, 8), "stage2": (8, 8, 8),
+        "stage3": (8, 8, 8), "down": (8, 8, 8), "fc": (8, 8, 8),
+    },
+    # Representative HAWQ (Dong et al.) mixed assignment per SS IV:
+    # weights {2,3,6,8}-bit, activations {4,8}-bit.
+    "mixed": {
+        "stem": (8, 8, 4), "stage1": (6, 4, 4), "stage2": (3, 4, 4),
+        "stage3": (2, 4, 4), "down": (8, 4, 4), "fc": (8, 4, 8),
+    },
+}
+
+
+def _shift_for(cin: int, w_bits: int, i_bits: int, o_bits: int,
+               taps: int) -> int:
+    """normquant shift keeping random-weight outputs in-range (value-level
+    behaviour does not affect timing; this keeps the pipeline
+    non-degenerate).
+
+    Variance model: acc of N=cin*taps products of U[0,2^i) activations and
+    U[-2^(w-1),2^(w-1)) weights has sigma ~ sqrt(N)*2^(w+i-1)*0.335; after
+    the ~2^3 mean scale, shifting by `shift` should leave sigma ~ 2^(o-2)
+    so ReLU keeps half the mass spread over the output range. Must stay
+    numerically identical to rust `dnn::layer::shift_for`.
+    """
+    x = (0.5 * math.log2(max(cin * taps, 1)) + w_bits + i_bits + 0.42
+         - o_bits)
+    return max(int(x + 0.5), 0)
+
+
+def resnet20_layers(config: str = "uniform8") -> List[LayerSpec]:
+    """The 3x{3-block} CIFAR ResNet-20 layer schedule, in execution order."""
+    p = PRECISIONS[config]
+    layers: List[LayerSpec] = []
+
+    def conv(op, name, h, cin, cout, stride, bits):
+        w, i, o = bits
+        layers.append(LayerSpec(
+            op=op, name=name, h=h, cin=cin, cout=cout, stride=stride,
+            w_bits=w, i_bits=i, o_bits=o,
+            shift=_shift_for(cin, w, i, o, 9 if op == "conv3x3" else 1)))
+
+    # Stem: 3 -> 16 channels at 32x32.
+    conv("conv3x3", "stem", 32, 3, 16, 1, p["stem"])
+
+    specs = [("stage1", 32, 16, 16), ("stage2", 16, 16, 32),
+             ("stage3", 8, 32, 64)]
+    for stage, h_out, cin_stage, ch in specs:
+        bits = p[stage]
+        for blk in range(3):
+            first = blk == 0 and stage != "stage1"
+            h_in = h_out * 2 if first else h_out
+            cin = cin_stage if blk == 0 else ch
+            stride = 2 if first else 1
+            conv("conv3x3", f"{stage}.b{blk}.conv0", h_in, cin, ch, stride,
+                 bits)
+            conv("conv3x3", f"{stage}.b{blk}.conv1", h_out, ch, ch, 1, bits)
+            if first:
+                conv("conv1x1", f"{stage}.b{blk}.down", h_in, cin, ch, 2,
+                     p["down"])
+                shortcut = f"{stage}.b{blk}.down"
+            else:
+                shortcut = "input"
+            layers.append(LayerSpec(op="add", name=f"{stage}.b{blk}.add",
+                                    h=h_out, cin=ch, cout=ch,
+                                    o_bits=bits[2], shift=1,
+                                    residual_of=shortcut))
+
+    layers.append(LayerSpec(op="avgpool", name="avgpool", h=8, cin=64,
+                            cout=64, shift=6))
+    w, i, o = p["fc"]
+    layers.append(LayerSpec(op="linear", name="fc", h=0, cin=64, cout=10,
+                            w_bits=w, i_bits=i, o_bits=o,
+                            shift=_shift_for(64, w, i, o, 1)))
+    return layers
+
+
+def layer_fn(spec: LayerSpec):
+    """Build the jax function implementing `spec` (the unit `aot.py` lowers).
+
+    Returns (fn, example_arg_shapes); fn returns a 1-tuple so the lowered
+    HLO has a tuple root (matching `return_tuple=True` on the rust side).
+    """
+    if spec.op == "conv3x3":
+        hp = spec.h + 2  # pad=1
+        def fn(x, w, scale, bias):
+            return (k.rbe_conv3x3(x, w, scale, bias, w_bits=spec.w_bits,
+                                  i_bits=spec.i_bits, o_bits=spec.o_bits,
+                                  shift=spec.shift, stride=spec.stride),)
+        shapes = [(hp, hp, spec.cin), (spec.cout, spec.cin, 3, 3),
+                  (spec.cout,), (spec.cout,)]
+    elif spec.op == "conv1x1":
+        def fn(x, w, scale, bias):
+            return (k.rbe_conv1x1(x, w, scale, bias, w_bits=spec.w_bits,
+                                  i_bits=spec.i_bits, o_bits=spec.o_bits,
+                                  shift=spec.shift, stride=spec.stride),)
+        shapes = [(spec.h, spec.h, spec.cin), (spec.cout, spec.cin),
+                  (spec.cout,), (spec.cout,)]
+    elif spec.op == "add":
+        def fn(a, b):
+            return (k.add_requant(a, b, scale_a=1, scale_b=1,
+                                  shift=spec.shift, o_bits=spec.o_bits),)
+        shapes = [(spec.h, spec.h, spec.cin)] * 2
+    elif spec.op == "avgpool":
+        def fn(x):
+            return (k.avgpool_quant(x, shift=6),)
+        shapes = [(spec.h, spec.h, spec.cin)]
+    elif spec.op == "linear":
+        def fn(x, w, scale, bias):
+            return (k.rbe_linear(x, w, scale, bias, w_bits=spec.w_bits,
+                                 i_bits=spec.i_bits, o_bits=spec.o_bits,
+                                 shift=spec.shift),)
+        shapes = [(spec.cin,), (spec.cout, spec.cin), (spec.cout,),
+                  (spec.cout,)]
+    else:
+        raise ValueError(spec.op)
+    return fn, shapes
+
+
+def random_params(spec: LayerSpec, rng: np.random.Generator):
+    """Random quantized weights/scale/bias for `spec` (numpy int32)."""
+    lo = -(1 << (spec.w_bits - 1))
+    hi = (1 << (spec.w_bits - 1))
+    if spec.op == "conv3x3":
+        w = rng.integers(lo, hi, (spec.cout, spec.cin, 3, 3))
+    elif spec.op in ("conv1x1", "linear"):
+        w = rng.integers(lo, hi, (spec.cout, spec.cin))
+    else:
+        return None
+    scale = rng.integers(1, 16, (spec.cout,))
+    bias = rng.integers(-(1 << 10), 1 << 10, (spec.cout,))
+    return (w.astype(np.int32), scale.astype(np.int32),
+            bias.astype(np.int32))
+
+
+def resnet20_forward(layers: List[LayerSpec], params: dict,
+                     image: np.ndarray) -> np.ndarray:
+    """Run the full network in jax (layer-by-layer, same order rust uses).
+
+    `params[name] = (w, scale, bias)`; `image` is (32, 32, 3) int32.
+    Returns the (10,) logit vector.  Python tests use this to validate the
+    schedule composes; the rust coordinator performs the same composition
+    through the AOT artifacts, and the two must agree bit-exactly.
+    """
+    cur = jnp.asarray(image, dtype=jnp.int32)
+    block_in = cur
+    down_out = None
+    for spec in layers:
+        if spec.op == "conv3x3":
+            if spec.name.endswith(".conv0"):
+                block_in = cur
+            w, s, b = map(jnp.asarray, params[spec.name])
+            x = jnp.pad(cur, ((1, 1), (1, 1), (0, 0)))
+            cur = k.rbe_conv3x3(x, w, s, b, w_bits=spec.w_bits,
+                                i_bits=spec.i_bits, o_bits=spec.o_bits,
+                                shift=spec.shift, stride=spec.stride)
+        elif spec.op == "conv1x1":
+            w, s, b = map(jnp.asarray, params[spec.name])
+            down_out = k.rbe_conv1x1(block_in, w, s, b, w_bits=spec.w_bits,
+                                     i_bits=spec.i_bits, o_bits=spec.o_bits,
+                                     shift=spec.shift, stride=spec.stride)
+        elif spec.op == "add":
+            short = block_in if spec.residual_of == "input" else down_out
+            cur = k.add_requant(cur, short, scale_a=1, scale_b=1,
+                                shift=spec.shift, o_bits=spec.o_bits)
+        elif spec.op == "avgpool":
+            cur = k.avgpool_quant(cur, shift=6)
+        elif spec.op == "linear":
+            w, s, b = map(jnp.asarray, params[spec.name])
+            cur = k.rbe_linear(cur, w, s, b, w_bits=spec.w_bits,
+                               i_bits=spec.i_bits, o_bits=spec.o_bits,
+                               shift=spec.shift)
+    return np.asarray(cur)

@@ -1,0 +1,135 @@
+"""L1 correctness: Pallas bit-serial kernels vs the pure-numpy oracle.
+
+Bit-exact equality is required (integer datapath), across shapes, strides
+and every 2..8-bit precision combination -- hypothesis drives the sweep.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import rbe_conv as k
+
+RNG = np.random.default_rng(1234)
+
+
+def rand_inputs(h, kin, kout, w_bits, i_bits, taps3x3, rng=RNG):
+    hp = h + 2 if taps3x3 else h
+    x = rng.integers(0, 1 << i_bits, (hp, hp, kin)).astype(np.int32)
+    wshape = (kout, kin, 3, 3) if taps3x3 else (kout, kin)
+    w = rng.integers(-(1 << (w_bits - 1)), 1 << (w_bits - 1),
+                     wshape).astype(np.int32)
+    scale = rng.integers(1, 32, (kout,)).astype(np.int32)
+    bias = rng.integers(-1000, 1000, (kout,)).astype(np.int32)
+    return x, w, scale, bias
+
+
+bits = st.integers(min_value=2, max_value=8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(w_bits=bits, i_bits=bits, o_bits=bits,
+       h=st.sampled_from([4, 6, 8]),
+       kin=st.sampled_from([3, 8, 16]),
+       kout=st.sampled_from([4, 16]),
+       stride=st.sampled_from([1, 2]),
+       shift=st.integers(min_value=0, max_value=16))
+def test_conv3x3_matches_ref(w_bits, i_bits, o_bits, h, kin, kout, stride,
+                             shift):
+    x, w, scale, bias = rand_inputs(h, kin, kout, w_bits, i_bits, True)
+    got = np.asarray(k.rbe_conv3x3(x, w, scale, bias, w_bits=w_bits,
+                                   i_bits=i_bits, o_bits=o_bits,
+                                   shift=shift, stride=stride))
+    want = ref.conv3x3_ref(x, w, scale, bias, o_bits=o_bits, shift=shift,
+                           stride=stride)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(w_bits=bits, i_bits=bits, o_bits=bits,
+       h=st.sampled_from([4, 8]),
+       kin=st.sampled_from([8, 16, 32]),
+       kout=st.sampled_from([8, 32]),
+       stride=st.sampled_from([1, 2]),
+       shift=st.integers(min_value=0, max_value=16))
+def test_conv1x1_matches_ref(w_bits, i_bits, o_bits, h, kin, kout, stride,
+                             shift):
+    x, w, scale, bias = rand_inputs(h, kin, kout, w_bits, i_bits, False)
+    got = np.asarray(k.rbe_conv1x1(x, w, scale, bias, w_bits=w_bits,
+                                   i_bits=i_bits, o_bits=o_bits,
+                                   shift=shift, stride=stride))
+    want = ref.conv1x1_ref(x, w, scale, bias, o_bits=o_bits, shift=shift,
+                           stride=stride)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(w_bits=bits, i_bits=bits, o_bits=bits,
+       kin=st.sampled_from([16, 64]),
+       kout=st.sampled_from([10, 32]),
+       shift=st.integers(min_value=0, max_value=12))
+def test_linear_matches_ref(w_bits, i_bits, o_bits, kin, kout, shift):
+    rng = np.random.default_rng(7)
+    x = rng.integers(0, 1 << i_bits, (kin,)).astype(np.int32)
+    w = rng.integers(-(1 << (w_bits - 1)), 1 << (w_bits - 1),
+                     (kout, kin)).astype(np.int32)
+    scale = rng.integers(1, 32, (kout,)).astype(np.int32)
+    bias = rng.integers(-1000, 1000, (kout,)).astype(np.int32)
+    got = np.asarray(k.rbe_linear(x, w, scale, bias, w_bits=w_bits,
+                                  i_bits=i_bits, o_bits=o_bits, shift=shift))
+    want = ref.linear_ref(x, w, scale, bias, o_bits=o_bits, shift=shift)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(o_bits=bits, shift=st.integers(min_value=0, max_value=8),
+       h=st.sampled_from([4, 8]), ch=st.sampled_from([8, 32]))
+def test_add_requant_matches_ref(o_bits, shift, h, ch):
+    rng = np.random.default_rng(9)
+    a = rng.integers(0, 256, (h, h, ch)).astype(np.int32)
+    b = rng.integers(0, 256, (h, h, ch)).astype(np.int32)
+    got = np.asarray(k.add_requant(a, b, scale_a=1, scale_b=1, shift=shift,
+                                   o_bits=o_bits))
+    want = ref.add_requant_ref(a, b, scale_a=1, scale_b=1, shift=shift,
+                               o_bits=o_bits)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_avgpool_matches_ref():
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 256, (8, 8, 64)).astype(np.int32)
+    got = np.asarray(k.avgpool_quant(x, shift=6))
+    np.testing.assert_array_equal(got, ref.avgpool_ref(x, shift=6))
+
+
+def test_weight_msb_is_negative():
+    """Two's-complement bit weighting: w = -4 at 3 bits must contribute -4."""
+    x = np.ones((1, 1, 1), dtype=np.int32)
+    w = np.full((1, 1), -4, dtype=np.int32)
+    scale = np.ones(1, dtype=np.int32)
+    bias = np.full((1,), 100, dtype=np.int32)
+    out = np.asarray(k.rbe_conv1x1(x, w, scale, bias, w_bits=3, i_bits=1,
+                                   o_bits=8, shift=0))
+    assert out.flatten()[0] == 96  # 100 + (-4)
+
+
+def test_relu_clipping():
+    """Eq. 2 clips to [0, 2^O - 1] -- negative accumulations become 0."""
+    x = np.full((1, 1, 4), 3, dtype=np.int32)
+    w = np.full((1, 4), -2, dtype=np.int32)
+    scale = np.ones(1, dtype=np.int32)
+    bias = np.zeros(1, dtype=np.int32)
+    out = np.asarray(k.rbe_conv1x1(x, w, scale, bias, w_bits=3, i_bits=2,
+                                   o_bits=4, shift=0))
+    assert out.flatten()[0] == 0
+
+
+def test_output_saturation():
+    x = np.full((1, 1, 8), 255, dtype=np.int32)
+    w = np.full((1, 8), 127, dtype=np.int32)
+    scale = np.ones(1, dtype=np.int32)
+    bias = np.zeros(1, dtype=np.int32)
+    out = np.asarray(k.rbe_conv1x1(x, w, scale, bias, w_bits=8, i_bits=8,
+                                   o_bits=4, shift=0))
+    assert out.flatten()[0] == 15

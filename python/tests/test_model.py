@@ -1,0 +1,113 @@
+"""L2 model tests: ResNet-20 layer schedule structure + end-to-end forward."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.model import LayerSpec
+
+
+@pytest.mark.parametrize("config", ["uniform8", "mixed"])
+def test_layer_count(config):
+    layers = model.resnet20_layers(config)
+    convs = [l for l in layers if l.op == "conv3x3"]
+    # ResNet-20 = stem + 18 3x3 convs (+2 1x1 downsamples not counted).
+    assert len(convs) == 19
+    assert sum(1 for l in layers if l.op == "conv1x1") == 2
+    assert sum(1 for l in layers if l.op == "add") == 9
+    assert layers[-1].op == "linear"
+    assert layers[-2].op == "avgpool"
+
+
+def test_shapes_chain():
+    """Each layer's input shape must match the previous producer's output."""
+    layers = model.resnet20_layers("uniform8")
+    cur_h, cur_c = 32, 3
+    for l in layers:
+        if l.op in ("conv3x3", "conv1x1"):
+            if l.op == "conv3x3":
+                assert l.h == cur_h or l.name.endswith(".down"), l
+            if not l.name.endswith(".down"):
+                assert l.cin == cur_c, l
+                cur_h, cur_c = l.h_out, l.cout
+        elif l.op == "add":
+            assert (l.h, l.cin) == (cur_h, cur_c), l
+        elif l.op == "avgpool":
+            assert (l.h, l.cin) == (cur_h, cur_c)
+            cur_h = 1
+        elif l.op == "linear":
+            assert l.cin == cur_c
+
+
+def test_mixed_precisions_follow_hawq():
+    layers = model.resnet20_layers("mixed")
+    wbits = {l.w_bits for l in layers if l.op.startswith("conv")}
+    assert wbits <= {2, 3, 6, 8}
+    ibits = {l.i_bits for l in layers if l.op.startswith("conv")}
+    assert ibits <= {4, 8}
+
+
+def test_artifact_names_unique_per_shape():
+    layers = model.resnet20_layers("uniform8")
+    # Repeated residual blocks share artifacts -- that's the point.
+    names = {l.artifact() for l in layers}
+    assert len(names) < len(layers)
+    for n in names:
+        assert " " not in n and "/" not in n
+
+
+@pytest.mark.parametrize("config", ["uniform8", "mixed"])
+def test_forward_runs_and_is_deterministic(config):
+    layers = model.resnet20_layers(config)
+    rng = np.random.default_rng(42)
+    params = {l.name: model.random_params(l, rng)
+              for l in layers if l.op in ("conv3x3", "conv1x1", "linear")}
+    image = rng.integers(0, 1 << layers[0].i_bits,
+                         (32, 32, 3)).astype(np.int32)
+    out1 = model.resnet20_forward(layers, params, image)
+    out2 = model.resnet20_forward(layers, params, image)
+    assert out1.shape == (10,)
+    np.testing.assert_array_equal(out1, out2)
+    assert out1.min() >= 0  # final layer output is O-bit unsigned
+
+
+def test_forward_layerwise_matches_ref_oracle():
+    """Compose the numpy oracle layer-by-layer and compare with the jax
+    model -- validates the schedule semantics end to end."""
+    from compile.kernels import ref
+
+    layers = model.resnet20_layers("mixed")
+    rng = np.random.default_rng(0)
+    params = {l.name: model.random_params(l, rng)
+              for l in layers if l.op in ("conv3x3", "conv1x1", "linear")}
+    image = rng.integers(0, 16, (32, 32, 3)).astype(np.int32)
+
+    cur = image
+    block_in = cur
+    down_out = None
+    for spec in layers:
+        if spec.op == "conv3x3":
+            if spec.name.endswith(".conv0"):
+                block_in = cur
+            w, s, b = params[spec.name]
+            x = np.pad(cur, ((1, 1), (1, 1), (0, 0)))
+            cur = ref.conv3x3_ref(x, w, s, b, o_bits=spec.o_bits,
+                                  shift=spec.shift, stride=spec.stride)
+        elif spec.op == "conv1x1":
+            w, s, b = params[spec.name]
+            down_out = ref.conv1x1_ref(block_in, w, s, b,
+                                       o_bits=spec.o_bits, shift=spec.shift,
+                                       stride=spec.stride)
+        elif spec.op == "add":
+            short = block_in if spec.residual_of == "input" else down_out
+            cur = ref.add_requant_ref(cur, short, scale_a=1, scale_b=1,
+                                      shift=spec.shift, o_bits=spec.o_bits)
+        elif spec.op == "avgpool":
+            cur = ref.avgpool_ref(cur, shift=6)
+        elif spec.op == "linear":
+            w, s, b = params[spec.name]
+            cur = ref.linear_ref(cur, w, s, b, o_bits=spec.o_bits,
+                                 shift=spec.shift)
+
+    got = model.resnet20_forward(layers, params, image)
+    np.testing.assert_array_equal(got, cur)

@@ -1,0 +1,156 @@
+//! The ABB generator hardware control loop (paper §II-C, based on the
+//! Moursy et al. regulator): slews the body-bias voltage toward forward
+//! bias when pre-errors arrive, relaxes it when the system is quiet.
+
+use crate::power::FBB_MAX_V;
+
+/// Control-loop constants.
+#[derive(Debug, Clone)]
+pub struct GeneratorConfig {
+    /// FBB volts gained per cycle while boosting. A full 0.3 V transition
+    /// takes ~310 cycles (paper Fig. 12: ~0.66 µs at 470 MHz).
+    pub boost_slew_v_per_cycle: f64,
+    /// FBB volts dropped per cycle while relaxing (orders of magnitude
+    /// slower — leakage optimization, not timing recovery).
+    pub relax_slew_v_per_cycle: f64,
+    /// Control windows without pre-errors before relaxation starts.
+    pub quiet_windows: u32,
+    /// FBB increment requested per pre-error window.
+    pub boost_step_v: f64,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        Self {
+            boost_slew_v_per_cycle: 0.3 / 310.0,
+            relax_slew_v_per_cycle: 0.9 / 800_000.0,
+            quiet_windows: 8,
+            boost_step_v: 0.15,
+        }
+    }
+}
+
+/// Discrete-time model of the generator.
+#[derive(Debug, Clone)]
+pub struct AbbGenerator {
+    pub cfg: GeneratorConfig,
+    /// Present body-bias output.
+    pub fbb_v: f64,
+    /// Where the loop is slewing to.
+    target_v: f64,
+    quiet: u32,
+    /// Rising boost transitions observed (Fig. 11 counts these).
+    pub boost_events: u64,
+    boosting: bool,
+}
+
+impl AbbGenerator {
+    pub fn new(cfg: GeneratorConfig) -> Self {
+        let quiet = cfg.quiet_windows; // start in the relaxed state
+        Self {
+            cfg,
+            fbb_v: 0.0,
+            target_v: 0.0,
+            quiet,
+            boost_events: 0,
+            boosting: false,
+        }
+    }
+
+    /// Advance one control window of `cycles` cycles, with `pre_errors`
+    /// reported by the OCMs in that window.
+    pub fn step(&mut self, pre_errors: u32, cycles: u64) {
+        if pre_errors > 0 {
+            // a boost *event* is a wake from a relaxed state (Fig. 11
+            // counts two across the trace); corrections while pre-errors
+            // keep arriving belong to the same episode
+            let woke = self.quiet >= self.cfg.quiet_windows;
+            self.quiet = 0;
+            let nt = (self.fbb_v + self.cfg.boost_step_v).min(FBB_MAX_V);
+            if nt > self.target_v {
+                self.target_v = nt;
+            }
+            if woke && self.target_v > self.fbb_v + 1e-9 {
+                self.boosting = true;
+                self.boost_events += 1;
+            }
+        } else {
+            self.quiet = self.quiet.saturating_add(1);
+            if self.quiet >= self.cfg.quiet_windows {
+                // relax: target follows the (slowly dropping) output
+                self.target_v = 0.0;
+            }
+        }
+        // Slew the output toward the target.
+        let dt = cycles as f64;
+        if self.target_v > self.fbb_v {
+            self.fbb_v = (self.fbb_v
+                + self.cfg.boost_slew_v_per_cycle * dt)
+                .min(self.target_v);
+            if (self.fbb_v - self.target_v).abs() < 1e-9 {
+                self.boosting = false;
+            }
+        } else {
+            self.boosting = false;
+            self.fbb_v = (self.fbb_v - self.cfg.relax_slew_v_per_cycle * dt)
+                .max(self.target_v.max(0.0));
+        }
+    }
+
+    /// Cycles a full `delta_v` boost transition takes (Fig. 12).
+    pub fn transition_cycles(&self, delta_v: f64) -> u64 {
+        (delta_v / self.cfg.boost_slew_v_per_cycle).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boost_transition_is_about_310_cycles() {
+        let g = AbbGenerator::new(GeneratorConfig::default());
+        let t = g.transition_cycles(0.3);
+        assert!((300..=320).contains(&t), "{t}");
+    }
+
+    #[test]
+    fn pre_errors_drive_boost_then_quiet_relaxes() {
+        let mut g = AbbGenerator::new(GeneratorConfig::default());
+        // hammer pre-errors: output should climb towards max
+        for _ in 0..100 {
+            g.step(4, 64);
+        }
+        assert!(g.fbb_v > 0.5, "fbb {}", g.fbb_v);
+        assert_eq!(g.boost_events, 1); // one continuous boost episode
+        let peak = g.fbb_v;
+        // long quiet period: relaxes, but much slower than the boost
+        for _ in 0..200 {
+            g.step(0, 64);
+        }
+        assert!(g.fbb_v < peak);
+        assert!(g.fbb_v > 0.0, "relaxation should be gradual");
+        // new pre-error burst: second boost event
+        for _ in 0..50 {
+            g.step(2, 64);
+        }
+        assert_eq!(g.boost_events, 2);
+    }
+
+    #[test]
+    fn clamps_at_fbb_max() {
+        let mut g = AbbGenerator::new(GeneratorConfig::default());
+        for _ in 0..100_000 {
+            g.step(8, 64);
+        }
+        assert!(g.fbb_v <= FBB_MAX_V + 1e-12);
+    }
+
+    #[test]
+    fn boost_rate_much_faster_than_relax() {
+        let c = GeneratorConfig::default();
+        assert!(
+            c.boost_slew_v_per_cycle / c.relax_slew_v_per_cycle > 100.0
+        );
+    }
+}

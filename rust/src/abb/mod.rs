@@ -1,0 +1,26 @@
+//! On-Chip Monitors + Adaptive Body Biasing (paper §II-C, Figs. 5,
+//! 10–12).
+//!
+//! The chip instruments the 1% most timing-critical register endpoints
+//! with shadow-register monitors (OCMs) that raise a *pre-error* when an
+//! endpoint's arrival time enters the guard band before the clock edge.
+//! A hardware control loop in the ABB generator reacts by slewing the
+//! N/P-well bias toward stronger forward body bias (lower V_th, faster
+//! logic) and relaxes it when no pre-errors arrive, trading leakage for
+//! timing margin on the fly.
+//!
+//! * [`ocm`] — statistical model of the monitored endpoint population
+//!   (path-delay distribution scaled by the f_max(V, FBB) curve) and the
+//!   per-cycle pre-error sampling given workload activity.
+//! * [`generator`] — the discrete-time control loop (boost slew ≈ 310
+//!   cycles per transition, Fig. 12; slow relaxation).
+//! * [`sim`] — couples both over a phased workload and records the
+//!   Fig. 11/12 traces.
+
+pub mod generator;
+pub mod ocm;
+pub mod sim;
+
+pub use generator::{AbbGenerator, GeneratorConfig};
+pub use ocm::OcmBank;
+pub use sim::{AbbSim, Phase, TracePoint};

@@ -1,0 +1,157 @@
+//! On-Chip Monitor bank: the monitored near-critical endpoint population.
+
+use crate::power::fmax_mhz;
+use crate::util::Rng;
+
+/// Fraction of the clock period used as the OCM guard band (the delay of
+/// the shadow-register path; paper Fig. 5 "pre-error delay margins").
+/// 4% sits inside the silicon's 5% signoff margin (420 vs 400 MHz), so
+/// the signoff point is pre-error-free while undervolt/overclock points
+/// trip the monitors before real failures.
+pub const GUARD_BAND_FRAC: f64 = 0.04;
+
+/// A bank of OCM-instrumented endpoints. Endpoint `i` has a relative path
+/// delay `r_i` (fraction of the critical path); the signoff selection
+/// keeps only the worst 1%, so `r_i` concentrates near 1.0.
+#[derive(Debug, Clone)]
+pub struct OcmBank {
+    /// Relative delays in (0.9, 1.0]; the critical path itself is 1.0.
+    rel_delay: Vec<f64>,
+}
+
+/// What the monitors reported in one sampling window.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OcmReport {
+    /// Endpoints that tripped the shadow-register comparison.
+    pub pre_errors: u32,
+    /// Endpoints that actually missed the clock edge (functional failure —
+    /// with ABB active this must stay zero).
+    pub real_errors: u32,
+}
+
+impl OcmBank {
+    /// `n` monitored endpoints (the paper instruments the worst 1% of
+    /// endpoints; the absolute number is not disclosed — 128 keeps the
+    /// statistics smooth).
+    pub fn new(n: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let rel_delay = (0..n)
+            .map(|_| {
+                // quadratic concentration towards the critical path:
+                // u^2 maps U(0,1) mass towards 0 => delays towards 1.0
+                let u = rng.f64();
+                1.0 - 0.1 * u * u
+            })
+            .collect();
+        Self { rel_delay }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rel_delay.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rel_delay.is_empty()
+    }
+
+    /// Sample one control window: each endpoint is exercised with
+    /// probability `activity`; exercised endpoints compare their arrival
+    /// time against the guard band.
+    ///
+    /// `freq_mhz` is the actual clock; path delays scale with
+    /// 1/f_max(vdd, fbb) from the calibrated V/f model. `rel_cap` bounds
+    /// the relative depth of paths the current workload exercises: light
+    /// phases (data marshaling) never toggle the deepest DOTP/RBE paths,
+    /// and at a phase transition activity ramps through shallower logic
+    /// first — which is precisely why the OCMs catch a pre-error before
+    /// any real failure (paper Fig. 5 right).
+    pub fn sample(
+        &self,
+        vdd: f64,
+        fbb_v: f64,
+        freq_mhz: f64,
+        activity: f64,
+        rel_cap: f64,
+        rng: &mut Rng,
+    ) -> OcmReport {
+        let period_ns = 1.0e3 / freq_mhz;
+        let crit_ns = 1.0e3 / fmax_mhz(vdd, fbb_v);
+        let guard = GUARD_BAND_FRAC * period_ns;
+        let mut rep = OcmReport::default();
+        for &r in &self.rel_delay {
+            if r > rel_cap || rng.f64() >= activity {
+                continue;
+            }
+            let d = r * crit_ns;
+            if d > period_ns {
+                rep.real_errors += 1;
+            } else if d > period_ns - guard {
+                rep.pre_errors += 1;
+            }
+        }
+        rep
+    }
+
+    /// Deterministic worst-case check: would the critical path meet timing?
+    pub fn worst_path_ok(&self, vdd: f64, fbb_v: f64, freq_mhz: f64) -> bool {
+        1.0e3 / fmax_mhz(vdd, fbb_v) <= 1.0e3 / freq_mhz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::FBB_MAX_V;
+
+    #[test]
+    fn delays_concentrate_near_critical() {
+        let b = OcmBank::new(1000, 1);
+        let near: usize =
+            b.rel_delay.iter().filter(|&&r| r > 0.97).count();
+        assert!(near > 500, "near-critical fraction too small: {near}");
+        assert!(b.rel_delay.iter().all(|&r| (0.9..=1.0).contains(&r)));
+    }
+
+    /// At signoff (0.8 V, 400 MHz) there is margin: no errors at all.
+    #[test]
+    fn clean_at_signoff() {
+        let b = OcmBank::new(128, 2);
+        let mut rng = Rng::new(3);
+        let rep = b.sample(0.8, 0.0, 400.0, 1.0, 1.0, &mut rng);
+        assert_eq!(rep, OcmReport::default());
+    }
+
+    /// Undervolted to 0.70 V at 400 MHz: real errors without ABB (paper:
+    /// SoC stops working below 0.74 V), none with full FBB.
+    #[test]
+    fn undervolt_errors_without_fbb() {
+        let b = OcmBank::new(128, 4);
+        let mut rng = Rng::new(5);
+        let rep = b.sample(0.70, 0.0, 400.0, 1.0, 1.0, &mut rng);
+        assert!(rep.real_errors > 0);
+        let rep = b.sample(0.70, FBB_MAX_V, 400.0, 1.0, 1.0, &mut rng);
+        assert_eq!(rep.real_errors, 0);
+    }
+
+    /// Overclocked to 470 MHz at 0.8 V: pre-errors persist even at full
+    /// FBB (the operating point sits inside the guard band) but no real
+    /// errors — exactly the Fig. 11 regime.
+    #[test]
+    fn overclock_sits_in_guard_band() {
+        let b = OcmBank::new(128, 6);
+        let mut rng = Rng::new(7);
+        let rep = b.sample(0.8, FBB_MAX_V, 470.0, 1.0, 1.0, &mut rng);
+        assert_eq!(rep.real_errors, 0, "{rep:?}");
+        assert!(rep.pre_errors > 0);
+    }
+
+    /// Zero activity exercises nothing (the low-intensity phase of
+    /// Fig. 11: monitors see no transitions, so no pre-errors).
+    #[test]
+    fn no_activity_no_errors() {
+        let b = OcmBank::new(128, 8);
+        let mut rng = Rng::new(9);
+        let rep = b.sample(0.65, 0.0, 470.0, 0.0, 1.0, &mut rng);
+        assert_eq!(rep, OcmReport::default());
+    }
+}

@@ -1,0 +1,210 @@
+//! Cluster DMA engine (paper §II: 64-bit/cycle read + 64-bit/cycle write
+//! between L2 and the TCDM, through the dual-clock AXI FIFOs).
+//!
+//! Functionally the DMA copies words between L2 and L1; for timing it
+//! reports the cycle cost of a (possibly 2-D strided) transfer, which the
+//! mapping layer overlaps with compute via double buffering (paper
+//! Fig. 16).
+
+use anyhow::{bail, Result};
+
+use super::memmap::{L2_SIZE, TCDM_SIZE};
+use super::tcdm::Tcdm;
+
+/// One DMA job description (word granularity).
+#[derive(Debug, Clone, Copy)]
+pub struct DmaTransfer {
+    /// Source word offset (in L2 for in-transfers, L1 for out-transfers).
+    pub src_word: usize,
+    /// Destination word offset.
+    pub dst_word: usize,
+    /// Contiguous words per line.
+    pub line_words: usize,
+    /// Number of lines (1 = 1-D transfer).
+    pub lines: usize,
+    /// Source stride between lines, in words.
+    pub src_stride: usize,
+    /// Destination stride between lines, in words.
+    pub dst_stride: usize,
+}
+
+impl DmaTransfer {
+    pub fn linear(src_word: usize, dst_word: usize, words: usize) -> Self {
+        Self {
+            src_word,
+            dst_word,
+            line_words: words,
+            lines: 1,
+            src_stride: 0,
+            dst_stride: 0,
+        }
+    }
+
+    pub fn total_words(&self) -> usize {
+        self.line_words * self.lines
+    }
+}
+
+/// Timing + functional model of the cluster DMA.
+#[derive(Debug, Clone)]
+pub struct DmaEngine {
+    /// Payload bandwidth in bytes/cycle (paper: 64-bit/cycle each
+    /// direction = 8 B/cycle).
+    pub bytes_per_cycle: f64,
+    /// Programming + arbitration overhead per job, cycles.
+    pub setup_cycles: u64,
+    /// Extra overhead per 2-D line (address regeneration).
+    pub per_line_cycles: u64,
+}
+
+impl Default for DmaEngine {
+    fn default() -> Self {
+        Self { bytes_per_cycle: 8.0, setup_cycles: 20, per_line_cycles: 2 }
+    }
+}
+
+impl DmaEngine {
+    /// Cycle cost of a transfer (payload + setup + line overhead).
+    pub fn cycles(&self, t: &DmaTransfer) -> u64 {
+        let payload =
+            ((t.total_words() * 4) as f64 / self.bytes_per_cycle).ceil() as u64;
+        self.setup_cycles + payload + self.per_line_cycles * t.lines as u64
+    }
+
+    /// Cycle cost for a plain byte count (convenience for the tiler).
+    pub fn cycles_for_bytes(&self, bytes: u64) -> u64 {
+        self.setup_cycles + (bytes as f64 / self.bytes_per_cycle).ceil() as u64
+    }
+
+    /// Functionally copy L2 -> L1.
+    pub fn run_in(&self, mem: &mut Tcdm, t: &DmaTransfer) -> Result<u64> {
+        self.check(t, true)?;
+        for l in 0..t.lines {
+            let s = t.src_word + l * t.src_stride;
+            let d = t.dst_word + l * t.dst_stride;
+            for k in 0..t.line_words {
+                mem.l1[d + k] = mem.l2[s + k];
+            }
+        }
+        Ok(self.cycles(t))
+    }
+
+    /// Functionally copy L1 -> L2.
+    pub fn run_out(&self, mem: &mut Tcdm, t: &DmaTransfer) -> Result<u64> {
+        self.check(t, false)?;
+        for l in 0..t.lines {
+            let s = t.src_word + l * t.src_stride;
+            let d = t.dst_word + l * t.dst_stride;
+            for k in 0..t.line_words {
+                mem.l2[d + k] = mem.l1[s + k];
+            }
+        }
+        Ok(self.cycles(t))
+    }
+
+    fn check(&self, t: &DmaTransfer, inbound: bool) -> Result<()> {
+        let l1_words = (TCDM_SIZE / 4) as usize;
+        let l2_words = (L2_SIZE / 4) as usize;
+        let (src_limit, dst_limit) = if inbound {
+            (l2_words, l1_words)
+        } else {
+            (l1_words, l2_words)
+        };
+        let src_end =
+            t.src_word + t.src_stride * t.lines.saturating_sub(1) + t.line_words;
+        let dst_end =
+            t.dst_word + t.dst_stride * t.lines.saturating_sub(1) + t.line_words;
+        if src_end > src_limit || dst_end > dst_limit {
+            bail!(
+                "dma transfer out of range: src_end {src_end}/{src_limit} \
+                 dst_end {dst_end}/{dst_limit}"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Analytical model of the SOC I/O DMA + external HyperRAM (L3) interface,
+/// following the paper's own approach (§IV: "off-chip memory accesses are
+/// modeled using an analytical model of I/O obtained from data of a
+/// previous prototype" [Vega]).
+#[derive(Debug, Clone)]
+pub struct IoDma {
+    /// Sustained HyperRAM bandwidth, bytes per microsecond (~400 MB/s for
+    /// an 8-bit DDR HyperBus at 200 MHz, as in Vega).
+    pub bytes_per_us: f64,
+    /// Fixed per-transfer latency, microseconds.
+    pub latency_us: f64,
+}
+
+impl Default for IoDma {
+    fn default() -> Self {
+        Self { bytes_per_us: 400.0, latency_us: 0.3 }
+    }
+}
+
+impl IoDma {
+    /// Wall-clock microseconds to move `bytes` between L3 and L2.
+    pub fn us_for_bytes(&self, bytes: u64) -> f64 {
+        self.latency_us + bytes as f64 / self.bytes_per_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_copy_roundtrip() {
+        let mut mem = Tcdm::new();
+        for i in 0..64 {
+            mem.l2[i] = i as u32 * 3;
+        }
+        let dma = DmaEngine::default();
+        let t = DmaTransfer::linear(0, 100, 64);
+        let cyc = dma.run_in(&mut mem, &t).unwrap();
+        assert_eq!(mem.l1[100..164], mem.l2[0..64]);
+        // 64 words = 256 B at 8 B/cycle = 32 + setup 20 + 2
+        assert_eq!(cyc, 54);
+    }
+
+    #[test]
+    fn strided_2d() {
+        let mut mem = Tcdm::new();
+        for i in 0..100 {
+            mem.l2[i] = i as u32;
+        }
+        let dma = DmaEngine::default();
+        // 4 lines of 8 words with src stride 16 -> packs a (4,8) tile
+        let t = DmaTransfer {
+            src_word: 0,
+            dst_word: 0,
+            line_words: 8,
+            lines: 4,
+            src_stride: 16,
+            dst_stride: 8,
+        };
+        dma.run_in(&mut mem, &t).unwrap();
+        for l in 0..4 {
+            for k in 0..8 {
+                assert_eq!(mem.l1[l * 8 + k], (l * 16 + k) as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut mem = Tcdm::new();
+        let dma = DmaEngine::default();
+        let t = DmaTransfer::linear(0, (TCDM_SIZE / 4) as usize, 8);
+        assert!(dma.run_in(&mut mem, &t).is_err());
+    }
+
+    #[test]
+    fn hyperram_bandwidth() {
+        let io = IoDma::default();
+        // 4 KiB at 400 B/us = ~10.24 us + 0.3
+        let us = io.us_for_bytes(4096);
+        assert!((us - 10.54).abs() < 0.01);
+    }
+}

@@ -1,0 +1,556 @@
+//! Cycle-stepped cluster execution engine: core issue, LIC bank
+//! arbitration, shared-FPU arbitration, event-unit barriers.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::memmap::{MemMap, TCDM_BANKS};
+use super::periph::{RbePeriph, RBE_BANK_OCCUPANCY};
+use super::tcdm::Tcdm;
+use crate::core::MemSpace;
+use crate::core::{Core, CoreStats, ExecOutcome};
+use crate::isa::Program;
+use crate::util::Rng;
+
+/// Cluster configuration. Defaults model the Marsellus CLUSTER; the SOC
+/// controller is the same engine with `cores = 1`, `fpus = 1` (its FPU is
+/// private) — see [`ClusterConfig::soc_controller`].
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub cores: usize,
+    /// Shared FPU slots per cycle (paper: 8 FPUs for 16 cores).
+    pub fpus: usize,
+    /// AXI access latency to L2, in cluster cycles.
+    pub l2_latency: u32,
+    /// Probability that a TCDM bank is occupied by RBE/DMA traffic in a
+    /// given cycle (the bank-level mux between LIC and RBE-IC rotates
+    /// round-robin, so from the cores' perspective contention appears as
+    /// per-bank occupancy).
+    pub background_traffic: f64,
+    /// Safety limit on simulated cycles.
+    pub max_cycles: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            cores: 16,
+            fpus: 8,
+            l2_latency: 8,
+            background_traffic: 0.0,
+            max_cycles: 500_000_000,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// The SOC-domain RV32IMCFXpulp controller core (paper Fig. 1): single
+    /// core, private FPU, directly attached L2 (no TCDM banking benefit —
+    /// modelled as one core on the same engine with zero conflicts).
+    pub fn soc_controller() -> Self {
+        Self { cores: 1, fpus: 1, ..Self::default() }
+    }
+}
+
+/// Aggregate results of one `run`.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Wall-clock cycles until every core halted.
+    pub cycles: u64,
+    /// Sum over cores.
+    pub total: CoreStats,
+    /// Per-core counters.
+    pub per_core: Vec<CoreStats>,
+}
+
+impl RunStats {
+    /// Total MACs * 2 (multiply + add), the paper's "operations" metric.
+    pub fn ops(&self) -> u64 {
+        self.total.macs * 2
+    }
+
+    pub fn flops(&self) -> u64 {
+        self.total.flops
+    }
+
+    /// ops/cycle across the whole cluster.
+    pub fn ops_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.ops() as f64 / self.cycles as f64
+        }
+    }
+
+    pub fn flops_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.total.flops as f64 / self.cycles as f64
+        }
+    }
+
+    /// Mean per-core DOTP-unit utilization (active cores only).
+    pub fn dotp_utilization(&self) -> f64 {
+        let active: Vec<_> = self
+            .per_core
+            .iter()
+            .filter(|c| c.dotp_instrs > 0)
+            .collect();
+        if active.is_empty() {
+            return 0.0;
+        }
+        active.iter().map(|c| c.dotp_utilization()).sum::<f64>()
+            / active.len() as f64
+    }
+}
+
+/// Per-cycle arbitration buffers, kept across cycles to avoid allocating
+/// in the simulation hot loop (see EXPERIMENTS.md §Perf).
+#[derive(Default)]
+struct Scratch {
+    bank_req: Vec<Vec<usize>>,
+    l2_req: Vec<usize>,
+    fpu_req: Vec<usize>,
+    granted: Vec<usize>,
+    granted_mask: Vec<bool>,
+}
+
+/// The cluster: cores + memory + arbitration state.
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    pub cores: Vec<Core>,
+    pub mem: Tcdm,
+    /// The memory-mapped RBE offload peripheral (§II-B4).
+    pub rbe: RbePeriph,
+    /// Round-robin priority pointer for bank arbitration (rotates each
+    /// cycle, as in the LIC).
+    rr: usize,
+    rng: Rng,
+    cycles: u64,
+    scratch: Scratch,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        Self {
+            cores: Vec::new(),
+            mem: Tcdm::new(),
+            rbe: RbePeriph::new(),
+            rr: 0,
+            rng: Rng::new(0xC0FFEE),
+            cycles: 0,
+            scratch: Scratch {
+                bank_req: vec![Vec::new(); TCDM_BANKS],
+                ..Scratch::default()
+            },
+            cfg,
+        }
+    }
+
+    /// Load the same program on all cores (SPMD, the PULP model). Resets
+    /// the cycle counter; TCDM/L2 contents persist across loads.
+    pub fn load_spmd(&mut self, prog: Program) {
+        let prog = Arc::new(prog);
+        self.cores = (0..self.cfg.cores)
+            .map(|id| Core::new(id, prog.clone()))
+            .collect();
+        self.cycles = 0;
+    }
+
+    /// Load distinct programs per core.
+    pub fn load_programs(&mut self, progs: Vec<Program>) {
+        assert_eq!(progs.len(), self.cfg.cores);
+        self.cores = progs
+            .into_iter()
+            .enumerate()
+            .map(|(id, p)| Core::new(id, Arc::new(p)))
+            .collect();
+        self.cycles = 0;
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Run until all cores halt; returns aggregated statistics.
+    pub fn run(&mut self) -> Result<RunStats> {
+        while !self.all_halted() {
+            self.step()?;
+            if self.cycles >= self.cfg.max_cycles {
+                bail!("cluster exceeded max_cycles {}", self.cfg.max_cycles);
+            }
+        }
+        let mut total = CoreStats::default();
+        let per_core: Vec<CoreStats> =
+            self.cores.iter().map(|c| c.stats.clone()).collect();
+        for s in &per_core {
+            total.merge(s);
+        }
+        Ok(RunStats { cycles: self.cycles, total, per_core })
+    }
+
+    fn all_halted(&self) -> bool {
+        self.cores.iter().all(|c| c.halted)
+    }
+
+    /// One cluster cycle.
+    pub fn step(&mut self) -> Result<()> {
+        self.cycles += 1;
+        let n = self.cores.len();
+
+        // Phase 1: collect intents of issue-ready cores.
+        // bank_req[b] = cores requesting bank b this cycle. Buffers are
+        // reused across cycles (hot loop — no allocation).
+        let mut sc = std::mem::take(&mut self.scratch);
+        if sc.bank_req.len() != TCDM_BANKS {
+            sc.bank_req = vec![Vec::new(); TCDM_BANKS];
+        }
+        for b in &mut sc.bank_req {
+            b.clear();
+        }
+        sc.l2_req.clear();
+        sc.fpu_req.clear();
+        sc.granted.clear();
+        let bank_req = &mut sc.bank_req;
+        let l2_req = &mut sc.l2_req;
+        let fpu_req = &mut sc.fpu_req;
+        let granted = &mut sc.granted;
+        let mut any_mem = false;
+        for (i, core) in self.cores.iter_mut().enumerate() {
+            if core.halted || core.at_barrier {
+                continue;
+            }
+            core.stats.cycles += 1;
+            if core.stall > 0 {
+                continue;
+            }
+            let Some(instr) = core.fetch() else { continue };
+            if instr.is_mem() {
+                let req = core.mem_request().unwrap();
+                if RbePeriph::owns(req.addr) {
+                    // peripheral interconnect: no TCDM arbitration
+                    granted.push(i);
+                    continue;
+                }
+                match MemMap::classify(req.addr) {
+                    Some(MemMap::Tcdm { bank, .. }) => {
+                        bank_req[bank].push(i);
+                        any_mem = true;
+                    }
+                    Some(MemMap::L2 { .. }) => l2_req.push(i),
+                    None => bail!(
+                        "core {i} pc {} unmapped address {:#010x}",
+                        core.pc,
+                        req.addr
+                    ),
+                }
+            } else if instr.is_fpu() {
+                fpu_req.push(i);
+            } else {
+                granted.push(i);
+            }
+        }
+
+        // Phase 2: arbitrate.
+        if any_mem {
+            for (bank, reqs) in bank_req.iter().enumerate() {
+                if reqs.is_empty() {
+                    continue;
+                }
+                // RBE-IC / DMA occupancy steals this bank for a cycle.
+                let bg = if self.rbe.busy() {
+                    self.cfg.background_traffic.max(RBE_BANK_OCCUPANCY)
+                } else {
+                    self.cfg.background_traffic
+                };
+                let stolen = bg > 0.0 && self.rng.f64() < bg;
+                if stolen {
+                    for &c in reqs {
+                        self.cores[c].stats.stall_conflict += 1;
+                    }
+                    continue;
+                }
+                // Round-robin winner: first requester at/after the pointer.
+                let winner = *reqs
+                    .iter()
+                    .min_by_key(|&&c| {
+                        (c + TCDM_BANKS * 2 - (self.rr + bank)) % n
+                    })
+                    .unwrap();
+                granted.push(winner);
+                for &c in reqs {
+                    if c != winner {
+                        self.cores[c].stats.stall_conflict += 1;
+                    }
+                }
+            }
+        }
+        // L2: unlimited concurrency, fixed latency (AXI pipeline depth is
+        // not the bottleneck for the workloads modelled).
+        for &c in l2_req.iter() {
+            let lat = self.cfg.l2_latency;
+            self.cores[c].stall += lat;
+            self.cores[c].stats.stall_l2 += lat as u64;
+            granted.push(c);
+        }
+        // FPU slots: rotate priority with the same pointer.
+        fpu_req.sort_unstable_by_key(|&c| (c + n - self.rr % n) % n);
+        for (k, &c) in fpu_req.iter().enumerate() {
+            if k < self.cfg.fpus {
+                granted.push(c);
+            } else {
+                self.cores[c].stats.stall_fpu += 1;
+            }
+        }
+
+        // Phase 3: execute granted cores; decrement stalls of the rest.
+        sc.granted_mask.clear();
+        sc.granted_mask.resize(n, false);
+        let granted_mask = &mut sc.granted_mask;
+        for &c in sc.granted.iter() {
+            granted_mask[c] = true;
+        }
+        for i in 0..n {
+            let core = &mut self.cores[i];
+            if core.halted || core.at_barrier {
+                continue;
+            }
+            if core.stall > 0 {
+                core.stall -= 1;
+                continue;
+            }
+            if !granted_mask[i] {
+                continue; // lost arbitration; retries next cycle
+            }
+            let mut space = ClusterSpace {
+                mem: &mut self.mem,
+                periph: &mut self.rbe,
+            };
+            match core.exec(&mut space)? {
+                ExecOutcome::BranchTaken => {
+                    core.stall += 1;
+                    core.stats.stall_branch += 1;
+                }
+                ExecOutcome::Barrier | ExecOutcome::Halted | ExecOutcome::Done => {}
+            }
+        }
+
+        // Event unit: release the barrier once every live core reached it
+        // (single pass; waiting cores account a stall cycle otherwise).
+        let mut live = 0u32;
+        let mut waiting = 0u32;
+        for c in self.cores.iter() {
+            if !c.halted {
+                live += 1;
+                waiting += c.at_barrier as u32;
+            }
+        }
+        if waiting > 0 {
+            if waiting == live {
+                for c in self.cores.iter_mut().filter(|c| !c.halted) {
+                    c.at_barrier = false;
+                }
+            } else {
+                for c in self
+                    .cores
+                    .iter_mut()
+                    .filter(|c| !c.halted && c.at_barrier)
+                {
+                    c.stats.stall_barrier += 1;
+                }
+            }
+        }
+
+        self.rbe.tick();
+        self.rr = (self.rr + 1) % TCDM_BANKS.max(n);
+        self.scratch = sc;
+        Ok(())
+    }
+}
+
+/// The cluster-visible address space: TCDM + L2 plus the RBE peripheral
+/// window, dispatched per access.
+struct ClusterSpace<'a> {
+    mem: &'a mut Tcdm,
+    periph: &'a mut RbePeriph,
+}
+
+impl MemSpace for ClusterSpace<'_> {
+    #[inline]
+    fn load(&mut self, addr: u32) -> Result<u32> {
+        if RbePeriph::owns(addr) {
+            self.periph.load(addr)
+        } else {
+            self.mem.load(addr)
+        }
+    }
+
+    #[inline]
+    fn store(&mut self, addr: u32, value: u32) -> Result<()> {
+        if RbePeriph::owns(addr) {
+            self.periph.store(addr, value)
+        } else {
+            self.mem.store(addr, value)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::memmap::TCDM_BASE;
+    use crate::isa::{AluOp, Cond, Instr, IsaLevel, ProgramBuilder};
+
+    /// Each core stores its id into TCDM[id], then barriers, then core 0
+    /// sums everything.
+    #[test]
+    fn spmd_store_barrier_sum() {
+        let mut b = ProgramBuilder::new("spmd", IsaLevel::Xpulp);
+        let done = b.label();
+        b.emit(Instr::CoreId { rd: 5 });
+        b.emit(Instr::Li { rd: 6, imm: TCDM_BASE as i32 });
+        b.emit(Instr::AluImm { op: AluOp::Sll, rd: 7, rs1: 5, imm: 2 });
+        b.emit(Instr::Alu { op: AluOp::Add, rd: 6, rs1: 6, rs2: 7 });
+        b.emit(Instr::Sw { rs: 5, base: 6, offset: 0, post_inc: 0 });
+        b.emit(Instr::Barrier);
+        // only core 0 proceeds to sum
+        b.branch(Cond::Ne, 5, 0, done);
+        b.emit(Instr::Li { rd: 10, imm: TCDM_BASE as i32 });
+        b.emit(Instr::Li { rd: 11, imm: 0 });
+        let (s, e) = (b.label(), b.label());
+        b.emit(Instr::Li { rd: 12, imm: 16 });
+        b.hw_loop(0, 12, s, e);
+        b.bind(s);
+        b.emit(Instr::Lw { rd: 13, base: 10, offset: 0, post_inc: 4 });
+        b.emit(Instr::Alu { op: AluOp::Add, rd: 11, rs1: 11, rs2: 13 });
+        b.bind(e);
+        b.emit(Instr::Sw {
+            rs: 11,
+            base: 0,
+            offset: (TCDM_BASE + 64) as i32,
+            post_inc: 0,
+        });
+        b.bind(done);
+        b.emit(Instr::Nop);
+
+        let mut cl = Cluster::new(ClusterConfig::default());
+        cl.load_spmd(b.build().unwrap());
+        cl.run().unwrap();
+        assert_eq!(cl.mem.l1[16], (0..16).sum::<u32>());
+    }
+
+    /// All 16 cores hammering the same bank must serialize (~16x slowdown),
+    /// while hitting distinct banks stays parallel.
+    #[test]
+    fn bank_conflicts_serialize() {
+        let mk = |same_bank: bool| {
+            let mut b = ProgramBuilder::new("bk", IsaLevel::Xpulp);
+            b.emit(Instr::CoreId { rd: 5 });
+            // address = TCDM + (same ? 0 : id*4)
+            if !same_bank {
+                b.emit(Instr::AluImm { op: AluOp::Sll, rd: 5, rs1: 5, imm: 2 });
+            } else {
+                b.emit(Instr::Li { rd: 5, imm: 0 });
+            }
+            b.emit(Instr::AluImm {
+                op: AluOp::Add,
+                rd: 6,
+                rs1: 5,
+                imm: TCDM_BASE as i32,
+            });
+            let (s, e) = (b.label(), b.label());
+            b.emit(Instr::Li { rd: 7, imm: 64 });
+            b.hw_loop(0, 7, s, e);
+            b.bind(s);
+            b.emit(Instr::Lw { rd: 8, base: 6, offset: 0, post_inc: 0 });
+            b.bind(e);
+            b.emit(Instr::Nop);
+            b.build().unwrap()
+        };
+        let run = |p| {
+            let mut cl = Cluster::new(ClusterConfig::default());
+            cl.load_spmd(p);
+            cl.run().unwrap().cycles
+        };
+        let fast = run(mk(false));
+        let slow = run(mk(true));
+        assert!(
+            slow as f64 > fast as f64 * 8.0,
+            "conflict run {slow} should be >> conflict-free {fast}"
+        );
+    }
+
+    /// FPU arbitration: 16 cores issuing back-to-back FP ops see ~2x
+    /// slowdown (8 FPUs), 8 cores see none.
+    #[test]
+    fn fpu_contention() {
+        let mk = || {
+            let mut b = ProgramBuilder::new("fpu", IsaLevel::Xpulp);
+            let (s, e) = (b.label(), b.label());
+            b.emit(Instr::Li { rd: 7, imm: 256 });
+            b.hw_loop(0, 7, s, e);
+            b.bind(s);
+            b.emit(Instr::FAlu {
+                op: crate::isa::FOp::Madd,
+                lanes: 1,
+                fd: 1,
+                fs1: 2,
+                fs2: 3,
+                fs3: 1,
+            });
+            b.bind(e);
+            b.emit(Instr::Nop);
+            b.build().unwrap()
+        };
+        let run = |cores| {
+            let mut cfg = ClusterConfig::default();
+            cfg.cores = cores;
+            let mut cl = Cluster::new(cfg);
+            cl.load_spmd(mk());
+            cl.run().unwrap()
+        };
+        let r8 = run(8);
+        let r16 = run(16);
+        // 8 cores: no contention. 16 cores on 8 FPUs: ~half throughput.
+        let thr8 = r8.total.flops as f64 / r8.cycles as f64;
+        let thr16 = r16.total.flops as f64 / r16.cycles as f64;
+        assert!((thr16 / thr8 - 1.0).abs() < 0.15, "thr8={thr8} thr16={thr16}");
+        assert!(r16.total.stall_fpu > 0);
+    }
+
+    /// Background (RBE) traffic degrades core memory throughput.
+    #[test]
+    fn background_traffic_slows_cores() {
+        let mk = || {
+            let mut b = ProgramBuilder::new("bg", IsaLevel::Xpulp);
+            b.emit(Instr::CoreId { rd: 5 });
+            b.emit(Instr::AluImm { op: AluOp::Sll, rd: 5, rs1: 5, imm: 2 });
+            b.emit(Instr::AluImm {
+                op: AluOp::Add,
+                rd: 6,
+                rs1: 5,
+                imm: TCDM_BASE as i32,
+            });
+            let (s, e) = (b.label(), b.label());
+            b.emit(Instr::Li { rd: 7, imm: 512 });
+            b.hw_loop(0, 7, s, e);
+            b.bind(s);
+            b.emit(Instr::Lw { rd: 8, base: 6, offset: 0, post_inc: 0 });
+            b.bind(e);
+            b.emit(Instr::Nop);
+            b.build().unwrap()
+        };
+        let run = |bg| {
+            let mut cfg = ClusterConfig::default();
+            cfg.background_traffic = bg;
+            let mut cl = Cluster::new(cfg);
+            cl.load_spmd(mk());
+            cl.run().unwrap().cycles
+        };
+        let free = run(0.0);
+        let busy = run(0.5);
+        assert!(busy as f64 > free as f64 * 1.5, "free={free} busy={busy}");
+    }
+}

@@ -1,0 +1,66 @@
+//! Cluster address map (paper Fig. 1 values).
+
+/// TCDM (L1) base address.
+pub const TCDM_BASE: u32 = 0x1000_0000;
+/// TCDM size: 128 KiB (paper §II).
+pub const TCDM_SIZE: u32 = 128 * 1024;
+/// Word-interleaved TCDM banks (paper §II: 32 banks).
+pub const TCDM_BANKS: usize = 32;
+
+/// SOC L2 base address.
+pub const L2_BASE: u32 = 0x1C00_0000;
+/// L2 size: 1 MiB (paper: 960 KiB interleaved + 64 KiB private).
+pub const L2_SIZE: u32 = 1024 * 1024;
+
+/// Address-space classification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemMap {
+    Tcdm { word: u32, bank: usize },
+    L2 { word: u32 },
+}
+
+impl MemMap {
+    #[inline]
+    pub fn classify(addr: u32) -> Option<MemMap> {
+        if (TCDM_BASE..TCDM_BASE + TCDM_SIZE).contains(&addr) {
+            let word = (addr - TCDM_BASE) >> 2;
+            Some(MemMap::Tcdm {
+                word,
+                bank: (word as usize) % TCDM_BANKS,
+            })
+        } else if (L2_BASE..L2_BASE + L2_SIZE).contains(&addr) {
+            Some(MemMap::L2 { word: (addr - L2_BASE) >> 2 })
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_interleaving() {
+        // consecutive words land in consecutive banks
+        for i in 0..64u32 {
+            match MemMap::classify(TCDM_BASE + i * 4) {
+                Some(MemMap::Tcdm { word, bank }) => {
+                    assert_eq!(word, i);
+                    assert_eq!(bank, (i as usize) % TCDM_BANKS);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn l2_and_unmapped() {
+        assert!(matches!(
+            MemMap::classify(L2_BASE + 8),
+            Some(MemMap::L2 { word: 2 })
+        ));
+        assert_eq!(MemMap::classify(0xDEAD_0000), None);
+        assert_eq!(MemMap::classify(TCDM_BASE + TCDM_SIZE), None);
+    }
+}

@@ -1,0 +1,23 @@
+//! The Marsellus CLUSTER (paper §II, Fig. 1): 16 RV32IMFCXpulpnn cores, a
+//! 32-bank word-interleaved 128 KiB TCDM behind the logarithmic
+//! interconnect (LIC), 8 shared FPUs, the event unit (barriers), and the
+//! cluster DMA.
+//!
+//! Execution is cycle-stepped: every cycle the engine collects the memory
+//! and FPU intents of all ready cores, arbitrates TCDM banks (round-robin,
+//! starvation-free — the paper's LIC) and FPU slots, then executes granted
+//! cores. RBE traffic rides the separate RBE-IC branch and is modelled as
+//! a per-bank background-occupancy probability while the accelerator runs
+//! (`set_background_traffic`).
+
+mod dma;
+mod engine;
+mod memmap;
+pub mod periph;
+mod tcdm;
+
+pub use dma::{DmaEngine, DmaTransfer, IoDma};
+pub use engine::{Cluster, ClusterConfig, RunStats};
+pub use memmap::{MemMap, L2_BASE, L2_SIZE, TCDM_BANKS, TCDM_BASE, TCDM_SIZE};
+pub use periph::{RbePeriph, RBE_PERIPH_BASE};
+pub use tcdm::Tcdm;

@@ -1,0 +1,265 @@
+//! Memory-mapped RBE peripheral (paper §II-B4): the cluster peripheral
+//! interconnect exposes the accelerator's latch-based dual-context
+//! register file, so RISC-V programs configure a job with plain stores,
+//! commit it, and poll/wait for the completion event — exactly the
+//! offload sequence of Fig. 4's "jobs offloaded" timeline.
+//!
+//! The peripheral is *timing-coupled*: a committed job occupies the
+//! engine for the cycles predicted by [`RbeTiming`], during which the
+//! RBE-IC steals TCDM bank slots from the LIC (the engine raises the
+//! background-traffic probability), and the busy/event status registers
+//! reflect engine time. Functional tensor work stays with the
+//! layer-level models — the cores on the chip also never see RBE
+//! internals, only TCDM contents and the event.
+
+use anyhow::{bail, Result};
+
+use crate::rbe::{RbeJob, RbeMode, RbeTiming};
+
+/// Peripheral base address (cluster peripheral interconnect region).
+pub const RBE_PERIPH_BASE: u32 = 0x1020_0000;
+/// Peripheral window size in bytes.
+pub const RBE_PERIPH_SIZE: u32 = 0x100;
+
+/// Register map (word offsets from RBE_PERIPH_BASE).
+pub mod regs {
+    pub const MODE: u32 = 0; // 0 = 3x3, 1 = 1x1
+    pub const H_OUT: u32 = 1;
+    pub const W_OUT: u32 = 2;
+    pub const K_IN: u32 = 3;
+    pub const K_OUT: u32 = 4;
+    pub const STRIDE: u32 = 5;
+    pub const W_BITS: u32 = 6;
+    pub const I_BITS: u32 = 7;
+    pub const O_BITS: u32 = 8;
+    /// Write 1 to enqueue the configured job. Reads back the number of
+    /// free job contexts.
+    pub const COMMIT: u32 = 9;
+    /// 1 while the engine is running or jobs are pending.
+    pub const STATUS_BUSY: u32 = 10;
+    /// Completed-job counter (the event-unit line, readable).
+    pub const EVT_COUNT: u32 = 11;
+}
+
+/// Fraction of TCDM banks the RBE-IC occupies per cycle while streaming.
+pub const RBE_BANK_OCCUPANCY: f64 = 0.30;
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Shadow {
+    mode: u32,
+    h_out: u32,
+    w_out: u32,
+    k_in: u32,
+    k_out: u32,
+    stride: u32,
+    w_bits: u32,
+    i_bits: u32,
+    o_bits: u32,
+}
+
+impl Shadow {
+    fn to_job(self) -> Result<RbeJob> {
+        let job = RbeJob {
+            mode: if self.mode == 0 {
+                RbeMode::Conv3x3
+            } else {
+                RbeMode::Conv1x1
+            },
+            h_out: self.h_out as usize,
+            w_out: self.w_out as usize,
+            k_in: self.k_in as usize,
+            k_out: self.k_out as usize,
+            stride: self.stride as usize,
+            w_bits: self.w_bits as usize,
+            i_bits: self.i_bits as usize,
+            o_bits: self.o_bits as usize,
+        };
+        job.validate()?;
+        Ok(job)
+    }
+}
+
+/// The peripheral: dual-context queue + engine occupancy tracking.
+#[derive(Debug, Default)]
+pub struct RbePeriph {
+    shadow: Shadow,
+    /// Enqueued jobs (≤ 2, hardware register-file contexts).
+    pending: Vec<RbeJob>,
+    /// Cycles left on the currently running job (0 = idle).
+    running_left: u64,
+    /// Total completed jobs (event counter).
+    pub completed: u64,
+    /// Total cycles the engine was busy (for utilization stats).
+    pub busy_cycles: u64,
+}
+
+impl RbePeriph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Is `addr` inside the peripheral window?
+    pub fn owns(addr: u32) -> bool {
+        (RBE_PERIPH_BASE..RBE_PERIPH_BASE + RBE_PERIPH_SIZE).contains(&addr)
+    }
+
+    pub fn busy(&self) -> bool {
+        self.running_left > 0 || !self.pending.is_empty()
+    }
+
+    /// Advance the engine by one cluster cycle.
+    pub fn tick(&mut self) {
+        if self.running_left == 0 {
+            if let Some(job) = self.pending.first().copied() {
+                self.pending.remove(0);
+                self.running_left = RbeTiming::cycles(&job);
+            }
+        }
+        if self.running_left > 0 {
+            self.running_left -= 1;
+            self.busy_cycles += 1;
+            if self.running_left == 0 {
+                self.completed += 1; // event to the event unit
+            }
+        }
+    }
+
+    /// Peripheral load (1-cycle, no TCDM arbitration).
+    pub fn load(&self, addr: u32) -> Result<u32> {
+        let off = (addr - RBE_PERIPH_BASE) / 4;
+        Ok(match off {
+            regs::MODE => self.shadow.mode,
+            regs::H_OUT => self.shadow.h_out,
+            regs::W_OUT => self.shadow.w_out,
+            regs::K_IN => self.shadow.k_in,
+            regs::K_OUT => self.shadow.k_out,
+            regs::STRIDE => self.shadow.stride,
+            regs::W_BITS => self.shadow.w_bits,
+            regs::I_BITS => self.shadow.i_bits,
+            regs::O_BITS => self.shadow.o_bits,
+            regs::COMMIT => {
+                let in_flight = self.pending.len()
+                    + (self.running_left > 0) as usize;
+                2u32.saturating_sub(in_flight as u32)
+            }
+            regs::STATUS_BUSY => self.busy() as u32,
+            regs::EVT_COUNT => self.completed as u32,
+            _ => bail!("RBE periph: read of undefined register {off}"),
+        })
+    }
+
+    /// Peripheral store.
+    pub fn store(&mut self, addr: u32, value: u32) -> Result<()> {
+        let off = (addr - RBE_PERIPH_BASE) / 4;
+        match off {
+            regs::MODE => self.shadow.mode = value,
+            regs::H_OUT => self.shadow.h_out = value,
+            regs::W_OUT => self.shadow.w_out = value,
+            regs::K_IN => self.shadow.k_in = value,
+            regs::K_OUT => self.shadow.k_out = value,
+            regs::STRIDE => self.shadow.stride = value,
+            regs::W_BITS => self.shadow.w_bits = value,
+            regs::I_BITS => self.shadow.i_bits = value,
+            regs::O_BITS => self.shadow.o_bits = value,
+            regs::COMMIT => {
+                if value != 0 {
+                    let in_flight = self.pending.len()
+                        + (self.running_left > 0) as usize;
+                    if in_flight >= 2 {
+                        bail!(
+                            "RBE periph: commit with both job contexts busy \
+                             (driver must wait for the free-context event)"
+                        );
+                    }
+                    self.pending.push(self.shadow.to_job()?);
+                }
+            }
+            regs::STATUS_BUSY | regs::EVT_COUNT => {
+                bail!("RBE periph: write to read-only register {off}")
+            }
+            _ => bail!("RBE periph: write to undefined register {off}"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn program_job(p: &mut RbePeriph) {
+        for (r, v) in [
+            (regs::MODE, 0u32),
+            (regs::H_OUT, 3),
+            (regs::W_OUT, 3),
+            (regs::K_IN, 32),
+            (regs::K_OUT, 32),
+            (regs::STRIDE, 1),
+            (regs::W_BITS, 2),
+            (regs::I_BITS, 2),
+            (regs::O_BITS, 2),
+        ] {
+            p.store(RBE_PERIPH_BASE + r * 4, v).unwrap();
+        }
+    }
+
+    #[test]
+    fn offload_runs_for_model_cycles() {
+        let mut p = RbePeriph::new();
+        program_job(&mut p);
+        p.store(RBE_PERIPH_BASE + regs::COMMIT * 4, 1).unwrap();
+        assert!(p.busy());
+        let job = RbeJob::conv3x3(3, 3, 32, 32, 1, 2, 2, 2).unwrap();
+        let expect = RbeTiming::cycles(&job);
+        let mut n = 0;
+        while p.busy() {
+            p.tick();
+            n += 1;
+            assert!(n < 10 * expect, "runaway");
+        }
+        assert_eq!(n, expect);
+        assert_eq!(
+            p.load(RBE_PERIPH_BASE + regs::EVT_COUNT * 4).unwrap(),
+            1
+        );
+    }
+
+    #[test]
+    fn dual_context_third_commit_fails() {
+        let mut p = RbePeriph::new();
+        program_job(&mut p);
+        let commit = RBE_PERIPH_BASE + regs::COMMIT * 4;
+        p.store(commit, 1).unwrap();
+        p.store(commit, 1).unwrap();
+        assert_eq!(p.load(commit).unwrap(), 0); // no free contexts
+        assert!(p.store(commit, 1).is_err());
+        // drain one job; a context frees up
+        p.tick(); // starts job 1
+        while p.completed == 0 {
+            p.tick();
+        }
+        assert_eq!(p.load(commit).unwrap(), 1);
+        p.store(commit, 1).unwrap();
+    }
+
+    #[test]
+    fn invalid_job_rejected_at_commit() {
+        let mut p = RbePeriph::new();
+        program_job(&mut p);
+        p.store(RBE_PERIPH_BASE + regs::W_BITS * 4, 11).unwrap();
+        assert!(p
+            .store(RBE_PERIPH_BASE + regs::COMMIT * 4, 1)
+            .is_err());
+    }
+
+    #[test]
+    fn readonly_and_undefined_registers() {
+        let mut p = RbePeriph::new();
+        assert!(p
+            .store(RBE_PERIPH_BASE + regs::STATUS_BUSY * 4, 1)
+            .is_err());
+        assert!(p.load(RBE_PERIPH_BASE + 0x80).is_err());
+        assert!(RbePeriph::owns(RBE_PERIPH_BASE));
+        assert!(!RbePeriph::owns(RBE_PERIPH_BASE + RBE_PERIPH_SIZE));
+    }
+}

@@ -1,0 +1,95 @@
+//! TCDM storage + the combined word-addressed memory space (TCDM + L2).
+
+use anyhow::{bail, Result};
+
+use super::memmap::{MemMap, L2_SIZE, TCDM_SIZE};
+use crate::core::MemSpace;
+
+/// Backing storage for the cluster-visible address space. Functional only;
+/// timing (bank conflicts, L2 latency) is handled by the engine.
+pub struct Tcdm {
+    pub l1: Vec<u32>,
+    pub l2: Vec<u32>,
+}
+
+impl Default for Tcdm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tcdm {
+    pub fn new() -> Self {
+        Self {
+            l1: vec![0; (TCDM_SIZE / 4) as usize],
+            l2: vec![0; (L2_SIZE / 4) as usize],
+        }
+    }
+
+    /// Write a slice of words into TCDM at a word offset.
+    pub fn write_l1(&mut self, word_off: usize, data: &[u32]) {
+        self.l1[word_off..word_off + data.len()].copy_from_slice(data);
+    }
+
+    /// Read words out of TCDM.
+    pub fn read_l1(&self, word_off: usize, len: usize) -> &[u32] {
+        &self.l1[word_off..word_off + len]
+    }
+
+    /// Write a slice of words into L2 at a word offset.
+    pub fn write_l2(&mut self, word_off: usize, data: &[u32]) {
+        self.l2[word_off..word_off + data.len()].copy_from_slice(data);
+    }
+
+    pub fn read_l2(&self, word_off: usize, len: usize) -> &[u32] {
+        &self.l2[word_off..word_off + len]
+    }
+}
+
+impl MemSpace for Tcdm {
+    #[inline]
+    fn load(&mut self, addr: u32) -> Result<u32> {
+        match MemMap::classify(addr) {
+            Some(MemMap::Tcdm { word, .. }) => Ok(self.l1[word as usize]),
+            Some(MemMap::L2 { word }) => Ok(self.l2[word as usize]),
+            None => bail!("load from unmapped address {addr:#010x}"),
+        }
+    }
+
+    #[inline]
+    fn store(&mut self, addr: u32, value: u32) -> Result<()> {
+        match MemMap::classify(addr) {
+            Some(MemMap::Tcdm { word, .. }) => {
+                self.l1[word as usize] = value;
+                Ok(())
+            }
+            Some(MemMap::L2 { word }) => {
+                self.l2[word as usize] = value;
+                Ok(())
+            }
+            None => bail!("store to unmapped address {addr:#010x}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::memmap::{L2_BASE, TCDM_BASE};
+
+    #[test]
+    fn load_store_roundtrip() {
+        let mut m = Tcdm::new();
+        m.store(TCDM_BASE + 4, 0xABCD).unwrap();
+        m.store(L2_BASE + 8, 0x1234).unwrap();
+        assert_eq!(m.load(TCDM_BASE + 4).unwrap(), 0xABCD);
+        assert_eq!(m.load(L2_BASE + 8).unwrap(), 0x1234);
+    }
+
+    #[test]
+    fn unmapped_faults() {
+        let mut m = Tcdm::new();
+        assert!(m.load(0x0).is_err());
+        assert!(m.store(0xFFFF_0000, 1).is_err());
+    }
+}

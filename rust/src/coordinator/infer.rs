@@ -1,0 +1,247 @@
+//! End-to-end quantized inference through the AOT artifacts.
+//!
+//! The coordinator walks the layer schedule in execution order, feeding
+//! each layer's PJRT executable (functional result, bit-exact vs. the
+//! Pallas kernels) while the DORY scheduler produces the per-layer
+//! latency/energy from the cycle models — the functional/timing split of
+//! DESIGN.md. Residual bookkeeping (block inputs, downsample shortcuts)
+//! mirrors `model.resnet20_forward`.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::dnn::{resnet20_layers, Layer, LayerOp, Manifest, PrecisionConfig};
+use crate::mapping::{NetworkReport, Scheduler};
+use crate::power::OperatingPoint;
+use crate::rbe::functional::{conv_bitserial, NormQuant};
+use crate::rbe::{RbeJob, RbeMode};
+use crate::runtime::{Runtime, TensorArg};
+use crate::util::Rng;
+
+use super::params::{random_layer_params, LayerParams};
+
+/// Result of one inference.
+#[derive(Debug, Clone)]
+pub struct InferenceResult {
+    pub logits: Vec<i32>,
+    pub report: NetworkReport,
+    /// Layers whose artifact output was cross-checked against the Rust
+    /// bit-serial RBE model.
+    pub cross_checked: usize,
+}
+
+/// The system leader.
+pub struct Coordinator {
+    pub runtime: Runtime,
+    pub manifest: Manifest,
+    pub scheduler: Scheduler,
+}
+
+impl Coordinator {
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        let runtime = Runtime::cpu(artifacts_dir)?;
+        let manifest =
+            Manifest::load(std::path::Path::new(artifacts_dir))
+                .context("loading manifest.tsv (run `make artifacts`)")?;
+        Ok(Self { runtime, manifest, scheduler: Scheduler::default() })
+    }
+
+    /// Zero-pad (H, W, C) by one pixel on each spatial side.
+    fn pad1(x: &[i32], h: usize, w: usize, c: usize) -> Vec<i32> {
+        let (hp, wp) = (h + 2, w + 2);
+        let mut out = vec![0i32; hp * wp * c];
+        for y in 0..h {
+            let src = y * w * c;
+            let dst = ((y + 1) * wp + 1) * c;
+            out[dst..dst + w * c].copy_from_slice(&x[src..src + w * c]);
+        }
+        out
+    }
+
+    fn exec_layer(
+        &self,
+        l: &Layer,
+        inputs: &[TensorArg],
+    ) -> Result<Vec<i32>> {
+        let exe = self
+            .runtime
+            .load(&l.artifact())
+            .with_context(|| format!("layer {}", l.name))?;
+        let outs = exe.execute_i32(inputs)?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    /// Run ResNet-20 end to end. `cross_check_layers` names layers whose
+    /// artifact output is re-computed with the Rust bit-serial model and
+    /// compared bit-exactly (expensive; pick small layers).
+    pub fn infer_resnet20(
+        &self,
+        config: PrecisionConfig,
+        op: &OperatingPoint,
+        image: &[i32],
+        seed: u64,
+        cross_check_layers: &[&str],
+    ) -> Result<InferenceResult> {
+        let layers = resnet20_layers(config);
+        self.manifest.validate_network(config)?;
+        let mut rng = Rng::new(seed);
+        let params: HashMap<String, LayerParams> = layers
+            .iter()
+            .filter(|l| l.op.on_rbe())
+            .map(|l| (l.name.clone(), random_layer_params(l, &mut rng)))
+            .collect();
+
+        let mut cur = image.to_vec();
+        let mut cur_hw = (32usize, 3usize); // (h, channels)
+        let mut block_in: Vec<i32> = cur.clone();
+        let mut down_out: Vec<i32> = Vec::new();
+        let mut cross_checked = 0usize;
+
+        for l in &layers {
+            match l.op {
+                LayerOp::Conv3x3 => {
+                    if l.name.ends_with(".conv0") {
+                        block_in = cur.clone();
+                    }
+                    let p = &params[&l.name];
+                    let padded = Self::pad1(&cur, l.h, l.h, l.cin);
+                    let hp = l.h + 2;
+                    let args = vec![
+                        TensorArg::new(padded.clone(), vec![hp, hp, l.cin]),
+                        TensorArg::new(
+                            p.w.clone(),
+                            vec![l.cout, l.cin, 3, 3],
+                        ),
+                        TensorArg::scalar_vec(p.scale.clone()),
+                        TensorArg::scalar_vec(p.bias.clone()),
+                    ];
+                    let out = self.exec_layer(l, &args)?;
+                    if cross_check_layers.contains(&l.name.as_str()) {
+                        self.cross_check(l, &padded, p, &out)?;
+                        cross_checked += 1;
+                    }
+                    cur = out;
+                    cur_hw = (l.h_out(), l.cout);
+                }
+                LayerOp::Conv1x1 => {
+                    let p = &params[&l.name];
+                    let args = vec![
+                        TensorArg::new(
+                            block_in.clone(),
+                            vec![l.h, l.h, l.cin],
+                        ),
+                        TensorArg::new(p.w.clone(), vec![l.cout, l.cin]),
+                        TensorArg::scalar_vec(p.scale.clone()),
+                        TensorArg::scalar_vec(p.bias.clone()),
+                    ];
+                    down_out = self.exec_layer(l, &args)?;
+                    if cross_check_layers.contains(&l.name.as_str()) {
+                        self.cross_check(l, &block_in, p, &down_out)?;
+                        cross_checked += 1;
+                    }
+                }
+                LayerOp::Add => {
+                    let short = match l.residual_of.as_deref() {
+                        Some("input") => &block_in,
+                        _ => &down_out,
+                    };
+                    let dims = vec![l.h, l.h, l.cin];
+                    let args = vec![
+                        TensorArg::new(cur.clone(), dims.clone()),
+                        TensorArg::new(short.clone(), dims),
+                    ];
+                    cur = self.exec_layer(l, &args)?;
+                }
+                LayerOp::AvgPool => {
+                    let args = vec![TensorArg::new(
+                        cur.clone(),
+                        vec![l.h, l.h, l.cin],
+                    )];
+                    cur = self.exec_layer(l, &args)?;
+                    cur_hw = (1, l.cout);
+                }
+                LayerOp::Linear => {
+                    let p = &params[&l.name];
+                    let args = vec![
+                        TensorArg::new(cur.clone(), vec![l.cin]),
+                        TensorArg::new(p.w.clone(), vec![l.cout, l.cin]),
+                        TensorArg::scalar_vec(p.scale.clone()),
+                        TensorArg::scalar_vec(p.bias.clone()),
+                    ];
+                    cur = self.exec_layer(l, &args)?;
+                }
+            }
+        }
+        let _ = cur_hw;
+        let report = self.scheduler.network_report(&layers, op)?;
+        Ok(InferenceResult { logits: cur, report, cross_checked })
+    }
+
+    /// Re-compute a conv layer with the Rust bit-serial datapath model
+    /// and compare bit-exactly with the artifact output.
+    fn cross_check(
+        &self,
+        l: &Layer,
+        input: &[i32],
+        p: &LayerParams,
+        artifact_out: &[i32],
+    ) -> Result<()> {
+        let h = l.h_out();
+        let job = match l.op {
+            LayerOp::Conv3x3 => RbeJob {
+                mode: RbeMode::Conv3x3,
+                h_out: h,
+                w_out: h,
+                k_in: l.cin,
+                k_out: l.cout,
+                stride: l.stride,
+                w_bits: l.w_bits,
+                i_bits: l.i_bits,
+                o_bits: l.o_bits,
+            },
+            LayerOp::Conv1x1 => RbeJob {
+                mode: RbeMode::Conv1x1,
+                h_out: h,
+                w_out: h,
+                k_in: l.cin,
+                k_out: l.cout,
+                stride: l.stride,
+                w_bits: l.w_bits,
+                i_bits: l.i_bits,
+                o_bits: l.o_bits,
+            },
+            _ => anyhow::bail!("cross-check supports conv layers"),
+        };
+        let nq = NormQuant {
+            scale: p.scale.clone(),
+            bias: p.bias.clone(),
+            shift: l.shift,
+        };
+        // The artifacts take the layer's full input plane; the datapath
+        // model wants exactly the strided extent ((h_out-1)*stride + k).
+        let need = job.h_in();
+        let full = if l.op == LayerOp::Conv3x3 { l.h + 2 } else { l.h };
+        let trimmed: Vec<i32>;
+        let input = if need == full {
+            input
+        } else {
+            let c = l.cin;
+            let mut v = Vec::with_capacity(need * need * c);
+            for r in 0..need {
+                v.extend_from_slice(
+                    &input[r * full * c..(r * full + need) * c],
+                );
+            }
+            trimmed = v;
+            &trimmed
+        };
+        let ours = conv_bitserial(&job, input, &p.w, &nq)?;
+        anyhow::ensure!(
+            ours == artifact_out,
+            "bit-serial model and PJRT artifact disagree on layer {}",
+            l.name
+        );
+        Ok(())
+    }
+}

@@ -1,0 +1,12 @@
+//! The leader: ties the PJRT runtime (functional numerics), the DORY
+//! scheduler (timing/energy), the RBE functional model (cross-checking)
+//! and the ABB machinery into end-to-end flows.
+//!
+//! Python never appears here — the artifacts were AOT-compiled at build
+//! time and the coordinator only loads/executes them through PJRT.
+
+mod infer;
+mod params;
+
+pub use infer::{InferenceResult, Coordinator};
+pub use params::{random_image, random_layer_params, LayerParams};

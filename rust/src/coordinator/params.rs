@@ -1,0 +1,71 @@
+//! Deterministic parameter generation for functional inference.
+//!
+//! Weight *values* are random (the paper's latency/energy results do not
+//! depend on learned values — DESIGN.md substitution table); shapes,
+//! ranges and normquant parameters follow the layer signature exactly.
+
+use crate::dnn::{Layer, LayerOp};
+use crate::util::Rng;
+
+/// Quantized parameters of one conv/linear layer.
+#[derive(Debug, Clone)]
+pub struct LayerParams {
+    /// Weights: conv3x3 (Kout, Kin, 3, 3); conv1x1/linear (Kout, Kin).
+    pub w: Vec<i32>,
+    pub scale: Vec<i32>,
+    pub bias: Vec<i32>,
+}
+
+/// Generate parameters for `layer` from a seeded RNG.
+pub fn random_layer_params(layer: &Layer, rng: &mut Rng) -> LayerParams {
+    let half = 1i32 << (layer.w_bits - 1);
+    let n_w = match layer.op {
+        LayerOp::Conv3x3 => layer.cout * layer.cin * 9,
+        LayerOp::Conv1x1 | LayerOp::Linear => layer.cout * layer.cin,
+        _ => 0,
+    };
+    LayerParams {
+        w: (0..n_w).map(|_| rng.range_i32(-half, half)).collect(),
+        scale: (0..layer.cout).map(|_| rng.range_i32(1, 16)).collect(),
+        bias: (0..layer.cout)
+            .map(|_| rng.range_i32(-(1 << 10), 1 << 10))
+            .collect(),
+    }
+}
+
+/// A synthetic CIFAR-like image: (32, 32, 3) with values in the stem's
+/// input range.
+pub fn random_image(i_bits: usize, rng: &mut Rng) -> Vec<i32> {
+    (0..32 * 32 * 3)
+        .map(|_| rng.range_i32(0, 1 << i_bits))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{resnet20_layers, PrecisionConfig};
+
+    #[test]
+    fn params_respect_ranges() {
+        let mut rng = Rng::new(1);
+        for l in resnet20_layers(PrecisionConfig::Mixed) {
+            if !l.op.on_rbe() {
+                continue;
+            }
+            let p = random_layer_params(&l, &mut rng);
+            let half = 1i32 << (l.w_bits - 1);
+            assert!(p.w.iter().all(|&v| (-half..half).contains(&v)));
+            assert_eq!(p.scale.len(), l.cout);
+            assert!(p.scale.iter().all(|&s| s >= 1));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let l = &resnet20_layers(PrecisionConfig::Uniform8)[0];
+        let a = random_layer_params(l, &mut Rng::new(7));
+        let b = random_layer_params(l, &mut Rng::new(7));
+        assert_eq!(a.w, b.w);
+    }
+}

@@ -1,0 +1,477 @@
+//! Execute stage: instruction semantics against a word-addressed memory.
+
+use anyhow::{bail, Result};
+
+use super::{Core, LoopCtx};
+use crate::isa::{dotp, simd_alu, AluOp, Cond, FOp, Instr};
+
+/// The memory side-effect an instruction wants this cycle, computed
+/// *before* execution so the cluster can arbitrate TCDM banks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemOp {
+    /// Byte address (word aligned).
+    pub addr: u32,
+    pub is_store: bool,
+}
+
+/// What happened when an instruction executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecOutcome {
+    /// Normal completion; pc advanced.
+    Done,
+    /// Branch taken (pc redirected) — costs one bubble.
+    BranchTaken,
+    /// Core reached Halt.
+    Halted,
+    /// Core parked at barrier.
+    Barrier,
+}
+
+impl Core {
+    /// If the current instruction accesses data memory, return the request
+    /// (pure; no state change).
+    pub fn mem_request(&self) -> Option<MemOp> {
+        let i = self.fetch()?;
+        let (base, offset, post_inc, is_store) = match i {
+            Instr::Lw { base, offset, post_inc, .. } => {
+                (base, offset, post_inc, false)
+            }
+            Instr::Sw { base, offset, post_inc, .. } => {
+                (base, offset, post_inc, true)
+            }
+            Instr::Flw { base, offset, post_inc, .. } => {
+                (base, offset, post_inc, false)
+            }
+            Instr::Fsw { base, offset, post_inc, .. } => {
+                (base, offset, post_inc, true)
+            }
+            Instr::NnLoad { ptr, post_inc, .. } => (ptr, 0, post_inc, false),
+            Instr::MlSdotp { refresh: Some((_, ptr)), .. } => {
+                (ptr, 0, 0, false)
+            }
+            _ => return None,
+        };
+        let eff = if post_inc != 0 {
+            self.reg(base) // post-increment form: address is the old base
+        } else {
+            self.reg(base).wrapping_add(offset as u32)
+        };
+        Some(MemOp { addr: eff, is_store })
+    }
+
+    /// Execute the current instruction. `mem` is the whole address space
+    /// (the cluster has already granted any needed bank this cycle).
+    pub fn exec<M: MemSpace>(&mut self, mem: &mut M) -> Result<ExecOutcome> {
+        let Some(i) = self.fetch() else {
+            return Ok(ExecOutcome::Halted);
+        };
+        self.stats.instrs += 1;
+        // op-class counters are bumped inside the match arms (hot loop:
+        // one dispatch per instruction instead of five)
+        let mut next_load_rd: Option<u8> = None;
+
+        match i {
+            Instr::Alu { op, rd, rs1, rs2 } => {
+                let v = alu(op, self.reg(rs1), self.reg(rs2));
+                self.set_reg(rd, v);
+            }
+            Instr::AluImm { op, rd, rs1, imm } => {
+                let v = alu(op, self.reg(rs1), imm as u32);
+                self.set_reg(rd, v);
+            }
+            Instr::Li { rd, imm } => self.set_reg(rd, imm as u32),
+            Instr::Mac { rd, rs1, rs2 } => {
+                self.stats.macs += 1;
+                let v = (self.reg(rd) as i32).wrapping_add(
+                    (self.reg(rs1) as i32).wrapping_mul(self.reg(rs2) as i32),
+                );
+                self.set_reg(rd, v as u32);
+            }
+            Instr::VAlu { op, prec, rd, rs1, rs2 } => {
+                let v = simd_alu(op, self.reg(rs1), self.reg(rs2), prec);
+                self.set_reg(rd, v);
+            }
+            Instr::Dotp { prec, sign, rd, rs1, rs2 } => {
+                self.stats.macs += prec.macs_per_dotp();
+                self.stats.dotp_instrs += 1;
+                let v = dotp(self.reg(rs1), self.reg(rs2), prec, sign);
+                self.set_reg(rd, v as u32);
+            }
+            Instr::Sdotp { prec, sign, rd, rs1, rs2 } => {
+                self.stats.macs += prec.macs_per_dotp();
+                self.stats.dotp_instrs += 1;
+                let v = (self.reg(rd) as i32).wrapping_add(dotp(
+                    self.reg(rs1),
+                    self.reg(rs2),
+                    prec,
+                    sign,
+                ));
+                self.set_reg(rd, v as u32);
+            }
+            Instr::MlSdotp { prec, sign, rd, na, nb, refresh } => {
+                self.stats.macs += prec.macs_per_dotp();
+                self.stats.dotp_instrs += 1;
+                self.stats.macload_instrs += 1;
+                if refresh.is_some() {
+                    self.stats.mem_accesses += 1;
+                }
+                // DOTP reads the *current* NN-RF contents; the refresh data
+                // lands in WB, visible from the next cycle (paper Fig. 2b).
+                let v = (self.reg(rd) as i32).wrapping_add(dotp(
+                    self.nnrf[na as usize],
+                    self.nnrf[nb as usize],
+                    prec,
+                    sign,
+                ));
+                self.set_reg(rd, v as u32);
+                if let Some((nn, ptr)) = refresh {
+                    let addr = self.reg(ptr);
+                    self.nnrf[nn as usize] = mem.load(addr)?;
+                    // pointer post-incremented by one word in EX
+                    self.set_reg(ptr, addr.wrapping_add(4));
+                }
+            }
+            Instr::NnLoad { nn_rd, ptr, post_inc } => {
+                self.stats.mem_accesses += 1;
+                let addr = self.reg(ptr);
+                self.nnrf[nn_rd as usize] = mem.load(addr)?;
+                if post_inc != 0 {
+                    self.set_reg(ptr, addr.wrapping_add(post_inc as u32));
+                }
+            }
+            Instr::Lw { rd, base, offset, post_inc } => {
+                self.stats.mem_accesses += 1;
+                let addr = if post_inc != 0 {
+                    let a = self.reg(base);
+                    self.set_reg(base, a.wrapping_add(post_inc as u32));
+                    a
+                } else {
+                    self.reg(base).wrapping_add(offset as u32)
+                };
+                let v = mem.load(addr)?;
+                self.set_reg(rd, v);
+                next_load_rd = Some(rd);
+            }
+            Instr::Sw { rs, base, offset, post_inc } => {
+                self.stats.mem_accesses += 1;
+                let addr = if post_inc != 0 {
+                    let a = self.reg(base);
+                    self.set_reg(base, a.wrapping_add(post_inc as u32));
+                    a
+                } else {
+                    self.reg(base).wrapping_add(offset as u32)
+                };
+                mem.store(addr, self.reg(rs))?;
+            }
+            Instr::Flw { fd, base, offset, post_inc } => {
+                self.stats.mem_accesses += 1;
+                let addr = if post_inc != 0 {
+                    let a = self.reg(base);
+                    self.set_reg(base, a.wrapping_add(post_inc as u32));
+                    a
+                } else {
+                    self.reg(base).wrapping_add(offset as u32)
+                };
+                self.fregs[fd as usize] = mem.load(addr)?;
+            }
+            Instr::Fsw { fs, base, offset, post_inc } => {
+                self.stats.mem_accesses += 1;
+                let addr = if post_inc != 0 {
+                    let a = self.reg(base);
+                    self.set_reg(base, a.wrapping_add(post_inc as u32));
+                    a
+                } else {
+                    self.reg(base).wrapping_add(offset as u32)
+                };
+                mem.store(addr, self.fregs[fs as usize])?;
+            }
+            Instr::FAlu { op, lanes, fd, fs1, fs2, fs3 } => {
+                self.stats.flops += op.flops() * lanes as u64;
+                let (a, b, c) = (self.freg(fs1), self.freg(fs2), self.freg(fs3));
+                let v = match op {
+                    FOp::Add => a + b,
+                    FOp::Sub => a - b,
+                    FOp::Mul => a * b,
+                    FOp::Madd => a.mul_add(b, c),
+                    FOp::Nmsub => (-a).mul_add(b, c),
+                };
+                self.set_freg(fd, v);
+            }
+            Instr::FMvToF { fd, rs } => {
+                self.fregs[fd as usize] = self.reg(rs);
+            }
+            Instr::FMvToX { rd, fs } => {
+                self.set_reg(rd, self.fregs[fs as usize]);
+            }
+            Instr::Branch { cond, rs1, rs2, target } => {
+                let (a, b) = (self.reg(rs1), self.reg(rs2));
+                let taken = match cond {
+                    Cond::Eq => a == b,
+                    Cond::Ne => a != b,
+                    Cond::Lt => (a as i32) < (b as i32),
+                    Cond::Ge => (a as i32) >= (b as i32),
+                    Cond::Ltu => a < b,
+                    Cond::Geu => a >= b,
+                };
+                if taken {
+                    self.pc = target;
+                    return Ok(ExecOutcome::BranchTaken);
+                }
+            }
+            Instr::Jump { target } => {
+                self.pc = target;
+                return Ok(ExecOutcome::BranchTaken);
+            }
+            Instr::HwLoop { idx, count, body_start, body_end } => {
+                let n = self.reg(count);
+                if n == 0 {
+                    bail!("hw loop {idx} setup with count 0 (pc {})", self.pc);
+                }
+                self.loops[idx as usize] = Some(LoopCtx {
+                    body_start,
+                    body_end,
+                    remaining: n,
+                });
+            }
+            Instr::Barrier => {
+                self.at_barrier = true;
+                self.advance_pc();
+                return Ok(ExecOutcome::Barrier);
+            }
+            Instr::CoreId { rd } => self.set_reg(rd, self.id as u32),
+            Instr::Nop => {}
+            Instr::Halt => {
+                self.halted = true;
+                return Ok(ExecOutcome::Halted);
+            }
+        }
+
+        self.advance_pc();
+        // Load-use hazard: stall one cycle if the *next* instruction reads
+        // the register a load just wrote (RI5CY forwards from WB with a
+        // single bubble).
+        if let Some(rd) = next_load_rd {
+            if let Some(next) = self.fetch() {
+                if reads_reg(&next, rd) {
+                    self.stall += 1;
+                    self.stats.stall_loaduse += 1;
+                }
+            }
+        }
+        self.last_load_rd = next_load_rd;
+        Ok(ExecOutcome::Done)
+    }
+}
+
+/// Word-addressed memory interface implemented by the cluster memory
+/// system.
+pub trait MemSpace {
+    fn load(&mut self, addr: u32) -> Result<u32>;
+    fn store(&mut self, addr: u32, value: u32) -> Result<()>;
+}
+
+fn alu(op: AluOp, a: u32, b: u32) -> u32 {
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::Sll => a.wrapping_shl(b & 31),
+        AluOp::Srl => a.wrapping_shr(b & 31),
+        AluOp::Sra => ((a as i32).wrapping_shr(b & 31)) as u32,
+        AluOp::And => a & b,
+        AluOp::Or => a | b,
+        AluOp::Xor => a ^ b,
+        AluOp::Slt => ((a as i32) < (b as i32)) as u32,
+        AluOp::Sltu => (a < b) as u32,
+        AluOp::Mul => a.wrapping_mul(b),
+        AluOp::Min => (a as i32).min(b as i32) as u32,
+        AluOp::Max => (a as i32).max(b as i32) as u32,
+    }
+}
+
+/// Does `i` read GPR `r`? (conservative, for the load-use hazard check)
+fn reads_reg(i: &Instr, r: u8) -> bool {
+    if r == 0 {
+        return false;
+    }
+    match *i {
+        Instr::Alu { rs1, rs2, .. } => rs1 == r || rs2 == r,
+        Instr::AluImm { rs1, .. } => rs1 == r,
+        Instr::Mac { rd, rs1, rs2 } => rd == r || rs1 == r || rs2 == r,
+        Instr::VAlu { rs1, rs2, .. } => rs1 == r || rs2 == r,
+        Instr::Dotp { rs1, rs2, .. } => rs1 == r || rs2 == r,
+        Instr::Sdotp { rd, rs1, rs2, .. } => rd == r || rs1 == r || rs2 == r,
+        Instr::MlSdotp { rd, refresh, .. } => {
+            rd == r || matches!(refresh, Some((_, p)) if p == r)
+        }
+        Instr::NnLoad { ptr, .. } => ptr == r,
+        Instr::Lw { base, .. } => base == r,
+        Instr::Sw { rs, base, .. } => rs == r || base == r,
+        Instr::Flw { base, .. } | Instr::Fsw { base, .. } => base == r,
+        Instr::FMvToF { rs, .. } => rs == r,
+        Instr::Branch { rs1, rs2, .. } => rs1 == r || rs2 == r,
+        Instr::HwLoop { count, .. } => count == r,
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{IsaLevel, Prec, Program, ProgramBuilder, Sign};
+    use std::sync::Arc;
+
+    struct FlatMem(Vec<u32>);
+    impl MemSpace for FlatMem {
+        fn load(&mut self, addr: u32) -> Result<u32> {
+            Ok(self.0[(addr >> 2) as usize])
+        }
+        fn store(&mut self, addr: u32, value: u32) -> Result<()> {
+            self.0[(addr >> 2) as usize] = value;
+            Ok(())
+        }
+    }
+
+    fn run(prog: Program, mem: &mut FlatMem) -> Core {
+        let mut c = Core::new(0, Arc::new(prog));
+        for _ in 0..100_000 {
+            if c.halted {
+                break;
+            }
+            if c.stall > 0 {
+                c.stall -= 1;
+                continue;
+            }
+            c.exec(mem).unwrap();
+        }
+        assert!(c.halted, "program did not halt");
+        c
+    }
+
+    #[test]
+    fn hw_loop_executes_count_times() {
+        let mut b = ProgramBuilder::new("loop", IsaLevel::Xpulp);
+        let (s, e) = (b.label(), b.label());
+        b.emit(Instr::Li { rd: 5, imm: 10 });
+        b.emit(Instr::Li { rd: 6, imm: 0 });
+        b.hw_loop(0, 5, s, e);
+        b.bind(s);
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: 6, rs1: 6, imm: 1 });
+        b.bind(e);
+        b.emit(Instr::Nop);
+        let mut mem = FlatMem(vec![0; 16]);
+        let c = run(b.build().unwrap(), &mut mem);
+        assert_eq!(c.reg(6), 10);
+    }
+
+    #[test]
+    fn nested_hw_loops() {
+        let mut b = ProgramBuilder::new("nest", IsaLevel::Xpulp);
+        let (os, oe) = (b.label(), b.label());
+        let (is_, ie) = (b.label(), b.label());
+        b.emit(Instr::Li { rd: 5, imm: 3 }); // outer count
+        b.emit(Instr::Li { rd: 7, imm: 0 }); // counter
+        b.hw_loop(1, 5, os, oe);
+        b.bind(os);
+        b.emit(Instr::Li { rd: 6, imm: 4 }); // inner count
+        b.hw_loop(0, 6, is_, ie);
+        b.bind(is_);
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: 7, rs1: 7, imm: 1 });
+        b.bind(ie);
+        b.emit(Instr::Nop); // last instr of outer body
+        b.bind(oe);
+        b.emit(Instr::Nop);
+        let mut mem = FlatMem(vec![0; 16]);
+        let c = run(b.build().unwrap(), &mut mem);
+        assert_eq!(c.reg(7), 12); // 3 * 4
+    }
+
+    #[test]
+    fn post_increment_load_walks_array() {
+        let mut b = ProgramBuilder::new("pi", IsaLevel::Xpulp);
+        b.emit(Instr::Li { rd: 10, imm: 0 }); // ptr
+        b.emit(Instr::Li { rd: 11, imm: 0 }); // sum
+        for _ in 0..4 {
+            b.emit(Instr::Lw { rd: 12, base: 10, offset: 0, post_inc: 4 });
+            b.emit(Instr::Alu { op: AluOp::Add, rd: 11, rs1: 11, rs2: 12 });
+        }
+        let mut mem = FlatMem(vec![5, 6, 7, 8]);
+        let c = run(b.build().unwrap(), &mut mem);
+        assert_eq!(c.reg(11), 26);
+        assert_eq!(c.reg(10), 16);
+    }
+
+    #[test]
+    fn macload_uses_pre_refresh_operands() {
+        // nn0 = 1s vector, refresh nn0 from memory; dotp must use the OLD
+        // value in the same cycle.
+        let mut b = ProgramBuilder::new("ml", IsaLevel::XpulpNN);
+        b.emit(Instr::Li { rd: 10, imm: 0 }); // ptr to new data
+        b.emit(Instr::Li { rd: 11, imm: 0 }); // acc
+        b.emit(Instr::NnLoad { nn_rd: 0, ptr: 10, post_inc: 0 }); // nn0 = mem[0]
+        b.emit(Instr::NnLoad { nn_rd: 1, ptr: 10, post_inc: 0 }); // nn1 = mem[0]
+        b.emit(Instr::Li { rd: 10, imm: 4 }); // point at second word
+        b.emit(Instr::MlSdotp {
+            prec: Prec::B8,
+            sign: Sign::SS,
+            rd: 11,
+            na: 0,
+            nb: 1,
+            refresh: Some((0, 10)),
+        });
+        // second mlsdotp sees the refreshed nn0
+        b.emit(Instr::MlSdotp {
+            prec: Prec::B8,
+            sign: Sign::SS,
+            rd: 11,
+            na: 0,
+            nb: 1,
+            refresh: None,
+        });
+        // mem[0] = [1,1,1,1] bytes; mem[1] = [2,2,2,2] bytes
+        let mut mem = FlatMem(vec![0x01010101, 0x02020202]);
+        let c = run(b.build().unwrap(), &mut mem);
+        // first: dot([1;4],[1;4]) = 4; second: dot([2;4],[1;4]) = 8
+        assert_eq!(c.reg(11) as i32, 12);
+        assert_eq!(c.reg(10), 8); // ptr post-incremented by 4
+    }
+
+    #[test]
+    fn branch_loop_and_x0() {
+        let mut b = ProgramBuilder::new("br", IsaLevel::Xpulp);
+        let top = b.label();
+        b.emit(Instr::Li { rd: 5, imm: 5 });
+        b.emit(Instr::Li { rd: 6, imm: 0 });
+        b.bind(top);
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: 6, rs1: 6, imm: 2 });
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: 5, rs1: 5, imm: -1 });
+        b.branch(Cond::Ne, 5, 0, top);
+        b.emit(Instr::Li { rd: 0, imm: 99 }); // write to x0 ignored
+        let mut mem = FlatMem(vec![0; 4]);
+        let c = run(b.build().unwrap(), &mut mem);
+        assert_eq!(c.reg(6), 10);
+        assert_eq!(c.reg(0), 0);
+    }
+
+    #[test]
+    fn fp_madd() {
+        let mut b = ProgramBuilder::new("fp", IsaLevel::Xpulp);
+        b.emit(Instr::Li { rd: 5, imm: 2.5f32.to_bits() as i32 });
+        b.emit(Instr::FMvToF { fd: 1, rs: 5 });
+        b.emit(Instr::Li { rd: 5, imm: 4.0f32.to_bits() as i32 });
+        b.emit(Instr::FMvToF { fd: 2, rs: 5 });
+        b.emit(Instr::Li { rd: 5, imm: 1.0f32.to_bits() as i32 });
+        b.emit(Instr::FMvToF { fd: 3, rs: 5 });
+        b.emit(Instr::FAlu {
+            op: FOp::Madd,
+            lanes: 1,
+            fd: 4,
+            fs1: 1,
+            fs2: 2,
+            fs3: 3,
+        });
+        b.emit(Instr::FMvToX { rd: 6, fs: 4 });
+        let mut mem = FlatMem(vec![0; 4]);
+        let c = run(b.build().unwrap(), &mut mem);
+        assert_eq!(f32::from_bits(c.reg(6)), 11.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! RI5CY-style core model: architectural state + instruction semantics +
+//! per-instruction timing rules (paper §II-A2, Fig. 2b).
+//!
+//! The core is executed cycle-by-cycle by [`crate::cluster::Cluster`]; this
+//! module owns everything *inside* one core: the GP-RF, FP-RF, the XpulpNN
+//! NN-RF, hardware-loop contexts, and the execute stage. Memory and FPU
+//! arbitration live in the cluster (they are shared resources).
+
+mod exec;
+mod stats;
+
+pub use exec::{ExecOutcome, MemOp, MemSpace};
+pub use stats::CoreStats;
+
+use std::sync::Arc;
+
+use crate::isa::{Instr, Program, NN_RF_SIZE};
+
+/// Hardware-loop context (Xpulp `lp.setup`).
+#[derive(Debug, Clone, Copy)]
+pub struct LoopCtx {
+    pub body_start: usize,
+    pub body_end: usize,
+    pub remaining: u32,
+}
+
+/// One cluster (or SOC) core.
+pub struct Core {
+    pub id: usize,
+    pub regs: [u32; 32],
+    /// FP registers, stored as raw f32 bits.
+    pub fregs: [u32; 32],
+    /// The XpulpNN NN register file (6 × 32-bit SIMD vectors).
+    pub nnrf: [u32; NN_RF_SIZE],
+    pub pc: usize,
+    pub halted: bool,
+    /// Cycles the core must stall before issuing again.
+    pub stall: u32,
+    /// Set while parked at an event-unit barrier.
+    pub at_barrier: bool,
+    pub loops: [Option<LoopCtx>; 2],
+    pub prog: Arc<Program>,
+    pub stats: CoreStats,
+    /// rd of an in-flight load, for the load-use hazard check.
+    pub last_load_rd: Option<u8>,
+}
+
+impl Core {
+    pub fn new(id: usize, prog: Arc<Program>) -> Self {
+        Self {
+            id,
+            regs: [0; 32],
+            fregs: [0; 32],
+            nnrf: [0; NN_RF_SIZE],
+            pc: 0,
+            halted: false,
+            stall: 0,
+            at_barrier: false,
+            loops: [None; 2],
+            prog,
+            stats: CoreStats::default(),
+        last_load_rd: None,
+        }
+    }
+
+    /// Current instruction, if any.
+    pub fn fetch(&self) -> Option<Instr> {
+        if self.halted {
+            None
+        } else {
+            self.prog.instrs.get(self.pc).copied()
+        }
+    }
+
+    pub fn reg(&self, r: u8) -> u32 {
+        if r == 0 {
+            0
+        } else {
+            self.regs[r as usize]
+        }
+    }
+
+    pub fn set_reg(&mut self, r: u8, v: u32) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    pub fn freg(&self, r: u8) -> f32 {
+        f32::from_bits(self.fregs[r as usize])
+    }
+
+    pub fn set_freg(&mut self, r: u8, v: f32) {
+        self.fregs[r as usize] = v.to_bits();
+    }
+
+    /// Advance pc after executing the instruction at `pc`, honouring
+    /// hardware-loop back-edges (zero-overhead: the jump back is free).
+    pub fn advance_pc(&mut self) {
+        // Innermost loop whose body ends here takes priority. With two
+        // contexts, the one with the *larger* body_start that matches is
+        // the inner one.
+        let mut matched: Option<usize> = None;
+        for i in 0..2 {
+            if let Some(ctx) = self.loops[i] {
+                if ctx.body_end == self.pc && ctx.remaining > 0 {
+                    matched = match matched {
+                        Some(j)
+                            if self.loops[j].unwrap().body_start
+                                >= ctx.body_start =>
+                        {
+                            Some(j)
+                        }
+                        _ => Some(i),
+                    };
+                }
+            }
+        }
+        if let Some(i) = matched {
+            let ctx = self.loops[i].as_mut().unwrap();
+            ctx.remaining -= 1;
+            if ctx.remaining > 0 {
+                self.pc = ctx.body_start;
+                return;
+            }
+            self.loops[i] = None;
+        }
+        self.pc += 1;
+    }
+}

@@ -1,0 +1,70 @@
+//! Per-core performance counters (modelled after the RI5CY PCCRs).
+
+/// Counters accumulated while a core executes; the cluster aggregates them
+/// into workload-level metrics (Gop/s, DOTP utilization, stall breakdown).
+#[derive(Debug, Default, Clone)]
+pub struct CoreStats {
+    /// Instructions retired.
+    pub instrs: u64,
+    /// Cycles this core was active (not halted), including stalls.
+    pub cycles: u64,
+    /// MAC operations performed (SIMD lanes counted).
+    pub macs: u64,
+    /// FP operations performed (FMA = 2).
+    pub flops: u64,
+    /// Instructions that occupied the DOTP unit.
+    pub dotp_instrs: u64,
+    /// MAC&LOAD instructions among them.
+    pub macload_instrs: u64,
+    /// Data-memory accesses issued (TCDM + L2).
+    pub mem_accesses: u64,
+    /// Stall cycles: TCDM bank conflict.
+    pub stall_conflict: u64,
+    /// Stall cycles: shared-FPU contention.
+    pub stall_fpu: u64,
+    /// Stall cycles: load-use hazard.
+    pub stall_loaduse: u64,
+    /// Stall cycles: taken-branch bubble.
+    pub stall_branch: u64,
+    /// Stall cycles: L2 (AXI) access latency.
+    pub stall_l2: u64,
+    /// Cycles parked at an event-unit barrier.
+    pub stall_barrier: u64,
+}
+
+impl CoreStats {
+    pub fn total_stalls(&self) -> u64 {
+        self.stall_conflict
+            + self.stall_fpu
+            + self.stall_loaduse
+            + self.stall_branch
+            + self.stall_l2
+            + self.stall_barrier
+    }
+
+    /// Fraction of active cycles in which the DOTP unit was busy — the
+    /// utilization figure the paper quotes as 94% for MAC&LOAD MatMul.
+    pub fn dotp_utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.dotp_instrs as f64 / self.cycles as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &CoreStats) {
+        self.instrs += o.instrs;
+        self.cycles += o.cycles;
+        self.macs += o.macs;
+        self.flops += o.flops;
+        self.dotp_instrs += o.dotp_instrs;
+        self.macload_instrs += o.macload_instrs;
+        self.mem_accesses += o.mem_accesses;
+        self.stall_conflict += o.stall_conflict;
+        self.stall_fpu += o.stall_fpu;
+        self.stall_loaduse += o.stall_loaduse;
+        self.stall_branch += o.stall_branch;
+        self.stall_l2 += o.stall_l2;
+        self.stall_barrier += o.stall_barrier;
+    }
+}

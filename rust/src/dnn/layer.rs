@@ -1,0 +1,210 @@
+//! Layer descriptors, mirroring `python/compile/model.py::LayerSpec`.
+
+/// Operator kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerOp {
+    Conv3x3,
+    Conv1x1,
+    Add,
+    AvgPool,
+    Linear,
+}
+
+impl LayerOp {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LayerOp::Conv3x3 => "conv3x3",
+            LayerOp::Conv1x1 => "conv1x1",
+            LayerOp::Add => "add",
+            LayerOp::AvgPool => "avgpool",
+            LayerOp::Linear => "linear",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "conv3x3" => LayerOp::Conv3x3,
+            "conv1x1" => LayerOp::Conv1x1,
+            "add" => LayerOp::Add,
+            "avgpool" => LayerOp::AvgPool,
+            "linear" => LayerOp::Linear,
+            _ => return None,
+        })
+    }
+
+    /// Does this operator run on RBE (vs the RISC-V cores)?
+    pub fn on_rbe(&self) -> bool {
+        matches!(self, LayerOp::Conv3x3 | LayerOp::Conv1x1 | LayerOp::Linear)
+    }
+}
+
+/// Network precision configuration (paper §IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrecisionConfig {
+    /// Everything 8-bit.
+    Uniform8,
+    /// Representative HAWQ assignment: weights {2,3,6,8}, acts {4,8}.
+    Mixed,
+}
+
+impl PrecisionConfig {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PrecisionConfig::Uniform8 => "uniform8",
+            PrecisionConfig::Mixed => "mixed",
+        }
+    }
+}
+
+/// One schedulable layer. `h` is the *unpadded* input spatial size.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub op: LayerOp,
+    pub name: String,
+    pub h: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub w_bits: usize,
+    pub i_bits: usize,
+    pub o_bits: usize,
+    pub shift: u32,
+    /// For `Add`: name of the shortcut source ("input" = block entry).
+    pub residual_of: Option<String>,
+}
+
+impl Layer {
+    pub fn h_out(&self) -> usize {
+        if self.h == 0 {
+            0
+        } else {
+            (self.h + self.stride - 1) / self.stride
+        }
+    }
+
+    /// MACs of this layer (conv/linear only; elementwise ops report 0).
+    pub fn macs(&self) -> u64 {
+        match self.op {
+            LayerOp::Conv3x3 => {
+                (self.h_out() * self.h_out() * self.cout * self.cin * 9)
+                    as u64
+            }
+            LayerOp::Conv1x1 => {
+                (self.h_out() * self.h_out() * self.cout * self.cin) as u64
+            }
+            LayerOp::Linear => (self.cin * self.cout) as u64,
+            _ => 0,
+        }
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.macs() * 2
+    }
+
+    /// Elements produced.
+    pub fn out_elems(&self) -> usize {
+        match self.op {
+            LayerOp::AvgPool | LayerOp::Linear => self.cout,
+            _ => self.h_out() * self.h_out() * self.cout,
+        }
+    }
+
+    pub fn artifact(&self) -> String {
+        artifact_name(self)
+    }
+}
+
+/// Stable artifact naming shared with `python/compile/model.py`.
+pub fn artifact_name(l: &Layer) -> String {
+    match l.op {
+        LayerOp::Conv3x3 | LayerOp::Conv1x1 => format!(
+            "{}_h{}_ci{}_co{}_s{}_w{}i{}o{}",
+            l.op.as_str(),
+            l.h,
+            l.cin,
+            l.cout,
+            l.stride,
+            l.w_bits,
+            l.i_bits,
+            l.o_bits
+        ),
+        LayerOp::Add => {
+            format!("add_h{}_k{}_o{}_sh{}", l.h, l.cin, l.o_bits, l.shift)
+        }
+        LayerOp::AvgPool => format!("avgpool_h{}_k{}", l.h, l.cin),
+        LayerOp::Linear => format!(
+            "linear_ci{}_co{}_w{}i{}o{}",
+            l.cin, l.cout, l.w_bits, l.i_bits, l.o_bits
+        ),
+    }
+}
+
+/// Mirror of `model._shift_for` (must stay numerically identical): a
+/// variance-based shift so random-weight activations stay spread over the
+/// O-bit range through the whole network (see the python docstring).
+pub fn shift_for(
+    cin: usize,
+    w_bits: usize,
+    i_bits: usize,
+    o_bits: usize,
+    taps: usize,
+) -> u32 {
+    let x = 0.5 * ((cin * taps).max(1) as f64).log2()
+        + w_bits as f64
+        + i_bits as f64
+        + 0.42
+        - o_bits as f64;
+    ((x + 0.5).trunc() as i64).max(0) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names_match_python_convention() {
+        let l = Layer {
+            op: LayerOp::Conv3x3,
+            name: "stem".into(),
+            h: 32,
+            cin: 3,
+            cout: 16,
+            stride: 1,
+            w_bits: 8,
+            i_bits: 8,
+            o_bits: 8,
+            shift: 0,
+            residual_of: None,
+        };
+        assert_eq!(l.artifact(), "conv3x3_h32_ci3_co16_s1_w8i8o8");
+    }
+
+    #[test]
+    fn shift_matches_python_formula() {
+        // stem uniform8: 0.5*log2(27)+8+8+0.42-8 = 10.80 -> 11 (round)
+        assert_eq!(shift_for(3, 8, 8, 8, 9), 11);
+        // fc mixed: 0.5*log2(64)+8+4+0.42-8 = 7.42 -> 7
+        assert_eq!(shift_for(64, 8, 4, 8, 1), 7);
+        // stage1 mixed: 0.5*log2(144)+6+4+0.42-4 = 10.0 -> 10
+        assert_eq!(shift_for(16, 6, 4, 4, 9), 10);
+    }
+
+    #[test]
+    fn mac_counts() {
+        let l = Layer {
+            op: LayerOp::Conv3x3,
+            name: "x".into(),
+            h: 16,
+            cin: 32,
+            cout: 64,
+            stride: 2,
+            w_bits: 4,
+            i_bits: 4,
+            o_bits: 4,
+            shift: 0,
+            residual_of: None,
+        };
+        assert_eq!(l.h_out(), 8);
+        assert_eq!(l.macs(), 8 * 8 * 64 * 32 * 9);
+    }
+}

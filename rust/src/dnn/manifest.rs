@@ -1,0 +1,121 @@
+//! The artifact manifest: the build-time contract between
+//! `python/compile/aot.py` and the Rust runtime.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::layer::{Layer, LayerOp, PrecisionConfig};
+use super::resnet::resnet20_layers;
+use crate::util::TsvTable;
+
+/// One manifest row (mirrors aot.manifest_entry minus arg shapes, which
+/// the Rust side re-derives from the layer signature).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub op: LayerOp,
+    pub h: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub w_bits: usize,
+    pub i_bits: usize,
+    pub o_bits: usize,
+    pub shift: u32,
+}
+
+/// Parsed `manifest.tsv`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    entries: HashMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let t = TsvTable::load(&artifacts_dir.join("manifest.tsv"))?;
+        let mut entries = HashMap::new();
+        for r in 0..t.len() {
+            let name = t.get(r, "name")?.to_string();
+            let op = LayerOp::parse(t.get(r, "op")?)
+                .ok_or_else(|| anyhow::anyhow!("bad op row {r}"))?;
+            let e = ManifestEntry {
+                name: name.clone(),
+                op,
+                h: t.get_usize(r, "h")?,
+                cin: t.get_usize(r, "cin")?,
+                cout: t.get_usize(r, "cout")?,
+                stride: t.get_usize(r, "stride")?,
+                w_bits: t.get_usize(r, "w_bits")?,
+                i_bits: t.get_usize(r, "i_bits")?,
+                o_bits: t.get_usize(r, "o_bits")?,
+                shift: t.get_usize(r, "shift")? as u32,
+            };
+            entries.insert(name, e);
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.get(name)
+    }
+
+    /// Check that every layer of the given network config has a manifest
+    /// entry with matching signature (the python/rust zoo must agree).
+    pub fn validate_network(&self, config: PrecisionConfig) -> Result<()> {
+        for l in resnet20_layers(config) {
+            let name = l.artifact();
+            let Some(e) = self.entries.get(&name) else {
+                bail!("layer {} has no artifact {name}", l.name);
+            };
+            if !entry_matches(e, &l) {
+                bail!(
+                    "artifact {name} signature mismatch: manifest {e:?} vs \
+                     layer {l:?}"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+fn entry_matches(e: &ManifestEntry, l: &Layer) -> bool {
+    e.op == l.op
+        && e.h == l.h
+        && e.cin == l.cin
+        && e.cout == l.cout
+        && e.stride == l.stride
+        && (e.w_bits, e.i_bits, e.o_bits) == (l.w_bits, l.i_bits, l.o_bits)
+        && e.shift == l.shift
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_and_covers_both_configs() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.tsv").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.len() >= 20, "{} artifacts", m.len());
+        m.validate_network(PrecisionConfig::Uniform8).unwrap();
+        m.validate_network(PrecisionConfig::Mixed).unwrap();
+    }
+}

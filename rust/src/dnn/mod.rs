@@ -1,0 +1,17 @@
+//! DNN layer zoo (paper §IV): the networks deployed on Marsellus and
+//! their HAWQ mixed-precision configurations.
+//!
+//! [`resnet::resnet20_layers`] mirrors `python/compile/model.py`
+//! **field-for-field** — layer names, shapes, precisions, normquant
+//! shifts and artifact names must match, because the Python side lowers
+//! one PJRT artifact per unique layer signature and the Rust coordinator
+//! looks them up by the same derived name. `manifest.tsv` (written by
+//! aot.py) is the contract; [`manifest::Manifest`] validates it.
+
+pub mod layer;
+pub mod manifest;
+pub mod resnet;
+
+pub use layer::{artifact_name, Layer, LayerOp, PrecisionConfig};
+pub use manifest::Manifest;
+pub use resnet::{resnet18_layers, resnet20_layers};

@@ -1,0 +1,322 @@
+//! Network definitions: ResNet-20/CIFAR-10 (Figs. 17–18) and
+//! ResNet-18/ImageNet (Table II timing rows).
+
+use super::layer::{shift_for, Layer, LayerOp, PrecisionConfig};
+
+struct StageBits {
+    stem: (usize, usize, usize),
+    stage1: (usize, usize, usize),
+    stage2: (usize, usize, usize),
+    stage3: (usize, usize, usize),
+    down: (usize, usize, usize),
+    fc: (usize, usize, usize),
+}
+
+fn bits_of(config: PrecisionConfig) -> StageBits {
+    match config {
+        PrecisionConfig::Uniform8 => StageBits {
+            stem: (8, 8, 8),
+            stage1: (8, 8, 8),
+            stage2: (8, 8, 8),
+            stage3: (8, 8, 8),
+            down: (8, 8, 8),
+            fc: (8, 8, 8),
+        },
+        // Representative HAWQ assignment (mirrors model.PRECISIONS).
+        PrecisionConfig::Mixed => StageBits {
+            stem: (8, 8, 4),
+            stage1: (6, 4, 4),
+            stage2: (3, 4, 4),
+            stage3: (2, 4, 4),
+            down: (8, 4, 4),
+            fc: (8, 4, 8),
+        },
+    }
+}
+
+fn conv(
+    op: LayerOp,
+    name: &str,
+    h: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    bits: (usize, usize, usize),
+) -> Layer {
+    let taps = if op == LayerOp::Conv3x3 { 9 } else { 1 };
+    Layer {
+        op,
+        name: name.to_string(),
+        h,
+        cin,
+        cout,
+        stride,
+        w_bits: bits.0,
+        i_bits: bits.1,
+        o_bits: bits.2,
+        shift: shift_for(cin, bits.0, bits.1, bits.2, taps),
+        residual_of: None,
+    }
+}
+
+/// The ResNet-20 layer schedule — must mirror
+/// `python/compile/model.py::resnet20_layers` exactly.
+pub fn resnet20_layers(config: PrecisionConfig) -> Vec<Layer> {
+    let p = bits_of(config);
+    let mut layers = Vec::new();
+    layers.push(conv(LayerOp::Conv3x3, "stem", 32, 3, 16, 1, p.stem));
+
+    let specs: [(&str, usize, usize, usize, (usize, usize, usize)); 3] = [
+        ("stage1", 32, 16, 16, p.stage1),
+        ("stage2", 16, 16, 32, p.stage2),
+        ("stage3", 8, 32, 64, p.stage3),
+    ];
+    for (stage, h_out, cin_stage, ch, bits) in specs {
+        for blk in 0..3 {
+            let first = blk == 0 && stage != "stage1";
+            let h_in = if first { h_out * 2 } else { h_out };
+            let cin = if blk == 0 { cin_stage } else { ch };
+            let stride = if first { 2 } else { 1 };
+            layers.push(conv(
+                LayerOp::Conv3x3,
+                &format!("{stage}.b{blk}.conv0"),
+                h_in,
+                cin,
+                ch,
+                stride,
+                bits,
+            ));
+            layers.push(conv(
+                LayerOp::Conv3x3,
+                &format!("{stage}.b{blk}.conv1"),
+                h_out,
+                ch,
+                ch,
+                1,
+                bits,
+            ));
+            let shortcut = if first {
+                layers.push(conv(
+                    LayerOp::Conv1x1,
+                    &format!("{stage}.b{blk}.down"),
+                    h_in,
+                    cin,
+                    ch,
+                    2,
+                    p.down,
+                ));
+                format!("{stage}.b{blk}.down")
+            } else {
+                "input".to_string()
+            };
+            layers.push(Layer {
+                op: LayerOp::Add,
+                name: format!("{stage}.b{blk}.add"),
+                h: h_out,
+                cin: ch,
+                cout: ch,
+                stride: 1,
+                w_bits: 8,
+                i_bits: 8,
+                o_bits: bits.2,
+                shift: 1,
+                residual_of: Some(shortcut),
+            });
+        }
+    }
+    layers.push(Layer {
+        op: LayerOp::AvgPool,
+        name: "avgpool".into(),
+        h: 8,
+        cin: 64,
+        cout: 64,
+        stride: 1,
+        w_bits: 8,
+        i_bits: 8,
+        o_bits: 8,
+        shift: 6,
+        residual_of: None,
+    });
+    let (w, i, o) = p.fc;
+    layers.push(Layer {
+        op: LayerOp::Linear,
+        name: "fc".into(),
+        h: 0,
+        cin: 64,
+        cout: 10,
+        stride: 1,
+        w_bits: w,
+        i_bits: i,
+        o_bits: o,
+        shift: shift_for(64, w, i, o, 1),
+        residual_of: None,
+    });
+    layers
+}
+
+/// ResNet-18/ImageNet layer shapes, used for the Table II timing rows
+/// (HAWQ 4×4-bit per the paper). The 7×7/s2 stem is scheduled as an
+/// MAC-equivalent 3×3 job over a folded input (DORY-style im2row of the
+/// 49-tap kernel into 3×3 over 3·(49/9) ≈ 17 channels, rounded to the
+/// RBE's 32-channel group); no functional artifacts are generated for
+/// this network — it is timing/energy only.
+pub fn resnet18_layers() -> Vec<Layer> {
+    let b4 = (4usize, 4usize, 4usize);
+    let mut layers = Vec::new();
+    // stem: 7x7 s2, 3->64, 224->112 (folded; see doc comment)
+    layers.push(conv(LayerOp::Conv3x3, "stem7x7", 224, 17, 64, 2, b4));
+    // 4 stages x 2 basic blocks
+    let specs: [(&str, usize, usize, usize); 4] = [
+        ("stage1", 56, 64, 64),
+        ("stage2", 28, 64, 128),
+        ("stage3", 14, 128, 256),
+        ("stage4", 7, 256, 512),
+    ];
+    for (stage, h_out, cin_stage, ch) in specs {
+        for blk in 0..2 {
+            let first = blk == 0 && stage != "stage1";
+            let h_in = if first { h_out * 2 } else { h_out };
+            let cin = if blk == 0 { cin_stage } else { ch };
+            let stride = if first { 2 } else { 1 };
+            layers.push(conv(
+                LayerOp::Conv3x3,
+                &format!("{stage}.b{blk}.conv0"),
+                h_in,
+                cin,
+                ch,
+                stride,
+                b4,
+            ));
+            layers.push(conv(
+                LayerOp::Conv3x3,
+                &format!("{stage}.b{blk}.conv1"),
+                h_out,
+                ch,
+                ch,
+                1,
+                b4,
+            ));
+            if first {
+                layers.push(conv(
+                    LayerOp::Conv1x1,
+                    &format!("{stage}.b{blk}.down"),
+                    h_in,
+                    cin,
+                    ch,
+                    2,
+                    b4,
+                ));
+            }
+            layers.push(Layer {
+                op: LayerOp::Add,
+                name: format!("{stage}.b{blk}.add"),
+                h: h_out,
+                cin: ch,
+                cout: ch,
+                stride: 1,
+                w_bits: 8,
+                i_bits: 8,
+                o_bits: 4,
+                shift: 1,
+                residual_of: Some(if first {
+                    format!("{stage}.b{blk}.down")
+                } else {
+                    "input".into()
+                }),
+            });
+        }
+    }
+    layers.push(Layer {
+        op: LayerOp::AvgPool,
+        name: "avgpool".into(),
+        h: 7,
+        cin: 512,
+        cout: 512,
+        stride: 1,
+        w_bits: 8,
+        i_bits: 8,
+        o_bits: 8,
+        shift: 6,
+        residual_of: None,
+    });
+    layers.push(Layer {
+        op: LayerOp::Linear,
+        name: "fc".into(),
+        h: 0,
+        cin: 512,
+        cout: 1000,
+        stride: 1,
+        w_bits: 4,
+        i_bits: 4,
+        o_bits: 8,
+        shift: shift_for(512, 4, 4, 8, 1),
+        residual_of: None,
+    });
+    layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet20_structure() {
+        for cfg in [PrecisionConfig::Uniform8, PrecisionConfig::Mixed] {
+            let ls = resnet20_layers(cfg);
+            assert_eq!(
+                ls.iter().filter(|l| l.op == LayerOp::Conv3x3).count(),
+                19
+            );
+            assert_eq!(
+                ls.iter().filter(|l| l.op == LayerOp::Conv1x1).count(),
+                2
+            );
+            assert_eq!(ls.iter().filter(|l| l.op == LayerOp::Add).count(), 9);
+            assert_eq!(ls.last().unwrap().op, LayerOp::Linear);
+        }
+    }
+
+    #[test]
+    fn resnet20_macs_about_41m() {
+        let ls = resnet20_layers(PrecisionConfig::Uniform8);
+        let macs: u64 = ls.iter().map(|l| l.macs()).sum();
+        // CIFAR ResNet-20 is ~40.8 MMAC
+        assert!((39_000_000..43_000_000).contains(&macs), "{macs}");
+    }
+
+    #[test]
+    fn resnet18_macs_about_1_8g() {
+        let ls = resnet18_layers();
+        let macs: u64 = ls.iter().map(|l| l.macs()).sum();
+        assert!((1_600_000_000..2_100_000_000).contains(&macs), "{macs}");
+    }
+
+    #[test]
+    fn shapes_chain() {
+        let ls = resnet20_layers(PrecisionConfig::Mixed);
+        let (mut h, mut c) = (32usize, 3usize);
+        for l in &ls {
+            match l.op {
+                LayerOp::Conv3x3 => {
+                    if !l.name.ends_with(".down") {
+                        assert_eq!(l.cin, c, "{}", l.name);
+                        h = l.h_out();
+                        c = l.cout;
+                    }
+                }
+                LayerOp::Add => assert_eq!((l.h, l.cin), (h, c), "{}", l.name),
+                _ => {}
+            }
+        }
+        assert_eq!((h, c), (8, 64));
+    }
+
+    #[test]
+    fn mixed_uses_hawq_bit_palette() {
+        let ls = resnet20_layers(PrecisionConfig::Mixed);
+        for l in ls.iter().filter(|l| l.op.on_rbe()) {
+            assert!([2, 3, 6, 8].contains(&l.w_bits), "{}", l.name);
+            assert!([4, 8].contains(&l.i_bits), "{}", l.name);
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! The reproduction harness: one generator per table/figure of the
+//! paper's evaluation (DESIGN.md experiment index). Each function returns
+//! the rendered rows as a string; the CLI (`marsellus figure <id>`),
+//! the examples and the bench harness all call through here.
+
+mod ablations;
+mod dnn_figs;
+mod perf_figs;
+mod power_figs;
+mod tables;
+
+pub use ablations::{ablate_abb, ablate_banking, ablate_double_buffering,
+                    ablate_macload};
+pub use dnn_figs::{fig17, fig18};
+pub use perf_figs::{fig13, fig14, fig19, isa_table};
+pub use power_figs::{fig10, fig11, fig12, fig15, fig9};
+pub use tables::{fig7, fig8, tab1, tab2};
+
+use anyhow::Result;
+
+/// All known figure ids.
+pub const ALL: &[&str] = &[
+    "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
+    "fig15", "fig17", "fig18", "fig19", "tab1", "tab2", "isa",
+    "ablate-ml", "ablate-dbuf", "ablate-abb", "ablate-banks",
+];
+
+/// Dispatch by id. `fast` trims the ISS workload sizes (used by tests).
+pub fn generate(id: &str, fast: bool) -> Result<String> {
+    Ok(match id {
+        "fig7" => fig7(),
+        "fig8" => fig8(),
+        "fig9" => fig9(),
+        "fig10" => fig10(),
+        "fig11" => fig11(),
+        "fig12" => fig12(),
+        "fig13" => fig13(),
+        "fig14" => fig14(fast)?,
+        "fig15" => fig15(fast)?,
+        "fig17" => fig17()?,
+        "fig18" => fig18()?,
+        "fig19" => fig19(fast)?,
+        "tab1" => tab1(),
+        "tab2" => tab2(fast)?,
+        "isa" => isa_table(fast)?,
+        "ablate-ml" => ablate_macload(fast)?,
+        "ablate-dbuf" => ablate_double_buffering()?,
+        "ablate-abb" => ablate_abb()?,
+        "ablate-banks" => ablate_banking(fast)?,
+        other => anyhow::bail!(
+            "unknown figure {other:?}; known: {}",
+            ALL.join(", ")
+        ),
+    })
+}

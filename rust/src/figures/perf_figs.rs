@@ -1,0 +1,437 @@
+//! Performance figures driven by the ISS and the RBE timing model:
+//! Fig. 13 (RBE throughput sweep), Fig. 14 (task speedups), Fig. 19
+//! (energy/op summary) and the §III-C1 ISA comparison table.
+
+use anyhow::Result;
+
+use crate::cluster::ClusterConfig;
+use crate::isa::Prec;
+use crate::kernels::conv::ConvProblem;
+use crate::kernels::fft::FftProblem;
+use crate::kernels::matmul::{random_operands, MatmulKernel, MatmulProblem};
+use crate::kernels::vecops::run_tensor_add;
+use crate::metrics::{fj_per_op, render_table};
+use crate::power::{fmax_mhz, OperatingPoint, PowerModel, Workload, FBB_MAX_V};
+use crate::rbe::{RbeJob, RbeMode, RbeTiming};
+use crate::util::Rng;
+
+/// Measured software throughputs used by several figures/tables.
+pub struct SwPerf {
+    pub mmul8_ops_per_cycle: f64,
+    pub mmul_ml8_ops_per_cycle: f64,
+    pub mmul_ml4_ops_per_cycle: f64,
+    pub mmul_ml2_ops_per_cycle: f64,
+    pub fft_flops_per_cycle: f64,
+    pub fp16_flops_per_cycle: f64,
+    pub macload_utilization: f64,
+}
+
+/// Packed-FP16 dot-product microkernel on the ISS: the streaming
+/// `vfmac.h2` loop (two operand loads per FMA, post-increment walking)
+/// behind the paper's "Best SW (FP16)" row — a DSP dot-product, not a
+/// register-blocked GEMM, so it is load-slot-bound rather than FPU-bound.
+fn fp16_dotp_flops_per_cycle(iters: i32) -> Result<f64> {
+    use crate::cluster::{Cluster, ClusterConfig, TCDM_BASE, TCDM_SIZE};
+    use crate::isa::{AluOp, FOp, Instr, IsaLevel, ProgramBuilder};
+
+    let mut b = ProgramBuilder::new("fp16_dotp_inner", IsaLevel::Xpulp);
+    // per-core streams, staggered so cores touch different banks
+    b.emit(Instr::CoreId { rd: 5 });
+    b.emit(Instr::AluImm { op: AluOp::Sll, rd: 5, rs1: 5, imm: 2 });
+    b.emit(Instr::AluImm {
+        op: AluOp::Add,
+        rd: 6,
+        rs1: 5,
+        imm: TCDM_BASE as i32,
+    });
+    b.emit(Instr::AluImm {
+        op: AluOp::Add,
+        rd: 7,
+        rs1: 5,
+        imm: (TCDM_BASE + TCDM_SIZE / 2) as i32,
+    });
+    b.emit(Instr::Li { rd: 8, imm: iters });
+    let (ls, le) = (b.label(), b.label());
+    b.hw_loop(0, 8, ls, le);
+    b.bind(ls);
+    b.emit(Instr::Flw { fd: 1, base: 6, offset: 0, post_inc: 4 });
+    b.emit(Instr::Flw { fd: 2, base: 7, offset: 0, post_inc: 4 });
+    b.emit(Instr::FAlu {
+        op: FOp::Madd,
+        lanes: 2,
+        fd: 3,
+        fs1: 1,
+        fs2: 2,
+        fs3: 3,
+    });
+    b.bind(le);
+    let mut cl = Cluster::new(ClusterConfig::default());
+    cl.load_spmd(b.build()?);
+    let stats = cl.run()?;
+    Ok(stats.total.flops as f64 / stats.cycles as f64)
+}
+
+fn mm_run(kernel: MatmulKernel, m: usize, n: usize, k: usize) -> Result<f64> {
+    let p = MatmulProblem { m, n, k, kernel, cores: 16 };
+    let (a, b) = random_operands(m, n, k, kernel.prec(), 99);
+    let (_, stats) = p.run_with(ClusterConfig::default(), &a, &b)?;
+    Ok(p.ops() as f64 / stats.cycles as f64)
+}
+
+/// Run the software benchmark suite on the ISS (16-core cluster).
+pub fn measured_sw_perf(fast: bool) -> Result<SwPerf> {
+    let (m, n, k) = if fast { (64, 16, 64) } else { (64, 32, 128) };
+    let mmul8 = mm_run(MatmulKernel::Xpulp8, m, n, k)?;
+    let ml8 = mm_run(MatmulKernel::MacLoad { prec: Prec::B8 }, m, n, k)?;
+    let ml4 = mm_run(MatmulKernel::MacLoad { prec: Prec::B4 }, m, n, k)?;
+    let ml2 = mm_run(MatmulKernel::MacLoad { prec: Prec::B2 }, m, n, k)?;
+    let fft_n = if fast { 256 } else { 2048 };
+    let fft = FftProblem { n: fft_n, cores: 16 };
+    let mut rng = Rng::new(12);
+    let sig: Vec<(f32, f32)> = (0..fft_n)
+        .map(|_| (rng.f64() as f32 - 0.5, rng.f64() as f32 - 0.5))
+        .collect();
+    let (_, fstats) = fft.run_with(ClusterConfig::default(), &sig)?;
+    // utilization measured single-core, long K
+    let pu = MatmulProblem {
+        m: 16,
+        n: 8,
+        k: if fast { 128 } else { 512 },
+        kernel: MatmulKernel::MacLoad { prec: Prec::B8 },
+        cores: 1,
+    };
+    let (a, b) = random_operands(pu.m, pu.n, pu.k, Prec::B8, 5);
+    let (_, ustats) = pu.run_with(ClusterConfig::soc_controller(), &a, &b)?;
+    Ok(SwPerf {
+        mmul8_ops_per_cycle: mmul8,
+        mmul_ml8_ops_per_cycle: ml8,
+        mmul_ml4_ops_per_cycle: ml4,
+        mmul_ml2_ops_per_cycle: ml2,
+        fft_flops_per_cycle: fstats.total.flops as f64
+            / fstats.cycles as f64,
+        fp16_flops_per_cycle: fp16_dotp_flops_per_cycle(if fast {
+            256
+        } else {
+            2048
+        })?,
+        macload_utilization: ustats.dotp_utilization(),
+    })
+}
+
+/// One RBE operating point for tables (throughput + efficiency).
+pub struct RbePoint {
+    pub gops: f64,
+    pub tops_per_w: f64,
+}
+
+pub fn rbe_point(w: usize, i: usize, vdd: f64, _abb: bool) -> RbePoint {
+    let job = RbeJob {
+        mode: RbeMode::Conv3x3,
+        h_out: 3,
+        w_out: 3,
+        k_in: 64,
+        k_out: 64,
+        stride: 1,
+        w_bits: w,
+        i_bits: i,
+        o_bits: i.min(8),
+    };
+    let op = OperatingPoint::at_vdd(vdd);
+    let opc = RbeTiming::ops_per_cycle_total(&job);
+    let gops = opc * op.freq_mhz / 1.0e3;
+    let duty = (RbeTiming::binconv_duty(&job) * 100.0).round() as u8;
+    let p = PowerModel.total_mw(Workload::Rbe { duty_pct: duty }, &op);
+    RbePoint { gops, tops_per_w: gops / p }
+}
+
+/// Fig. 13: RBE LOAD-COMPUTE throughput sweep (K_in = K_out = 64, 3×3
+/// output), in W×I-bit ops/cycle and 1×1-bit Gops/s at 420 MHz.
+pub fn fig13() -> String {
+    let mut rows = Vec::new();
+    for mode in [RbeMode::Conv3x3, RbeMode::Conv1x1] {
+        for w in [2, 4, 8] {
+            for i in [2, 4, 8] {
+                let job = RbeJob {
+                    mode,
+                    h_out: 3,
+                    w_out: 3,
+                    k_in: 64,
+                    k_out: 64,
+                    stride: 1,
+                    w_bits: w,
+                    i_bits: i,
+                    o_bits: 4,
+                };
+                let opc = RbeTiming::ops_per_cycle_load_compute(&job);
+                let bopc = RbeTiming::binary_ops_per_cycle(&job);
+                rows.push(vec![
+                    format!("{mode:?}"),
+                    format!("{w}x{i}"),
+                    format!("{opc:.0}"),
+                    format!("{:.0}", opc * 420.0 / 1.0e3),
+                    format!("{:.1}", bopc * 420.0 / 1.0e6),
+                ]);
+            }
+        }
+    }
+    format!(
+        "Fig. 13 — RBE main LOAD-COMPUTE loop throughput @0.8 V/420 MHz\n\
+         (paper anchors: peak 1610 ops/cycle at 3x3 W2; 571 Gop/s at W2/I4;\n \
+         ~7.1 T 1b-ops/s at W8/I4; I=8 halves throughput; 1x1 LOAD-bound)\n{}",
+        render_table(
+            &["mode", "WxI", "ops/cycle", "Gop/s", "T 1b-ops/s"],
+            &rows
+        )
+    )
+}
+
+/// Fig. 14: task speedups vs the single SOC controller core.
+pub fn fig14(fast: bool) -> Result<String> {
+    let mut rows = Vec::new();
+
+    // ---- FFT ----
+    let n = if fast { 256 } else { 2048 };
+    let mut rng = Rng::new(3);
+    let sig: Vec<(f32, f32)> = (0..n)
+        .map(|_| (rng.f64() as f32 - 0.5, rng.f64() as f32 - 0.5))
+        .collect();
+    let run_fft = |cores: usize| -> Result<u64> {
+        let p = FftProblem { n, cores };
+        let mut cfg = ClusterConfig::default();
+        cfg.cores = cores;
+        if cores == 1 {
+            cfg = ClusterConfig::soc_controller();
+        }
+        Ok(p.run_with(cfg, &sig)?.1.cycles)
+    };
+    let fft_soc = run_fft(1)?;
+    let fft_1 = fft_soc; // cluster core == SOC core for pure FP32 DSP
+    let fft_16 = run_fft(16)?;
+    rows.push(vec![
+        format!("FFT-{n} (FP32)"),
+        "1.0".into(),
+        format!("{:.1}", fft_soc as f64 / fft_1 as f64),
+        format!("{:.1}", fft_soc as f64 / fft_16 as f64),
+        "-".into(),
+        "-".into(),
+    ]);
+
+    // ---- Conv 3x3 and 1x1 (+BN), 9x9x64 output, 64 input channels ----
+    for ksize in [3usize, 1] {
+        let (h, w_sp) = (9usize, 9usize);
+        let base = ConvProblem {
+            h,
+            w: w_sp,
+            k_in: 64,
+            k_out: 64,
+            ksize,
+            cores: 1,
+            bn_shift: 10,
+        };
+        let mut rng = Rng::new(7);
+        let taps = ksize * ksize;
+        let hp = h + if ksize == 3 { 2 } else { 0 };
+        let x: Vec<i32> = (0..hp * hp * 64)
+            .map(|_| rng.range_i32(-128, 128))
+            .collect();
+        let wt: Vec<i32> = (0..64 * taps * 64)
+            .map(|_| rng.range_i32(-128, 128))
+            .collect();
+        let sc: Vec<i32> = (0..64).map(|_| rng.range_i32(1, 8)).collect();
+        let bi: Vec<i32> = (0..64).map(|_| rng.range_i32(-50, 50)).collect();
+        let run_conv = |cores: usize| -> Result<u64> {
+            let p = ConvProblem { cores, ..base };
+            let cfg = if cores == 1 {
+                ClusterConfig::soc_controller()
+            } else {
+                ClusterConfig::default()
+            };
+            Ok(p.run_with(cfg, &x, &wt, &sc, &bi)?.1.cycles)
+        };
+        let soc = run_conv(1)?;
+        let c16 = run_conv(16)?;
+        // RBE timing at 8-bit and 4-bit
+        let rbe_cycles = |wb: usize, ib: usize| {
+            let job = RbeJob {
+                mode: if ksize == 3 {
+                    RbeMode::Conv3x3
+                } else {
+                    RbeMode::Conv1x1
+                },
+                h_out: h,
+                w_out: w_sp,
+                k_in: 64,
+                k_out: 64,
+                stride: 1,
+                w_bits: wb,
+                i_bits: ib,
+                o_bits: 8,
+            };
+            RbeTiming::cycles(&job)
+        };
+        rows.push(vec![
+            format!("Conv{ksize}x{ksize}+BN 9x9x64"),
+            "1.0".into(),
+            "1.0".into(),
+            format!("{:.1}", soc as f64 / c16 as f64),
+            format!("{:.0}", soc as f64 / rbe_cycles(8, 8) as f64),
+            format!("{:.0}", soc as f64 / rbe_cycles(4, 4) as f64),
+        ]);
+    }
+
+    // ---- tensor add 9x9x64 ----
+    let elems = 9 * 9 * 64 / 16 * 16; // align
+    let mut rng = Rng::new(11);
+    let a: Vec<i32> = (0..elems).map(|_| rng.range_i32(-64, 64)).collect();
+    let b: Vec<i32> = (0..elems).map(|_| rng.range_i32(-64, 64)).collect();
+    let add_soc = run_tensor_add(ClusterConfig::soc_controller(), &a, &b)?
+        .1
+        .cycles;
+    let add_16 = run_tensor_add(ClusterConfig::default(), &a, &b)?.1.cycles;
+    rows.push(vec![
+        "Add 9x9x64 (8b)".into(),
+        "1.0".into(),
+        "1.0".into(),
+        format!("{:.1}", add_soc as f64 / add_16 as f64),
+        "-".into(),
+        "-".into(),
+    ]);
+
+    Ok(format!(
+        "Fig. 14 — speedup vs execution on the MARSELLUS SOC core\n{}",
+        render_table(
+            &["task", "SOC", "1 cluster core", "16 cores", "RBE 8b",
+              "RBE 4b"],
+            &rows
+        )
+    ))
+}
+
+/// Fig. 19: energy-per-operation summary across all techniques.
+pub fn fig19(fast: bool) -> Result<String> {
+    let sw = measured_sw_perf(fast)?;
+    let m = PowerModel;
+    let mut rows = Vec::new();
+    let points: [(&str, f64, Workload, f64); 8] = [
+        ("SW MMUL 8b (Xpulp)", sw.mmul8_ops_per_cycle,
+         Workload::MatmulXpulp8, 1.0),
+        ("SW M&L 8b", sw.mmul_ml8_ops_per_cycle,
+         Workload::MatmulMacLoad, 1.0),
+        ("SW M&L 4b", sw.mmul_ml4_ops_per_cycle,
+         Workload::MatmulMacLoad, 1.0),
+        ("SW M&L 2b", sw.mmul_ml2_ops_per_cycle,
+         Workload::MatmulMacLoad, 1.0),
+        ("RBE 8x8b", RbeTiming::ops_per_cycle_total(&fig13_job(8, 8)),
+         Workload::Rbe { duty_pct: 100 }, 1.0),
+        ("RBE 4x4b", RbeTiming::ops_per_cycle_total(&fig13_job(4, 4)),
+         Workload::Rbe { duty_pct: 100 }, 1.0),
+        ("RBE 2x4b", RbeTiming::ops_per_cycle_total(&fig13_job(2, 4)),
+         Workload::Rbe { duty_pct: 100 }, 1.0),
+        ("RBE 2x2b", RbeTiming::ops_per_cycle_total(&fig13_job(2, 2)),
+         Workload::Rbe { duty_pct: 50 }, 1.0),
+    ];
+    for (name, opc, w, _) in points {
+        let mut cells = vec![name.to_string()];
+        for (vdd, fbb) in [(0.8, 0.0), (0.65, FBB_MAX_V), (0.5, 0.0)] {
+            let freq = if fbb > 0.0 { 400.0 } else { fmax_mhz(vdd, 0.0) };
+            let op = OperatingPoint { vdd, freq_mhz: freq, fbb_v: fbb };
+            let gops = opc * op.freq_mhz / 1.0e3;
+            let p = m.total_mw(w, &op);
+            cells.push(format!("{:.0}", fj_per_op(p, gops)));
+        }
+        rows.push(cells);
+    }
+    Ok(format!(
+        "Fig. 19 — energy per operation (fJ/op) across techniques and \
+         operating points\n{}",
+        render_table(
+            &["technique", "0.8V/fmax", "0.65V+ABB@400MHz", "0.5V/fmax"],
+            &rows
+        )
+    ))
+}
+
+fn fig13_job(w: usize, i: usize) -> RbeJob {
+    RbeJob {
+        mode: RbeMode::Conv3x3,
+        h_out: 3,
+        w_out: 3,
+        k_in: 64,
+        k_out: 64,
+        stride: 1,
+        w_bits: w,
+        i_bits: i,
+        o_bits: 4,
+    }
+}
+
+/// §III-C1 table: instruction reductions, MAC&LOAD gain, utilization, FFT.
+pub fn isa_table(fast: bool) -> Result<String> {
+    let sw = measured_sw_perf(fast)?;
+    let count = |kernel: MatmulKernel| -> Result<f64> {
+        let (m, n, k) = (8, 4, 64);
+        let p = MatmulProblem { m, n, k, kernel, cores: 1 };
+        let (a, b) = random_operands(m, n, k, kernel.prec(), 5);
+        let (_, stats) = p.run_with(ClusterConfig::soc_controller(), &a, &b)?;
+        Ok(stats.total.instrs as f64)
+    };
+    let r4 = count(MatmulKernel::UnpackBaseline { prec: Prec::B4 })?
+        / count(MatmulKernel::Nn { prec: Prec::B4 })?;
+    let r2 = count(MatmulKernel::UnpackBaseline { prec: Prec::B2 })?
+        / count(MatmulKernel::Nn { prec: Prec::B2 })?;
+    let rows = vec![
+        vec!["4-bit instruction reduction vs Xpulp".into(),
+             "6x".into(), format!("{r4:.1}x")],
+        vec!["2-bit instruction reduction vs Xpulp".into(),
+             "9x".into(), format!("{r2:.1}x")],
+        vec!["MAC&LOAD speedup over baseline MMUL".into(), "+67%".into(),
+             format!("+{:.0}%",
+                     (sw.mmul_ml8_ops_per_cycle / sw.mmul8_ops_per_cycle
+                      - 1.0) * 100.0)],
+        vec!["DOTP unit utilization (M&L)".into(), "94%".into(),
+             format!("{:.0}%", sw.macload_utilization * 100.0)],
+        vec!["FFT-2048 throughput".into(), "4.69 FLOp/cycle".into(),
+             format!("{:.2} FLOp/cycle", sw.fft_flops_per_cycle)],
+        vec!["FFT peak perf @0.8V/420MHz".into(), "1.97 GFLOPS".into(),
+             format!("{:.2} GFLOPS",
+                     sw.fft_flops_per_cycle * 420.0 / 1.0e3)],
+    ];
+    Ok(format!(
+        "§III-C1 — ISA extension results (measured on the ISS)\n{}",
+        render_table(&["metric", "paper", "measured"], &rows)
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig13_renders_with_anchor_shape() {
+        let t = fig13();
+        assert!(t.contains("Conv3x3"));
+        assert!(t.contains("Conv1x1"));
+        // 18 rows: 2 modes x 3 W x 3 I
+        assert_eq!(t.lines().count(), 5 + 18);
+    }
+
+    #[test]
+    fn fig14_fast_shows_speedups() {
+        let t = fig14(true).unwrap();
+        assert!(t.contains("FFT"));
+        assert!(t.contains("Conv3x3"));
+        assert!(t.contains("Add"));
+    }
+
+    #[test]
+    fn fig19_fast() {
+        let t = fig19(true).unwrap();
+        assert!(t.contains("RBE 2x2b"));
+    }
+
+    #[test]
+    fn isa_table_fast() {
+        let t = isa_table(true).unwrap();
+        assert!(t.contains("DOTP"));
+    }
+}

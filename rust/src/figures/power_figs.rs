@@ -1,0 +1,252 @@
+//! Power/ABB figures: Fig. 9 (V_DD sweep), Fig. 10 (ABB undervolting),
+//! Fig. 11 (ABB trace), Fig. 12 (transition detail), Fig. 15
+//! (efficiency vs performance).
+
+use anyhow::Result;
+
+use crate::abb::{AbbSim, Phase};
+use crate::metrics::render_table;
+use crate::power::{OperatingPoint, PowerModel, Workload, FBB_MAX_V};
+use crate::rbe::{RbeJob, RbeMode, RbeTiming};
+
+use super::perf_figs::measured_sw_perf;
+
+/// Fig. 9: frequency and power vs V_DD (no ABB), INT8 MAC&LOAD matmul.
+pub fn fig9() -> String {
+    let m = PowerModel;
+    let mut rows = Vec::new();
+    let mut v = 0.50;
+    while v <= 0.801 {
+        let op = OperatingPoint::at_vdd(v);
+        let dynamic = m.dynamic_mw(Workload::MatmulMacLoad, &op);
+        let leak = m.leakage_mw(&op);
+        rows.push(vec![
+            format!("{v:.2}"),
+            format!("{:.0}", op.freq_mhz),
+            format!("{dynamic:.1}"),
+            format!("{leak:.2}"),
+            format!("{:.1}", dynamic + leak),
+        ]);
+        v += 0.05;
+    }
+    format!(
+        "Fig. 9 — f_max and power vs V_DD, no ABB (paper anchors: 420 MHz \
+         & 123 mW at 0.8 V; 100 MHz at 0.5 V; dyn -10.7x, leak -3.5x)\n{}",
+        render_table(
+            &["V_DD", "f_max MHz", "P_dyn mW", "P_leak mW", "P_tot mW"],
+            &rows
+        )
+    )
+}
+
+/// Fig. 10: power at a fixed 400 MHz vs V_DD, with and without ABB. Only
+/// timing-clean points are listed (as the paper plots only working ones).
+pub fn fig10() -> String {
+    let m = PowerModel;
+    let w = Workload::MatmulMacLoad;
+    let mut rows = Vec::new();
+    let mut v = 0.80;
+    while v >= 0.599 {
+        let no_abb = OperatingPoint { vdd: v, freq_mhz: 400.0, fbb_v: 0.0 };
+        let with = OperatingPoint {
+            vdd: v,
+            freq_mhz: 400.0,
+            fbb_v: FBB_MAX_V,
+        };
+        let p_no = if no_abb.is_timing_clean() {
+            format!("{:.1}", m.total_mw(w, &no_abb))
+        } else {
+            "fails".into()
+        };
+        let p_with = if with.is_timing_clean() {
+            format!("{:.1}", m.total_mw(w, &with))
+        } else {
+            "fails".into()
+        };
+        rows.push(vec![format!("{v:.2}"), p_no, p_with]);
+        v -= 0.03;
+    }
+    let p_nom = m.total_mw(w, &OperatingPoint {
+        vdd: 0.8, freq_mhz: 400.0, fbb_v: 0.0,
+    });
+    let p_abb = m.total_mw(w, &OperatingPoint {
+        vdd: 0.65, freq_mhz: 400.0, fbb_v: FBB_MAX_V,
+    });
+    format!(
+        "Fig. 10 — power at fixed 400 MHz (paper: min 0.74 V w/o ABB; \
+         0.65 V w/ ABB at -30% vs nominal)\n{}\nmeasured saving at 0.65 V \
+         + ABB vs 0.8 V nominal: {:.0}%",
+        render_table(&["V_DD", "P no-ABB mW", "P ABB mW"], &rows),
+        (1.0 - p_abb / p_nom) * 100.0
+    )
+}
+
+/// Fig. 11: ABB operation over the 1 ms three-phase benchmark, 470 MHz
+/// overclock at 0.8 V.
+pub fn fig11() -> String {
+    let mut sim = AbbSim::new(0.8, 470.0, true);
+    let res = sim.run(&Phase::fig11_benchmark(), 25.0);
+    let rows: Vec<Vec<String>> = res
+        .trace
+        .iter()
+        .map(|p| {
+            vec![
+                format!("{:.0}", p.t_us),
+                p.phase.into(),
+                format!("{:.3}", p.fbb_v),
+                format!("{}", p.pre_errors),
+                format!("{}", p.real_errors),
+                format!("{:.1}", p.power_mw),
+            ]
+        })
+        .collect();
+    format!(
+        "Fig. 11 — ABB trace, 470 MHz @ 0.8 V (paper: 2 boosts during \
+         high-intensity phases, errorless)\n{}\nboost events: {}  \
+         pre-errors: {}  real errors: {}",
+        render_table(
+            &["t us", "phase", "V_FBB", "pre-err", "real-err", "P mW"],
+            &rows
+        ),
+        res.boost_events,
+        res.total_pre_errors,
+        res.total_real_errors
+    )
+}
+
+/// Fig. 12: detail of one ABB transition at the compute-phase onset.
+pub fn fig12() -> String {
+    let mut sim = AbbSim::new(0.8, 470.0, true);
+    let res = sim.run(&Phase::fig11_benchmark(), 0.15);
+    // zoom on the RISC-V compute phase onset
+    let compute: Vec<_> = res
+        .trace
+        .iter()
+        .filter(|p| p.phase == "RISC-V compute")
+        .take(40)
+        .collect();
+    let start_fbb = compute.first().map(|p| p.fbb_v).unwrap_or(0.0);
+    let peak = compute.iter().map(|p| p.fbb_v).fold(0.0f64, f64::max);
+    let t0 = compute
+        .iter()
+        .find(|p| p.fbb_v > start_fbb + 1e-6)
+        .map(|p| p.t_us)
+        .unwrap_or(0.0);
+    let t1 = compute
+        .iter()
+        .find(|p| p.fbb_v >= peak - 1e-9)
+        .map(|p| p.t_us)
+        .unwrap_or(t0);
+    let cycles = (t1 - t0) * 470.0;
+    let rows: Vec<Vec<String>> = compute
+        .iter()
+        .map(|p| {
+            vec![
+                format!("{:.2}", p.t_us),
+                format!("{:.3}", p.fbb_v),
+                format!("{}", p.pre_errors),
+            ]
+        })
+        .collect();
+    format!(
+        "Fig. 12 — ABB transition detail (paper: ~0.66 us / ~310 cycles \
+         at 470 MHz)\n{}\nmeasured transition: {:.2} us ≈ {:.0} cycles",
+        render_table(&["t us", "V_FBB", "pre-err"], &rows),
+        t1 - t0,
+        cycles
+    )
+}
+
+/// Fig. 15: energy efficiency vs performance across operating points for
+/// MMUL, MMUL M&L and RBE 3×3 kernels.
+pub fn fig15(fast: bool) -> Result<String> {
+    let sw = measured_sw_perf(fast)?;
+    let m = PowerModel;
+    let mut rows = Vec::new();
+    let vdds = [0.5, 0.575, 0.65, 0.74, 0.8];
+    let mut push = |name: &str, opc: f64, w: Workload| {
+        for &vdd in &vdds {
+            let op = OperatingPoint::at_vdd(vdd);
+            let gops = opc * op.freq_mhz / 1.0e3;
+            let p = m.total_mw(w, &op);
+            rows.push(vec![
+                name.to_string(),
+                format!("{vdd:.2}"),
+                format!("{:.0}", op.freq_mhz),
+                format!("{gops:.1}"),
+                format!("{:.0}", gops / (p * 1e-3)),
+            ]);
+        }
+    };
+    push("MMUL 8b", sw.mmul8_ops_per_cycle, Workload::MatmulXpulp8);
+    push("MMUL M&L 8b", sw.mmul_ml8_ops_per_cycle, Workload::MatmulMacLoad);
+    push("MMUL M&L 4b", sw.mmul_ml4_ops_per_cycle, Workload::MatmulMacLoad);
+    push("MMUL M&L 2b", sw.mmul_ml2_ops_per_cycle, Workload::MatmulMacLoad);
+    for (w_bits, i_bits, duty) in [(8, 8, 100u8), (4, 4, 100), (2, 2, 50)] {
+        let job = RbeJob {
+            mode: RbeMode::Conv3x3,
+            h_out: 3,
+            w_out: 3,
+            k_in: 64,
+            k_out: 64,
+            stride: 1,
+            w_bits,
+            i_bits,
+            o_bits: i_bits,
+        };
+        let opc = RbeTiming::ops_per_cycle_total(&job);
+        push(
+            &format!("RBE 3x3 {w_bits}x{i_bits}b"),
+            opc,
+            Workload::Rbe { duty_pct: duty },
+        );
+    }
+    Ok(format!(
+        "Fig. 15 — efficiency vs performance (paper anchors: MMUL 25.45 \
+         Gop/s @ 250 Gop/s/W nominal; M&L +67%/+51%; RBE 8x8 91 Gop/s @ \
+         740 Gop/s/W; RBE 2x2 569 Gop/s @ 5.37 Top/s/W; 12.36 Top/s/W @ \
+         0.5 V)\n{}",
+        render_table(
+            &["kernel", "V_DD", "MHz", "Gop/s", "Gop/s/W"],
+            &rows
+        )
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_shape() {
+        let t = fig9();
+        assert!(t.contains("0.50"));
+        assert!(t.contains("0.80"));
+        // frequency at the endpoints
+        assert!(t.contains("100"));
+        assert!(t.contains("420"));
+    }
+
+    #[test]
+    fn fig10_has_failure_region() {
+        let t = fig10();
+        assert!(t.contains("fails"), "{t}");
+        assert!(t.contains("measured saving"));
+    }
+
+    #[test]
+    fn fig11_12_traces() {
+        let t11 = fig11();
+        assert!(t11.contains("boost events: 2"), "{t11}");
+        assert!(t11.contains("real errors: 0"));
+        let t12 = fig12();
+        assert!(t12.contains("measured transition"));
+    }
+
+    #[test]
+    fn fig15_fast() {
+        let t = fig15(true).unwrap();
+        assert!(t.contains("RBE 3x3 2x2b"));
+        assert!(t.contains("MMUL M&L 2b"));
+    }
+}

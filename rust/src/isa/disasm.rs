@@ -1,0 +1,208 @@
+//! Assembly-style Display for instructions (debugging, traces, tests).
+
+use std::fmt;
+
+use super::instr::{AluOp, Cond, FOp, Instr, Prec, Sign, VAluOp};
+
+impl fmt::Display for Prec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Xpulp suffixes: .h half, .b byte, .n nibble, .c crumb
+        let s = match self {
+            Prec::B16 => "h",
+            Prec::B8 => "b",
+            Prec::B4 => "n",
+            Prec::B2 => "c",
+        };
+        write!(f, "{s}")
+    }
+}
+
+impl fmt::Display for Sign {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Sign::SS => "s",
+            Sign::UU => "u",
+            Sign::US => "us",
+            Sign::SU => "su",
+        };
+        write!(f, "{s}")
+    }
+}
+
+fn alu_name(op: AluOp) -> &'static str {
+    match op {
+        AluOp::Add => "add",
+        AluOp::Sub => "sub",
+        AluOp::Sll => "sll",
+        AluOp::Srl => "srl",
+        AluOp::Sra => "sra",
+        AluOp::And => "and",
+        AluOp::Or => "or",
+        AluOp::Xor => "xor",
+        AluOp::Slt => "slt",
+        AluOp::Sltu => "sltu",
+        AluOp::Mul => "mul",
+        AluOp::Min => "p.min",
+        AluOp::Max => "p.max",
+    }
+}
+
+fn valu_name(op: VAluOp) -> &'static str {
+    match op {
+        VAluOp::Add => "add",
+        VAluOp::Sub => "sub",
+        VAluOp::Max => "max",
+        VAluOp::Min => "min",
+        VAluOp::Sra => "sra",
+        VAluOp::Shuffle => "shuffle",
+    }
+}
+
+impl fmt::Display for Instr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Instr::Alu { op, rd, rs1, rs2 } => {
+                write!(f, "{} x{rd}, x{rs1}, x{rs2}", alu_name(op))
+            }
+            Instr::AluImm { op, rd, rs1, imm } => {
+                write!(f, "{}i x{rd}, x{rs1}, {imm}", alu_name(op))
+            }
+            Instr::Li { rd, imm } => write!(f, "li x{rd}, {imm}"),
+            Instr::Mac { rd, rs1, rs2 } => {
+                write!(f, "p.mac x{rd}, x{rs1}, x{rs2}")
+            }
+            Instr::VAlu { op, prec, rd, rs1, rs2 } => {
+                write!(f, "pv.{}.{prec} x{rd}, x{rs1}, x{rs2}", valu_name(op))
+            }
+            Instr::Dotp { prec, sign, rd, rs1, rs2 } => {
+                write!(f, "pv.dotp{sign}.{prec} x{rd}, x{rs1}, x{rs2}")
+            }
+            Instr::Sdotp { prec, sign, rd, rs1, rs2 } => {
+                write!(f, "pv.sdotp{sign}.{prec} x{rd}, x{rs1}, x{rs2}")
+            }
+            Instr::MlSdotp { prec, sign, rd, na, nb, refresh } => {
+                match refresh {
+                    Some((nn, ptr)) => write!(
+                        f,
+                        "pv.mlsdotp{sign}.{prec} x{rd}, nn{na}, nn{nb} ; nn{nn}=[x{ptr}!]"
+                    ),
+                    None => write!(
+                        f,
+                        "pv.mlsdotp{sign}.{prec} x{rd}, nn{na}, nn{nb}"
+                    ),
+                }
+            }
+            Instr::NnLoad { nn_rd, ptr, post_inc } => {
+                write!(f, "p.nnlw nn{nn_rd}, {post_inc}(x{ptr}!)")
+            }
+            Instr::Lw { rd, base, offset, post_inc } => {
+                if post_inc != 0 {
+                    write!(f, "p.lw x{rd}, {post_inc}(x{base}!)")
+                } else {
+                    write!(f, "lw x{rd}, {offset}(x{base})")
+                }
+            }
+            Instr::Sw { rs, base, offset, post_inc } => {
+                if post_inc != 0 {
+                    write!(f, "p.sw x{rs}, {post_inc}(x{base}!)")
+                } else {
+                    write!(f, "sw x{rs}, {offset}(x{base})")
+                }
+            }
+            Instr::Flw { fd, base, offset, post_inc } => {
+                if post_inc != 0 {
+                    write!(f, "p.flw f{fd}, {post_inc}(x{base}!)")
+                } else {
+                    write!(f, "flw f{fd}, {offset}(x{base})")
+                }
+            }
+            Instr::Fsw { fs, base, offset, post_inc } => {
+                if post_inc != 0 {
+                    write!(f, "p.fsw f{fs}, {post_inc}(x{base}!)")
+                } else {
+                    write!(f, "fsw f{fs}, {offset}(x{base})")
+                }
+            }
+            Instr::FAlu { op, lanes, fd, fs1, fs2, fs3 } => {
+                let n = match op {
+                    FOp::Add => "fadd",
+                    FOp::Sub => "fsub",
+                    FOp::Mul => "fmul",
+                    FOp::Madd => "fmadd",
+                    FOp::Nmsub => "fnmsub",
+                };
+                let sfx = if lanes == 2 { ".h2" } else { ".s" };
+                if matches!(op, FOp::Madd | FOp::Nmsub) {
+                    write!(f, "{n}{sfx} f{fd}, f{fs1}, f{fs2}, f{fs3}")
+                } else {
+                    write!(f, "{n}{sfx} f{fd}, f{fs1}, f{fs2}")
+                }
+            }
+            Instr::FMvToF { fd, rs } => write!(f, "fmv.w.x f{fd}, x{rs}"),
+            Instr::FMvToX { rd, fs } => write!(f, "fmv.x.w x{rd}, f{fs}"),
+            Instr::Branch { cond, rs1, rs2, target } => {
+                let c = match cond {
+                    Cond::Eq => "beq",
+                    Cond::Ne => "bne",
+                    Cond::Lt => "blt",
+                    Cond::Ge => "bge",
+                    Cond::Ltu => "bltu",
+                    Cond::Geu => "bgeu",
+                };
+                write!(f, "{c} x{rs1}, x{rs2}, @{target}")
+            }
+            Instr::Jump { target } => write!(f, "j @{target}"),
+            Instr::HwLoop { idx, count, body_start, body_end } => write!(
+                f,
+                "lp.setup l{idx}, x{count}, @{body_start}..@{body_end}"
+            ),
+            Instr::Barrier => write!(f, "ev.barrier"),
+            Instr::CoreId { rd } => write!(f, "csrr x{rd}, mhartid"),
+            Instr::Nop => write!(f, "nop"),
+            Instr::Halt => write!(f, "halt"),
+        }
+    }
+}
+
+/// Disassemble a whole program, one instruction per line with indices.
+pub fn disassemble(instrs: &[Instr]) -> String {
+    instrs
+        .iter()
+        .enumerate()
+        .map(|(i, ins)| format!("{i:5}: {ins}"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macload_formats_with_refresh() {
+        let i = Instr::MlSdotp {
+            prec: Prec::B4,
+            sign: Sign::US,
+            rd: 10,
+            na: 0,
+            nb: 4,
+            refresh: Some((2, 11)),
+        };
+        assert_eq!(
+            i.to_string(),
+            "pv.mlsdotpus.n x10, nn0, nn4 ; nn2=[x11!]"
+        );
+    }
+
+    #[test]
+    fn crumb_suffix() {
+        let i = Instr::Sdotp {
+            prec: Prec::B2,
+            sign: Sign::SS,
+            rd: 3,
+            rs1: 4,
+            rs2: 5,
+        };
+        assert_eq!(i.to_string(), "pv.sdotps.c x3, x4, x5");
+    }
+}

@@ -1,0 +1,230 @@
+//! Instruction definitions.
+
+use super::{FReg, NnReg, Reg, Target};
+
+/// Packed-SIMD element precision. `B16`/`B8` come from Xpulp; the *nibble*
+/// (`B4`) and *crumb* (`B2`) formats are the XpulpNN addition (paper
+/// §II-A1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Prec {
+    B16,
+    B8,
+    B4,
+    B2,
+}
+
+impl Prec {
+    /// SIMD lanes in a 32-bit register.
+    pub const fn lanes(self) -> u32 {
+        match self {
+            Prec::B16 => 2,
+            Prec::B8 => 4,
+            Prec::B4 => 8,
+            Prec::B2 => 16,
+        }
+    }
+
+    /// Element width in bits.
+    pub const fn bits(self) -> u32 {
+        32 / self.lanes()
+    }
+
+    /// MAC operations performed by one `sdotp` of this precision.
+    pub const fn macs_per_dotp(self) -> u64 {
+        self.lanes() as u64
+    }
+}
+
+/// Operand signedness of a dot-product (paper §II-A1: ss/uu/us/su forms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sign {
+    SS,
+    UU,
+    US,
+    SU,
+}
+
+/// Scalar ALU operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Srl,
+    Sra,
+    And,
+    Or,
+    Xor,
+    Slt,
+    Sltu,
+    Mul,
+    Min,
+    Max,
+}
+
+/// Packed-SIMD vector ALU operation (Xpulp `pv.*`, extended by XpulpNN to
+/// nibble/crumb granularity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VAluOp {
+    Add,
+    Sub,
+    Max,
+    Min,
+    /// Per-lane arithmetic right shift by a lane of rs2.
+    Sra,
+    /// Lane shuffle: lane i of the result is lane (rs2.lane i) of rs1.
+    Shuffle,
+}
+
+/// Branch condition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cond {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+    Ltu,
+    Geu,
+}
+
+/// Floating-point operation (shared-FPU; `lanes == 2` models the packed
+/// FP16/BF16 SIMD formats of the cluster FPUs, counting 2 flops/lane-op).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FOp {
+    Add,
+    Sub,
+    Mul,
+    /// fd = fs1 * fs2 + fs3
+    Madd,
+    /// fd = -(fs1 * fs2) + fs3
+    Nmsub,
+}
+
+impl FOp {
+    /// Flops per lane (FMA counts 2).
+    pub const fn flops(self) -> u64 {
+        match self {
+            FOp::Madd | FOp::Nmsub => 2,
+            _ => 1,
+        }
+    }
+}
+
+/// One instruction at the semantic level. Branch/loop targets are resolved
+/// instruction indices (the [`ProgramBuilder`](super::ProgramBuilder)
+/// resolves labels at build time).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Instr {
+    // ---- scalar integer ----
+    Alu { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg },
+    AluImm { op: AluOp, rd: Reg, rs1: Reg, imm: i32 },
+    /// Load immediate (lui+addi pair on hardware; one slot here, two are
+    /// accounted by the cycle model when |imm| needs the upper bits).
+    Li { rd: Reg, imm: i32 },
+    /// 32-bit fused MAC: rd += rs1 * rs2 (Xpulp `p.mac`).
+    Mac { rd: Reg, rs1: Reg, rs2: Reg },
+
+    // ---- packed SIMD ----
+    VAlu { op: VAluOp, prec: Prec, rd: Reg, rs1: Reg, rs2: Reg },
+    /// rd = dot(rs1, rs2) (Xpulp/XpulpNN `pv.dotp`).
+    Dotp { prec: Prec, sign: Sign, rd: Reg, rs1: Reg, rs2: Reg },
+    /// rd += dot(rs1, rs2) (`pv.sdotp` — the MAC-equivalent form).
+    Sdotp { prec: Prec, sign: Sign, rd: Reg, rs1: Reg, rs2: Reg },
+
+    // ---- XpulpNN MAC&LOAD (paper §II-A2, Fig. 2) ----
+    /// rd += dot(nn[na], nn[nb]); if `refresh = Some((nn, ptr))`, the LSU
+    /// simultaneously loads mem[ptr] into NN-RF entry `nn` and the ALU
+    /// post-increments `ptr` by 4 — a single-cycle fused operation because
+    /// the DOTP datapath and the LSU do not conflict.
+    MlSdotp {
+        prec: Prec,
+        sign: Sign,
+        rd: Reg,
+        na: NnReg,
+        nb: NnReg,
+        refresh: Option<(NnReg, Reg)>,
+    },
+    /// Load a word into the NN-RF (NN-RF initialization, outside the inner
+    /// loop): nn[nn_rd] = mem[ptr]; ptr += post_inc.
+    NnLoad { nn_rd: NnReg, ptr: Reg, post_inc: i32 },
+
+    // ---- memory (Xpulp post-increment forms) ----
+    /// rd = mem[rs1 + offset]; if post_inc != 0: rs1 += post_inc
+    /// (offset must be 0 in the post-increment form, as on hardware).
+    Lw { rd: Reg, base: Reg, offset: i32, post_inc: i32 },
+    Sw { rs: Reg, base: Reg, offset: i32, post_inc: i32 },
+
+    // ---- floating point (shared FPU pool) ----
+    Flw { fd: FReg, base: Reg, offset: i32, post_inc: i32 },
+    Fsw { fs: FReg, base: Reg, offset: i32, post_inc: i32 },
+    FAlu { op: FOp, lanes: u8, fd: FReg, fs1: FReg, fs2: FReg, fs3: FReg },
+    /// Move between int and fp register files.
+    FMvToF { fd: FReg, rs: Reg },
+    FMvToX { rd: Reg, fs: FReg },
+
+    // ---- control ----
+    Branch { cond: Cond, rs1: Reg, rs2: Reg, target: Target },
+    Jump { target: Target },
+    /// Xpulp hardware loop: execute [body_start, body_end] `count` times
+    /// with zero per-iteration branch overhead. `count` is read from a
+    /// register at setup time.
+    HwLoop { idx: u8, count: Reg, body_start: Target, body_end: Target },
+
+    // ---- cluster primitives ----
+    /// Event-unit barrier across all cluster cores.
+    Barrier,
+    /// rd = hart id (cluster core index).
+    CoreId { rd: Reg },
+    Nop,
+    /// Terminate this core's program.
+    Halt,
+}
+
+impl Instr {
+    /// True if this instruction issues a data-memory request (participates
+    /// in TCDM arbitration).
+    pub fn is_mem(&self) -> bool {
+        matches!(
+            self,
+            Instr::Lw { .. }
+                | Instr::Sw { .. }
+                | Instr::Flw { .. }
+                | Instr::Fsw { .. }
+                | Instr::NnLoad { .. }
+                | Instr::MlSdotp { refresh: Some(_), .. }
+        )
+    }
+
+    /// True if this instruction occupies the DOTP unit.
+    pub fn is_dotp(&self) -> bool {
+        matches!(
+            self,
+            Instr::Dotp { .. } | Instr::Sdotp { .. } | Instr::MlSdotp { .. }
+        )
+    }
+
+    /// True if this instruction needs a shared-FPU slot.
+    pub fn is_fpu(&self) -> bool {
+        matches!(self, Instr::FAlu { .. })
+    }
+
+    /// MAC operations this instruction performs (for Gop/s accounting).
+    pub fn macs(&self) -> u64 {
+        match self {
+            Instr::Mac { .. } => 1,
+            Instr::Dotp { prec, .. } | Instr::Sdotp { prec, .. } => {
+                prec.macs_per_dotp()
+            }
+            Instr::MlSdotp { prec, .. } => prec.macs_per_dotp(),
+            _ => 0,
+        }
+    }
+
+    /// Floating-point operations this instruction performs.
+    pub fn flops(&self) -> u64 {
+        match self {
+            Instr::FAlu { op, lanes, .. } => op.flops() * *lanes as u64,
+            _ => 0,
+        }
+    }
+}

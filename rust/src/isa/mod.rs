@@ -1,0 +1,42 @@
+//! RV32IMFC + Xpulp + XpulpNN instruction set (paper §II-A).
+//!
+//! The simulator executes programs at the *semantic* level: instructions are
+//! a typed enum, not binary encodings, but every instruction corresponds
+//! one-to-one with an instruction the GCC XpulpNN backend emits, so
+//! instruction counts, DOTP-unit utilization and the MAC&LOAD overlap
+//! behaviour match the chip's.
+//!
+//! Extension inventory:
+//! * **Xpulp** (both the SOC core and the cluster cores): hardware loops
+//!   (`lp.setup`), post-increment load/store, 32-bit MAC, packed-SIMD
+//!   dot-products for 16-bit and 8-bit data.
+//! * **XpulpNN** (cluster cores only): packed-SIMD dot-products and vector
+//!   ALU ops for *nibble* (4-bit) and *crumb* (2-bit) data, plus the fused
+//!   MAC&LOAD ([`Instr::MlSdotp`]) drawing operands from the 6-entry NN
+//!   register file and optionally refreshing one NN-RF entry through the
+//!   LSU in the same cycle.
+
+pub mod asm;
+pub mod disasm;
+mod instr;
+mod program;
+pub mod simd;
+
+pub use asm::assemble;
+pub use instr::{AluOp, Cond, FOp, Instr, Prec, Sign, VAluOp};
+pub use program::{IsaLevel, Program, ProgramBuilder};
+pub use simd::{dotp, simd_alu};
+
+/// General-purpose register index (x0..x31; x0 hardwired to zero).
+pub type Reg = u8;
+/// Floating-point register index (f0..f31).
+pub type FReg = u8;
+/// NN-RF register index (nn0..nn5; paper §II-A2: 6 × 32-bit SIMD vectors).
+pub type NnReg = u8;
+/// Resolved branch/loop target: an index into the program's instruction vec.
+pub type Target = usize;
+
+/// Number of NN-RF entries.
+pub const NN_RF_SIZE: usize = 6;
+/// Number of hardware-loop contexts (Xpulp: two nested loops).
+pub const HW_LOOPS: usize = 2;

@@ -1,0 +1,274 @@
+//! Program container + label-resolving builder.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Cond, Instr, Reg, Target};
+
+/// ISA level a program requires; the cluster cores implement `XpulpNN`, the
+/// SOC controller only `Xpulp` (paper Fig. 1). Programs declare the level
+/// they need so scheduling a 2-bit kernel on the SOC core is an error, like
+/// on the chip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum IsaLevel {
+    /// RV32IMFC + Xpulp (hw loops, post-increment, 16/8-bit dotp).
+    Xpulp,
+    /// Xpulp + nibble/crumb SIMD + MAC&LOAD.
+    XpulpNN,
+}
+
+/// An executable program: resolved instructions plus metadata.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    pub isa: IsaLevel,
+}
+
+impl Program {
+    /// Minimum ISA level actually used by the instruction stream (used to
+    /// validate the declared level).
+    pub fn required_isa(&self) -> IsaLevel {
+        use super::Prec;
+        for i in &self.instrs {
+            match i {
+                Instr::MlSdotp { .. } | Instr::NnLoad { .. } => {
+                    return IsaLevel::XpulpNN
+                }
+                Instr::Dotp { prec, .. }
+                | Instr::Sdotp { prec, .. }
+                | Instr::VAlu { prec, .. }
+                    if matches!(prec, Prec::B4 | Prec::B2) =>
+                {
+                    return IsaLevel::XpulpNN
+                }
+                _ => {}
+            }
+        }
+        IsaLevel::Xpulp
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+}
+
+/// Label identifier handed out by [`ProgramBuilder::label`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Label(usize);
+
+enum Pending {
+    Branch { at: usize, label: Label },
+    Jump { at: usize, label: Label },
+    LoopEnd { at: usize, start: Label, end: Label },
+}
+
+/// Builds a [`Program`], resolving forward label references. Kernels in
+/// `crate::kernels` are written against this builder — it plays the role of
+/// the XpulpNN GCC builtins layer described in paper §II-A3.
+pub struct ProgramBuilder {
+    name: String,
+    isa: IsaLevel,
+    instrs: Vec<Instr>,
+    labels: HashMap<Label, usize>,
+    next_label: usize,
+    pending: Vec<Pending>,
+}
+
+impl ProgramBuilder {
+    pub fn new(name: &str, isa: IsaLevel) -> Self {
+        Self {
+            name: name.to_string(),
+            isa,
+            instrs: Vec::new(),
+            labels: HashMap::new(),
+            next_label: 0,
+            pending: Vec::new(),
+        }
+    }
+
+    /// Allocate a fresh (unbound) label.
+    pub fn label(&mut self) -> Label {
+        let l = Label(self.next_label);
+        self.next_label += 1;
+        l
+    }
+
+    /// Bind `label` to the next emitted instruction.
+    pub fn bind(&mut self, label: Label) {
+        self.labels.insert(label, self.instrs.len());
+    }
+
+    /// Emit one instruction; returns its index.
+    pub fn emit(&mut self, i: Instr) -> usize {
+        self.instrs.push(i);
+        self.instrs.len() - 1
+    }
+
+    /// Emit a branch to `label` (resolved at build()).
+    pub fn branch(&mut self, cond: Cond, rs1: Reg, rs2: Reg, label: Label) {
+        let at = self.emit(Instr::Branch { cond, rs1, rs2, target: 0 });
+        self.pending.push(Pending::Branch { at, label });
+    }
+
+    /// Emit a jump to `label`.
+    pub fn jump(&mut self, label: Label) {
+        let at = self.emit(Instr::Jump { target: 0 });
+        self.pending.push(Pending::Jump { at, label });
+    }
+
+    /// Emit an Xpulp hardware-loop setup whose body spans from `start` to
+    /// the instruction *before* `end`. `count` is a register holding the
+    /// trip count (must be >= 1 when executed).
+    pub fn hw_loop(&mut self, idx: u8, count: Reg, start: Label, end: Label) {
+        let at = self.emit(Instr::HwLoop {
+            idx,
+            count,
+            body_start: 0,
+            body_end: 0,
+        });
+        self.pending.push(Pending::LoopEnd { at, start, end });
+    }
+
+    fn resolve(&self, l: Label) -> Result<Target> {
+        self.labels
+            .get(&l)
+            .copied()
+            .with_context(|| format!("unbound label {l:?}"))
+    }
+
+    /// Resolve all labels and produce the program.
+    pub fn build(mut self) -> Result<Program> {
+        for p in std::mem::take(&mut self.pending) {
+            match p {
+                Pending::Branch { at, label } => {
+                    let t = self.resolve(label)?;
+                    if let Instr::Branch { target, .. } = &mut self.instrs[at]
+                    {
+                        *target = t;
+                    }
+                }
+                Pending::Jump { at, label } => {
+                    let t = self.resolve(label)?;
+                    if let Instr::Jump { target, .. } = &mut self.instrs[at] {
+                        *target = t;
+                    }
+                }
+                Pending::LoopEnd { at, start, end } => {
+                    let s = self.resolve(start)?;
+                    let e = self.resolve(end)?;
+                    if e <= s {
+                        bail!("hw loop body empty: start {s} end {e}");
+                    }
+                    if let Instr::HwLoop {
+                        body_start,
+                        body_end,
+                        ..
+                    } = &mut self.instrs[at]
+                    {
+                        *body_start = s;
+                        *body_end = e - 1; // inclusive last instruction
+                    }
+                }
+            }
+        }
+        self.emit(Instr::Halt);
+        let prog = Program {
+            name: self.name,
+            instrs: self.instrs,
+            isa: self.isa,
+        };
+        if prog.required_isa() > prog.isa {
+            bail!(
+                "program {:?} declared {:?} but uses XpulpNN instructions",
+                prog.name,
+                prog.isa
+            );
+        }
+        Ok(prog)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{AluOp, Prec, Sign};
+
+    #[test]
+    fn forward_labels_resolve() {
+        let mut b = ProgramBuilder::new("t", IsaLevel::Xpulp);
+        let done = b.label();
+        b.emit(Instr::Li { rd: 1, imm: 0 });
+        b.branch(Cond::Eq, 1, 0, done);
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: 1, rs1: 1, imm: 1 });
+        b.bind(done);
+        b.emit(Instr::Nop);
+        let p = b.build().unwrap();
+        match p.instrs[1] {
+            Instr::Branch { target, .. } => assert_eq!(target, 3),
+            _ => panic!(),
+        }
+        assert!(matches!(p.instrs.last(), Some(Instr::Halt)));
+    }
+
+    #[test]
+    fn hw_loop_bounds_inclusive() {
+        let mut b = ProgramBuilder::new("t", IsaLevel::Xpulp);
+        let (s, e) = (b.label(), b.label());
+        b.emit(Instr::Li { rd: 5, imm: 4 });
+        b.hw_loop(0, 5, s, e);
+        b.bind(s);
+        b.emit(Instr::Nop);
+        b.emit(Instr::Nop);
+        b.bind(e);
+        b.emit(Instr::Halt);
+        let p = b.build().unwrap();
+        match p.instrs[1] {
+            Instr::HwLoop { body_start, body_end, .. } => {
+                assert_eq!((body_start, body_end), (2, 3));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn unbound_label_is_error() {
+        let mut b = ProgramBuilder::new("t", IsaLevel::Xpulp);
+        let l = b.label();
+        b.jump(l);
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn isa_level_enforced() {
+        let mut b = ProgramBuilder::new("t", IsaLevel::Xpulp);
+        b.emit(Instr::Sdotp {
+            prec: Prec::B2,
+            sign: Sign::SS,
+            rd: 1,
+            rs1: 2,
+            rs2: 3,
+        });
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn required_isa_detects_macload() {
+        let mut b = ProgramBuilder::new("t", IsaLevel::XpulpNN);
+        b.emit(Instr::MlSdotp {
+            prec: Prec::B8,
+            sign: Sign::SS,
+            rd: 1,
+            na: 0,
+            nb: 1,
+            refresh: None,
+        });
+        let p = b.build().unwrap();
+        assert_eq!(p.required_isa(), IsaLevel::XpulpNN);
+    }
+}

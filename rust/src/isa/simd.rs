@@ -1,0 +1,186 @@
+//! Packed-SIMD semantics: dot products and vector ALU operations over
+//! 32-bit registers holding 2×16b, 4×8b, 8×4b or 16×2b lanes.
+//!
+//! These functions are the *functional* model of the RI5CY DOTP unit with
+//! the XpulpNN multiplier islands (paper §II-A2, Fig. 2b): the ISS uses
+//! them for execution and the tests compare them against scalar
+//! re-computation.
+
+use super::{Prec, Sign, VAluOp};
+
+/// Extract lane `i` of `word` as signed (two's complement of the lane width).
+#[inline]
+pub fn lane_s(word: u32, prec: Prec, i: u32) -> i32 {
+    let bits = prec.bits();
+    let raw = (word >> (i * bits)) & ((1u64 << bits) as u32).wrapping_sub(1);
+    // sign-extend
+    let shift = 32 - bits;
+    ((raw << shift) as i32) >> shift
+}
+
+/// Extract lane `i` of `word` as unsigned.
+#[inline]
+pub fn lane_u(word: u32, prec: Prec, i: u32) -> i32 {
+    let bits = prec.bits();
+    ((word >> (i * bits)) & ((1u64 << bits) as u32).wrapping_sub(1)) as i32
+}
+
+/// Insert `val`'s low bits into lane `i` of `word`.
+#[inline]
+pub fn set_lane(word: u32, prec: Prec, i: u32, val: i32) -> u32 {
+    let bits = prec.bits();
+    let mask = ((1u64 << bits) as u32).wrapping_sub(1);
+    let cleared = word & !(mask << (i * bits));
+    cleared | (((val as u32) & mask) << (i * bits))
+}
+
+/// Dot product of two packed registers with the given signedness; returns
+/// the 32-bit sum (the DOTP unit's reduction result, before accumulation).
+pub fn dotp(a: u32, b: u32, prec: Prec, sign: Sign) -> i32 {
+    let mut acc: i32 = 0;
+    for i in 0..prec.lanes() {
+        let (x, y) = match sign {
+            Sign::SS => (lane_s(a, prec, i), lane_s(b, prec, i)),
+            Sign::UU => (lane_u(a, prec, i), lane_u(b, prec, i)),
+            Sign::US => (lane_u(a, prec, i), lane_s(b, prec, i)),
+            Sign::SU => (lane_s(a, prec, i), lane_u(b, prec, i)),
+        };
+        acc = acc.wrapping_add(x.wrapping_mul(y));
+    }
+    acc
+}
+
+/// Packed-SIMD ALU op; lanes are treated as signed (matching `pv.*` defaults).
+pub fn simd_alu(op: VAluOp, a: u32, b: u32, prec: Prec) -> u32 {
+    let mut out = 0u32;
+    for i in 0..prec.lanes() {
+        let x = lane_s(a, prec, i);
+        let y = lane_s(b, prec, i);
+        let v = match op {
+            VAluOp::Add => x.wrapping_add(y),
+            VAluOp::Sub => x.wrapping_sub(y),
+            VAluOp::Max => x.max(y),
+            VAluOp::Min => x.min(y),
+            VAluOp::Sra => x >> (y as u32 & (prec.bits() - 1)),
+            VAluOp::Shuffle => {
+                let src = (y as u32) % prec.lanes();
+                lane_s(a, prec, src)
+            }
+        };
+        out = set_lane(out, prec, i, v);
+    }
+    out
+}
+
+/// Pack a slice of lane values (low bits taken) into 32-bit words.
+pub fn pack(values: &[i32], prec: Prec) -> Vec<u32> {
+    let lanes = prec.lanes() as usize;
+    values
+        .chunks(lanes)
+        .map(|chunk| {
+            let mut w = 0u32;
+            for (i, &v) in chunk.iter().enumerate() {
+                w = set_lane(w, prec, i as u32, v);
+            }
+            w
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn lanes_roundtrip_signed() {
+        let mut rng = Rng::new(5);
+        for prec in [Prec::B16, Prec::B8, Prec::B4, Prec::B2] {
+            let half = 1i32 << (prec.bits() - 1);
+            for _ in 0..200 {
+                let vals: Vec<i32> = (0..prec.lanes())
+                    .map(|_| rng.range_i32(-half, half))
+                    .collect();
+                let mut w = 0u32;
+                for (i, &v) in vals.iter().enumerate() {
+                    w = set_lane(w, prec, i as u32, v);
+                }
+                for (i, &v) in vals.iter().enumerate() {
+                    assert_eq!(lane_s(w, prec, i as u32), v, "{prec:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dotp_matches_scalar() {
+        let mut rng = Rng::new(7);
+        for prec in [Prec::B16, Prec::B8, Prec::B4, Prec::B2] {
+            let half = 1i32 << (prec.bits() - 1);
+            for _ in 0..500 {
+                let xs: Vec<i32> = (0..prec.lanes())
+                    .map(|_| rng.range_i32(-half, half))
+                    .collect();
+                let ys: Vec<i32> = (0..prec.lanes())
+                    .map(|_| rng.range_i32(-half, half))
+                    .collect();
+                let a = pack(&xs, prec)[0];
+                let b = pack(&ys, prec)[0];
+                let want: i32 = xs.iter().zip(&ys).map(|(x, y)| x * y).sum();
+                assert_eq!(dotp(a, b, prec, Sign::SS), want, "{prec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dotp_unsigned() {
+        let mut rng = Rng::new(8);
+        for prec in [Prec::B8, Prec::B4, Prec::B2] {
+            let hi = 1i32 << prec.bits();
+            for _ in 0..300 {
+                let xs: Vec<i32> =
+                    (0..prec.lanes()).map(|_| rng.range_i32(0, hi)).collect();
+                let ys: Vec<i32> =
+                    (0..prec.lanes()).map(|_| rng.range_i32(0, hi)).collect();
+                let a = pack(&xs, prec)[0];
+                let b = pack(&ys, prec)[0];
+                let want: i32 = xs.iter().zip(&ys).map(|(x, y)| x * y).sum();
+                assert_eq!(dotp(a, b, prec, Sign::UU), want);
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_sign_us() {
+        // one unsigned activation vector times signed weights — the QNN case
+        let xs = [3, 0, 2, 1]; // unsigned 8-bit
+        let ws = [-128, 127, -1, 5]; // signed 8-bit
+        let a = pack(&xs, Prec::B8)[0];
+        let b = pack(&ws, Prec::B8)[0];
+        let want: i32 = xs.iter().zip(&ws).map(|(x, y)| x * y).sum();
+        assert_eq!(dotp(a, b, Prec::B8, Sign::US), want);
+    }
+
+    #[test]
+    fn simd_add_wraps_per_lane() {
+        let a = pack(&[127, -128, 1, -1], Prec::B8)[0];
+        let b = pack(&[1, -1, 2, 3], Prec::B8)[0];
+        let r = simd_alu(VAluOp::Add, a, b, Prec::B8);
+        assert_eq!(lane_s(r, Prec::B8, 0), -128); // 127+1 wraps
+        assert_eq!(lane_s(r, Prec::B8, 1), 127); // -128-1 wraps
+        assert_eq!(lane_s(r, Prec::B8, 2), 3);
+        assert_eq!(lane_s(r, Prec::B8, 3), 2);
+    }
+
+    #[test]
+    fn max_min() {
+        let a = pack(&[5, -3], Prec::B16)[0];
+        let b = pack(&[-7, 9], Prec::B16)[0];
+        let mx = simd_alu(VAluOp::Max, a, b, Prec::B16);
+        let mn = simd_alu(VAluOp::Min, a, b, Prec::B16);
+        assert_eq!(lane_s(mx, Prec::B16, 0), 5);
+        assert_eq!(lane_s(mx, Prec::B16, 1), 9);
+        assert_eq!(lane_s(mn, Prec::B16, 0), -7);
+        assert_eq!(lane_s(mn, Prec::B16, 1), -3);
+    }
+}

@@ -1,0 +1,375 @@
+//! Direct 8-bit convolution (+ batch-norm) on the RISC-V cores — the
+//! software path that Fig. 14 compares against RBE execution.
+//!
+//! Layouts (software-centric, paper §III-B "data marshaling" discussion):
+//! * input `X (H+2, W+2, Kin)` HWC, int8 packed 4/word (padded border);
+//! * weights `W (Kout, 9, Kin)` int8 packed (tap-major per output ch);
+//! * output `(H, W, Kout)` int32 words (post-BN, shifted and clipped).
+//!
+//! Output channels are block-partitioned across cores (`Kout/cores`
+//! each); inside, a 4-output-channel register block reuses every loaded
+//! activation word for 4 `pv.sdotp.b` ops.
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::{Cluster, ClusterConfig, RunStats};
+use crate::isa::{AluOp, Cond, Instr, IsaLevel, Prec, Program, ProgramBuilder,
+                 Sign};
+use crate::kernels::layout::{read_i32, write_packed, write_words, TcdmAlloc};
+
+/// Conv shape descriptor (square spatial, stride 1, pad 1 for 3×3).
+#[derive(Debug, Clone, Copy)]
+pub struct ConvProblem {
+    pub h: usize,
+    pub w: usize,
+    pub k_in: usize,
+    pub k_out: usize,
+    /// 3 or 1.
+    pub ksize: usize,
+    pub cores: usize,
+    /// batch-norm shift (scale/bias supplied at run time).
+    pub bn_shift: u32,
+}
+
+impl ConvProblem {
+    pub fn macs(&self) -> u64 {
+        (self.h * self.w * self.k_in * self.k_out * self.ksize * self.ksize)
+            as u64
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.macs() * 2
+    }
+
+    fn validate(&self) -> Result<()> {
+        ensure!(self.ksize == 1 || self.ksize == 3);
+        ensure!(self.k_in % 4 == 0, "Kin must pack into bytes");
+        ensure!(self.k_out % self.cores == 0, "Kout vs cores");
+        ensure!((self.k_out / self.cores) % 4 == 0, "4-wide kout blocks");
+        Ok(())
+    }
+
+    fn hp(&self) -> usize {
+        self.h + if self.ksize == 3 { 2 } else { 0 }
+    }
+
+    fn wp(&self) -> usize {
+        self.w + if self.ksize == 3 { 2 } else { 0 }
+    }
+
+    /// Build the SPMD program.
+    ///
+    /// Register map: x1 pixbase(A), x2 scratch a-ptr, x3..x6 wptr, x7
+    /// kin-count, x9 out-ptr, x10..13 accs, x14 a-word, x15/16 scale/bias
+    /// ptrs, x17 shift, x20 y, x21 x, x22 kout-blk, x26..28 consts/tmp,
+    /// x29/30/31 tmp.
+    pub fn build(
+        &self,
+        x_addr: u32,
+        w_addr: u32,
+        scale_addr: u32,
+        bias_addr: u32,
+        out_addr: u32,
+    ) -> Result<Program> {
+        self.validate()?;
+        let kin_w = self.k_in / 4; // activation words per tap
+        let taps = self.ksize * self.ksize;
+        let wrow_bytes = (taps * self.k_in) as i32; // weight bytes per kout
+        let kouts_per_core = self.k_out / self.cores;
+        let mut b = ProgramBuilder::new(
+            if self.ksize == 3 { "conv3x3_sw" } else { "conv1x1_sw" },
+            IsaLevel::Xpulp,
+        );
+        // my first kout = id * kouts_per_core
+        b.emit(Instr::CoreId { rd: 29 });
+        b.emit(Instr::Li { rd: 30, imm: kouts_per_core as i32 });
+        b.emit(Instr::Alu { op: AluOp::Mul, rd: 28, rs1: 29, rs2: 30 }); // k0
+        // weight base for k0: w_addr + k0*wrow_bytes
+        b.emit(Instr::Li { rd: 30, imm: wrow_bytes });
+        b.emit(Instr::Alu { op: AluOp::Mul, rd: 31, rs1: 28, rs2: 30 });
+        b.emit(Instr::Li { rd: 27, imm: w_addr as i32 });
+        b.emit(Instr::Alu { op: AluOp::Add, rd: 27, rs1: 27, rs2: 31 }); // wbase
+        // scale/bias pointers for k0
+        b.emit(Instr::AluImm { op: AluOp::Sll, rd: 31, rs1: 28, imm: 2 });
+        b.emit(Instr::Li { rd: 15, imm: scale_addr as i32 });
+        b.emit(Instr::Alu { op: AluOp::Add, rd: 15, rs1: 15, rs2: 31 });
+        b.emit(Instr::Li { rd: 16, imm: bias_addr as i32 });
+        b.emit(Instr::Alu { op: AluOp::Add, rd: 16, rs1: 16, rs2: 31 });
+        // out base for pixel 0, channel k0: out + k0*4
+        b.emit(Instr::Li { rd: 9, imm: out_addr as i32 });
+        b.emit(Instr::Alu { op: AluOp::Add, rd: 9, rs1: 9, rs2: 31 });
+        // kout-block loop: kouts_per_core/4 blocks
+        b.emit(Instr::Li { rd: 22, imm: (kouts_per_core / 4) as i32 });
+        let kout_loop = b.label();
+        b.bind(kout_loop);
+        // y/x pixel loops
+        b.emit(Instr::Li { rd: 20, imm: self.h as i32 });
+        let y_loop = b.label();
+        b.bind(y_loop);
+        b.emit(Instr::Li { rd: 21, imm: self.w as i32 });
+        let x_loop = b.label();
+        b.bind(x_loop);
+        // pixbase = x_addr + ((y_idx*wp + x_idx) * kin) bytes, where
+        // y_idx = h - x20, x_idx = w - x21 (counters count down).
+        // Compute via tmp: iy = h - x20; ix = w - x21.
+        b.emit(Instr::Li { rd: 29, imm: self.h as i32 });
+        b.emit(Instr::Alu { op: AluOp::Sub, rd: 29, rs1: 29, rs2: 20 });
+        b.emit(Instr::Li { rd: 30, imm: self.wp() as i32 });
+        b.emit(Instr::Alu { op: AluOp::Mul, rd: 29, rs1: 29, rs2: 30 });
+        b.emit(Instr::Li { rd: 30, imm: self.w as i32 });
+        b.emit(Instr::Alu { op: AluOp::Sub, rd: 30, rs1: 30, rs2: 21 });
+        b.emit(Instr::Alu { op: AluOp::Add, rd: 29, rs1: 29, rs2: 30 });
+        b.emit(Instr::Li { rd: 30, imm: self.k_in as i32 });
+        b.emit(Instr::Alu { op: AluOp::Mul, rd: 29, rs1: 29, rs2: 30 });
+        b.emit(Instr::Li { rd: 1, imm: x_addr as i32 });
+        b.emit(Instr::Alu { op: AluOp::Add, rd: 1, rs1: 1, rs2: 29 });
+        // working weight pointers for the 4 kouts of this block
+        for i in 0..4u8 {
+            b.emit(Instr::AluImm {
+                op: AluOp::Add,
+                rd: 3 + i,
+                rs1: 27,
+                imm: i as i32 * wrow_bytes,
+            });
+        }
+        // zero accumulators
+        for i in 0..4u8 {
+            b.emit(Instr::Li { rd: 10 + i, imm: 0 });
+        }
+        // taps
+        for ty in 0..self.ksize {
+            for tx in 0..self.ksize {
+                // a-ptr = pixbase + (ty*wp + tx)*kin
+                b.emit(Instr::AluImm {
+                    op: AluOp::Add,
+                    rd: 2,
+                    rs1: 1,
+                    imm: ((ty * self.wp() + tx) * self.k_in) as i32,
+                });
+                b.emit(Instr::Li { rd: 7, imm: kin_w as i32 });
+                let (ls, le) = (b.label(), b.label());
+                b.hw_loop(0, 7, ls, le);
+                b.bind(ls);
+                b.emit(Instr::Lw { rd: 14, base: 2, offset: 0, post_inc: 4 });
+                for i in 0..4u8 {
+                    b.emit(Instr::Lw {
+                        rd: 30,
+                        base: 3 + i,
+                        offset: 0,
+                        post_inc: 4,
+                    });
+                    b.emit(Instr::Sdotp {
+                        prec: Prec::B8,
+                        sign: Sign::SS,
+                        rd: 10 + i,
+                        rs1: 14,
+                        rs2: 30,
+                    });
+                }
+                b.bind(le);
+            }
+        }
+        // batch-norm + store: out = clip((scale*acc + bias) >> shift)
+        for i in 0..4u8 {
+            b.emit(Instr::Lw {
+                rd: 29,
+                base: 15,
+                offset: i as i32 * 4,
+                post_inc: 0,
+            });
+            b.emit(Instr::Alu { op: AluOp::Mul, rd: 29, rs1: 29, rs2: 10 + i });
+            b.emit(Instr::Lw {
+                rd: 30,
+                base: 16,
+                offset: i as i32 * 4,
+                post_inc: 0,
+            });
+            b.emit(Instr::Alu { op: AluOp::Add, rd: 29, rs1: 29, rs2: 30 });
+            b.emit(Instr::AluImm {
+                op: AluOp::Sra,
+                rd: 29,
+                rs1: 29,
+                imm: self.bn_shift as i32,
+            });
+            b.emit(Instr::Li { rd: 30, imm: 127 });
+            b.emit(Instr::Alu { op: AluOp::Min, rd: 29, rs1: 29, rs2: 30 });
+            b.emit(Instr::Li { rd: 30, imm: -128 });
+            b.emit(Instr::Alu { op: AluOp::Max, rd: 29, rs1: 29, rs2: 30 });
+            b.emit(Instr::Sw {
+                rs: 29,
+                base: 9,
+                offset: i as i32 * 4,
+                post_inc: 0,
+            });
+        }
+        // advance out by one pixel (Kout words)
+        b.emit(Instr::AluImm {
+            op: AluOp::Add,
+            rd: 9,
+            rs1: 9,
+            imm: self.k_out as i32 * 4,
+        });
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: 21, rs1: 21, imm: -1 });
+        b.branch(Cond::Ne, 21, 0, x_loop);
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: 20, rs1: 20, imm: -1 });
+        b.branch(Cond::Ne, 20, 0, y_loop);
+        // next kout block: wbase += 4 rows, scale/bias += 16, out rewinds
+        // to pixel 0 of the next 4 channels
+        b.emit(Instr::AluImm {
+            op: AluOp::Add,
+            rd: 27,
+            rs1: 27,
+            imm: 4 * wrow_bytes,
+        });
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: 15, rs1: 15, imm: 16 });
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: 16, rs1: 16, imm: 16 });
+        b.emit(Instr::AluImm {
+            op: AluOp::Add,
+            rd: 9,
+            rs1: 9,
+            imm: -((self.h * self.w * self.k_out * 4) as i32) + 16,
+        });
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: 22, rs1: 22, imm: -1 });
+        b.branch(Cond::Ne, 22, 0, kout_loop);
+        b.build()
+    }
+
+    /// Place data, run, return (output, stats). `x` is (H+2p, W+2p, Kin)
+    /// int8 HWC; `w` is (Kout, taps, Kin) int8; `scale`/`bias` per-Kout.
+    pub fn run_with(
+        &self,
+        cfg: ClusterConfig,
+        x: &[i32],
+        w: &[i32],
+        scale: &[i32],
+        bias: &[i32],
+    ) -> Result<(Vec<i32>, RunStats)> {
+        self.validate()?;
+        let taps = self.ksize * self.ksize;
+        ensure!(x.len() == self.hp() * self.wp() * self.k_in);
+        ensure!(w.len() == self.k_out * taps * self.k_in);
+        ensure!(scale.len() == self.k_out && bias.len() == self.k_out);
+        ensure!(cfg.cores == self.cores);
+        let mut alloc = TcdmAlloc::new();
+        let x_addr = alloc.alloc(x.len() / 4 + 2)?;
+        let w_addr = alloc.alloc(w.len() / 4 + 2)?;
+        let s_addr = alloc.alloc(self.k_out)?;
+        let b_addr = alloc.alloc(self.k_out)?;
+        let out_addr = alloc.alloc(self.h * self.w * self.k_out)?;
+        let prog = self.build(x_addr, w_addr, s_addr, b_addr, out_addr)?;
+        let mut cl = Cluster::new(cfg);
+        write_packed(&mut cl.mem, x_addr, x, Prec::B8);
+        write_packed(&mut cl.mem, w_addr, w, Prec::B8);
+        write_words(&mut cl.mem, s_addr,
+                    &scale.iter().map(|&v| v as u32).collect::<Vec<_>>());
+        write_words(&mut cl.mem, b_addr,
+                    &bias.iter().map(|&v| v as u32).collect::<Vec<_>>());
+        cl.load_spmd(prog);
+        let stats = cl.run()?;
+        let out = read_i32(&cl.mem, out_addr, self.h * self.w * self.k_out);
+        Ok((out, stats))
+    }
+}
+
+/// Host oracle for the software conv + BN.
+pub fn conv_sw_reference(
+    p: &ConvProblem,
+    x: &[i32],
+    w: &[i32],
+    scale: &[i32],
+    bias: &[i32],
+) -> Vec<i32> {
+    let taps = p.ksize;
+    let (wp, kin) = (p.wp(), p.k_in);
+    let mut out = vec![0i32; p.h * p.w * p.k_out];
+    for y in 0..p.h {
+        for xq in 0..p.w {
+            for ko in 0..p.k_out {
+                let mut acc = 0i64;
+                for ty in 0..taps {
+                    for tx in 0..taps {
+                        for ki in 0..kin {
+                            let xv =
+                                x[((y + ty) * wp + (xq + tx)) * kin + ki];
+                            let wv = w[(ko * taps * taps + ty * taps + tx)
+                                * kin
+                                + ki];
+                            acc += xv as i64 * wv as i64;
+                        }
+                    }
+                }
+                let v = ((scale[ko] as i64 * (acc as i32) as i64
+                    + bias[ko] as i64)
+                    >> p.bn_shift)
+                    .clamp(-128, 127);
+                out[(y * p.w + xq) * p.k_out + ko] = v as i32;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn inputs(p: &ConvProblem, seed: u64)
+        -> (Vec<i32>, Vec<i32>, Vec<i32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let taps = p.ksize * p.ksize;
+        let x = (0..p.hp() * p.wp() * p.k_in)
+            .map(|_| rng.range_i32(-128, 128))
+            .collect();
+        let w = (0..p.k_out * taps * p.k_in)
+            .map(|_| rng.range_i32(-128, 128))
+            .collect();
+        let scale = (0..p.k_out).map(|_| rng.range_i32(1, 8)).collect();
+        let bias = (0..p.k_out).map(|_| rng.range_i32(-100, 100)).collect();
+        (x, w, scale, bias)
+    }
+
+    #[test]
+    fn conv3x3_matches_reference() {
+        let p = ConvProblem {
+            h: 5, w: 5, k_in: 8, k_out: 8, ksize: 3, cores: 2, bn_shift: 8,
+        };
+        let (x, w, s, bi) = inputs(&p, 11);
+        let mut cfg = ClusterConfig::default();
+        cfg.cores = 2;
+        let (out, stats) = p.run_with(cfg, &x, &w, &s, &bi).unwrap();
+        assert_eq!(out, conv_sw_reference(&p, &x, &w, &s, &bi));
+        assert_eq!(stats.total.macs, p.macs());
+    }
+
+    #[test]
+    fn conv1x1_matches_reference() {
+        let p = ConvProblem {
+            h: 4, w: 4, k_in: 16, k_out: 16, ksize: 1, cores: 4, bn_shift: 6,
+        };
+        let (x, w, s, bi) = inputs(&p, 13);
+        let mut cfg = ClusterConfig::default();
+        cfg.cores = 4;
+        let (out, _) = p.run_with(cfg, &x, &w, &s, &bi).unwrap();
+        assert_eq!(out, conv_sw_reference(&p, &x, &w, &s, &bi));
+    }
+
+    /// Fig. 14 workload: 9×9×64 output, 64 input channels, 16 cores.
+    #[test]
+    fn fig14_conv3x3_runs_parallel() {
+        let p = ConvProblem {
+            h: 9, w: 9, k_in: 64, k_out: 64, ksize: 3, cores: 16, bn_shift: 10,
+        };
+        let (x, w, s, bi) = inputs(&p, 17);
+        let (out16, stats16) =
+            p.run_with(ClusterConfig::default(), &x, &w, &s, &bi).unwrap();
+        assert_eq!(out16, conv_sw_reference(&p, &x, &w, &s, &bi));
+        // single-core run for the speedup shape
+        let p1 = ConvProblem { cores: 1, ..p };
+        let (_, stats1) = p1
+            .run_with(ClusterConfig::soc_controller(), &x, &w, &s, &bi)
+            .unwrap();
+        let speedup = stats1.cycles as f64 / stats16.cycles as f64;
+        assert!(speedup > 10.0, "16-core speedup {speedup:.1}");
+    }
+}

@@ -1,0 +1,117 @@
+//! TCDM placement helpers: a bump allocator over the 128 KiB L1 plus
+//! pack/unpack between host `i32` tensors and the packed SIMD words the
+//! kernels consume.
+
+use anyhow::{bail, Result};
+
+use crate::cluster::{Tcdm, TCDM_BASE, TCDM_SIZE};
+use crate::isa::{simd, Prec};
+
+/// Word-granular bump allocator over TCDM addresses.
+#[derive(Debug, Clone)]
+pub struct TcdmAlloc {
+    next_word: usize,
+}
+
+impl Default for TcdmAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TcdmAlloc {
+    pub fn new() -> Self {
+        Self { next_word: 0 }
+    }
+
+    /// Allocate `words` words; returns the byte address.
+    pub fn alloc(&mut self, words: usize) -> Result<u32> {
+        let addr = TCDM_BASE + (self.next_word * 4) as u32;
+        self.next_word += words;
+        if self.next_word * 4 > TCDM_SIZE as usize {
+            bail!(
+                "TCDM overflow: {} KiB requested",
+                self.next_word * 4 / 1024
+            );
+        }
+        Ok(addr)
+    }
+
+    /// Bytes currently allocated.
+    pub fn used_bytes(&self) -> usize {
+        self.next_word * 4
+    }
+}
+
+/// Word offset of a TCDM byte address.
+pub fn word_of(addr: u32) -> usize {
+    ((addr - TCDM_BASE) / 4) as usize
+}
+
+/// Pack signed lane values at `prec` into TCDM at `addr`.
+pub fn write_packed(mem: &mut Tcdm, addr: u32, values: &[i32], prec: Prec) {
+    let words = simd::pack(values, prec);
+    mem.write_l1(word_of(addr), &words);
+}
+
+/// Write raw i32 words (e.g. accumulators / fp bits).
+pub fn write_words(mem: &mut Tcdm, addr: u32, values: &[u32]) {
+    mem.write_l1(word_of(addr), values);
+}
+
+/// Read `n` i32 values starting at `addr`.
+pub fn read_i32(mem: &Tcdm, addr: u32, n: usize) -> Vec<i32> {
+    mem.read_l1(word_of(addr), n).iter().map(|&w| w as i32).collect()
+}
+
+/// Read `n` f32 values starting at `addr`.
+pub fn read_f32(mem: &Tcdm, addr: u32, n: usize) -> Vec<f32> {
+    mem.read_l1(word_of(addr), n)
+        .iter()
+        .map(|&w| f32::from_bits(w))
+        .collect()
+}
+
+/// Write f32 values.
+pub fn write_f32(mem: &mut Tcdm, addr: u32, values: &[f32]) {
+    let words: Vec<u32> = values.iter().map(|v| v.to_bits()).collect();
+    mem.write_l1(word_of(addr), &words);
+}
+
+/// Words needed for `n` lanes at `prec`.
+pub fn packed_words(n: usize, prec: Prec) -> usize {
+    n.div_ceil(prec.lanes() as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_is_word_aligned_and_bounded() {
+        let mut a = TcdmAlloc::new();
+        let p1 = a.alloc(10).unwrap();
+        let p2 = a.alloc(1).unwrap();
+        assert_eq!(p1, TCDM_BASE);
+        assert_eq!(p2, TCDM_BASE + 40);
+        assert!(a.alloc(40_000).is_err()); // > 128 KiB total
+    }
+
+    #[test]
+    fn pack_roundtrip_via_mem() {
+        let mut mem = Tcdm::new();
+        let vals = vec![1, -2, 3, -4, 5, -6, 7, -8];
+        write_packed(&mut mem, TCDM_BASE, &vals, Prec::B4);
+        let w = mem.read_l1(0, 1)[0];
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(simd::lane_s(w, Prec::B4, i as u32), v);
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut mem = Tcdm::new();
+        write_f32(&mut mem, TCDM_BASE + 8, &[1.5, -2.25]);
+        assert_eq!(read_f32(&mem, TCDM_BASE + 8, 2), vec![1.5, -2.25]);
+    }
+}

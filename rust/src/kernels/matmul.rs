@@ -1,0 +1,747 @@
+//! Parallel integer matrix multiplication kernels (paper §II-A, Fig. 2c).
+//!
+//! `C[M,N] += A[M,K] · Bᵀ[N,K]` with A, B packed at 8/4/2-bit precision
+//! and 32-bit accumulators, SPMD across the cluster cores (rows of C are
+//! block-partitioned by core id). Four variants:
+//!
+//! * [`MatmulKernel::Xpulp8`] — the Fig. 15 "MMUL" baseline: 4×2 register
+//!   blocking, explicit post-increment loads, `pv.sdotp.b`.
+//! * [`MatmulKernel::Nn`] — XpulpNN nibble/crumb SIMD without MAC&LOAD:
+//!   same 4×2 structure at B4/B2 (the "native sub-byte support" point).
+//! * [`MatmulKernel::MacLoad`] — the Fig. 2c MAC&LOAD kernel: 4×4
+//!   blocking, operands staged in the NN-RF, inner loop of **16
+//!   `pv.mlsdotp` + 1 explicit load** (the paper's "16 accumulators at
+//!   the cost of a single explicit load", ~94% DOTP utilization).
+//! * [`MatmulKernel::UnpackBaseline`] — plain-Xpulp execution of 4/2-bit
+//!   data by unpacking nibbles/crumbs to bytes in registers before
+//!   `pv.sdotp.b` (the §III-C1 instruction-count comparison baseline).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::cluster::{Cluster, ClusterConfig, RunStats};
+use crate::isa::{
+    AluOp, Cond, Instr, IsaLevel, Prec, Program, ProgramBuilder, Sign, VAluOp,
+};
+use crate::kernels::layout::{
+    packed_words, read_i32, write_packed, TcdmAlloc,
+};
+
+/// Kernel variant selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatmulKernel {
+    Xpulp8,
+    Nn { prec: Prec },
+    MacLoad { prec: Prec },
+    UnpackBaseline { prec: Prec },
+}
+
+impl MatmulKernel {
+    pub fn prec(&self) -> Prec {
+        match *self {
+            MatmulKernel::Xpulp8 => Prec::B8,
+            MatmulKernel::Nn { prec }
+            | MatmulKernel::MacLoad { prec }
+            | MatmulKernel::UnpackBaseline { prec } => prec,
+        }
+    }
+
+    pub fn isa(&self) -> IsaLevel {
+        match self {
+            MatmulKernel::Xpulp8 | MatmulKernel::UnpackBaseline { .. } => {
+                IsaLevel::Xpulp
+            }
+            _ => IsaLevel::XpulpNN,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match *self {
+            MatmulKernel::Xpulp8 => "mmul-xpulp-8b".into(),
+            MatmulKernel::Nn { prec } => format!("mmul-nn-{}b", prec.bits()),
+            MatmulKernel::MacLoad { prec } => {
+                format!("mmul-macload-{}b", prec.bits())
+            }
+            MatmulKernel::UnpackBaseline { prec } => {
+                format!("mmul-unpack-{}b", prec.bits())
+            }
+        }
+    }
+}
+
+/// Problem description.
+#[derive(Debug, Clone, Copy)]
+pub struct MatmulProblem {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub kernel: MatmulKernel,
+    pub cores: usize,
+}
+
+/// Addresses of the placed operands.
+#[derive(Debug, Clone)]
+pub struct BuiltMatmul {
+    pub prog: Program,
+    pub a_addr: u32,
+    pub b_addr: u32,
+    pub c_addr: u32,
+    pub problem: MatmulProblem,
+}
+
+// Register map (see module docs / builder code):
+const P_A: [u8; 4] = [1, 2, 3, 4];
+const P_B: [u8; 4] = [5, 6, 7, 8];
+const R_PC: u8 = 9; // C pointer
+const R_ACC0: u8 = 10; // accumulators x10..x25
+const R_ROW: u8 = 26;
+const R_COL: u8 = 27;
+const R_KCNT: u8 = 28;
+const R_T0: u8 = 29;
+const R_T1: u8 = 30;
+const R_ABASE: u8 = 31;
+// unpack-baseline scratch (overlaps upper accums, which it does not use):
+const R_AV: [u8; 4] = [18, 19, 20, 21]; // loaded A words
+const R_BV: [u8; 2] = [22, 23]; // loaded B words
+const R_MASKV: u8 = 24; // per-lane shift vector for pv.sra.b
+const R_U0: u8 = 25; // unpack scratch
+
+impl MatmulProblem {
+    /// MAC count of the whole problem.
+    pub fn macs(&self) -> u64 {
+        (self.m * self.n * self.k) as u64
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.macs() * 2
+    }
+
+    fn rows_per_core(&self) -> usize {
+        self.m / self.cores
+    }
+
+    fn col_block(&self) -> usize {
+        match self.kernel {
+            MatmulKernel::MacLoad { .. } => 4,
+            _ => 2,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        let lanes = self.kernel.prec().lanes() as usize;
+        ensure!(self.m % (4 * self.cores) == 0,
+                "M={} must divide into 4-row blocks per core", self.m);
+        ensure!(self.n % self.col_block() == 0, "N={} vs col block", self.n);
+        ensure!(self.k % lanes == 0, "K={} not divisible by lanes", self.k);
+        ensure!(self.k / lanes >= 2, "K too small for software pipeline");
+        if let MatmulKernel::UnpackBaseline { prec } = self.kernel {
+            ensure!(
+                matches!(prec, Prec::B4 | Prec::B2),
+                "unpack baseline models 4/2-bit data on 8-bit hardware"
+            );
+        }
+        Ok(())
+    }
+
+    /// Build the SPMD program and allocate operand storage.
+    pub fn build(&self, alloc: &mut TcdmAlloc) -> Result<BuiltMatmul> {
+        self.validate()?;
+        let prec = self.kernel.prec();
+        let row_words = packed_words(self.k, prec);
+        // +8 pad words: the software pipeline prefetches one word past the
+        // last row (MAC&LOAD refresh / post-increment loads).
+        let a_addr = alloc.alloc(self.m * row_words + 8)?;
+        let b_addr = alloc.alloc(self.n * row_words + 8)?;
+        let c_addr = alloc.alloc(self.m * self.n)?;
+        let prog = match self.kernel {
+            MatmulKernel::MacLoad { prec } => {
+                self.build_macload(a_addr, b_addr, c_addr, prec)?
+            }
+            MatmulKernel::Xpulp8 => {
+                self.build_dotp(a_addr, b_addr, c_addr, Prec::B8, false)?
+            }
+            MatmulKernel::Nn { prec } => {
+                self.build_dotp(a_addr, b_addr, c_addr, prec, false)?
+            }
+            MatmulKernel::UnpackBaseline { prec } => {
+                self.build_dotp(a_addr, b_addr, c_addr, prec, true)?
+            }
+        };
+        Ok(BuiltMatmul { prog, a_addr, b_addr, c_addr, problem: *self })
+    }
+
+    /// Common prologue: compute this core's A-base (x31) and C pointer
+    /// (x9), initialize loop counters.
+    fn prologue(
+        &self,
+        b: &mut ProgramBuilder,
+        a_addr: u32,
+        c_addr: u32,
+        row_bytes: i32,
+    ) {
+        let rpc = self.rows_per_core() as i32;
+        b.emit(Instr::CoreId { rd: R_T0 });
+        b.emit(Instr::Li { rd: R_T1, imm: rpc * row_bytes });
+        b.emit(Instr::Alu { op: AluOp::Mul, rd: R_T1, rs1: R_T0, rs2: R_T1 });
+        b.emit(Instr::Li { rd: R_ABASE, imm: a_addr as i32 });
+        b.emit(Instr::Alu {
+            op: AluOp::Add,
+            rd: R_ABASE,
+            rs1: R_ABASE,
+            rs2: R_T1,
+        });
+        b.emit(Instr::Li { rd: R_T1, imm: rpc * self.n as i32 * 4 });
+        b.emit(Instr::Alu { op: AluOp::Mul, rd: R_T1, rs1: R_T0, rs2: R_T1 });
+        b.emit(Instr::Li { rd: R_PC, imm: c_addr as i32 });
+        b.emit(Instr::Alu { op: AluOp::Add, rd: R_PC, rs1: R_PC, rs2: R_T1 });
+        b.emit(Instr::Li { rd: R_ROW, imm: (self.rows_per_core() / 4) as i32 });
+    }
+
+    /// The MAC&LOAD kernel (Fig. 2c right): 4×4 blocking, NN-RF operand
+    /// staging, 17-instruction inner loop.
+    fn build_macload(
+        &self,
+        a_addr: u32,
+        b_addr: u32,
+        c_addr: u32,
+        prec: Prec,
+    ) -> Result<Program> {
+        let lanes = prec.lanes() as usize;
+        let row_bytes = (self.k / lanes * 4) as i32;
+        let kwords = (self.k / lanes) as i32;
+        let n = self.n as i32;
+        let mut b = ProgramBuilder::new("matmul_macload", IsaLevel::XpulpNN);
+        // acc(r, c) register: x10 + 4c + r
+        let acc = |r: u8, c: u8| R_ACC0 + 4 * c + r;
+
+        self.prologue(&mut b, a_addr, c_addr, row_bytes);
+        b.emit(Instr::Li { rd: R_KCNT, imm: kwords });
+
+        let row_loop = b.label();
+        b.bind(row_loop);
+        // p_b[i] = B + i*row_bytes
+        b.emit(Instr::Li { rd: R_T0, imm: b_addr as i32 });
+        for (i, &pb) in P_B.iter().enumerate() {
+            b.emit(Instr::AluImm {
+                op: AluOp::Add,
+                rd: pb,
+                rs1: R_T0,
+                imm: i as i32 * row_bytes,
+            });
+        }
+        b.emit(Instr::Li { rd: R_COL, imm: n / 4 });
+
+        let col_loop = b.label();
+        b.bind(col_loop);
+        // p_a[r] = p_a_base + r*row_bytes
+        for (r, &pa) in P_A.iter().enumerate() {
+            b.emit(Instr::AluImm {
+                op: AluOp::Add,
+                rd: pa,
+                rs1: R_ABASE,
+                imm: r as i32 * row_bytes,
+            });
+        }
+        // NN-RF warm-up: word 0 of the four A rows and of B col c0
+        for (r, &pa) in P_A.iter().enumerate() {
+            b.emit(Instr::NnLoad { nn_rd: r as u8, ptr: pa, post_inc: 4 });
+        }
+        b.emit(Instr::NnLoad { nn_rd: 4, ptr: P_B[0], post_inc: 4 });
+        // zero the 16 accumulators
+        for c in 0..4u8 {
+            for r in 0..4u8 {
+                b.emit(Instr::Li { rd: acc(r, c), imm: 0 });
+            }
+        }
+        // ---- the 17-instruction inner loop (16 mlsdotp + 1 load) ----
+        let (ls, le) = (b.label(), b.label());
+        b.hw_loop(0, R_KCNT, ls, le);
+        b.bind(ls);
+        let ml = |bq: u8, // nn register holding the current B word
+                  c: u8,
+                  r: u8,
+                  refresh: Option<(u8, u8)>| {
+            Instr::MlSdotp {
+                prec,
+                sign: Sign::SS,
+                rd: acc(r, c),
+                na: r, // nn0..nn3 = A rows
+                nb: bq,
+                refresh,
+            }
+        };
+        // col 0 from nn4; first slot prefetches B[c1] into nn5
+        b.emit(ml(4, 0, 0, Some((5, P_B[1]))));
+        b.emit(ml(4, 0, 1, None));
+        b.emit(ml(4, 0, 2, None));
+        b.emit(ml(4, 0, 3, None));
+        // col 1 from nn5; prefetch B[c2] into nn4
+        b.emit(ml(5, 1, 0, Some((4, P_B[2]))));
+        b.emit(ml(5, 1, 1, None));
+        b.emit(ml(5, 1, 2, None));
+        b.emit(ml(5, 1, 3, None));
+        // col 2 from nn4; prefetch B[c3] into nn5
+        b.emit(ml(4, 2, 0, Some((5, P_B[3]))));
+        b.emit(ml(4, 2, 1, None));
+        b.emit(ml(4, 2, 2, None));
+        b.emit(ml(4, 2, 3, None));
+        // col 3 from nn5; refresh the four A rows for the next k step
+        b.emit(ml(5, 3, 0, Some((0, P_A[0]))));
+        b.emit(ml(5, 3, 1, Some((1, P_A[1]))));
+        b.emit(ml(5, 3, 2, Some((2, P_A[2]))));
+        b.emit(ml(5, 3, 3, Some((3, P_A[3]))));
+        // the single explicit load: B[c0] of the next k step
+        b.emit(Instr::NnLoad { nn_rd: 4, ptr: P_B[0], post_inc: 4 });
+        b.bind(le); // loop body ends at the NnLoad above
+        // ---- end inner loop ----
+        // store the 4x4 accumulator block
+        for r in 0..4u8 {
+            for c in 0..4u8 {
+                b.emit(Instr::Sw {
+                    rs: acc(r, c),
+                    base: R_PC,
+                    offset: (r as i32 * n + c as i32) * 4,
+                    post_inc: 0,
+                });
+            }
+        }
+        // advance B pointers to the next 4-column block. p_b0 advanced
+        // row_bytes + 4 (warm-up load + per-iteration prefetch), the rest
+        // exactly row_bytes.
+        b.emit(Instr::AluImm {
+            op: AluOp::Add,
+            rd: P_B[0],
+            rs1: P_B[0],
+            imm: 3 * row_bytes - 4,
+        });
+        for &pb in &P_B[1..] {
+            b.emit(Instr::AluImm {
+                op: AluOp::Add,
+                rd: pb,
+                rs1: pb,
+                imm: 3 * row_bytes,
+            });
+        }
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: R_PC, rs1: R_PC, imm: 16 });
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: R_COL, rs1: R_COL, imm: -1 });
+        b.branch(Cond::Ne, R_COL, 0, col_loop);
+        // next 4-row block
+        b.emit(Instr::AluImm {
+            op: AluOp::Add,
+            rd: R_ABASE,
+            rs1: R_ABASE,
+            imm: 4 * row_bytes,
+        });
+        b.emit(Instr::AluImm {
+            op: AluOp::Add,
+            rd: R_PC,
+            rs1: R_PC,
+            imm: 3 * n * 4,
+        });
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: R_ROW, rs1: R_ROW, imm: -1 });
+        b.branch(Cond::Ne, R_ROW, 0, row_loop);
+        b.build()
+    }
+
+    /// Shared builder for the explicit-load dotp kernels (Xpulp8, Nn,
+    /// UnpackBaseline): 4×2 blocking, 8 accumulators.
+    fn build_dotp(
+        &self,
+        a_addr: u32,
+        b_addr: u32,
+        c_addr: u32,
+        prec: Prec,
+        unpack: bool,
+    ) -> Result<Program> {
+        let lanes = prec.lanes() as usize;
+        let row_bytes = (self.k / lanes * 4) as i32;
+        let kwords = (self.k / lanes) as i32;
+        let n = self.n as i32;
+        let isa = if unpack { IsaLevel::Xpulp } else { self.kernel.isa() };
+        let name = self.kernel.name();
+        let mut b = ProgramBuilder::new(&name, isa);
+        let acc = |r: u8, c: u8| R_ACC0 + 2 * r + c; // x10..x17
+
+        self.prologue(&mut b, a_addr, c_addr, row_bytes);
+        b.emit(Instr::Li { rd: R_KCNT, imm: kwords });
+        if unpack {
+            // per-lane shift counts for pv.sra.b: 4 for nibbles, 6 crumbs
+            let s = if prec == Prec::B4 { 4 } else { 6 };
+            b.emit(Instr::Li {
+                rd: R_MASKV,
+                imm: i32::from_ne_bytes([s, s, s, s]),
+            });
+        }
+
+        let row_loop = b.label();
+        b.bind(row_loop);
+        b.emit(Instr::Li { rd: R_T0, imm: b_addr as i32 });
+        for (i, &pb) in P_B[..2].iter().enumerate() {
+            b.emit(Instr::AluImm {
+                op: AluOp::Add,
+                rd: pb,
+                rs1: R_T0,
+                imm: i as i32 * row_bytes,
+            });
+        }
+        b.emit(Instr::Li { rd: R_COL, imm: n / 2 });
+
+        let col_loop = b.label();
+        b.bind(col_loop);
+        for (r, &pa) in P_A.iter().enumerate() {
+            b.emit(Instr::AluImm {
+                op: AluOp::Add,
+                rd: pa,
+                rs1: R_ABASE,
+                imm: r as i32 * row_bytes,
+            });
+        }
+        for c in 0..2u8 {
+            for r in 0..4u8 {
+                b.emit(Instr::Li { rd: acc(r, c), imm: 0 });
+            }
+        }
+        let (ls, le) = (b.label(), b.label());
+        b.hw_loop(0, R_KCNT, ls, le);
+        b.bind(ls);
+        // loads (post-increment walks the rows)
+        for (r, &pa) in P_A.iter().enumerate() {
+            b.emit(Instr::Lw {
+                rd: R_AV[r],
+                base: pa,
+                offset: 0,
+                post_inc: 4,
+            });
+        }
+        b.emit(Instr::Lw { rd: R_BV[0], base: P_B[0], offset: 0, post_inc: 4 });
+        // last load placed just before first use would stall; keep order
+        b.emit(Instr::Lw { rd: R_BV[1], base: P_B[1], offset: 0, post_inc: 4 });
+        if !unpack {
+            for r in 0..4u8 {
+                for c in 0..2u8 {
+                    b.emit(Instr::Sdotp {
+                        prec,
+                        sign: Sign::SS,
+                        rd: acc(r, c),
+                        rs1: R_AV[r as usize],
+                        rs2: R_BV[c as usize],
+                    });
+                }
+            }
+        } else {
+            self.emit_unpacked_dotps(&mut b, prec, &acc);
+        }
+        b.bind(le); // hw-loop body ends at the previous instruction
+        for r in 0..4u8 {
+            for c in 0..2u8 {
+                b.emit(Instr::Sw {
+                    rs: acc(r, c),
+                    base: R_PC,
+                    offset: (r as i32 * n + c as i32) * 4,
+                    post_inc: 0,
+                });
+            }
+        }
+        for &pb in &P_B[..2] {
+            b.emit(Instr::AluImm {
+                op: AluOp::Add,
+                rd: pb,
+                rs1: pb,
+                imm: row_bytes,
+            });
+        }
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: R_PC, rs1: R_PC, imm: 8 });
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: R_COL, rs1: R_COL, imm: -1 });
+        b.branch(Cond::Ne, R_COL, 0, col_loop);
+        b.emit(Instr::AluImm {
+            op: AluOp::Add,
+            rd: R_ABASE,
+            rs1: R_ABASE,
+            imm: 4 * row_bytes,
+        });
+        b.emit(Instr::AluImm {
+            op: AluOp::Add,
+            rd: R_PC,
+            rs1: R_PC,
+            imm: 3 * n * 4,
+        });
+        b.emit(Instr::AluImm { op: AluOp::Add, rd: R_ROW, rs1: R_ROW, imm: -1 });
+        b.branch(Cond::Ne, R_ROW, 0, row_loop);
+        b.build()
+    }
+
+    /// Unpack-then-dotp sequence for the plain-Xpulp sub-byte baseline.
+    ///
+    /// Nibbles: word → (evens, odds) B8 words via `sll` + per-lane
+    /// arithmetic shifts; crumbs: word → 4 B8 words. Both A words are
+    /// unpacked in place (scratch R_U0), then 8-bit sdotps accumulate.
+    /// All plane orders match between A and B, so dot products are
+    /// preserved.
+    fn emit_unpacked_dotps(
+        &self,
+        b: &mut ProgramBuilder,
+        prec: Prec,
+        acc: &dyn Fn(u8, u8) -> u8,
+    ) {
+        let planes: &[u32] = match prec {
+            Prec::B4 => &[4, 0],  // sll amounts producing evens/odds
+            Prec::B2 => &[6, 4, 2, 0],
+            _ => unreachable!(),
+        };
+        // For every (A row, B col) pair and every plane: unpack the plane
+        // of both words and sdotp.b. Unpacked planes of B are recomputed
+        // per row (register pressure: only R_U0/R_T0/R_T1 scratch), which
+        // is exactly the data-manipulation overhead the paper describes.
+        for r in 0..4u8 {
+            for c in 0..2u8 {
+                for &sh in planes {
+                    // plane of A row
+                    let ua = R_U0;
+                    if sh != 0 {
+                        b.emit(Instr::AluImm {
+                            op: AluOp::Sll,
+                            rd: ua,
+                            rs1: R_AV[r as usize],
+                            imm: sh as i32,
+                        });
+                        b.emit(Instr::VAlu {
+                            op: VAluOp::Sra,
+                            prec: Prec::B8,
+                            rd: ua,
+                            rs1: ua,
+                            rs2: R_MASKV,
+                        });
+                    } else {
+                        b.emit(Instr::VAlu {
+                            op: VAluOp::Sra,
+                            prec: Prec::B8,
+                            rd: ua,
+                            rs1: R_AV[r as usize],
+                            rs2: R_MASKV,
+                        });
+                    }
+                    // plane of B col
+                    let ub = R_T0;
+                    if sh != 0 {
+                        b.emit(Instr::AluImm {
+                            op: AluOp::Sll,
+                            rd: ub,
+                            rs1: R_BV[c as usize],
+                            imm: sh as i32,
+                        });
+                        b.emit(Instr::VAlu {
+                            op: VAluOp::Sra,
+                            prec: Prec::B8,
+                            rd: ub,
+                            rs1: ub,
+                            rs2: R_MASKV,
+                        });
+                    } else {
+                        b.emit(Instr::VAlu {
+                            op: VAluOp::Sra,
+                            prec: Prec::B8,
+                            rd: ub,
+                            rs1: R_BV[c as usize],
+                            rs2: R_MASKV,
+                        });
+                    }
+                    b.emit(Instr::Sdotp {
+                        prec: Prec::B8,
+                        sign: Sign::SS,
+                        rd: acc(r, c),
+                        rs1: ua,
+                        rs2: ub,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Place operands, run on a cluster, return (C, stats). `a` is (M, K)
+    /// row-major, `b` is (N, K) row-major (i.e. Bᵀ); values must fit the
+    /// kernel precision.
+    pub fn run_with(
+        &self,
+        cfg: ClusterConfig,
+        a: &[i32],
+        b: &[i32],
+    ) -> Result<(Vec<i32>, RunStats)> {
+        ensure!(a.len() == self.m * self.k && b.len() == self.n * self.k);
+        let half = 1i32 << (self.kernel.prec().bits() - 1);
+        if a.iter().chain(b).any(|&v| v < -half || v >= half) {
+            bail!("operand out of {}-bit range", self.kernel.prec().bits());
+        }
+        ensure!(cfg.cores == self.cores, "config/core mismatch");
+        let mut alloc = TcdmAlloc::new();
+        let built = self.build(&mut alloc)?;
+        let mut cl = Cluster::new(cfg);
+        let prec = self.kernel.prec();
+        write_packed(&mut cl.mem, built.a_addr, a, prec);
+        write_packed(&mut cl.mem, built.b_addr, b, prec);
+        cl.load_spmd(built.prog);
+        let stats = cl.run()?;
+        let c = read_i32(&cl.mem, built.c_addr, self.m * self.n);
+        Ok((c, stats))
+    }
+}
+
+/// Host oracle: C[M,N] = A[M,K] · Bᵀ[N,K] in i32.
+pub fn matmul_reference(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[i32],
+    b: &[i32],
+) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0i64;
+            for kk in 0..k {
+                s += a[i * k + kk] as i64 * b[j * k + kk] as i64;
+            }
+            c[i * n + j] = s as i32;
+        }
+    }
+    c
+}
+
+/// Random operands within the precision range.
+pub fn random_operands(
+    m: usize,
+    n: usize,
+    k: usize,
+    prec: Prec,
+    seed: u64,
+) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = crate::util::Rng::new(seed);
+    let half = 1i32 << (prec.bits() - 1);
+    let a = (0..m * k).map(|_| rng.range_i32(-half, half)).collect();
+    let b = (0..n * k).map(|_| rng.range_i32(-half, half)).collect();
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(kernel: MatmulKernel, m: usize, n: usize, k: usize, cores: usize) {
+        let p = MatmulProblem { m, n, k, kernel, cores };
+        let (a, b) = random_operands(m, n, k, kernel.prec(), 42);
+        let mut cfg = ClusterConfig::default();
+        cfg.cores = cores;
+        let (c, stats) = p.run_with(cfg, &a, &b).unwrap();
+        assert_eq!(c, matmul_reference(m, n, k, &a, &b), "{kernel:?}");
+        assert_eq!(stats.total.macs, p.macs(), "{kernel:?} MAC count");
+    }
+
+    #[test]
+    fn xpulp8_correct_single_core() {
+        check(MatmulKernel::Xpulp8, 4, 4, 16, 1);
+    }
+
+    #[test]
+    fn xpulp8_correct_16_cores() {
+        check(MatmulKernel::Xpulp8, 64, 16, 32, 16);
+    }
+
+    #[test]
+    fn nn_nibble_and_crumb_correct() {
+        check(MatmulKernel::Nn { prec: Prec::B4 }, 16, 8, 32, 4);
+        check(MatmulKernel::Nn { prec: Prec::B2 }, 16, 8, 64, 4);
+    }
+
+    #[test]
+    fn macload_correct_all_precisions() {
+        check(MatmulKernel::MacLoad { prec: Prec::B8 }, 16, 8, 32, 4);
+        check(MatmulKernel::MacLoad { prec: Prec::B4 }, 16, 8, 32, 4);
+        check(MatmulKernel::MacLoad { prec: Prec::B2 }, 16, 8, 32, 4);
+        check(MatmulKernel::MacLoad { prec: Prec::B8 }, 64, 32, 64, 16);
+    }
+
+    #[test]
+    fn unpack_baseline_correct() {
+        check(MatmulKernel::UnpackBaseline { prec: Prec::B4 }, 8, 4, 32, 2);
+        check(MatmulKernel::UnpackBaseline { prec: Prec::B2 }, 8, 4, 32, 2);
+    }
+
+    /// Paper §III-C1: the MAC&LOAD inner loop keeps the DOTP unit ~94%
+    /// utilized (16 of every 17 issue slots). Measured over a K large
+    /// enough to amortize block overheads.
+    #[test]
+    fn macload_dotp_utilization() {
+        let p = MatmulProblem {
+            m: 16,
+            n: 8,
+            k: 512,
+            kernel: MatmulKernel::MacLoad { prec: Prec::B8 },
+            cores: 1,
+        };
+        let (a, b) = random_operands(16, 8, 512, Prec::B8, 1);
+        let (_, stats) = p.run_with(ClusterConfig::soc_controller(), &a, &b)
+            .unwrap();
+        let util = stats.dotp_utilization();
+        assert!(util > 0.88, "DOTP utilization {util:.3} (paper: 0.94)");
+    }
+
+    /// Paper §III-C1: MAC&LOAD boosts matmul throughput by up to ~67%
+    /// over the explicit-load kernel.
+    #[test]
+    fn macload_speedup_over_baseline() {
+        let run = |kernel| {
+            let p = MatmulProblem { m: 64, n: 32, k: 64, kernel, cores: 16 };
+            let (a, b) = random_operands(64, 32, 64, Prec::B8, 3);
+            let (_, stats) =
+                p.run_with(ClusterConfig::default(), &a, &b).unwrap();
+            p.ops() as f64 / stats.cycles as f64
+        };
+        let base = run(MatmulKernel::Xpulp8);
+        let ml = run(MatmulKernel::MacLoad { prec: Prec::B8 });
+        let speedup = ml / base;
+        assert!(
+            (1.4..2.0).contains(&speedup),
+            "M&L speedup {speedup:.2} (paper: ~1.67)"
+        );
+    }
+
+    /// Paper §III-C1: 4-bit and 2-bit matmuls need ~6x/9x fewer
+    /// instructions than the Xpulp unpack baseline. Our optimized unpack
+    /// baseline lands lower (see EXPERIMENTS.md); assert the ordering and
+    /// magnitude band.
+    #[test]
+    fn instruction_reduction_vs_unpack_baseline() {
+        let count = |kernel: MatmulKernel| {
+            let p = MatmulProblem { m: 8, n: 4, k: 64, kernel, cores: 1 };
+            let (a, b) = random_operands(8, 4, 64, kernel.prec(), 5);
+            let (_, stats) =
+                p.run_with(ClusterConfig::soc_controller(), &a, &b).unwrap();
+            stats.total.instrs as f64
+        };
+        let r4 = count(MatmulKernel::UnpackBaseline { prec: Prec::B4 })
+            / count(MatmulKernel::Nn { prec: Prec::B4 });
+        let r2 = count(MatmulKernel::UnpackBaseline { prec: Prec::B2 })
+            / count(MatmulKernel::Nn { prec: Prec::B2 });
+        assert!(r4 > 2.0, "4-bit instruction ratio {r4:.1}");
+        assert!(r2 > 3.5, "2-bit instruction ratio {r2:.1}");
+        assert!(r2 > r4, "2-bit saves more than 4-bit");
+    }
+
+    /// 2-bit MAC&LOAD on 16 cores approaches the paper's 180 Gop/s at
+    /// 470 MHz => ~383 ops/cycle.
+    #[test]
+    fn crumb_macload_throughput() {
+        let p = MatmulProblem {
+            m: 64,
+            n: 32,
+            k: 128,
+            kernel: MatmulKernel::MacLoad { prec: Prec::B2 },
+            cores: 16,
+        };
+        let (a, b) = random_operands(64, 32, 128, Prec::B2, 7);
+        let (_, stats) = p.run_with(ClusterConfig::default(), &a, &b).unwrap();
+        let opc = p.ops() as f64 / stats.cycles as f64;
+        assert!(
+            (300.0..440.0).contains(&opc),
+            "2-bit M&L {opc:.0} ops/cycle (paper ~383 at 470 MHz)"
+        );
+    }
+}

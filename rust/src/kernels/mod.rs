@@ -1,0 +1,28 @@
+//! Software kernel library for the RISC-V cluster (paper §II-A3: the
+//! optimized XpulpNN QNN/linear-algebra routines, here emitted through the
+//! [`crate::isa::ProgramBuilder`] instead of GCC builtins).
+//!
+//! Each kernel builder returns a SPMD [`crate::isa::Program`] plus a host
+//! descriptor that knows how to place inputs in TCDM and read results
+//! back, so tests can verify the ISS output against a plain Rust oracle —
+//! these kernels *execute*, they are not latency formulas.
+//!
+//! Inventory (paper §III-C1, Figs. 14–15):
+//! * [`matmul`] — parallel INT matmul: Xpulp 8-bit baseline, XpulpNN
+//!   nibble/crumb SIMD, MAC&LOAD variants (the Fig. 2c inner loop), and
+//!   the pulp-nn-style unpack baseline used for the 6×/9× instruction
+//!   comparisons.
+//! * [`fft`] — radix-2 complex FP32 FFT on 16 cores + 8 shared FPUs.
+//! * [`vecops`] — tensor add and data-marshaling kernels.
+//! * [`conv`] — direct 3×3 / 1×1 8-bit convolution + batch-norm on the
+//!   cores (the software path RBE is compared against in Fig. 14).
+
+pub mod conv;
+pub mod fft;
+pub mod layout;
+pub mod matmul;
+pub mod offload;
+pub mod vecops;
+
+pub use layout::TcdmAlloc;
+pub use matmul::{MatmulKernel, MatmulProblem};

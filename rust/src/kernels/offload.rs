@@ -1,0 +1,201 @@
+//! RBE offload driver kernel: the instruction sequence a RISC-V core
+//! executes to configure, commit and synchronize with an RBE job through
+//! the memory-mapped peripheral (paper §II-B4 / Fig. 4 timeline).
+
+use anyhow::Result;
+
+use crate::cluster::periph::{regs, RBE_PERIPH_BASE};
+use crate::isa::{AluOp, Cond, Instr, IsaLevel, Program, ProgramBuilder};
+use crate::rbe::{RbeJob, RbeMode};
+
+/// Build a driver program: core 0 programs the job registers, commits
+/// `jobs` back-to-back jobs (waiting for a free context when needed) and
+/// spins on STATUS_BUSY until all complete. Other cores go straight to
+/// halt (they would be running their own work on the chip).
+pub fn rbe_offload_program(job: &RbeJob, jobs: u32) -> Result<Program> {
+    job.validate()?;
+    let mut b = ProgramBuilder::new("rbe_offload", IsaLevel::Xpulp);
+    let done = b.label();
+    // only core 0 drives the peripheral
+    b.emit(Instr::CoreId { rd: 5 });
+    b.branch(Cond::Ne, 5, 0, done);
+
+    let base = RBE_PERIPH_BASE as i32;
+    let fields: [(u32, u32); 9] = [
+        (regs::MODE, matches!(job.mode, RbeMode::Conv1x1) as u32),
+        (regs::H_OUT, job.h_out as u32),
+        (regs::W_OUT, job.w_out as u32),
+        (regs::K_IN, job.k_in as u32),
+        (regs::K_OUT, job.k_out as u32),
+        (regs::STRIDE, job.stride as u32),
+        (regs::W_BITS, job.w_bits as u32),
+        (regs::I_BITS, job.i_bits as u32),
+        (regs::O_BITS, job.o_bits as u32),
+    ];
+    b.emit(Instr::Li { rd: 6, imm: base });
+    for (off, val) in fields {
+        b.emit(Instr::Li { rd: 7, imm: val as i32 });
+        b.emit(Instr::Sw { rs: 7, base: 6, offset: off as i32 * 4, post_inc: 0 });
+    }
+    // commit loop: wait for a free context, then commit
+    b.emit(Instr::Li { rd: 8, imm: jobs as i32 });
+    let commit_top = b.label();
+    let ctx_poll = b.label();
+    b.bind(commit_top);
+    b.bind(ctx_poll);
+    b.emit(Instr::Lw {
+        rd: 9,
+        base: 6,
+        offset: regs::COMMIT as i32 * 4,
+        post_inc: 0,
+    });
+    b.branch(Cond::Eq, 9, 0, ctx_poll); // no free context yet
+    b.emit(Instr::Li { rd: 7, imm: 1 });
+    b.emit(Instr::Sw {
+        rs: 7,
+        base: 6,
+        offset: regs::COMMIT as i32 * 4,
+        post_inc: 0,
+    });
+    b.emit(Instr::AluImm { op: AluOp::Add, rd: 8, rs1: 8, imm: -1 });
+    b.branch(Cond::Ne, 8, 0, commit_top);
+    // wait for completion: spin on EVT_COUNT == jobs
+    let wait = b.label();
+    b.bind(wait);
+    b.emit(Instr::Lw {
+        rd: 9,
+        base: 6,
+        offset: regs::EVT_COUNT as i32 * 4,
+        post_inc: 0,
+    });
+    b.emit(Instr::Li { rd: 10, imm: jobs as i32 });
+    b.branch(Cond::Ltu, 9, 10, wait);
+    b.bind(done);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterConfig};
+    use crate::rbe::RbeTiming;
+
+    fn job() -> RbeJob {
+        RbeJob::conv3x3(6, 6, 32, 32, 1, 4, 4, 4).unwrap()
+    }
+
+    /// The driven offload takes (RBE job latency + driver overhead), and
+    /// the event counter reports completion.
+    #[test]
+    fn core_driven_offload_completes() {
+        let j = job();
+        let prog = rbe_offload_program(&j, 1).unwrap();
+        let mut cl = Cluster::new(ClusterConfig::soc_controller());
+        cl.load_spmd(prog);
+        let stats = cl.run().unwrap();
+        assert_eq!(cl.rbe.completed, 1);
+        let engine = RbeTiming::cycles(&j);
+        assert!(
+            stats.cycles >= engine,
+            "{} < engine {engine}",
+            stats.cycles
+        );
+        assert!(
+            stats.cycles < engine + 500,
+            "driver overhead too large: {} vs {engine}",
+            stats.cycles
+        );
+    }
+
+    /// Two jobs use both register-file contexts; the second commit does
+    /// not wait for the first job to finish (dual-context pipelining).
+    #[test]
+    fn dual_context_pipelines_two_jobs() {
+        let j = job();
+        let prog = rbe_offload_program(&j, 2).unwrap();
+        let mut cl = Cluster::new(ClusterConfig::soc_controller());
+        cl.load_spmd(prog);
+        let stats = cl.run().unwrap();
+        assert_eq!(cl.rbe.completed, 2);
+        let engine = 2 * RbeTiming::cycles(&j);
+        assert!(stats.cycles >= engine);
+        assert!(stats.cycles < engine + 600);
+    }
+
+    /// While the RBE streams, the LIC loses bank slots: a memory-bound
+    /// 16-core kernel slows down during accelerator activity.
+    #[test]
+    fn rbe_activity_steals_tcdm_bandwidth() {
+        use crate::cluster::TCDM_BASE;
+        // kernel: each core hammers loads; core 0 first offloads a job
+        let j = RbeJob::conv3x3(9, 9, 64, 64, 1, 8, 8, 8).unwrap();
+        let build = |with_rbe: bool| {
+            let mut b =
+                ProgramBuilder::new("bw_probe", IsaLevel::Xpulp);
+            let skip = b.label();
+            b.emit(Instr::CoreId { rd: 5 });
+            b.branch(Cond::Ne, 5, 0, skip);
+            if with_rbe {
+                let base = RBE_PERIPH_BASE as i32;
+                b.emit(Instr::Li { rd: 6, imm: base });
+                for (off, val) in [
+                    (regs::MODE, 0u32),
+                    (regs::H_OUT, 9),
+                    (regs::W_OUT, 9),
+                    (regs::K_IN, 64),
+                    (regs::K_OUT, 64),
+                    (regs::STRIDE, 1),
+                    (regs::W_BITS, 8),
+                    (regs::I_BITS, 8),
+                    (regs::O_BITS, 8),
+                ] {
+                    b.emit(Instr::Li { rd: 7, imm: val as i32 });
+                    b.emit(Instr::Sw {
+                        rs: 7,
+                        base: 6,
+                        offset: off as i32 * 4,
+                        post_inc: 0,
+                    });
+                }
+                b.emit(Instr::Li { rd: 7, imm: 1 });
+                b.emit(Instr::Sw {
+                    rs: 7,
+                    base: 6,
+                    offset: regs::COMMIT as i32 * 4,
+                    post_inc: 0,
+                });
+            }
+            b.bind(skip);
+            // all cores: load loop over private words
+            b.emit(Instr::CoreId { rd: 5 });
+            b.emit(Instr::AluImm { op: AluOp::Sll, rd: 5, rs1: 5, imm: 2 });
+            b.emit(Instr::AluImm {
+                op: AluOp::Add,
+                rd: 5,
+                rs1: 5,
+                imm: TCDM_BASE as i32,
+            });
+            b.emit(Instr::Li { rd: 8, imm: 2000 });
+            let (ls, le) = (b.label(), b.label());
+            b.hw_loop(0, 8, ls, le);
+            b.bind(ls);
+            b.emit(Instr::Lw { rd: 9, base: 5, offset: 0, post_inc: 0 });
+            b.bind(le);
+            b.build().unwrap()
+        };
+        let run = |with_rbe: bool| {
+            let mut cl = Cluster::new(ClusterConfig::default());
+            cl.load_spmd(build(with_rbe));
+            cl.run().unwrap()
+        };
+        let quiet = run(false);
+        let busy = run(true);
+        assert!(
+            busy.total.stall_conflict > quiet.total.stall_conflict + 1000,
+            "RBE streaming must cost the cores bank slots: {} vs {}",
+            busy.total.stall_conflict,
+            quiet.total.stall_conflict
+        );
+        let _ = j;
+    }
+}

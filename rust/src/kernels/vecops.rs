@@ -1,0 +1,171 @@
+//! Elementwise tensor kernels: 8-bit SIMD tensor addition and word-copy
+//! data marshaling (Fig. 14's "Add" task and Fig. 11's middle phase).
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::{Cluster, ClusterConfig, RunStats};
+use crate::isa::{AluOp, Instr, IsaLevel, Prec, Program, ProgramBuilder, VAluOp};
+use crate::kernels::layout::{read_i32, write_packed, TcdmAlloc};
+
+/// Build the SPMD 8-bit tensor-add kernel: `out = a + b` over `elems`
+/// int8 values (wrap-around lanes, as `pv.add.b`). `elems` must split
+/// into word-aligned equal per-core chunks.
+pub fn tensor_add_program(
+    a_addr: u32,
+    b_addr: u32,
+    out_addr: u32,
+    elems: usize,
+    cores: usize,
+) -> Result<Program> {
+    ensure!(elems % (4 * cores) == 0, "elems {elems} vs {cores} cores");
+    let words_per_core = (elems / 4 / cores) as i32;
+    let mut b = ProgramBuilder::new("tensor_add", IsaLevel::Xpulp);
+    // x1 = pa, x2 = pb, x3 = pout, x5 = count, x6/x7 data, x29/x30 tmp
+    b.emit(Instr::CoreId { rd: 29 });
+    b.emit(Instr::AluImm { op: AluOp::Sll, rd: 29, rs1: 29, imm: 2 }); // id*4
+    b.emit(Instr::Li { rd: 30, imm: words_per_core });
+    b.emit(Instr::Alu { op: AluOp::Mul, rd: 29, rs1: 29, rs2: 30 }); // byte off
+    for (reg, addr) in [(1u8, a_addr), (2, b_addr), (3, out_addr)] {
+        b.emit(Instr::Li { rd: reg, imm: addr as i32 });
+        b.emit(Instr::Alu { op: AluOp::Add, rd: reg, rs1: reg, rs2: 29 });
+    }
+    b.emit(Instr::Li { rd: 5, imm: words_per_core });
+    let (ls, le) = (b.label(), b.label());
+    b.hw_loop(0, 5, ls, le);
+    b.bind(ls);
+    b.emit(Instr::Lw { rd: 6, base: 1, offset: 0, post_inc: 4 });
+    b.emit(Instr::Lw { rd: 7, base: 2, offset: 0, post_inc: 4 });
+    b.emit(Instr::VAlu { op: VAluOp::Add, prec: Prec::B8, rd: 6, rs1: 6, rs2: 7 });
+    b.emit(Instr::Sw { rs: 6, base: 3, offset: 0, post_inc: 4 });
+    b.bind(le);
+    b.build()
+}
+
+/// Build a word-copy marshaling kernel (`memcpy`-like, one word per
+/// iteration per core).
+pub fn marshal_copy_program(
+    src_addr: u32,
+    dst_addr: u32,
+    words: usize,
+    cores: usize,
+) -> Result<Program> {
+    ensure!(words % cores == 0);
+    let per_core = (words / cores) as i32;
+    let mut b = ProgramBuilder::new("marshal_copy", IsaLevel::Xpulp);
+    b.emit(Instr::CoreId { rd: 29 });
+    b.emit(Instr::Li { rd: 30, imm: per_core * 4 });
+    b.emit(Instr::Alu { op: AluOp::Mul, rd: 29, rs1: 29, rs2: 30 });
+    for (reg, addr) in [(1u8, src_addr), (2, dst_addr)] {
+        b.emit(Instr::Li { rd: reg, imm: addr as i32 });
+        b.emit(Instr::Alu { op: AluOp::Add, rd: reg, rs1: reg, rs2: 29 });
+    }
+    b.emit(Instr::Li { rd: 5, imm: per_core });
+    let (ls, le) = (b.label(), b.label());
+    b.hw_loop(0, 5, ls, le);
+    b.bind(ls);
+    b.emit(Instr::Lw { rd: 6, base: 1, offset: 0, post_inc: 4 });
+    b.emit(Instr::Sw { rs: 6, base: 2, offset: 0, post_inc: 4 });
+    b.bind(le);
+    b.build()
+}
+
+/// Host driver: run tensor-add on `cores` cores and verify semantics.
+pub fn run_tensor_add(
+    cfg: ClusterConfig,
+    a: &[i32],
+    b: &[i32],
+) -> Result<(Vec<i32>, RunStats)> {
+    ensure!(a.len() == b.len());
+    let elems = a.len();
+    let mut alloc = TcdmAlloc::new();
+    let words = elems / 4;
+    let a_addr = alloc.alloc(words)?;
+    let b_addr = alloc.alloc(words)?;
+    let out_addr = alloc.alloc(words)?;
+    let prog = tensor_add_program(a_addr, b_addr, out_addr, elems, cfg.cores)?;
+    let mut cl = Cluster::new(cfg);
+    write_packed(&mut cl.mem, a_addr, a, Prec::B8);
+    write_packed(&mut cl.mem, b_addr, b, Prec::B8);
+    cl.load_spmd(prog);
+    let stats = cl.run()?;
+    // read packed bytes back as lanes
+    let out_words = cl.mem.read_l1(
+        crate::kernels::layout::word_of(out_addr),
+        words,
+    );
+    let mut out = Vec::with_capacity(elems);
+    for &w in out_words {
+        for i in 0..4 {
+            out.push(crate::isa::simd::lane_s(w, Prec::B8, i));
+        }
+    }
+    Ok((out, stats))
+}
+
+/// Host driver for the marshaling kernel.
+pub fn run_marshal_copy(
+    cfg: ClusterConfig,
+    data: &[i32],
+) -> Result<(Vec<i32>, RunStats)> {
+    let words = data.len();
+    let mut alloc = TcdmAlloc::new();
+    let src = alloc.alloc(words)?;
+    let dst = alloc.alloc(words)?;
+    let prog = marshal_copy_program(src, dst, words, cfg.cores)?;
+    let mut cl = Cluster::new(cfg);
+    crate::kernels::layout::write_words(
+        &mut cl.mem,
+        src,
+        &data.iter().map(|&v| v as u32).collect::<Vec<_>>(),
+    );
+    cl.load_spmd(prog);
+    let stats = cl.run()?;
+    Ok((read_i32(&cl.mem, dst, words), stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn tensor_add_correct() {
+        let mut rng = Rng::new(1);
+        let n = 9 * 9 * 64 - 9 * 9 * 64 % 64; // word+core aligned
+        let a: Vec<i32> = (0..n).map(|_| rng.range_i32(-64, 64)).collect();
+        let b: Vec<i32> = (0..n).map(|_| rng.range_i32(-63, 63)).collect();
+        let (out, stats) =
+            run_tensor_add(ClusterConfig::default(), &a, &b).unwrap();
+        for i in 0..n {
+            // wrap-around 8-bit add
+            let want = ((a[i] + b[i]) as i8) as i32;
+            assert_eq!(out[i], want, "elem {i}");
+        }
+        assert!(stats.cycles > 0);
+    }
+
+    #[test]
+    fn add_scales_with_cores() {
+        let mut rng = Rng::new(2);
+        let n = 4096;
+        let a: Vec<i32> = (0..n).map(|_| rng.range_i32(-8, 8)).collect();
+        let b: Vec<i32> = (0..n).map(|_| rng.range_i32(-8, 8)).collect();
+        let run = |cores| {
+            let mut cfg = ClusterConfig::default();
+            cfg.cores = cores;
+            run_tensor_add(cfg, &a, &b).unwrap().1.cycles
+        };
+        let c1 = run(1);
+        let c16 = run(16);
+        let speedup = c1 as f64 / c16 as f64;
+        assert!(speedup > 8.0, "16-core speedup {speedup:.1}");
+    }
+
+    #[test]
+    fn marshal_copies_exactly() {
+        let data: Vec<i32> = (0..2048).map(|i| i * 3 - 500).collect();
+        let (out, _) =
+            run_marshal_copy(ClusterConfig::default(), &data).unwrap();
+        assert_eq!(out, data);
+    }
+}

@@ -1,0 +1,40 @@
+//! # marsellus-sim
+//!
+//! A full-stack reproduction of the MARSELLUS AI-IoT SoC (Conti et al.,
+//! JSSC 2023): a heterogeneous RISC-V cluster with XpulpNN ISA extensions,
+//! the 2-to-8-bit Reconfigurable Binary Engine (RBE), and adaptive body
+//! biasing (ABB) — rebuilt as a three-layer Rust + JAX + Pallas system.
+//!
+//! Since the paper's artifact is silicon, the substrate here is a
+//! cycle-approximate simulator calibrated against the paper's measurements:
+//!
+//! * [`isa`] / [`core`] — RV32IMFC + Xpulp + XpulpNN instruction-set
+//!   simulator with the MAC&LOAD / NN-RF mechanism (paper §II-A).
+//! * [`cluster`] — 16-core cluster: TCDM banks, logarithmic interconnect,
+//!   shared FPUs, event unit, DMA (paper §II).
+//! * [`rbe`] — functional (bit-serial, Eqs. 1–2) + cycle model of the
+//!   Reconfigurable Binary Engine (paper §II-B).
+//! * [`power`] / [`abb`] — voltage/frequency/power model fitted to Fig. 9
+//!   and the OCM + ABB generator control loop (paper §II-C, Figs. 10–12).
+//! * [`dnn`] / [`mapping`] — DORY-style tiler and HAWQ mixed-precision
+//!   network descriptions (paper §IV).
+//! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas artifacts
+//!   (functional numerics of the DNN layers).
+//! * [`coordinator`] — top-level scheduler tying cores, RBE, DMA and ABB
+//!   together; the entry point for examples and the figure harness.
+
+pub mod abb;
+pub mod cluster;
+pub mod coordinator;
+pub mod core;
+pub mod dnn;
+pub mod figures;
+pub mod isa;
+pub mod kernels;
+pub mod mapping;
+pub mod metrics;
+pub mod power;
+pub mod rbe;
+pub mod runtime;
+pub mod soc;
+pub mod util;

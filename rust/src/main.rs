@@ -1,0 +1,102 @@
+//! `marsellus` CLI — leader entrypoint for the Marsellus SoC reproduction.
+//!
+//! ```text
+//! marsellus smoke   [--artifacts DIR]        check the PJRT runtime
+//! marsellus figure  <id>|all [--fast]        regenerate a paper figure
+//! marsellus infer   [--artifacts DIR] [--config uniform8|mixed]
+//!                   [--vdd V] [--seed N]     end-to-end ResNet-20
+//! marsellus list                             list figure ids
+//! ```
+
+use anyhow::{bail, Result};
+use marsellus::coordinator::{random_image, Coordinator};
+use marsellus::dnn::PrecisionConfig;
+use marsellus::power::OperatingPoint;
+use marsellus::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("smoke") => smoke(&args),
+        Some("figure") => figure(&args),
+        Some("infer") => infer(&args),
+        Some("list") => {
+            for id in marsellus::figures::ALL {
+                println!("{id}");
+            }
+            Ok(())
+        }
+        other => {
+            eprintln!(
+                "usage: marsellus <smoke|figure|infer|list> [options]"
+            );
+            bail!("unknown command {other:?}")
+        }
+    }
+}
+
+fn smoke(args: &Args) -> Result<()> {
+    let rt =
+        marsellus::runtime::Runtime::cpu(args.get_or("artifacts", "artifacts"))?;
+    println!("platform  = {}", rt.platform());
+    let names = rt.list_artifacts();
+    println!("artifacts = {}", names.len());
+    // compile + run one artifact end to end as the smoke signal
+    if let Some(name) = names.iter().find(|n| n.starts_with("avgpool")) {
+        let exe = rt.load(name)?;
+        let x = vec![1i32; 8 * 8 * 64];
+        let out = exe.execute_i32(&[marsellus::runtime::TensorArg::new(
+            x,
+            vec![8, 8, 64],
+        )])?;
+        println!("{name} -> {} outputs, first = {}", out[0].len(), out[0][0]);
+    }
+    println!("smoke OK");
+    Ok(())
+}
+
+fn figure(args: &Args) -> Result<()> {
+    let fast = args.flag("fast");
+    let Some(id) = args.positional.get(1) else {
+        bail!("figure id required; try `marsellus list`");
+    };
+    if id == "all" {
+        for id in marsellus::figures::ALL {
+            println!("{}\n", marsellus::figures::generate(id, fast)?);
+        }
+        return Ok(());
+    }
+    println!("{}", marsellus::figures::generate(id, fast)?);
+    Ok(())
+}
+
+fn infer(args: &Args) -> Result<()> {
+    let coord = Coordinator::new(args.get_or("artifacts", "artifacts"))?;
+    let config = match args.get_or("config", "mixed") {
+        "uniform8" => PrecisionConfig::Uniform8,
+        "mixed" => PrecisionConfig::Mixed,
+        other => bail!("unknown config {other}"),
+    };
+    let vdd = args.get_f64("vdd", 0.8)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let mut rng = marsellus::util::Rng::new(seed);
+    let i_bits = if config == PrecisionConfig::Uniform8 { 8 } else { 8 };
+    let image = random_image(i_bits, &mut rng);
+    let res = coord.infer_resnet20(
+        config,
+        &OperatingPoint::at_vdd(vdd),
+        &image,
+        seed,
+        &["stage3.b2.conv1"],
+    )?;
+    println!("logits        = {:?}", res.logits);
+    println!("cross-checked = {} layer(s) vs rust bit-serial model",
+             res.cross_checked);
+    println!(
+        "latency       = {:.0} µs   energy = {:.1} µJ   ({:.2} Top/s/W)",
+        res.report.total_latency_us(),
+        res.report.total_energy_uj(),
+        res.report.tops_per_w()
+    );
+    Ok(())
+}

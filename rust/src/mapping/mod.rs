@@ -1,0 +1,9 @@
+//! DORY-style deployment mapping (paper §IV, Figs. 16–18): tile each
+//! layer between the memory hierarchy levels, double-buffer DMA against
+//! compute, and roll up per-layer latency/energy.
+
+mod schedule;
+mod tiler;
+
+pub use schedule::{LayerReport, NetworkReport, Scheduler};
+pub use tiler::{LayerTiling, Tile, Tiler};

@@ -1,0 +1,400 @@
+//! Layer scheduling + latency/energy roll-up (paper Figs. 17–18).
+//!
+//! Every layer has three latency components, fully overlapped by double
+//! buffering (Fig. 18: "the tallest bar in each group defines the latency
+//! of a layer"):
+//! * **off-chip** — L3 (HyperRAM) → L2 weight streaming, analytical model;
+//! * **on-chip**  — L2 → L1 cluster-DMA traffic of the tile schedule;
+//! * **execute**  — RBE (or RISC-V) compute including tiling overhead.
+
+use anyhow::Result;
+
+use crate::cluster::{DmaEngine, IoDma};
+use crate::dnn::{Layer, LayerOp};
+use crate::power::{OperatingPoint, PowerModel, Workload};
+use crate::rbe::{layout, RbeJob, RbeTiming};
+
+use super::tiler::Tiler;
+
+/// Orchestration overhead per offloaded tile (job programming through the
+/// peripheral interconnect + event handling), cluster cycles.
+const TILE_OVERHEAD_CYCLES: u64 = 180;
+/// HyperRAM I/O energy, picojoules per byte (DDR interface + PHY).
+const IO_PJ_PER_BYTE: f64 = 120.0;
+
+/// Per-layer report (one group of bars in Figs. 17–18).
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub name: String,
+    pub op: LayerOp,
+    pub tiles: usize,
+    pub off_us: f64,
+    pub onchip_us: f64,
+    pub exec_us: f64,
+    pub latency_us: f64,
+    pub energy_uj: f64,
+    pub macs: u64,
+}
+
+impl LayerReport {
+    /// Which component dominates (Fig. 18's red/blue/green labels).
+    pub fn bound(&self) -> &'static str {
+        if self.off_us >= self.onchip_us && self.off_us >= self.exec_us {
+            "off-chip"
+        } else if self.onchip_us >= self.exec_us {
+            "on-chip"
+        } else {
+            "compute"
+        }
+    }
+}
+
+/// Whole-network roll-up.
+#[derive(Debug, Clone)]
+pub struct NetworkReport {
+    pub layers: Vec<LayerReport>,
+    pub op: OperatingPoint,
+}
+
+impl NetworkReport {
+    pub fn total_latency_us(&self) -> f64 {
+        self.layers.iter().map(|l| l.latency_us).sum()
+    }
+
+    pub fn total_energy_uj(&self) -> f64 {
+        self.layers.iter().map(|l| l.energy_uj).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// Average Top/s/W over the inference.
+    pub fn tops_per_w(&self) -> f64 {
+        let ops = self.total_macs() as f64 * 2.0;
+        let joules = self.total_energy_uj() * 1e-6;
+        ops / joules / 1e12
+    }
+
+    /// Average Gop/s.
+    pub fn gops(&self) -> f64 {
+        let ops = self.total_macs() as f64 * 2.0;
+        ops / (self.total_latency_us() * 1e-6) / 1e9
+    }
+}
+
+/// The scheduler: maps layers through the tiler and the timing models.
+pub struct Scheduler {
+    pub tiler: Tiler,
+    pub dma: DmaEngine,
+    pub io: IoDma,
+    pub power: PowerModel,
+    /// 16 cores assisting marshaling / sw layers.
+    pub cores: usize,
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Self {
+            tiler: Tiler::default(),
+            dma: DmaEngine::default(),
+            io: IoDma::default(),
+            power: PowerModel,
+            cores: 16,
+        }
+    }
+}
+
+impl Scheduler {
+    fn conv_job(l: &Layer) -> Result<RbeJob> {
+        let h = l.h_out();
+        Ok(match l.op {
+            LayerOp::Conv3x3 => RbeJob::conv3x3(
+                h, h, l.cin, l.cout, l.stride, l.w_bits, l.i_bits, l.o_bits,
+            )?,
+            LayerOp::Conv1x1 => RbeJob::conv1x1(
+                h, h, l.cin, l.cout, l.stride, l.w_bits, l.i_bits, l.o_bits,
+            )?,
+            LayerOp::Linear => RbeJob::conv1x1(
+                1, 1, l.cin, l.cout, 1, l.w_bits, l.i_bits, l.o_bits,
+            )?,
+            _ => anyhow::bail!("not an RBE layer"),
+        })
+    }
+
+    /// Schedule one layer at an operating point.
+    pub fn layer_report(
+        &self,
+        l: &Layer,
+        op: &OperatingPoint,
+    ) -> Result<LayerReport> {
+        let f = op.freq_mhz; // cycles -> us: /f
+        match l.op {
+            LayerOp::Conv3x3 | LayerOp::Conv1x1 => {
+                let tiling = self.tiler.tile(l)?;
+                // exec: one RBE job per tile
+                let mut exec_cycles = 0u64;
+                for t in &tiling.tiles {
+                    let job = RbeJob {
+                        h_out: t.rows,
+                        w_out: l.h_out(),
+                        k_out: t.kout,
+                        ..Self::conv_job(l)?
+                    };
+                    exec_cycles +=
+                        RbeTiming::cycles(&job) + TILE_OVERHEAD_CYCLES;
+                }
+                let dma_cycles: u64 = tiling
+                    .tiles
+                    .iter()
+                    .map(|t| {
+                        self.dma.cycles_for_bytes(t.in_bytes)
+                            + self.dma.cycles_for_bytes(t.out_bytes)
+                    })
+                    .sum();
+                // off-chip: weights stream from L3 once per layer; when
+                // the activation working set exceeds the L2 double-buffer
+                // budget (ImageNet-scale stage-1 layers), activations
+                // spill through L3 too (DORY's outermost tiling level)
+                let w_bytes = match l.op {
+                    LayerOp::Conv3x3 => {
+                        layout::weight3x3_bytes(l.cout, l.cin, l.w_bits)
+                    }
+                    _ => layout::weight1x1_bytes(l.cout, l.cin, l.w_bits),
+                };
+                let act_bytes = layout::act_bytes(l.h, l.h, l.cin, l.i_bits)
+                    + layout::act_bytes(
+                        l.h_out(),
+                        l.h_out(),
+                        l.cout,
+                        l.o_bits,
+                    );
+                let l3_bytes =
+                    if act_bytes > crate::cluster::L2_SIZE as u64 / 2 {
+                        w_bytes + act_bytes
+                    } else {
+                        w_bytes
+                    };
+                let off_us = self.io.us_for_bytes(l3_bytes);
+                let exec_us = exec_cycles as f64 / f;
+                let onchip_us = dma_cycles as f64 / f;
+                let latency_us = off_us.max(onchip_us).max(exec_us);
+                let job = Self::conv_job(l)?;
+                let duty =
+                    (RbeTiming::binconv_duty(&job) * 100.0).round() as u8;
+                let p_exec = self.power.total_mw(
+                    Workload::Rbe { duty_pct: duty },
+                    op,
+                );
+                let p_idle = self.power.total_mw(Workload::Idle, op);
+                let energy_uj = p_exec * 1e-3 * exec_us
+                    + p_idle * 1e-3 * (latency_us - exec_us)
+                    + w_bytes as f64 * IO_PJ_PER_BYTE * 1e-6;
+                Ok(LayerReport {
+                    name: l.name.clone(),
+                    op: l.op,
+                    tiles: tiling.tiles.len(),
+                    off_us,
+                    onchip_us,
+                    exec_us,
+                    latency_us,
+                    energy_uj,
+                    macs: l.macs(),
+                })
+            }
+            LayerOp::Linear => {
+                let job = Self::conv_job(l)?;
+                let exec_cycles =
+                    RbeTiming::cycles(&job) + TILE_OVERHEAD_CYCLES;
+                let w_bytes =
+                    layout::weight1x1_bytes(l.cout, l.cin, l.w_bits);
+                let off_us = self.io.us_for_bytes(w_bytes);
+                let exec_us = exec_cycles as f64 / f;
+                let onchip_us =
+                    self.dma.cycles_for_bytes(w_bytes) as f64 / f;
+                let latency_us = off_us.max(onchip_us).max(exec_us);
+                let p = self.power.total_mw(
+                    Workload::Rbe { duty_pct: 50 },
+                    op,
+                );
+                Ok(LayerReport {
+                    name: l.name.clone(),
+                    op: l.op,
+                    tiles: 1,
+                    off_us,
+                    onchip_us,
+                    exec_us,
+                    latency_us,
+                    energy_uj: p * 1e-3 * latency_us
+                        + w_bytes as f64 * IO_PJ_PER_BYTE * 1e-6,
+                    macs: l.macs(),
+                })
+            }
+            LayerOp::Add | LayerOp::AvgPool => {
+                // runs on the cores: ~1 cycle/lane-word/core + marshaling
+                // between the RBE bit-plane layout and the byte layout
+                let elems = l.out_elems().max(l.h * l.h * l.cin);
+                let words = elems.div_ceil(4) as u64;
+                let exec_cycles =
+                    words * 4 / self.cores as u64 + TILE_OVERHEAD_CYCLES;
+                let exec_us = exec_cycles as f64 / f;
+                // on-chip: operands move L2->L1 and the result back
+                let n_in = if l.op == LayerOp::Add { 2 } else { 1 };
+                let bytes =
+                    ((n_in * elems * l.i_bits + l.out_elems() * l.o_bits)
+                        / 8) as u64;
+                let onchip_us =
+                    self.dma.cycles_for_bytes(bytes) as f64 / f;
+                // off-chip: the residual shortcut tensor was evicted to
+                // L3 under L2 double-buffering pressure and streams back
+                // (the DORY policy behind Fig. 18's off-chip-bound adds)
+                let off_us = if l.op == LayerOp::Add {
+                    self.io.us_for_bytes(
+                        (l.h * l.h * l.cin * l.i_bits / 8) as u64,
+                    )
+                } else {
+                    0.0
+                };
+                let latency_us = off_us.max(onchip_us).max(exec_us);
+                let p = self.power.total_mw(Workload::Marshaling, op);
+                Ok(LayerReport {
+                    name: l.name.clone(),
+                    op: l.op,
+                    tiles: 1,
+                    off_us,
+                    onchip_us,
+                    exec_us,
+                    latency_us,
+                    energy_uj: p * 1e-3 * latency_us,
+                    macs: 0,
+                })
+            }
+        }
+    }
+
+    /// Schedule a whole network.
+    pub fn network_report(
+        &self,
+        layers: &[Layer],
+        op: &OperatingPoint,
+    ) -> Result<NetworkReport> {
+        let mut reports = Vec::with_capacity(layers.len());
+        for l in layers {
+            reports.push(self.layer_report(l, op)?);
+        }
+        Ok(NetworkReport { layers: reports, op: *op })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{resnet18_layers, resnet20_layers, PrecisionConfig};
+    use crate::power::OperatingPoint;
+
+    #[test]
+    fn resnet20_schedules_at_all_operating_points() {
+        let s = Scheduler::default();
+        for cfg in [PrecisionConfig::Uniform8, PrecisionConfig::Mixed] {
+            for vdd in [0.5, 0.65, 0.8] {
+                let rep = s
+                    .network_report(
+                        &resnet20_layers(cfg),
+                        &OperatingPoint::at_vdd(vdd),
+                    )
+                    .unwrap();
+                assert!(rep.total_latency_us() > 0.0);
+                assert!(rep.total_energy_uj() > 0.0);
+            }
+        }
+    }
+
+    /// Paper §IV: mixed precision saves ~68% of execution energy vs the
+    /// 8-bit configuration at nominal voltage (we assert a deep cut).
+    #[test]
+    fn mixed_precision_energy_saving() {
+        let s = Scheduler::default();
+        let op = OperatingPoint::nominal();
+        let e8 = s
+            .network_report(
+                &resnet20_layers(PrecisionConfig::Uniform8),
+                &op,
+            )
+            .unwrap()
+            .total_energy_uj();
+        let em = s
+            .network_report(&resnet20_layers(PrecisionConfig::Mixed), &op)
+            .unwrap()
+            .total_energy_uj();
+        let saving = 1.0 - em / e8;
+        assert!(
+            (0.50..0.80).contains(&saving),
+            "mixed saves {saving:.2} (paper: 0.68); e8={e8:.1} em={em:.1}"
+        );
+    }
+
+    /// Paper §IV energy *shape*: voltage scaling from 0.8 V to 0.5 V cuts
+    /// inference energy by ~2.3× (paper: 28 µJ → 12 µJ). Absolute values
+    /// sit ~1.8× above the paper because our RBE model charges full
+    /// 32-channel FSM granularity on the low-utilization stage-1 layers —
+    /// see EXPERIMENTS.md.
+    #[test]
+    fn resnet20_energy_anchors() {
+        let s = Scheduler::default();
+        let layers = resnet20_layers(PrecisionConfig::Mixed);
+        let e_nom = s
+            .network_report(&layers, &OperatingPoint::nominal())
+            .unwrap()
+            .total_energy_uj();
+        let e_low = s
+            .network_report(&layers, &OperatingPoint::at_vdd(0.5))
+            .unwrap()
+            .total_energy_uj();
+        let ratio = e_nom / e_low;
+        assert!(
+            (1.7..3.2).contains(&ratio),
+            "0.8V/0.5V energy ratio {ratio:.2} (paper ~2.3): \
+             {e_nom:.1} -> {e_low:.1} uJ"
+        );
+        // and the absolute magnitude is tens of microjoules, not hundreds
+        assert!(
+            (15.0..120.0).contains(&e_nom),
+            "mixed @0.8V: {e_nom:.1} uJ (paper ~28)"
+        );
+    }
+
+    /// Table II latency *shape* at the 0.5 V best-efficiency point:
+    /// ResNet-18/ResNet-20 ratio ~45× (paper: 48 ms / 1.05 ms), with
+    /// ResNet-18 inside the paper's magnitude band.
+    #[test]
+    fn table2_latency_anchors() {
+        let s = Scheduler::default();
+        let op = OperatingPoint::at_vdd(0.5);
+        let r20 = s
+            .network_report(&resnet20_layers(PrecisionConfig::Mixed), &op)
+            .unwrap();
+        let ms = r20.total_latency_us() / 1000.0;
+        assert!((0.8..4.0).contains(&ms), "ResNet-20 {ms:.2} ms (paper 1.05)");
+        let r18 = s.network_report(&resnet18_layers(), &op).unwrap();
+        let ms18 = r18.total_latency_us() / 1000.0;
+        assert!((25.0..75.0).contains(&ms18),
+                "ResNet-18 {ms18:.1} ms (paper 48)");
+        assert!(ms18 / ms > 10.0, "relative scale {}", ms18 / ms);
+    }
+
+    /// Fig. 18: the three bound classes all occur across the network.
+    #[test]
+    fn bound_classes_present() {
+        let s = Scheduler::default();
+        let rep = s
+            .network_report(
+                &resnet20_layers(PrecisionConfig::Mixed),
+                &OperatingPoint::at_vdd(0.5),
+            )
+            .unwrap();
+        let bounds: std::collections::HashSet<_> =
+            rep.layers.iter().map(|l| l.bound()).collect();
+        assert!(bounds.contains("compute"), "{bounds:?}");
+        assert!(bounds.len() >= 2, "{bounds:?}");
+    }
+}

@@ -1,0 +1,209 @@
+//! The tiler: split a layer into L1-resident chunks (paper Fig. 16).
+//!
+//! Strategy (as in DORY): keep weights for a K_out slice plus an input
+//! row band and the corresponding output band resident; all three
+//! buffers are double-buffered so the cluster DMA can prefetch tile i+1
+//! while RBE computes tile i. Tiles shrink first along K_out (to the
+//! RBE's 32-channel accumulator granularity), then along output rows (to
+//! the 3-row spatial granularity).
+
+use anyhow::{bail, Result};
+
+use crate::cluster::TCDM_SIZE;
+use crate::dnn::{Layer, LayerOp};
+use crate::rbe::layout;
+
+/// One tile of a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    /// Output rows covered.
+    pub rows: usize,
+    /// Output channels covered.
+    pub kout: usize,
+    /// Bytes DMA'd in for this tile (input band + weights when fresh).
+    pub in_bytes: u64,
+    /// Bytes DMA'd out (output band).
+    pub out_bytes: u64,
+    /// True if this tile needs its weight slice loaded (first row band
+    /// of each K_out slice).
+    pub loads_weights: bool,
+}
+
+/// Tiling decision for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerTiling {
+    pub tiles: Vec<Tile>,
+    /// Rows per (full) tile and K_out per tile chosen.
+    pub rows_per_tile: usize,
+    pub kout_per_tile: usize,
+    /// Peak L1 bytes used (both double-buffer halves).
+    pub l1_bytes: u64,
+}
+
+impl LayerTiling {
+    pub fn total_in_bytes(&self) -> u64 {
+        self.tiles.iter().map(|t| t.in_bytes).sum()
+    }
+
+    pub fn total_out_bytes(&self) -> u64 {
+        self.tiles.iter().map(|t| t.out_bytes).sum()
+    }
+}
+
+/// The tiler itself (holds the budget so tests can shrink it).
+#[derive(Debug, Clone)]
+pub struct Tiler {
+    /// Usable L1 bytes (leave headroom for stacks & normquant params).
+    pub l1_budget: u64,
+}
+
+impl Default for Tiler {
+    fn default() -> Self {
+        // 128 KiB minus 8 KiB of runtime reserve.
+        Self { l1_budget: TCDM_SIZE as u64 - 8 * 1024 }
+    }
+}
+
+impl Tiler {
+    /// Bytes of one candidate tile set (input band + weights + output
+    /// band), single-buffered.
+    fn tile_bytes(l: &Layer, rows: usize, kout: usize) -> u64 {
+        let h_out = l.h_out();
+        let ksz = if l.op == LayerOp::Conv3x3 { 3 } else { 1 };
+        let in_rows = (rows - 1) * l.stride + ksz;
+        let x = layout::act_bytes(in_rows, l.h, l.cin, l.i_bits);
+        let w = match l.op {
+            LayerOp::Conv3x3 => layout::weight3x3_bytes(kout, l.cin, l.w_bits),
+            _ => layout::weight1x1_bytes(kout, l.cin, l.w_bits),
+        };
+        let y = layout::act_bytes(rows.min(h_out), h_out, kout, l.o_bits);
+        x + w + y + layout::normquant_bytes(kout)
+    }
+
+    /// Decide the tiling for an RBE-mapped conv layer.
+    pub fn tile(&self, l: &Layer) -> Result<LayerTiling> {
+        if !l.op.on_rbe() || l.op == LayerOp::Linear {
+            bail!("tiler handles conv layers; got {:?}", l.op);
+        }
+        let h_out = l.h_out();
+        let mut kout = l.cout;
+        let mut rows = h_out;
+        // shrink kout first (32-channel steps), then rows (3-row steps),
+        // then below the 32-accumulator granularity (partial K_out tiles
+        // under-use the Accum banks but keep the weight slice small —
+        // needed by wide layers like ResNet-18 stage4)
+        while 2 * Self::tile_bytes(l, rows, kout) > self.l1_budget {
+            if kout > 32 {
+                kout = (kout / 2).max(32).div_ceil(32) * 32;
+            } else if rows > 3 {
+                rows = (rows / 2).max(3).div_ceil(3) * 3;
+            } else if kout > 8 {
+                kout /= 2;
+            } else {
+                bail!(
+                    "layer {} cannot fit TCDM even at minimum tile",
+                    l.name
+                );
+            }
+        }
+        let mut tiles = Vec::new();
+        let mut ko = 0;
+        while ko < l.cout {
+            let k = kout.min(l.cout - ko);
+            let mut r = 0;
+            while r < h_out {
+                let rr = rows.min(h_out - r);
+                let ksz = if l.op == LayerOp::Conv3x3 { 3 } else { 1 };
+                let in_rows = (rr - 1) * l.stride + ksz;
+                let mut in_bytes =
+                    layout::act_bytes(in_rows, l.h, l.cin, l.i_bits);
+                let loads_weights = r == 0;
+                if loads_weights {
+                    in_bytes += match l.op {
+                        LayerOp::Conv3x3 => {
+                            layout::weight3x3_bytes(k, l.cin, l.w_bits)
+                        }
+                        _ => layout::weight1x1_bytes(k, l.cin, l.w_bits),
+                    } + layout::normquant_bytes(k);
+                }
+                tiles.push(Tile {
+                    rows: rr,
+                    kout: k,
+                    in_bytes,
+                    out_bytes: layout::act_bytes(rr, h_out, k, l.o_bits),
+                    loads_weights,
+                });
+                r += rr;
+            }
+            ko += k;
+        }
+        Ok(LayerTiling {
+            l1_bytes: 2 * Self::tile_bytes(l, rows, kout),
+            rows_per_tile: rows,
+            kout_per_tile: kout,
+            tiles,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{resnet20_layers, PrecisionConfig};
+
+    fn conv_layers() -> Vec<Layer> {
+        resnet20_layers(PrecisionConfig::Uniform8)
+            .into_iter()
+            .filter(|l| {
+                matches!(l.op, LayerOp::Conv3x3 | LayerOp::Conv1x1)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_resnet20_layer_fits() {
+        let t = Tiler::default();
+        for l in conv_layers() {
+            let tiling = t.tile(&l).unwrap();
+            assert!(
+                tiling.l1_bytes <= t.l1_budget,
+                "{}: {} B",
+                l.name,
+                tiling.l1_bytes
+            );
+            // coverage: rows x kout sums to the full layer
+            let total: usize =
+                tiling.tiles.iter().map(|t| t.rows * t.kout).sum();
+            assert_eq!(total, l.h_out() * l.cout, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn small_budget_forces_more_tiles() {
+        let l = &conv_layers()[1]; // stage1 conv 32x32x16
+        let big = Tiler::default().tile(l).unwrap();
+        let small = Tiler { l1_budget: 40 * 1024 }.tile(l).unwrap();
+        assert!(small.tiles.len() > big.tiles.len());
+        assert!(small.l1_bytes <= 40 * 1024);
+    }
+
+    #[test]
+    fn weights_loaded_once_per_kout_slice() {
+        // stage3 conv: 8x8x64 -> 64, big enough to force kout slicing
+        let l = conv_layers()
+            .into_iter()
+            .find(|l| l.name == "stage3.b1.conv0")
+            .unwrap();
+        let tiling = Tiler { l1_budget: 36 * 1024 }.tile(&l).unwrap();
+        let loads = tiling.tiles.iter().filter(|t| t.loads_weights).count();
+        let kout_slices = l.cout.div_ceil(tiling.kout_per_tile);
+        assert_eq!(loads, kout_slices);
+        assert!(kout_slices >= 2, "want actual slicing, got {kout_slices}");
+    }
+
+    #[test]
+    fn impossible_budget_errors() {
+        let l = &conv_layers()[0];
+        assert!(Tiler { l1_budget: 512 }.tile(l).is_err());
+    }
+}

@@ -1,0 +1,100 @@
+//! Metric helpers: Gop/s, Top/s/W, area efficiency, and the table
+//! formatting used by the `figure` harness.
+
+/// Performance in Gop/s from ops executed over cycles at `freq_mhz`.
+pub fn gops(ops: u64, cycles: u64, freq_mhz: f64) -> f64 {
+    if cycles == 0 {
+        return 0.0;
+    }
+    ops as f64 / cycles as f64 * freq_mhz * 1.0e6 / 1.0e9
+}
+
+/// Energy efficiency in Gop/s/W given performance and power.
+pub fn gops_per_w(gops: f64, power_mw: f64) -> f64 {
+    gops / (power_mw * 1.0e-3)
+}
+
+/// Area efficiency in Gop/s/mm².
+pub fn gops_per_mm2(gops: f64, area_mm2: f64) -> f64 {
+    gops / area_mm2
+}
+
+/// Energy per operation in femtojoules.
+pub fn fj_per_op(power_mw: f64, gops: f64) -> f64 {
+    if gops == 0.0 {
+        return f64::INFINITY;
+    }
+    // mW / Gop/s = 1e-3 J / 1e9 op = pJ/op; x1000 => fJ/op
+    power_mw / gops * 1.0e3
+}
+
+/// Pretty-print a table: header + rows of equal length.
+pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut width = vec![0usize; ncol];
+    for (i, h) in header.iter().enumerate() {
+        width[i] = h.len();
+    }
+    for r in rows {
+        assert_eq!(r.len(), ncol, "ragged table row");
+        for (i, c) in r.iter().enumerate() {
+            width[i] = width[i].max(c.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, width: &[usize]| -> String {
+        let mut line = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            if i > 0 {
+                line.push_str("  ");
+            }
+            line.push_str(&format!("{:<w$}", c, w = width[i]));
+        }
+        line.trim_end().to_string()
+    };
+    out.push_str(&fmt_row(
+        header.iter().map(|s| s.to_string()).collect(),
+        &width,
+    ));
+    out.push('\n');
+    out.push_str(&"-".repeat(width.iter().sum::<usize>() + 2 * (ncol - 1)));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&fmt_row(r.clone(), &width));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gops_math() {
+        // 663552 ops in 528 cycles at 420 MHz ~ 528 Gop/s
+        let g = gops(663_552, 528, 420.0);
+        assert!((g - 527.8).abs() < 1.0);
+        assert!((gops_per_w(100.0, 200.0) - 500.0).abs() < 1e-9);
+        assert!((gops_per_mm2(91.0, 2.42) - 37.6).abs() < 0.1);
+    }
+
+    #[test]
+    fn energy_per_op() {
+        // 100 mW at 100 Gop/s = 1 pJ/op = 1000 fJ/op
+        assert!((fj_per_op(100.0, 100.0) - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            &["a", "bbb"],
+            &[vec!["1".into(), "2".into()],
+              vec!["333".into(), "4".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("a"));
+        assert!(lines[2].starts_with("1"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Area model (paper Figs. 6–8, Table II): static breakdowns of the
+//! fabricated CLUSTER, used by the `figure fig7`/`fig8` harness and the
+//! area-efficiency rows of Table II.
+
+/// Total die area (mm²), including IPs out of scope.
+pub const DIE_AREA_MM2: f64 = 18.7;
+/// CLUSTER area (mm²) — the denominator of all area-efficiency numbers.
+pub const CLUSTER_AREA_MM2: f64 = 2.42;
+/// RBE post-synthesis complexity (kGE).
+pub const RBE_KGE: f64 = 652.0;
+/// One XpulpNN core (kGE), +17.5% over baseline RI5CY (paper §II-A2).
+pub const CORE_KGE: f64 = 78.0;
+/// ABB generator area (mm², paper §II-C).
+pub const ABB_GEN_AREA_MM2: f64 = 0.039;
+
+/// One named slice of an area breakdown.
+#[derive(Debug, Clone)]
+pub struct AreaItem {
+    pub name: &'static str,
+    /// Percentage of the parent total.
+    pub pct: f64,
+}
+
+/// Fig. 7: CLUSTER area distribution. The paper states the 16 cores +
+/// shared I$ take "almost half" and RBE "one fifth"; the remaining split
+/// follows the figure.
+pub fn cluster_area_breakdown() -> Vec<AreaItem> {
+    vec![
+        AreaItem { name: "RISC-V cores + I$", pct: 47.0 },
+        AreaItem { name: "RBE", pct: 20.0 },
+        AreaItem { name: "TCDM SRAM banks", pct: 21.0 },
+        AreaItem { name: "interconnect (LIC + RBE-IC)", pct: 6.0 },
+        AreaItem { name: "shared FPUs", pct: 3.5 },
+        AreaItem { name: "DMA + event unit + periph", pct: 2.5 },
+    ]
+}
+
+/// Fig. 8: RBE post-synthesis breakdown (652 kGE total, datapath 92.7%).
+pub fn rbe_area_breakdown() -> Vec<AreaItem> {
+    vec![
+        AreaItem { name: "datapath (engine)", pct: 92.7 },
+        AreaItem { name: "streamer", pct: 4.3 },
+        AreaItem { name: "controller (FSM + uloop + regfile)", pct: 3.0 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdowns_sum_to_100() {
+        for b in [cluster_area_breakdown(), rbe_area_breakdown()] {
+            let s: f64 = b.iter().map(|i| i.pct).sum();
+            assert!((s - 100.0).abs() < 0.5, "sum {s}");
+        }
+    }
+
+    #[test]
+    fn paper_statements_hold() {
+        let b = cluster_area_breakdown();
+        assert!(b[0].pct > 40.0 && b[0].pct < 50.0); // "almost half"
+        assert!((b[1].pct - 20.0).abs() < 1.0); // "one fifth"
+        let r = rbe_area_breakdown();
+        assert!((r[0].pct - 92.7).abs() < 0.1);
+        // datapath kGE = 605 per the paper
+        assert!(((RBE_KGE * r[0].pct / 100.0) - 605.0).abs() < 2.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Voltage / frequency / power / area models of the Marsellus CLUSTER,
+//! calibrated against the paper's measured anchor points (§III-A Fig. 9,
+//! §III-C Fig. 15, Figs. 7–8). See DESIGN.md §Calibration.
+
+mod area;
+mod energy;
+mod vf;
+
+pub use area::{cluster_area_breakdown, rbe_area_breakdown, AreaItem,
+               CLUSTER_AREA_MM2, DIE_AREA_MM2, RBE_KGE};
+pub use energy::{PowerModel, Workload};
+pub use vf::{fmax_mhz, OperatingPoint, FBB_MAX_V, SIGNOFF_FREQ_MHZ,
+             VDD_MAX, VDD_MIN, VDD_NOM};

@@ -1,0 +1,169 @@
+//! Maximum-frequency model f_max(V_DD, V_FBB).
+//!
+//! The silicon measurement (Fig. 9) gives f_max at the sweep endpoints:
+//! 420 MHz @ 0.8 V down to 100 MHz @ 0.5 V; Fig. 10 adds that 400 MHz is
+//! sustained without ABB down to exactly 0.74 V. We interpolate a
+//! monotone piecewise-cubic (PCHIP) through those measured anchors — the
+//! same thing the paper's plotted curve is — with alpha-power-law shaped
+//! intermediate points, and model forward body bias as an effective-voltage
+//! shift: raising V_FBB lowers V_th, which to first order behaves like
+//! extra headroom ΔV_eff = γ·V_FBB (γ = 0.1, so the full 0.9 V FBB range
+//! buys 90 mV — exactly what lets 0.65 V + ABB hold the 400 MHz signoff
+//! frequency, Fig. 10).
+
+/// Signoff frequency of the CLUSTER at 0.8 V (paper §III-A).
+pub const SIGNOFF_FREQ_MHZ: f64 = 400.0;
+/// Nominal supply.
+pub const VDD_NOM: f64 = 0.80;
+/// Sweep bounds (Fig. 9).
+pub const VDD_MIN: f64 = 0.50;
+pub const VDD_MAX: f64 = 0.80;
+/// Maximum forward-body-bias voltage of the ABB generator.
+pub const FBB_MAX_V: f64 = 0.90;
+/// Effective-voltage gain of FBB: ΔV_eff = γ · V_FBB.
+pub const FBB_GAMMA: f64 = 0.10;
+
+/// Measured/fitted anchors (V_eff, MHz). Points ≤ 0.8 V follow Fig. 9/10;
+/// points above 0.8 V extend the curve into FBB-boosted territory
+/// (calibrated so 0.8 V + full FBB reaches the paper's 470 MHz
+/// overclocked operation, Fig. 11).
+const ANCHORS: &[(f64, f64)] = &[
+    (0.50, 100.0),
+    (0.575, 168.0),
+    (0.65, 250.0),
+    (0.74, 400.0),
+    (0.80, 420.0),
+    (0.86, 452.0),
+    (0.92, 490.0),
+];
+
+/// Monotone cubic (Fritsch–Carlson PCHIP) interpolation through ANCHORS;
+/// clamps outside the table.
+pub fn fmax_at_veff(veff: f64) -> f64 {
+    let n = ANCHORS.len();
+    if veff <= ANCHORS[0].0 {
+        return ANCHORS[0].1;
+    }
+    if veff >= ANCHORS[n - 1].0 {
+        return ANCHORS[n - 1].1;
+    }
+    // interval slopes
+    let mut h = vec![0.0; n - 1];
+    let mut d = vec![0.0; n - 1];
+    for i in 0..n - 1 {
+        h[i] = ANCHORS[i + 1].0 - ANCHORS[i].0;
+        d[i] = (ANCHORS[i + 1].1 - ANCHORS[i].1) / h[i];
+    }
+    // Fritsch–Carlson tangents
+    let mut m = vec![0.0; n];
+    m[0] = d[0];
+    m[n - 1] = d[n - 2];
+    for i in 1..n - 1 {
+        m[i] = if d[i - 1] * d[i] <= 0.0 {
+            0.0
+        } else {
+            let (w1, w2) = (2.0 * h[i] + h[i - 1], h[i] + 2.0 * h[i - 1]);
+            (w1 + w2) / (w1 / d[i - 1] + w2 / d[i])
+        };
+    }
+    // locate interval
+    let mut k = 0;
+    while ANCHORS[k + 1].0 < veff {
+        k += 1;
+    }
+    let t = (veff - ANCHORS[k].0) / h[k];
+    let (y0, y1) = (ANCHORS[k].1, ANCHORS[k + 1].1);
+    let (h00, h10) = (
+        (1.0 + 2.0 * t) * (1.0 - t) * (1.0 - t),
+        t * (1.0 - t) * (1.0 - t),
+    );
+    let (h01, h11) = ((3.0 - 2.0 * t) * t * t, t * t * (t - 1.0));
+    h00 * y0 + h10 * h[k] * m[k] + h01 * y1 + h11 * h[k] * m[k + 1]
+}
+
+/// Maximum frequency at a supply voltage and forward-body-bias setting.
+pub fn fmax_mhz(vdd: f64, fbb_v: f64) -> f64 {
+    fmax_at_veff(vdd + FBB_GAMMA * fbb_v.clamp(0.0, FBB_MAX_V))
+}
+
+/// One (V, f, FBB) operating point of the cluster.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatingPoint {
+    pub vdd: f64,
+    pub freq_mhz: f64,
+    pub fbb_v: f64,
+}
+
+impl OperatingPoint {
+    /// The nominal 0.8 V point at the silicon's measured f_max.
+    pub fn nominal() -> Self {
+        Self { vdd: VDD_NOM, freq_mhz: fmax_mhz(VDD_NOM, 0.0), fbb_v: 0.0 }
+    }
+
+    /// Max-frequency point at a given supply (no ABB).
+    pub fn at_vdd(vdd: f64) -> Self {
+        Self { vdd, freq_mhz: fmax_mhz(vdd, 0.0), fbb_v: 0.0 }
+    }
+
+    /// Does this point meet timing (f <= f_max(V, FBB))?
+    pub fn is_timing_clean(&self) -> bool {
+        self.freq_mhz <= fmax_mhz(self.vdd, self.fbb_v) + 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_reproduced() {
+        assert!((fmax_mhz(0.8, 0.0) - 420.0).abs() < 1.0);
+        assert!((fmax_mhz(0.5, 0.0) - 100.0).abs() < 1.0);
+        assert!((fmax_mhz(0.74, 0.0) - 400.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn monotone_in_vdd() {
+        let mut prev = 0.0;
+        let mut v = 0.48;
+        while v < 0.95 {
+            let f = fmax_mhz(v, 0.0);
+            assert!(f >= prev - 1e-9, "non-monotone at {v}");
+            prev = f;
+            v += 0.005;
+        }
+    }
+
+    /// Fig. 10: 400 MHz fails below 0.74 V without ABB, but holds at
+    /// 0.65 V with full FBB.
+    #[test]
+    fn abb_rescues_400mhz_at_0v65() {
+        assert!(fmax_mhz(0.73, 0.0) < 400.0);
+        assert!(fmax_mhz(0.74, 0.0) >= 399.9);
+        assert!(fmax_mhz(0.65, FBB_MAX_V) >= 399.9);
+        assert!(fmax_mhz(0.65, 0.0) < 300.0);
+    }
+
+    /// Fig. 11: 470 MHz overclock at 0.8 V is reachable only with FBB.
+    #[test]
+    fn overclock_needs_fbb() {
+        assert!(fmax_mhz(0.8, 0.0) < 470.0);
+        assert!(fmax_mhz(0.8, FBB_MAX_V) >= 470.0);
+    }
+
+    /// ABB buys ~17.5%+ frequency at nominal voltage (paper: 470 vs 400).
+    #[test]
+    fn boost_magnitude() {
+        let boost = fmax_mhz(0.8, FBB_MAX_V) / SIGNOFF_FREQ_MHZ;
+        assert!(boost >= 1.17, "boost {boost}");
+    }
+
+    #[test]
+    fn timing_clean_check() {
+        assert!(OperatingPoint::nominal().is_timing_clean());
+        let op = OperatingPoint { vdd: 0.7, freq_mhz: 400.0, fbb_v: 0.0 };
+        assert!(!op.is_timing_clean());
+        let op = OperatingPoint { vdd: 0.7, freq_mhz: 400.0, fbb_v: 0.9 };
+        assert!(op.is_timing_clean());
+    }
+}

@@ -1,0 +1,161 @@
+//! RBE job descriptors.
+
+use anyhow::{bail, Result};
+
+/// Operating mode of the unified datapath (paper §II-B1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RbeMode {
+    Conv3x3,
+    Conv1x1,
+}
+
+/// One offloaded convolution job: a complete layer (or tile of a layer)
+/// executed by the controller FSM + uloop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RbeJob {
+    pub mode: RbeMode,
+    /// Output spatial size.
+    pub h_out: usize,
+    pub w_out: usize,
+    pub k_in: usize,
+    pub k_out: usize,
+    pub stride: usize,
+    /// Weight precision, 2–8 bits (asymmetric precision supported,
+    /// including non-power-of-two).
+    pub w_bits: usize,
+    /// Input-activation precision, 2–8 bits.
+    pub i_bits: usize,
+    /// Output precision, 2–8 bits.
+    pub o_bits: usize,
+}
+
+impl RbeJob {
+    pub fn conv3x3(
+        h_out: usize,
+        w_out: usize,
+        k_in: usize,
+        k_out: usize,
+        stride: usize,
+        w_bits: usize,
+        i_bits: usize,
+        o_bits: usize,
+    ) -> Result<Self> {
+        let j = Self {
+            mode: RbeMode::Conv3x3,
+            h_out,
+            w_out,
+            k_in,
+            k_out,
+            stride,
+            w_bits,
+            i_bits,
+            o_bits,
+        };
+        j.validate()?;
+        Ok(j)
+    }
+
+    pub fn conv1x1(
+        h_out: usize,
+        w_out: usize,
+        k_in: usize,
+        k_out: usize,
+        stride: usize,
+        w_bits: usize,
+        i_bits: usize,
+        o_bits: usize,
+    ) -> Result<Self> {
+        let j = Self {
+            mode: RbeMode::Conv1x1,
+            h_out,
+            w_out,
+            k_in,
+            k_out,
+            stride,
+            w_bits,
+            i_bits,
+            o_bits,
+        };
+        j.validate()?;
+        Ok(j)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, b) in [
+            ("w_bits", self.w_bits),
+            ("i_bits", self.i_bits),
+            ("o_bits", self.o_bits),
+        ] {
+            if !(2..=8).contains(&b) {
+                bail!("RBE supports 2-8 bit {name}, got {b}");
+            }
+        }
+        if self.h_out == 0 || self.w_out == 0 || self.k_in == 0 || self.k_out == 0
+        {
+            bail!("degenerate job shape {self:?}");
+        }
+        if !(1..=2).contains(&self.stride) {
+            bail!("RBE stride must be 1 or 2, got {}", self.stride);
+        }
+        Ok(())
+    }
+
+    /// MAC operations in the layer.
+    pub fn macs(&self) -> u64 {
+        let taps = match self.mode {
+            RbeMode::Conv3x3 => 9,
+            RbeMode::Conv1x1 => 1,
+        };
+        (self.h_out * self.w_out * self.k_out * self.k_in * taps) as u64
+    }
+
+    /// W×I-bit operations (2 per MAC — the paper's throughput metric).
+    pub fn ops(&self) -> u64 {
+        self.macs() * 2
+    }
+
+    /// Equivalent 1×1-bit binary operations (the paper's "raw" metric,
+    /// Fig. 13 red axis): every W×I MAC decomposes into W·I binary MACs.
+    pub fn binary_ops(&self) -> u64 {
+        self.ops() * (self.w_bits * self.i_bits) as u64
+    }
+
+    /// Input spatial size.
+    pub fn h_in(&self) -> usize {
+        match self.mode {
+            RbeMode::Conv3x3 => (self.h_out - 1) * self.stride + 3,
+            RbeMode::Conv1x1 => (self.h_out - 1) * self.stride + 1,
+        }
+    }
+
+    pub fn w_in(&self) -> usize {
+        match self.mode {
+            RbeMode::Conv3x3 => (self.w_out - 1) * self.stride + 3,
+            RbeMode::Conv1x1 => (self.w_out - 1) * self.stride + 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_bounds_enforced() {
+        assert!(RbeJob::conv3x3(3, 3, 64, 64, 1, 1, 4, 4).is_err());
+        assert!(RbeJob::conv3x3(3, 3, 64, 64, 1, 9, 4, 4).is_err());
+        assert!(RbeJob::conv3x3(3, 3, 64, 64, 3, 8, 4, 4).is_err());
+        assert!(RbeJob::conv3x3(3, 3, 64, 64, 1, 3, 5, 7).is_ok()); // non-pow2 ok
+    }
+
+    #[test]
+    fn op_counts() {
+        let j = RbeJob::conv3x3(3, 3, 64, 64, 1, 2, 4, 4).unwrap();
+        assert_eq!(j.macs(), 9 * 64 * 64 * 9);
+        assert_eq!(j.binary_ops(), j.ops() * 8);
+        assert_eq!(j.h_in(), 5);
+        let j2 = RbeJob::conv1x1(3, 3, 64, 64, 2, 8, 8, 8).unwrap();
+        assert_eq!(j2.macs(), 9 * 64 * 64);
+        assert_eq!(j2.h_in(), 5);
+    }
+}

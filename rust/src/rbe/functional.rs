@@ -1,0 +1,282 @@
+//! Bit-exact functional model of the RBE datapath.
+//!
+//! Two implementations of the same arithmetic:
+//! * [`conv_bitserial`] computes exactly as the hardware (and the L1
+//!   Pallas kernel) does: decompose into bit planes, AND, scale by
+//!   ±2^(i+j) (weight MSB negative — two's complement), accumulate in
+//!   32-bit, then normquant (Eq. 1 + Eq. 2);
+//! * [`conv_reference`] is a plain signed-integer convolution + normquant
+//!   (the specification, mirroring python `ref.py`).
+//!
+//! Property tests assert they agree for every precision/shape; integration
+//! tests additionally compare against the PJRT artifact outputs, closing
+//! the three-way equivalence the DESIGN.md §Functional-vs-timing split
+//! requires.
+//!
+//! Tensor layout: activations `(H, W, K)` row-major `i32`, unsigned values
+//! in `[0, 2^I)`; weights `(Kout, Kin, fy, fx)` signed in
+//! `[-2^(W-1), 2^(W-1))`.
+
+use anyhow::{bail, Result};
+
+use super::config::{RbeJob, RbeMode};
+
+/// Per-output-channel normalization parameters (Eq. 2).
+#[derive(Debug, Clone)]
+pub struct NormQuant {
+    pub scale: Vec<i32>,
+    pub bias: Vec<i32>,
+    pub shift: u32,
+}
+
+impl NormQuant {
+    /// Identity-ish normquant: scale 1, bias 0, shift 0.
+    pub fn unit(k_out: usize) -> Self {
+        Self { scale: vec![1; k_out], bias: vec![0; k_out], shift: 0 }
+    }
+
+    /// Apply Eq. 2 + ReLU clip to `o_bits`.
+    #[inline]
+    pub fn apply(&self, k: usize, acc: i64, o_bits: usize) -> i32 {
+        let v = (self.scale[k] as i64 * acc + self.bias[k] as i64)
+            >> self.shift;
+        v.clamp(0, (1i64 << o_bits) - 1) as i32
+    }
+}
+
+fn tap_range(job: &RbeJob) -> usize {
+    match job.mode {
+        RbeMode::Conv3x3 => 3,
+        RbeMode::Conv1x1 => 1,
+    }
+}
+
+fn check_shapes(
+    job: &RbeJob,
+    x: &[i32],
+    w: &[i32],
+    nq: &NormQuant,
+) -> Result<()> {
+    let taps = tap_range(job);
+    let want_x = job.h_in() * job.w_in() * job.k_in;
+    let want_w = job.k_out * job.k_in * taps * taps;
+    if x.len() != want_x {
+        bail!("activation len {} != {}", x.len(), want_x);
+    }
+    if w.len() != want_w {
+        bail!("weight len {} != {}", w.len(), want_w);
+    }
+    if nq.scale.len() != job.k_out || nq.bias.len() != job.k_out {
+        bail!("normquant params must be per-output-channel");
+    }
+    let imax = 1 << job.i_bits;
+    if x.iter().any(|&v| v < 0 || v >= imax) {
+        bail!("activation out of unsigned {}-bit range", job.i_bits);
+    }
+    let whalf = 1 << (job.w_bits - 1);
+    if w.iter().any(|&v| v < -whalf || v >= whalf) {
+        bail!("weight out of signed {}-bit range", job.w_bits);
+    }
+    Ok(())
+}
+
+/// Plain integer convolution + normquant: the oracle.
+pub fn conv_reference(
+    job: &RbeJob,
+    x: &[i32],
+    w: &[i32],
+    nq: &NormQuant,
+) -> Result<Vec<i32>> {
+    check_shapes(job, x, w, nq)?;
+    let taps = tap_range(job);
+    let (hi, wi) = (job.h_in(), job.w_in());
+    let mut out = vec![0i32; job.h_out * job.w_out * job.k_out];
+    for oy in 0..job.h_out {
+        for ox in 0..job.w_out {
+            for ko in 0..job.k_out {
+                let mut acc: i64 = 0;
+                for fy in 0..taps {
+                    for fx in 0..taps {
+                        let iy = oy * job.stride + fy;
+                        let ix = ox * job.stride + fx;
+                        debug_assert!(iy < hi && ix < wi);
+                        for ki in 0..job.k_in {
+                            let xv =
+                                x[(iy * wi + ix) * job.k_in + ki] as i64;
+                            let wv = w[((ko * job.k_in + ki) * taps + fy)
+                                * taps
+                                + fx] as i64;
+                            acc += xv * wv;
+                        }
+                    }
+                }
+                out[(oy * job.w_out + ox) * job.k_out + ko] =
+                    nq.apply(ko, acc, job.o_bits);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Bit-serial convolution: Eq. 1 exactly as the datapath evaluates it.
+///
+/// For every (weight bit i, input bit j) pair the contribution is
+/// `coef(i,j) * popcount(w_bit & x_bit)` accumulated over channels and
+/// taps, where `coef = -2^(i+j)` for the weight MSB plane (two's
+/// complement) and `+2^(i+j)` otherwise. Accumulation is wrapping 32-bit,
+/// like the hardware Accums.
+pub fn conv_bitserial(
+    job: &RbeJob,
+    x: &[i32],
+    w: &[i32],
+    nq: &NormQuant,
+) -> Result<Vec<i32>> {
+    check_shapes(job, x, w, nq)?;
+    let taps = tap_range(job);
+    let wi = job.w_in();
+    let mut out = vec![0i32; job.h_out * job.w_out * job.k_out];
+    for oy in 0..job.h_out {
+        for ox in 0..job.w_out {
+            for ko in 0..job.k_out {
+                let mut acc: i32 = 0; // the 32-bit Accum register
+                for i in 0..job.w_bits {
+                    let neg = i == job.w_bits - 1 && job.w_bits > 1;
+                    for j in 0..job.i_bits {
+                        // binary dot product over taps x channels — what
+                        // the BinConv AND arrays + popcount adders produce
+                        let mut ones: i32 = 0;
+                        for fy in 0..taps {
+                            for fx in 0..taps {
+                                let iy = oy * job.stride + fy;
+                                let ix = ox * job.stride + fx;
+                                for ki in 0..job.k_in {
+                                    let xv = x
+                                        [(iy * wi + ix) * job.k_in + ki]
+                                        as u32;
+                                    let wv = (w[((ko * job.k_in + ki)
+                                        * taps
+                                        + fy)
+                                        * taps
+                                        + fx]
+                                        as u32)
+                                        & ((1u32 << job.w_bits) - 1);
+                                    ones += (((wv >> i) & 1)
+                                        & ((xv >> j) & 1))
+                                        as i32;
+                                }
+                            }
+                        }
+                        // dynamic shifter: scale by +/- 2^(i+j)
+                        let contrib = ones.wrapping_shl((i + j) as u32);
+                        acc = if neg {
+                            acc.wrapping_sub(contrib)
+                        } else {
+                            acc.wrapping_add(contrib)
+                        };
+                    }
+                }
+                out[(oy * job.w_out + ox) * job.k_out + ko] =
+                    nq.apply(ko, acc as i64, job.o_bits);
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_job_inputs(
+        rng: &mut Rng,
+        job: &RbeJob,
+    ) -> (Vec<i32>, Vec<i32>, NormQuant) {
+        let taps = tap_range(job);
+        let x: Vec<i32> = (0..job.h_in() * job.w_in() * job.k_in)
+            .map(|_| rng.range_i32(0, 1 << job.i_bits))
+            .collect();
+        let whalf = 1 << (job.w_bits - 1);
+        let w: Vec<i32> = (0..job.k_out * job.k_in * taps * taps)
+            .map(|_| rng.range_i32(-whalf, whalf))
+            .collect();
+        let nq = NormQuant {
+            scale: (0..job.k_out).map(|_| rng.range_i32(1, 16)).collect(),
+            bias: (0..job.k_out).map(|_| rng.range_i32(-500, 500)).collect(),
+            shift: rng.range_i32(0, 12) as u32,
+        };
+        (x, w, nq)
+    }
+
+    /// Property: bit-serial == plain integer conv for every precision and
+    /// mode (the core Eq. 1 equivalence).
+    #[test]
+    fn bitserial_equals_reference_sweep() {
+        let mut rng = Rng::new(2024);
+        for _ in 0..60 {
+            let mode = if rng.f64() < 0.5 {
+                RbeMode::Conv3x3
+            } else {
+                RbeMode::Conv1x1
+            };
+            let job = RbeJob {
+                mode,
+                h_out: 1 + rng.index(3),
+                w_out: 1 + rng.index(3),
+                k_in: *rng.pick(&[1, 3, 8, 32]),
+                k_out: *rng.pick(&[1, 4, 16]),
+                stride: 1 + rng.index(2),
+                w_bits: 2 + rng.index(7),
+                i_bits: 2 + rng.index(7),
+                o_bits: 2 + rng.index(7),
+            };
+            let (x, w, nq) = random_job_inputs(&mut rng, &job);
+            let a = conv_bitserial(&job, &x, &w, &nq).unwrap();
+            let b = conv_reference(&job, &x, &w, &nq).unwrap();
+            assert_eq!(a, b, "job {job:?}");
+        }
+    }
+
+    #[test]
+    fn relu_clips_negative_accumulations() {
+        let job = RbeJob::conv1x1(1, 1, 4, 1, 1, 3, 2, 4).unwrap();
+        let x = vec![3, 3, 3, 3];
+        let w = vec![-4, -4, -4, -4];
+        let nq = NormQuant::unit(1);
+        let out = conv_bitserial(&job, &x, &w, &nq).unwrap();
+        assert_eq!(out, vec![0]);
+    }
+
+    #[test]
+    fn saturates_at_output_max() {
+        let job = RbeJob::conv1x1(1, 1, 8, 1, 1, 8, 8, 3).unwrap();
+        let x = vec![255; 8];
+        let w = vec![127; 8];
+        let nq = NormQuant::unit(1);
+        let out = conv_reference(&job, &x, &w, &nq).unwrap();
+        assert_eq!(out, vec![7]); // 2^3 - 1
+    }
+
+    #[test]
+    fn rejects_out_of_range_inputs() {
+        let job = RbeJob::conv1x1(1, 1, 4, 1, 1, 2, 2, 2).unwrap();
+        let nq = NormQuant::unit(1);
+        // activation 4 does not fit 2 bits
+        assert!(conv_bitserial(&job, &[4, 0, 0, 0], &[1, 1, 1, 1], &nq)
+            .is_err());
+        // weight 2 does not fit signed 2 bits
+        assert!(conv_bitserial(&job, &[1, 0, 0, 0], &[2, 0, 0, 0], &nq)
+            .is_err());
+    }
+
+    #[test]
+    fn strided_conv_matches() {
+        let mut rng = Rng::new(7);
+        let job = RbeJob::conv3x3(2, 2, 8, 4, 2, 4, 4, 8).unwrap();
+        let (x, w, nq) = random_job_inputs(&mut rng, &job);
+        assert_eq!(
+            conv_bitserial(&job, &x, &w, &nq).unwrap(),
+            conv_reference(&job, &x, &w, &nq).unwrap()
+        );
+    }
+}

@@ -1,0 +1,42 @@
+//! Fixed RBE datapath geometry (paper §II-B2).
+
+/// Cores in the engine; each works on the receptive field of one output
+/// pixel over 32 channels (3×3 output pixels per spatial iteration).
+pub const CORES: usize = 9;
+/// Blocks per core: the 9 filter taps in 3×3 mode, or up to 8 weight bits
+/// bit-parallel in 1×1 mode (the 9th block is clock-gated).
+pub const BLOCKS: usize = 9;
+/// BinConv units per block: 4 input-activation bit planes in parallel.
+pub const BINCONV_PER_BLOCK: usize = 4;
+/// Width of one BinConv 1-bit dot product (channels per group).
+pub const BINCONV_WIDTH: usize = 32;
+/// 32-bit accumulator banks per core (one per output channel of a tile).
+pub const ACCUMS_PER_CORE: usize = 32;
+/// Streamer width: 288-bit TCDM load/store unit (§II-B2).
+pub const STREAM_BITS: usize = 288;
+
+/// Total single-bit multipliers: the paper's "10368 AND gates".
+pub const AND_GATES: usize = CORES * BLOCKS * BINCONV_PER_BLOCK * BINCONV_WIDTH;
+
+/// Channel tile handled per iteration (BinConv width).
+pub const KIN_TILE: usize = BINCONV_WIDTH;
+/// Output-channel tile (accumulator banks per core).
+pub const KOUT_TILE: usize = ACCUMS_PER_CORE;
+/// Output spatial tile side (9 cores = 3×3 output pixels).
+pub const SPATIAL_TILE: usize = 3;
+/// Input-activation bits consumed in parallel (BinConvs per block).
+pub const IBITS_PARALLEL: usize = BINCONV_PER_BLOCK;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_constants() {
+        assert_eq!(AND_GATES, 10368);
+        assert_eq!(STREAM_BITS, 288);
+        // 288 bits/cycle exactly feeds one weight-bit plane of a 3x3 tap
+        // group: 9 taps x 32 channels x 1 bit.
+        assert_eq!(BLOCKS * BINCONV_WIDTH, STREAM_BITS);
+    }
+}

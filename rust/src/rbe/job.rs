@@ -1,0 +1,171 @@
+//! RBE job offload interface (paper §II-B4): a dual-context register file
+//! lets the RISC-V cores enqueue up to two jobs; the engine runs the
+//! oldest, then emits an event to the cluster event unit.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use super::config::RbeJob;
+use super::functional::{conv_bitserial, NormQuant};
+use super::timing::RbeTiming;
+
+/// Completion record for one job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub job: RbeJob,
+    /// Output activations (H_out, W_out, K_out), unpacked i32.
+    pub output: Vec<i32>,
+    /// Cycle in RBE time at which the job finished.
+    pub finish_cycle: u64,
+    /// Latency of this job alone.
+    pub cycles: u64,
+}
+
+struct Pending {
+    job: RbeJob,
+    x: Vec<i32>,
+    w: Vec<i32>,
+    nq: NormQuant,
+}
+
+/// The engine-side queue: dual-context register file semantics (capacity
+/// 2), FIFO order, per-job event on completion.
+pub struct JobQueue {
+    queue: VecDeque<Pending>,
+    /// RBE-domain cycle counter (advances as jobs retire).
+    now: u64,
+    completed: Vec<JobResult>,
+}
+
+impl Default for JobQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JobQueue {
+    pub fn new() -> Self {
+        Self { queue: VecDeque::new(), now: 0, completed: Vec::new() }
+    }
+
+    /// Number of job contexts currently occupied.
+    pub fn depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Enqueue a job; fails when both register-file contexts are busy
+    /// (cores must wait for the free-context event, as on chip).
+    pub fn offload(
+        &mut self,
+        job: RbeJob,
+        x: Vec<i32>,
+        w: Vec<i32>,
+        nq: NormQuant,
+    ) -> Result<()> {
+        if self.queue.len() >= 2 {
+            bail!("both RBE job contexts busy (offload would block)");
+        }
+        job.validate()?;
+        self.queue.push_back(Pending { job, x, w, nq });
+        Ok(())
+    }
+
+    /// Run the oldest pending job to completion; returns its result.
+    pub fn run_next(&mut self) -> Result<Option<JobResult>> {
+        let Some(p) = self.queue.pop_front() else {
+            return Ok(None);
+        };
+        let output = conv_bitserial(&p.job, &p.x, &p.w, &p.nq)?;
+        let cycles = RbeTiming::cycles(&p.job);
+        self.now += cycles;
+        let res = JobResult {
+            job: p.job,
+            output,
+            finish_cycle: self.now,
+            cycles,
+        };
+        self.completed.push(res.clone());
+        Ok(Some(res))
+    }
+
+    /// Drain the queue, returning all results in completion order.
+    pub fn run_all(&mut self) -> Result<Vec<JobResult>> {
+        let mut out = Vec::new();
+        while let Some(r) = self.run_next()? {
+            out.push(r);
+        }
+        Ok(out)
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    pub fn completed(&self) -> &[JobResult] {
+        &self.completed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rbe::functional::conv_reference;
+    use crate::util::Rng;
+
+    fn mk_inputs(job: &RbeJob, seed: u64) -> (Vec<i32>, Vec<i32>, NormQuant) {
+        let mut rng = Rng::new(seed);
+        let x = (0..job.h_in() * job.w_in() * job.k_in)
+            .map(|_| rng.range_i32(0, 1 << job.i_bits))
+            .collect();
+        let wh = 1 << (job.w_bits - 1);
+        let taps = match job.mode {
+            super::super::RbeMode::Conv3x3 => 9,
+            super::super::RbeMode::Conv1x1 => 1,
+        };
+        let w = (0..job.k_out * job.k_in * taps)
+            .map(|_| rng.range_i32(-wh, wh))
+            .collect();
+        (x, w, NormQuant::unit(job.k_out))
+    }
+
+    #[test]
+    fn fifo_order_and_events() {
+        let j1 = RbeJob::conv3x3(3, 3, 32, 32, 1, 2, 2, 2).unwrap();
+        let j2 = RbeJob::conv1x1(3, 3, 32, 32, 1, 8, 8, 8).unwrap();
+        let (x1, w1, n1) = mk_inputs(&j1, 1);
+        let (x2, w2, n2) = mk_inputs(&j2, 2);
+        let mut q = JobQueue::new();
+        q.offload(j1, x1, w1, n1).unwrap();
+        q.offload(j2, x2, w2, n2).unwrap();
+        let rs = q.run_all().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].job.mode, super::super::RbeMode::Conv3x3);
+        assert_eq!(rs[1].finish_cycle, rs[0].cycles + rs[1].cycles);
+    }
+
+    #[test]
+    fn third_offload_blocks() {
+        let j = RbeJob::conv1x1(1, 1, 32, 32, 1, 2, 2, 2).unwrap();
+        let mut q = JobQueue::new();
+        for _ in 0..2 {
+            let (x, w, n) = mk_inputs(&j, 3);
+            q.offload(j, x, w, n).unwrap();
+        }
+        let (x, w, n) = mk_inputs(&j, 4);
+        assert!(q.offload(j, x, w, n).is_err());
+        q.run_next().unwrap();
+        let (x, w, n) = mk_inputs(&j, 5);
+        q.offload(j, x, w, n).unwrap(); // context freed
+    }
+
+    #[test]
+    fn output_matches_reference() {
+        let j = RbeJob::conv3x3(3, 3, 16, 8, 1, 3, 5, 6).unwrap();
+        let (x, w, n) = mk_inputs(&j, 9);
+        let mut q = JobQueue::new();
+        q.offload(j, x.clone(), w.clone(), n.clone()).unwrap();
+        let r = q.run_next().unwrap().unwrap();
+        assert_eq!(r.output, conv_reference(&j, &x, &w, &n).unwrap());
+    }
+}

@@ -1,0 +1,71 @@
+//! RBE TCDM data layouts (paper §II-B3).
+//!
+//! The chip stores activation/weight *bit planes* so the streamer can feed
+//! the BinConvs without marshaling:
+//! * activations: `(H, W, K/32, I, 32)` — channel-major 32-bit groups,
+//!   one word per (pixel, channel-group, bit);
+//! * 3×3 weights: `(Kout, Kin/32, W, 9, 32)`;
+//! * 1×1 weights: `(Kout, Kin/32, W, 32)`.
+//!
+//! The simulator keeps tensors *unpacked* (one i32 per element) for
+//! functional work, but all DMA/TCDM sizing uses these packed byte sizes —
+//! they are what determines tiling and transfer time on the chip.
+
+/// Packed bytes of an activation tensor (H, W, K) at `i_bits` precision.
+pub fn act_bytes(h: usize, w: usize, k: usize, i_bits: usize) -> u64 {
+    // (H, W, K/32, I, 32): one 32-bit word per (pixel, group, bit)
+    (h * w * k.div_ceil(32) * i_bits * 4) as u64
+}
+
+/// Packed bytes of a 3×3 weight tensor (Kout, Kin, 3, 3) at `w_bits`.
+pub fn weight3x3_bytes(k_out: usize, k_in: usize, w_bits: usize) -> u64 {
+    // (Kout, Kin/32, W, 9, 32): 9 words of 32 bits per (kout, group, bit)
+    (k_out * k_in.div_ceil(32) * w_bits * 9 * 4) as u64
+}
+
+/// Packed bytes of a 1×1 weight tensor (Kout, Kin) at `w_bits`.
+pub fn weight1x1_bytes(k_out: usize, k_in: usize, w_bits: usize) -> u64 {
+    (k_out * k_in.div_ceil(32) * w_bits * 4) as u64
+}
+
+/// Packed bytes of per-channel normquant parameters (scale + bias, 32-bit
+/// each).
+pub fn normquant_bytes(k_out: usize) -> u64 {
+    (k_out * 2 * 4) as u64
+}
+
+/// Bytes of a software-layout (byte-per-element, HWC) activation tensor —
+/// what the RISC-V kernels consume. The difference against [`act_bytes`]
+/// is the marshaling cost paid when mixing RBE and software operators
+/// (paper §III-B, Fig. 11 discussion).
+pub fn act_bytes_sw(h: usize, w: usize, k: usize, bits: usize) -> u64 {
+    // software packs sub-byte data 8/bits per byte
+    ((h * w * k * bits).div_ceil(8)) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitplane_sizes() {
+        // 32x32x16 @ 4 bits: 32*32*1group*4bits words = 16 KiB
+        assert_eq!(act_bytes(32, 32, 16, 4), 32 * 32 * 4 * 4);
+        // 64x64 3x3 @ 2 bits: 64 * 2groups * 2bits * 9 * 4B = 18.4 KiB
+        assert_eq!(weight3x3_bytes(64, 64, 2), 64 * 2 * 2 * 9 * 4);
+        assert_eq!(weight1x1_bytes(32, 64, 8), 32 * 2 * 8 * 4);
+        assert_eq!(normquant_bytes(64), 512);
+    }
+
+    #[test]
+    fn ragged_channel_groups_round_up() {
+        // 3 input channels still occupy one full 32-channel group
+        assert_eq!(act_bytes(4, 4, 3, 8), act_bytes(4, 4, 32, 8));
+    }
+
+    #[test]
+    fn sw_layout_smaller_for_subbyte() {
+        // the RBE layout pads to 32-channel words; software packs tighter
+        assert!(act_bytes_sw(8, 8, 16, 4) < act_bytes(8, 8, 16, 4));
+    }
+}

@@ -1,0 +1,32 @@
+//! Reconfigurable Binary Engine (paper §II-B, Figs. 3–4).
+//!
+//! RBE accelerates 3×3 and 1×1 convolutions with a runtime-reconfigurable
+//! datapath supporting 2–8-bit activation/weight precision by decomposing
+//! every W×I-bit product into single-bit AND contributions (Eq. 1) and
+//! recombining them with power-of-two shifts into 32-bit accumulators,
+//! then normalizing/quantizing (Eq. 2).
+//!
+//! Split into:
+//! * [`geometry`] — the fixed datapath shape (9 Cores × 9 Blocks ×
+//!   4 BinConvs × 32-wide = 10368 AND gates).
+//! * [`config`] — job descriptors (mode, shape, precisions).
+//! * [`functional`] — bit-exact functional model (bit-serial, mirroring
+//!   the L1 Pallas kernel, plus a plain integer oracle).
+//! * [`timing`] — LOAD/COMPUTE/NORMQUANT/STREAMOUT cycle model of the
+//!   Fig. 4 loop nest, calibrated against Fig. 13.
+//! * [`layout`] — the specialised TCDM bit-plane data layouts (§II-B3)
+//!   and their packed byte sizes (used by the DORY tiler for DMA costs).
+//! * [`job`] — the dual-context job queue and offload interface
+//!   (§II-B4: up to 2 jobs enqueued, events at completion).
+
+pub mod config;
+pub mod functional;
+pub mod geometry;
+pub mod job;
+pub mod layout;
+pub mod timing;
+pub mod uloop;
+
+pub use config::{RbeJob, RbeMode};
+pub use job::{JobQueue, JobResult};
+pub use timing::{CyclePhases, RbeTiming};

@@ -1,0 +1,72 @@
+//! PJRT CPU client wrapper with an artifact cache.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::executable::Executable;
+
+/// A PJRT client plus a cache of compiled executables keyed by artifact name.
+///
+/// Compilation is performed once per artifact; subsequent lookups are O(1).
+/// The runtime is `Send + Sync` via internal locking so the coordinator can
+/// share one instance across worker tasks.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: std::sync::Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at `artifacts_dir`.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Platform name reported by PJRT (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) the artifact `<name>.hlo.txt`.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let exe = Arc::new(
+            Executable::from_hlo_text(&self.client, &path)
+                .with_context(|| format!("loading artifact {name}"))?,
+        );
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// True if the artifact file exists on disk (used by tests to skip
+    /// gracefully when `make artifacts` has not run).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Names of all artifacts present on disk.
+    pub fn list_artifacts(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.artifacts_dir) {
+            for e in rd.flatten() {
+                let fname = e.file_name().to_string_lossy().into_owned();
+                if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        names
+    }
+}

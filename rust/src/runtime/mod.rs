@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place the `xla` crate is touched. Artifacts are produced
+//! once at build time by `python/compile/aot.py` (HLO *text*, not serialized
+//! protos — see /opt/xla-example/README.md); the rust hot path never calls
+//! into Python.
+
+mod client;
+mod executable;
+
+pub use client::Runtime;
+pub use executable::{Executable, TensorArg};

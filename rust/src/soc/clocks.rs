@@ -1,0 +1,71 @@
+//! FLL clock domains (paper §II: three FLLs — SOC core/memories, SOC
+//! peripherals, CLUSTER). Used to convert between domain cycle counts and
+//! wall-clock time when rolling up end-to-end latency.
+
+/// The three generated clocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ClockDomains {
+    SocCore,
+    SocPeriph,
+    Cluster,
+}
+
+/// Frequencies of the three FLL outputs, MHz.
+#[derive(Debug, Clone)]
+pub struct ClockTree {
+    pub soc_core_mhz: f64,
+    pub soc_periph_mhz: f64,
+    pub cluster_mhz: f64,
+}
+
+impl ClockTree {
+    /// Both domains at the cluster's operating frequency (the common
+    /// measurement configuration in the paper).
+    pub fn uniform(mhz: f64) -> Self {
+        Self { soc_core_mhz: mhz, soc_periph_mhz: mhz, cluster_mhz: mhz }
+    }
+
+    pub fn freq_mhz(&self, d: ClockDomains) -> f64 {
+        match d {
+            ClockDomains::SocCore => self.soc_core_mhz,
+            ClockDomains::SocPeriph => self.soc_periph_mhz,
+            ClockDomains::Cluster => self.cluster_mhz,
+        }
+    }
+
+    /// Convert a cycle count in a domain to microseconds.
+    pub fn cycles_to_us(&self, d: ClockDomains, cycles: u64) -> f64 {
+        cycles as f64 / self.freq_mhz(d)
+    }
+
+    /// Convert microseconds to (rounded-up) cycles of a domain.
+    pub fn us_to_cycles(&self, d: ClockDomains, us: f64) -> u64 {
+        (us * self.freq_mhz(d)).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_time_roundtrip() {
+        let t = ClockTree::uniform(420.0);
+        let us = t.cycles_to_us(ClockDomains::Cluster, 420_000);
+        assert!((us - 1000.0).abs() < 1e-9);
+        assert_eq!(t.us_to_cycles(ClockDomains::Cluster, 1000.0), 420_000);
+    }
+
+    #[test]
+    fn dual_clock_conversion() {
+        let t = ClockTree {
+            soc_core_mhz: 200.0,
+            soc_periph_mhz: 100.0,
+            cluster_mhz: 400.0,
+        };
+        // same wall-clock, different cycle counts
+        let us = 10.0;
+        assert_eq!(t.us_to_cycles(ClockDomains::SocCore, us), 2000);
+        assert_eq!(t.us_to_cycles(ClockDomains::Cluster, us), 4000);
+    }
+}

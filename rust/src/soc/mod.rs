@@ -1,0 +1,15 @@
+//! SOC domain (paper Fig. 1): the advanced microcontroller hosting the
+//! RV32IMCFXpulp controller core, the L2 memory and the I/O DMA towards
+//! external (L3) memory.
+//!
+//! In the simulator the SOC contributes three things:
+//! * the single-core Xpulp baseline that Fig. 14 speedups are measured
+//!   against (`crate::cluster::ClusterConfig::soc_controller`);
+//! * L2 storage (lives in [`crate::cluster::Tcdm`], shared address space);
+//! * the analytical L3 (HyperRAM) transfer model
+//!   ([`crate::cluster::dma::IoDma`]) used by the DORY tiler for the
+//!   off-chip rows of Figs. 17–18.
+
+mod clocks;
+
+pub use clocks::{ClockDomains, ClockTree};

@@ -1,0 +1,99 @@
+//! Tiny `--flag value` argument parser for the CLI and examples.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: free-standing positionals plus `--key value` /
+/// `--switch` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(nxt) if !nxt.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                if out.opts.insert(key.to_string(), val).is_some() {
+                    bail!("duplicate option --{key}");
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: {s:?} is not a number")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: {s:?} is not an integer")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("figure fig13 --vdd 0.8 --verbose");
+        assert_eq!(a.positional, vec!["figure", "fig13"]);
+        assert_eq!(a.get("vdd"), Some("0.8"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("--n 42 --x 0.5");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_f64("missing", 1.25).unwrap(), 1.25);
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        assert!(Args::parse(["--a".into(), "1".into(), "--a".into(), "2".into()]).is_err());
+    }
+}

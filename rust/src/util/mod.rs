@@ -1,0 +1,12 @@
+//! Small in-tree utilities replacing external crates that are not vendored
+//! in the build environment: a deterministic PRNG (for property-style
+//! tests), a TSV table reader (artifact manifest contract), and a tiny
+//! argument parser used by the CLI and examples.
+
+mod args;
+mod rng;
+mod tsv;
+
+pub use args::Args;
+pub use rng::Rng;
+pub use tsv::TsvTable;

@@ -1,0 +1,100 @@
+//! Minimal TSV table reader for `artifacts/manifest.tsv` (the contract
+//! between `python/compile/aot.py` and the rust runtime — see aot.py).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed TSV file with a header row; rows are accessed by column name.
+#[derive(Debug, Clone)]
+pub struct TsvTable {
+    header: Vec<String>,
+    col: HashMap<String, usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TsvTable {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header: Vec<String> = lines
+            .next()
+            .context("empty tsv")?
+            .split('\t')
+            .map(|s| s.trim().to_string())
+            .collect();
+        let col = header
+            .iter()
+            .enumerate()
+            .map(|(i, h)| (h.clone(), i))
+            .collect();
+        let mut rows = Vec::new();
+        for (n, line) in lines.enumerate() {
+            let row: Vec<String> =
+                line.split('\t').map(|s| s.trim().to_string()).collect();
+            if row.len() != header.len() {
+                bail!("tsv row {} has {} fields, header has {}", n + 2,
+                      row.len(), header.len());
+            }
+            rows.push(row);
+        }
+        Ok(Self { header, col, rows })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    pub fn get(&self, row: usize, col: &str) -> Result<&str> {
+        let c = *self
+            .col
+            .get(col)
+            .with_context(|| format!("no column {col:?}"))?;
+        Ok(self.rows[row][c].as_str())
+    }
+
+    pub fn get_usize(&self, row: usize, col: &str) -> Result<usize> {
+        let s = self.get(row, col)?;
+        s.parse()
+            .with_context(|| format!("column {col:?} row {row}: {s:?} not an integer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = TsvTable::parse("a\tb\n1\tx\n2\ty\n").unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.get(0, "a").unwrap(), "1");
+        assert_eq!(t.get(1, "b").unwrap(), "y");
+        assert_eq!(t.get_usize(1, "a").unwrap(), 2);
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        assert!(TsvTable::parse("a\tb\n1\n").is_err());
+    }
+
+    #[test]
+    fn missing_column_is_error() {
+        let t = TsvTable::parse("a\n1\n").unwrap();
+        assert!(t.get(0, "zzz").is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! End-to-end integration: full ResNet-20 inference through the
+//! coordinator (PJRT numerics + simulator timing), both precision
+//! configurations. Skips when artifacts are missing.
+
+use marsellus::coordinator::{random_image, Coordinator};
+use marsellus::dnn::PrecisionConfig;
+use marsellus::power::{OperatingPoint, FBB_MAX_V};
+use marsellus::util::Rng;
+
+fn coordinator() -> Option<Coordinator> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+        return None;
+    }
+    Some(Coordinator::new(dir.to_str().unwrap()).expect("coordinator"))
+}
+
+#[test]
+fn inference_runs_and_is_deterministic() {
+    let Some(coord) = coordinator() else { return };
+    let mut rng = Rng::new(1);
+    let image = random_image(8, &mut rng);
+    let op = OperatingPoint::at_vdd(0.8);
+    for config in [PrecisionConfig::Uniform8, PrecisionConfig::Mixed] {
+        let a = coord
+            .infer_resnet20(config, &op, &image, 42, &[])
+            .unwrap();
+        let b = coord
+            .infer_resnet20(config, &op, &image, 42, &[])
+            .unwrap();
+        assert_eq!(a.logits, b.logits, "{config:?} determinism");
+        assert_eq!(a.logits.len(), 10);
+        // O-bit output range of the fc layer
+        let omax = 1 << 8;
+        assert!(a.logits.iter().all(|&v| v >= 0 && v < omax));
+    }
+}
+
+#[test]
+fn different_weights_give_different_logits() {
+    let Some(coord) = coordinator() else { return };
+    let image = random_image(8, &mut Rng::new(2));
+    let op = OperatingPoint::at_vdd(0.8);
+    let a = coord
+        .infer_resnet20(PrecisionConfig::Mixed, &op, &image, 1, &[])
+        .unwrap();
+    let b = coord
+        .infer_resnet20(PrecisionConfig::Mixed, &op, &image, 2, &[])
+        .unwrap();
+    assert_ne!(a.logits, b.logits);
+}
+
+/// The in-flight cross-check: artifact outputs equal the Rust bit-serial
+/// datapath on representative layers (small stage-3 + strided 1x1).
+#[test]
+fn artifact_vs_bitserial_cross_check() {
+    let Some(coord) = coordinator() else { return };
+    let image = random_image(8, &mut Rng::new(3));
+    let res = coord
+        .infer_resnet20(
+            PrecisionConfig::Mixed,
+            &OperatingPoint::at_vdd(0.8),
+            &image,
+            7,
+            &["stage3.b1.conv0", "stage3.b2.conv1"],
+        )
+        .unwrap();
+    assert_eq!(res.cross_checked, 2);
+}
+
+/// Timing/energy reports behave physically across operating points.
+#[test]
+fn operating_point_scaling() {
+    let Some(coord) = coordinator() else { return };
+    let image = random_image(8, &mut Rng::new(4));
+    let nominal = coord
+        .infer_resnet20(
+            PrecisionConfig::Mixed,
+            &OperatingPoint::at_vdd(0.8),
+            &image,
+            42,
+            &[],
+        )
+        .unwrap();
+    let low = coord
+        .infer_resnet20(
+            PrecisionConfig::Mixed,
+            &OperatingPoint::at_vdd(0.5),
+            &image,
+            42,
+            &[],
+        )
+        .unwrap();
+    let abb = coord
+        .infer_resnet20(
+            PrecisionConfig::Mixed,
+            &OperatingPoint { vdd: 0.65, freq_mhz: 400.0, fbb_v: FBB_MAX_V },
+            &image,
+            42,
+            &[],
+        )
+        .unwrap();
+    // same functional result regardless of operating point
+    assert_eq!(nominal.logits, low.logits);
+    assert_eq!(nominal.logits, abb.logits);
+    // 0.5 V: slower but more efficient
+    assert!(low.report.total_latency_us()
+            > 2.0 * nominal.report.total_latency_us());
+    assert!(low.report.total_energy_uj()
+            < nominal.report.total_energy_uj());
+    // 0.65 V + ABB: no performance penalty vs 400 MHz-equivalent, less
+    // energy than nominal (paper §IV)
+    assert!(abb.report.total_energy_uj()
+            < nominal.report.total_energy_uj());
+    assert!(abb.report.total_latency_us()
+            < 1.2 * nominal.report.total_latency_us());
+}

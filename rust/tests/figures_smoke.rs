@@ -1,0 +1,16 @@
+//! Smoke test: every figure/table generator renders (fast mode).
+
+#[test]
+fn all_figures_render_fast() {
+    for id in marsellus::figures::ALL {
+        let out = marsellus::figures::generate(id, true)
+            .unwrap_or_else(|e| panic!("{id}: {e}"));
+        assert!(out.len() > 80, "{id} output too small:\n{out}");
+        assert!(out.lines().count() >= 4, "{id}");
+    }
+}
+
+#[test]
+fn unknown_figure_rejected() {
+    assert!(marsellus::figures::generate("fig99", true).is_err());
+}

@@ -1,0 +1,261 @@
+//! Property-style invariant tests over the coordinator-side models
+//! (no artifacts needed): tiler coverage, scheduler physics, RBE
+//! functional equivalence under randomized jobs, cluster fault handling,
+//! and ISA round-trips. A seeded in-tree PRNG drives the case sweep
+//! (proptest is not vendored in this environment).
+
+use marsellus::cluster::{Cluster, ClusterConfig, TCDM_BASE};
+use marsellus::dnn::{resnet18_layers, resnet20_layers, Layer, LayerOp,
+                     PrecisionConfig};
+use marsellus::isa::{disasm, AluOp, Instr, IsaLevel, Prec, ProgramBuilder};
+use marsellus::kernels::matmul::{matmul_reference, random_operands,
+                                 MatmulKernel, MatmulProblem};
+use marsellus::mapping::{Scheduler, Tiler};
+use marsellus::power::{fmax_mhz, OperatingPoint, PowerModel, Workload};
+use marsellus::rbe::functional::{conv_bitserial, conv_reference, NormQuant};
+use marsellus::rbe::{RbeJob, RbeMode, RbeTiming};
+use marsellus::util::Rng;
+
+/// Tiler invariant: for random budgets, tiles exactly cover the layer and
+/// never exceed the budget (or the tiler errors out loudly).
+#[test]
+fn tiler_coverage_under_random_budgets() {
+    let mut rng = Rng::new(1);
+    let layers: Vec<Layer> = resnet20_layers(PrecisionConfig::Uniform8)
+        .into_iter()
+        .chain(resnet20_layers(PrecisionConfig::Mixed))
+        .chain(resnet18_layers())
+        .filter(|l| matches!(l.op, LayerOp::Conv3x3 | LayerOp::Conv1x1))
+        .collect();
+    let mut ok = 0;
+    for _ in 0..200 {
+        let l = &layers[rng.index(layers.len())];
+        let budget = 8 * 1024 + rng.index(120 * 1024) as u64;
+        let t = Tiler { l1_budget: budget };
+        match t.tile(l) {
+            Ok(tiling) => {
+                ok += 1;
+                assert!(tiling.l1_bytes <= budget, "{}: budget", l.name);
+                let covered: usize =
+                    tiling.tiles.iter().map(|t| t.rows * t.kout).sum();
+                assert_eq!(covered, l.h_out() * l.cout, "{}", l.name);
+                // weights loaded exactly once per kout slice
+                let loads =
+                    tiling.tiles.iter().filter(|t| t.loads_weights).count();
+                assert_eq!(loads, l.cout.div_ceil(tiling.kout_per_tile));
+            }
+            Err(_) => {} // too small: allowed, as long as it's an error
+        }
+    }
+    assert!(ok > 50, "only {ok}/200 budgets tiled — sweep degenerate");
+}
+
+/// Scheduler invariant: per-layer latency is exactly the max of the three
+/// overlapped components, and energy is positive and finite.
+#[test]
+fn scheduler_latency_is_component_max() {
+    let s = Scheduler::default();
+    let mut rng = Rng::new(2);
+    for _ in 0..20 {
+        let vdd = 0.5 + rng.f64() * 0.3;
+        let op = OperatingPoint::at_vdd(vdd);
+        for cfg in [PrecisionConfig::Uniform8, PrecisionConfig::Mixed] {
+            let rep = s.network_report(&resnet20_layers(cfg), &op).unwrap();
+            for l in &rep.layers {
+                let max =
+                    l.off_us.max(l.onchip_us).max(l.exec_us);
+                assert!((l.latency_us - max).abs() < 1e-9, "{}", l.name);
+                assert!(l.energy_uj.is_finite() && l.energy_uj > 0.0);
+            }
+        }
+    }
+}
+
+/// RBE model physics under random jobs: cycles are positive, monotone in
+/// W for 3x3 (weight bits serialized), invariant in W for 1x1, and the
+/// functional bit-serial output equals the integer oracle.
+#[test]
+fn rbe_random_job_sweep() {
+    let mut rng = Rng::new(3);
+    for _ in 0..40 {
+        let mode = if rng.f64() < 0.5 {
+            RbeMode::Conv3x3
+        } else {
+            RbeMode::Conv1x1
+        };
+        let job = RbeJob {
+            mode,
+            h_out: 1 + rng.index(4),
+            w_out: 1 + rng.index(4),
+            k_in: *rng.pick(&[1, 3, 16, 32]),
+            k_out: *rng.pick(&[2, 8, 32]),
+            stride: 1 + rng.index(2),
+            w_bits: 2 + rng.index(7),
+            i_bits: 2 + rng.index(7),
+            o_bits: 2 + rng.index(7),
+        };
+        assert!(RbeTiming::cycles(&job) > 0);
+        // W monotonicity
+        if job.w_bits < 8 {
+            let mut heavier = job;
+            heavier.w_bits += 1;
+            match mode {
+                RbeMode::Conv3x3 => assert!(
+                    RbeTiming::cycles(&heavier) > RbeTiming::cycles(&job)
+                ),
+                RbeMode::Conv1x1 => assert_eq!(
+                    RbeTiming::cycles(&heavier),
+                    RbeTiming::cycles(&job)
+                ),
+            }
+        }
+        // functional equivalence on small jobs
+        if job.h_out * job.w_out * job.k_in * job.k_out < 4096 {
+            let taps = if mode == RbeMode::Conv3x3 { 9 } else { 1 };
+            let x: Vec<i32> = (0..job.h_in() * job.w_in() * job.k_in)
+                .map(|_| rng.range_i32(0, 1 << job.i_bits))
+                .collect();
+            let wh = 1 << (job.w_bits - 1);
+            let w: Vec<i32> = (0..job.k_out * job.k_in * taps)
+                .map(|_| rng.range_i32(-wh, wh))
+                .collect();
+            let nq = NormQuant::unit(job.k_out);
+            assert_eq!(
+                conv_bitserial(&job, &x, &w, &nq).unwrap(),
+                conv_reference(&job, &x, &w, &nq).unwrap(),
+                "{job:?}"
+            );
+        }
+    }
+}
+
+/// ISS matmul correctness across random shapes/kernels (the end-to-end
+/// "programs compute the right numbers" property).
+#[test]
+fn iss_matmul_random_shapes() {
+    let mut rng = Rng::new(4);
+    for trial in 0..10 {
+        let cores = *rng.pick(&[1usize, 2, 4]);
+        let kernel = *rng.pick(&[
+            MatmulKernel::Xpulp8,
+            MatmulKernel::Nn { prec: Prec::B4 },
+            MatmulKernel::MacLoad { prec: Prec::B8 },
+            MatmulKernel::MacLoad { prec: Prec::B2 },
+        ]);
+        let m = 4 * cores * (1 + rng.index(3));
+        let n = 4 * (1 + rng.index(4));
+        let lanes = kernel.prec().lanes() as usize;
+        let k = lanes * (2 + rng.index(6));
+        let p = MatmulProblem { m, n, k, kernel, cores };
+        let (a, b) = random_operands(m, n, k, kernel.prec(), trial as u64);
+        let mut cfg = ClusterConfig::default();
+        cfg.cores = cores;
+        let (c, stats) = p.run_with(cfg, &a, &b).unwrap();
+        assert_eq!(c, matmul_reference(m, n, k, &a, &b),
+                   "{kernel:?} m{m} n{n} k{k} cores{cores}");
+        assert_eq!(stats.total.macs, p.macs());
+    }
+}
+
+/// Fault injection: a program touching unmapped memory aborts the
+/// simulation with an error instead of corrupting state.
+#[test]
+fn unmapped_access_faults() {
+    let mut b = ProgramBuilder::new("fault", IsaLevel::Xpulp);
+    b.emit(Instr::Li { rd: 5, imm: 0x0060_0000 }); // not TCDM, not L2
+    b.emit(Instr::Lw { rd: 6, base: 5, offset: 0, post_inc: 0 });
+    let mut cl = Cluster::new(ClusterConfig::soc_controller());
+    cl.load_spmd(b.build().unwrap());
+    let err = cl.run().unwrap_err().to_string();
+    assert!(err.contains("unmapped"), "{err}");
+}
+
+/// Fault injection: runaway programs hit the cycle limit.
+#[test]
+fn runaway_program_hits_cycle_limit() {
+    let mut b = ProgramBuilder::new("spin", IsaLevel::Xpulp);
+    let top = b.label();
+    b.bind(top);
+    b.emit(Instr::AluImm { op: AluOp::Add, rd: 5, rs1: 5, imm: 1 });
+    b.jump(top);
+    let mut cfg = ClusterConfig::soc_controller();
+    cfg.max_cycles = 10_000;
+    let mut cl = Cluster::new(cfg);
+    cl.load_spmd(b.build().unwrap());
+    assert!(cl.run().is_err());
+}
+
+/// Disassembly smoke: every instruction of a real kernel renders and the
+/// MAC&LOAD inner loop appears with the documented 16+1 structure.
+#[test]
+fn disassembly_of_macload_kernel() {
+    let p = MatmulProblem {
+        m: 16,
+        n: 8,
+        k: 32,
+        kernel: MatmulKernel::MacLoad { prec: Prec::B4 },
+        cores: 4,
+    };
+    let mut alloc = marsellus::kernels::TcdmAlloc::new();
+    let built = p.build(&mut alloc).unwrap();
+    let text = disasm::disassemble(&built.prog.instrs);
+    assert_eq!(text.matches("pv.mlsdotps.n").count(), 16);
+    assert_eq!(text.matches("p.nnlw").count(), 6); // 5 warm-up + 1 in-loop
+    assert!(text.contains("lp.setup"));
+}
+
+/// Power-model physics: monotone in V at fixed workload/frequency, and
+/// FBB always costs leakage.
+#[test]
+fn power_model_monotonicity() {
+    let m = PowerModel;
+    let mut rng = Rng::new(5);
+    for _ in 0..100 {
+        let v = 0.5 + rng.f64() * 0.3;
+        let f = 50.0 + rng.f64() * 300.0;
+        let w = *rng.pick(&[
+            Workload::MatmulXpulp8,
+            Workload::MatmulMacLoad,
+            Workload::Rbe { duty_pct: 100 },
+            Workload::Idle,
+        ]);
+        let lo = OperatingPoint { vdd: v, freq_mhz: f, fbb_v: 0.0 };
+        let hi = OperatingPoint { vdd: v + 0.05, freq_mhz: f, fbb_v: 0.0 };
+        assert!(m.total_mw(w, &hi) > m.total_mw(w, &lo));
+        let fbb = OperatingPoint { vdd: v, freq_mhz: f, fbb_v: 0.5 };
+        assert!(m.leakage_mw(&fbb) > m.leakage_mw(&lo));
+        // and fmax is monotone in fbb
+        assert!(fmax_mhz(v, 0.5) >= fmax_mhz(v, 0.0));
+    }
+}
+
+/// TCDM data integrity under the full 16-core conflict stress of the
+/// engine test suite: stores from all cores land (no lost updates).
+#[test]
+fn no_lost_updates_under_contention() {
+    let mut b = ProgramBuilder::new("stress", IsaLevel::Xpulp);
+    // each core increments its own counter 100 times at stride 1 word
+    // (all in the same bank region to force arbitration churn)
+    b.emit(Instr::CoreId { rd: 5 });
+    b.emit(Instr::AluImm { op: AluOp::Sll, rd: 5, rs1: 5, imm: 2 });
+    b.emit(Instr::AluImm {
+        op: AluOp::Add,
+        rd: 5,
+        rs1: 5,
+        imm: TCDM_BASE as i32,
+    });
+    b.emit(Instr::Li { rd: 7, imm: 100 });
+    let (ls, le) = (b.label(), b.label());
+    b.hw_loop(0, 7, ls, le);
+    b.bind(ls);
+    b.emit(Instr::Lw { rd: 6, base: 5, offset: 0, post_inc: 0 });
+    b.emit(Instr::AluImm { op: AluOp::Add, rd: 6, rs1: 6, imm: 1 });
+    b.emit(Instr::Sw { rs: 6, base: 5, offset: 0, post_inc: 0 });
+    b.bind(le);
+    let mut cl = Cluster::new(ClusterConfig::default());
+    cl.load_spmd(b.build().unwrap());
+    cl.run().unwrap();
+    for c in 0..16 {
+        assert_eq!(cl.mem.l1[c], 100, "core {c} counter");
+    }
+}

@@ -1,0 +1,149 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: the
+//! three-way equivalence (Pallas artifact == Rust bit-serial datapath ==
+//! plain integer oracle) and manifest/zoo consistency.
+//!
+//! Tests skip gracefully when `make artifacts` has not been run.
+
+use marsellus::dnn::{Manifest, PrecisionConfig};
+use marsellus::rbe::functional::{conv_bitserial, conv_reference, NormQuant};
+use marsellus::rbe::{RbeJob, RbeMode};
+use marsellus::runtime::{Runtime, TensorArg};
+use marsellus::util::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::cpu(dir.to_str().unwrap()).expect("pjrt runtime"))
+}
+
+#[test]
+fn manifest_covers_both_network_configs() {
+    let Some(_rt) = runtime() else { return };
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    m.validate_network(PrecisionConfig::Uniform8).unwrap();
+    m.validate_network(PrecisionConfig::Mixed).unwrap();
+}
+
+#[test]
+fn every_artifact_compiles() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.list_artifacts();
+    assert!(names.len() >= 20, "{}", names.len());
+    for n in &names {
+        if n == "model" {
+            continue; // makefile sentinel, not a real module
+        }
+        rt.load(n).unwrap_or_else(|e| panic!("artifact {n}: {e}"));
+    }
+}
+
+/// Three-way equivalence on the quickstart conv: PJRT artifact output ==
+/// Rust bit-serial datapath == plain integer oracle, over random inputs.
+#[test]
+fn three_way_equivalence_quickstart() {
+    let Some(rt) = runtime() else { return };
+    let (h, cin, cout, bits, shift) = (16usize, 32usize, 32usize, 4usize, 10);
+    let name =
+        format!("conv3x3_h{h}_ci{cin}_co{cout}_s1_w{bits}i{bits}o{bits}");
+    let exe = rt.load(&name).unwrap();
+    let job = RbeJob::conv3x3(h, h, cin, cout, 1, bits, bits, bits).unwrap();
+    let mut rng = Rng::new(0xDEAD);
+    for trial in 0..3 {
+        let hp = h + 2;
+        let x: Vec<i32> =
+            (0..hp * hp * cin).map(|_| rng.range_i32(0, 16)).collect();
+        let w: Vec<i32> =
+            (0..cout * cin * 9).map(|_| rng.range_i32(-8, 8)).collect();
+        let scale: Vec<i32> =
+            (0..cout).map(|_| rng.range_i32(1, 16)).collect();
+        let bias: Vec<i32> =
+            (0..cout).map(|_| rng.range_i32(-500, 500)).collect();
+        let art = exe
+            .execute_i32(&[
+                TensorArg::new(x.clone(), vec![hp, hp, cin]),
+                TensorArg::new(w.clone(), vec![cout, cin, 3, 3]),
+                TensorArg::scalar_vec(scale.clone()),
+                TensorArg::scalar_vec(bias.clone()),
+            ])
+            .unwrap();
+        let nq = NormQuant { scale, bias, shift: shift as u32 };
+        let bit = conv_bitserial(&job, &x, &w, &nq).unwrap();
+        let oracle = conv_reference(&job, &x, &w, &nq).unwrap();
+        assert_eq!(bit, oracle, "trial {trial}: bit-serial vs oracle");
+        assert_eq!(art[0], bit, "trial {trial}: artifact vs bit-serial");
+    }
+}
+
+/// The 1x1 downsample artifact agrees with the datapath model, including
+/// the strided access pattern.
+#[test]
+fn strided_conv1x1_artifact_matches() {
+    let Some(rt) = runtime() else { return };
+    // mixed-config stage2 downsample: h32 ci16 co32 s2 w8 i4 o4
+    let name = "conv1x1_h32_ci16_co32_s2_w8i4o4";
+    let exe = rt.load(name).unwrap();
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    let e = m.get(name).expect("manifest entry");
+    let job = RbeJob {
+        mode: RbeMode::Conv1x1,
+        h_out: e.h.div_ceil(e.stride),
+        w_out: e.h.div_ceil(e.stride),
+        k_in: e.cin,
+        k_out: e.cout,
+        stride: e.stride,
+        w_bits: e.w_bits,
+        i_bits: e.i_bits,
+        o_bits: e.o_bits,
+    };
+    let mut rng = Rng::new(77);
+    let x: Vec<i32> = (0..e.h * e.h * e.cin)
+        .map(|_| rng.range_i32(0, 1 << e.i_bits))
+        .collect();
+    let w: Vec<i32> = (0..e.cout * e.cin)
+        .map(|_| rng.range_i32(-(1 << (e.w_bits - 1)), 1 << (e.w_bits - 1)))
+        .collect();
+    let scale: Vec<i32> = (0..e.cout).map(|_| rng.range_i32(1, 8)).collect();
+    let bias: Vec<i32> =
+        (0..e.cout).map(|_| rng.range_i32(-100, 100)).collect();
+    let art = exe
+        .execute_i32(&[
+            TensorArg::new(x.clone(), vec![e.h, e.h, e.cin]),
+            TensorArg::new(w.clone(), vec![e.cout, e.cin]),
+            TensorArg::scalar_vec(scale.clone()),
+            TensorArg::scalar_vec(bias.clone()),
+        ])
+        .unwrap();
+    // NOTE: the artifact gathers x[::2, ::2] of the *full* input, i.e.
+    // h_out = ceil(h/2); the functional model must match.
+    let nq = NormQuant { scale, bias, shift: e.shift };
+    // the job expects the strided input extent: (h_out-1)*stride + 1 rows
+    let need = (job.h_out - 1) * job.stride + 1;
+    let mut xs = Vec::with_capacity(need * need * e.cin);
+    for r in 0..need {
+        xs.extend_from_slice(&x[r * e.h * e.cin..(r * e.h + need) * e.cin]);
+    }
+    let bit = conv_bitserial(&job, &xs, &w, &nq).unwrap();
+    assert_eq!(art[0], bit);
+}
+
+/// Malformed invocations fail loudly rather than corrupting memory.
+#[test]
+fn wrong_shape_is_an_error() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("avgpool_h8_k64").unwrap();
+    let bad = exe.execute_i32(&[TensorArg::new(vec![0; 10], vec![10])]);
+    assert!(bad.is_err());
+}
+
+#[test]
+fn missing_artifact_is_an_error() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.load("no_such_artifact").is_err());
+}
