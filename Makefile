@@ -1,0 +1,27 @@
+PYTHON ?= python
+ARTIFACTS ?= rust/artifacts
+
+.PHONY: build test pytest artifacts bench bench-smoke clean-artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+pytest:
+	$(PYTHON) -m pytest python/tests -q
+
+# Lower every DNN layer to an HLO-text artifact + manifest (only needed
+# for the PJRT backend; the native backend ships the same zoo built in).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS)
+
+bench:
+	cargo bench --bench paper_benches
+
+bench-smoke:
+	cargo bench --bench paper_benches -- --smoke --json BENCH_ci.json
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

@@ -1,9 +1,11 @@
 //! Quickstart: offload one convolution to the (simulated) RBE, get the
-//! functional result through the AOT-compiled Pallas artifact, and read
-//! the cycle/power estimates from the calibrated models.
+//! functional result through the execution backend (native by default —
+//! no artifacts needed; set `MARSELLUS_BACKEND=pjrt` after `make
+//! artifacts` for the PJRT path), and read the cycle/power estimates
+//! from the calibrated models.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use anyhow::Result;
@@ -15,8 +17,8 @@ use marsellus::util::{Args, Rng};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    let rt = Runtime::cpu(args.get_or("artifacts", "artifacts"))?;
-    println!("PJRT platform: {}", rt.platform());
+    let rt = Runtime::cpu(Runtime::resolve_artifacts_dir(args.get("artifacts")))?;
+    println!("backend: {} ({})", rt.kind().as_str(), rt.platform());
 
     // The quickstart artifact: 16x16x32 -> 32 channels, 3x3, W4/I4/O4.
     let (h, cin, cout, bits, shift) = (16usize, 32usize, 32usize, 4usize, 10);
@@ -34,7 +36,8 @@ fn main() -> Result<()> {
     let scale: Vec<i32> = (0..cout).map(|_| rng.range_i32(1, 16)).collect();
     let bias: Vec<i32> = (0..cout).map(|_| rng.range_i32(-500, 500)).collect();
 
-    // 1) functional result via the L1 Pallas kernel, AOT-compiled to HLO
+    // 1) functional result via the execution backend (native RBE model,
+    //    or the L1 Pallas kernel AOT-compiled to HLO under PJRT)
     let out = exe.execute_i32(&[
         TensorArg::new(x.clone(), vec![hp, hp, cin]),
         TensorArg::new(w.clone(), vec![cout, cin, 3, 3]),
@@ -47,7 +50,7 @@ fn main() -> Result<()> {
     let job = RbeJob::conv3x3(h, h, cin, cout, 1, bits, bits, bits)?;
     let nq = NormQuant { scale, bias, shift };
     let ours = conv_bitserial(&job, &x, &w, &nq)?;
-    assert_eq!(ours, out[0], "bit-serial model vs PJRT artifact");
+    assert_eq!(ours, out[0], "bit-serial model vs backend result");
     println!("bit-exact against the Rust bit-serial RBE model ✓");
 
     // 3) timing + power at the nominal operating point

@@ -1,12 +1,14 @@
 //! End-to-end driver (DESIGN.md §End-to-end validation): run full
 //! ResNet-20/CIFAR-10 inferences through the three-layer stack —
-//! functional numerics from the AOT Pallas artifacts via PJRT, timing and
-//! energy from the calibrated SoC simulator — in both precision
+//! functional numerics from the execution backend (native RBE models by
+//! default, AOT Pallas artifacts under `MARSELLUS_BACKEND=pjrt`), timing
+//! and energy from the calibrated SoC simulator — in both precision
 //! configurations and at several operating points, reproducing the
-//! paper's Figs. 17–18 rows for this workload.
+//! paper's Figs. 17–18 rows for this workload. The batch fans out over
+//! worker threads via `Coordinator::infer_batch`.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example resnet20_cifar10
+//! cargo run --release --example resnet20_cifar10 [--batch N] [--threads T]
 //! ```
 
 use anyhow::Result;
@@ -17,8 +19,11 @@ use marsellus::util::{Args, Rng};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    let coord = Coordinator::new(args.get_or("artifacts", "artifacts"))?;
+    let dir = marsellus::runtime::Runtime::resolve_artifacts_dir(args.get("artifacts"));
+    let coord = Coordinator::new(dir)?;
     let batch = args.get_usize("batch", 4)?;
+    anyhow::ensure!(batch >= 1, "--batch must be >= 1, got {batch}");
+    let threads = args.get_usize("threads", 4)?;
 
     let points = [
         ("0.80 V", OperatingPoint::at_vdd(0.8)),
@@ -32,27 +37,44 @@ fn main() -> Result<()> {
     for config in [PrecisionConfig::Uniform8, PrecisionConfig::Mixed] {
         println!("=== ResNet-20/CIFAR-10, {} ===", config.as_str());
         let mut rng = Rng::new(2024);
-        let mut logits_acc = 0i64;
-        for img in 0..batch {
-            let image = random_image(8, &mut rng);
-            let res = coord.infer_resnet20(
-                config,
-                &OperatingPoint::at_vdd(0.8),
-                &image,
-                42, // fixed weights across the batch
-                if img == 0 { &["stage3.b2.conv1", "stage2.b0.down"] }
-                else { &[] },
-            )?;
-            logits_acc += res.logits.iter().map(|&v| v as i64).sum::<i64>();
-            if img == 0 {
-                println!(
-                    "image 0 logits: {:?} (cross-checked {} layers \
-                     bit-exactly vs the Rust RBE datapath model)",
-                    res.logits, res.cross_checked
-                );
-            }
-        }
-        println!("batch of {batch} done (logit checksum {logits_acc})");
+
+        // image 0 runs solo with in-flight cross-checking against the
+        // Rust bit-serial datapath model ...
+        let image0 = random_image(8, &mut rng);
+        let res0 = coord.infer_resnet20(
+            config,
+            &OperatingPoint::at_vdd(0.8),
+            &image0,
+            42, // fixed weights across the batch
+            &["stage3.b2.conv1", "stage2.b0.down"],
+        )?;
+        println!(
+            "image 0 logits: {:?} (cross-checked {} layers bit-exactly \
+             vs the Rust RBE datapath model)",
+            res0.logits, res0.cross_checked
+        );
+
+        // ... then the full batch fans out over worker threads sharing
+        // the runtime (image 0 again first: logits must be identical).
+        let mut images = vec![image0];
+        images.extend((1..batch).map(|_| random_image(8, &mut rng)));
+        let results = coord.infer_batch(
+            config,
+            &OperatingPoint::at_vdd(0.8),
+            &images,
+            42,
+            threads,
+        )?;
+        assert_eq!(results[0].logits, res0.logits, "batch-of-1 vs batch-of-N");
+        let logits_acc: i64 = results
+            .iter()
+            .flat_map(|r| r.logits.iter())
+            .map(|&v| v as i64)
+            .sum();
+        println!(
+            "batch of {} on {threads} thread(s) done (logit checksum {logits_acc})",
+            images.len()
+        );
         for (name, op) in &points {
             let res = coord.infer_resnet20(
                 config,

@@ -82,6 +82,7 @@ def main() -> int:
                     help="(compat) single-file target; triggers full build "
                          "into its directory")
     ap.add_argument("--configs", nargs="*",
+                    choices=sorted(model.PRECISIONS),
                     default=["uniform8", "mixed"])
     ap.add_argument("--only", default=None,
                     help="only build the artifact with this name")

@@ -159,10 +159,16 @@ def _add_requant_kernel(a_ref, b_ref, o_ref, *, scale_a, scale_b, shift,
 
 
 def _avgpool_kernel(x_ref, o_ref, *, shift):
-    """Global average pool: sum over H,W then arithmetic shift (8x8 = 2^6)."""
-    x = x_ref[...].astype(jnp.int32)
+    """Global average pool: sum over H,W then arithmetic shift (8x8 = 2^6).
+
+    The sum is widened to int64 (matching `ref.avgpool_ref` and the >32-bit
+    on-chip accumulation headroom) and cast back to the int32 output ref --
+    under `jax_enable_x64` the reduction promotes to int64 either way, and
+    an uncast store is a dtype error in pallas.
+    """
+    x = x_ref[...].astype(jnp.int64)
     s = jnp.sum(x, axis=(0, 1))
-    o_ref[...] = jnp.right_shift(s, shift)
+    o_ref[...] = jnp.right_shift(s, shift).astype(jnp.int32)
 
 
 def rbe_conv3x3(x, w, scale, bias, *, w_bits, i_bits, o_bits, shift,

@@ -1,0 +1,8 @@
+"""Make the `compile` package importable when pytest runs from the repo
+root (`python -m pytest python/tests -q`): tests import `compile.model`
+etc. relative to this directory."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

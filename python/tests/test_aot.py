@@ -1,0 +1,43 @@
+"""AOT pipeline tests: artifact-spec gathering is pure python (always
+runs); the actual Pallas/StableHLO lowering is exercised as a smoke test
+that skips gracefully on jax builds that cannot lower (CPU-only wheels
+with mismatched xla_client internals, missing pallas, etc.)."""
+
+import pytest
+
+pytest.importorskip("jax", reason="jax not installed")
+
+from compile import aot, model
+
+
+def test_gather_specs_covers_both_configs_plus_quickstart():
+    specs = aot.gather_specs(["uniform8", "mixed"])
+    names = set(specs)
+    for cfg in ("uniform8", "mixed"):
+        for spec in model.resnet20_layers(cfg):
+            assert spec.artifact() in names
+    qs = aot.quickstart_spec()
+    assert qs.artifact() in names
+    assert specs[qs.artifact()].shift == 10
+
+
+def test_manifest_entry_round_trips_layer_signature():
+    spec = aot.quickstart_spec()
+    _, shapes = model.layer_fn(spec)
+    entry = aot.manifest_entry(spec.artifact(), spec, shapes)
+    assert entry["op"] == "conv3x3"
+    assert (entry["h"], entry["cin"], entry["cout"]) == (16, 32, 32)
+    assert entry["shift"] == 10
+    assert entry["arg_shapes"][0] == [18, 18, 32]  # padded plane
+
+
+def test_quickstart_artifact_lowers_to_hlo_text():
+    spec = aot.quickstart_spec()
+    fn, shapes = model.layer_fn(spec)
+    try:
+        text = aot.to_hlo_text(fn, shapes)
+    except Exception as e:
+        pytest.skip(f"Pallas-AOT lowering unavailable on this jax build: {e}")
+    assert "HloModule" in text
+    # four parameters: activation, weights, scale, bias
+    assert text.count("parameter") >= 4

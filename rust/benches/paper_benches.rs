@@ -6,6 +6,11 @@
 //! self-contained harness (`harness = false`): each benchmark runs the
 //! full generator (ISS execution, RBE/power models, ABB co-simulation),
 //! timed over several iterations with a minimum-of-N policy.
+//!
+//! Flags (after `--`):
+//!   --smoke | --quick   cheap subset, 1 iteration each — the CI mode
+//!   --json PATH         also write machine-readable results (CI uploads
+//!                       BENCH_ci.json to record the perf trajectory)
 
 use std::time::Instant;
 
@@ -36,9 +41,71 @@ fn bench(id: &'static str, iters: u32) -> BenchResult {
     BenchResult { id, best_ms: best, iters, headline }
 }
 
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Cargo runs bench binaries with cwd = the package root (`rust/`);
+/// resolve relative `--json` paths against the workspace root so
+/// `cargo bench -- --json BENCH_ci.json` lands where CI expects it.
+fn resolve_out_path(path: &str) -> std::path::PathBuf {
+    let p = std::path::Path::new(path);
+    if p.is_absolute() {
+        return p.to_path_buf();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join(p)
+}
+
+fn write_json(path: &str, mode: &str, results: &[BenchResult], total: f64) {
+    let resolved = resolve_out_path(path);
+    let path = resolved.display().to_string();
+    let path = path.as_str();
+    let mut rows = Vec::new();
+    for r in results {
+        rows.push(format!(
+            "  {{\"id\": \"{}\", \"best_ms\": {:.3}, \"iters\": {}, \
+             \"headline\": \"{}\"}}",
+            r.id,
+            r.best_ms,
+            r.iters,
+            json_escape(&r.headline)
+        ));
+    }
+    let doc = format!(
+        "{{\n \"mode\": \"{mode}\",\n \"total_best_ms\": {total:.3},\n \
+         \"benches\": [\n{}\n ]\n}}\n",
+        rows.join(",\n")
+    );
+    if let Err(e) = std::fs::write(path, doc) {
+        eprintln!("warning: could not write {path}: {e}");
+    } else {
+        println!("wrote {path}");
+    }
+}
+
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let flag = |f: &str| argv.iter().any(|a| a == f);
+    // `cargo bench -- --smoke` (or --quick): the CI subset
+    let smoke = flag("--smoke") || flag("--quick");
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
+
     // figures sorted cheap-to-expensive; heavy ISS figures get 1 iter
-    let plan: &[(&str, u32)] = &[
+    let full_plan: &[(&str, u32)] = &[
         ("fig7", 5),
         ("fig8", 5),
         ("fig9", 5),
@@ -59,13 +126,30 @@ fn main() {
         ("ablate-abb", 1),
         ("ablate-banks", 1),
     ];
+    // smoke: the cheap generators only, one iteration — enough to keep a
+    // comparable perf trajectory across CI runs without the ISS-heavy
+    // figures' minutes of wall clock
+    let smoke_plan: &[(&str, u32)] = &[
+        ("fig7", 1),
+        ("fig8", 1),
+        ("fig9", 1),
+        ("fig10", 1),
+        ("fig13", 1),
+        ("tab1", 1),
+        ("fig17", 1),
+        ("fig18", 1),
+    ];
+    let plan = if smoke { smoke_plan } else { full_plan };
+
     println!(
         "paper reproduction benches (one per table/figure; \
-         min over N iters)\n"
+         min over N iters){}\n",
+        if smoke { " [smoke]" } else { "" }
     );
     println!("{:<8} {:>10} {:>6}   headline", "bench", "best ms", "iters");
     println!("{}", "-".repeat(78));
     let mut total = 0.0;
+    let mut results = Vec::new();
     for &(id, iters) in plan {
         let r = bench(id, iters);
         println!(
@@ -76,13 +160,20 @@ fn main() {
             &r.headline[..r.headline.len().min(48)]
         );
         total += r.best_ms;
+        results.push(r);
     }
     println!("{}", "-".repeat(78));
     println!("total (best-iteration sum): {total:.0} ms");
 
-    // kernel micro-benches: simulator throughput on the hot paths
-    println!("\nsimulator hot-path micro-benches");
-    micro_benches();
+    if let Some(path) = json_path {
+        write_json(&path, if smoke { "smoke" } else { "full" }, &results, total);
+    }
+
+    if !smoke {
+        // kernel micro-benches: simulator throughput on the hot paths
+        println!("\nsimulator hot-path micro-benches");
+        micro_benches();
+    }
 }
 
 fn micro_benches() {

@@ -1,20 +1,26 @@
-//! End-to-end quantized inference through the AOT artifacts.
+//! End-to-end quantized inference through the execution backend.
 //!
 //! The coordinator walks the layer schedule in execution order, feeding
-//! each layer's PJRT executable (functional result, bit-exact vs. the
-//! Pallas kernels) while the DORY scheduler produces the per-layer
-//! latency/energy from the cycle models — the functional/timing split of
-//! DESIGN.md. Residual bookkeeping (block inputs, downsample shortcuts)
-//! mirrors `model.resnet20_forward`.
+//! each layer's executable (functional result, bit-exact vs. the Pallas
+//! kernels regardless of backend) while the DORY scheduler produces the
+//! per-layer latency/energy from the cycle models — the functional/timing
+//! split of DESIGN.md. Residual bookkeeping (block inputs, downsample
+//! shortcuts) mirrors `model.resnet20_forward`.
+//!
+//! Batch serving: [`Coordinator::infer_batch`] fans a batch of images out
+//! over scoped worker threads sharing one `Runtime` (backends are
+//! `Send + Sync`, and the compile cache lives behind the backend), the
+//! first step toward the ROADMAP's heavy-traffic serving story.
 
 use std::collections::HashMap;
+use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
 use crate::dnn::{resnet20_layers, Layer, LayerOp, Manifest, PrecisionConfig};
 use crate::mapping::{NetworkReport, Scheduler};
 use crate::power::OperatingPoint;
-use crate::rbe::functional::{conv_bitserial, NormQuant};
+use crate::rbe::functional::{conv_bitserial, trim_input, NormQuant};
 use crate::rbe::{RbeJob, RbeMode};
 use crate::runtime::{Runtime, TensorArg};
 use crate::util::Rng;
@@ -26,7 +32,7 @@ use super::params::{random_layer_params, LayerParams};
 pub struct InferenceResult {
     pub logits: Vec<i32>,
     pub report: NetworkReport,
-    /// Layers whose artifact output was cross-checked against the Rust
+    /// Layers whose backend output was cross-checked against the Rust
     /// bit-serial RBE model.
     pub cross_checked: usize,
 }
@@ -39,11 +45,18 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    pub fn new(artifacts_dir: &str) -> Result<Self> {
-        let runtime = Runtime::cpu(artifacts_dir)?;
-        let manifest =
-            Manifest::load(std::path::Path::new(artifacts_dir))
-                .context("loading manifest.tsv (run `make artifacts`)")?;
+    /// Coordinator over the environment-selected backend
+    /// (`MARSELLUS_BACKEND`, default native). Works without `make
+    /// artifacts`: the manifest falls back to the built-in layer zoo.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let runtime = Runtime::from_env(artifacts_dir)?;
+        Self::with_runtime(runtime)
+    }
+
+    /// Coordinator over an explicitly constructed runtime/backend.
+    pub fn with_runtime(runtime: Runtime) -> Result<Self> {
+        let manifest = Manifest::load_or_builtin(runtime.artifacts_dir())
+            .context("loading artifact manifest")?;
         Ok(Self { runtime, manifest, scheduler: Scheduler::default() })
     }
 
@@ -59,11 +72,7 @@ impl Coordinator {
         out
     }
 
-    fn exec_layer(
-        &self,
-        l: &Layer,
-        inputs: &[TensorArg],
-    ) -> Result<Vec<i32>> {
+    fn exec_layer(&self, l: &Layer, inputs: &[TensorArg]) -> Result<Vec<i32>> {
         let exe = self
             .runtime
             .load(&l.artifact())
@@ -72,8 +81,20 @@ impl Coordinator {
         Ok(outs.into_iter().next().unwrap())
     }
 
+    /// Deterministic per-layer parameters for the deployed network: the
+    /// weights are a function of `seed` alone, shared by every image of
+    /// a batch.
+    fn network_params(layers: &[Layer], seed: u64) -> HashMap<String, LayerParams> {
+        let mut rng = Rng::new(seed);
+        layers
+            .iter()
+            .filter(|l| l.op.on_rbe())
+            .map(|l| (l.name.clone(), random_layer_params(l, &mut rng)))
+            .collect()
+    }
+
     /// Run ResNet-20 end to end. `cross_check_layers` names layers whose
-    /// artifact output is re-computed with the Rust bit-serial model and
+    /// backend output is re-computed with the Rust bit-serial model and
     /// compared bit-exactly (expensive; pick small layers).
     pub fn infer_resnet20(
         &self,
@@ -85,20 +106,28 @@ impl Coordinator {
     ) -> Result<InferenceResult> {
         let layers = resnet20_layers(config);
         self.manifest.validate_network(config)?;
-        let mut rng = Rng::new(seed);
-        let params: HashMap<String, LayerParams> = layers
-            .iter()
-            .filter(|l| l.op.on_rbe())
-            .map(|l| (l.name.clone(), random_layer_params(l, &mut rng)))
-            .collect();
+        let params = Self::network_params(&layers, seed);
+        let (logits, cross_checked) =
+            self.run_network(&layers, &params, image, cross_check_layers)?;
+        let report = self.scheduler.network_report(&layers, op)?;
+        Ok(InferenceResult { logits, report, cross_checked })
+    }
 
+    /// Walk the layer schedule for one image against prepared weights.
+    fn run_network(
+        &self,
+        layers: &[Layer],
+        params: &HashMap<String, LayerParams>,
+        image: &[i32],
+        cross_check_layers: &[&str],
+    ) -> Result<(Vec<i32>, usize)> {
         let mut cur = image.to_vec();
         let mut cur_hw = (32usize, 3usize); // (h, channels)
         let mut block_in: Vec<i32> = cur.clone();
         let mut down_out: Vec<i32> = Vec::new();
         let mut cross_checked = 0usize;
 
-        for l in &layers {
+        for l in layers {
             match l.op {
                 LayerOp::Conv3x3 => {
                     if l.name.ends_with(".conv0") {
@@ -174,18 +203,93 @@ impl Coordinator {
             }
         }
         let _ = cur_hw;
+        Ok((cur, cross_checked))
+    }
+
+    /// Run a batch of images through ResNet-20 in parallel over
+    /// `threads` scoped worker threads sharing this coordinator (the
+    /// backend and its compile cache are `Send + Sync`).
+    ///
+    /// All images share the same `seed`, i.e. the same network weights —
+    /// the batch is N requests against one deployed model. Results come
+    /// back in input order and are bitwise independent of `threads`:
+    /// `infer_batch(.., &[img], .., 1)` and the same image inside an
+    /// 8-wide batch produce identical logits.
+    pub fn infer_batch(
+        &self,
+        config: PrecisionConfig,
+        op: &OperatingPoint,
+        images: &[Vec<i32>],
+        seed: u64,
+        threads: usize,
+    ) -> Result<Vec<InferenceResult>> {
+        let n = images.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        // Per-network state is prepared ONCE for the whole batch: the
+        // layer schedule, the seed-derived weights and the timing/energy
+        // report are image-independent and shared read-only by workers.
+        let layers = resnet20_layers(config);
+        self.manifest.validate_network(config)?;
+        let params = Self::network_params(&layers, seed);
         let report = self.scheduler.network_report(&layers, op)?;
-        Ok(InferenceResult { logits: cur, report, cross_checked })
+
+        let threads = threads.clamp(1, n);
+        let mut logits: Vec<Option<Result<Vec<i32>>>> = Vec::new();
+        if threads == 1 {
+            for img in images {
+                logits.push(Some(
+                    self.run_network(&layers, &params, img, &[])
+                        .map(|(l, _)| l),
+                ));
+            }
+        } else {
+            let slots: Vec<Mutex<Option<Result<Vec<i32>>>>> =
+                (0..n).map(|_| Mutex::new(None)).collect();
+            std::thread::scope(|s| {
+                for t in 0..threads {
+                    let (slots, layers, params) = (&slots, &layers, &params);
+                    s.spawn(move || {
+                        let mut i = t;
+                        while i < n {
+                            let r = self
+                                .run_network(layers, params, &images[i], &[])
+                                .map(|(l, _)| l);
+                            *slots[i].lock().unwrap() = Some(r);
+                            i += threads;
+                        }
+                    });
+                }
+            });
+            logits = slots
+                .into_iter()
+                .map(|slot| slot.into_inner().unwrap())
+                .collect();
+        }
+        logits
+            .into_iter()
+            .enumerate()
+            .map(|(i, slot)| {
+                let l = slot
+                    .unwrap_or_else(|| panic!("batch slot {i} never filled"))?;
+                Ok(InferenceResult {
+                    logits: l,
+                    report: report.clone(),
+                    cross_checked: 0,
+                })
+            })
+            .collect()
     }
 
     /// Re-compute a conv layer with the Rust bit-serial datapath model
-    /// and compare bit-exactly with the artifact output.
+    /// and compare bit-exactly with the backend output.
     fn cross_check(
         &self,
         l: &Layer,
         input: &[i32],
         p: &LayerParams,
-        artifact_out: &[i32],
+        backend_out: &[i32],
     ) -> Result<()> {
         let h = l.h_out();
         let job = match l.op {
@@ -218,28 +322,15 @@ impl Coordinator {
             bias: p.bias.clone(),
             shift: l.shift,
         };
-        // The artifacts take the layer's full input plane; the datapath
+        // The backend takes the layer's full input plane; the datapath
         // model wants exactly the strided extent ((h_out-1)*stride + k).
-        let need = job.h_in();
         let full = if l.op == LayerOp::Conv3x3 { l.h + 2 } else { l.h };
-        let trimmed: Vec<i32>;
-        let input = if need == full {
-            input
-        } else {
-            let c = l.cin;
-            let mut v = Vec::with_capacity(need * need * c);
-            for r in 0..need {
-                v.extend_from_slice(
-                    &input[r * full * c..(r * full + need) * c],
-                );
-            }
-            trimmed = v;
-            &trimmed
-        };
-        let ours = conv_bitserial(&job, input, &p.w, &nq)?;
+        let input = trim_input(input, full, job.h_in(), l.cin);
+        let ours = conv_bitserial(&job, &input, &p.w, &nq)?;
         anyhow::ensure!(
-            ours == artifact_out,
-            "bit-serial model and PJRT artifact disagree on layer {}",
+            ours == backend_out,
+            "bit-serial model and {} backend disagree on layer {}",
+            self.runtime.kind().as_str(),
             l.name
         );
         Ok(())

@@ -1,12 +1,16 @@
-//! The leader: ties the PJRT runtime (functional numerics), the DORY
-//! scheduler (timing/energy), the RBE functional model (cross-checking)
-//! and the ABB machinery into end-to-end flows.
+//! The leader: ties the execution runtime (functional numerics via the
+//! native or PJRT backend), the DORY scheduler (timing/energy), the RBE
+//! functional model (cross-checking) and the ABB machinery into
+//! end-to-end flows.
 //!
-//! Python never appears here — the artifacts were AOT-compiled at build
-//! time and the coordinator only loads/executes them through PJRT.
+//! Python never appears here — layer numerics come either from the
+//! in-tree native backend or from artifacts AOT-compiled at build time;
+//! either way the coordinator only loads/executes them through the
+//! `runtime` abstraction. Batches fan out over scoped threads sharing
+//! one runtime ([`Coordinator::infer_batch`]).
 
 mod infer;
 mod params;
 
-pub use infer::{InferenceResult, Coordinator};
+pub use infer::{Coordinator, InferenceResult};
 pub use params::{random_image, random_layer_params, LayerParams};

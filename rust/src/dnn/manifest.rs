@@ -7,7 +7,7 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use super::layer::{Layer, LayerOp, PrecisionConfig};
-use super::resnet::resnet20_layers;
+use super::resnet::{quickstart_layer, resnet20_layers};
 use crate::util::TsvTable;
 
 /// One manifest row (mirrors aot.manifest_entry minus arg shapes, which
@@ -57,6 +57,54 @@ impl Manifest {
         Ok(Self { entries })
     }
 
+    /// Build a manifest from layer descriptors (no disk involved): one
+    /// entry per unique artifact name, exactly like `aot.gather_specs`.
+    pub fn from_layers<'a>(layers: impl IntoIterator<Item = &'a Layer>) -> Self {
+        let mut entries = HashMap::new();
+        for l in layers {
+            let name = l.artifact();
+            entries
+                .entry(name.clone())
+                .or_insert_with(|| entry_from_layer(name, l));
+        }
+        Self { entries }
+    }
+
+    /// The built-in artifact zoo: every layer of both ResNet-20 precision
+    /// configurations plus the standalone quickstart conv — the same set
+    /// `python/compile/aot.py` lowers. This is what the native backend
+    /// executes when `make artifacts` has never been run.
+    pub fn builtin() -> Self {
+        let mut layers = resnet20_layers(PrecisionConfig::Uniform8);
+        layers.extend(resnet20_layers(PrecisionConfig::Mixed));
+        layers.push(quickstart_layer());
+        Self::from_layers(layers.iter())
+    }
+
+    /// The built-in zoo, extended/overridden by `manifest.tsv` when the
+    /// artifacts directory has one. Errors only on a *corrupt* manifest;
+    /// a missing file silently falls back to the built-in zoo.
+    pub fn load_or_builtin(artifacts_dir: &Path) -> Result<Self> {
+        let mut m = Self::builtin();
+        if artifacts_dir.join("manifest.tsv").exists() {
+            let disk = Self::load(artifacts_dir)?;
+            m.entries.extend(disk.entries);
+        }
+        Ok(m)
+    }
+
+    /// All artifact names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Iterate over all entries (arbitrary order).
+    pub fn entries(&self) -> impl Iterator<Item = &ManifestEntry> {
+        self.entries.values()
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -88,6 +136,21 @@ impl Manifest {
     }
 }
 
+fn entry_from_layer(name: String, l: &Layer) -> ManifestEntry {
+    ManifestEntry {
+        name,
+        op: l.op,
+        h: l.h,
+        cin: l.cin,
+        cout: l.cout,
+        stride: l.stride,
+        w_bits: l.w_bits,
+        i_bits: l.i_bits,
+        o_bits: l.o_bits,
+        shift: l.shift,
+    }
+}
+
 fn entry_matches(e: &ManifestEntry, l: &Layer) -> bool {
     e.op == l.op
         && e.h == l.h
@@ -104,6 +167,24 @@ mod tests {
 
     fn artifacts_dir() -> std::path::PathBuf {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn builtin_manifest_covers_both_configs() {
+        let m = Manifest::builtin();
+        assert!(m.len() >= 20, "{} artifacts", m.len());
+        m.validate_network(PrecisionConfig::Uniform8).unwrap();
+        m.validate_network(PrecisionConfig::Mixed).unwrap();
+        // quickstart spec keeps its hand-picked shift (not shift_for)
+        let qs = m.get("conv3x3_h16_ci32_co32_s1_w4i4o4").unwrap();
+        assert_eq!(qs.shift, 10);
+    }
+
+    #[test]
+    fn load_or_builtin_without_disk_equals_builtin() {
+        let dir = std::path::Path::new("/nonexistent-artifacts-dir");
+        let m = Manifest::load_or_builtin(dir).unwrap();
+        assert_eq!(m.names(), Manifest::builtin().names());
     }
 
     #[test]

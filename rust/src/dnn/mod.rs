@@ -13,5 +13,5 @@ pub mod manifest;
 pub mod resnet;
 
 pub use layer::{artifact_name, Layer, LayerOp, PrecisionConfig};
-pub use manifest::Manifest;
-pub use resnet::{resnet18_layers, resnet20_layers};
+pub use manifest::{Manifest, ManifestEntry};
+pub use resnet::{quickstart_layer, resnet18_layers, resnet20_layers};

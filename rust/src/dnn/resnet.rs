@@ -154,6 +154,25 @@ pub fn resnet20_layers(config: PrecisionConfig) -> Vec<Layer> {
     layers
 }
 
+/// The standalone quickstart conv artifact (mirrors
+/// `python/compile/aot.py::quickstart_spec`, including its hand-picked
+/// normquant shift of 10 — *not* the `shift_for` value).
+pub fn quickstart_layer() -> Layer {
+    Layer {
+        op: LayerOp::Conv3x3,
+        name: "quickstart".into(),
+        h: 16,
+        cin: 32,
+        cout: 32,
+        stride: 1,
+        w_bits: 4,
+        i_bits: 4,
+        o_bits: 4,
+        shift: 10,
+        residual_of: None,
+    }
+}
+
 /// ResNet-18/ImageNet layer shapes, used for the Table II timing rows
 /// (HAWQ 4×4-bit per the paper). The 7×7/s2 stem is scheduled as an
 /// MAC-equivalent 3×3 job over a folded input (DORY-style im2row of the

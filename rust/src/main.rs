@@ -1,12 +1,16 @@
 //! `marsellus` CLI — leader entrypoint for the Marsellus SoC reproduction.
 //!
 //! ```text
-//! marsellus smoke   [--artifacts DIR]        check the PJRT runtime
+//! marsellus smoke   [--artifacts DIR]        check the execution runtime
 //! marsellus figure  <id>|all [--fast]        regenerate a paper figure
 //! marsellus infer   [--artifacts DIR] [--config uniform8|mixed]
 //!                   [--vdd V] [--seed N]     end-to-end ResNet-20
+//! marsellus batch   [--n N] [--threads T] [--config C] [--seed S]
+//!                                            parallel batch inference
 //! marsellus list                             list figure ids
 //! ```
+//!
+//! Backend selection: `MARSELLUS_BACKEND=native|pjrt` (default native).
 
 use anyhow::{bail, Result};
 use marsellus::coordinator::{random_image, Coordinator};
@@ -20,6 +24,7 @@ fn main() -> Result<()> {
         Some("smoke") => smoke(&args),
         Some("figure") => figure(&args),
         Some("infer") => infer(&args),
+        Some("batch") => batch(&args),
         Some("list") => {
             for id in marsellus::figures::ALL {
                 println!("{id}");
@@ -28,16 +33,20 @@ fn main() -> Result<()> {
         }
         other => {
             eprintln!(
-                "usage: marsellus <smoke|figure|infer|list> [options]"
+                "usage: marsellus <smoke|figure|infer|batch|list> [options]"
             );
             bail!("unknown command {other:?}")
         }
     }
 }
 
+fn artifacts_dir(args: &Args) -> std::path::PathBuf {
+    marsellus::runtime::Runtime::resolve_artifacts_dir(args.get("artifacts"))
+}
+
 fn smoke(args: &Args) -> Result<()> {
-    let rt =
-        marsellus::runtime::Runtime::cpu(args.get_or("artifacts", "artifacts"))?;
+    let rt = marsellus::runtime::Runtime::cpu(artifacts_dir(args))?;
+    println!("backend   = {}", rt.kind().as_str());
     println!("platform  = {}", rt.platform());
     let names = rt.list_artifacts();
     println!("artifacts = {}", names.len());
@@ -70,18 +79,22 @@ fn figure(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn infer(args: &Args) -> Result<()> {
-    let coord = Coordinator::new(args.get_or("artifacts", "artifacts"))?;
-    let config = match args.get_or("config", "mixed") {
-        "uniform8" => PrecisionConfig::Uniform8,
-        "mixed" => PrecisionConfig::Mixed,
+fn parse_config(args: &Args) -> Result<PrecisionConfig> {
+    match args.get_or("config", "mixed") {
+        "uniform8" => Ok(PrecisionConfig::Uniform8),
+        "mixed" => Ok(PrecisionConfig::Mixed),
         other => bail!("unknown config {other}"),
-    };
+    }
+}
+
+fn infer(args: &Args) -> Result<()> {
+    let coord = Coordinator::new(artifacts_dir(args))?;
+    let config = parse_config(args)?;
     let vdd = args.get_f64("vdd", 0.8)?;
     let seed = args.get_usize("seed", 42)? as u64;
     let mut rng = marsellus::util::Rng::new(seed);
-    let i_bits = if config == PrecisionConfig::Uniform8 { 8 } else { 8 };
-    let image = random_image(i_bits, &mut rng);
+    // the stem consumes 8-bit activations in both precision configs
+    let image = random_image(8, &mut rng);
     let res = coord.infer_resnet20(
         config,
         &OperatingPoint::at_vdd(vdd),
@@ -97,6 +110,54 @@ fn infer(args: &Args) -> Result<()> {
         res.report.total_latency_us(),
         res.report.total_energy_uj(),
         res.report.tops_per_w()
+    );
+    Ok(())
+}
+
+fn batch(args: &Args) -> Result<()> {
+    let coord = Coordinator::new(artifacts_dir(args))?;
+    let config = parse_config(args)?;
+    let n = args.get_usize("n", 8)?;
+    let threads = args.get_usize("threads", 4)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let vdd = args.get_f64("vdd", 0.8)?;
+
+    let mut rng = marsellus::util::Rng::new(seed ^ 0xBA7C4);
+    let images: Vec<Vec<i32>> =
+        (0..n).map(|_| random_image(8, &mut rng)).collect();
+
+    let t0 = std::time::Instant::now();
+    let results = coord.infer_batch(
+        config,
+        &OperatingPoint::at_vdd(vdd),
+        &images,
+        seed,
+        threads,
+    )?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    for (i, r) in results.iter().enumerate() {
+        let top = r
+            .logits
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, v)| *v)
+            .map(|(c, _)| c)
+            .unwrap_or(0);
+        println!("image {i}: class {top}  logits {:?}", r.logits);
+    }
+    let sim_us: f64 =
+        results.iter().map(|r| r.report.total_latency_us()).sum();
+    println!(
+        "batch of {n} on {threads} thread(s) [{} backend]: host {wall_ms:.0} ms, \
+         simulated SoC time {sim_us:.0} µs total",
+        coord.runtime.kind().as_str(),
+    );
+    println!(
+        "runtime cache: {} executables, {} hits / {} compiles",
+        coord.runtime.cached_executables(),
+        coord.runtime.cache_hits(),
+        coord.runtime.cache_misses(),
     );
     Ok(())
 }

@@ -17,6 +17,8 @@
 //! in `[0, 2^I)`; weights `(Kout, Kin, fy, fx)` signed in
 //! `[-2^(W-1), 2^(W-1))`.
 
+use std::borrow::Cow;
+
 use anyhow::{bail, Result};
 
 use super::config::{RbeJob, RbeMode};
@@ -42,6 +44,22 @@ impl NormQuant {
             >> self.shift;
         v.clamp(0, (1i64 << o_bits) - 1) as i32
     }
+}
+
+/// Trim a `(full, full, c)` activation plane to its strided extent
+/// `(need, need, c)`. Artifacts take the layer's full input plane; the
+/// datapath model wants exactly `(h_out - 1) * stride + k` rows/cols
+/// ([`RbeJob::h_in`]). Borrows when no trim is needed.
+pub fn trim_input(x: &[i32], full: usize, need: usize, c: usize) -> Cow<'_, [i32]> {
+    debug_assert!(need <= full);
+    if need == full {
+        return Cow::Borrowed(x);
+    }
+    let mut v = Vec::with_capacity(need * need * c);
+    for r in 0..need {
+        v.extend_from_slice(&x[r * full * c..(r * full + need) * c]);
+    }
+    Cow::Owned(v)
 }
 
 fn tap_range(job: &RbeJob) -> usize {

@@ -1,0 +1,60 @@
+//! The pluggable execution-backend contract.
+
+use anyhow::Result;
+
+use super::tensor::TensorArg;
+
+/// Which engine a backend (or runtime) executes on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Pure-Rust in-process execution via `rbe::functional`.
+    Native,
+    /// PJRT execution of AOT-compiled HLO-text artifacts.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// One compiled artifact, ready to execute. Implementations must be
+/// immutable after compilation (`execute_i32` takes `&self`) so a single
+/// instance can be shared across worker threads.
+pub trait LayerExec: Send + Sync {
+    /// Artifact name this executable was compiled from.
+    fn name(&self) -> &str;
+
+    /// Execute with s32 tensor arguments; returns the flattened s32
+    /// outputs of the result tuple (artifacts are lowered with
+    /// `return_tuple=True`, so even single-output layers come back as a
+    /// one-element vec).
+    fn execute_i32(&self, args: &[TensorArg]) -> Result<Vec<Vec<i32>>>;
+}
+
+/// An execution engine that can compile artifact names into executables.
+///
+/// Backends are `Send + Sync`; the [`super::Runtime`] wraps one in an
+/// `Arc` and adds the per-artifact compile cache, so `compile` is only
+/// called once per artifact name per runtime.
+pub trait ExecBackend: Send + Sync {
+    fn kind(&self) -> BackendKind;
+
+    /// Platform string for diagnostics (e.g. "native", "cpu").
+    fn platform(&self) -> String;
+
+    /// True if `compile(name)` can succeed — artifact file present (PJRT)
+    /// or layer signature known to the built-in zoo (native). Tests use
+    /// this to skip artifact-dependent cases cleanly.
+    fn has_artifact(&self, name: &str) -> bool;
+
+    /// Names of all artifacts this backend can execute, sorted.
+    fn list_artifacts(&self) -> Vec<String>;
+
+    /// Compile the named artifact into an executable layer.
+    fn compile(&self, name: &str) -> Result<Box<dyn LayerExec>>;
+}

@@ -1,103 +1,30 @@
-//! A compiled PJRT executable wrapping one HLO-text artifact.
-
-use std::path::Path;
+//! A compiled artifact handle, backend-agnostic.
 
 use anyhow::Result;
 
-/// A host tensor argument for executable invocation: flat i32 data + dims.
-///
-/// All Marsellus artifacts use s32 tensors (quantized integer activations,
-/// weights, normquant parameters), so a single concrete type keeps the FFI
-/// surface small. Row-major (C) layout, matching jax defaults.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct TensorArg {
-    pub data: Vec<i32>,
-    pub dims: Vec<usize>,
-}
+use super::backend::LayerExec;
+use super::tensor::TensorArg;
 
-impl TensorArg {
-    pub fn new(data: Vec<i32>, dims: Vec<usize>) -> Self {
-        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
-        Self { data, dims }
-    }
-
-    pub fn scalar_vec(data: Vec<i32>) -> Self {
-        let dims = vec![data.len()];
-        Self { data, dims }
-    }
-
-    pub fn len(&self) -> usize {
-        self.data.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
-    }
-}
-
-/// One compiled artifact. Thread-safe: PJRT executables are immutable after
-/// compilation and `execute` takes `&self`.
+/// One compiled artifact. Thread-safe: the inner [`LayerExec`] is
+/// immutable after compilation and `execute_i32` takes `&self`, so the
+/// runtime shares executables across threads via `Arc<Executable>`.
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
     name: String,
+    inner: Box<dyn LayerExec>,
 }
-
-// The xla crate wraps C++ objects behind raw pointers without Send/Sync
-// markers; PJRT CPU client objects are documented thread-safe for execute().
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
 
 impl Executable {
-    /// Parse HLO text, re-assign instruction ids (done by the text parser —
-    /// this is why text, not proto, is the interchange format), and compile
-    /// for the given client.
-    pub fn from_hlo_text(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .map_err(|e| anyhow::anyhow!("parse hlo text {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))?;
-        Ok(Self {
-            exe,
-            name: path
-                .file_stem()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_default(),
-        })
+    pub(crate) fn new(name: String, inner: Box<dyn LayerExec>) -> Self {
+        Self { name, inner }
     }
 
     pub fn name(&self) -> &str {
         &self.name
     }
 
-    /// Execute with s32 tensor arguments; returns the flattened s32 outputs
-    /// of the result tuple (artifacts are lowered with `return_tuple=True`).
+    /// Execute with s32 tensor arguments; returns the flattened s32
+    /// outputs of the result tuple.
     pub fn execute_i32(&self, args: &[TensorArg]) -> Result<Vec<Vec<i32>>> {
-        let mut literals = Vec::with_capacity(args.len());
-        for a in args {
-            let dims: Vec<i64> = a.dims.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(&a.data)
-                .reshape(&dims)
-                .map_err(|e| anyhow::anyhow!("reshape arg to {dims:?}: {e}"))?;
-            literals.push(lit);
-        }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("execute {}: {e}", self.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
-        let tuple = result
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("decompose result tuple: {e}"))?;
-        let mut outs = Vec::with_capacity(tuple.len());
-        for lit in tuple {
-            outs.push(
-                lit.to_vec::<i32>()
-                    .map_err(|e| anyhow::anyhow!("result to_vec<i32>: {e}"))?,
-            );
-        }
-        Ok(outs)
+        self.inner.execute_i32(args)
     }
 }

@@ -1,0 +1,190 @@
+//! The [`Runtime`]: a shared execution backend plus the per-artifact
+//! compile cache.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::backend::{BackendKind, ExecBackend};
+use super::executable::Executable;
+
+/// An execution backend plus a cache of compiled executables keyed by
+/// artifact name.
+///
+/// Compilation is performed once per artifact; subsequent lookups are
+/// O(1) and share the compiled executable via `Arc`. The runtime is
+/// `Send + Sync` (backend is `Sync`, cache is behind a `Mutex`), so the
+/// coordinator can share one instance across worker threads — see
+/// `Coordinator::infer_batch`.
+pub struct Runtime {
+    backend: Arc<dyn ExecBackend>,
+    artifacts_dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Runtime {
+    /// Wrap an explicit backend. `artifacts_dir` is kept for diagnostics
+    /// and for locating on-disk artifact files.
+    pub fn with_backend(backend: Arc<dyn ExecBackend>, artifacts_dir: impl AsRef<Path>) -> Self {
+        Self {
+            backend,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Pure-Rust native backend: the built-in layer zoo, extended by
+    /// `manifest.tsv` if `artifacts_dir` has one.
+    #[cfg(feature = "native")]
+    pub fn native(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref();
+        let manifest = crate::dnn::Manifest::load_or_builtin(dir)?;
+        let backend = super::native::NativeBackend::from_manifest(&manifest);
+        Ok(Self::with_backend(Arc::new(backend), dir))
+    }
+
+    /// PJRT CPU backend over on-disk HLO-text artifacts.
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref();
+        let backend = super::pjrt::PjrtBackend::cpu(dir)?;
+        Ok(Self::with_backend(Arc::new(backend), dir))
+    }
+
+    /// Backend selected by `MARSELLUS_BACKEND` (`native` | `pjrt`),
+    /// defaulting to native when unset.
+    pub fn from_env(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let choice = std::env::var("MARSELLUS_BACKEND").unwrap_or_default();
+        if choice == "pjrt" {
+            #[cfg(feature = "pjrt")]
+            return Self::pjrt(artifacts_dir);
+            #[cfg(not(feature = "pjrt"))]
+            anyhow::bail!(
+                "MARSELLUS_BACKEND=pjrt but the `pjrt` feature is not \
+                 compiled in (rebuild with --features pjrt)"
+            );
+        }
+        if choice == "native" {
+            #[cfg(feature = "native")]
+            return Self::native(artifacts_dir);
+            #[cfg(not(feature = "native"))]
+            anyhow::bail!(
+                "MARSELLUS_BACKEND=native but the `native` feature is not \
+                 compiled in (rebuild with --features native)"
+            );
+        }
+        if !choice.is_empty() {
+            anyhow::bail!("unknown MARSELLUS_BACKEND {choice:?} (expected native|pjrt)");
+        }
+        // no explicit choice: prefer native, fall back to whatever is built
+        #[cfg(feature = "native")]
+        return Self::native(artifacts_dir);
+        #[cfg(all(not(feature = "native"), feature = "pjrt"))]
+        return Self::pjrt(artifacts_dir);
+        #[cfg(all(not(feature = "native"), not(feature = "pjrt")))]
+        let _ = &artifacts_dir;
+        #[cfg(all(not(feature = "native"), not(feature = "pjrt")))]
+        anyhow::bail!(
+            "no execution backend compiled in; build with \
+             `--features native` (default) or `--features pjrt`"
+        );
+    }
+
+    /// Historical constructor name (pre-backend-trait); now an alias for
+    /// [`Runtime::from_env`].
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Self::from_env(artifacts_dir)
+    }
+
+    /// Resolve the artifacts directory for CLI/example entry points:
+    /// an explicit `--artifacts` value wins; otherwise the first of
+    /// `./artifacts` and `./rust/artifacts` that holds a `manifest.tsv`
+    /// (so `make artifacts` output is found from the repo root); else
+    /// `./artifacts` (the native backend needs no files anyway).
+    pub fn resolve_artifacts_dir(explicit: Option<&str>) -> PathBuf {
+        if let Some(d) = explicit {
+            return PathBuf::from(d);
+        }
+        for cand in ["artifacts", "rust/artifacts"] {
+            if Path::new(cand).join("manifest.tsv").exists() {
+                return PathBuf::from(cand);
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    pub fn backend(&self) -> &Arc<dyn ExecBackend> {
+        &self.backend
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        self.backend.kind()
+    }
+
+    /// Platform name reported by the backend (e.g. "native", "cpu").
+    pub fn platform(&self) -> String {
+        self.backend.platform()
+    }
+
+    /// Directory this runtime resolves on-disk artifacts against.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load (or fetch from cache) the executable for artifact `name`.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(exe.clone());
+        }
+        // Compile outside the lock: backend compilation can be slow
+        // (PJRT) and must not serialize unrelated worker threads. A racy
+        // double-compile of the same name is benign — first insert wins.
+        let compiled = self.backend.compile(name)?;
+        let exe = Arc::new(Executable::new(name.to_string(), compiled));
+        let mut cache = self.cache.lock().unwrap();
+        let entry = cache.entry(name.to_string()).or_insert(exe);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok(entry.clone())
+    }
+
+    /// True if the backend can execute the artifact `name` (used by tests
+    /// to skip gracefully when `make artifacts` has not run and the
+    /// backend needs files on disk).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.backend.has_artifact(name)
+    }
+
+    /// True if the AOT artifact *file* exists on disk (independent of the
+    /// active backend).
+    pub fn artifact_file_exists(&self, name: &str) -> bool {
+        self.artifacts_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Names of all artifacts the backend can execute.
+    pub fn list_artifacts(&self) -> Vec<String> {
+        self.backend.list_artifacts()
+    }
+
+    /// Number of cache hits served so far (telemetry for tests/benches).
+    pub fn cache_hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Number of compilations performed so far.
+    pub fn cache_misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,12 +1,42 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//! Pluggable execution runtime for the AOT-compiled DNN layer artifacts.
 //!
-//! This is the only place the `xla` crate is touched. Artifacts are produced
-//! once at build time by `python/compile/aot.py` (HLO *text*, not serialized
-//! protos — see /opt/xla-example/README.md); the rust hot path never calls
-//! into Python.
+//! The functional numerics of every layer are defined once, in
+//! `python/compile/kernels` (lowered to HLO-text artifacts at build time)
+//! and mirrored bit-exactly by `rbe::functional`. This module turns that
+//! contract into a swappable [`ExecBackend`]:
+//!
+//! * [`NativeBackend`] (cargo feature `native`, **default**) — pure Rust:
+//!   dispatches each artifact name to the in-tree RBE functional models
+//!   (`conv_bitserial` / `conv_reference` + the add/avgpool normquant
+//!   kernels). Needs no artifacts on disk: the built-in layer zoo
+//!   ([`crate::dnn::Manifest::builtin`]) mirrors exactly what `aot.py`
+//!   lowers, so results are bit-exact with the artifacts by construction.
+//! * `PjrtBackend` (cargo feature `pjrt`, opt-in) — loads `<name>.hlo.txt`
+//!   artifacts through the `xla` PJRT bindings. The workspace vendors a
+//!   compile-time stub of `xla`; patch in the real crate to execute.
+//!
+//! [`Runtime`] owns a backend plus the per-artifact compile cache
+//! (compile once, `Arc`-share thereafter) and is `Send + Sync`, so the
+//! coordinator can fan inference batches out across threads over one
+//! shared instance.
+//!
+//! Backend selection: [`Runtime::from_env`] honours
+//! `MARSELLUS_BACKEND=native|pjrt`, defaulting to native.
 
-mod client;
+mod backend;
 mod executable;
+mod loader;
+#[cfg(feature = "native")]
+mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+mod tensor;
 
-pub use client::Runtime;
-pub use executable::{Executable, TensorArg};
+pub use backend::{BackendKind, ExecBackend, LayerExec};
+pub use executable::Executable;
+pub use loader::Runtime;
+#[cfg(feature = "native")]
+pub use native::{NativeBackend, NativeNumerics};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+pub use tensor::TensorArg;

@@ -1,0 +1,336 @@
+//! Native pure-Rust execution backend (cargo feature `native`, default).
+//!
+//! Executes every artifact of the built-in layer zoo
+//! ([`Manifest::builtin`], exactly the set `python/compile/aot.py`
+//! lowers) without touching disk or FFI: conv/linear layers dispatch to
+//! the bit-exact RBE functional models in [`crate::rbe::functional`], and
+//! the elementwise add/avgpool kernels mirror
+//! `python/compile/kernels/ref.py` line for line. Because both sides
+//! implement the same Eq. 1–2 integer arithmetic (property-tested
+//! equivalent, and cross-checked against the PJRT artifacts in
+//! integration tests), native results are bit-identical to artifact
+//! results by construction.
+//!
+//! Unlike XLA, the native path *validates* its inputs: wrong arg counts,
+//! wrong shapes, or out-of-range quantized values are loud errors rather
+//! than silent wraparound.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::dnn::{LayerOp, Manifest, ManifestEntry};
+use crate::rbe::functional::{conv_bitserial, conv_reference, trim_input, NormQuant};
+use crate::rbe::RbeJob;
+
+use super::backend::{BackendKind, ExecBackend, LayerExec};
+use super::tensor::TensorArg;
+
+/// Which functional implementation conv/linear layers run on. All three
+/// choices produce bit-identical outputs (`rbe::functional` property
+/// tests); they differ only in speed and in how literally they model the
+/// hardware datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NativeNumerics {
+    /// Bit-serial Eq. 1 datapath for small jobs, integer oracle for large
+    /// ones (default: exactness is identical, this only bounds runtime).
+    Auto,
+    /// Always the bit-serial datapath model (`conv_bitserial`).
+    BitSerial,
+    /// Always the plain integer oracle (`conv_reference`).
+    Reference,
+}
+
+/// Jobs at or below this MAC count run bit-serial under
+/// [`NativeNumerics::Auto`].
+const AUTO_BITSERIAL_MACS: u64 = 1 << 16;
+
+/// The native execution engine: an artifact-name → layer-signature zoo.
+pub struct NativeBackend {
+    zoo: HashMap<String, ManifestEntry>,
+    numerics: NativeNumerics,
+}
+
+impl NativeBackend {
+    /// Backend over the built-in layer zoo with [`NativeNumerics::Auto`].
+    pub fn new() -> Self {
+        Self::from_manifest(&Manifest::builtin())
+    }
+
+    /// Backend over an explicit manifest (e.g. the built-in zoo extended
+    /// by an on-disk `manifest.tsv`).
+    pub fn from_manifest(manifest: &Manifest) -> Self {
+        let zoo = manifest
+            .entries()
+            .map(|e| (e.name.clone(), e.clone()))
+            .collect();
+        Self { zoo, numerics: NativeNumerics::Auto }
+    }
+
+    /// Override the conv/linear numerics implementation.
+    pub fn with_numerics(mut self, numerics: NativeNumerics) -> Self {
+        self.numerics = numerics;
+        self
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn platform(&self) -> String {
+        "native".to_string()
+    }
+
+    fn has_artifact(&self, name: &str) -> bool {
+        self.zoo.contains_key(name)
+    }
+
+    fn list_artifacts(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.zoo.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    fn compile(&self, name: &str) -> Result<Box<dyn LayerExec>> {
+        let Some(e) = self.zoo.get(name) else {
+            bail!(
+                "unknown artifact {name:?}: not in the native layer zoo \
+                 (built-in networks + manifest.tsv)"
+            );
+        };
+        Ok(Box::new(NativeExec { e: e.clone(), numerics: self.numerics }))
+    }
+}
+
+/// One "compiled" layer: for the native backend, compilation is just
+/// binding the layer signature; execution interprets it.
+struct NativeExec {
+    e: ManifestEntry,
+    numerics: NativeNumerics,
+}
+
+fn expect_dims(arg: &TensorArg, want: &[usize], what: &str, name: &str) -> Result<()> {
+    ensure!(
+        arg.dims == want,
+        "{name}: {what} has dims {:?}, artifact expects {:?}",
+        arg.dims,
+        want
+    );
+    ensure!(
+        arg.data.len() == want.iter().product::<usize>(),
+        "{name}: {what} data length {} does not match dims {:?}",
+        arg.data.len(),
+        want
+    );
+    Ok(())
+}
+
+impl NativeExec {
+    fn run_conv(&self, job: &RbeJob, x: &[i32], w: &[i32], nq: &NormQuant) -> Result<Vec<i32>> {
+        let bit_serial = match self.numerics {
+            NativeNumerics::BitSerial => true,
+            NativeNumerics::Reference => false,
+            NativeNumerics::Auto => job.macs() <= AUTO_BITSERIAL_MACS,
+        };
+        if bit_serial {
+            conv_bitserial(job, x, w, nq)
+        } else {
+            conv_reference(job, x, w, nq)
+        }
+    }
+
+    /// conv3x3 / conv1x1: args = [x, w, scale, bias], mirroring the
+    /// artifact calling convention (`model.layer_fn` arg shapes).
+    fn conv(&self, args: &[TensorArg]) -> Result<Vec<i32>> {
+        let e = &self.e;
+        ensure!(args.len() == 4, "{}: conv takes 4 args, got {}", e.name, args.len());
+        // conv3x3 artifacts take the zero-padded plane (pad = 1/side).
+        let (full, taps) = match e.op {
+            LayerOp::Conv3x3 => (e.h + 2, 3usize),
+            _ => (e.h, 1usize),
+        };
+        expect_dims(&args[0], &[full, full, e.cin], "activation", &e.name)?;
+        let w_dims: Vec<usize> = if taps == 3 {
+            vec![e.cout, e.cin, 3, 3]
+        } else {
+            vec![e.cout, e.cin]
+        };
+        expect_dims(&args[1], &w_dims, "weights", &e.name)?;
+        expect_dims(&args[2], &[e.cout], "scale", &e.name)?;
+        expect_dims(&args[3], &[e.cout], "bias", &e.name)?;
+
+        // Output extent matches the artifact exactly: valid conv over the
+        // padded plane (3x3), strided gather of the full plane (1x1).
+        let h_out = (full - taps) / e.stride + 1;
+        let job = match e.op {
+            LayerOp::Conv3x3 => RbeJob::conv3x3(
+                h_out, h_out, e.cin, e.cout, e.stride, e.w_bits, e.i_bits, e.o_bits,
+            )?,
+            _ => RbeJob::conv1x1(
+                h_out, h_out, e.cin, e.cout, e.stride, e.w_bits, e.i_bits, e.o_bits,
+            )?,
+        };
+        // The datapath model wants exactly the strided extent.
+        let x = trim_input(&args[0].data, full, job.h_in(), e.cin);
+        let nq = NormQuant {
+            scale: args[2].data.clone(),
+            bias: args[3].data.clone(),
+            shift: e.shift,
+        };
+        self.run_conv(&job, &x, &args[1].data, &nq)
+    }
+
+    /// linear: args = [x (Kin,), w (Kout, Kin), scale, bias]. Identical
+    /// arithmetic to a 1×1 conv over a single pixel.
+    fn linear(&self, args: &[TensorArg]) -> Result<Vec<i32>> {
+        let e = &self.e;
+        ensure!(args.len() == 4, "{}: linear takes 4 args, got {}", e.name, args.len());
+        expect_dims(&args[0], &[e.cin], "activation", &e.name)?;
+        expect_dims(&args[1], &[e.cout, e.cin], "weights", &e.name)?;
+        expect_dims(&args[2], &[e.cout], "scale", &e.name)?;
+        expect_dims(&args[3], &[e.cout], "bias", &e.name)?;
+        let job = RbeJob::conv1x1(1, 1, e.cin, e.cout, 1, e.w_bits, e.i_bits, e.o_bits)?;
+        let nq = NormQuant {
+            scale: args[2].data.clone(),
+            bias: args[3].data.clone(),
+            shift: e.shift,
+        };
+        self.run_conv(&job, &args[0].data, &args[1].data, &nq)
+    }
+
+    /// add: args = [a, b], both (H, W, K); mirrors `ref.add_requant_ref`
+    /// with scale_a = scale_b = 1.
+    fn add(&self, args: &[TensorArg]) -> Result<Vec<i32>> {
+        let e = &self.e;
+        ensure!(args.len() == 2, "{}: add takes 2 args, got {}", e.name, args.len());
+        let dims = [e.h, e.h, e.cin];
+        expect_dims(&args[0], &dims, "lhs", &e.name)?;
+        expect_dims(&args[1], &dims, "rhs", &e.name)?;
+        let omax = (1i64 << e.o_bits) - 1;
+        let out = args[0]
+            .data
+            .iter()
+            .zip(&args[1].data)
+            .map(|(&a, &b)| (((a as i64 + b as i64) >> e.shift).clamp(0, omax)) as i32)
+            .collect();
+        Ok(out)
+    }
+
+    /// avgpool: args = [x (H, W, K)]; per-channel sum over the spatial
+    /// plane, then arithmetic right shift — mirrors `ref.avgpool_ref`.
+    fn avgpool(&self, args: &[TensorArg]) -> Result<Vec<i32>> {
+        let e = &self.e;
+        ensure!(args.len() == 1, "{}: avgpool takes 1 arg, got {}", e.name, args.len());
+        expect_dims(&args[0], &[e.h, e.h, e.cin], "activation", &e.name)?;
+        let mut sums = vec![0i64; e.cin];
+        for px in args[0].data.chunks_exact(e.cin) {
+            for (s, &v) in sums.iter_mut().zip(px) {
+                *s += v as i64;
+            }
+        }
+        Ok(sums.iter().map(|&s| (s >> e.shift) as i32).collect())
+    }
+}
+
+impl LayerExec for NativeExec {
+    fn name(&self) -> &str {
+        &self.e.name
+    }
+
+    fn execute_i32(&self, args: &[TensorArg]) -> Result<Vec<Vec<i32>>> {
+        let out = match self.e.op {
+            LayerOp::Conv3x3 | LayerOp::Conv1x1 => self.conv(args)?,
+            LayerOp::Linear => self.linear(args)?,
+            LayerOp::Add => self.add(args)?,
+            LayerOp::AvgPool => self.avgpool(args)?,
+        };
+        Ok(vec![out])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new()
+    }
+
+    #[test]
+    fn zoo_covers_both_network_configs() {
+        let b = backend();
+        assert!(b.list_artifacts().len() >= 20);
+        assert!(b.has_artifact("avgpool_h8_k64"));
+        assert!(b.has_artifact("linear_ci64_co10_w8i8o8"));
+        assert!(!b.has_artifact("no_such_artifact"));
+    }
+
+    #[test]
+    fn avgpool_matches_ref_semantics() {
+        let exe = backend().compile("avgpool_h8_k64").unwrap();
+        // all-ones plane: per-channel sum = 64, >> 6 = 1
+        let out = exe
+            .execute_i32(&[TensorArg::new(vec![1; 8 * 8 * 64], vec![8, 8, 64])])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![1i32; 64]);
+    }
+
+    #[test]
+    fn add_clamps_to_output_range() {
+        // mixed config: add_h8_k64_o4_sh1 -> (a + b) >> 1, clipped to 4b
+        let exe = backend().compile("add_h8_k64_o4_sh1").unwrap();
+        let n = 8 * 8 * 64;
+        let a = TensorArg::new(vec![15; n], vec![8, 8, 64]);
+        let b = TensorArg::new(vec![15; n], vec![8, 8, 64]);
+        let out = exe.execute_i32(&[a, b]).unwrap();
+        assert!(out[0].iter().all(|&v| v == 15)); // (15+15)>>1 = 15 = omax
+    }
+
+    #[test]
+    fn wrong_dims_rejected() {
+        let exe = backend().compile("avgpool_h8_k64").unwrap();
+        let bad = exe.execute_i32(&[TensorArg::new(vec![0; 10], vec![10])]);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn numerics_choices_agree_on_quickstart() {
+        let name = "conv3x3_h16_ci32_co32_s1_w4i4o4";
+        let bs = backend()
+            .with_numerics(NativeNumerics::BitSerial)
+            .compile(name)
+            .unwrap();
+        let rf = backend()
+            .with_numerics(NativeNumerics::Reference)
+            .compile(name)
+            .unwrap();
+        let mut rng = Rng::new(11);
+        let hp = 18;
+        let args = vec![
+            TensorArg::new(
+                (0..hp * hp * 32).map(|_| rng.range_i32(0, 16)).collect(),
+                vec![hp, hp, 32],
+            ),
+            TensorArg::new(
+                (0..32 * 32 * 9).map(|_| rng.range_i32(-8, 8)).collect(),
+                vec![32, 32, 3, 3],
+            ),
+            TensorArg::scalar_vec((0..32).map(|_| rng.range_i32(1, 16)).collect()),
+            TensorArg::scalar_vec((0..32).map(|_| rng.range_i32(-500, 500)).collect()),
+        ];
+        assert_eq!(
+            bs.execute_i32(&args).unwrap(),
+            rf.execute_i32(&args).unwrap()
+        );
+    }
+}

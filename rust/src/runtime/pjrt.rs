@@ -1,0 +1,138 @@
+//! PJRT execution backend (cargo feature `pjrt`, opt-in).
+//!
+//! The only place the `xla` crate is touched. Artifacts are produced once
+//! at build time by `python/compile/aot.py` (HLO *text*, not serialized
+//! protos — the text parser reassigns instruction ids, which is what
+//! makes jax ≥ 0.5 output loadable); the Rust hot path never calls into
+//! Python.
+//!
+//! Note: the workspace's `vendor/xla` package is a compile-time stub —
+//! [`PjrtBackend::cpu`] fails with an explanatory error until the real
+//! `xla` crate is patched in (see README "PJRT backend").
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::backend::{BackendKind, ExecBackend, LayerExec};
+use super::tensor::TensorArg;
+
+/// A PJRT client rooted at an artifacts directory.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client rooted at `artifacts_dir`.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Self { client, artifacts_dir: artifacts_dir.as_ref().to_path_buf() })
+    }
+
+    fn artifact_path(&self, name: &str) -> PathBuf {
+        self.artifacts_dir.join(format!("{name}.hlo.txt"))
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    fn list_artifacts(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.artifacts_dir) {
+            for e in rd.flatten() {
+                let fname = e.file_name().to_string_lossy().into_owned();
+                if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        names
+    }
+
+    fn compile(&self, name: &str) -> Result<Box<dyn LayerExec>> {
+        let exe = PjrtExec::from_hlo_text(&self.client, &self.artifact_path(name))
+            .with_context(|| format!("loading artifact {name}"))?;
+        Ok(Box::new(exe))
+    }
+}
+
+/// One compiled PJRT executable wrapping an HLO-text artifact.
+struct PjrtExec {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+// The xla crate wraps C++ objects behind raw pointers without Send/Sync
+// markers; PJRT CPU client objects are documented thread-safe for
+// execute().
+unsafe impl Send for PjrtExec {}
+unsafe impl Sync for PjrtExec {}
+
+impl PjrtExec {
+    /// Parse HLO text, re-assign instruction ids (done by the text parser
+    /// — this is why text, not proto, is the interchange format), and
+    /// compile for the given client.
+    fn from_hlo_text(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("parse hlo text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))?;
+        Ok(Self {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+impl LayerExec for PjrtExec {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn execute_i32(&self, args: &[TensorArg]) -> Result<Vec<Vec<i32>>> {
+        let mut literals = Vec::with_capacity(args.len());
+        for a in args {
+            let dims: Vec<i64> = a.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&a.data)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshape arg to {dims:?}: {e}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e}", self.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+        let tuple = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose result tuple: {e}"))?;
+        let mut outs = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            outs.push(
+                lit.to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("result to_vec<i32>: {e}"))?,
+            );
+        }
+        Ok(outs)
+    }
+}

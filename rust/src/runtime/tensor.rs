@@ -1,0 +1,32 @@
+//! Host tensor arguments for executable invocation.
+
+/// A host tensor argument: flat i32 data + dims.
+///
+/// All Marsellus artifacts use s32 tensors (quantized integer activations,
+/// weights, normquant parameters), so a single concrete type keeps the
+/// backend interface small. Row-major (C) layout, matching jax defaults.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorArg {
+    pub data: Vec<i32>,
+    pub dims: Vec<usize>,
+}
+
+impl TensorArg {
+    pub fn new(data: Vec<i32>, dims: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        Self { data, dims }
+    }
+
+    pub fn scalar_vec(data: Vec<i32>) -> Self {
+        let dims = vec![data.len()];
+        Self { data, dims }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}

@@ -1,0 +1,204 @@
+//! Native backend layer tests: parity between the backend dispatch path
+//! and direct `rbe::functional` bit-serial calls on a small
+//! Conv3x3 → Conv1x1 → Linear tower, runtime cache-hit behaviour, and
+//! cross-thread sharing of one runtime.
+
+#![cfg(feature = "native")]
+
+use std::sync::Arc;
+
+use marsellus::dnn::Manifest;
+use marsellus::rbe::functional::{conv_bitserial, trim_input, NormQuant};
+use marsellus::rbe::RbeJob;
+use marsellus::runtime::{NativeBackend, NativeNumerics, Runtime, TensorArg};
+use marsellus::util::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Runtime {
+    Runtime::native(&artifacts_dir()).expect("native runtime")
+}
+
+struct TowerLayer {
+    name: &'static str,
+    /// (mode3x3, h, cin, cout, stride, w_bits, i_bits, o_bits, shift)
+    sig: (bool, usize, usize, usize, usize, usize, usize, usize, u32),
+}
+
+/// A small tower drawn from the built-in zoo: quickstart conv3x3, the
+/// uniform8 stage3 downsample conv1x1, and the fc linear layer.
+fn tower() -> Vec<TowerLayer> {
+    vec![
+        TowerLayer {
+            name: "conv3x3_h16_ci32_co32_s1_w4i4o4",
+            sig: (true, 16, 32, 32, 1, 4, 4, 4, 10),
+        },
+        TowerLayer {
+            // shift_for(32, 8, 8, 8, 1) = round(2.5 + 8.42) = 11
+            name: "conv1x1_h16_ci32_co64_s2_w8i8o8",
+            sig: (false, 16, 32, 64, 2, 8, 8, 8, 11),
+        },
+    ]
+}
+
+/// Native backend output == direct bit-serial datapath call, for each
+/// conv layer of the tower. (The backend's Auto numerics picks the
+/// oracle for large jobs; both are property-tested bit-identical, and
+/// this test closes the loop at the backend-dispatch level.)
+#[test]
+fn tower_parity_native_vs_bitserial() {
+    let rt = runtime();
+    let zoo = Manifest::builtin();
+    let mut rng = Rng::new(0xB17);
+    for l in tower() {
+        let (is3x3, h, cin, cout, stride, wb, ib, ob, _) = l.sig;
+        if !rt.has_artifact(l.name) {
+            panic!("builtin zoo lost {}", l.name);
+        }
+        // shift comes from the zoo (manifest is the contract)
+        let shift = zoo.get(l.name).unwrap().shift;
+        assert_eq!(shift, l.sig.8, "{}: zoo shift drifted", l.name);
+
+        let (full, taps) = if is3x3 { (h + 2, 3) } else { (h, 1) };
+        let x: Vec<i32> = (0..full * full * cin)
+            .map(|_| rng.range_i32(0, 1 << ib))
+            .collect();
+        let whalf = 1 << (wb - 1);
+        let w: Vec<i32> = (0..cout * cin * taps * taps)
+            .map(|_| rng.range_i32(-whalf, whalf))
+            .collect();
+        let scale: Vec<i32> = (0..cout).map(|_| rng.range_i32(1, 16)).collect();
+        let bias: Vec<i32> =
+            (0..cout).map(|_| rng.range_i32(-500, 500)).collect();
+
+        let w_dims = if is3x3 {
+            vec![cout, cin, 3, 3]
+        } else {
+            vec![cout, cin]
+        };
+        let exe = rt.load(l.name).unwrap();
+        let got = exe
+            .execute_i32(&[
+                TensorArg::new(x.clone(), vec![full, full, cin]),
+                TensorArg::new(w.clone(), w_dims),
+                TensorArg::scalar_vec(scale.clone()),
+                TensorArg::scalar_vec(bias.clone()),
+            ])
+            .unwrap();
+
+        let h_out = (full - taps) / stride + 1;
+        let job = if is3x3 {
+            RbeJob::conv3x3(h_out, h_out, cin, cout, stride, wb, ib, ob)
+        } else {
+            RbeJob::conv1x1(h_out, h_out, cin, cout, stride, wb, ib, ob)
+        }
+        .unwrap();
+        let xt = trim_input(&x, full, job.h_in(), cin);
+        let nq = NormQuant { scale, bias, shift };
+        let want = conv_bitserial(&job, &xt, &w, &nq).unwrap();
+        assert_eq!(got[0], want, "{}", l.name);
+    }
+}
+
+/// Linear layer parity: backend fc output == bit-serial 1×1 job.
+#[test]
+fn linear_parity_native_vs_bitserial() {
+    let rt = runtime();
+    let name = "linear_ci64_co10_w8i8o8";
+    let shift = Manifest::builtin().get(name).unwrap().shift;
+    let mut rng = Rng::new(0xFC);
+    let x: Vec<i32> = (0..64).map(|_| rng.range_i32(0, 256)).collect();
+    let w: Vec<i32> = (0..10 * 64).map(|_| rng.range_i32(-128, 128)).collect();
+    let scale: Vec<i32> = (0..10).map(|_| rng.range_i32(1, 16)).collect();
+    let bias: Vec<i32> = (0..10).map(|_| rng.range_i32(-500, 500)).collect();
+    let got = rt
+        .load(name)
+        .unwrap()
+        .execute_i32(&[
+            TensorArg::new(x.clone(), vec![64]),
+            TensorArg::new(w.clone(), vec![10, 64]),
+            TensorArg::scalar_vec(scale.clone()),
+            TensorArg::scalar_vec(bias.clone()),
+        ])
+        .unwrap();
+    let job = RbeJob::conv1x1(1, 1, 64, 10, 1, 8, 8, 8).unwrap();
+    let nq = NormQuant { scale, bias, shift };
+    assert_eq!(got[0], conv_bitserial(&job, &x, &w, &nq).unwrap());
+}
+
+/// Explicit-numerics backends agree with each other through the full
+/// backend dispatch path (not just the kernel property tests).
+#[test]
+fn bitserial_and_reference_numerics_agree_via_backend() {
+    let dir = artifacts_dir();
+    let name = "conv3x3_h16_ci32_co32_s1_w4i4o4";
+    let mk = |n: NativeNumerics| {
+        Runtime::with_backend(
+            Arc::new(NativeBackend::new().with_numerics(n)),
+            &dir,
+        )
+    };
+    let a = mk(NativeNumerics::BitSerial);
+    let b = mk(NativeNumerics::Reference);
+    let mut rng = Rng::new(5);
+    let hp = 18;
+    let args = vec![
+        TensorArg::new(
+            (0..hp * hp * 32).map(|_| rng.range_i32(0, 16)).collect(),
+            vec![hp, hp, 32],
+        ),
+        TensorArg::new(
+            (0..32 * 32 * 9).map(|_| rng.range_i32(-8, 8)).collect(),
+            vec![32, 32, 3, 3],
+        ),
+        TensorArg::scalar_vec((0..32).map(|_| rng.range_i32(1, 16)).collect()),
+        TensorArg::scalar_vec((0..32).map(|_| rng.range_i32(-500, 500)).collect()),
+    ];
+    let ra = a.load(name).unwrap().execute_i32(&args).unwrap();
+    let rb = b.load(name).unwrap().execute_i32(&args).unwrap();
+    assert_eq!(ra, rb);
+}
+
+/// The compile cache: one compilation per artifact, `Arc`-shared after.
+#[test]
+fn runtime_cache_hits() {
+    let rt = runtime();
+    assert_eq!((rt.cache_hits(), rt.cache_misses()), (0, 0));
+    let a = rt.load("avgpool_h8_k64").unwrap();
+    assert_eq!((rt.cache_hits(), rt.cache_misses()), (0, 1));
+    let b = rt.load("avgpool_h8_k64").unwrap();
+    assert_eq!((rt.cache_hits(), rt.cache_misses()), (1, 1));
+    assert!(Arc::ptr_eq(&a, &b), "cache must share the same executable");
+    let _c = rt.load("linear_ci64_co10_w8i8o8").unwrap();
+    assert_eq!((rt.cache_hits(), rt.cache_misses()), (1, 2));
+    assert_eq!(rt.cached_executables(), 2);
+}
+
+/// One runtime shared by many threads: concurrent loads of the same
+/// artifact compile at most a handful of times (benign race), results
+/// are identical, and the cache converges to one entry.
+#[test]
+fn runtime_is_shared_across_threads() {
+    let rt = runtime();
+    let x = TensorArg::new(vec![1i32; 8 * 8 * 64], vec![8, 8, 64]);
+    let outputs: Vec<Vec<i32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let rt = &rt;
+                let x = x.clone();
+                s.spawn(move || {
+                    let exe = rt.load("avgpool_h8_k64").unwrap();
+                    exe.execute_i32(&[x]).unwrap().remove(0)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for o in &outputs {
+        assert_eq!(o, &outputs[0]);
+    }
+    assert_eq!(rt.cached_executables(), 1);
+    assert!(rt.cache_hits() + rt.cache_misses() >= 8);
+}

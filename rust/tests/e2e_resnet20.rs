@@ -1,25 +1,32 @@
 //! End-to-end integration: full ResNet-20 inference through the
-//! coordinator (PJRT numerics + simulator timing), both precision
-//! configurations. Skips when artifacts are missing.
+//! coordinator (backend numerics + simulator timing), both precision
+//! configurations.
+//!
+//! Runs against the native backend, so no `make artifacts` is needed —
+//! the coordinator falls back to the built-in layer zoo.
+
+#![cfg(feature = "native")]
 
 use marsellus::coordinator::{random_image, Coordinator};
 use marsellus::dnn::PrecisionConfig;
 use marsellus::power::{OperatingPoint, FBB_MAX_V};
+use marsellus::runtime::Runtime;
 use marsellus::util::Rng;
 
-fn coordinator() -> Option<Coordinator> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("artifacts");
-    if !dir.join("manifest.tsv").exists() {
-        eprintln!("SKIP: artifacts missing; run `make artifacts`");
-        return None;
-    }
-    Some(Coordinator::new(dir.to_str().unwrap()).expect("coordinator"))
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn coordinator() -> Coordinator {
+    // Explicitly native: e2e behaviour must not depend on the caller's
+    // MARSELLUS_BACKEND environment.
+    let rt = Runtime::native(&artifacts_dir()).expect("native runtime");
+    Coordinator::with_runtime(rt).expect("coordinator")
 }
 
 #[test]
 fn inference_runs_and_is_deterministic() {
-    let Some(coord) = coordinator() else { return };
+    let coord = coordinator();
     let mut rng = Rng::new(1);
     let image = random_image(8, &mut rng);
     let op = OperatingPoint::at_vdd(0.8);
@@ -40,7 +47,7 @@ fn inference_runs_and_is_deterministic() {
 
 #[test]
 fn different_weights_give_different_logits() {
-    let Some(coord) = coordinator() else { return };
+    let coord = coordinator();
     let image = random_image(8, &mut Rng::new(2));
     let op = OperatingPoint::at_vdd(0.8);
     let a = coord
@@ -52,11 +59,11 @@ fn different_weights_give_different_logits() {
     assert_ne!(a.logits, b.logits);
 }
 
-/// The in-flight cross-check: artifact outputs equal the Rust bit-serial
+/// The in-flight cross-check: backend outputs equal the Rust bit-serial
 /// datapath on representative layers (small stage-3 + strided 1x1).
 #[test]
-fn artifact_vs_bitserial_cross_check() {
-    let Some(coord) = coordinator() else { return };
+fn backend_vs_bitserial_cross_check() {
+    let coord = coordinator();
     let image = random_image(8, &mut Rng::new(3));
     let res = coord
         .infer_resnet20(
@@ -73,7 +80,7 @@ fn artifact_vs_bitserial_cross_check() {
 /// Timing/energy reports behave physically across operating points.
 #[test]
 fn operating_point_scaling() {
-    let Some(coord) = coordinator() else { return };
+    let coord = coordinator();
     let image = random_image(8, &mut Rng::new(4));
     let nominal = coord
         .infer_resnet20(
@@ -116,4 +123,31 @@ fn operating_point_scaling() {
             < nominal.report.total_energy_uj());
     assert!(abb.report.total_latency_us()
             < 1.2 * nominal.report.total_latency_us());
+}
+
+/// PJRT-era regression guard: when AOT artifacts *are* on disk, the
+/// manifest they ship must agree with the built-in zoo the native
+/// backend executes. Skips cleanly (via `Runtime::has_artifact` +
+/// manifest presence) when `make artifacts` has not run.
+#[test]
+fn on_disk_artifacts_match_builtin_zoo() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::native(&dir).expect("native runtime");
+    let builtin = marsellus::dnn::Manifest::builtin();
+    let disk = marsellus::dnn::Manifest::load(&dir).unwrap();
+    for name in builtin.names() {
+        // aot.py writes a row for every zoo spec: a missing row means
+        // the python and rust layer zoos have drifted apart
+        let d = disk
+            .get(&name)
+            .unwrap_or_else(|| panic!("disk manifest has no row for {name}"));
+        assert_eq!(d, builtin.get(&name).unwrap(), "signature drift for {name}");
+        if !rt.artifact_file_exists(&name) {
+            eprintln!("SKIP: {name}.hlo.txt not on disk (partial build)");
+        }
+    }
 }

@@ -1,0 +1,116 @@
+//! Batch-serving determinism: `Coordinator::infer_batch` must produce
+//! bitwise-identical logits regardless of batch size or worker-thread
+//! count (acceptance criterion: batch=1 vs batch=8 on the same seed).
+
+#![cfg(feature = "native")]
+
+use marsellus::coordinator::{random_image, Coordinator};
+use marsellus::dnn::PrecisionConfig;
+use marsellus::power::OperatingPoint;
+use marsellus::runtime::Runtime;
+use marsellus::util::Rng;
+
+fn coordinator() -> Coordinator {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    let rt = Runtime::native(&dir).expect("native runtime");
+    Coordinator::with_runtime(rt).expect("coordinator")
+}
+
+#[test]
+fn batch_of_1_equals_batch_of_8() {
+    let coord = coordinator();
+    let op = OperatingPoint::at_vdd(0.8);
+    let mut rng = Rng::new(10);
+    let images: Vec<Vec<i32>> =
+        (0..8).map(|_| random_image(8, &mut rng)).collect();
+
+    // batch of 8 across 4 threads, same seed (= same deployed weights)
+    let batch = coord
+        .infer_batch(PrecisionConfig::Mixed, &op, &images, 42, 4)
+        .unwrap();
+    assert_eq!(batch.len(), 8);
+
+    // every image individually (batch of 1, single-threaded)
+    for (i, img) in images.iter().enumerate() {
+        let solo = coord
+            .infer_batch(
+                PrecisionConfig::Mixed,
+                &op,
+                std::slice::from_ref(img),
+                42,
+                1,
+            )
+            .unwrap();
+        assert_eq!(
+            solo[0].logits, batch[i].logits,
+            "image {i}: batch=1 vs batch=8 logits diverged"
+        );
+    }
+}
+
+#[test]
+fn thread_count_does_not_change_results() {
+    let coord = coordinator();
+    let op = OperatingPoint::at_vdd(0.8);
+    let mut rng = Rng::new(11);
+    let images: Vec<Vec<i32>> =
+        (0..5).map(|_| random_image(8, &mut rng)).collect();
+    let base = coord
+        .infer_batch(PrecisionConfig::Uniform8, &op, &images, 7, 1)
+        .unwrap();
+    for threads in [2, 3, 8] {
+        let got = coord
+            .infer_batch(PrecisionConfig::Uniform8, &op, &images, 7, threads)
+            .unwrap();
+        for (a, b) in base.iter().zip(&got) {
+            assert_eq!(a.logits, b.logits, "{threads} threads");
+        }
+    }
+    // oversubscription beyond the batch size is clamped, not an error
+    let clamped = coord
+        .infer_batch(PrecisionConfig::Uniform8, &op, &images[..2], 7, 64)
+        .unwrap();
+    assert_eq!(clamped.len(), 2);
+    assert_eq!(clamped[0].logits, base[0].logits);
+}
+
+#[test]
+fn batch_shares_one_compile_cache() {
+    let coord = coordinator();
+    let op = OperatingPoint::at_vdd(0.8);
+    let mut rng = Rng::new(12);
+    let images: Vec<Vec<i32>> =
+        (0..4).map(|_| random_image(8, &mut rng)).collect();
+    // warm the cache sequentially (no compile races), then fan out
+    coord
+        .infer_batch(PrecisionConfig::Mixed, &op, &images[..1], 1, 1)
+        .unwrap();
+    // the mixed net has 13 distinct artifact names (repeated residual
+    // blocks share executables — that's the point of the cache)
+    let distinct = coord.runtime.cached_executables() as u64;
+    assert!(distinct >= 12, "{distinct} executables cached");
+    assert_eq!(coord.runtime.cache_misses(), distinct);
+
+    coord
+        .infer_batch(PrecisionConfig::Mixed, &op, &images, 1, 4)
+        .unwrap();
+    // warm cache: the threaded batch must compile nothing new
+    assert_eq!(coord.runtime.cache_misses(), distinct, "cache not shared");
+    assert!(coord.runtime.cache_hits() > coord.runtime.cache_misses());
+}
+
+#[test]
+fn empty_batch_is_ok() {
+    let coord = coordinator();
+    let out = coord
+        .infer_batch(
+            PrecisionConfig::Mixed,
+            &OperatingPoint::at_vdd(0.8),
+            &[],
+            42,
+            4,
+        )
+        .unwrap();
+    assert!(out.is_empty());
+}

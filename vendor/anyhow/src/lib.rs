@@ -1,0 +1,188 @@
+//! In-tree, dependency-free subset of the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so the workspace vendors
+//! the small slice of `anyhow` the simulator actually uses as a path
+//! crate: [`Error`], [`Result`], the [`Context`] extension trait (on both
+//! `Result` and `Option`), and the [`anyhow!`], [`bail!`] and [`ensure!`]
+//! macros. Error causes are flattened into a single `: `-joined message
+//! chain rather than kept as a walkable source chain — enough for CLI
+//! reporting and test assertions, and drop-in replaceable by the real
+//! crate (same names, same call sites) if the registry ever becomes
+//! available.
+
+use std::fmt;
+
+/// A flattened error: the context chain joined into one message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap with an outer context message (`context: inner`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion
+// coherent alongside core's reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures (`Result`) or absences (`Option`).
+pub trait Context<T> {
+    /// Wrap the error/none case with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error/none case with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "Condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::Other, "boom");
+        Err(e)?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("outer").unwrap_err();
+        assert!(e.to_string().starts_with("outer: "));
+
+        let o: Option<i32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(
+            f(-1).unwrap_err().to_string(),
+            "x must be positive, got -1"
+        );
+        assert_eq!(f(101).unwrap_err().to_string(), "too big");
+        let e = anyhow!("plain {} message", 1);
+        assert_eq!(e.to_string(), "plain 1 message");
+    }
+
+    #[test]
+    fn ensure_without_message_names_the_condition() {
+        fn f() -> Result<()> {
+            let v = [1, 2];
+            ensure!(v.len() == 3);
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("Condition failed"));
+    }
+}
