@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Gate bench-smoke on the committed throughput baseline.
+
+Compares a freshly produced BENCH json (``cargo bench -- --smoke --json
+BENCH_ci.json``) against the committed baseline and fails when any
+baseline metric regresses by more than the tolerance (default 20%).
+
+Absolute images/s varies with runner hardware, so the committed baseline
+pins *machine-independent ratios* (LayerPlan and worker-pool speedups
+over the pre-plan per-call path). Every numeric key present in the
+baseline's ``throughput`` object is compared as higher-is-better; keys
+present only in the fresh results (e.g. the raw img/s numbers) are
+reported for the log but not gated.
+
+``speedup_parallel`` additionally depends on how many cores the runner
+actually has: a 2-vCPU runner cannot hit a 4-core baseline. Its
+effective baseline is therefore ``min(baseline, 0.75 * threads)`` using
+the thread count recorded in the fresh results, so the gate demands
+75%-of-ideal pool scaling rather than a fixed machine-dependent number.
+
+Usage: check_bench.py FRESH.json BASELINE.json [--tolerance 0.20]
+"""
+
+import json
+import sys
+
+
+def main(argv):
+    tol = 0.20
+    rest = argv[1:]
+    if "--tolerance" in rest:
+        i = rest.index("--tolerance")
+        try:
+            tol = float(rest[i + 1])
+        except (IndexError, ValueError):
+            print("error: --tolerance needs a numeric value")
+            return 2
+        del rest[i : i + 2]
+    args = [a for a in rest if not a.startswith("--")]
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+
+    with open(args[0]) as f:
+        fresh = json.load(f)
+    with open(args[1]) as f:
+        base = json.load(f)
+
+    ft = fresh.get("throughput", {})
+    bt = base.get("throughput", {})
+    if not bt:
+        print(f"error: {args[1]} has no throughput baseline")
+        return 2
+
+    failures = []
+    threads = ft.get("threads")
+    for key in sorted(bt):
+        bval = bt[key]
+        if not isinstance(bval, (int, float)) or isinstance(bval, bool):
+            continue
+        fval = ft.get(key)
+        if not isinstance(fval, (int, float)):
+            failures.append(f"{key}: missing from fresh results")
+            print(f"  {key:<20} baseline {bval:8.3f}  fresh MISSING  FAIL")
+            continue
+        if key == "speedup_parallel" and isinstance(threads, (int, float)):
+            bval = min(bval, 0.75 * threads)
+        floor = (1.0 - tol) * bval
+        ok = fval >= floor
+        print(
+            f"  {key:<20} baseline {bval:8.3f}  fresh {fval:8.3f}  "
+            f"floor {floor:8.3f}  {'OK' if ok else 'FAIL'}"
+        )
+        if not ok:
+            failures.append(
+                f"{key}: {fval:.3f} is more than {tol:.0%} below the "
+                f"baseline {bval:.3f}"
+            )
+
+    # informational: ungated fresh metrics
+    for key in sorted(ft):
+        if key in bt or not isinstance(ft[key], (int, float)):
+            continue
+        print(f"  {key:<20} (ungated)          fresh {ft[key]:8.3f}")
+
+    if failures:
+        print("\nthroughput regression detected:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nthroughput within baseline tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

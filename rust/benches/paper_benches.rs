@@ -11,6 +11,12 @@
 //!   --smoke | --quick   cheap subset, 1 iteration each — the CI mode
 //!   --json PATH         also write machine-readable results (CI uploads
 //!                       BENCH_ci.json to record the perf trajectory)
+//!
+//! Besides the figure reproductions, the harness measures serving
+//! throughput of `Coordinator::infer_batch` (pre-plan per-call path vs
+//! the precompiled LayerPlan path, sequential and parallel) and records
+//! images/s plus the per-layer setup-vs-compute split into the JSON —
+//! `ci/check_bench.py` gates regressions against the committed baseline.
 
 use std::time::Instant;
 
@@ -66,7 +72,125 @@ fn resolve_out_path(path: &str) -> std::path::PathBuf {
         .join(p)
 }
 
-fn write_json(path: &str, mode: &str, results: &[BenchResult], total: f64) {
+/// Serving-throughput measurements of the three `infer_batch` modes.
+struct Throughput {
+    images: usize,
+    threads: usize,
+    per_call_img_s: f64,
+    planned_img_s: f64,
+    parallel_img_s: f64,
+    layers: Vec<marsellus::metrics::LayerSplit>,
+}
+
+impl Throughput {
+    fn speedup_planned(&self) -> f64 {
+        self.planned_img_s / self.per_call_img_s
+    }
+
+    fn speedup_parallel(&self) -> f64 {
+        self.parallel_img_s / self.per_call_img_s
+    }
+
+    fn to_json(&self) -> String {
+        let layers: Vec<String> = self
+            .layers
+            .iter()
+            .map(|l| {
+                format!(
+                    "   {{\"name\": \"{}\", \"setup_us\": {:.1}, \
+                     \"compute_us\": {:.1}}}",
+                    json_escape(&l.name),
+                    l.setup_us,
+                    l.compute_us
+                )
+            })
+            .collect();
+        let (setup, compute) = self.layers.iter().fold((0.0, 0.0), |(s, c), l| {
+            (s + l.setup_us, c + l.compute_us)
+        });
+        format!(
+            " {{\n  \"images\": {},\n  \"threads\": {},\n  \
+             \"per_call_img_s\": {:.3},\n  \"planned_img_s\": {:.3},\n  \
+             \"parallel_img_s\": {:.3},\n  \"speedup_planned\": {:.3},\n  \
+             \"speedup_parallel\": {:.3},\n  \"setup_us_total\": {:.1},\n  \
+             \"compute_us_total\": {:.1},\n  \"layers\": [\n{}\n  ]\n }}",
+            self.images,
+            self.threads,
+            self.per_call_img_s,
+            self.planned_img_s,
+            self.parallel_img_s,
+            self.speedup_planned(),
+            self.speedup_parallel(),
+            setup,
+            compute,
+            layers.join(",\n")
+        )
+    }
+}
+
+/// Measure `infer_batch` images/s on the ResNet-20 example: the pre-plan
+/// per-call path (sequential), the LayerPlan path (sequential), and the
+/// LayerPlan path over the intra-batch worker pool — asserting along the
+/// way that all three produce bitwise-identical logits.
+fn throughput_bench(smoke: bool) -> Throughput {
+    use marsellus::coordinator::{random_image, Coordinator};
+    use marsellus::dnn::PrecisionConfig;
+    use marsellus::power::OperatingPoint;
+    use marsellus::util::Rng;
+
+    let dir = marsellus::runtime::Runtime::resolve_artifacts_dir(None);
+    let coord = Coordinator::new(dir).expect("coordinator");
+    let config = PrecisionConfig::Mixed;
+    let op = OperatingPoint::at_vdd(0.8);
+    let n = if smoke { 8 } else { 24 };
+    let threads = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(4);
+    let mut rng = Rng::new(0xBE7C);
+    let images: Vec<Vec<i32>> =
+        (0..n).map(|_| random_image(8, &mut rng)).collect();
+    let seed = 42u64;
+
+    let run = |use_plans: bool, threads: usize| {
+        let t0 = Instant::now();
+        let res = coord
+            .infer_batch_opts(config, &op, &images, seed, threads, use_plans)
+            .expect("infer_batch");
+        let img_s = n as f64 / t0.elapsed().as_secs_f64();
+        let logits: Vec<Vec<i32>> =
+            res.into_iter().map(|r| r.logits).collect();
+        (img_s, logits)
+    };
+    // Warm the plan cache untimed: one-time plan compilation is the
+    // *setup* half of the split (reported per layer below), and must not
+    // be charged to the per-image serving throughput the CI gate checks.
+    coord.network_plan(config, seed).expect("plan compile");
+    let (per_call_img_s, base) = run(false, 1);
+    let (planned_img_s, planned) = run(true, 1);
+    let (parallel_img_s, parallel) = run(true, threads);
+    assert_eq!(base, planned, "plan path changed logits");
+    assert_eq!(base, parallel, "parallel path changed logits");
+
+    let layers = coord
+        .profile_resnet20(config, &images[0], seed)
+        .expect("profile");
+    Throughput {
+        images: n,
+        threads,
+        per_call_img_s,
+        planned_img_s,
+        parallel_img_s,
+        layers,
+    }
+}
+
+fn write_json(
+    path: &str,
+    mode: &str,
+    results: &[BenchResult],
+    total: f64,
+    throughput: &Throughput,
+) {
     let resolved = resolve_out_path(path);
     let path = resolved.display().to_string();
     let path = path.as_str();
@@ -83,7 +207,8 @@ fn write_json(path: &str, mode: &str, results: &[BenchResult], total: f64) {
     }
     let doc = format!(
         "{{\n \"mode\": \"{mode}\",\n \"total_best_ms\": {total:.3},\n \
-         \"benches\": [\n{}\n ]\n}}\n",
+         \"throughput\":\n{},\n \"benches\": [\n{}\n ]\n}}\n",
+        throughput.to_json(),
         rows.join(",\n")
     );
     if let Err(e) = std::fs::write(path, doc) {
@@ -165,8 +290,35 @@ fn main() {
     println!("{}", "-".repeat(78));
     println!("total (best-iteration sum): {total:.0} ms");
 
+    // serving throughput: pre-plan vs LayerPlan vs parallel worker pool
+    println!("\ninfer_batch serving throughput (ResNet-20 mixed, native)");
+    let thr = throughput_bench(smoke);
+    println!(
+        "  per-call path   {:>8.2} img/s  (1 thread, pre-plan baseline)",
+        thr.per_call_img_s
+    );
+    println!(
+        "  LayerPlan path  {:>8.2} img/s  (1 thread, {:.2}x)",
+        thr.planned_img_s,
+        thr.speedup_planned()
+    );
+    println!(
+        "  worker pool     {:>8.2} img/s  ({} threads, {:.2}x)",
+        thr.parallel_img_s,
+        thr.threads,
+        thr.speedup_parallel()
+    );
+    println!("\nper-layer setup-vs-compute split (one image)");
+    print!("{}", marsellus::metrics::render_setup_compute(&thr.layers));
+
     if let Some(path) = json_path {
-        write_json(&path, if smoke { "smoke" } else { "full" }, &results, total);
+        write_json(
+            &path,
+            if smoke { "smoke" } else { "full" },
+            &results,
+            total,
+            &thr,
+        );
     }
 
     if !smoke {

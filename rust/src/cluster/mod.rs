@@ -17,7 +17,7 @@ pub mod periph;
 mod tcdm;
 
 pub use dma::{DmaEngine, DmaTransfer, IoDma};
-pub use engine::{Cluster, ClusterConfig, RunStats};
+pub use engine::{Cluster, ClusterConfig, RunStats, DEFAULT_TRAFFIC_SEED};
 pub use memmap::{MemMap, L2_BASE, L2_SIZE, TCDM_BANKS, TCDM_BASE, TCDM_SIZE};
 pub use periph::{RbePeriph, RBE_PERIPH_BASE};
 pub use tcdm::Tcdm;

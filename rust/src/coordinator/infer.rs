@@ -7,22 +7,35 @@
 //! split of DESIGN.md. Residual bookkeeping (block inputs, downsample
 //! shortcuts) mirrors `model.resnet20_forward`.
 //!
-//! Batch serving: [`Coordinator::infer_batch`] fans a batch of images out
-//! over scoped worker threads sharing one `Runtime` (backends are
-//! `Send + Sync`, and the compile cache lives behind the backend), the
-//! first step toward the ROADMAP's heavy-traffic serving story.
+//! Plan-driven serving: when the backend is native, the coordinator
+//! compiles each deployed network `(config, seed)` once into an
+//! immutable [`NetworkPlan`] (pre-packed weights, resolved RBE job
+//! geometry, staged requant constants — see `runtime::plan`) and then
+//! only streams activations per inference. [`Coordinator::infer_batch`]
+//! fans a batch of images out over an intra-batch worker pool (scoped
+//! threads pulling image indices from an atomic queue, plans shared
+//! read-only via `Arc`), bitwise identical to sequential execution.
+//! The per-call path (`run_network`) is kept for the PJRT backend and
+//! for the in-flight bit-serial cross-checks.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::dnn::{resnet20_layers, Layer, LayerOp, Manifest, PrecisionConfig};
 use crate::mapping::{NetworkReport, Scheduler};
+use crate::metrics::LayerSplit;
 use crate::power::OperatingPoint;
-use crate::rbe::functional::{conv_bitserial, trim_input, NormQuant};
+use crate::rbe::functional::{
+    add_requant, avgpool, conv_bitserial, trim_input, NormQuant,
+};
 use crate::rbe::{RbeJob, RbeMode};
-use crate::runtime::{Runtime, TensorArg};
+use crate::runtime::{
+    BackendKind, LayerPlan, NetworkPlan, PlanStep, Runtime, TensorArg,
+};
 use crate::util::Rng;
 
 use super::params::{random_layer_params, LayerParams};
@@ -96,6 +109,11 @@ impl Coordinator {
     /// Run ResNet-20 end to end. `cross_check_layers` names layers whose
     /// backend output is re-computed with the Rust bit-serial model and
     /// compared bit-exactly (expensive; pick small layers).
+    ///
+    /// On the native backend (and with no cross-checks requested) this
+    /// streams through the precompiled [`NetworkPlan`]; cross-checking
+    /// forces the per-call backend path, since comparing the plan (which
+    /// *is* the functional model) against itself would be vacuous.
     pub fn infer_resnet20(
         &self,
         config: PrecisionConfig,
@@ -106,11 +124,151 @@ impl Coordinator {
     ) -> Result<InferenceResult> {
         let layers = resnet20_layers(config);
         self.manifest.validate_network(config)?;
-        let params = Self::network_params(&layers, seed);
-        let (logits, cross_checked) =
-            self.run_network(&layers, &params, image, cross_check_layers)?;
         let report = self.scheduler.network_report(&layers, op)?;
+        let use_plans = cross_check_layers.is_empty()
+            && self.runtime.kind() == BackendKind::Native;
+        let (logits, cross_checked) = if use_plans {
+            let plan = self.network_plan(config, seed)?;
+            (self.run_network_planned(&plan, image, None)?, 0)
+        } else {
+            let params = Self::network_params(&layers, seed);
+            self.run_network(&layers, &params, image, cross_check_layers)?
+        };
         Ok(InferenceResult { logits, report, cross_checked })
+    }
+
+    /// Fetch (or compile, once) the layer-plan pipeline for the deployed
+    /// network `(config, seed)` from the runtime's plan cache.
+    pub fn network_plan(
+        &self,
+        config: PrecisionConfig,
+        seed: u64,
+    ) -> Result<Arc<NetworkPlan>> {
+        let key = format!("resnet20-{}-{seed}", config.as_str());
+        self.runtime
+            .network_plan(&key, || self.build_plan(config, seed))
+    }
+
+    /// Compile every layer of the network once: weights packed into RBE
+    /// bit-plane words, job geometry resolved, requant constants staged.
+    fn build_plan(
+        &self,
+        config: PrecisionConfig,
+        seed: u64,
+    ) -> Result<NetworkPlan> {
+        let layers = resnet20_layers(config);
+        self.manifest.validate_network(config)?;
+        let params = Self::network_params(&layers, seed);
+        let numerics = self.runtime.backend().plan_numerics();
+        let empty = LayerParams {
+            w: Vec::new(),
+            scale: Vec::new(),
+            bias: Vec::new(),
+        };
+        let mut steps = Vec::with_capacity(layers.len());
+        for l in &layers {
+            let name = l.artifact();
+            let e = self.manifest.get(&name).with_context(|| {
+                format!("layer {} has no artifact {name}", l.name)
+            })?;
+            let p = if l.op.on_rbe() { &params[&l.name] } else { &empty };
+            let t0 = Instant::now();
+            let plan = LayerPlan::compile(e, &p.w, &p.scale, &p.bias, numerics)
+                .with_context(|| format!("planning layer {}", l.name))?;
+            steps.push(PlanStep {
+                layer: l.clone(),
+                plan,
+                setup_us: t0.elapsed().as_secs_f64() * 1e6,
+            });
+        }
+        Ok(NetworkPlan::new(steps))
+    }
+
+    /// Walk the compiled plan for one image: activation streaming only.
+    /// Residual bookkeeping mirrors [`Self::run_network`] exactly. When
+    /// `profile` is given, per-layer compute time is recorded next to
+    /// the plan-compile (setup) time.
+    fn run_network_planned(
+        &self,
+        plan: &NetworkPlan,
+        image: &[i32],
+        mut profile: Option<&mut Vec<LayerSplit>>,
+    ) -> Result<Vec<i32>> {
+        let mut cur = image.to_vec();
+        let mut block_in: Vec<i32> = cur.clone();
+        let mut down_out: Vec<i32> = Vec::new();
+        for step in plan.steps() {
+            let l = &step.layer;
+            let t0 = profile.is_some().then(Instant::now);
+            match (&step.plan, l.op) {
+                (LayerPlan::Conv(c), LayerOp::Conv3x3) => {
+                    if l.name.ends_with(".conv0") {
+                        block_in = cur.clone();
+                    }
+                    let padded = Self::pad1(&cur, l.h, l.h, l.cin);
+                    cur = c
+                        .run(&padded)
+                        .with_context(|| format!("layer {}", l.name))?;
+                }
+                (LayerPlan::Conv(c), LayerOp::Conv1x1) => {
+                    down_out = c
+                        .run(&block_in)
+                        .with_context(|| format!("layer {}", l.name))?;
+                }
+                (LayerPlan::Conv(c), LayerOp::Linear) => {
+                    cur = c
+                        .run(&cur)
+                        .with_context(|| format!("layer {}", l.name))?;
+                }
+                (LayerPlan::Add { h, k, shift, o_bits }, _) => {
+                    let short = match l.residual_of.as_deref() {
+                        Some("input") => &block_in,
+                        _ => &down_out,
+                    };
+                    ensure!(
+                        cur.len() == *h * *h * *k,
+                        "layer {}: residual input length {} != {}x{}x{}",
+                        l.name,
+                        cur.len(),
+                        h,
+                        h,
+                        k
+                    );
+                    cur = add_requant(&cur, short, *shift, *o_bits)
+                        .with_context(|| format!("layer {}", l.name))?;
+                }
+                (LayerPlan::AvgPool { h, k, shift }, _) => {
+                    cur = avgpool(&cur, *h * *h, *k, *shift)
+                        .with_context(|| format!("layer {}", l.name))?;
+                }
+                (_, op) => {
+                    bail!("layer {}: plan does not match op {op:?}", l.name)
+                }
+            }
+            if let (Some(prof), Some(t0)) = (profile.as_mut(), t0) {
+                prof.push(LayerSplit {
+                    name: l.name.clone(),
+                    setup_us: step.setup_us,
+                    compute_us: t0.elapsed().as_secs_f64() * 1e6,
+                });
+            }
+        }
+        Ok(cur)
+    }
+
+    /// Per-layer setup-vs-compute split of the plan-driven path on one
+    /// image: plan-compile cost (amortized over the deployment) vs
+    /// activation-streaming cost (paid per inference).
+    pub fn profile_resnet20(
+        &self,
+        config: PrecisionConfig,
+        image: &[i32],
+        seed: u64,
+    ) -> Result<Vec<LayerSplit>> {
+        let plan = self.network_plan(config, seed)?;
+        let mut split = Vec::with_capacity(plan.steps().len());
+        let _ = self.run_network_planned(&plan, image, Some(&mut split))?;
+        Ok(split)
     }
 
     /// Walk the layer schedule for one image against prepared weights.
@@ -206,12 +364,14 @@ impl Coordinator {
         Ok((cur, cross_checked))
     }
 
-    /// Run a batch of images through ResNet-20 in parallel over
-    /// `threads` scoped worker threads sharing this coordinator (the
-    /// backend and its compile cache are `Send + Sync`).
+    /// Run a batch of images through ResNet-20 in parallel over an
+    /// intra-batch worker pool of `threads` scoped threads sharing this
+    /// coordinator (the backend, its compile cache and the network plan
+    /// are `Send + Sync` and shared read-only).
     ///
     /// All images share the same `seed`, i.e. the same network weights —
-    /// the batch is N requests against one deployed model. Results come
+    /// the batch is N requests against one deployed model, compiled
+    /// *once* into a [`NetworkPlan`] (native backend). Results come
     /// back in input order and are bitwise independent of `threads`:
     /// `infer_batch(.., &[img], .., 1)` and the same image inside an
     /// 8-wide batch produce identical logits.
@@ -223,50 +383,89 @@ impl Coordinator {
         seed: u64,
         threads: usize,
     ) -> Result<Vec<InferenceResult>> {
+        let use_plans = self.runtime.kind() == BackendKind::Native;
+        self.infer_batch_opts(config, op, images, seed, threads, use_plans)
+    }
+
+    /// [`Self::infer_batch`] with an explicit execution-path choice.
+    /// `use_plans = false` forces the per-call (pre-plan) backend path —
+    /// the PJRT route, kept callable on native so benches and parity
+    /// tests can compare both paths on one coordinator. `use_plans =
+    /// true` requires the native backend: plans execute the in-process
+    /// functional models, and silently bypassing a non-native backend
+    /// would misattribute its results.
+    pub fn infer_batch_opts(
+        &self,
+        config: PrecisionConfig,
+        op: &OperatingPoint,
+        images: &[Vec<i32>],
+        seed: u64,
+        threads: usize,
+        use_plans: bool,
+    ) -> Result<Vec<InferenceResult>> {
+        ensure!(
+            !use_plans || self.runtime.kind() == BackendKind::Native,
+            "plan-driven execution requires the native backend (current \
+             backend: {})",
+            self.runtime.kind().as_str()
+        );
         let n = images.len();
         if n == 0 {
             return Ok(Vec::new());
         }
         // Per-network state is prepared ONCE for the whole batch: the
-        // layer schedule, the seed-derived weights and the timing/energy
-        // report are image-independent and shared read-only by workers.
+        // layer schedule, the timing/energy report and either the
+        // compiled plan or the seed-derived weights are image-independent
+        // and shared read-only by workers.
         let layers = resnet20_layers(config);
         self.manifest.validate_network(config)?;
-        let params = Self::network_params(&layers, seed);
         let report = self.scheduler.network_report(&layers, op)?;
+        let plan = if use_plans {
+            Some(self.network_plan(config, seed)?)
+        } else {
+            None
+        };
+        let params = if plan.is_none() {
+            Some(Self::network_params(&layers, seed))
+        } else {
+            None
+        };
+        let run_one = |img: &[i32]| -> Result<Vec<i32>> {
+            match (&plan, &params) {
+                (Some(p), _) => self.run_network_planned(p, img, None),
+                (None, Some(pr)) => {
+                    self.run_network(&layers, pr, img, &[]).map(|(l, _)| l)
+                }
+                (None, None) => unreachable!(),
+            }
+        };
 
         let threads = threads.clamp(1, n);
-        let mut logits: Vec<Option<Result<Vec<i32>>>> = Vec::new();
-        if threads == 1 {
-            for img in images {
-                logits.push(Some(
-                    self.run_network(&layers, &params, img, &[])
-                        .map(|(l, _)| l),
-                ));
-            }
+        let logits: Vec<Option<Result<Vec<i32>>>> = if threads == 1 {
+            images.iter().map(|img| Some(run_one(img.as_slice()))).collect()
         } else {
+            // Worker pool: threads pull the next image index from an
+            // atomic queue, so stragglers don't idle the rest of the
+            // pool. Output order (and every bit of every result) is
+            // independent of the interleaving.
             let slots: Vec<Mutex<Option<Result<Vec<i32>>>>> =
                 (0..n).map(|_| Mutex::new(None)).collect();
+            let next = AtomicUsize::new(0);
             std::thread::scope(|s| {
-                for t in 0..threads {
-                    let (slots, layers, params) = (&slots, &layers, &params);
-                    s.spawn(move || {
-                        let mut i = t;
-                        while i < n {
-                            let r = self
-                                .run_network(layers, params, &images[i], &[])
-                                .map(|(l, _)| l);
-                            *slots[i].lock().unwrap() = Some(r);
-                            i += threads;
+                for _ in 0..threads {
+                    let (slots, next, run_one) = (&slots, &next, &run_one);
+                    s.spawn(move || loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
                         }
+                        *slots[i].lock().unwrap() =
+                            Some(run_one(images[i].as_slice()));
                     });
                 }
             });
-            logits = slots
-                .into_iter()
-                .map(|slot| slot.into_inner().unwrap())
-                .collect();
-        }
+            slots.into_iter().map(|slot| slot.into_inner().unwrap()).collect()
+        };
         logits
             .into_iter()
             .enumerate()

@@ -8,6 +8,7 @@ use anyhow::{bail, Result};
 
 use super::layer::{Layer, LayerOp, PrecisionConfig};
 use super::resnet::{quickstart_layer, resnet20_layers};
+use crate::rbe::RbeJob;
 use crate::util::TsvTable;
 
 /// One manifest row (mirrors aot.manifest_entry minus arg shapes, which
@@ -24,6 +25,53 @@ pub struct ManifestEntry {
     pub i_bits: usize,
     pub o_bits: usize,
     pub shift: u32,
+}
+
+impl ManifestEntry {
+    /// Side length of the activation plane the artifact receives:
+    /// conv3x3 artifacts take the zero-padded plane (pad = 1/side),
+    /// linear layers a single pixel (their `h` is 0 by convention),
+    /// everything else the layer's own spatial size.
+    pub fn full_side(&self) -> usize {
+        match self.op {
+            LayerOp::Conv3x3 => self.h + 2,
+            LayerOp::Linear => 1,
+            _ => self.h,
+        }
+    }
+
+    /// Resolve the RBE job geometry this conv/linear artifact executes:
+    /// valid conv over the padded plane (3×3), strided gather of the
+    /// full plane (1×1), single-pixel 1×1 (linear). The plan compiler
+    /// and the per-call native path both derive geometry here, so they
+    /// cannot drift.
+    pub fn rbe_job(&self) -> Result<RbeJob> {
+        match self.op {
+            LayerOp::Conv3x3 => {
+                let h_out = (self.h + 2 - 3) / self.stride + 1;
+                RbeJob::conv3x3(
+                    h_out, h_out, self.cin, self.cout, self.stride,
+                    self.w_bits, self.i_bits, self.o_bits,
+                )
+            }
+            LayerOp::Conv1x1 => {
+                let h_out = (self.h - 1) / self.stride + 1;
+                RbeJob::conv1x1(
+                    h_out, h_out, self.cin, self.cout, self.stride,
+                    self.w_bits, self.i_bits, self.o_bits,
+                )
+            }
+            LayerOp::Linear => RbeJob::conv1x1(
+                1, 1, self.cin, self.cout, 1, self.w_bits, self.i_bits,
+                self.o_bits,
+            ),
+            _ => bail!(
+                "{}: {} layers have no RBE job geometry",
+                self.name,
+                self.op.as_str()
+            ),
+        }
+    }
 }
 
 /// Parsed `manifest.tsv`.
@@ -178,6 +226,27 @@ mod tests {
         // quickstart spec keeps its hand-picked shift (not shift_for)
         let qs = m.get("conv3x3_h16_ci32_co32_s1_w4i4o4").unwrap();
         assert_eq!(qs.shift, 10);
+    }
+
+    #[test]
+    fn geometry_helpers_cover_every_rbe_entry() {
+        let m = Manifest::builtin();
+        for e in m.entries() {
+            match e.op {
+                LayerOp::Conv3x3 | LayerOp::Conv1x1 | LayerOp::Linear => {
+                    let job = e.rbe_job().unwrap();
+                    assert_eq!(job.k_in, e.cin, "{}", e.name);
+                    assert_eq!(job.k_out, e.cout, "{}", e.name);
+                    // the strided extent always fits the full plane
+                    assert!(job.h_in() <= e.full_side(), "{}", e.name);
+                }
+                _ => assert!(e.rbe_job().is_err(), "{}", e.name),
+            }
+        }
+        // linear layers receive a single pixel (h = 0 by convention)
+        let fc = m.get("linear_ci64_co10_w8i8o8").unwrap();
+        assert_eq!(fc.full_side(), 1);
+        assert_eq!(fc.rbe_job().unwrap().h_in(), 1);
     }
 
     #[test]

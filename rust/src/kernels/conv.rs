@@ -41,11 +41,44 @@ impl ConvProblem {
         self.macs() * 2
     }
 
-    fn validate(&self) -> Result<()> {
-        ensure!(self.ksize == 1 || self.ksize == 3);
-        ensure!(self.k_in % 4 == 0, "Kin must pack into bytes");
-        ensure!(self.k_out % self.cores == 0, "Kout vs cores");
-        ensure!((self.k_out / self.cores) % 4 == 0, "4-wide kout blocks");
+    /// Up-front shape validation: every constraint is checked before any
+    /// program emission, and each failure names the offending dimension
+    /// and the divisor the kernel requires.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.ksize == 1 || self.ksize == 3,
+            "ksize={} is unsupported: the software conv kernel handles \
+             1x1 and 3x3 filters only",
+            self.ksize
+        );
+        ensure!(
+            self.h > 0 && self.w > 0 && self.cores > 0,
+            "degenerate conv shape H={} W={} cores={}: every dimension \
+             must be > 0",
+            self.h,
+            self.w,
+            self.cores
+        );
+        ensure!(
+            self.k_in % 4 == 0,
+            "Kin={} must be a multiple of 4 (int8 activations pack 4 \
+             channels per 32-bit word)",
+            self.k_in
+        );
+        ensure!(
+            self.k_out % self.cores == 0,
+            "Kout={} must be a multiple of cores={} (output channels are \
+             block-partitioned across the cluster)",
+            self.k_out,
+            self.cores
+        );
+        ensure!(
+            (self.k_out / self.cores) % 4 == 0,
+            "Kout/core = {} must be a multiple of 4 (the kernel computes \
+             4-output-channel register blocks); use Kout a multiple of {}",
+            self.k_out / self.cores,
+            4 * self.cores
+        );
         Ok(())
     }
 
@@ -246,10 +279,38 @@ impl ConvProblem {
     ) -> Result<(Vec<i32>, RunStats)> {
         self.validate()?;
         let taps = self.ksize * self.ksize;
-        ensure!(x.len() == self.hp() * self.wp() * self.k_in);
-        ensure!(w.len() == self.k_out * taps * self.k_in);
-        ensure!(scale.len() == self.k_out && bias.len() == self.k_out);
-        ensure!(cfg.cores == self.cores);
+        ensure!(
+            x.len() == self.hp() * self.wp() * self.k_in,
+            "activation has {} values, expected ({}, {}, {}) = {} \
+             (padded plane for 3x3)",
+            x.len(),
+            self.hp(),
+            self.wp(),
+            self.k_in,
+            self.hp() * self.wp() * self.k_in
+        );
+        ensure!(
+            w.len() == self.k_out * taps * self.k_in,
+            "weights have {} values, expected Kout*taps*Kin = {}x{}x{} = {}",
+            w.len(),
+            self.k_out,
+            taps,
+            self.k_in,
+            self.k_out * taps * self.k_in
+        );
+        ensure!(
+            scale.len() == self.k_out && bias.len() == self.k_out,
+            "scale/bias have {}/{} values, expected Kout = {} each",
+            scale.len(),
+            bias.len(),
+            self.k_out
+        );
+        ensure!(
+            cfg.cores == self.cores,
+            "cluster config has {} cores but the problem was built for {}",
+            cfg.cores,
+            self.cores
+        );
         let mut alloc = TcdmAlloc::new();
         let x_addr = alloc.alloc(x.len() / 4 + 2)?;
         let w_addr = alloc.alloc(w.len() / 4 + 2)?;
@@ -327,6 +388,35 @@ mod tests {
         let scale = (0..p.k_out).map(|_| rng.range_i32(1, 8)).collect();
         let bias = (0..p.k_out).map(|_| rng.range_i32(-100, 100)).collect();
         (x, w, scale, bias)
+    }
+
+    /// Unsupported shapes fail up front, naming dimension and divisor.
+    #[test]
+    fn validate_names_offending_dimension() {
+        let base = ConvProblem {
+            h: 4, w: 4, k_in: 8, k_out: 8, ksize: 3, cores: 2, bn_shift: 6,
+        };
+        let err = ConvProblem { ksize: 5, ..base }
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ksize=5"), "{err}");
+        let err = ConvProblem { k_in: 6, ..base }
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("Kin=6") && err.contains("multiple of 4"), "{err}");
+        let err = ConvProblem { k_out: 6, ..base }
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("Kout=6") && err.contains("cores=2"), "{err}");
+        let err = ConvProblem { k_out: 4, ..base }
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("Kout/core = 2"), "{err}");
+        base.validate().unwrap();
     }
 
     #[test]

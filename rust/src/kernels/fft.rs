@@ -35,10 +35,31 @@ impl FftProblem {
         (self.n / 2 * self.stages() * 10) as u64
     }
 
-    fn validate(&self) -> Result<()> {
-        ensure!(self.n.is_power_of_two() && self.n >= 8);
-        ensure!((self.n / 2) % self.cores == 0, "butterflies vs cores");
-        ensure!(self.n % self.cores == 0);
+    /// Up-front shape validation: every constraint is checked before any
+    /// program emission, and each failure names the offending dimension
+    /// and the divisor the kernel requires.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.cores > 0, "cores must be > 0");
+        ensure!(
+            self.n.is_power_of_two() && self.n >= 8,
+            "N={} is unsupported: the radix-2 FFT needs a power of two \
+             >= 8",
+            self.n
+        );
+        ensure!(
+            (self.n / 2) % self.cores == 0,
+            "N/2 = {} butterflies must be a multiple of cores={} (each \
+             stage block-partitions butterflies across the cluster)",
+            self.n / 2,
+            self.cores
+        );
+        ensure!(
+            self.n % self.cores == 0,
+            "N={} must be a multiple of cores={} (the bit-reversal pass \
+             slices N indices across the cluster)",
+            self.n,
+            self.cores
+        );
         Ok(())
     }
 
@@ -174,8 +195,18 @@ impl FftProblem {
         input: &[(f32, f32)],
     ) -> Result<(Vec<(f32, f32)>, RunStats)> {
         self.validate()?;
-        ensure!(input.len() == self.n);
-        ensure!(cfg.cores == self.cores);
+        ensure!(
+            input.len() == self.n,
+            "input has {} complex points, expected N = {}",
+            input.len(),
+            self.n
+        );
+        ensure!(
+            cfg.cores == self.cores,
+            "cluster config has {} cores but the problem was built for {}",
+            cfg.cores,
+            self.cores
+        );
         let mut alloc = TcdmAlloc::new();
         let x_addr = alloc.alloc(self.n * 2)?;
         let tw_addr = alloc.alloc(self.n)?; // n/2 complex
@@ -200,6 +231,7 @@ impl FftProblem {
 
         // bit-reverse pass + one program per stage
         let mut total = RunStats::default();
+        total.traffic_seed = cl.cfg.traffic_seed;
         let mut programs =
             vec![self.bitrev_program(x_addr, rev_addr)?];
         for s in 0..self.stages() {
@@ -266,6 +298,26 @@ mod tests {
                 "bin {i}: {x:?} vs {y:?}"
             );
         }
+    }
+
+    /// Unsupported sizes fail up front, naming dimension and divisor.
+    #[test]
+    fn validate_names_offending_dimension() {
+        let err = FftProblem { n: 96, cores: 16 }
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("N=96") && err.contains("power of two"), "{err}");
+        let err = FftProblem { n: 16, cores: 16 }
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("N/2 = 8") && err.contains("cores=16"), "{err}");
+        let sig = rand_signal(16, 1);
+        assert!(FftProblem { n: 16, cores: 16 }
+            .run_with(ClusterConfig::default(), &sig)
+            .is_err());
+        FftProblem { n: 256, cores: 16 }.validate().unwrap();
     }
 
     #[test]

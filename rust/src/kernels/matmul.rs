@@ -126,17 +126,61 @@ impl MatmulProblem {
         }
     }
 
-    fn validate(&self) -> Result<()> {
+    /// Up-front shape validation: every constraint is checked before any
+    /// program emission or TCDM allocation, and each failure names the
+    /// offending dimension and the divisor the kernel requires.
+    pub fn validate(&self) -> Result<()> {
         let lanes = self.kernel.prec().lanes() as usize;
-        ensure!(self.m % (4 * self.cores) == 0,
-                "M={} must divide into 4-row blocks per core", self.m);
-        ensure!(self.n % self.col_block() == 0, "N={} vs col block", self.n);
-        ensure!(self.k % lanes == 0, "K={} not divisible by lanes", self.k);
-        ensure!(self.k / lanes >= 2, "K too small for software pipeline");
+        ensure!(
+            self.cores > 0 && self.m > 0 && self.n > 0 && self.k > 0,
+            "degenerate matmul shape M={} N={} K={} cores={}: every \
+             dimension must be > 0",
+            self.m,
+            self.n,
+            self.k,
+            self.cores
+        );
+        ensure!(
+            self.m % (4 * self.cores) == 0,
+            "M={} must be a multiple of 4*cores = {} ({} rows are \
+             block-partitioned across {} cores in 4-row register blocks)",
+            self.m,
+            4 * self.cores,
+            self.m,
+            self.cores
+        );
+        ensure!(
+            self.n % self.col_block() == 0,
+            "N={} must be a multiple of {} (the {} kernel computes \
+             {}-column accumulator blocks)",
+            self.n,
+            self.col_block(),
+            self.kernel.name(),
+            self.col_block()
+        );
+        ensure!(
+            self.k % lanes == 0,
+            "K={} must be a multiple of {} ({}-bit operands pack {} \
+             lanes per 32-bit word)",
+            self.k,
+            lanes,
+            self.kernel.prec().bits(),
+            lanes
+        );
+        ensure!(
+            self.k / lanes >= 2,
+            "K={} gives only {} packed word(s) per row; the software \
+             pipeline prefetches one word ahead and needs K >= {}",
+            self.k,
+            self.k / lanes,
+            2 * lanes
+        );
         if let MatmulKernel::UnpackBaseline { prec } = self.kernel {
             ensure!(
                 matches!(prec, Prec::B4 | Prec::B2),
-                "unpack baseline models 4/2-bit data on 8-bit hardware"
+                "unpack baseline models 4/2-bit data on 8-bit hardware \
+                 (got {}-bit)",
+                prec.bits()
             );
         }
         Ok(())
@@ -565,12 +609,34 @@ impl MatmulProblem {
         a: &[i32],
         b: &[i32],
     ) -> Result<(Vec<i32>, RunStats)> {
-        ensure!(a.len() == self.m * self.k && b.len() == self.n * self.k);
+        self.validate()?;
+        ensure!(
+            a.len() == self.m * self.k,
+            "A has {} values, expected M*K = {}x{} = {}",
+            a.len(),
+            self.m,
+            self.k,
+            self.m * self.k
+        );
+        ensure!(
+            b.len() == self.n * self.k,
+            "B has {} values, expected N*K = {}x{} = {} (B is stored \
+             transposed, (N, K) row-major)",
+            b.len(),
+            self.n,
+            self.k,
+            self.n * self.k
+        );
         let half = 1i32 << (self.kernel.prec().bits() - 1);
         if a.iter().chain(b).any(|&v| v < -half || v >= half) {
             bail!("operand out of {}-bit range", self.kernel.prec().bits());
         }
-        ensure!(cfg.cores == self.cores, "config/core mismatch");
+        ensure!(
+            cfg.cores == self.cores,
+            "cluster config has {} cores but the problem was built for {}",
+            cfg.cores,
+            self.cores
+        );
         let mut alloc = TcdmAlloc::new();
         let built = self.build(&mut alloc)?;
         let mut cl = Cluster::new(cfg);
@@ -637,6 +703,44 @@ mod tests {
     #[test]
     fn xpulp8_correct_single_core() {
         check(MatmulKernel::Xpulp8, 4, 4, 16, 1);
+    }
+
+    /// Unsupported shapes are rejected up front with messages naming the
+    /// offending dimension and the required divisor — before any program
+    /// emission or TCDM placement.
+    #[test]
+    fn validate_names_offending_dimension() {
+        let p = |m, n, k, cores| MatmulProblem {
+            m,
+            n,
+            k,
+            kernel: MatmulKernel::Xpulp8,
+            cores,
+        };
+        let err = p(6, 4, 16, 2).validate().unwrap_err().to_string();
+        assert!(err.contains("M=6") && err.contains("4*cores = 8"), "{err}");
+        let err = p(8, 3, 16, 2).validate().unwrap_err().to_string();
+        assert!(err.contains("N=3") && err.contains("multiple of 2"), "{err}");
+        let err = p(8, 4, 10, 2).validate().unwrap_err().to_string();
+        assert!(err.contains("K=10") && err.contains("multiple of 4"), "{err}");
+        let err = p(8, 4, 4, 2).validate().unwrap_err().to_string();
+        assert!(err.contains("prefetches one word ahead"), "{err}");
+        assert!(p(0, 4, 16, 2).validate().is_err());
+        // the runner rejects before touching the cluster
+        let (a, b) = random_operands(6, 4, 16, Prec::B8, 1);
+        let mut cfg = ClusterConfig::default();
+        cfg.cores = 2;
+        assert!(p(6, 4, 16, 2).run_with(cfg, &a, &b).is_err());
+        // wrong operand lengths name the expected extent
+        let good = p(8, 4, 16, 2);
+        let (a, b) = random_operands(8, 4, 16, Prec::B8, 2);
+        let mut cfg = ClusterConfig::default();
+        cfg.cores = 2;
+        let err = good
+            .run_with(cfg, &a[..a.len() - 1], &b)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expected M*K"), "{err}");
     }
 
     #[test]

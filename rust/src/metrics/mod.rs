@@ -28,6 +28,41 @@ pub fn fj_per_op(power_mw: f64, gops: f64) -> f64 {
     power_mw / gops * 1.0e3
 }
 
+/// Per-layer cost split of the plan-driven inference path: one-time
+/// plan compilation (setup — weight packing, geometry resolution,
+/// requant staging) vs per-image activation streaming (compute). The
+/// throughput bench serializes these into `BENCH_*.json` so the
+/// setup-vs-compute trajectory is recorded per commit.
+#[derive(Debug, Clone)]
+pub struct LayerSplit {
+    pub name: String,
+    pub setup_us: f64,
+    pub compute_us: f64,
+}
+
+/// Render the setup-vs-compute table (one row per layer + a totals row).
+pub fn render_setup_compute(rows: &[LayerSplit]) -> String {
+    let mut body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                format!("{:.1}", r.setup_us),
+                format!("{:.1}", r.compute_us),
+            ]
+        })
+        .collect();
+    let (setup, compute): (f64, f64) = rows
+        .iter()
+        .fold((0.0, 0.0), |(s, c), r| (s + r.setup_us, c + r.compute_us));
+    body.push(vec![
+        "TOTAL".into(),
+        format!("{setup:.1}"),
+        format!("{compute:.1}"),
+    ]);
+    render_table(&["layer", "setup us", "compute us"], &body)
+}
+
 /// Pretty-print a table: header + rows of equal length.
 pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
     let ncol = header.len();

@@ -1,10 +1,16 @@
 //! Bit-exact functional model of the RBE datapath.
 //!
-//! Two implementations of the same arithmetic:
+//! Three implementations of the same arithmetic:
 //! * [`conv_bitserial`] computes exactly as the hardware (and the L1
 //!   Pallas kernel) does: decompose into bit planes, AND, scale by
 //!   ±2^(i+j) (weight MSB negative — two's complement), accumulate in
 //!   32-bit, then normquant (Eq. 1 + Eq. 2);
+//! * [`conv_bitserial_packed`] is the same Eq. 1 datapath driven by a
+//!   pre-packed weight operand ([`PackedWeights`], the §II-B3 bit-plane
+//!   layout): the per-channel bit loop collapses into one AND + popcount
+//!   per 32-channel word, which is what makes the precompiled-plan
+//!   serving path fast. Bitwise identical to [`conv_bitserial`] by
+//!   construction — each (i, j) contribution is the same popcount;
 //! * [`conv_reference`] is a plain signed-integer convolution + normquant
 //!   (the specification, mirroring python `ref.py`).
 //!
@@ -12,6 +18,10 @@
 //! tests additionally compare against the PJRT artifact outputs, closing
 //! the three-way equivalence the DESIGN.md §Functional-vs-timing split
 //! requires.
+//!
+//! The `*_planned` entry points serve precompiled layer plans
+//! (`runtime::plan`): weights were validated once at plan-compile time,
+//! so per-call work is only activation checking + streaming.
 //!
 //! Tensor layout: activations `(H, W, K)` row-major `i32`, unsigned values
 //! in `[0, 2^I)`; weights `(Kout, Kin, fy, fx)` signed in
@@ -38,11 +48,31 @@ impl NormQuant {
     }
 
     /// Apply Eq. 2 + ReLU clip to `o_bits`.
+    ///
+    /// Audit note (requant clamp bounds): every layer of the built-in
+    /// zoo applies ReLU before quantization, so the unconditional
+    /// `[0, 2^O - 1]` clip here matches both the bit-serial reference
+    /// and python `ref.py` (`np.clip(v, 0, (1 << o_bits) - 1)`)
+    /// bit-exactly — no divergence. The bound is only correct *because*
+    /// of the ReLU; signed-output layers must use [`Self::apply_signed`]
+    /// instead, which the edge-case property tests below pin down.
     #[inline]
     pub fn apply(&self, k: usize, acc: i64, o_bits: usize) -> i32 {
         let v = (self.scale[k] as i64 * acc + self.bias[k] as i64)
             >> self.shift;
         v.clamp(0, (1i64 << o_bits) - 1) as i32
+    }
+
+    /// Apply Eq. 2 with a *signed* (no-ReLU) clip to `o_bits`:
+    /// `clamp(v, -2^(O-1), 2^(O-1) - 1)`, the two's-complement output
+    /// range. The shift stays arithmetic (floor division), matching
+    /// numpy's `>>` on negative int64.
+    #[inline]
+    pub fn apply_signed(&self, k: usize, acc: i64, o_bits: usize) -> i32 {
+        let v = (self.scale[k] as i64 * acc + self.bias[k] as i64)
+            >> self.shift;
+        let half = 1i64 << (o_bits - 1);
+        v.clamp(-half, half - 1) as i32
     }
 }
 
@@ -69,33 +99,50 @@ fn tap_range(job: &RbeJob) -> usize {
     }
 }
 
-fn check_shapes(
-    job: &RbeJob,
-    x: &[i32],
-    w: &[i32],
-    nq: &NormQuant,
-) -> Result<()> {
-    let taps = tap_range(job);
+fn check_activations(job: &RbeJob, x: &[i32]) -> Result<()> {
     let want_x = job.h_in() * job.w_in() * job.k_in;
-    let want_w = job.k_out * job.k_in * taps * taps;
     if x.len() != want_x {
         bail!("activation len {} != {}", x.len(), want_x);
-    }
-    if w.len() != want_w {
-        bail!("weight len {} != {}", w.len(), want_w);
-    }
-    if nq.scale.len() != job.k_out || nq.bias.len() != job.k_out {
-        bail!("normquant params must be per-output-channel");
     }
     let imax = 1 << job.i_bits;
     if x.iter().any(|&v| v < 0 || v >= imax) {
         bail!("activation out of unsigned {}-bit range", job.i_bits);
+    }
+    Ok(())
+}
+
+/// Validate a raw weight tensor against the job signature (length +
+/// signed range). Public so plan compilation can validate *once* and
+/// then stream through the unchecked `*_planned` entry points.
+pub fn check_weights(job: &RbeJob, w: &[i32]) -> Result<()> {
+    let taps = tap_range(job);
+    let want_w = job.k_out * job.k_in * taps * taps;
+    if w.len() != want_w {
+        bail!("weight len {} != {}", w.len(), want_w);
     }
     let whalf = 1 << (job.w_bits - 1);
     if w.iter().any(|&v| v < -whalf || v >= whalf) {
         bail!("weight out of signed {}-bit range", job.w_bits);
     }
     Ok(())
+}
+
+fn check_normquant(job: &RbeJob, nq: &NormQuant) -> Result<()> {
+    if nq.scale.len() != job.k_out || nq.bias.len() != job.k_out {
+        bail!("normquant params must be per-output-channel");
+    }
+    Ok(())
+}
+
+fn check_shapes(
+    job: &RbeJob,
+    x: &[i32],
+    w: &[i32],
+    nq: &NormQuant,
+) -> Result<()> {
+    check_activations(job, x)?;
+    check_weights(job, w)?;
+    check_normquant(job, nq)
 }
 
 /// Plain integer convolution + normquant: the oracle.
@@ -106,6 +153,30 @@ pub fn conv_reference(
     nq: &NormQuant,
 ) -> Result<Vec<i32>> {
     check_shapes(job, x, w, nq)?;
+    Ok(conv_reference_core(job, x, w, nq))
+}
+
+/// Plan-driven oracle entry point: weights (and normquant shapes) were
+/// validated once at plan-compile time, so per-call checking is the
+/// activation stream only. Bitwise identical to [`conv_reference`].
+pub fn conv_reference_planned(
+    job: &RbeJob,
+    x: &[i32],
+    w: &[i32],
+    nq: &NormQuant,
+) -> Result<Vec<i32>> {
+    check_activations(job, x)?;
+    debug_assert!(check_weights(job, w).is_ok());
+    debug_assert!(check_normquant(job, nq).is_ok());
+    Ok(conv_reference_core(job, x, w, nq))
+}
+
+fn conv_reference_core(
+    job: &RbeJob,
+    x: &[i32],
+    w: &[i32],
+    nq: &NormQuant,
+) -> Vec<i32> {
     let taps = tap_range(job);
     let (hi, wi) = (job.h_in(), job.w_in());
     let mut out = vec![0i32; job.h_out * job.w_out * job.k_out];
@@ -133,7 +204,7 @@ pub fn conv_reference(
             }
         }
     }
-    Ok(out)
+    out
 }
 
 /// Bit-serial convolution: Eq. 1 exactly as the datapath evaluates it.
@@ -199,6 +270,192 @@ pub fn conv_bitserial(
         }
     }
     Ok(out)
+}
+
+/// Weights pre-packed into 32-channel bit-plane words — the §II-B3 TCDM
+/// layout the streamer feeds the BinConvs from, and the weight half of a
+/// precompiled layer plan.
+///
+/// Bit `c` of `planes[((ko * groups + g) * w_bits + i) * taps² + t]` is
+/// bit `i` of the two's-complement weight for output channel `ko`, input
+/// channel `g * 32 + c`, filter tap `t` (`t = fy * taps + fx`). Ragged
+/// channel tails are zero-padded, contributing nothing to any popcount.
+#[derive(Debug, Clone)]
+pub struct PackedWeights {
+    planes: Vec<u32>,
+    groups: usize,
+    taps: usize,
+    k_out: usize,
+    w_bits: usize,
+}
+
+impl PackedWeights {
+    /// Packed bytes held (what the TCDM would store) — the number a
+    /// plan-cache eviction policy would account.
+    pub fn bytes(&self) -> usize {
+        self.planes.len() * 4
+    }
+}
+
+/// Validate + pack a raw `(Kout, Kin, fy, fx)` weight tensor into the
+/// bit-plane layout, once per plan compilation.
+pub fn pack_weights(job: &RbeJob, w: &[i32]) -> Result<PackedWeights> {
+    check_weights(job, w)?;
+    let taps = tap_range(job);
+    let taps2 = taps * taps;
+    let groups = job.k_in.div_ceil(32);
+    let wmask = (1u32 << job.w_bits) - 1;
+    let mut planes = vec![0u32; job.k_out * groups * job.w_bits * taps2];
+    for ko in 0..job.k_out {
+        for ki in 0..job.k_in {
+            let (g, c) = (ki / 32, ki % 32);
+            for t in 0..taps2 {
+                let wv = (w[(ko * job.k_in + ki) * taps2 + t] as u32) & wmask;
+                for i in 0..job.w_bits {
+                    if (wv >> i) & 1 == 1 {
+                        planes[((ko * groups + g) * job.w_bits + i) * taps2
+                            + t] |= 1 << c;
+                    }
+                }
+            }
+        }
+    }
+    Ok(PackedWeights {
+        planes,
+        groups,
+        taps,
+        k_out: job.k_out,
+        w_bits: job.w_bits,
+    })
+}
+
+/// Bit-serial convolution over pre-packed weights: the plan-driven fast
+/// path. Activations are packed into the same 32-channel bit-plane words
+/// on entry (amortized over all `k_out` channels), then every (i, j)
+/// contribution is one AND + popcount per word instead of a per-channel
+/// bit walk. The (i, j) popcount totals are the same integers
+/// [`conv_bitserial`] accumulates, and wrapping 32-bit addition is
+/// associative, so outputs are bitwise identical.
+pub fn conv_bitserial_packed(
+    job: &RbeJob,
+    x: &[i32],
+    pw: &PackedWeights,
+    nq: &NormQuant,
+) -> Result<Vec<i32>> {
+    check_activations(job, x)?;
+    check_normquant(job, nq)?;
+    let taps = tap_range(job);
+    let taps2 = taps * taps;
+    let groups = job.k_in.div_ceil(32);
+    // Every field that determines the plane layout must match, or the
+    // indexing below reads wrong planes / out of bounds.
+    if pw.taps != taps
+        || pw.groups != groups
+        || pw.k_out != job.k_out
+        || pw.w_bits != job.w_bits
+    {
+        bail!(
+            "packed weights were built for a different job signature \
+             (taps {} / groups {} / k_out {} / w_bits {} vs \
+             {taps} / {groups} / {} / {})",
+            pw.taps,
+            pw.groups,
+            pw.k_out,
+            pw.w_bits,
+            job.k_out,
+            job.w_bits
+        );
+    }
+    let (hi, wi) = (job.h_in(), job.w_in());
+
+    // Pack the activation plane: one u32 per (pixel, group, input bit).
+    let mut xp = vec![0u32; hi * wi * groups * job.i_bits];
+    for p in 0..hi * wi {
+        for ki in 0..job.k_in {
+            let v = x[p * job.k_in + ki] as u32;
+            let (g, c) = (ki / 32, ki % 32);
+            for j in 0..job.i_bits {
+                if (v >> j) & 1 == 1 {
+                    xp[(p * groups + g) * job.i_bits + j] |= 1 << c;
+                }
+            }
+        }
+    }
+
+    let mut out = vec![0i32; job.h_out * job.w_out * job.k_out];
+    for oy in 0..job.h_out {
+        for ox in 0..job.w_out {
+            for ko in 0..job.k_out {
+                let wbase = ko * groups;
+                let mut acc: i32 = 0; // the 32-bit Accum register
+                for i in 0..job.w_bits {
+                    let neg = i == job.w_bits - 1 && job.w_bits > 1;
+                    for j in 0..job.i_bits {
+                        let mut ones: i32 = 0;
+                        for fy in 0..taps {
+                            let iy = oy * job.stride + fy;
+                            for fx in 0..taps {
+                                let ix = ox * job.stride + fx;
+                                let px = (iy * wi + ix) * groups;
+                                for g in 0..groups {
+                                    let xw = xp[(px + g) * job.i_bits + j];
+                                    let ww = pw.planes[((wbase + g)
+                                        * job.w_bits
+                                        + i)
+                                        * taps2
+                                        + fy * taps
+                                        + fx];
+                                    ones += (xw & ww).count_ones() as i32;
+                                }
+                            }
+                        }
+                        let contrib = ones.wrapping_shl((i + j) as u32);
+                        acc = if neg {
+                            acc.wrapping_sub(contrib)
+                        } else {
+                            acc.wrapping_add(contrib)
+                        };
+                    }
+                }
+                out[(oy * job.w_out + ox) * job.k_out + ko] =
+                    nq.apply(ko, acc as i64, job.o_bits);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Residual add + requant (`ref.add_requant_ref` with unit scales):
+/// `clip((a + b) >> shift, 0, 2^O - 1)` elementwise.
+pub fn add_requant(
+    a: &[i32],
+    b: &[i32],
+    shift: u32,
+    o_bits: usize,
+) -> Result<Vec<i32>> {
+    if a.len() != b.len() {
+        bail!("add operands differ in length: {} vs {}", a.len(), b.len());
+    }
+    let omax = (1i64 << o_bits) - 1;
+    Ok(a.iter()
+        .zip(b)
+        .map(|(&a, &b)| (((a as i64 + b as i64) >> shift).clamp(0, omax)) as i32)
+        .collect())
+}
+
+/// Global average pool (`ref.avgpool_ref`): per-channel sum over
+/// `pixels` spatial positions, then arithmetic right shift.
+pub fn avgpool(x: &[i32], pixels: usize, k: usize, shift: u32) -> Result<Vec<i32>> {
+    if x.len() != pixels * k {
+        bail!("avgpool input len {} != {pixels} pixels x {k} channels", x.len());
+    }
+    let mut sums = vec![0i64; k];
+    for px in x.chunks_exact(k) {
+        for (s, &v) in sums.iter_mut().zip(px) {
+            *s += v as i64;
+        }
+    }
+    Ok(sums.iter().map(|&s| (s >> shift) as i32).collect())
 }
 
 #[cfg(test)]
@@ -296,5 +553,120 @@ mod tests {
             conv_bitserial(&job, &x, &w, &nq).unwrap(),
             conv_reference(&job, &x, &w, &nq).unwrap()
         );
+    }
+
+    /// Property: the packed plan-driven datapath is bitwise identical to
+    /// the scalar bit-serial model for every precision, mode, stride and
+    /// ragged channel count (incl. k_in not a multiple of 32).
+    #[test]
+    fn packed_equals_scalar_bitserial_sweep() {
+        let mut rng = Rng::new(4242);
+        for _ in 0..40 {
+            let mode = if rng.f64() < 0.5 {
+                RbeMode::Conv3x3
+            } else {
+                RbeMode::Conv1x1
+            };
+            let job = RbeJob {
+                mode,
+                h_out: 1 + rng.index(3),
+                w_out: 1 + rng.index(3),
+                k_in: *rng.pick(&[1, 3, 31, 32, 33, 40, 64]),
+                k_out: *rng.pick(&[1, 4, 16]),
+                stride: 1 + rng.index(2),
+                w_bits: 2 + rng.index(7),
+                i_bits: 2 + rng.index(7),
+                o_bits: 2 + rng.index(7),
+            };
+            let (x, w, nq) = random_job_inputs(&mut rng, &job);
+            let pw = pack_weights(&job, &w).unwrap();
+            assert_eq!(
+                conv_bitserial_packed(&job, &x, &pw, &nq).unwrap(),
+                conv_bitserial(&job, &x, &w, &nq).unwrap(),
+                "job {job:?}"
+            );
+            assert_eq!(
+                conv_reference_planned(&job, &x, &w, &nq).unwrap(),
+                conv_reference(&job, &x, &w, &nq).unwrap(),
+                "planned oracle, job {job:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_rejects_mismatched_geometry() {
+        let j3 = RbeJob::conv3x3(2, 2, 8, 4, 1, 4, 4, 4).unwrap();
+        let mut rng = Rng::new(5);
+        let (_, w, nq) = random_job_inputs(&mut rng, &j3);
+        let pw = pack_weights(&j3, &w).unwrap();
+        // every layout-determining field is checked: mode (taps), k_out
+        // and w_bits mismatches must all fail loudly, not index garbage
+        let j1 = RbeJob::conv1x1(2, 2, 8, 4, 1, 4, 4, 4).unwrap();
+        let x1 = vec![0i32; j1.h_in() * j1.w_in() * j1.k_in];
+        assert!(conv_bitserial_packed(&j1, &x1, &pw, &nq).is_err());
+        let jw = RbeJob::conv3x3(2, 2, 8, 4, 1, 6, 4, 4).unwrap();
+        let xw = vec![0i32; jw.h_in() * jw.w_in() * jw.k_in];
+        assert!(conv_bitserial_packed(&jw, &xw, &pw, &nq).is_err());
+        let jk = RbeJob::conv3x3(2, 2, 8, 2, 1, 4, 4, 4).unwrap();
+        let xk = vec![0i32; jk.h_in() * jk.w_in() * jk.k_in];
+        let nq2 = NormQuant::unit(2);
+        assert!(conv_bitserial_packed(&jk, &xk, &pw, &nq2).is_err());
+    }
+
+    #[test]
+    fn pack_rejects_out_of_range_weights() {
+        let job = RbeJob::conv1x1(1, 1, 4, 1, 1, 2, 2, 2).unwrap();
+        assert!(pack_weights(&job, &[2, 0, 0, 0]).is_err());
+        assert!(pack_weights(&job, &[0, 0, 0]).is_err()); // wrong length
+    }
+
+    /// Requant clamp edge cases across every output precision: extreme
+    /// positive/negative accumulators must pin to the exact unsigned /
+    /// signed bounds, and the shift must floor (arithmetic) on negatives.
+    #[test]
+    fn requant_clamp_bounds_all_obits() {
+        let nq = NormQuant { scale: vec![3], bias: vec![-7], shift: 2 };
+        let spec = |acc: i64| (3 * acc - 7) >> 2;
+        for o_bits in 2..=8usize {
+            let omax = (1i64 << o_bits) - 1;
+            let half = 1i64 << (o_bits - 1);
+            // saturating high: both clips hit their max
+            assert_eq!(nq.apply(0, i32::MAX as i64, o_bits) as i64, omax);
+            assert_eq!(
+                nq.apply_signed(0, i32::MAX as i64, o_bits) as i64,
+                half - 1
+            );
+            // saturating low: ReLU pins 0, signed pins -2^(O-1)
+            assert_eq!(nq.apply(0, i32::MIN as i64, o_bits), 0);
+            assert_eq!(
+                nq.apply_signed(0, i32::MIN as i64, o_bits) as i64,
+                -half
+            );
+            // in-range values pass through both untouched
+            for acc in [0i64, 1, half / 2, -1] {
+                let v = spec(acc);
+                if (0..=omax).contains(&v) {
+                    assert_eq!(nq.apply(0, acc, o_bits) as i64, v);
+                }
+                if (-half..half).contains(&v) {
+                    assert_eq!(nq.apply_signed(0, acc, o_bits) as i64, v);
+                }
+            }
+        }
+        // arithmetic shift floors: (1*(-3) + 0) >> 1 = -2, not -1
+        let unit = NormQuant { scale: vec![1], bias: vec![0], shift: 1 };
+        assert_eq!(unit.apply_signed(0, -3, 8), -2);
+        assert_eq!(unit.apply(0, -3, 8), 0); // ReLU clips it away
+    }
+
+    #[test]
+    fn add_and_avgpool_match_ref_semantics() {
+        // (15 + 15) >> 1 = 15 = omax at 4 bits
+        assert_eq!(add_requant(&[15, 0], &[15, 1], 1, 4).unwrap(), vec![15, 0]);
+        assert!(add_requant(&[1], &[1, 2], 0, 4).is_err());
+        // 4 pixels x 2 channels, sum = 4 per channel, >> 2 = 1
+        let x = vec![1i32; 8];
+        assert_eq!(avgpool(&x, 4, 2, 2).unwrap(), vec![1, 1]);
+        assert!(avgpool(&x, 3, 2, 2).is_err());
     }
 }

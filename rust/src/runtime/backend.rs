@@ -2,6 +2,7 @@
 
 use anyhow::Result;
 
+use super::plan::NativeNumerics;
 use super::tensor::TensorArg;
 
 /// Which engine a backend (or runtime) executes on.
@@ -57,4 +58,11 @@ pub trait ExecBackend: Send + Sync {
 
     /// Compile the named artifact into an executable layer.
     fn compile(&self, name: &str) -> Result<Box<dyn LayerExec>>;
+
+    /// Numerics policy that precompiled layer plans (`super::plan`)
+    /// should follow for this backend. The native backend forwards its
+    /// configured policy; others keep the default.
+    fn plan_numerics(&self) -> NativeNumerics {
+        NativeNumerics::Auto
+    }
 }

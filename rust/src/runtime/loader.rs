@@ -10,21 +10,26 @@ use anyhow::Result;
 
 use super::backend::{BackendKind, ExecBackend};
 use super::executable::Executable;
+use super::plan::NetworkPlan;
 
 /// An execution backend plus a cache of compiled executables keyed by
-/// artifact name.
+/// artifact name, and a cache of precompiled [`NetworkPlan`]s keyed by
+/// deployment (network + weight seed).
 ///
-/// Compilation is performed once per artifact; subsequent lookups are
-/// O(1) and share the compiled executable via `Arc`. The runtime is
-/// `Send + Sync` (backend is `Sync`, cache is behind a `Mutex`), so the
-/// coordinator can share one instance across worker threads — see
-/// `Coordinator::infer_batch`.
+/// Compilation is performed once per artifact (and plan compilation
+/// once per deployment); subsequent lookups are O(1) and share the
+/// compiled object via `Arc`. The runtime is `Send + Sync` (backend is
+/// `Sync`, caches are behind `Mutex`es), so the coordinator can share
+/// one instance across worker threads — see `Coordinator::infer_batch`.
 pub struct Runtime {
     backend: Arc<dyn ExecBackend>,
     artifacts_dir: PathBuf,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    plans: Mutex<HashMap<String, Arc<NetworkPlan>>>,
+    plan_hits: AtomicU64,
+    plan_builds: AtomicU64,
 }
 
 impl Runtime {
@@ -37,6 +42,9 @@ impl Runtime {
             cache: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            plans: Mutex::new(HashMap::new()),
+            plan_hits: AtomicU64::new(0),
+            plan_builds: AtomicU64::new(0),
         }
     }
 
@@ -171,6 +179,58 @@ impl Runtime {
     /// Names of all artifacts the backend can execute.
     pub fn list_artifacts(&self) -> Vec<String> {
         self.backend.list_artifacts()
+    }
+
+    /// Fetch (or compile, once) the precompiled layer-plan pipeline for
+    /// the deployed network identified by `key` (network name + config +
+    /// weight seed, chosen by the caller). This is the load-time half of
+    /// the plan-driven serving path: after the first call for a key,
+    /// every subsequent `execute`/batch over the same deployment streams
+    /// through the shared immutable plan. Two threads racing an uncached
+    /// key may both run `build`; the first insert wins, the duplicate is
+    /// discarded and counted as a hit, so `plan_builds` always equals
+    /// the number of distinct plans that entered the cache.
+    pub fn network_plan(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> Result<NetworkPlan>,
+    ) -> Result<Arc<NetworkPlan>> {
+        if let Some(p) = self.plans.lock().unwrap().get(key) {
+            self.plan_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(p.clone());
+        }
+        // Build outside the lock: plan compilation packs every weight
+        // tensor of the network and must not serialize unrelated worker
+        // threads.
+        let built = Arc::new(build()?);
+        match self.plans.lock().unwrap().entry(key.to_string()) {
+            std::collections::hash_map::Entry::Occupied(o) => {
+                // lost the race: serve the winner's plan, count a hit
+                self.plan_hits.fetch_add(1, Ordering::Relaxed);
+                Ok(o.get().clone())
+            }
+            std::collections::hash_map::Entry::Vacant(v) => {
+                self.plan_builds.fetch_add(1, Ordering::Relaxed);
+                Ok(v.insert(built).clone())
+            }
+        }
+    }
+
+    /// Number of plan-cache hits served so far (including builds
+    /// discarded after losing an insert race).
+    pub fn plan_hits(&self) -> u64 {
+        self.plan_hits.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct network plans compiled into the cache so far
+    /// (equals [`Self::cached_plans`] while nothing is evicted).
+    pub fn plan_builds(&self) -> u64 {
+        self.plan_builds.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct network plans currently cached.
+    pub fn cached_plans(&self) -> usize {
+        self.plans.lock().unwrap().len()
     }
 
     /// Number of cache hits served so far (telemetry for tests/benches).

@@ -15,8 +15,11 @@
 //!   artifacts through the `xla` PJRT bindings. The workspace vendors a
 //!   compile-time stub of `xla`; patch in the real crate to execute.
 //!
-//! [`Runtime`] owns a backend plus the per-artifact compile cache
-//! (compile once, `Arc`-share thereafter) and is `Send + Sync`, so the
+//! [`Runtime`] owns a backend plus two caches: the per-artifact compile
+//! cache (compile once, `Arc`-share thereafter) and the per-network
+//! [`NetworkPlan`] cache — precompiled layer plans ([`plan`]) that hoist
+//! weight packing, job-geometry resolution and requant staging out of
+//! the per-inference hot path. Both are `Send + Sync`, so the
 //! coordinator can fan inference batches out across threads over one
 //! shared instance.
 //!
@@ -28,6 +31,7 @@ mod executable;
 mod loader;
 #[cfg(feature = "native")]
 mod native;
+mod plan;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 mod tensor;
@@ -36,7 +40,11 @@ pub use backend::{BackendKind, ExecBackend, LayerExec};
 pub use executable::Executable;
 pub use loader::Runtime;
 #[cfg(feature = "native")]
-pub use native::{NativeBackend, NativeNumerics};
+pub use native::NativeBackend;
+pub use plan::{
+    ConvPlan, LayerPlan, NativeNumerics, NetworkPlan, PlanStep,
+    AUTO_BITSERIAL_MACS,
+};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use tensor::TensorArg;

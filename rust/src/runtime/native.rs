@@ -20,30 +20,15 @@ use std::collections::HashMap;
 use anyhow::{bail, ensure, Result};
 
 use crate::dnn::{LayerOp, Manifest, ManifestEntry};
-use crate::rbe::functional::{conv_bitserial, conv_reference, trim_input, NormQuant};
+use crate::rbe::functional::{
+    add_requant, avgpool, conv_bitserial, conv_reference, trim_input,
+    NormQuant,
+};
 use crate::rbe::RbeJob;
 
 use super::backend::{BackendKind, ExecBackend, LayerExec};
+use super::plan::NativeNumerics;
 use super::tensor::TensorArg;
-
-/// Which functional implementation conv/linear layers run on. All three
-/// choices produce bit-identical outputs (`rbe::functional` property
-/// tests); they differ only in speed and in how literally they model the
-/// hardware datapath.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum NativeNumerics {
-    /// Bit-serial Eq. 1 datapath for small jobs, integer oracle for large
-    /// ones (default: exactness is identical, this only bounds runtime).
-    Auto,
-    /// Always the bit-serial datapath model (`conv_bitserial`).
-    BitSerial,
-    /// Always the plain integer oracle (`conv_reference`).
-    Reference,
-}
-
-/// Jobs at or below this MAC count run bit-serial under
-/// [`NativeNumerics::Auto`].
-const AUTO_BITSERIAL_MACS: u64 = 1 << 16;
 
 /// The native execution engine: an artifact-name → layer-signature zoo.
 pub struct NativeBackend {
@@ -108,6 +93,10 @@ impl ExecBackend for NativeBackend {
         };
         Ok(Box::new(NativeExec { e: e.clone(), numerics: self.numerics }))
     }
+
+    fn plan_numerics(&self) -> NativeNumerics {
+        self.numerics
+    }
 }
 
 /// One "compiled" layer: for the native backend, compilation is just
@@ -135,12 +124,7 @@ fn expect_dims(arg: &TensorArg, want: &[usize], what: &str, name: &str) -> Resul
 
 impl NativeExec {
     fn run_conv(&self, job: &RbeJob, x: &[i32], w: &[i32], nq: &NormQuant) -> Result<Vec<i32>> {
-        let bit_serial = match self.numerics {
-            NativeNumerics::BitSerial => true,
-            NativeNumerics::Reference => false,
-            NativeNumerics::Auto => job.macs() <= AUTO_BITSERIAL_MACS,
-        };
-        if bit_serial {
+        if self.numerics.bit_serial_for(job) {
             conv_bitserial(job, x, w, nq)
         } else {
             conv_reference(job, x, w, nq)
@@ -153,12 +137,9 @@ impl NativeExec {
         let e = &self.e;
         ensure!(args.len() == 4, "{}: conv takes 4 args, got {}", e.name, args.len());
         // conv3x3 artifacts take the zero-padded plane (pad = 1/side).
-        let (full, taps) = match e.op {
-            LayerOp::Conv3x3 => (e.h + 2, 3usize),
-            _ => (e.h, 1usize),
-        };
+        let full = e.full_side();
         expect_dims(&args[0], &[full, full, e.cin], "activation", &e.name)?;
-        let w_dims: Vec<usize> = if taps == 3 {
+        let w_dims: Vec<usize> = if e.op == LayerOp::Conv3x3 {
             vec![e.cout, e.cin, 3, 3]
         } else {
             vec![e.cout, e.cin]
@@ -169,15 +150,7 @@ impl NativeExec {
 
         // Output extent matches the artifact exactly: valid conv over the
         // padded plane (3x3), strided gather of the full plane (1x1).
-        let h_out = (full - taps) / e.stride + 1;
-        let job = match e.op {
-            LayerOp::Conv3x3 => RbeJob::conv3x3(
-                h_out, h_out, e.cin, e.cout, e.stride, e.w_bits, e.i_bits, e.o_bits,
-            )?,
-            _ => RbeJob::conv1x1(
-                h_out, h_out, e.cin, e.cout, e.stride, e.w_bits, e.i_bits, e.o_bits,
-            )?,
-        };
+        let job = e.rbe_job()?;
         // The datapath model wants exactly the strided extent.
         let x = trim_input(&args[0].data, full, job.h_in(), e.cin);
         let nq = NormQuant {
@@ -197,7 +170,7 @@ impl NativeExec {
         expect_dims(&args[1], &[e.cout, e.cin], "weights", &e.name)?;
         expect_dims(&args[2], &[e.cout], "scale", &e.name)?;
         expect_dims(&args[3], &[e.cout], "bias", &e.name)?;
-        let job = RbeJob::conv1x1(1, 1, e.cin, e.cout, 1, e.w_bits, e.i_bits, e.o_bits)?;
+        let job = e.rbe_job()?;
         let nq = NormQuant {
             scale: args[2].data.clone(),
             bias: args[3].data.clone(),
@@ -214,14 +187,7 @@ impl NativeExec {
         let dims = [e.h, e.h, e.cin];
         expect_dims(&args[0], &dims, "lhs", &e.name)?;
         expect_dims(&args[1], &dims, "rhs", &e.name)?;
-        let omax = (1i64 << e.o_bits) - 1;
-        let out = args[0]
-            .data
-            .iter()
-            .zip(&args[1].data)
-            .map(|(&a, &b)| (((a as i64 + b as i64) >> e.shift).clamp(0, omax)) as i32)
-            .collect();
-        Ok(out)
+        add_requant(&args[0].data, &args[1].data, e.shift, e.o_bits)
     }
 
     /// avgpool: args = [x (H, W, K)]; per-channel sum over the spatial
@@ -230,13 +196,7 @@ impl NativeExec {
         let e = &self.e;
         ensure!(args.len() == 1, "{}: avgpool takes 1 arg, got {}", e.name, args.len());
         expect_dims(&args[0], &[e.h, e.h, e.cin], "activation", &e.name)?;
-        let mut sums = vec![0i64; e.cin];
-        for px in args[0].data.chunks_exact(e.cin) {
-            for (s, &v) in sums.iter_mut().zip(px) {
-                *s += v as i64;
-            }
-        }
-        Ok(sums.iter().map(|&s| (s >> e.shift) as i32).collect())
+        avgpool(&args[0].data, e.h * e.h, e.cin, e.shift)
     }
 }
 

@@ -1,0 +1,326 @@
+//! Precompiled layer plans: the "compile once, stream activations"
+//! stage of the native execution path.
+//!
+//! The per-call path ([`super::native`]) re-derives job geometry,
+//! re-validates weights and re-reads normquant parameters on every
+//! `execute_i32`, so serving throughput is bounded by setup rather than
+//! compute. A [`LayerPlan`] hoists all of that to network-load time:
+//! weights are validated once and pre-packed into the §II-B3 bit-plane
+//! words ([`PackedWeights`]), the [`RbeJob`] geometry and requant
+//! constants are resolved, and per-call work collapses to activation
+//! checking + streaming through the `*_planned` entry points of
+//! [`crate::rbe::functional`]. Plans are immutable, so a batch worker
+//! pool shares one `Arc<NetworkPlan>` read-only across threads — see
+//! `Coordinator::infer_batch`.
+//!
+//! Bitwise identity with the per-call path is by construction: every
+//! kernel choice evaluates the same Eq. 1–2 integer arithmetic
+//! (property-tested equivalent in `rbe::functional`), only the operand
+//! staging differs.
+
+use anyhow::{bail, Result};
+
+use crate::dnn::{Layer, LayerOp, ManifestEntry};
+use crate::rbe::functional::{
+    check_weights, conv_bitserial_packed, conv_reference_planned,
+    pack_weights, trim_input, NormQuant, PackedWeights,
+};
+use crate::rbe::RbeJob;
+
+/// Jobs at or below this MAC count run bit-serial under
+/// [`NativeNumerics::Auto`] on the per-call path, and packed bit-serial
+/// on the plan path.
+pub const AUTO_BITSERIAL_MACS: u64 = 1 << 16;
+
+/// Which functional implementation conv/linear layers run on. All
+/// choices produce bit-identical outputs (`rbe::functional` property
+/// tests); they differ only in speed and in how literally they model the
+/// hardware datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NativeNumerics {
+    /// Bit-serial Eq. 1 datapath for small jobs, integer oracle for large
+    /// ones (default: exactness is identical, this only bounds runtime).
+    Auto,
+    /// Always the bit-serial datapath model.
+    BitSerial,
+    /// Always the plain integer oracle.
+    Reference,
+}
+
+impl NativeNumerics {
+    /// Per-call datapath choice for the interpreted native path.
+    pub fn bit_serial_for(&self, job: &RbeJob) -> bool {
+        match self {
+            NativeNumerics::BitSerial => true,
+            NativeNumerics::Reference => false,
+            NativeNumerics::Auto => job.macs() <= AUTO_BITSERIAL_MACS,
+        }
+    }
+
+    /// Plan-compile kernel choice: the packed bit-serial datapath when
+    /// it is the literal hardware model (small jobs / `BitSerial`) or
+    /// when its inner loop is cheaper than the oracle's — per tap the
+    /// packed path does `w_bits · i_bits · ceil(k_in/32)` AND+popcount
+    /// word ops against the oracle's `k_in` multiplies.
+    pub fn packed_for(&self, job: &RbeJob) -> bool {
+        match self {
+            NativeNumerics::BitSerial => true,
+            NativeNumerics::Reference => false,
+            NativeNumerics::Auto => {
+                job.macs() <= AUTO_BITSERIAL_MACS
+                    || job.w_bits * job.i_bits * job.k_in.div_ceil(32)
+                        < job.k_in
+            }
+        }
+    }
+}
+
+/// How a planned conv/linear layer streams activations.
+enum PlanKernel {
+    /// Bit-plane-packed Eq. 1 datapath (popcount over 32-channel words).
+    Packed(PackedWeights),
+    /// Plain integer oracle over the raw (validated-once) weights.
+    Reference(Vec<i32>),
+}
+
+/// One conv3x3 / conv1x1 / linear layer, compiled: resolved geometry,
+/// bound weights, requant constants. Immutable after compilation.
+pub struct ConvPlan {
+    /// Resolved RBE job geometry (output extent, stride, precisions).
+    pub job: RbeJob,
+    /// Side of the activation plane the layer receives (padded for 3×3,
+    /// 1 for linear).
+    pub full: usize,
+    nq: NormQuant,
+    kernel: PlanKernel,
+}
+
+impl ConvPlan {
+    /// Stream one activation plane through the plan. Per-call work is
+    /// exactly: length check, strided trim, kernel evaluation.
+    pub fn run(&self, x: &[i32]) -> Result<Vec<i32>> {
+        let want = self.full * self.full * self.job.k_in;
+        if x.len() != want {
+            bail!(
+                "planned layer expects a ({f}, {f}, {k}) activation plane \
+                 ({want} values), got {}",
+                x.len(),
+                f = self.full,
+                k = self.job.k_in,
+            );
+        }
+        let x = trim_input(x, self.full, self.job.h_in(), self.job.k_in);
+        match &self.kernel {
+            PlanKernel::Packed(pw) => {
+                conv_bitserial_packed(&self.job, &x, pw, &self.nq)
+            }
+            PlanKernel::Reference(w) => {
+                conv_reference_planned(&self.job, &x, w, &self.nq)
+            }
+        }
+    }
+
+    /// True when this plan streams through the packed bit-serial path.
+    pub fn is_packed(&self) -> bool {
+        matches!(self.kernel, PlanKernel::Packed(_))
+    }
+}
+
+/// One layer of a deployed network, compiled into an immutable execution
+/// plan.
+pub enum LayerPlan {
+    /// conv3x3 / conv1x1 / linear — weights bound and pre-staged.
+    Conv(ConvPlan),
+    /// Residual add + requant (stateless; shape + constants resolved).
+    Add { h: usize, k: usize, shift: u32, o_bits: usize },
+    /// Global average pool.
+    AvgPool { h: usize, k: usize, shift: u32 },
+}
+
+impl LayerPlan {
+    /// Compile one manifest entry into a plan. Conv/linear entries bind
+    /// (and validate, once) the layer's weights and normquant
+    /// parameters; elementwise entries ignore them.
+    pub fn compile(
+        e: &ManifestEntry,
+        w: &[i32],
+        scale: &[i32],
+        bias: &[i32],
+        numerics: NativeNumerics,
+    ) -> Result<Self> {
+        match e.op {
+            LayerOp::Conv3x3 | LayerOp::Conv1x1 | LayerOp::Linear => {
+                let job = e.rbe_job()?;
+                if scale.len() != e.cout || bias.len() != e.cout {
+                    bail!(
+                        "{}: normquant params must be per-output-channel \
+                         ({} scales / {} biases vs cout = {})",
+                        e.name,
+                        scale.len(),
+                        bias.len(),
+                        e.cout
+                    );
+                }
+                let nq = NormQuant {
+                    scale: scale.to_vec(),
+                    bias: bias.to_vec(),
+                    shift: e.shift,
+                };
+                let kernel = if numerics.packed_for(&job) {
+                    PlanKernel::Packed(pack_weights(&job, w)?)
+                } else {
+                    check_weights(&job, w)?;
+                    PlanKernel::Reference(w.to_vec())
+                };
+                Ok(LayerPlan::Conv(ConvPlan {
+                    job,
+                    full: e.full_side(),
+                    nq,
+                    kernel,
+                }))
+            }
+            LayerOp::Add => Ok(LayerPlan::Add {
+                h: e.h,
+                k: e.cin,
+                shift: e.shift,
+                o_bits: e.o_bits,
+            }),
+            LayerOp::AvgPool => Ok(LayerPlan::AvgPool {
+                h: e.h,
+                k: e.cin,
+                shift: e.shift,
+            }),
+        }
+    }
+}
+
+/// One step of a compiled network: the schedulable layer plus its plan
+/// and the wall-clock cost of compiling it (the "setup" half of the
+/// setup-vs-compute bench split).
+pub struct PlanStep {
+    pub layer: Layer,
+    pub plan: LayerPlan,
+    pub setup_us: f64,
+}
+
+/// A whole deployed network, compiled layer by layer. Shared read-only
+/// (`Arc`) across batch worker threads.
+pub struct NetworkPlan {
+    steps: Vec<PlanStep>,
+}
+
+impl NetworkPlan {
+    pub fn new(steps: Vec<PlanStep>) -> Self {
+        Self { steps }
+    }
+
+    pub fn steps(&self) -> &[PlanStep] {
+        &self.steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::Manifest;
+    use crate::rbe::functional::{conv_bitserial, conv_reference};
+    use crate::util::Rng;
+
+    fn quickstart_entry() -> ManifestEntry {
+        Manifest::builtin()
+            .get("conv3x3_h16_ci32_co32_s1_w4i4o4")
+            .unwrap()
+            .clone()
+    }
+
+    fn random_conv_inputs(
+        e: &ManifestEntry,
+        seed: u64,
+    ) -> (Vec<i32>, Vec<i32>, Vec<i32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let full = e.full_side();
+        let half = 1 << (e.w_bits - 1);
+        let x = (0..full * full * e.cin)
+            .map(|_| rng.range_i32(0, 1 << e.i_bits))
+            .collect();
+        let w = (0..e.cout * e.cin * 9)
+            .map(|_| rng.range_i32(-half, half))
+            .collect();
+        let scale = (0..e.cout).map(|_| rng.range_i32(1, 16)).collect();
+        let bias = (0..e.cout).map(|_| rng.range_i32(-500, 500)).collect();
+        (x, w, scale, bias)
+    }
+
+    /// The plan path and both functional models agree on the quickstart
+    /// layer, for every numerics policy.
+    #[test]
+    fn plan_matches_functional_models() {
+        let e = quickstart_entry();
+        let (x, w, scale, bias) = random_conv_inputs(&e, 99);
+        let job = e.rbe_job().unwrap();
+        let nq = NormQuant {
+            scale: scale.clone(),
+            bias: bias.clone(),
+            shift: e.shift,
+        };
+        let xt = trim_input(&x, e.full_side(), job.h_in(), e.cin);
+        let want = conv_reference(&job, &xt, &w, &nq).unwrap();
+        assert_eq!(want, conv_bitserial(&job, &xt, &w, &nq).unwrap());
+        for numerics in [
+            NativeNumerics::Auto,
+            NativeNumerics::BitSerial,
+            NativeNumerics::Reference,
+        ] {
+            let plan =
+                LayerPlan::compile(&e, &w, &scale, &bias, numerics).unwrap();
+            let LayerPlan::Conv(c) = &plan else {
+                panic!("conv entry compiled to a non-conv plan")
+            };
+            // the policy resolves to the expected kernel staging
+            assert_eq!(
+                c.is_packed(),
+                numerics != NativeNumerics::Reference,
+                "{numerics:?}"
+            );
+            assert_eq!(c.run(&x).unwrap(), want, "{numerics:?}");
+        }
+    }
+
+    #[test]
+    fn plan_rejects_bad_activation_plane() {
+        let e = quickstart_entry();
+        let (_, w, scale, bias) = random_conv_inputs(&e, 3);
+        let plan =
+            LayerPlan::compile(&e, &w, &scale, &bias, NativeNumerics::Auto)
+                .unwrap();
+        let LayerPlan::Conv(c) = &plan else { panic!() };
+        let err = c.run(&[0i32; 7]).unwrap_err().to_string();
+        assert!(err.contains("activation plane"), "{err}");
+    }
+
+    #[test]
+    fn compile_validates_weights_once() {
+        let e = quickstart_entry();
+        let (_, mut w, scale, bias) = random_conv_inputs(&e, 4);
+        w[0] = 1 << 10; // far outside signed 4-bit range
+        for numerics in [NativeNumerics::BitSerial, NativeNumerics::Reference]
+        {
+            assert!(
+                LayerPlan::compile(&e, &w, &scale, &bias, numerics).is_err(),
+                "{numerics:?} accepted out-of-range weights"
+            );
+        }
+    }
+
+    #[test]
+    fn auto_prefers_packed_when_cheaper() {
+        // 2b x 4b over 64 channels: 8 word-ops/tap vs 64 multiplies
+        let cheap = RbeJob::conv3x3(30, 30, 64, 64, 1, 2, 4, 4).unwrap();
+        assert!(cheap.macs() > AUTO_BITSERIAL_MACS);
+        assert!(NativeNumerics::Auto.packed_for(&cheap));
+        // 8b x 8b over 16 channels: 64 word-ops/tap vs 16 multiplies
+        let dear = RbeJob::conv3x3(30, 30, 16, 16, 1, 8, 8, 8).unwrap();
+        assert!(dear.macs() > AUTO_BITSERIAL_MACS);
+        assert!(!NativeNumerics::Auto.packed_for(&dear));
+    }
+}

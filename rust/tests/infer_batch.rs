@@ -1,6 +1,8 @@
 //! Batch-serving determinism: `Coordinator::infer_batch` must produce
 //! bitwise-identical logits regardless of batch size or worker-thread
-//! count (acceptance criterion: batch=1 vs batch=8 on the same seed).
+//! count (acceptance criterion: batch=1 vs batch=8 on the same seed),
+//! and the precompiled-LayerPlan parallel path must be bitwise identical
+//! to sequential per-call execution across 1/4/16 worker threads.
 
 #![cfg(feature = "native")]
 
@@ -77,6 +79,7 @@ fn thread_count_does_not_change_results() {
 
 #[test]
 fn batch_shares_one_compile_cache() {
+    // the per-call (pre-plan) path exercises the artifact compile cache
     let coord = coordinator();
     let op = OperatingPoint::at_vdd(0.8);
     let mut rng = Rng::new(12);
@@ -84,7 +87,7 @@ fn batch_shares_one_compile_cache() {
         (0..4).map(|_| random_image(8, &mut rng)).collect();
     // warm the cache sequentially (no compile races), then fan out
     coord
-        .infer_batch(PrecisionConfig::Mixed, &op, &images[..1], 1, 1)
+        .infer_batch_opts(PrecisionConfig::Mixed, &op, &images[..1], 1, 1, false)
         .unwrap();
     // the mixed net has 13 distinct artifact names (repeated residual
     // blocks share executables — that's the point of the cache)
@@ -93,11 +96,77 @@ fn batch_shares_one_compile_cache() {
     assert_eq!(coord.runtime.cache_misses(), distinct);
 
     coord
-        .infer_batch(PrecisionConfig::Mixed, &op, &images, 1, 4)
+        .infer_batch_opts(PrecisionConfig::Mixed, &op, &images, 1, 4, false)
         .unwrap();
     // warm cache: the threaded batch must compile nothing new
     assert_eq!(coord.runtime.cache_misses(), distinct, "cache not shared");
     assert!(coord.runtime.cache_hits() > coord.runtime.cache_misses());
+}
+
+/// Acceptance criterion of the LayerPlan PR: the parallel plan-driven
+/// native path is bitwise identical to sequential per-call execution,
+/// across 1, 4 and 16 worker threads.
+#[test]
+fn parallel_plan_path_matches_sequential_per_call_path() {
+    let coord = coordinator();
+    let op = OperatingPoint::at_vdd(0.8);
+    let mut rng = Rng::new(13);
+    let images: Vec<Vec<i32>> =
+        (0..3).map(|_| random_image(8, &mut rng)).collect();
+    // pre-plan baseline: sequential, per-call backend execution
+    let base = coord
+        .infer_batch_opts(PrecisionConfig::Mixed, &op, &images, 5, 1, false)
+        .unwrap();
+    for threads in [1usize, 4, 16] {
+        let got = coord
+            .infer_batch(PrecisionConfig::Mixed, &op, &images, 5, threads)
+            .unwrap();
+        for (i, (a, b)) in base.iter().zip(&got).enumerate() {
+            assert_eq!(
+                a.logits, b.logits,
+                "image {i}: plan path with {threads} threads diverged \
+                 from sequential per-call execution"
+            );
+        }
+    }
+    // the plan path never touched the per-artifact compile cache beyond
+    // what the baseline compiled
+    assert_eq!(coord.runtime.plan_builds(), 1, "one deployment, one plan");
+}
+
+/// Plan caching: repeated execution of the same deployment reuses the
+/// compiled plan (no rebuild) and yields identical logits; a different
+/// weight seed is a different deployment and compiles a fresh plan.
+#[test]
+fn plan_cache_reused_across_repeated_executes() {
+    let coord = coordinator();
+    let op = OperatingPoint::at_vdd(0.8);
+    let mut rng = Rng::new(14);
+    let images: Vec<Vec<i32>> =
+        (0..2).map(|_| random_image(8, &mut rng)).collect();
+    let a = coord
+        .infer_batch(PrecisionConfig::Uniform8, &op, &images, 9, 2)
+        .unwrap();
+    assert_eq!(coord.runtime.plan_builds(), 1);
+    assert_eq!(coord.runtime.cached_plans(), 1);
+    let b = coord
+        .infer_batch(PrecisionConfig::Uniform8, &op, &images, 9, 2)
+        .unwrap();
+    assert_eq!(
+        coord.runtime.plan_builds(),
+        1,
+        "second execute of the same deployment rebuilt the plan"
+    );
+    assert!(coord.runtime.plan_hits() >= 1);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.logits, y.logits, "cached plan changed the logits");
+    }
+    // a new seed deploys new weights: fresh plan, (almost surely) new logits
+    let c = coord
+        .infer_batch(PrecisionConfig::Uniform8, &op, &images, 10, 2)
+        .unwrap();
+    assert_eq!(coord.runtime.plan_builds(), 2);
+    assert_ne!(a[0].logits, c[0].logits);
 }
 
 #[test]
