@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Append one bench-smoke result to the committed bench history.
+
+Each CI bench-smoke run on the main branch appends a single JSON line
+to ``ci/BENCH_history.jsonl`` — commit, mode, and the machine-independent
+throughput ratios (plus the raw img/s figures for context). The history
+turns ``check_bench.py``'s >20% gate into a *trajectory* check: with
+``--history``, the gate compares against the median of the recent
+entries instead of a single frozen point, so a slowly-eroding hot path
+cannot hide inside the per-commit tolerance.
+
+Usage:
+  bench_history.py append FRESH.json HISTORY.jsonl --commit SHA
+
+Idempotent per commit: re-running with a SHA recorded anywhere in the
+history is a no-op (CI retries and re-run workflows must not duplicate
+rows or reorder the trajectory).
+"""
+
+import json
+import sys
+
+# Keys copied from the fresh run's "throughput" object into the history
+# row. The speedup_* ratios are the gated, machine-independent signal;
+# the rest is context for reading the trajectory.
+RECORDED_KEYS = [
+    "speedup_planned",
+    "speedup_parallel",
+    "per_call_img_s",
+    "planned_img_s",
+    "parallel_img_s",
+    "threads",
+]
+
+
+def read_history(path):
+    rows = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    rows.append(json.loads(line))
+    except FileNotFoundError:
+        pass
+    return rows
+
+
+def append(fresh_path, history_path, commit):
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    thr = fresh.get("throughput", {})
+    if not thr:
+        print(f"error: {fresh_path} has no throughput object")
+        return 2
+
+    rows = read_history(history_path)
+    if any(r.get("commit") == commit for r in rows):
+        print(f"history already records {commit}; nothing to do")
+        return 0
+
+    row = {"commit": commit, "mode": fresh.get("mode", "unknown")}
+    for key in RECORDED_KEYS:
+        v = thr.get(key)
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            row[key] = round(float(v), 4)
+    with open(history_path, "a") as f:
+        f.write(json.dumps(row, sort_keys=True) + "\n")
+    print(f"recorded {commit} ({len(rows) + 1} entries)")
+    return 0
+
+
+def main(argv):
+    args = [a for a in argv[1:] if not a.startswith("--")]
+    commit = None
+    if "--commit" in argv:
+        i = argv.index("--commit")
+        commit = argv[i + 1] if i + 1 < len(argv) else None
+        if commit in args:
+            args.remove(commit)
+    if len(args) != 3 or args[0] != "append" or not commit:
+        print(__doc__)
+        return 2
+    return append(args[1], args[2], commit)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Gate bench-smoke on the committed throughput baseline.
+"""Gate bench-smoke on the committed throughput baseline / trajectory.
 
 Compares a freshly produced BENCH json (``cargo bench -- --smoke --json
 BENCH_ci.json``) against the committed baseline and fails when any
@@ -12,6 +12,15 @@ baseline's ``throughput`` object is compared as higher-is-better; keys
 present only in the fresh results (e.g. the raw img/s numbers) are
 reported for the log but not gated.
 
+With ``--history ci/BENCH_history.jsonl`` the gate becomes a
+*trajectory*: once the committed history (appended per main-branch
+commit by ``bench_history.py``) holds at least ``MIN_HISTORY`` entries
+for a key, the effective baseline is the **median of the last
+``HISTORY_WINDOW`` entries** — raised to at least the committed
+baseline, so the floor can rise as the hot path improves but never
+sinks below the frozen point. A slowly-eroding hot path therefore
+cannot hide inside the per-commit tolerance.
+
 ``speedup_parallel`` additionally depends on how many cores the runner
 actually has: a 2-vCPU runner cannot hit a 4-core baseline. Its
 effective baseline is therefore ``min(baseline, 0.75 * threads)`` using
@@ -19,10 +28,52 @@ the thread count recorded in the fresh results, so the gate demands
 75%-of-ideal pool scaling rather than a fixed machine-dependent number.
 
 Usage: check_bench.py FRESH.json BASELINE.json [--tolerance 0.20]
+                      [--history HISTORY.jsonl]
 """
 
 import json
 import sys
+
+# Trajectory parameters: how many history entries activate the median
+# gate, and how many recent entries the median looks at.
+MIN_HISTORY = 3
+HISTORY_WINDOW = 5
+
+# Only ratio keys are trajectory-gated; raw img/s is machine-dependent.
+TRAJECTORY_KEYS = {"speedup_planned", "speedup_parallel"}
+
+
+def median(values):
+    xs = sorted(values)
+    mid = len(xs) // 2
+    if len(xs) % 2:
+        return xs[mid]
+    return (xs[mid - 1] + xs[mid]) / 2.0
+
+
+def load_history(path):
+    rows = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    rows.append(json.loads(line))
+    except FileNotFoundError:
+        print(f"note: no history at {path}; falling back to the baseline")
+    return rows
+
+
+def trajectory_baseline(history, key, committed):
+    """Median of the recent history for `key`, floored at `committed`."""
+    values = [
+        r[key]
+        for r in history[-HISTORY_WINDOW:]
+        if isinstance(r.get(key), (int, float))
+    ]
+    if len(values) < MIN_HISTORY:
+        return committed, "baseline"
+    return max(median(values), committed), f"median of last {len(values)}"
 
 
 def main(argv):
@@ -35,6 +86,14 @@ def main(argv):
         except (IndexError, ValueError):
             print("error: --tolerance needs a numeric value")
             return 2
+        del rest[i : i + 2]
+    history = []
+    if "--history" in rest:
+        i = rest.index("--history")
+        if i + 1 >= len(rest):
+            print("error: --history needs a path")
+            return 2
+        history = load_history(rest[i + 1])
         del rest[i : i + 2]
     args = [a for a in rest if not a.startswith("--")]
     if len(args) != 2:
@@ -58,6 +117,9 @@ def main(argv):
         bval = bt[key]
         if not isinstance(bval, (int, float)) or isinstance(bval, bool):
             continue
+        source = "baseline"
+        if history and key in TRAJECTORY_KEYS:
+            bval, source = trajectory_baseline(history, key, bval)
         fval = ft.get(key)
         if not isinstance(fval, (int, float)):
             failures.append(f"{key}: missing from fresh results")
@@ -68,7 +130,7 @@ def main(argv):
         floor = (1.0 - tol) * bval
         ok = fval >= floor
         print(
-            f"  {key:<20} baseline {bval:8.3f}  fresh {fval:8.3f}  "
+            f"  {key:<20} {source:<17} {bval:8.3f}  fresh {fval:8.3f}  "
             f"floor {floor:8.3f}  {'OK' if ok else 'FAIL'}"
         )
         if not ok:

@@ -48,7 +48,7 @@ fn main() -> Result<()> {
 
     // 2) cross-check against the Rust bit-serial datapath model (Eq. 1-2)
     let job = RbeJob::conv3x3(h, h, cin, cout, 1, bits, bits, bits)?;
-    let nq = NormQuant { scale, bias, shift };
+    let nq = NormQuant::new(scale, bias, shift);
     let ours = conv_bitserial(&job, &x, &w, &nq)?;
     assert_eq!(ours, out[0], "bit-serial model vs backend result");
     println!("bit-exact against the Rust bit-serial RBE model ✓");

@@ -4,8 +4,9 @@
 //! default, AOT Pallas artifacts under `MARSELLUS_BACKEND=pjrt`), timing
 //! and energy from the calibrated SoC simulator — in both precision
 //! configurations and at several operating points, reproducing the
-//! paper's Figs. 17–18 rows for this workload. The batch fans out over
-//! worker threads via `Coordinator::infer_batch`.
+//! paper's Figs. 17–18 rows for this workload. The network is deployed
+//! once (`Coordinator::deploy`) and the batch fans out over worker
+//! threads via `Deployment::infer_batch`.
 //!
 //! ```sh
 //! cargo run --release --example resnet20_cifar10 [--batch N] [--threads T]
@@ -13,7 +14,7 @@
 
 use anyhow::Result;
 use marsellus::coordinator::{random_image, Coordinator};
-use marsellus::dnn::PrecisionConfig;
+use marsellus::dnn::{NetworkSpec, PrecisionConfig};
 use marsellus::power::{OperatingPoint, FBB_MAX_V};
 use marsellus::util::{Args, Rng};
 
@@ -40,12 +41,13 @@ fn main() -> Result<()> {
 
         // image 0 runs solo with in-flight cross-checking against the
         // Rust bit-serial datapath model ...
+        // fixed weight seed across the batch: one deployment
+        let deployment =
+            coord.deploy(&NetworkSpec::new("resnet20", config, 42))?;
         let image0 = random_image(8, &mut rng);
-        let res0 = coord.infer_resnet20(
-            config,
+        let res0 = deployment.infer_cross_checked(
             &OperatingPoint::at_vdd(0.8),
             &image0,
-            42, // fixed weights across the batch
             &["stage3.b2.conv1", "stage2.b0.down"],
         )?;
         println!(
@@ -58,11 +60,9 @@ fn main() -> Result<()> {
         // the runtime (image 0 again first: logits must be identical).
         let mut images = vec![image0];
         images.extend((1..batch).map(|_| random_image(8, &mut rng)));
-        let results = coord.infer_batch(
-            config,
+        let results = deployment.infer_batch(
             &OperatingPoint::at_vdd(0.8),
             &images,
-            42,
             threads,
         )?;
         assert_eq!(results[0].logits, res0.logits, "batch-of-1 vs batch-of-N");
@@ -76,13 +76,8 @@ fn main() -> Result<()> {
             images.len()
         );
         for (name, op) in &points {
-            let res = coord.infer_resnet20(
-                config,
-                op,
-                &random_image(8, &mut Rng::new(1)),
-                42,
-                &[],
-            )?;
+            let res =
+                deployment.infer(op, &random_image(8, &mut Rng::new(1)))?;
             println!(
                 "  {name:>13}: latency {:>8.0} µs  energy {:>7.1} µJ  \
                  {:>6.2} Top/s/W  {:>6.1} Gop/s",

@@ -133,47 +133,44 @@ impl Throughput {
 /// LayerPlan path over the intra-batch worker pool — asserting along the
 /// way that all three produce bitwise-identical logits.
 fn throughput_bench(smoke: bool) -> Throughput {
-    use marsellus::coordinator::{random_image, Coordinator};
-    use marsellus::dnn::PrecisionConfig;
+    use marsellus::coordinator::Coordinator;
+    use marsellus::dnn::{NetworkSpec, PrecisionConfig};
     use marsellus::power::OperatingPoint;
     use marsellus::util::Rng;
 
     let dir = marsellus::runtime::Runtime::resolve_artifacts_dir(None);
     let coord = Coordinator::new(dir).expect("coordinator");
-    let config = PrecisionConfig::Mixed;
+    let spec = NetworkSpec::new("resnet20", PrecisionConfig::Mixed, 42);
     let op = OperatingPoint::at_vdd(0.8);
     let n = if smoke { 8 } else { 24 };
     let threads = std::thread::available_parallelism()
         .map(|v| v.get())
         .unwrap_or(4);
+    // Deploy untimed: the one-time plan compilation is the *setup* half
+    // of the split (reported per layer below), and must not be charged
+    // to the per-image serving throughput the CI gate checks.
+    let deployment = coord.deploy(&spec).expect("deploy");
     let mut rng = Rng::new(0xBE7C);
     let images: Vec<Vec<i32>> =
-        (0..n).map(|_| random_image(8, &mut rng)).collect();
-    let seed = 42u64;
+        (0..n).map(|_| deployment.random_input(&mut rng)).collect();
 
     let run = |use_plans: bool, threads: usize| {
         let t0 = Instant::now();
-        let res = coord
-            .infer_batch_opts(config, &op, &images, seed, threads, use_plans)
+        let res = deployment
+            .infer_batch_opts(&op, &images, threads, use_plans)
             .expect("infer_batch");
         let img_s = n as f64 / t0.elapsed().as_secs_f64();
         let logits: Vec<Vec<i32>> =
             res.into_iter().map(|r| r.logits).collect();
         (img_s, logits)
     };
-    // Warm the plan cache untimed: one-time plan compilation is the
-    // *setup* half of the split (reported per layer below), and must not
-    // be charged to the per-image serving throughput the CI gate checks.
-    coord.network_plan(config, seed).expect("plan compile");
     let (per_call_img_s, base) = run(false, 1);
     let (planned_img_s, planned) = run(true, 1);
     let (parallel_img_s, parallel) = run(true, threads);
     assert_eq!(base, planned, "plan path changed logits");
     assert_eq!(base, parallel, "parallel path changed logits");
 
-    let layers = coord
-        .profile_resnet20(config, &images[0], seed)
-        .expect("profile");
+    let layers = deployment.profile(&images[0]).expect("profile");
     Throughput {
         images: n,
         threads,

@@ -1,0 +1,344 @@
+//! Deployment handles: the network-agnostic serving API.
+//!
+//! `Coordinator::deploy(&NetworkSpec)` resolves a deployment **once** —
+//! layers built from the `dnn` registry, manifest validated, and (on the
+//! native backend) the immutable [`NetworkPlan`] compiled into the
+//! runtime's bounded, LRU-evicting plan cache. The returned
+//! [`Deployment`] then serves [`Deployment::infer`],
+//! [`Deployment::infer_batch`] and [`Deployment::profile`] as pure
+//! activation streaming: no layer rebuilding, no weight re-derivation,
+//! no cache-key plumbing per call.
+//!
+//! The handle borrows the coordinator, so any number of deployments
+//! (tenants) can coexist over one shared runtime; the plan cache evicts
+//! least-recently-used deployments once its byte budget is exceeded and
+//! a re-deployed evictee rebuilds bit-identically from its spec.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Result};
+
+use crate::dnn::{Layer, NetworkSpec};
+use crate::mapping::NetworkReport;
+use crate::metrics::LayerSplit;
+use crate::power::OperatingPoint;
+use crate::runtime::{BackendKind, NetworkPlan};
+use crate::util::Rng;
+
+use super::infer::{Coordinator, InferenceResult};
+
+/// A deployed network: spec resolved, layers staged, plan compiled.
+///
+/// Cheap to hold, `Sync`, and read-only — batch workers share it across
+/// threads. Results are bitwise independent of batch size and worker
+/// count (`infer(op, &img)` equals the same image inside any batch at
+/// any thread count).
+pub struct Deployment<'c> {
+    coord: &'c Coordinator,
+    spec: NetworkSpec,
+    layers: Vec<Layer>,
+    /// Compiled plan (native backend); `None` on backends that execute
+    /// per-call artifacts.
+    plan: Option<Arc<NetworkPlan>>,
+    /// Seed-derived weights for the per-call path (non-native backends).
+    params: Option<
+        std::collections::HashMap<String, super::params::LayerParams>,
+    >,
+    /// Last scheduler report, memoized by operating point: the report is
+    /// a pure function of (layers, op), so re-serving the same DVFS
+    /// set-point costs one comparison instead of a scheduler walk.
+    report: Mutex<Option<(OperatingPoint, Arc<NetworkReport>)>>,
+}
+
+impl<'c> Deployment<'c> {
+    pub(super) fn new(
+        coord: &'c Coordinator,
+        spec: NetworkSpec,
+        layers: Vec<Layer>,
+        plan: Option<Arc<NetworkPlan>>,
+        params: Option<
+            std::collections::HashMap<String, super::params::LayerParams>,
+        >,
+    ) -> Self {
+        Self {
+            coord,
+            spec,
+            layers,
+            plan,
+            params,
+            report: Mutex::new(None),
+        }
+    }
+
+    /// The deployment identity this handle serves.
+    pub fn spec(&self) -> &NetworkSpec {
+        &self.spec
+    }
+
+    /// The resolved layer schedule.
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    /// (side, channels) of the unpadded input plane the network
+    /// consumes, taken from its first layer.
+    pub fn input_dims(&self) -> (usize, usize) {
+        let first = &self.layers[0];
+        (first.h, first.cin)
+    }
+
+    /// Input activation precision (bits) of the first layer.
+    pub fn input_bits(&self) -> usize {
+        self.layers[0].i_bits
+    }
+
+    /// A random input plane with the deployment's exact shape and
+    /// precision — what `random_image` was for ResNet-20, for any
+    /// registry network.
+    pub fn random_input(&self, rng: &mut Rng) -> Vec<i32> {
+        let (h, c) = self.input_dims();
+        let hi = 1 << self.input_bits();
+        (0..h * h * c).map(|_| rng.range_i32(0, hi)).collect()
+    }
+
+    /// Latency/energy report at an operating point (memoized per op).
+    pub fn report(&self, op: &OperatingPoint) -> Result<Arc<NetworkReport>> {
+        let mut memo = self.report.lock().unwrap();
+        if let Some((cached_op, rep)) = memo.as_ref() {
+            if cached_op == op {
+                return Ok(rep.clone());
+            }
+        }
+        let rep =
+            Arc::new(self.coord.scheduler.network_report(&self.layers, op)?);
+        *memo = Some((*op, rep.clone()));
+        Ok(rep)
+    }
+
+    /// Run one input through the deployment: activation streaming only.
+    pub fn infer(
+        &self,
+        op: &OperatingPoint,
+        image: &[i32],
+    ) -> Result<InferenceResult> {
+        let report = self.report(op)?;
+        let logits = self.run_one(image)?;
+        Ok(InferenceResult {
+            logits,
+            report: (*report).clone(),
+            cross_checked: 0,
+        })
+    }
+
+    /// [`Self::infer`] with in-flight cross-checking: the named layers
+    /// are re-computed with the Rust bit-serial datapath model and
+    /// compared bit-exactly (expensive; pick small layers). Forces the
+    /// per-call backend path — comparing the plan (which *is* the
+    /// functional model) against itself would be vacuous.
+    pub fn infer_cross_checked(
+        &self,
+        op: &OperatingPoint,
+        image: &[i32],
+        cross_check_layers: &[&str],
+    ) -> Result<InferenceResult> {
+        // A name that matches no cross-checkable conv layer must fail
+        // loudly: silently checking nothing would report success for a
+        // verification that never ran (e.g. a typo in `--check`).
+        for name in cross_check_layers {
+            ensure!(
+                self.layers.iter().any(|l| l.name == *name
+                    && matches!(
+                        l.op,
+                        crate::dnn::LayerOp::Conv3x3
+                            | crate::dnn::LayerOp::Conv1x1
+                    )),
+                "{}: cross-check layer {name:?} matches no conv layer \
+                 (cross-checkable: {})",
+                self.spec,
+                self.layers
+                    .iter()
+                    .filter(|l| matches!(
+                        l.op,
+                        crate::dnn::LayerOp::Conv3x3
+                            | crate::dnn::LayerOp::Conv1x1
+                    ))
+                    .map(|l| l.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+        }
+        let report = self.report(op)?;
+        let params = self.params_for_per_call();
+        let (logits, cross_checked) = self.coord.run_network(
+            &self.layers,
+            params.as_ref(),
+            image,
+            cross_check_layers,
+        )?;
+        Ok(InferenceResult {
+            logits,
+            report: (*report).clone(),
+            cross_checked,
+        })
+    }
+
+    /// Per-layer setup-vs-compute split on one input: plan-compile cost
+    /// (amortized over the deployment) vs activation-streaming cost
+    /// (paid per inference). Requires the plan path (native backend).
+    pub fn profile(&self, image: &[i32]) -> Result<Vec<LayerSplit>> {
+        let plan = self.plan.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "{}: profiling needs the plan path (native backend)",
+                self.spec
+            )
+        })?;
+        let mut split = Vec::with_capacity(plan.steps().len());
+        let _ = self.coord.run_network_planned(plan, image, Some(&mut split))?;
+        Ok(split)
+    }
+
+    /// Run a batch of inputs in parallel over an intra-batch worker pool
+    /// of `threads` scoped threads sharing this deployment (the backend,
+    /// its caches and the compiled plan are `Send + Sync` and shared
+    /// read-only).
+    ///
+    /// The batch is N requests against this one deployed model. Results
+    /// come back in input order and are bitwise independent of
+    /// `threads`: `infer_batch(op, &[img], 1)` and the same image inside
+    /// an 8-wide batch produce identical logits.
+    pub fn infer_batch(
+        &self,
+        op: &OperatingPoint,
+        images: &[Vec<i32>],
+        threads: usize,
+    ) -> Result<Vec<InferenceResult>> {
+        self.infer_batch_opts(op, images, threads, self.plan.is_some())
+    }
+
+    /// [`Self::infer_batch`] with an explicit execution-path choice.
+    /// `use_plans = false` forces the per-call (pre-plan) backend path —
+    /// the PJRT route, kept callable on native so benches and parity
+    /// tests can compare both paths on one deployment. `use_plans =
+    /// true` requires the native backend: plans execute the in-process
+    /// functional models, and silently bypassing a non-native backend
+    /// would misattribute its results.
+    pub fn infer_batch_opts(
+        &self,
+        op: &OperatingPoint,
+        images: &[Vec<i32>],
+        threads: usize,
+        use_plans: bool,
+    ) -> Result<Vec<InferenceResult>> {
+        ensure!(
+            !use_plans || self.coord.runtime.kind() == BackendKind::Native,
+            "plan-driven execution requires the native backend (current \
+             backend: {})",
+            self.coord.runtime.kind().as_str()
+        );
+        ensure!(
+            !use_plans || self.plan.is_some(),
+            "{}: deployment holds no compiled plan",
+            self.spec
+        );
+        let n = images.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let report = self.report(op)?;
+        // Per-network state was prepared ONCE at deploy time; the only
+        // per-batch choice is which staged operands to stream through.
+        let params = if use_plans {
+            None
+        } else {
+            Some(self.params_for_per_call())
+        };
+        let plan = if use_plans { self.plan.as_deref() } else { None };
+        let run_one = |img: &[i32]| -> Result<Vec<i32>> {
+            match (plan, &params) {
+                (Some(p), _) => self.coord.run_network_planned(p, img, None),
+                (None, Some(pr)) => self
+                    .coord
+                    .run_network(&self.layers, pr.as_ref(), img, &[])
+                    .map(|(l, _)| l),
+                (None, None) => unreachable!(),
+            }
+        };
+
+        let threads = threads.clamp(1, n);
+        let logits: Vec<Option<Result<Vec<i32>>>> = if threads == 1 {
+            images.iter().map(|img| Some(run_one(img.as_slice()))).collect()
+        } else {
+            // Worker pool: threads pull the next image index from an
+            // atomic queue, so stragglers don't idle the rest of the
+            // pool. Output order (and every bit of every result) is
+            // independent of the interleaving.
+            let slots: Vec<Mutex<Option<Result<Vec<i32>>>>> =
+                (0..n).map(|_| Mutex::new(None)).collect();
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                for _ in 0..threads {
+                    let (slots, next, run_one) = (&slots, &next, &run_one);
+                    s.spawn(move || loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        *slots[i].lock().unwrap() =
+                            Some(run_one(images[i].as_slice()));
+                    });
+                }
+            });
+            slots.into_iter().map(|slot| slot.into_inner().unwrap()).collect()
+        };
+        logits
+            .into_iter()
+            .enumerate()
+            .map(|(i, slot)| {
+                let l = slot
+                    .unwrap_or_else(|| panic!("batch slot {i} never filled"))?;
+                Ok(InferenceResult {
+                    logits: l,
+                    report: (*report).clone(),
+                    cross_checked: 0,
+                })
+            })
+            .collect()
+    }
+
+    /// One input through whichever staged path this deployment holds
+    /// (deploy guarantees exactly one of plan/params is populated).
+    fn run_one(&self, image: &[i32]) -> Result<Vec<i32>> {
+        match &self.plan {
+            Some(plan) => self.coord.run_network_planned(plan, image, None),
+            None => self
+                .coord
+                .run_network(
+                    &self.layers,
+                    self.params_for_per_call().as_ref(),
+                    image,
+                    &[],
+                )
+                .map(|(l, _)| l),
+        }
+    }
+
+    /// Seed-derived weights for the per-call path: the staged map when
+    /// this deployment was built without a plan, re-derived (cheap,
+    /// deterministic) when the per-call path is explicitly requested on
+    /// a plan deployment.
+    fn params_for_per_call(
+        &self,
+    ) -> std::borrow::Cow<
+        '_,
+        std::collections::HashMap<String, super::params::LayerParams>,
+    > {
+        match &self.params {
+            Some(p) => std::borrow::Cow::Borrowed(p),
+            None => std::borrow::Cow::Owned(Coordinator::network_params(
+                &self.layers,
+                self.spec.seed,
+            )),
+        }
+    }
+}

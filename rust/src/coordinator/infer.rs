@@ -1,32 +1,31 @@
 //! End-to-end quantized inference through the execution backend.
 //!
-//! The coordinator walks the layer schedule in execution order, feeding
+//! The coordinator walks a layer schedule in execution order, feeding
 //! each layer's executable (functional result, bit-exact vs. the Pallas
 //! kernels regardless of backend) while the DORY scheduler produces the
 //! per-layer latency/energy from the cycle models — the functional/timing
 //! split of DESIGN.md. Residual bookkeeping (block inputs, downsample
-//! shortcuts) mirrors `model.resnet20_forward`.
+//! shortcuts) mirrors `model.resnet20_forward` and generalizes to every
+//! registry network built from the same block grammar.
 //!
-//! Plan-driven serving: when the backend is native, the coordinator
-//! compiles each deployed network `(config, seed)` once into an
-//! immutable [`NetworkPlan`] (pre-packed weights, resolved RBE job
-//! geometry, staged requant constants — see `runtime::plan`) and then
-//! only streams activations per inference. [`Coordinator::infer_batch`]
-//! fans a batch of images out over an intra-batch worker pool (scoped
-//! threads pulling image indices from an atomic queue, plans shared
-//! read-only via `Arc`), bitwise identical to sequential execution.
-//! The per-call path (`run_network`) is kept for the PJRT backend and
-//! for the in-flight bit-serial cross-checks.
+//! Serving goes through deployment handles ([`super::deploy`]):
+//! `Coordinator::deploy(spec)` resolves a `dnn::NetworkSpec` once —
+//! layers built, manifest validated, [`NetworkPlan`] compiled into the
+//! runtime's bounded plan cache — and the returned `Deployment` streams
+//! activations per inference with no per-call network plumbing. The
+//! `*_resnet20` methods on this type are thin deprecated wrappers kept
+//! for source compatibility.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::dnn::{resnet20_layers, Layer, LayerOp, Manifest, PrecisionConfig};
-use crate::mapping::{NetworkReport, Scheduler};
+use crate::dnn::{
+    Layer, LayerOp, Manifest, NetworkSpec, PrecisionConfig,
+};
+use crate::mapping::Scheduler;
 use crate::metrics::LayerSplit;
 use crate::power::OperatingPoint;
 use crate::rbe::functional::{
@@ -38,13 +37,14 @@ use crate::runtime::{
 };
 use crate::util::Rng;
 
+use super::deploy::Deployment;
 use super::params::{random_layer_params, LayerParams};
 
 /// Result of one inference.
 #[derive(Debug, Clone)]
 pub struct InferenceResult {
     pub logits: Vec<i32>,
-    pub report: NetworkReport,
+    pub report: crate::mapping::NetworkReport,
     /// Layers whose backend output was cross-checked against the Rust
     /// bit-serial RBE model.
     pub cross_checked: usize,
@@ -74,7 +74,7 @@ impl Coordinator {
     }
 
     /// Zero-pad (H, W, C) by one pixel on each spatial side.
-    fn pad1(x: &[i32], h: usize, w: usize, c: usize) -> Vec<i32> {
+    pub(super) fn pad1(x: &[i32], h: usize, w: usize, c: usize) -> Vec<i32> {
         let (hp, wp) = (h + 2, w + 2);
         let mut out = vec![0i32; hp * wp * c];
         for y in 0..h {
@@ -97,7 +97,10 @@ impl Coordinator {
     /// Deterministic per-layer parameters for the deployed network: the
     /// weights are a function of `seed` alone, shared by every image of
     /// a batch.
-    fn network_params(layers: &[Layer], seed: u64) -> HashMap<String, LayerParams> {
+    pub(super) fn network_params(
+        layers: &[Layer],
+        seed: u64,
+    ) -> HashMap<String, LayerParams> {
         let mut rng = Rng::new(seed);
         layers
             .iter()
@@ -106,14 +109,52 @@ impl Coordinator {
             .collect()
     }
 
+    /// Resolve a [`NetworkSpec`] **once** into a served [`Deployment`]
+    /// handle: layers built from the `dnn` registry, manifest validated,
+    /// and — on the native backend — the [`NetworkPlan`] compiled into
+    /// (or fetched from) the runtime's bounded plan cache. After
+    /// `deploy`, `Deployment::{infer, infer_batch, profile}` are pure
+    /// activation streaming with no per-call network plumbing.
+    pub fn deploy(&self, spec: &NetworkSpec) -> Result<Deployment<'_>> {
+        let layers = spec.layers()?;
+        self.manifest
+            .validate_layers(&layers)
+            .with_context(|| format!("deploying {spec}"))?;
+        let (plan, params) = if self.runtime.kind() == BackendKind::Native {
+            (Some(self.plan_for_layers(spec, &layers)?), None)
+        } else {
+            (None, Some(Self::network_params(&layers, spec.seed)))
+        };
+        Ok(Deployment::new(self, spec.clone(), layers, plan, params))
+    }
+
+    /// Fetch (or compile, once) the layer-plan pipeline for a deployment
+    /// from the runtime's bounded plan cache. Prefer [`Self::deploy`];
+    /// this is the load-time half on its own.
+    pub fn plan_for(&self, spec: &NetworkSpec) -> Result<Arc<NetworkPlan>> {
+        let layers = spec.layers()?;
+        self.manifest
+            .validate_layers(&layers)
+            .with_context(|| format!("deploying {spec}"))?;
+        self.plan_for_layers(spec, &layers)
+    }
+
+    fn plan_for_layers(
+        &self,
+        spec: &NetworkSpec,
+        layers: &[Layer],
+    ) -> Result<Arc<NetworkPlan>> {
+        self.runtime
+            .network_plan(spec, || self.build_plan(layers, spec.seed))
+    }
+
     /// Run ResNet-20 end to end. `cross_check_layers` names layers whose
     /// backend output is re-computed with the Rust bit-serial model and
     /// compared bit-exactly (expensive; pick small layers).
-    ///
-    /// On the native backend (and with no cross-checks requested) this
-    /// streams through the precompiled [`NetworkPlan`]; cross-checking
-    /// forces the per-call backend path, since comparing the plan (which
-    /// *is* the functional model) against itself would be vacuous.
+    #[deprecated(
+        note = "use Coordinator::deploy(&NetworkSpec) and \
+                Deployment::{infer, infer_cross_checked}"
+    )]
     pub fn infer_resnet20(
         &self,
         config: PrecisionConfig,
@@ -122,43 +163,29 @@ impl Coordinator {
         seed: u64,
         cross_check_layers: &[&str],
     ) -> Result<InferenceResult> {
-        let layers = resnet20_layers(config);
-        self.manifest.validate_network(config)?;
-        let report = self.scheduler.network_report(&layers, op)?;
-        let use_plans = cross_check_layers.is_empty()
-            && self.runtime.kind() == BackendKind::Native;
-        let (logits, cross_checked) = if use_plans {
-            let plan = self.network_plan(config, seed)?;
-            (self.run_network_planned(&plan, image, None)?, 0)
+        let d = self.deploy(&NetworkSpec::new("resnet20", config, seed))?;
+        if cross_check_layers.is_empty() {
+            d.infer(op, image)
         } else {
-            let params = Self::network_params(&layers, seed);
-            self.run_network(&layers, &params, image, cross_check_layers)?
-        };
-        Ok(InferenceResult { logits, report, cross_checked })
+            d.infer_cross_checked(op, image, cross_check_layers)
+        }
     }
 
     /// Fetch (or compile, once) the layer-plan pipeline for the deployed
-    /// network `(config, seed)` from the runtime's plan cache.
+    /// ResNet-20 `(config, seed)` from the runtime's plan cache.
+    #[deprecated(note = "use Coordinator::plan_for(&NetworkSpec) or deploy")]
     pub fn network_plan(
         &self,
         config: PrecisionConfig,
         seed: u64,
     ) -> Result<Arc<NetworkPlan>> {
-        let key = format!("resnet20-{}-{seed}", config.as_str());
-        self.runtime
-            .network_plan(&key, || self.build_plan(config, seed))
+        self.plan_for(&NetworkSpec::new("resnet20", config, seed))
     }
 
     /// Compile every layer of the network once: weights packed into RBE
     /// bit-plane words, job geometry resolved, requant constants staged.
-    fn build_plan(
-        &self,
-        config: PrecisionConfig,
-        seed: u64,
-    ) -> Result<NetworkPlan> {
-        let layers = resnet20_layers(config);
-        self.manifest.validate_network(config)?;
-        let params = Self::network_params(&layers, seed);
+    fn build_plan(&self, layers: &[Layer], seed: u64) -> Result<NetworkPlan> {
+        let params = Self::network_params(layers, seed);
         let numerics = self.runtime.backend().plan_numerics();
         let empty = LayerParams {
             w: Vec::new(),
@@ -166,7 +193,7 @@ impl Coordinator {
             bias: Vec::new(),
         };
         let mut steps = Vec::with_capacity(layers.len());
-        for l in &layers {
+        for l in layers {
             let name = l.artifact();
             let e = self.manifest.get(&name).with_context(|| {
                 format!("layer {} has no artifact {name}", l.name)
@@ -188,7 +215,7 @@ impl Coordinator {
     /// Residual bookkeeping mirrors [`Self::run_network`] exactly. When
     /// `profile` is given, per-layer compute time is recorded next to
     /// the plan-compile (setup) time.
-    fn run_network_planned(
+    pub(super) fn run_network_planned(
         &self,
         plan: &NetworkPlan,
         image: &[i32],
@@ -215,7 +242,10 @@ impl Coordinator {
                         .run(&block_in)
                         .with_context(|| format!("layer {}", l.name))?;
                 }
-                (LayerPlan::Conv(c), LayerOp::Linear) => {
+                (
+                    LayerPlan::Conv(c),
+                    LayerOp::Linear | LayerOp::LinearSigned,
+                ) => {
                     cur = c
                         .run(&cur)
                         .with_context(|| format!("layer {}", l.name))?;
@@ -256,23 +286,23 @@ impl Coordinator {
         Ok(cur)
     }
 
-    /// Per-layer setup-vs-compute split of the plan-driven path on one
-    /// image: plan-compile cost (amortized over the deployment) vs
-    /// activation-streaming cost (paid per inference).
+    /// Per-layer setup-vs-compute split of the ResNet-20 plan-driven
+    /// path on one image.
+    #[deprecated(
+        note = "use Coordinator::deploy(&NetworkSpec) and Deployment::profile"
+    )]
     pub fn profile_resnet20(
         &self,
         config: PrecisionConfig,
         image: &[i32],
         seed: u64,
     ) -> Result<Vec<LayerSplit>> {
-        let plan = self.network_plan(config, seed)?;
-        let mut split = Vec::with_capacity(plan.steps().len());
-        let _ = self.run_network_planned(&plan, image, Some(&mut split))?;
-        Ok(split)
+        self.deploy(&NetworkSpec::new("resnet20", config, seed))?
+            .profile(image)
     }
 
     /// Walk the layer schedule for one image against prepared weights.
-    fn run_network(
+    pub(super) fn run_network(
         &self,
         layers: &[Layer],
         params: &HashMap<String, LayerParams>,
@@ -348,7 +378,7 @@ impl Coordinator {
                     cur = self.exec_layer(l, &args)?;
                     cur_hw = (1, l.cout);
                 }
-                LayerOp::Linear => {
+                LayerOp::Linear | LayerOp::LinearSigned => {
                     let p = &params[&l.name];
                     let args = vec![
                         TensorArg::new(cur.clone(), vec![l.cin]),
@@ -364,17 +394,12 @@ impl Coordinator {
         Ok((cur, cross_checked))
     }
 
-    /// Run a batch of images through ResNet-20 in parallel over an
-    /// intra-batch worker pool of `threads` scoped threads sharing this
-    /// coordinator (the backend, its compile cache and the network plan
-    /// are `Send + Sync` and shared read-only).
-    ///
-    /// All images share the same `seed`, i.e. the same network weights —
-    /// the batch is N requests against one deployed model, compiled
-    /// *once* into a [`NetworkPlan`] (native backend). Results come
-    /// back in input order and are bitwise independent of `threads`:
-    /// `infer_batch(.., &[img], .., 1)` and the same image inside an
-    /// 8-wide batch produce identical logits.
+    /// Run a batch of images through ResNet-20 in parallel over the
+    /// intra-batch worker pool (see `Deployment::infer_batch`).
+    #[deprecated(
+        note = "use Coordinator::deploy(&NetworkSpec) and \
+                Deployment::infer_batch"
+    )]
     pub fn infer_batch(
         &self,
         config: PrecisionConfig,
@@ -383,17 +408,16 @@ impl Coordinator {
         seed: u64,
         threads: usize,
     ) -> Result<Vec<InferenceResult>> {
-        let use_plans = self.runtime.kind() == BackendKind::Native;
-        self.infer_batch_opts(config, op, images, seed, threads, use_plans)
+        self.deploy(&NetworkSpec::new("resnet20", config, seed))?
+            .infer_batch(op, images, threads)
     }
 
-    /// [`Self::infer_batch`] with an explicit execution-path choice.
-    /// `use_plans = false` forces the per-call (pre-plan) backend path —
-    /// the PJRT route, kept callable on native so benches and parity
-    /// tests can compare both paths on one coordinator. `use_plans =
-    /// true` requires the native backend: plans execute the in-process
-    /// functional models, and silently bypassing a non-native backend
-    /// would misattribute its results.
+    /// ResNet-20 batch with an explicit execution-path choice (see
+    /// `Deployment::infer_batch_opts`).
+    #[deprecated(
+        note = "use Coordinator::deploy(&NetworkSpec) and \
+                Deployment::infer_batch_opts"
+    )]
     pub fn infer_batch_opts(
         &self,
         config: PrecisionConfig,
@@ -403,87 +427,13 @@ impl Coordinator {
         threads: usize,
         use_plans: bool,
     ) -> Result<Vec<InferenceResult>> {
-        ensure!(
-            !use_plans || self.runtime.kind() == BackendKind::Native,
-            "plan-driven execution requires the native backend (current \
-             backend: {})",
-            self.runtime.kind().as_str()
-        );
-        let n = images.len();
-        if n == 0 {
-            return Ok(Vec::new());
-        }
-        // Per-network state is prepared ONCE for the whole batch: the
-        // layer schedule, the timing/energy report and either the
-        // compiled plan or the seed-derived weights are image-independent
-        // and shared read-only by workers.
-        let layers = resnet20_layers(config);
-        self.manifest.validate_network(config)?;
-        let report = self.scheduler.network_report(&layers, op)?;
-        let plan = if use_plans {
-            Some(self.network_plan(config, seed)?)
-        } else {
-            None
-        };
-        let params = if plan.is_none() {
-            Some(Self::network_params(&layers, seed))
-        } else {
-            None
-        };
-        let run_one = |img: &[i32]| -> Result<Vec<i32>> {
-            match (&plan, &params) {
-                (Some(p), _) => self.run_network_planned(p, img, None),
-                (None, Some(pr)) => {
-                    self.run_network(&layers, pr, img, &[]).map(|(l, _)| l)
-                }
-                (None, None) => unreachable!(),
-            }
-        };
-
-        let threads = threads.clamp(1, n);
-        let logits: Vec<Option<Result<Vec<i32>>>> = if threads == 1 {
-            images.iter().map(|img| Some(run_one(img.as_slice()))).collect()
-        } else {
-            // Worker pool: threads pull the next image index from an
-            // atomic queue, so stragglers don't idle the rest of the
-            // pool. Output order (and every bit of every result) is
-            // independent of the interleaving.
-            let slots: Vec<Mutex<Option<Result<Vec<i32>>>>> =
-                (0..n).map(|_| Mutex::new(None)).collect();
-            let next = AtomicUsize::new(0);
-            std::thread::scope(|s| {
-                for _ in 0..threads {
-                    let (slots, next, run_one) = (&slots, &next, &run_one);
-                    s.spawn(move || loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        *slots[i].lock().unwrap() =
-                            Some(run_one(images[i].as_slice()));
-                    });
-                }
-            });
-            slots.into_iter().map(|slot| slot.into_inner().unwrap()).collect()
-        };
-        logits
-            .into_iter()
-            .enumerate()
-            .map(|(i, slot)| {
-                let l = slot
-                    .unwrap_or_else(|| panic!("batch slot {i} never filled"))?;
-                Ok(InferenceResult {
-                    logits: l,
-                    report: report.clone(),
-                    cross_checked: 0,
-                })
-            })
-            .collect()
+        self.deploy(&NetworkSpec::new("resnet20", config, seed))?
+            .infer_batch_opts(op, images, threads, use_plans)
     }
 
     /// Re-compute a conv layer with the Rust bit-serial datapath model
     /// and compare bit-exactly with the backend output.
-    fn cross_check(
+    pub(super) fn cross_check(
         &self,
         l: &Layer,
         input: &[i32],
@@ -516,11 +466,7 @@ impl Coordinator {
             },
             _ => anyhow::bail!("cross-check supports conv layers"),
         };
-        let nq = NormQuant {
-            scale: p.scale.clone(),
-            bias: p.bias.clone(),
-            shift: l.shift,
-        };
+        let nq = NormQuant::new(p.scale.clone(), p.bias.clone(), l.shift);
         // The backend takes the layer's full input plane; the datapath
         // model wants exactly the strided extent ((h_out-1)*stride + k).
         let full = if l.op == LayerOp::Conv3x3 { l.h + 2 } else { l.h };

@@ -3,14 +3,21 @@
 //! functional model (cross-checking) and the ABB machinery into
 //! end-to-end flows.
 //!
+//! Serving is deployment-handle based: [`Coordinator::deploy`] resolves
+//! a `dnn::NetworkSpec` once into a [`Deployment`], after which
+//! `infer`/`infer_batch`/`profile` are pure activation streaming.
+//! Batches fan out over scoped threads sharing one runtime
+//! ([`Deployment::infer_batch`]).
+//!
 //! Python never appears here — layer numerics come either from the
 //! in-tree native backend or from artifacts AOT-compiled at build time;
 //! either way the coordinator only loads/executes them through the
-//! `runtime` abstraction. Batches fan out over scoped threads sharing
-//! one runtime ([`Coordinator::infer_batch`]).
+//! `runtime` abstraction.
 
+mod deploy;
 mod infer;
 mod params;
 
+pub use deploy::Deployment;
 pub use infer::{Coordinator, InferenceResult};
 pub use params::{random_image, random_layer_params, LayerParams};

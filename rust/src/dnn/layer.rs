@@ -8,6 +8,12 @@ pub enum LayerOp {
     Add,
     AvgPool,
     Linear,
+    /// Fully connected head with a *signed* (no-ReLU) output range:
+    /// identical arithmetic to [`LayerOp::Linear`] but requantized with
+    /// `NormQuant::apply_signed` (two's-complement clip instead of the
+    /// ReLU `[0, 2^O - 1]` clip). Only valid as a network head — every
+    /// other layer consumes unsigned activations.
+    LinearSigned,
 }
 
 impl LayerOp {
@@ -18,6 +24,7 @@ impl LayerOp {
             LayerOp::Add => "add",
             LayerOp::AvgPool => "avgpool",
             LayerOp::Linear => "linear",
+            LayerOp::LinearSigned => "linears",
         }
     }
 
@@ -28,13 +35,25 @@ impl LayerOp {
             "add" => LayerOp::Add,
             "avgpool" => LayerOp::AvgPool,
             "linear" => LayerOp::Linear,
+            "linears" => LayerOp::LinearSigned,
             _ => return None,
         })
     }
 
     /// Does this operator run on RBE (vs the RISC-V cores)?
     pub fn on_rbe(&self) -> bool {
-        matches!(self, LayerOp::Conv3x3 | LayerOp::Conv1x1 | LayerOp::Linear)
+        matches!(
+            self,
+            LayerOp::Conv3x3
+                | LayerOp::Conv1x1
+                | LayerOp::Linear
+                | LayerOp::LinearSigned
+        )
+    }
+
+    /// Does this operator produce signed (no-ReLU) outputs?
+    pub fn signed_output(&self) -> bool {
+        matches!(self, LayerOp::LinearSigned)
     }
 }
 
@@ -92,7 +111,9 @@ impl Layer {
             LayerOp::Conv1x1 => {
                 (self.h_out() * self.h_out() * self.cout * self.cin) as u64
             }
-            LayerOp::Linear => (self.cin * self.cout) as u64,
+            LayerOp::Linear | LayerOp::LinearSigned => {
+                (self.cin * self.cout) as u64
+            }
             _ => 0,
         }
     }
@@ -104,7 +125,9 @@ impl Layer {
     /// Elements produced.
     pub fn out_elems(&self) -> usize {
         match self.op {
-            LayerOp::AvgPool | LayerOp::Linear => self.cout,
+            LayerOp::AvgPool | LayerOp::Linear | LayerOp::LinearSigned => {
+                self.cout
+            }
             _ => self.h_out() * self.h_out() * self.cout,
         }
     }
@@ -134,6 +157,12 @@ pub fn artifact_name(l: &Layer) -> String {
         LayerOp::AvgPool => format!("avgpool_h{}_k{}", l.h, l.cin),
         LayerOp::Linear => format!(
             "linear_ci{}_co{}_w{}i{}o{}",
+            l.cin, l.cout, l.w_bits, l.i_bits, l.o_bits
+        ),
+        // distinct prefix: a signed head must never collide with an
+        // unsigned linear layer of the same signature in the zoo map
+        LayerOp::LinearSigned => format!(
+            "linears_ci{}_co{}_w{}i{}o{}",
             l.cin, l.cout, l.w_bits, l.i_bits, l.o_bits
         ),
     }
@@ -177,6 +206,31 @@ mod tests {
             residual_of: None,
         };
         assert_eq!(l.artifact(), "conv3x3_h32_ci3_co16_s1_w8i8o8");
+    }
+
+    #[test]
+    fn signed_head_has_distinct_artifact_name() {
+        let mk = |op| Layer {
+            op,
+            name: "fc".into(),
+            h: 0,
+            cin: 64,
+            cout: 10,
+            stride: 1,
+            w_bits: 8,
+            i_bits: 8,
+            o_bits: 8,
+            shift: 7,
+            residual_of: None,
+        };
+        let unsigned = mk(LayerOp::Linear);
+        let signed = mk(LayerOp::LinearSigned);
+        assert_eq!(signed.artifact(), "linears_ci64_co10_w8i8o8");
+        assert_ne!(signed.artifact(), unsigned.artifact());
+        assert!(signed.op.signed_output() && !unsigned.op.signed_output());
+        assert!(signed.op.on_rbe());
+        assert_eq!(signed.macs(), unsigned.macs());
+        assert_eq!(LayerOp::parse("linears"), Some(LayerOp::LinearSigned));
     }
 
     #[test]

@@ -7,6 +7,7 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use super::layer::{Layer, LayerOp, PrecisionConfig};
+use super::registry::NETWORKS;
 use super::resnet::{quickstart_layer, resnet20_layers};
 use crate::rbe::RbeJob;
 use crate::util::TsvTable;
@@ -35,7 +36,7 @@ impl ManifestEntry {
     pub fn full_side(&self) -> usize {
         match self.op {
             LayerOp::Conv3x3 => self.h + 2,
-            LayerOp::Linear => 1,
+            LayerOp::Linear | LayerOp::LinearSigned => 1,
             _ => self.h,
         }
     }
@@ -61,7 +62,7 @@ impl ManifestEntry {
                     self.w_bits, self.i_bits, self.o_bits,
                 )
             }
-            LayerOp::Linear => RbeJob::conv1x1(
+            LayerOp::Linear | LayerOp::LinearSigned => RbeJob::conv1x1(
                 1, 1, self.cin, self.cout, 1, self.w_bits, self.i_bits,
                 self.o_bits,
             ),
@@ -118,11 +119,28 @@ impl Manifest {
         Self { entries }
     }
 
-    /// The built-in artifact zoo: every layer of both ResNet-20 precision
-    /// configurations plus the standalone quickstart conv — the same set
-    /// `python/compile/aot.py` lowers. This is what the native backend
-    /// executes when `make artifacts` has never been run.
+    /// The built-in artifact zoo: every layer of every registered
+    /// network ([`crate::dnn::registry::NETWORKS`]) under both precision
+    /// configurations, plus the standalone quickstart conv. This is what
+    /// the native backend executes when `make artifacts` has never been
+    /// run — the full servable surface of the deployment API.
     pub fn builtin() -> Self {
+        let mut layers = Vec::new();
+        for net in NETWORKS {
+            for cfg in [PrecisionConfig::Uniform8, PrecisionConfig::Mixed] {
+                layers.extend(net.layers(cfg));
+            }
+        }
+        layers.push(quickstart_layer());
+        Self::from_layers(layers.iter())
+    }
+
+    /// The subset of the zoo that `python/compile/aot.py` lowers to PJRT
+    /// artifacts: both ResNet-20 configurations plus the quickstart conv.
+    /// An on-disk `manifest.tsv` is required to agree with *this* set
+    /// (the python/rust contract); the other registry networks are
+    /// Rust-builtin only.
+    pub fn aot_zoo() -> Self {
         let mut layers = resnet20_layers(PrecisionConfig::Uniform8);
         layers.extend(resnet20_layers(PrecisionConfig::Mixed));
         layers.push(quickstart_layer());
@@ -165,15 +183,16 @@ impl Manifest {
         self.entries.get(name)
     }
 
-    /// Check that every layer of the given network config has a manifest
-    /// entry with matching signature (the python/rust zoo must agree).
-    pub fn validate_network(&self, config: PrecisionConfig) -> Result<()> {
-        for l in resnet20_layers(config) {
+    /// Check that every layer of a schedule has a manifest entry with a
+    /// matching signature — the deploy-time validation of the deployment
+    /// API (and, for the AOT subset, the python/rust zoo agreement).
+    pub fn validate_layers(&self, layers: &[Layer]) -> Result<()> {
+        for l in layers {
             let name = l.artifact();
             let Some(e) = self.entries.get(&name) else {
                 bail!("layer {} has no artifact {name}", l.name);
             };
-            if !entry_matches(e, &l) {
+            if !entry_matches(e, l) {
                 bail!(
                     "artifact {name} signature mismatch: manifest {e:?} vs \
                      layer {l:?}"
@@ -181,6 +200,12 @@ impl Manifest {
             }
         }
         Ok(())
+    }
+
+    /// [`Self::validate_layers`] over the ResNet-20 schedule (historical
+    /// entry point; the deployment API validates arbitrary schedules).
+    pub fn validate_network(&self, config: PrecisionConfig) -> Result<()> {
+        self.validate_layers(&resnet20_layers(config))
     }
 }
 
@@ -218,14 +243,27 @@ mod tests {
     }
 
     #[test]
-    fn builtin_manifest_covers_both_configs() {
+    fn builtin_manifest_covers_every_registry_network() {
         let m = Manifest::builtin();
         assert!(m.len() >= 20, "{} artifacts", m.len());
-        m.validate_network(PrecisionConfig::Uniform8).unwrap();
-        m.validate_network(PrecisionConfig::Mixed).unwrap();
+        for net in crate::dnn::registry::NETWORKS {
+            for cfg in [PrecisionConfig::Uniform8, PrecisionConfig::Mixed] {
+                m.validate_layers(&net.layers(cfg))
+                    .unwrap_or_else(|e| panic!("{}/{}: {e}", net.id, cfg.as_str()));
+            }
+        }
         // quickstart spec keeps its hand-picked shift (not shift_for)
         let qs = m.get("conv3x3_h16_ci32_co32_s1_w4i4o4").unwrap();
         assert_eq!(qs.shift, 10);
+        // the signed KWS head is part of the servable zoo
+        assert!(m.get("linears_ci16_co12_w8i8o8").is_some());
+        // and the aot subset stays exactly the python-lowered set
+        let aot = Manifest::aot_zoo();
+        assert!(aot.len() < m.len());
+        assert!(aot.get("linears_ci16_co12_w8i8o8").is_none());
+        for name in aot.names() {
+            assert_eq!(m.get(&name), aot.get(&name), "{name}");
+        }
     }
 
     #[test]
@@ -233,7 +271,10 @@ mod tests {
         let m = Manifest::builtin();
         for e in m.entries() {
             match e.op {
-                LayerOp::Conv3x3 | LayerOp::Conv1x1 | LayerOp::Linear => {
+                LayerOp::Conv3x3
+                | LayerOp::Conv1x1
+                | LayerOp::Linear
+                | LayerOp::LinearSigned => {
                     let job = e.rbe_job().unwrap();
                     assert_eq!(job.k_in, e.cin, "{}", e.name);
                     assert_eq!(job.k_out, e.cout, "{}", e.name);

@@ -1,17 +1,28 @@
 //! DNN layer zoo (paper §IV): the networks deployed on Marsellus and
 //! their HAWQ mixed-precision configurations.
 //!
+//! Networks are registered in [`registry`] and addressed by a
+//! [`NetworkSpec`] (registry id + [`PrecisionConfig`] + weight seed) —
+//! the identity `Coordinator::deploy` resolves and the `Runtime` plan
+//! cache is keyed by.
+//!
 //! [`resnet::resnet20_layers`] mirrors `python/compile/model.py`
 //! **field-for-field** — layer names, shapes, precisions, normquant
 //! shifts and artifact names must match, because the Python side lowers
 //! one PJRT artifact per unique layer signature and the Rust coordinator
 //! looks them up by the same derived name. `manifest.tsv` (written by
-//! aot.py) is the contract; [`manifest::Manifest`] validates it.
+//! aot.py) is the contract for that subset ([`Manifest::aot_zoo`]);
+//! [`manifest::Manifest`] validates it. The other registry networks
+//! (ResNet-18, the signed-head KWS net) are Rust-builtin only.
 
 pub mod layer;
 pub mod manifest;
+pub mod registry;
 pub mod resnet;
 
 pub use layer::{artifact_name, Layer, LayerOp, PrecisionConfig};
 pub use manifest::{Manifest, ManifestEntry};
-pub use resnet::{quickstart_layer, resnet18_layers, resnet20_layers};
+pub use registry::{kws_layers, network, network_ids, NetworkDef, NetworkSpec};
+pub use resnet::{
+    quickstart_layer, resnet18_layers, resnet18_layers_cfg, resnet20_layers,
+};

@@ -1,0 +1,213 @@
+//! The network registry: every built-in network the deployment API can
+//! serve, keyed by a stable string id.
+//!
+//! This generalizes the old hard-wired `resnet20_layers` call sites: a
+//! [`NetworkSpec`] names a registry entry plus a [`PrecisionConfig`] and
+//! a weight seed, and `Coordinator::deploy` resolves it *once* into a
+//! served `Deployment` handle. Adding a network to the zoo is one table
+//! row here — the manifest, the native backend and the plan compiler all
+//! derive their entries from the registry
+//! ([`crate::dnn::Manifest::builtin`]).
+
+use std::fmt;
+
+use anyhow::{anyhow, Result};
+
+use super::layer::{shift_for, Layer, LayerOp, PrecisionConfig};
+use super::resnet::{resnet18_layers_cfg, resnet20_layers};
+
+/// One registered network: id, provenance note, and the layer builder.
+pub struct NetworkDef {
+    pub id: &'static str,
+    pub description: &'static str,
+    builder: fn(PrecisionConfig) -> Vec<Layer>,
+}
+
+impl NetworkDef {
+    /// Build the layer schedule under a precision configuration.
+    pub fn layers(&self, config: PrecisionConfig) -> Vec<Layer> {
+        (self.builder)(config)
+    }
+}
+
+/// All built-in networks, in registry order.
+pub const NETWORKS: &[NetworkDef] = &[
+    NetworkDef {
+        id: "resnet20",
+        description: "ResNet-20/CIFAR-10 (paper Figs. 17-18)",
+        builder: resnet20_layers,
+    },
+    NetworkDef {
+        id: "resnet18",
+        description: "ResNet-18/ImageNet, folded 7x7 stem (Table II)",
+        builder: resnet18_layers_cfg,
+    },
+    NetworkDef {
+        id: "kws",
+        description: "keyword-spotting CNN with a signed (no-ReLU) \
+                      logits head",
+        builder: kws_layers,
+    },
+];
+
+/// Registry ids, in registry order.
+pub fn network_ids() -> Vec<&'static str> {
+    NETWORKS.iter().map(|n| n.id).collect()
+}
+
+/// Look a network up by id; the error names every known id.
+pub fn network(id: &str) -> Result<&'static NetworkDef> {
+    NETWORKS.iter().find(|n| n.id == id).ok_or_else(|| {
+        anyhow!(
+            "unknown network {id:?} (known: {})",
+            network_ids().join(", ")
+        )
+    })
+}
+
+/// A deployable network identity: registry id + precision configuration
+/// + weight seed. This is the plan-cache key — two specs differing in
+/// any field are distinct deployments with distinct compiled plans.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct NetworkSpec {
+    pub network: String,
+    pub config: PrecisionConfig,
+    pub seed: u64,
+}
+
+impl NetworkSpec {
+    pub fn new(
+        network: impl Into<String>,
+        config: PrecisionConfig,
+        seed: u64,
+    ) -> Self {
+        Self { network: network.into(), config, seed }
+    }
+
+    /// Resolve the layer schedule this spec deploys.
+    pub fn layers(&self) -> Result<Vec<Layer>> {
+        Ok(network(&self.network)?.layers(self.config))
+    }
+}
+
+impl fmt::Display for NetworkSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}/seed{}", self.network, self.config.as_str(), self.seed)
+    }
+}
+
+/// A small keyword-spotting-style CNN whose head is a *signed*
+/// (no-ReLU) linear layer — the zoo network that exercises
+/// `NormQuant::apply_signed` end to end (ROADMAP "signed-output layers"
+/// item). Body layers stay ReLU/unsigned like the rest of the zoo; only
+/// the logits keep their sign, clipped to the two's-complement 8-bit
+/// range.
+pub fn kws_layers(config: PrecisionConfig) -> Vec<Layer> {
+    // (w_bits, i_bits, o_bits) per stage, mirroring the HAWQ palette
+    // style of `bits_of`.
+    let (stem, body, head) = match config {
+        PrecisionConfig::Uniform8 => ((8, 8, 8), (8, 8, 8), (8, 8)),
+        PrecisionConfig::Mixed => ((8, 8, 4), (4, 4, 4), (4, 4)),
+    };
+    let conv = |name: &str, h, cin, cout, stride, b: (usize, usize, usize)| {
+        Layer {
+            op: LayerOp::Conv3x3,
+            name: name.to_string(),
+            h,
+            cin,
+            cout,
+            stride,
+            w_bits: b.0,
+            i_bits: b.1,
+            o_bits: b.2,
+            shift: shift_for(cin, b.0, b.1, b.2, 9),
+            residual_of: None,
+        }
+    };
+    vec![
+        // 16x16x8 input patch (8 MFCC-style channels)
+        conv("stem", 16, 8, 16, 1, stem),
+        conv("body", 16, 16, 16, 2, body),
+        Layer {
+            op: LayerOp::AvgPool,
+            name: "avgpool".into(),
+            h: 8,
+            cin: 16,
+            cout: 16,
+            stride: 1,
+            w_bits: 8,
+            i_bits: 8,
+            o_bits: 8,
+            shift: 6, // 8x8 = 64 pixels
+            residual_of: None,
+        },
+        Layer {
+            op: LayerOp::LinearSigned,
+            name: "head".into(),
+            h: 0,
+            cin: 16,
+            cout: 12, // the 12 KWS classes
+            stride: 1,
+            w_bits: head.0,
+            i_bits: head.1,
+            o_bits: 8,
+            shift: shift_for(16, head.0, head.1, 8, 1),
+            residual_of: None,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_every_id() {
+        assert_eq!(network_ids(), vec!["resnet20", "resnet18", "kws"]);
+        for def in NETWORKS {
+            for cfg in [PrecisionConfig::Uniform8, PrecisionConfig::Mixed] {
+                let layers = def.layers(cfg);
+                assert!(!layers.is_empty(), "{}", def.id);
+                // every registered network ends in a head that reduces
+                // to a class vector
+                let last = layers.last().unwrap();
+                assert!(matches!(
+                    last.op,
+                    LayerOp::Linear | LayerOp::LinearSigned
+                ));
+            }
+        }
+        let err = network("resnet50").unwrap_err().to_string();
+        assert!(err.contains("resnet20") && err.contains("kws"), "{err}");
+    }
+
+    #[test]
+    fn spec_round_trip() {
+        let spec = NetworkSpec::new("kws", PrecisionConfig::Mixed, 7);
+        assert_eq!(spec.to_string(), "kws/mixed/seed7");
+        assert_eq!(spec.layers().unwrap(), kws_layers(PrecisionConfig::Mixed));
+        assert!(NetworkSpec::new("nope", PrecisionConfig::Mixed, 0)
+            .layers()
+            .is_err());
+    }
+
+    #[test]
+    fn kws_head_is_signed_and_shapes_chain() {
+        for cfg in [PrecisionConfig::Uniform8, PrecisionConfig::Mixed] {
+            let ls = kws_layers(cfg);
+            assert_eq!(ls.len(), 4);
+            assert!(ls.last().unwrap().op.signed_output());
+            // stem 16x16 -> body s2 -> 8x8 -> avgpool -> 16 -> head 12
+            assert_eq!(ls[0].h_out(), 16);
+            assert_eq!(ls[1].h_out(), 8);
+            assert_eq!(ls[2].h, ls[1].h_out());
+            assert_eq!(ls[2].cin, ls[1].cout);
+            assert_eq!(ls[3].cin, ls[2].cout);
+            assert_eq!(ls[3].cout, 12);
+            // avgpool output fits the head's input precision:
+            // 64 pixels of (2^O - 1) summed then >> 6
+            let body_max = (1i64 << ls[1].o_bits) - 1;
+            assert!((64 * body_max) >> 6 < 1 << ls[3].i_bits);
+        }
+    }
+}

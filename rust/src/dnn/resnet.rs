@@ -177,10 +177,22 @@ pub fn quickstart_layer() -> Layer {
 /// (HAWQ 4×4-bit per the paper). The 7×7/s2 stem is scheduled as an
 /// MAC-equivalent 3×3 job over a folded input (DORY-style im2row of the
 /// 49-tap kernel into 3×3 over 3·(49/9) ≈ 17 channels, rounded to the
-/// RBE's 32-channel group); no functional artifacts are generated for
-/// this network — it is timing/energy only.
+/// RBE's 32-channel group). Equivalent to
+/// [`resnet18_layers_cfg`]`(PrecisionConfig::Mixed)`.
 pub fn resnet18_layers() -> Vec<Layer> {
-    let b4 = (4usize, 4usize, 4usize);
+    resnet18_layers_cfg(PrecisionConfig::Mixed)
+}
+
+/// ResNet-18/ImageNet under a precision configuration:
+/// [`PrecisionConfig::Mixed`] is the paper's HAWQ 4×4-bit assignment,
+/// [`PrecisionConfig::Uniform8`] the all-8-bit variant. Servable
+/// end-to-end through the deployment API — every layer is part of the
+/// built-in zoo ([`crate::dnn::Manifest::builtin`]).
+pub fn resnet18_layers_cfg(config: PrecisionConfig) -> Vec<Layer> {
+    let b4 = match config {
+        PrecisionConfig::Uniform8 => (8usize, 8usize, 8usize),
+        PrecisionConfig::Mixed => (4usize, 4usize, 4usize),
+    };
     let mut layers = Vec::new();
     // stem: 7x7 s2, 3->64, 224->112 (folded; see doc comment)
     layers.push(conv(LayerOp::Conv3x3, "stem7x7", 224, 17, 64, 2, b4));
@@ -235,7 +247,7 @@ pub fn resnet18_layers() -> Vec<Layer> {
                 stride: 1,
                 w_bits: 8,
                 i_bits: 8,
-                o_bits: 4,
+                o_bits: b4.2,
                 shift: 1,
                 residual_of: Some(if first {
                     format!("{stage}.b{blk}.down")
@@ -265,10 +277,10 @@ pub fn resnet18_layers() -> Vec<Layer> {
         cin: 512,
         cout: 1000,
         stride: 1,
-        w_bits: 4,
-        i_bits: 4,
+        w_bits: b4.0,
+        i_bits: b4.1,
         o_bits: 8,
-        shift: shift_for(512, 4, 4, 8, 1),
+        shift: shift_for(512, b4.0, b4.1, 8, 1),
         residual_of: None,
     });
     layers
@@ -308,6 +320,24 @@ mod tests {
         let ls = resnet18_layers();
         let macs: u64 = ls.iter().map(|l| l.macs()).sum();
         assert!((1_600_000_000..2_100_000_000).contains(&macs), "{macs}");
+    }
+
+    #[test]
+    fn resnet18_precision_variants() {
+        // the historical no-arg constructor is the HAWQ 4x4 assignment
+        assert_eq!(resnet18_layers(), resnet18_layers_cfg(PrecisionConfig::Mixed));
+        let u = resnet18_layers_cfg(PrecisionConfig::Uniform8);
+        let m = resnet18_layers_cfg(PrecisionConfig::Mixed);
+        assert_eq!(u.len(), m.len());
+        for (lu, lm) in u.iter().zip(&m) {
+            assert_eq!(lu.name, lm.name);
+            assert_eq!((lu.h, lu.cin, lu.cout, lu.stride),
+                       (lm.h, lm.cin, lm.cout, lm.stride));
+            if lu.op.on_rbe() {
+                assert_eq!((lu.w_bits, lu.i_bits), (8, 8), "{}", lu.name);
+                assert_eq!((lm.w_bits, lm.i_bits), (4, 4), "{}", lm.name);
+            }
+        }
     }
 
     #[test]

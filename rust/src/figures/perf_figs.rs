@@ -217,6 +217,7 @@ pub fn fig14(fast: bool) -> Result<String> {
     ]);
 
     // ---- Conv 3x3 and 1x1 (+BN), 9x9x64 output, 64 input channels ----
+    let mut conv1x1_soc = 0u64;
     for ksize in [3usize, 1] {
         let (h, w_sp) = (9usize, 9usize);
         let base = ConvProblem {
@@ -249,6 +250,9 @@ pub fn fig14(fast: bool) -> Result<String> {
             Ok(p.run_with(cfg, &x, &wt, &sc, &bi)?.1.cycles)
         };
         let soc = run_conv(1)?;
+        if ksize == 1 {
+            conv1x1_soc = soc;
+        }
         let c16 = run_conv(16)?;
         // RBE timing at 8-bit and 4-bit
         let rbe_cycles = |wb: usize, ib: usize| {
@@ -298,12 +302,122 @@ pub fn fig14(fast: bool) -> Result<String> {
     ]);
 
     Ok(format!(
-        "Fig. 14 — speedup vs execution on the MARSELLUS SOC core\n{}",
+        "Fig. 14 — speedup vs execution on the MARSELLUS SOC core\n{}\n\n{}",
         render_table(
             &["task", "SOC", "1 cluster core", "16 cores", "RBE 8b",
               "RBE 4b"],
             &rows
-        )
+        ),
+        fig14_contention_variance(fast, fft_soc, conv1x1_soc, add_soc)?
+    ))
+}
+
+/// Mean and half-spread ((max − min) / 2) of a sample set.
+fn mean_spread(samples: &[f64]) -> (f64, f64) {
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    (mean, (max - min) / 2.0)
+}
+
+/// Contention variance companion to Fig. 14: the 16-core speedups are
+/// re-measured under RBE background bank traffic, sampling several
+/// `ClusterConfig::traffic_seed` values and reporting mean ± spread —
+/// one replayed conflict sequence under-reports the variance the
+/// arbitration actually has (ROADMAP "contention variance sweeps").
+///
+/// The single-core SOC baselines are passed in from [`fig14`] (which
+/// already simulated them over the identical seed-3/7/11 inputs this
+/// companion regenerates), so only the contended 16-core runs are
+/// simulated here.
+fn fig14_contention_variance(
+    fast: bool,
+    fft_soc: u64,
+    conv_soc: u64,
+    add_soc: u64,
+) -> Result<String> {
+    const OCCUPANCY: f64 = 0.25;
+    let seeds: &[u64] = if fast { &[1, 2, 3] } else { &[1, 2, 3, 4, 5] };
+    let contended = |seed: u64| {
+        let mut cfg = ClusterConfig::default();
+        cfg.background_traffic = OCCUPANCY;
+        cfg.traffic_seed = seed;
+        cfg
+    };
+
+    // FFT: FP32 DSP, conflict-sensitive through the TCDM banks
+    let n = if fast { 256 } else { 2048 };
+    let mut rng = Rng::new(3);
+    let sig: Vec<(f32, f32)> = (0..n)
+        .map(|_| (rng.f64() as f32 - 0.5, rng.f64() as f32 - 0.5))
+        .collect();
+    let fft = FftProblem { n, cores: 16 };
+    let fft_samples: Vec<f64> = seeds
+        .iter()
+        .map(|&s| {
+            Ok(fft_soc as f64
+                / fft.run_with(contended(s), &sig)?.1.cycles as f64)
+        })
+        .collect::<Result<_>>()?;
+
+    // conv1x1+BN 9x9x64: the RBE-adjacent marshaling workload
+    let base = ConvProblem {
+        h: 9,
+        w: 9,
+        k_in: 64,
+        k_out: 64,
+        ksize: 1,
+        cores: 16,
+        bn_shift: 10,
+    };
+    let mut rng = Rng::new(7);
+    let x: Vec<i32> =
+        (0..9 * 9 * 64).map(|_| rng.range_i32(-128, 128)).collect();
+    let wt: Vec<i32> =
+        (0..64 * 64).map(|_| rng.range_i32(-128, 128)).collect();
+    let sc: Vec<i32> = (0..64).map(|_| rng.range_i32(1, 8)).collect();
+    let bi: Vec<i32> = (0..64).map(|_| rng.range_i32(-50, 50)).collect();
+    let conv_samples: Vec<f64> = seeds
+        .iter()
+        .map(|&s| {
+            Ok(conv_soc as f64
+                / base.run_with(contended(s), &x, &wt, &sc, &bi)?.1.cycles
+                    as f64)
+        })
+        .collect::<Result<_>>()?;
+
+    // tensor add: pure load/store, the most bank-bound task
+    let elems = 9 * 9 * 64 / 16 * 16;
+    let mut rng = Rng::new(11);
+    let a: Vec<i32> = (0..elems).map(|_| rng.range_i32(-64, 64)).collect();
+    let b: Vec<i32> = (0..elems).map(|_| rng.range_i32(-64, 64)).collect();
+    let add_samples: Vec<f64> = seeds
+        .iter()
+        .map(|&s| {
+            Ok(add_soc as f64
+                / run_tensor_add(contended(s), &a, &b)?.1.cycles as f64)
+        })
+        .collect::<Result<_>>()?;
+
+    let mut rows_out = Vec::new();
+    for (task, samples) in [
+        (format!("FFT-{n} (FP32)"), fft_samples),
+        ("Conv1x1+BN 9x9x64".to_string(), conv_samples),
+        ("Add 9x9x64 (8b)".to_string(), add_samples),
+    ] {
+        let (mean, spread) = mean_spread(&samples);
+        rows_out.push(vec![
+            task,
+            format!("{mean:.2}"),
+            format!("± {spread:.2}"),
+        ]);
+    }
+    Ok(format!(
+        "contention variance — 16-core speedup under RBE bank traffic \
+         (occupancy {:.0}%, {} traffic seeds, mean ± half-spread)\n{}",
+        OCCUPANCY * 100.0,
+        seeds.len(),
+        render_table(&["task", "speedup", "spread"], &rows_out)
     ))
 }
 
@@ -421,6 +535,35 @@ mod tests {
         assert!(t.contains("FFT"));
         assert!(t.contains("Conv3x3"));
         assert!(t.contains("Add"));
+        // contention companion: several traffic seeds, mean ± spread
+        assert!(t.contains("traffic seeds"), "{t}");
+        assert!(t.contains("±"), "{t}");
+    }
+
+    /// The contention sweep really varies with the traffic seed: the
+    /// spread over seeds is strictly positive for at least one task
+    /// (otherwise the sweep is replaying one sequence).
+    #[test]
+    fn contention_sweep_has_spread() {
+        // synthetic baselines keep the test off the 1-core simulations;
+        // they are large so a one-cycle difference between seeds still
+        // survives the 2-decimal rendering the assertion parses
+        let b = 10_000_000;
+        let t = fig14_contention_variance(true, b, b, b).unwrap();
+        let spreads: Vec<f64> = t
+            .lines()
+            .filter_map(|l| l.rsplit_once("± "))
+            .map(|(_, v)| v.trim().parse().unwrap())
+            .collect();
+        assert_eq!(spreads.len(), 3, "{t}");
+        assert!(spreads.iter().any(|&s| s > 0.0), "{t}");
+    }
+
+    #[test]
+    fn mean_spread_math() {
+        let (m, s) = mean_spread(&[2.0, 4.0, 3.0]);
+        assert!((m - 3.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,20 +1,26 @@
 //! `marsellus` CLI — leader entrypoint for the Marsellus SoC reproduction.
 //!
 //! ```text
-//! marsellus smoke   [--artifacts DIR]        check the execution runtime
-//! marsellus figure  <id>|all [--fast]        regenerate a paper figure
-//! marsellus infer   [--artifacts DIR] [--config uniform8|mixed]
-//!                   [--vdd V] [--seed N]     end-to-end ResNet-20
-//! marsellus batch   [--n N] [--threads T] [--config C] [--seed S]
-//!                                            parallel batch inference
-//! marsellus list                             list figure ids
+//! marsellus smoke    [--artifacts DIR]        check the execution runtime
+//! marsellus figure   <id>|all [--fast]        regenerate a paper figure
+//! marsellus infer    [--network ID] [--config uniform8|mixed]
+//!                    [--vdd V] [--seed N] [--check LAYER]
+//!                    [--artifacts DIR]        end-to-end inference
+//! marsellus batch    [--network ID] [--n N] [--threads T] [--config C]
+//!                    [--seed S]               parallel batch inference
+//! marsellus networks                          list deployable networks
+//! marsellus list                              list figure ids
 //! ```
 //!
-//! Backend selection: `MARSELLUS_BACKEND=native|pjrt` (default native).
+//! `--network` names a `dnn` registry entry (default `resnet20`); the
+//! CLI deploys `Coordinator::deploy(NetworkSpec)` and streams through
+//! the returned handle. Backend selection:
+//! `MARSELLUS_BACKEND=native|pjrt` (default native). Plan-cache bound:
+//! `MARSELLUS_PLAN_CACHE_BYTES` (default 256 MiB).
 
 use anyhow::{bail, Result};
-use marsellus::coordinator::{random_image, Coordinator};
-use marsellus::dnn::PrecisionConfig;
+use marsellus::coordinator::Coordinator;
+use marsellus::dnn::{NetworkSpec, PrecisionConfig};
 use marsellus::power::OperatingPoint;
 use marsellus::util::Args;
 
@@ -25,6 +31,12 @@ fn main() -> Result<()> {
         Some("figure") => figure(&args),
         Some("infer") => infer(&args),
         Some("batch") => batch(&args),
+        Some("networks") => {
+            for def in marsellus::dnn::registry::NETWORKS {
+                println!("{:<10} {}", def.id, def.description);
+            }
+            Ok(())
+        }
         Some("list") => {
             for id in marsellus::figures::ALL {
                 println!("{id}");
@@ -33,7 +45,8 @@ fn main() -> Result<()> {
         }
         other => {
             eprintln!(
-                "usage: marsellus <smoke|figure|infer|batch|list> [options]"
+                "usage: marsellus <smoke|figure|infer|batch|networks|list> \
+                 [options]"
             );
             bail!("unknown command {other:?}")
         }
@@ -87,24 +100,39 @@ fn parse_config(args: &Args) -> Result<PrecisionConfig> {
     }
 }
 
+fn parse_spec(args: &Args) -> Result<NetworkSpec> {
+    let network = args.get_or("network", "resnet20");
+    let seed = args.get_usize("seed", 42)? as u64;
+    Ok(NetworkSpec::new(network, parse_config(args)?, seed))
+}
+
 fn infer(args: &Args) -> Result<()> {
     let coord = Coordinator::new(artifacts_dir(args))?;
-    let config = parse_config(args)?;
+    let spec = parse_spec(args)?;
     let vdd = args.get_f64("vdd", 0.8)?;
-    let seed = args.get_usize("seed", 42)? as u64;
-    let mut rng = marsellus::util::Rng::new(seed);
-    // the stem consumes 8-bit activations in both precision configs
-    let image = random_image(8, &mut rng);
-    let res = coord.infer_resnet20(
-        config,
-        &OperatingPoint::at_vdd(vdd),
-        &image,
-        seed,
-        &["stage3.b2.conv1"],
-    )?;
+    let op = OperatingPoint::at_vdd(vdd);
+
+    let deployment = coord.deploy(&spec)?;
+    let (h, c) = deployment.input_dims();
+    let mut rng = marsellus::util::Rng::new(spec.seed);
+    let image = deployment.random_input(&mut rng);
+    println!(
+        "deployed {spec}: {} layers, input {h}x{h}x{c} @ {} bits",
+        deployment.layers().len(),
+        deployment.input_bits()
+    );
+    let res = match args.get("check") {
+        // cross-checking forces the per-call path; pick a small layer
+        Some(layer) => deployment.infer_cross_checked(&op, &image, &[layer])?,
+        None => deployment.infer(&op, &image)?,
+    };
     println!("logits        = {:?}", res.logits);
-    println!("cross-checked = {} layer(s) vs rust bit-serial model",
-             res.cross_checked);
+    if res.cross_checked > 0 {
+        println!(
+            "cross-checked = {} layer(s) vs rust bit-serial model",
+            res.cross_checked
+        );
+    }
     println!(
         "latency       = {:.0} µs   energy = {:.1} µJ   ({:.2} Top/s/W)",
         res.report.total_latency_us(),
@@ -116,24 +144,19 @@ fn infer(args: &Args) -> Result<()> {
 
 fn batch(args: &Args) -> Result<()> {
     let coord = Coordinator::new(artifacts_dir(args))?;
-    let config = parse_config(args)?;
+    let spec = parse_spec(args)?;
     let n = args.get_usize("n", 8)?;
     let threads = args.get_usize("threads", 4)?;
-    let seed = args.get_usize("seed", 42)? as u64;
     let vdd = args.get_f64("vdd", 0.8)?;
 
-    let mut rng = marsellus::util::Rng::new(seed ^ 0xBA7C4);
+    let deployment = coord.deploy(&spec)?;
+    let mut rng = marsellus::util::Rng::new(spec.seed ^ 0xBA7C4);
     let images: Vec<Vec<i32>> =
-        (0..n).map(|_| random_image(8, &mut rng)).collect();
+        (0..n).map(|_| deployment.random_input(&mut rng)).collect();
 
     let t0 = std::time::Instant::now();
-    let results = coord.infer_batch(
-        config,
-        &OperatingPoint::at_vdd(vdd),
-        &images,
-        seed,
-        threads,
-    )?;
+    let results =
+        deployment.infer_batch(&OperatingPoint::at_vdd(vdd), &images, threads)?;
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     for (i, r) in results.iter().enumerate() {
@@ -144,13 +167,14 @@ fn batch(args: &Args) -> Result<()> {
             .max_by_key(|&(_, v)| *v)
             .map(|(c, _)| c)
             .unwrap_or(0);
-        println!("image {i}: class {top}  logits {:?}", r.logits);
+        println!("input {i}: class {top}  logits[..10] {:?}",
+                 &r.logits[..r.logits.len().min(10)]);
     }
     let sim_us: f64 =
         results.iter().map(|r| r.report.total_latency_us()).sum();
     println!(
-        "batch of {n} on {threads} thread(s) [{} backend]: host {wall_ms:.0} ms, \
-         simulated SoC time {sim_us:.0} µs total",
+        "batch of {n} x {spec} on {threads} thread(s) [{} backend]: \
+         host {wall_ms:.0} ms, simulated SoC time {sim_us:.0} µs total",
         coord.runtime.kind().as_str(),
     );
     println!(
@@ -158,6 +182,14 @@ fn batch(args: &Args) -> Result<()> {
         coord.runtime.cached_executables(),
         coord.runtime.cache_hits(),
         coord.runtime.cache_misses(),
+    );
+    println!(
+        "plan cache: {} deployment(s), {} KiB resident / {} KiB budget, \
+         {} eviction(s)",
+        coord.runtime.cached_plans(),
+        coord.runtime.plan_bytes() / 1024,
+        coord.runtime.plan_cache_budget() / 1024,
+        coord.runtime.plan_evictions(),
     );
     Ok(())
 }

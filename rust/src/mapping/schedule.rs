@@ -115,7 +115,7 @@ impl Scheduler {
             LayerOp::Conv1x1 => RbeJob::conv1x1(
                 h, h, l.cin, l.cout, l.stride, l.w_bits, l.i_bits, l.o_bits,
             )?,
-            LayerOp::Linear => RbeJob::conv1x1(
+            LayerOp::Linear | LayerOp::LinearSigned => RbeJob::conv1x1(
                 1, 1, l.cin, l.cout, 1, l.w_bits, l.i_bits, l.o_bits,
             )?,
             _ => anyhow::bail!("not an RBE layer"),
@@ -202,7 +202,7 @@ impl Scheduler {
                     macs: l.macs(),
                 })
             }
-            LayerOp::Linear => {
+            LayerOp::Linear | LayerOp::LinearSigned => {
                 let job = Self::conv_job(l)?;
                 let exec_cycles =
                     RbeTiming::cycles(&job) + TILE_OVERHEAD_CYCLES;
@@ -380,6 +380,21 @@ mod tests {
         assert!((25.0..75.0).contains(&ms18),
                 "ResNet-18 {ms18:.1} ms (paper 48)");
         assert!(ms18 / ms > 10.0, "relative scale {}", ms18 / ms);
+    }
+
+    /// Every registry network (incl. the signed-head KWS net) schedules
+    /// cleanly under both precision configurations.
+    #[test]
+    fn every_registry_network_schedules() {
+        let s = Scheduler::default();
+        let op = OperatingPoint::nominal();
+        for net in crate::dnn::registry::NETWORKS {
+            for cfg in [PrecisionConfig::Uniform8, PrecisionConfig::Mixed] {
+                let rep = s.network_report(&net.layers(cfg), &op).unwrap();
+                assert!(rep.total_latency_us() > 0.0, "{}", net.id);
+                assert!(rep.total_energy_uj() > 0.0, "{}", net.id);
+            }
+        }
     }
 
     /// Fig. 18: the three bound classes all occur across the network.

@@ -82,7 +82,7 @@ impl Tiler {
 
     /// Decide the tiling for an RBE-mapped conv layer.
     pub fn tile(&self, l: &Layer) -> Result<LayerTiling> {
-        if !l.op.on_rbe() || l.op == LayerOp::Linear {
+        if !matches!(l.op, LayerOp::Conv3x3 | LayerOp::Conv1x1) {
             bail!("tiler handles conv layers; got {:?}", l.op);
         }
         let h_out = l.h_out();

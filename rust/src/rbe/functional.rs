@@ -34,17 +34,44 @@ use anyhow::{bail, Result};
 use super::config::{RbeJob, RbeMode};
 
 /// Per-output-channel normalization parameters (Eq. 2).
+///
+/// `signed` selects the output clip the conv/linear kernels apply:
+/// `false` (the zoo default) is the ReLU `[0, 2^O - 1]` clip
+/// ([`Self::apply`]), `true` the two's-complement
+/// `[-2^(O-1), 2^(O-1) - 1]` clip ([`Self::apply_signed`]) used by
+/// signed-head layers (`LayerOp::LinearSigned`).
 #[derive(Debug, Clone)]
 pub struct NormQuant {
     pub scale: Vec<i32>,
     pub bias: Vec<i32>,
     pub shift: u32,
+    pub signed: bool,
 }
 
 impl NormQuant {
+    /// Unsigned (ReLU-clipped) normquant — the zoo default.
+    pub fn new(scale: Vec<i32>, bias: Vec<i32>, shift: u32) -> Self {
+        Self { scale, bias, shift, signed: false }
+    }
+
+    /// Signed (no-ReLU) normquant for `LinearSigned` heads.
+    pub fn new_signed(scale: Vec<i32>, bias: Vec<i32>, shift: u32) -> Self {
+        Self { scale, bias, shift, signed: true }
+    }
+
     /// Identity-ish normquant: scale 1, bias 0, shift 0.
     pub fn unit(k_out: usize) -> Self {
-        Self { scale: vec![1; k_out], bias: vec![0; k_out], shift: 0 }
+        Self::new(vec![1; k_out], vec![0; k_out], 0)
+    }
+
+    /// Apply Eq. 2 with whichever clip this instance selects.
+    #[inline]
+    pub fn quantize(&self, k: usize, acc: i64, o_bits: usize) -> i32 {
+        if self.signed {
+            self.apply_signed(k, acc, o_bits)
+        } else {
+            self.apply(k, acc, o_bits)
+        }
     }
 
     /// Apply Eq. 2 + ReLU clip to `o_bits`.
@@ -200,7 +227,7 @@ fn conv_reference_core(
                     }
                 }
                 out[(oy * job.w_out + ox) * job.k_out + ko] =
-                    nq.apply(ko, acc, job.o_bits);
+                    nq.quantize(ko, acc, job.o_bits);
             }
         }
     }
@@ -265,7 +292,7 @@ pub fn conv_bitserial(
                     }
                 }
                 out[(oy * job.w_out + ox) * job.k_out + ko] =
-                    nq.apply(ko, acc as i64, job.o_bits);
+                    nq.quantize(ko, acc as i64, job.o_bits);
             }
         }
     }
@@ -418,7 +445,7 @@ pub fn conv_bitserial_packed(
                     }
                 }
                 out[(oy * job.w_out + ox) * job.k_out + ko] =
-                    nq.apply(ko, acc as i64, job.o_bits);
+                    nq.quantize(ko, acc as i64, job.o_bits);
             }
         }
     }
@@ -479,6 +506,8 @@ mod tests {
             scale: (0..job.k_out).map(|_| rng.range_i32(1, 16)).collect(),
             bias: (0..job.k_out).map(|_| rng.range_i32(-500, 500)).collect(),
             shift: rng.range_i32(0, 12) as u32,
+            // cover the signed (no-ReLU) clip in every kernel sweep
+            signed: rng.f64() < 0.3,
         };
         (x, w, nq)
     }
@@ -510,6 +539,24 @@ mod tests {
             let b = conv_reference(&job, &x, &w, &nq).unwrap();
             assert_eq!(a, b, "job {job:?}");
         }
+    }
+
+    /// All three kernels honour the signed (no-ReLU) clip: a negative
+    /// accumulation survives as a negative output instead of pinning 0.
+    #[test]
+    fn signed_normquant_keeps_negative_logits_in_every_kernel() {
+        let job = RbeJob::conv1x1(1, 1, 4, 1, 1, 3, 2, 4).unwrap();
+        let x = vec![3, 3, 3, 3];
+        let w = vec![-4, -4, -4, -4];
+        let nq = NormQuant::new_signed(vec![1], vec![0], 0);
+        // acc = -48; the signed 4-bit clip pins -8 (ReLU would give 0)
+        assert_eq!(conv_bitserial(&job, &x, &w, &nq).unwrap(), vec![-8]);
+        assert_eq!(conv_reference(&job, &x, &w, &nq).unwrap(), vec![-8]);
+        let pw = pack_weights(&job, &w).unwrap();
+        assert_eq!(
+            conv_bitserial_packed(&job, &x, &pw, &nq).unwrap(),
+            vec![-8]
+        );
     }
 
     #[test]
@@ -625,7 +672,7 @@ mod tests {
     /// signed bounds, and the shift must floor (arithmetic) on negatives.
     #[test]
     fn requant_clamp_bounds_all_obits() {
-        let nq = NormQuant { scale: vec![3], bias: vec![-7], shift: 2 };
+        let nq = NormQuant::new(vec![3], vec![-7], 2);
         let spec = |acc: i64| (3 * acc - 7) >> 2;
         for o_bits in 2..=8usize {
             let omax = (1i64 << o_bits) - 1;
@@ -654,7 +701,7 @@ mod tests {
             }
         }
         // arithmetic shift floors: (1*(-3) + 0) >> 1 = -2, not -1
-        let unit = NormQuant { scale: vec![1], bias: vec![0], shift: 1 };
+        let unit = NormQuant::new(vec![1], vec![0], 1);
         assert_eq!(unit.apply_signed(0, -3, 8), -2);
         assert_eq!(unit.apply(0, -3, 8), 0); // ReLU clips it away
     }

@@ -1,41 +1,75 @@
 //! The [`Runtime`]: a shared execution backend plus the per-artifact
-//! compile cache.
+//! compile cache and the bounded, LRU-evicting deployment plan cache.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
+
+use crate::dnn::NetworkSpec;
 
 use super::backend::{BackendKind, ExecBackend};
 use super::executable::Executable;
 use super::plan::NetworkPlan;
 
+/// Default plan-cache byte budget when `MARSELLUS_PLAN_CACHE_BYTES` is
+/// unset: roomy enough for a ResNet-18 deployment plus a handful of
+/// small-network tenants, small enough to bound many-tenant serving.
+pub const DEFAULT_PLAN_CACHE_BYTES: usize = 256 * 1024 * 1024;
+
+/// One resident deployment plan plus its eviction metadata.
+struct PlanSlot {
+    plan: Arc<NetworkPlan>,
+    bytes: usize,
+    /// Logical LRU timestamp: bumped from `plan_clock` on every hit.
+    last_used: u64,
+}
+
 /// An execution backend plus a cache of compiled executables keyed by
 /// artifact name, and a cache of precompiled [`NetworkPlan`]s keyed by
-/// deployment (network + weight seed).
+/// [`NetworkSpec`] (network id + precision config + weight seed).
 ///
 /// Compilation is performed once per artifact (and plan compilation
 /// once per deployment); subsequent lookups are O(1) and share the
-/// compiled object via `Arc`. The runtime is `Send + Sync` (backend is
-/// `Sync`, caches are behind `Mutex`es), so the coordinator can share
-/// one instance across worker threads — see `Coordinator::infer_batch`.
+/// compiled object via `Arc`. The plan cache is **bounded**: resident
+/// plans are byte-accounted (`NetworkPlan::bytes`) and the
+/// least-recently-used deployment is evicted once the total exceeds the
+/// budget (`MARSELLUS_PLAN_CACHE_BYTES`, default 256 MiB), so
+/// many-tenant serving has a memory ceiling instead of monotonic
+/// growth — `plan_evictions`/`plan_bytes` report the telemetry. The
+/// runtime is `Send + Sync` (backend is `Sync`, caches are behind
+/// `Mutex`es), so the coordinator can share one instance across worker
+/// threads — see `Deployment::infer_batch`.
 pub struct Runtime {
     backend: Arc<dyn ExecBackend>,
     artifacts_dir: PathBuf,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
     hits: AtomicU64,
     misses: AtomicU64,
-    plans: Mutex<HashMap<String, Arc<NetworkPlan>>>,
+    plans: Mutex<HashMap<NetworkSpec, PlanSlot>>,
     plan_hits: AtomicU64,
     plan_builds: AtomicU64,
+    plan_evictions: AtomicU64,
+    plan_bytes: AtomicUsize,
+    plan_budget: AtomicUsize,
+    plan_clock: AtomicU64,
+}
+
+/// Parse a `MARSELLUS_PLAN_CACHE_BYTES`-style value; `None`/empty/bad
+/// values fall back to the default budget.
+fn parse_plan_budget(v: Option<String>) -> usize {
+    v.and_then(|s| s.trim().parse::<usize>().ok())
+        .unwrap_or(DEFAULT_PLAN_CACHE_BYTES)
 }
 
 impl Runtime {
     /// Wrap an explicit backend. `artifacts_dir` is kept for diagnostics
     /// and for locating on-disk artifact files.
     pub fn with_backend(backend: Arc<dyn ExecBackend>, artifacts_dir: impl AsRef<Path>) -> Self {
+        let budget =
+            parse_plan_budget(std::env::var("MARSELLUS_PLAN_CACHE_BYTES").ok());
         Self {
             backend,
             artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
@@ -45,6 +79,10 @@ impl Runtime {
             plans: Mutex::new(HashMap::new()),
             plan_hits: AtomicU64::new(0),
             plan_builds: AtomicU64::new(0),
+            plan_evictions: AtomicU64::new(0),
+            plan_bytes: AtomicUsize::new(0),
+            plan_budget: AtomicUsize::new(budget),
+            plan_clock: AtomicU64::new(0),
         }
     }
 
@@ -182,37 +220,70 @@ impl Runtime {
     }
 
     /// Fetch (or compile, once) the precompiled layer-plan pipeline for
-    /// the deployed network identified by `key` (network name + config +
-    /// weight seed, chosen by the caller). This is the load-time half of
-    /// the plan-driven serving path: after the first call for a key,
-    /// every subsequent `execute`/batch over the same deployment streams
+    /// the deployment identified by `spec`. This is the load-time half
+    /// of the plan-driven serving path: after the first call for a spec,
+    /// every subsequent `infer`/batch over the same deployment streams
     /// through the shared immutable plan. Two threads racing an uncached
-    /// key may both run `build`; the first insert wins, the duplicate is
-    /// discarded and counted as a hit, so `plan_builds` always equals
+    /// spec may both run `build`; the first insert wins, the duplicate
+    /// is discarded and counted as a hit, so `plan_builds` always equals
     /// the number of distinct plans that entered the cache.
+    ///
+    /// Every hit bumps the deployment's LRU stamp; every insert runs the
+    /// eviction sweep, so the cache never holds more than the byte
+    /// budget across *multiple* residents (a single over-budget plan is
+    /// kept — a bound must not refuse to serve the one active tenant).
     pub fn network_plan(
         &self,
-        key: &str,
+        spec: &NetworkSpec,
         build: impl FnOnce() -> Result<NetworkPlan>,
     ) -> Result<Arc<NetworkPlan>> {
-        if let Some(p) = self.plans.lock().unwrap().get(key) {
+        if let Some(slot) = self.plans.lock().unwrap().get_mut(spec) {
+            slot.last_used = self.plan_clock.fetch_add(1, Ordering::Relaxed);
             self.plan_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(p.clone());
+            return Ok(slot.plan.clone());
         }
         // Build outside the lock: plan compilation packs every weight
         // tensor of the network and must not serialize unrelated worker
         // threads.
         let built = Arc::new(build()?);
-        match self.plans.lock().unwrap().entry(key.to_string()) {
-            std::collections::hash_map::Entry::Occupied(o) => {
-                // lost the race: serve the winner's plan, count a hit
-                self.plan_hits.fetch_add(1, Ordering::Relaxed);
-                Ok(o.get().clone())
-            }
-            std::collections::hash_map::Entry::Vacant(v) => {
-                self.plan_builds.fetch_add(1, Ordering::Relaxed);
-                Ok(v.insert(built).clone())
-            }
+        let mut plans = self.plans.lock().unwrap();
+        if let Some(slot) = plans.get_mut(spec) {
+            // lost the race: serve the winner's plan, count a hit
+            slot.last_used = self.plan_clock.fetch_add(1, Ordering::Relaxed);
+            self.plan_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(slot.plan.clone());
+        }
+        let bytes = built.bytes();
+        self.plan_builds.fetch_add(1, Ordering::Relaxed);
+        self.plan_bytes.fetch_add(bytes, Ordering::Relaxed);
+        plans.insert(
+            spec.clone(),
+            PlanSlot {
+                plan: built.clone(),
+                bytes,
+                last_used: self.plan_clock.fetch_add(1, Ordering::Relaxed),
+            },
+        );
+        self.evict_lru_over_budget(&mut plans);
+        Ok(built)
+    }
+
+    /// Drop least-recently-used deployments until the resident total is
+    /// back under budget (or only one plan remains). Caller holds the
+    /// cache lock.
+    fn evict_lru_over_budget(&self, plans: &mut HashMap<NetworkSpec, PlanSlot>) {
+        let budget = self.plan_budget.load(Ordering::Relaxed);
+        while plans.len() > 1
+            && self.plan_bytes.load(Ordering::Relaxed) > budget
+        {
+            let victim = plans
+                .iter()
+                .min_by_key(|(_, slot)| slot.last_used)
+                .map(|(spec, _)| spec.clone())
+                .expect("non-empty cache has an LRU entry");
+            let slot = plans.remove(&victim).expect("victim is resident");
+            self.plan_bytes.fetch_sub(slot.bytes, Ordering::Relaxed);
+            self.plan_evictions.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -228,9 +299,37 @@ impl Runtime {
         self.plan_builds.load(Ordering::Relaxed)
     }
 
+    /// Number of deployments evicted from the plan cache so far.
+    pub fn plan_evictions(&self) -> u64 {
+        self.plan_evictions.load(Ordering::Relaxed)
+    }
+
+    /// Resident bytes currently held by the plan cache.
+    pub fn plan_bytes(&self) -> usize {
+        self.plan_bytes.load(Ordering::Relaxed)
+    }
+
+    /// The plan-cache byte budget currently in force.
+    pub fn plan_cache_budget(&self) -> usize {
+        self.plan_budget.load(Ordering::Relaxed)
+    }
+
+    /// Override the plan-cache byte budget (tests, admission control).
+    /// Takes effect on the next insert; resident plans are not swept
+    /// retroactively.
+    pub fn set_plan_cache_budget(&self, bytes: usize) {
+        self.plan_budget.store(bytes, Ordering::Relaxed);
+    }
+
     /// Number of distinct network plans currently cached.
     pub fn cached_plans(&self) -> usize {
         self.plans.lock().unwrap().len()
+    }
+
+    /// Specs of the deployments currently resident in the plan cache
+    /// (arbitrary order) — lets tests pin down LRU victims exactly.
+    pub fn cached_plan_specs(&self) -> Vec<NetworkSpec> {
+        self.plans.lock().unwrap().keys().cloned().collect()
     }
 
     /// Number of cache hits served so far (telemetry for tests/benches).
@@ -246,5 +345,25 @@ impl Runtime {
     /// Number of distinct executables currently cached.
     pub fn cached_executables(&self) -> usize {
         self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_budget_parsing() {
+        assert_eq!(parse_plan_budget(None), DEFAULT_PLAN_CACHE_BYTES);
+        assert_eq!(
+            parse_plan_budget(Some(String::new())),
+            DEFAULT_PLAN_CACHE_BYTES
+        );
+        assert_eq!(
+            parse_plan_budget(Some("not-a-number".into())),
+            DEFAULT_PLAN_CACHE_BYTES
+        );
+        assert_eq!(parse_plan_budget(Some(" 4096 ".into())), 4096);
+        assert_eq!(parse_plan_budget(Some("0".into())), 0);
     }
 }

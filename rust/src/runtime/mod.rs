@@ -16,12 +16,14 @@
 //!   compile-time stub of `xla`; patch in the real crate to execute.
 //!
 //! [`Runtime`] owns a backend plus two caches: the per-artifact compile
-//! cache (compile once, `Arc`-share thereafter) and the per-network
+//! cache (compile once, `Arc`-share thereafter) and the per-deployment
 //! [`NetworkPlan`] cache — precompiled layer plans ([`plan`]) that hoist
 //! weight packing, job-geometry resolution and requant staging out of
-//! the per-inference hot path. Both are `Send + Sync`, so the
-//! coordinator can fan inference batches out across threads over one
-//! shared instance.
+//! the per-inference hot path. The plan cache is keyed by
+//! `dnn::NetworkSpec`, byte-accounted and bounded with LRU eviction
+//! (`MARSELLUS_PLAN_CACHE_BYTES`), so many-tenant serving cannot grow
+//! without bound. Both caches are `Send + Sync`, so the coordinator can
+//! fan inference batches out across threads over one shared instance.
 //!
 //! Backend selection: [`Runtime::from_env`] honours
 //! `MARSELLUS_BACKEND=native|pjrt`, defaulting to native.
@@ -38,7 +40,7 @@ mod tensor;
 
 pub use backend::{BackendKind, ExecBackend, LayerExec};
 pub use executable::Executable;
-pub use loader::Runtime;
+pub use loader::{Runtime, DEFAULT_PLAN_CACHE_BYTES};
 #[cfg(feature = "native")]
 pub use native::NativeBackend;
 pub use plan::{

@@ -153,16 +153,18 @@ impl NativeExec {
         let job = e.rbe_job()?;
         // The datapath model wants exactly the strided extent.
         let x = trim_input(&args[0].data, full, job.h_in(), e.cin);
-        let nq = NormQuant {
-            scale: args[2].data.clone(),
-            bias: args[3].data.clone(),
-            shift: e.shift,
-        };
+        let nq = NormQuant::new(
+            args[2].data.clone(),
+            args[3].data.clone(),
+            e.shift,
+        );
         self.run_conv(&job, &x, &args[1].data, &nq)
     }
 
-    /// linear: args = [x (Kin,), w (Kout, Kin), scale, bias]. Identical
-    /// arithmetic to a 1×1 conv over a single pixel.
+    /// linear / linears: args = [x (Kin,), w (Kout, Kin), scale, bias].
+    /// Identical arithmetic to a 1×1 conv over a single pixel; the
+    /// signed-head variant swaps the ReLU clip for the two's-complement
+    /// one.
     fn linear(&self, args: &[TensorArg]) -> Result<Vec<i32>> {
         let e = &self.e;
         ensure!(args.len() == 4, "{}: linear takes 4 args, got {}", e.name, args.len());
@@ -175,6 +177,7 @@ impl NativeExec {
             scale: args[2].data.clone(),
             bias: args[3].data.clone(),
             shift: e.shift,
+            signed: e.op.signed_output(),
         };
         self.run_conv(&job, &args[0].data, &args[1].data, &nq)
     }
@@ -208,7 +211,7 @@ impl LayerExec for NativeExec {
     fn execute_i32(&self, args: &[TensorArg]) -> Result<Vec<Vec<i32>>> {
         let out = match self.e.op {
             LayerOp::Conv3x3 | LayerOp::Conv1x1 => self.conv(args)?,
-            LayerOp::Linear => self.linear(args)?,
+            LayerOp::Linear | LayerOp::LinearSigned => self.linear(args)?,
             LayerOp::Add => self.add(args)?,
             LayerOp::AvgPool => self.avgpool(args)?,
         };
@@ -226,12 +229,37 @@ mod tests {
     }
 
     #[test]
-    fn zoo_covers_both_network_configs() {
+    fn zoo_covers_every_registry_network() {
         let b = backend();
         assert!(b.list_artifacts().len() >= 20);
         assert!(b.has_artifact("avgpool_h8_k64"));
         assert!(b.has_artifact("linear_ci64_co10_w8i8o8"));
+        // ResNet-18 (folded stem) and the signed KWS head are servable
+        assert!(b.has_artifact("conv3x3_h224_ci17_co64_s2_w4i4o4"));
+        assert!(b.has_artifact("linear_ci512_co1000_w4i4o8"));
+        assert!(b.has_artifact("linears_ci16_co12_w8i8o8"));
+        assert!(b.has_artifact("avgpool_h8_k16"));
         assert!(!b.has_artifact("no_such_artifact"));
+    }
+
+    /// The signed-head artifact keeps negative logits: zero input +
+    /// negative bias must floor-shift and clamp on the signed range, not
+    /// ReLU to 0.
+    #[test]
+    fn signed_head_dispatch_keeps_negative_logits() {
+        let name = "linears_ci16_co12_w8i8o8";
+        let exe = backend().compile(name).unwrap();
+        let shift = Manifest::builtin().get(name).unwrap().shift;
+        let args = vec![
+            TensorArg::new(vec![0i32; 16], vec![16]),
+            TensorArg::new(vec![0i32; 12 * 16], vec![12, 16]),
+            TensorArg::scalar_vec(vec![1i32; 12]),
+            TensorArg::scalar_vec(vec![-(1 << 20); 12]),
+        ];
+        let out = exe.execute_i32(&args).unwrap();
+        let want = ((-(1i64 << 20)) >> shift).clamp(-128, 127) as i32;
+        assert!(want < 0, "test premise: shift {shift} too large");
+        assert_eq!(out[0], vec![want; 12]);
     }
 
     #[test]

@@ -124,6 +124,17 @@ impl ConvPlan {
     pub fn is_packed(&self) -> bool {
         matches!(self.kernel, PlanKernel::Packed(_))
     }
+
+    /// Resident bytes of the staged operands: the packed bit-plane words
+    /// (or raw reference weights) plus the requant constants — what the
+    /// plan-cache eviction policy accounts per deployment.
+    pub fn bytes(&self) -> usize {
+        let kernel = match &self.kernel {
+            PlanKernel::Packed(pw) => pw.bytes(),
+            PlanKernel::Reference(w) => w.len() * 4,
+        };
+        kernel + (self.nq.scale.len() + self.nq.bias.len()) * 4
+    }
 }
 
 /// One layer of a deployed network, compiled into an immutable execution
@@ -149,7 +160,10 @@ impl LayerPlan {
         numerics: NativeNumerics,
     ) -> Result<Self> {
         match e.op {
-            LayerOp::Conv3x3 | LayerOp::Conv1x1 | LayerOp::Linear => {
+            LayerOp::Conv3x3
+            | LayerOp::Conv1x1
+            | LayerOp::Linear
+            | LayerOp::LinearSigned => {
                 let job = e.rbe_job()?;
                 if scale.len() != e.cout || bias.len() != e.cout {
                     bail!(
@@ -165,6 +179,7 @@ impl LayerPlan {
                     scale: scale.to_vec(),
                     bias: bias.to_vec(),
                     shift: e.shift,
+                    signed: e.op.signed_output(),
                 };
                 let kernel = if numerics.packed_for(&job) {
                     PlanKernel::Packed(pack_weights(&job, w)?)
@@ -192,6 +207,15 @@ impl LayerPlan {
             }),
         }
     }
+
+    /// Resident bytes of this layer's staged operands (elementwise plans
+    /// stage only a few scalars and account as 0).
+    pub fn bytes(&self) -> usize {
+        match self {
+            LayerPlan::Conv(c) => c.bytes(),
+            LayerPlan::Add { .. } | LayerPlan::AvgPool { .. } => 0,
+        }
+    }
 }
 
 /// One step of a compiled network: the schedulable layer plus its plan
@@ -207,15 +231,23 @@ pub struct PlanStep {
 /// (`Arc`) across batch worker threads.
 pub struct NetworkPlan {
     steps: Vec<PlanStep>,
+    bytes: usize,
 }
 
 impl NetworkPlan {
     pub fn new(steps: Vec<PlanStep>) -> Self {
-        Self { steps }
+        let bytes = steps.iter().map(|s| s.plan.bytes()).sum();
+        Self { steps, bytes }
     }
 
     pub fn steps(&self) -> &[PlanStep] {
         &self.steps
+    }
+
+    /// Total resident bytes of the staged operands across all layers —
+    /// the quantity the `Runtime` plan cache bounds with LRU eviction.
+    pub fn bytes(&self) -> usize {
+        self.bytes
     }
 }
 
@@ -258,11 +290,7 @@ mod tests {
         let e = quickstart_entry();
         let (x, w, scale, bias) = random_conv_inputs(&e, 99);
         let job = e.rbe_job().unwrap();
-        let nq = NormQuant {
-            scale: scale.clone(),
-            bias: bias.clone(),
-            shift: e.shift,
-        };
+        let nq = NormQuant::new(scale.clone(), bias.clone(), e.shift);
         let xt = trim_input(&x, e.full_side(), job.h_in(), e.cin);
         let want = conv_reference(&job, &xt, &w, &nq).unwrap();
         assert_eq!(want, conv_bitserial(&job, &xt, &w, &nq).unwrap());
@@ -310,6 +338,60 @@ mod tests {
                 "{numerics:?} accepted out-of-range weights"
             );
         }
+    }
+
+    /// Plan bytes equal the staged-operand footprint exactly: packed
+    /// bit-plane words (or raw reference weights) + requant constants.
+    #[test]
+    fn plan_bytes_account_staged_operands() {
+        let e = quickstart_entry();
+        let (_, w, scale, bias) = random_conv_inputs(&e, 8);
+        let nq_bytes = 2 * e.cout * 4;
+        let packed =
+            LayerPlan::compile(&e, &w, &scale, &bias, NativeNumerics::BitSerial)
+                .unwrap();
+        // Kout * ceil(Kin/32) * w_bits * 9 taps * 4 bytes/word
+        assert_eq!(packed.bytes(), 32 * 1 * 4 * 9 * 4 + nq_bytes);
+        let reference =
+            LayerPlan::compile(&e, &w, &scale, &bias, NativeNumerics::Reference)
+                .unwrap();
+        assert_eq!(reference.bytes(), w.len() * 4 + nq_bytes);
+        // elementwise plans account as 0
+        let add = Manifest::builtin().get("add_h8_k64_o4_sh1").unwrap().clone();
+        let plan =
+            LayerPlan::compile(&add, &[], &[], &[], NativeNumerics::Auto)
+                .unwrap();
+        assert_eq!(plan.bytes(), 0);
+        // and the network roll-up is the sum over steps
+        let np = NetworkPlan::new(vec![
+            PlanStep { layer: quickstart_test_layer(), plan: packed, setup_us: 0.0 },
+            PlanStep { layer: quickstart_test_layer(), plan, setup_us: 0.0 },
+        ]);
+        assert_eq!(np.bytes(), 32 * 4 * 9 * 4 + nq_bytes);
+    }
+
+    fn quickstart_test_layer() -> crate::dnn::Layer {
+        crate::dnn::quickstart_layer()
+    }
+
+    /// A `linears` manifest entry compiles to a signed-clip plan: zero
+    /// activations with a negative bias stay negative instead of
+    /// ReLU-clipping to 0.
+    #[test]
+    fn signed_head_plan_keeps_negative_logits() {
+        let m = Manifest::builtin();
+        let e = m.get("linears_ci16_co12_w8i8o8").unwrap();
+        let w = vec![0i32; 12 * 16];
+        let scale = vec![1i32; 12];
+        let bias = vec![-(1 << 20); 12];
+        let plan =
+            LayerPlan::compile(e, &w, &scale, &bias, NativeNumerics::Auto)
+                .unwrap();
+        let LayerPlan::Conv(c) = &plan else { panic!() };
+        let out = c.run(&vec![0i32; 16]).unwrap();
+        let want = ((-(1i64 << 20)) >> e.shift).clamp(-128, 127) as i32;
+        assert!(want < 0);
+        assert_eq!(out, vec![want; 12]);
     }
 
     #[test]

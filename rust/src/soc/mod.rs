@@ -7,7 +7,7 @@
 //!   against (`crate::cluster::ClusterConfig::soc_controller`);
 //! * L2 storage (lives in [`crate::cluster::Tcdm`], shared address space);
 //! * the analytical L3 (HyperRAM) transfer model
-//!   ([`crate::cluster::dma::IoDma`]) used by the DORY tiler for the
+//!   ([`crate::cluster::IoDma`]) used by the DORY tiler for the
 //!   off-chip rows of Figs. 17–18.
 
 mod clocks;

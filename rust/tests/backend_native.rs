@@ -96,7 +96,7 @@ fn tower_parity_native_vs_bitserial() {
         }
         .unwrap();
         let xt = trim_input(&x, full, job.h_in(), cin);
-        let nq = NormQuant { scale, bias, shift };
+        let nq = NormQuant::new(scale, bias, shift);
         let want = conv_bitserial(&job, &xt, &w, &nq).unwrap();
         assert_eq!(got[0], want, "{}", l.name);
     }
@@ -124,7 +124,7 @@ fn linear_parity_native_vs_bitserial() {
         ])
         .unwrap();
     let job = RbeJob::conv1x1(1, 1, 64, 10, 1, 8, 8, 8).unwrap();
-    let nq = NormQuant { scale, bias, shift };
+    let nq = NormQuant::new(scale, bias, shift);
     assert_eq!(got[0], conv_bitserial(&job, &x, &w, &nq).unwrap());
 }
 

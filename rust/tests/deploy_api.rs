@@ -1,0 +1,198 @@
+//! Deployment-API acceptance: every registry network — including
+//! ResNet-18 (previously schedule-report-only) and the signed-head KWS
+//! net — serves end-to-end through `Coordinator::deploy` →
+//! `Deployment::{infer, infer_batch, profile}`, bitwise identical
+//! across batch sizes and 1/4/16 worker threads, and bitwise
+//! reproducible across coordinator instances.
+
+#![cfg(feature = "native")]
+
+use marsellus::coordinator::Coordinator;
+use marsellus::dnn::{NetworkSpec, PrecisionConfig};
+use marsellus::power::OperatingPoint;
+use marsellus::runtime::Runtime;
+use marsellus::util::Rng;
+
+fn coordinator() -> Coordinator {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    let rt = Runtime::native(&dir).expect("native runtime");
+    Coordinator::with_runtime(rt).expect("coordinator")
+}
+
+fn op() -> OperatingPoint {
+    OperatingPoint::at_vdd(0.8)
+}
+
+/// The signed-head KWS network end to end, both configs: logits stay in
+/// the signed 8-bit range, go negative (ReLU would forbid that — this
+/// is `NormQuant::apply_signed` exercised through a served network),
+/// and the plan path matches the per-call path bit for bit.
+#[test]
+fn kws_signed_head_serves_end_to_end() {
+    let coord = coordinator();
+    for config in [PrecisionConfig::Uniform8, PrecisionConfig::Mixed] {
+        let spec = NetworkSpec::new("kws", config, 77);
+        let d = coord.deploy(&spec).unwrap();
+        assert_eq!(d.input_dims(), (16, 8));
+        let mut rng = Rng::new(20);
+        let inputs: Vec<Vec<i32>> =
+            (0..6).map(|_| d.random_input(&mut rng)).collect();
+
+        let planned = d.infer_batch(&op(), &inputs, 1).unwrap();
+        let per_call = d.infer_batch_opts(&op(), &inputs, 1, false).unwrap();
+        let mut saw_negative = false;
+        for (i, (a, b)) in planned.iter().zip(&per_call).enumerate() {
+            assert_eq!(
+                a.logits, b.logits,
+                "{config:?} input {i}: plan vs per-call"
+            );
+            assert_eq!(a.logits.len(), 12);
+            assert!(a.logits.iter().all(|&v| (-128..=127).contains(&v)));
+            saw_negative |= a.logits.iter().any(|&v| v < 0);
+        }
+        assert!(
+            saw_negative,
+            "{config:?}: no negative logit in {} inputs — the signed \
+             head is not being exercised",
+            inputs.len()
+        );
+        // bitwise identical across 1/4/16 worker threads
+        for threads in [4usize, 16] {
+            let got = d.infer_batch(&op(), &inputs, threads).unwrap();
+            for (a, b) in planned.iter().zip(&got) {
+                assert_eq!(a.logits, b.logits, "{config:?} {threads} threads");
+            }
+        }
+        // profile covers every layer, head included
+        let split = d.profile(&inputs[0]).unwrap();
+        assert_eq!(split.len(), d.layers().len());
+        assert!(split.iter().any(|l| l.name == "head"));
+    }
+}
+
+/// ResNet-18 goes from schedule-report-only to fully served: deployed
+/// through the same handle API as ResNet-20, 1000 logits, bitwise
+/// identical across batch sizes and 1/4/16 worker threads, and the
+/// plan path equals the per-call backend path.
+#[test]
+fn resnet18_serves_end_to_end() {
+    let coord = coordinator();
+    let spec = NetworkSpec::new("resnet18", PrecisionConfig::Mixed, 42);
+    let d = coord.deploy(&spec).unwrap();
+    assert_eq!(d.input_dims(), (224, 17));
+    assert_eq!(d.input_bits(), 4);
+    let mut rng = Rng::new(21);
+    let images: Vec<Vec<i32>> =
+        (0..2).map(|_| d.random_input(&mut rng)).collect();
+
+    let base = d.infer_batch(&op(), &images, 1).unwrap();
+    assert_eq!(base.len(), 2);
+    for r in &base {
+        assert_eq!(r.logits.len(), 1000);
+        assert!(r.logits.iter().all(|&v| (0..256).contains(&v)));
+    }
+    assert_ne!(base[0].logits, base[1].logits, "degenerate forward");
+
+    // batch-size independence: solo infer equals the batch member
+    let solo = d.infer(&op(), &images[0]).unwrap();
+    assert_eq!(solo.logits, base[0].logits, "batch=1 vs batch=2");
+
+    // thread-count independence across the acceptance matrix
+    for threads in [4usize, 16] {
+        let got = d.infer_batch(&op(), &images, threads).unwrap();
+        for (i, (a, b)) in base.iter().zip(&got).enumerate() {
+            assert_eq!(a.logits, b.logits, "image {i}, {threads} threads");
+        }
+    }
+
+    // the precompiled plan equals per-call backend execution bit for bit
+    let per_call =
+        d.infer_batch_opts(&op(), &images[..1], 1, false).unwrap();
+    assert_eq!(per_call[0].logits, base[0].logits, "plan vs per-call");
+
+    // the timing report is the familiar Table II magnitude (~tens of ms
+    // at 0.5 V; at 0.8 V just assert it is far heavier than ResNet-20)
+    let r20 = coord
+        .deploy(&NetworkSpec::new("resnet20", PrecisionConfig::Mixed, 42))
+        .unwrap();
+    let rep18 = d.report(&op()).unwrap();
+    let rep20 = r20.report(&op()).unwrap();
+    assert!(
+        rep18.total_latency_us() > 10.0 * rep20.total_latency_us(),
+        "{} vs {}",
+        rep18.total_latency_us(),
+        rep20.total_latency_us()
+    );
+}
+
+/// Deployments are bitwise reproducible across coordinator instances:
+/// the spec alone determines the weights, the plan, and the logits.
+#[test]
+fn deployments_reproduce_across_coordinators() {
+    let spec = NetworkSpec::new("kws", PrecisionConfig::Mixed, 5);
+    let mut rng = Rng::new(30);
+    let input = {
+        let coord = coordinator();
+        coord.deploy(&spec).unwrap().random_input(&mut rng)
+    };
+    let mut logits = Vec::new();
+    for _ in 0..2 {
+        let coord = coordinator();
+        let d = coord.deploy(&spec).unwrap();
+        logits.push(d.infer(&op(), &input).unwrap().logits);
+    }
+    assert_eq!(logits[0], logits[1]);
+}
+
+/// Cross-check layer names must match a conv layer: a typo (or a
+/// non-conv layer) errors instead of silently verifying nothing.
+#[test]
+fn cross_check_validates_layer_names() {
+    let coord = coordinator();
+    let d = coord
+        .deploy(&NetworkSpec::new("kws", PrecisionConfig::Mixed, 2))
+        .unwrap();
+    let mut rng = Rng::new(33);
+    let input = d.random_input(&mut rng);
+    // valid conv layer: runs and really checks it
+    let ok = d.infer_cross_checked(&op(), &input, &["stem"]).unwrap();
+    assert_eq!(ok.cross_checked, 1);
+    // typo and non-conv head both fail loudly, naming the candidates
+    for bad in ["stemm", "head"] {
+        let err = d
+            .infer_cross_checked(&op(), &input, &[bad])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(bad), "{err}");
+        assert!(err.contains("stem") && err.contains("body"), "{err}");
+    }
+}
+
+/// Spec resolution fails loudly: unknown ids name the known registry.
+#[test]
+fn unknown_network_is_a_clean_error() {
+    let coord = coordinator();
+    let err = coord
+        .deploy(&NetworkSpec::new("resnet50", PrecisionConfig::Mixed, 0))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("resnet50"), "{err}");
+    assert!(err.contains("resnet20") && err.contains("kws"), "{err}");
+}
+
+/// The scheduler report is memoized per operating point but correct
+/// across op changes.
+#[test]
+fn report_memo_tracks_operating_point() {
+    let coord = coordinator();
+    let d = coord
+        .deploy(&NetworkSpec::new("kws", PrecisionConfig::Uniform8, 1))
+        .unwrap();
+    let nominal = d.report(&OperatingPoint::at_vdd(0.8)).unwrap();
+    let again = d.report(&OperatingPoint::at_vdd(0.8)).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&nominal, &again), "memo not reused");
+    let low = d.report(&OperatingPoint::at_vdd(0.5)).unwrap();
+    assert!(low.total_latency_us() > nominal.total_latency_us());
+    assert!(low.total_energy_uj() < nominal.total_energy_uj());
+}

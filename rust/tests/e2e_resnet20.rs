@@ -3,9 +3,13 @@
 //! configurations.
 //!
 //! Runs against the native backend, so no `make artifacts` is needed —
-//! the coordinator falls back to the built-in layer zoo.
+//! the coordinator falls back to the built-in layer zoo. Exercises the
+//! deprecated `infer_resnet20` wrapper on purpose: this file is the
+//! regression suite for the legacy surface (the deployment API has its
+//! own, `tests/deploy_api.rs`).
 
 #![cfg(feature = "native")]
+#![allow(deprecated)]
 
 use marsellus::coordinator::{random_image, Coordinator};
 use marsellus::dnn::PrecisionConfig;
@@ -126,26 +130,27 @@ fn operating_point_scaling() {
 }
 
 /// PJRT-era regression guard: when AOT artifacts *are* on disk, the
-/// manifest they ship must agree with the built-in zoo the native
-/// backend executes. Skips cleanly (via `Runtime::has_artifact` +
-/// manifest presence) when `make artifacts` has not run.
+/// manifest they ship must agree with the AOT subset of the built-in
+/// zoo (`Manifest::aot_zoo` — exactly what `aot.py` lowers; the other
+/// registry networks are Rust-builtin only and have no python mirror).
+/// Skips cleanly when `make artifacts` has not run.
 #[test]
-fn on_disk_artifacts_match_builtin_zoo() {
+fn on_disk_artifacts_match_aot_zoo() {
     let dir = artifacts_dir();
     if !dir.join("manifest.tsv").exists() {
         eprintln!("SKIP: artifacts missing; run `make artifacts`");
         return;
     }
     let rt = Runtime::native(&dir).expect("native runtime");
-    let builtin = marsellus::dnn::Manifest::builtin();
+    let aot = marsellus::dnn::Manifest::aot_zoo();
     let disk = marsellus::dnn::Manifest::load(&dir).unwrap();
-    for name in builtin.names() {
-        // aot.py writes a row for every zoo spec: a missing row means
-        // the python and rust layer zoos have drifted apart
+    for name in aot.names() {
+        // aot.py writes a row for every python-lowered spec: a missing
+        // row means the python and rust layer zoos have drifted apart
         let d = disk
             .get(&name)
             .unwrap_or_else(|| panic!("disk manifest has no row for {name}"));
-        assert_eq!(d, builtin.get(&name).unwrap(), "signature drift for {name}");
+        assert_eq!(d, aot.get(&name).unwrap(), "signature drift for {name}");
         if !rt.artifact_file_exists(&name) {
             eprintln!("SKIP: {name}.hlo.txt not on disk (partial build)");
         }

@@ -1,13 +1,15 @@
-//! Batch-serving determinism: `Coordinator::infer_batch` must produce
-//! bitwise-identical logits regardless of batch size or worker-thread
-//! count (acceptance criterion: batch=1 vs batch=8 on the same seed),
-//! and the precompiled-LayerPlan parallel path must be bitwise identical
-//! to sequential per-call execution across 1/4/16 worker threads.
+//! Batch-serving determinism through the deployment API:
+//! `Deployment::infer_batch` must produce bitwise-identical logits
+//! regardless of batch size or worker-thread count (batch=1 vs batch=8
+//! on the same spec), and the precompiled-plan parallel path must be
+//! bitwise identical to sequential per-call execution across 1/4/16
+//! worker threads. The deprecated `Coordinator::*_resnet20` wrappers are
+//! pinned to the handle path they delegate to.
 
 #![cfg(feature = "native")]
 
-use marsellus::coordinator::{random_image, Coordinator};
-use marsellus::dnn::PrecisionConfig;
+use marsellus::coordinator::Coordinator;
+use marsellus::dnn::{NetworkSpec, PrecisionConfig};
 use marsellus::power::OperatingPoint;
 use marsellus::runtime::Runtime;
 use marsellus::util::Rng;
@@ -19,35 +21,35 @@ fn coordinator() -> Coordinator {
     Coordinator::with_runtime(rt).expect("coordinator")
 }
 
+fn spec(config: PrecisionConfig, seed: u64) -> NetworkSpec {
+    NetworkSpec::new("resnet20", config, seed)
+}
+
 #[test]
 fn batch_of_1_equals_batch_of_8() {
     let coord = coordinator();
     let op = OperatingPoint::at_vdd(0.8);
+    let d = coord.deploy(&spec(PrecisionConfig::Mixed, 42)).unwrap();
     let mut rng = Rng::new(10);
     let images: Vec<Vec<i32>> =
-        (0..8).map(|_| random_image(8, &mut rng)).collect();
+        (0..8).map(|_| d.random_input(&mut rng)).collect();
 
-    // batch of 8 across 4 threads, same seed (= same deployed weights)
-    let batch = coord
-        .infer_batch(PrecisionConfig::Mixed, &op, &images, 42, 4)
-        .unwrap();
+    // batch of 8 across 4 threads against the one deployed model
+    let batch = d.infer_batch(&op, &images, 4).unwrap();
     assert_eq!(batch.len(), 8);
 
     // every image individually (batch of 1, single-threaded)
     for (i, img) in images.iter().enumerate() {
-        let solo = coord
-            .infer_batch(
-                PrecisionConfig::Mixed,
-                &op,
-                std::slice::from_ref(img),
-                42,
-                1,
-            )
+        let solo = d
+            .infer_batch(&op, std::slice::from_ref(img), 1)
             .unwrap();
         assert_eq!(
             solo[0].logits, batch[i].logits,
             "image {i}: batch=1 vs batch=8 logits diverged"
         );
+        // and the single-input entry point agrees with both
+        let one = d.infer(&op, img).unwrap();
+        assert_eq!(one.logits, batch[i].logits, "image {i}: infer diverged");
     }
 }
 
@@ -55,24 +57,19 @@ fn batch_of_1_equals_batch_of_8() {
 fn thread_count_does_not_change_results() {
     let coord = coordinator();
     let op = OperatingPoint::at_vdd(0.8);
+    let d = coord.deploy(&spec(PrecisionConfig::Uniform8, 7)).unwrap();
     let mut rng = Rng::new(11);
     let images: Vec<Vec<i32>> =
-        (0..5).map(|_| random_image(8, &mut rng)).collect();
-    let base = coord
-        .infer_batch(PrecisionConfig::Uniform8, &op, &images, 7, 1)
-        .unwrap();
+        (0..5).map(|_| d.random_input(&mut rng)).collect();
+    let base = d.infer_batch(&op, &images, 1).unwrap();
     for threads in [2, 3, 8] {
-        let got = coord
-            .infer_batch(PrecisionConfig::Uniform8, &op, &images, 7, threads)
-            .unwrap();
+        let got = d.infer_batch(&op, &images, threads).unwrap();
         for (a, b) in base.iter().zip(&got) {
             assert_eq!(a.logits, b.logits, "{threads} threads");
         }
     }
     // oversubscription beyond the batch size is clamped, not an error
-    let clamped = coord
-        .infer_batch(PrecisionConfig::Uniform8, &op, &images[..2], 7, 64)
-        .unwrap();
+    let clamped = d.infer_batch(&op, &images[..2], 64).unwrap();
     assert_eq!(clamped.len(), 2);
     assert_eq!(clamped[0].logits, base[0].logits);
 }
@@ -82,45 +79,39 @@ fn batch_shares_one_compile_cache() {
     // the per-call (pre-plan) path exercises the artifact compile cache
     let coord = coordinator();
     let op = OperatingPoint::at_vdd(0.8);
+    let d = coord.deploy(&spec(PrecisionConfig::Mixed, 1)).unwrap();
     let mut rng = Rng::new(12);
     let images: Vec<Vec<i32>> =
-        (0..4).map(|_| random_image(8, &mut rng)).collect();
+        (0..4).map(|_| d.random_input(&mut rng)).collect();
     // warm the cache sequentially (no compile races), then fan out
-    coord
-        .infer_batch_opts(PrecisionConfig::Mixed, &op, &images[..1], 1, 1, false)
-        .unwrap();
+    d.infer_batch_opts(&op, &images[..1], 1, false).unwrap();
     // the mixed net has 13 distinct artifact names (repeated residual
     // blocks share executables — that's the point of the cache)
     let distinct = coord.runtime.cached_executables() as u64;
     assert!(distinct >= 12, "{distinct} executables cached");
     assert_eq!(coord.runtime.cache_misses(), distinct);
 
-    coord
-        .infer_batch_opts(PrecisionConfig::Mixed, &op, &images, 1, 4, false)
-        .unwrap();
+    d.infer_batch_opts(&op, &images, 4, false).unwrap();
     // warm cache: the threaded batch must compile nothing new
     assert_eq!(coord.runtime.cache_misses(), distinct, "cache not shared");
     assert!(coord.runtime.cache_hits() > coord.runtime.cache_misses());
 }
 
-/// Acceptance criterion of the LayerPlan PR: the parallel plan-driven
-/// native path is bitwise identical to sequential per-call execution,
-/// across 1, 4 and 16 worker threads.
+/// Acceptance criterion of the LayerPlan PR, restated over the handle
+/// API: the parallel plan-driven native path is bitwise identical to
+/// sequential per-call execution, across 1, 4 and 16 worker threads.
 #[test]
 fn parallel_plan_path_matches_sequential_per_call_path() {
     let coord = coordinator();
     let op = OperatingPoint::at_vdd(0.8);
+    let d = coord.deploy(&spec(PrecisionConfig::Mixed, 5)).unwrap();
     let mut rng = Rng::new(13);
     let images: Vec<Vec<i32>> =
-        (0..3).map(|_| random_image(8, &mut rng)).collect();
+        (0..3).map(|_| d.random_input(&mut rng)).collect();
     // pre-plan baseline: sequential, per-call backend execution
-    let base = coord
-        .infer_batch_opts(PrecisionConfig::Mixed, &op, &images, 5, 1, false)
-        .unwrap();
+    let base = d.infer_batch_opts(&op, &images, 1, false).unwrap();
     for threads in [1usize, 4, 16] {
-        let got = coord
-            .infer_batch(PrecisionConfig::Mixed, &op, &images, 5, threads)
-            .unwrap();
+        let got = d.infer_batch(&op, &images, threads).unwrap();
         for (i, (a, b)) in base.iter().zip(&got).enumerate() {
             assert_eq!(
                 a.logits, b.logits,
@@ -129,42 +120,37 @@ fn parallel_plan_path_matches_sequential_per_call_path() {
             );
         }
     }
-    // the plan path never touched the per-artifact compile cache beyond
-    // what the baseline compiled
     assert_eq!(coord.runtime.plan_builds(), 1, "one deployment, one plan");
 }
 
-/// Plan caching: repeated execution of the same deployment reuses the
-/// compiled plan (no rebuild) and yields identical logits; a different
-/// weight seed is a different deployment and compiles a fresh plan.
+/// Plan caching: re-deploying the same spec reuses the compiled plan
+/// (no rebuild) and yields identical logits; a different weight seed is
+/// a different deployment and compiles a fresh plan.
 #[test]
-fn plan_cache_reused_across_repeated_executes() {
+fn plan_cache_reused_across_repeated_deploys() {
     let coord = coordinator();
     let op = OperatingPoint::at_vdd(0.8);
+    let d = coord.deploy(&spec(PrecisionConfig::Uniform8, 9)).unwrap();
     let mut rng = Rng::new(14);
     let images: Vec<Vec<i32>> =
-        (0..2).map(|_| random_image(8, &mut rng)).collect();
-    let a = coord
-        .infer_batch(PrecisionConfig::Uniform8, &op, &images, 9, 2)
-        .unwrap();
+        (0..2).map(|_| d.random_input(&mut rng)).collect();
+    let a = d.infer_batch(&op, &images, 2).unwrap();
     assert_eq!(coord.runtime.plan_builds(), 1);
     assert_eq!(coord.runtime.cached_plans(), 1);
-    let b = coord
-        .infer_batch(PrecisionConfig::Uniform8, &op, &images, 9, 2)
-        .unwrap();
+    let d2 = coord.deploy(&spec(PrecisionConfig::Uniform8, 9)).unwrap();
+    let b = d2.infer_batch(&op, &images, 2).unwrap();
     assert_eq!(
         coord.runtime.plan_builds(),
         1,
-        "second execute of the same deployment rebuilt the plan"
+        "re-deploying the same spec rebuilt the plan"
     );
     assert!(coord.runtime.plan_hits() >= 1);
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.logits, y.logits, "cached plan changed the logits");
     }
     // a new seed deploys new weights: fresh plan, (almost surely) new logits
-    let c = coord
-        .infer_batch(PrecisionConfig::Uniform8, &op, &images, 10, 2)
-        .unwrap();
+    let d3 = coord.deploy(&spec(PrecisionConfig::Uniform8, 10)).unwrap();
+    let c = d3.infer_batch(&op, &images, 2).unwrap();
     assert_eq!(coord.runtime.plan_builds(), 2);
     assert_ne!(a[0].logits, c[0].logits);
 }
@@ -172,14 +158,37 @@ fn plan_cache_reused_across_repeated_executes() {
 #[test]
 fn empty_batch_is_ok() {
     let coord = coordinator();
-    let out = coord
-        .infer_batch(
-            PrecisionConfig::Mixed,
-            &OperatingPoint::at_vdd(0.8),
-            &[],
-            42,
-            4,
-        )
+    let d = coord.deploy(&spec(PrecisionConfig::Mixed, 42)).unwrap();
+    let out = d
+        .infer_batch(&OperatingPoint::at_vdd(0.8), &[], 4)
         .unwrap();
     assert!(out.is_empty());
+}
+
+/// The deprecated `Coordinator::{infer_batch, infer_resnet20}` wrappers
+/// stay bitwise equal to the handle API they delegate to.
+#[test]
+#[allow(deprecated)]
+fn legacy_wrappers_match_deployment_api() {
+    let coord = coordinator();
+    let op = OperatingPoint::at_vdd(0.8);
+    let d = coord.deploy(&spec(PrecisionConfig::Mixed, 3)).unwrap();
+    let mut rng = Rng::new(15);
+    let images: Vec<Vec<i32>> =
+        (0..2).map(|_| d.random_input(&mut rng)).collect();
+    let new = d.infer_batch(&op, &images, 2).unwrap();
+    let old = coord
+        .infer_batch(PrecisionConfig::Mixed, &op, &images, 3, 2)
+        .unwrap();
+    for (a, b) in new.iter().zip(&old) {
+        assert_eq!(a.logits, b.logits);
+    }
+    let solo = coord
+        .infer_resnet20(PrecisionConfig::Mixed, &op, &images[0], 3, &[])
+        .unwrap();
+    assert_eq!(solo.logits, new[0].logits);
+    let split = coord
+        .profile_resnet20(PrecisionConfig::Mixed, &images[0], 3)
+        .unwrap();
+    assert_eq!(split.len(), d.layers().len());
 }

@@ -1,0 +1,157 @@
+//! Plan-cache eviction: fill the bounded multi-tenant cache past its
+//! byte budget with distinct `NetworkSpec` deployments and assert LRU
+//! victims, byte accounting, and that a re-deployed evictee rebuilds
+//! bit-identically (ISSUE 3 satellite).
+
+#![cfg(feature = "native")]
+
+use marsellus::coordinator::Coordinator;
+use marsellus::dnn::{NetworkSpec, PrecisionConfig};
+use marsellus::power::OperatingPoint;
+use marsellus::runtime::Runtime;
+use marsellus::util::Rng;
+
+fn coordinator() -> Coordinator {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    let rt = Runtime::native(&dir).expect("native runtime");
+    Coordinator::with_runtime(rt).expect("coordinator")
+}
+
+fn kws(seed: u64) -> NetworkSpec {
+    NetworkSpec::new("kws", PrecisionConfig::Mixed, seed)
+}
+
+fn op() -> OperatingPoint {
+    OperatingPoint::at_vdd(0.8)
+}
+
+/// LRU eviction under a byte budget sized for two tenants: the
+/// least-recently-*used* deployment is the victim (not the
+/// least-recently-built one), bytes are accounted down on eviction, and
+/// the resident set stays under budget.
+#[test]
+fn lru_eviction_respects_budget_and_recency() {
+    let coord = coordinator();
+    let rt = &coord.runtime;
+
+    // measure one tenant's plan footprint, then budget for two
+    coord.deploy(&kws(1)).unwrap();
+    let one = rt.plan_bytes();
+    assert!(one > 0, "plans must account bytes");
+    assert_eq!(rt.cached_plans(), 1);
+    let budget = 2 * one + one / 2;
+    rt.set_plan_cache_budget(budget);
+
+    coord.deploy(&kws(2)).unwrap();
+    assert_eq!(rt.cached_plans(), 2);
+    assert_eq!(rt.plan_evictions(), 0);
+    assert_eq!(rt.plan_bytes(), 2 * one, "two identical-shape tenants");
+
+    // touch tenant 1 so tenant 2 becomes the LRU victim
+    coord.deploy(&kws(1)).unwrap();
+    assert_eq!(rt.plan_builds(), 2, "touching must not rebuild");
+
+    coord.deploy(&kws(3)).unwrap();
+    assert_eq!(rt.plan_evictions(), 1, "third tenant exceeds the budget");
+    assert_eq!(rt.cached_plans(), 2);
+    assert!(rt.plan_bytes() <= budget, "{} > {budget}", rt.plan_bytes());
+    let resident: Vec<u64> = rt
+        .cached_plan_specs()
+        .into_iter()
+        .map(|s| s.seed)
+        .collect();
+    assert!(resident.contains(&1), "recently-used tenant evicted");
+    assert!(resident.contains(&3), "fresh tenant evicted");
+    assert!(!resident.contains(&2), "LRU tenant survived");
+}
+
+/// A re-deployed evictee rebuilds bit-identically: eviction is a pure
+/// memory policy, never a numerics event.
+#[test]
+fn evicted_deployment_rebuilds_bit_identically() {
+    let coord = coordinator();
+    let rt = &coord.runtime;
+    let mut rng = Rng::new(40);
+
+    let d1 = coord.deploy(&kws(1)).unwrap();
+    let inputs: Vec<Vec<i32>> =
+        (0..3).map(|_| d1.random_input(&mut rng)).collect();
+    let before: Vec<Vec<i32>> = d1
+        .infer_batch(&op(), &inputs, 2)
+        .unwrap()
+        .into_iter()
+        .map(|r| r.logits)
+        .collect();
+
+    // budget for one tenant only: deploying tenant 2 evicts tenant 1
+    rt.set_plan_cache_budget(rt.plan_bytes() + 1);
+    coord.deploy(&kws(2)).unwrap();
+    assert_eq!(rt.plan_evictions(), 1);
+    assert!(!rt.cached_plan_specs().iter().any(|s| s.seed == 1));
+
+    // re-deploy the evictee: fresh compile, identical logits
+    let builds = rt.plan_builds();
+    let d1_again = coord.deploy(&kws(1)).unwrap();
+    assert_eq!(rt.plan_builds(), builds + 1, "evictee must recompile");
+    let after: Vec<Vec<i32>> = d1_again
+        .infer_batch(&op(), &inputs, 2)
+        .unwrap()
+        .into_iter()
+        .map(|r| r.logits)
+        .collect();
+    assert_eq!(before, after, "rebuilt plan changed the numerics");
+}
+
+/// A single deployment larger than the whole budget is kept resident:
+/// the bound sheds *other* tenants, it never refuses to serve the one
+/// active deployment.
+#[test]
+fn oversize_single_tenant_is_still_served() {
+    let coord = coordinator();
+    let rt = &coord.runtime;
+    rt.set_plan_cache_budget(1);
+
+    let d = coord.deploy(&kws(9)).unwrap();
+    assert_eq!(rt.cached_plans(), 1);
+    assert_eq!(rt.plan_evictions(), 0, "sole resident must not be evicted");
+    assert!(rt.plan_bytes() > rt.plan_cache_budget());
+    let mut rng = Rng::new(41);
+    let input = d.random_input(&mut rng);
+    assert_eq!(d.infer(&op(), &input).unwrap().logits.len(), 12);
+
+    // a second tenant displaces the first immediately (LRU), keeping
+    // exactly one resident
+    coord.deploy(&kws(10)).unwrap();
+    assert_eq!(rt.cached_plans(), 1);
+    assert_eq!(rt.plan_evictions(), 1);
+    assert_eq!(rt.cached_plan_specs()[0].seed, 10);
+}
+
+/// Multi-tenant churn: many distinct deployments stream through a
+/// two-tenant budget; the cache never exceeds it (after the sweep) and
+/// every tenant still serves correct logits on arrival.
+#[test]
+fn many_tenants_stay_under_the_bound() {
+    let coord = coordinator();
+    let rt = &coord.runtime;
+    coord.deploy(&kws(0)).unwrap();
+    let one = rt.plan_bytes();
+    let budget = 2 * one + one / 2;
+    rt.set_plan_cache_budget(budget);
+
+    let mut rng = Rng::new(42);
+    for seed in 1..=8u64 {
+        let d = coord.deploy(&kws(seed)).unwrap();
+        let input = d.random_input(&mut rng);
+        assert_eq!(d.infer(&op(), &input).unwrap().logits.len(), 12);
+        assert!(
+            rt.plan_bytes() <= budget,
+            "seed {seed}: {} resident > {budget} budget",
+            rt.plan_bytes()
+        );
+        assert!(rt.cached_plans() <= 2);
+    }
+    assert_eq!(rt.plan_builds(), 9);
+    assert_eq!(rt.plan_evictions(), 7);
+}

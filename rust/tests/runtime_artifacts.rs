@@ -92,7 +92,7 @@ fn three_way_equivalence_quickstart() {
                 TensorArg::scalar_vec(bias.clone()),
             ])
             .unwrap();
-        let nq = NormQuant { scale, bias, shift: shift as u32 };
+        let nq = NormQuant::new(scale, bias, shift as u32);
         let bit = conv_bitserial(&job, &x, &w, &nq).unwrap();
         let oracle = conv_reference(&job, &x, &w, &nq).unwrap();
         assert_eq!(bit, oracle, "trial {trial}: bit-serial vs oracle");
@@ -145,7 +145,7 @@ fn strided_conv1x1_matches_datapath() {
         .unwrap();
     // NOTE: the artifact gathers x[::2, ::2] of the *full* input, i.e.
     // h_out = ceil(h/2); the functional model must match.
-    let nq = NormQuant { scale, bias, shift: e.shift };
+    let nq = NormQuant::new(scale, bias, e.shift);
     // the job expects the strided input extent: (h_out-1)*stride + 1 rows
     let need = (job.h_out - 1) * job.stride + 1;
     let mut xs = Vec::with_capacity(need * need * e.cin);
