@@ -3,7 +3,9 @@
 
 Each CI bench-smoke run on the main branch appends a single JSON line
 to ``ci/BENCH_history.jsonl`` — commit, mode, and the machine-independent
-throughput ratios (plus the raw img/s figures for context). The history
+ratios from both gated sections: throughput (``speedup_planned`` /
+``speedup_parallel`` plus raw img/s context) and single-image latency
+(``speedup_tile`` plus ``latency_*`` ms/thread context). The history
 turns ``check_bench.py``'s >20% gate into a *trajectory* check: with
 ``--history``, the gate compares against the median of the recent
 entries instead of a single frozen point, so a slowly-eroding hot path
@@ -20,17 +22,28 @@ rows or reorder the trajectory).
 import json
 import sys
 
-# Keys copied from the fresh run's "throughput" object into the history
-# row. The speedup_* ratios are the gated, machine-independent signal;
-# the rest is context for reading the trajectory.
-RECORDED_KEYS = [
-    "speedup_planned",
-    "speedup_parallel",
-    "per_call_img_s",
-    "planned_img_s",
-    "parallel_img_s",
-    "threads",
-]
+# Keys copied from the fresh run into the history row, per section.
+# The speedup_* ratios are the gated, machine-independent signal; the
+# rest is context for reading the trajectory. Latency context keys are
+# prefixed so they cannot collide with throughput keys; the gated
+# "speedup_tile" ratio keeps its exact name (check_bench.py looks the
+# trajectory up by flat key).
+RECORDED = {
+    "throughput": {
+        "speedup_planned": "speedup_planned",
+        "speedup_parallel": "speedup_parallel",
+        "per_call_img_s": "per_call_img_s",
+        "planned_img_s": "planned_img_s",
+        "parallel_img_s": "parallel_img_s",
+        "threads": "threads",
+    },
+    "latency": {
+        "speedup_tile": "speedup_tile",
+        "seq_ms": "latency_seq_ms",
+        "tile_ms": "latency_tile_ms",
+        "threads": "latency_threads",
+    },
+}
 
 
 def read_history(path):
@@ -60,10 +73,12 @@ def append(fresh_path, history_path, commit):
         return 0
 
     row = {"commit": commit, "mode": fresh.get("mode", "unknown")}
-    for key in RECORDED_KEYS:
-        v = thr.get(key)
-        if isinstance(v, (int, float)) and not isinstance(v, bool):
-            row[key] = round(float(v), 4)
+    for section, keys in RECORDED.items():
+        sec = fresh.get(section, {})
+        for key, name in keys.items():
+            v = sec.get(key)
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                row[name] = round(float(v), 4)
     with open(history_path, "a") as f:
         f.write(json.dumps(row, sort_keys=True) + "\n")
     print(f"recorded {commit} ({len(rows) + 1} entries)")

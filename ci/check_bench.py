@@ -1,16 +1,20 @@
 #!/usr/bin/env python3
-"""Gate bench-smoke on the committed throughput baseline / trajectory.
+"""Gate bench-smoke on the committed throughput/latency baseline.
 
 Compares a freshly produced BENCH json (``cargo bench -- --smoke --json
 BENCH_ci.json``) against the committed baseline and fails when any
 baseline metric regresses by more than the tolerance (default 20%).
 
-Absolute images/s varies with runner hardware, so the committed baseline
-pins *machine-independent ratios* (LayerPlan and worker-pool speedups
-over the pre-plan per-call path). Every numeric key present in the
-baseline's ``throughput`` object is compared as higher-is-better; keys
-present only in the fresh results (e.g. the raw img/s numbers) are
-reported for the log but not gated.
+Two sections are gated the same way: ``throughput`` (batch serving,
+images/s) and ``latency`` (single-image wall clock, sequential vs the
+tile-parallel latency mode). Absolute images/s and milliseconds vary
+with runner hardware, so the committed baseline pins
+*machine-independent ratios* (the LayerPlan / worker-pool speedups over
+the pre-plan per-call path, and the tile-mode speedup over the
+sequential single-image walk). Every numeric key present in a
+baseline section is compared as higher-is-better; keys present only in
+the fresh results (e.g. raw img/s or ms numbers) are reported for the
+log but not gated.
 
 With ``--history ci/BENCH_history.jsonl`` the gate becomes a
 *trajectory*: once the committed history (appended per main-branch
@@ -21,11 +25,12 @@ baseline, so the floor can rise as the hot path improves but never
 sinks below the frozen point. A slowly-eroding hot path therefore
 cannot hide inside the per-commit tolerance.
 
-``speedup_parallel`` additionally depends on how many cores the runner
-actually has: a 2-vCPU runner cannot hit a 4-core baseline. Its
-effective baseline is therefore ``min(baseline, 0.75 * threads)`` using
-the thread count recorded in the fresh results, so the gate demands
-75%-of-ideal pool scaling rather than a fixed machine-dependent number.
+Pool-scaling ratios additionally depend on how many cores the runner
+actually has: a 2-vCPU runner cannot hit a 4-core baseline. The
+effective baseline of each key in ``THREAD_CAPPED`` is therefore
+``min(baseline, factor * threads)`` using the thread count recorded in
+that section of the fresh results, so the gate demands a fraction of
+ideal scaling rather than a fixed machine-dependent number.
 
 Usage: check_bench.py FRESH.json BASELINE.json [--tolerance 0.20]
                       [--history HISTORY.jsonl]
@@ -39,8 +44,16 @@ import sys
 MIN_HISTORY = 3
 HISTORY_WINDOW = 5
 
-# Only ratio keys are trajectory-gated; raw img/s is machine-dependent.
-TRAJECTORY_KEYS = {"speedup_planned", "speedup_parallel"}
+# Gated sections of the BENCH json, in report order.
+SECTIONS = ("throughput", "latency")
+
+# Only ratio keys are trajectory-gated; raw img/s and ms are
+# machine-dependent.
+TRAJECTORY_KEYS = {"speedup_planned", "speedup_parallel", "speedup_tile"}
+
+# Ratios whose effective baseline is capped at factor * recorded thread
+# count (pool scaling cannot exceed the cores the runner has).
+THREAD_CAPPED = {"speedup_parallel": 0.75, "speedup_tile": 0.75}
 
 
 def median(values):
@@ -76,6 +89,47 @@ def trajectory_baseline(history, key, committed):
     return max(median(values), committed), f"median of last {len(values)}"
 
 
+def gate_section(section, fresh_sec, base_sec, history, tol):
+    """Compare one section of fresh results against its baseline.
+
+    Returns the list of failure strings (empty = section passes).
+    """
+    failures = []
+    threads = fresh_sec.get("threads")
+    for key in sorted(base_sec):
+        bval = base_sec[key]
+        if not isinstance(bval, (int, float)) or isinstance(bval, bool):
+            continue
+        source = "baseline"
+        if history and key in TRAJECTORY_KEYS:
+            bval, source = trajectory_baseline(history, key, bval)
+        fval = fresh_sec.get(key)
+        if not isinstance(fval, (int, float)):
+            failures.append(f"{section}.{key}: missing from fresh results")
+            print(f"  {key:<20} {source:<17} {bval:8.3f}  fresh MISSING  FAIL")
+            continue
+        if key in THREAD_CAPPED and isinstance(threads, (int, float)):
+            bval = min(bval, THREAD_CAPPED[key] * threads)
+        floor = (1.0 - tol) * bval
+        ok = fval >= floor
+        print(
+            f"  {key:<20} {source:<17} {bval:8.3f}  fresh {fval:8.3f}  "
+            f"floor {floor:8.3f}  {'OK' if ok else 'FAIL'}"
+        )
+        if not ok:
+            failures.append(
+                f"{section}.{key}: {fval:.3f} is more than {tol:.0%} below "
+                f"the baseline {bval:.3f}"
+            )
+
+    # informational: ungated fresh metrics
+    for key in sorted(fresh_sec):
+        if key in base_sec or not isinstance(fresh_sec[key], (int, float)):
+            continue
+        print(f"  {key:<20} (ungated)          fresh {fresh_sec[key]:8.3f}")
+    return failures
+
+
 def main(argv):
     tol = 0.20
     rest = argv[1:]
@@ -105,52 +159,26 @@ def main(argv):
     with open(args[1]) as f:
         base = json.load(f)
 
-    ft = fresh.get("throughput", {})
-    bt = base.get("throughput", {})
-    if not bt:
+    if not base.get("throughput"):
         print(f"error: {args[1]} has no throughput baseline")
         return 2
 
     failures = []
-    threads = ft.get("threads")
-    for key in sorted(bt):
-        bval = bt[key]
-        if not isinstance(bval, (int, float)) or isinstance(bval, bool):
+    for section in SECTIONS:
+        base_sec = base.get(section, {})
+        if not base_sec:
             continue
-        source = "baseline"
-        if history and key in TRAJECTORY_KEYS:
-            bval, source = trajectory_baseline(history, key, bval)
-        fval = ft.get(key)
-        if not isinstance(fval, (int, float)):
-            failures.append(f"{key}: missing from fresh results")
-            print(f"  {key:<20} baseline {bval:8.3f}  fresh MISSING  FAIL")
-            continue
-        if key == "speedup_parallel" and isinstance(threads, (int, float)):
-            bval = min(bval, 0.75 * threads)
-        floor = (1.0 - tol) * bval
-        ok = fval >= floor
-        print(
-            f"  {key:<20} {source:<17} {bval:8.3f}  fresh {fval:8.3f}  "
-            f"floor {floor:8.3f}  {'OK' if ok else 'FAIL'}"
+        print(f"[{section}]")
+        failures += gate_section(
+            section, fresh.get(section, {}), base_sec, history, tol
         )
-        if not ok:
-            failures.append(
-                f"{key}: {fval:.3f} is more than {tol:.0%} below the "
-                f"baseline {bval:.3f}"
-            )
-
-    # informational: ungated fresh metrics
-    for key in sorted(ft):
-        if key in bt or not isinstance(ft[key], (int, float)):
-            continue
-        print(f"  {key:<20} (ungated)          fresh {ft[key]:8.3f}")
 
     if failures:
-        print("\nthroughput regression detected:")
+        print("\nbench regression detected:")
         for f in failures:
             print(f"  - {f}")
         return 1
-    print("\nthroughput within baseline tolerance")
+    print("\nthroughput and latency within baseline tolerance")
     return 0
 
 

@@ -14,9 +14,12 @@
 //!
 //! Besides the figure reproductions, the harness measures serving
 //! throughput of `Coordinator::infer_batch` (pre-plan per-call path vs
-//! the precompiled LayerPlan path, sequential and parallel) and records
-//! images/s plus the per-layer setup-vs-compute split into the JSON —
-//! `ci/check_bench.py` gates regressions against the committed baseline.
+//! the precompiled LayerPlan path, sequential and parallel) and
+//! single-image latency (`Deployment::infer` vs the tile-parallel
+//! `infer_latency` mode), recording images/s, per-image milliseconds
+//! and the per-layer setup-vs-compute split into the JSON —
+//! `ci/check_bench.py` gates both the throughput and the latency
+//! sections against the committed baseline.
 
 use std::time::Instant;
 
@@ -181,12 +184,91 @@ fn throughput_bench(smoke: bool) -> Throughput {
     }
 }
 
+/// Single-image latency measurements: the sequential plan walk vs the
+/// tiled latency mode (`Deployment::infer_latency`) over the worker
+/// pool, best-of-N per mode.
+struct Latency {
+    threads: usize,
+    iters: u32,
+    seq_ms: f64,
+    tile_ms: f64,
+}
+
+impl Latency {
+    /// Machine-independent ratio the CI gate pins: how much faster one
+    /// image finishes with conv tiles split across the pool.
+    fn speedup_tile(&self) -> f64 {
+        self.seq_ms / self.tile_ms
+    }
+
+    fn to_json(&self) -> String {
+        format!(
+            " {{\n  \"threads\": {},\n  \"iters\": {},\n  \
+             \"seq_ms\": {:.3},\n  \"tile_ms\": {:.3},\n  \
+             \"speedup_tile\": {:.3}\n }}",
+            self.threads,
+            self.iters,
+            self.seq_ms,
+            self.tile_ms,
+            self.speedup_tile()
+        )
+    }
+}
+
+/// Measure single-image latency on the ResNet-20 example: sequential
+/// `infer` vs tile-parallel `infer_latency` on the same deployment,
+/// asserting bitwise-identical logits along the way.
+fn latency_bench(smoke: bool) -> Latency {
+    use marsellus::coordinator::Coordinator;
+    use marsellus::dnn::{NetworkSpec, PrecisionConfig};
+    use marsellus::power::OperatingPoint;
+    use marsellus::util::Rng;
+
+    let dir = marsellus::runtime::Runtime::resolve_artifacts_dir(None);
+    let coord = Coordinator::new(dir).expect("coordinator");
+    let spec = NetworkSpec::new("resnet20", PrecisionConfig::Mixed, 42);
+    let op = OperatingPoint::at_vdd(0.8);
+    let threads = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(4);
+    let iters = if smoke { 5 } else { 15 };
+    let deployment = coord.deploy(&spec).expect("deploy");
+    let mut rng = Rng::new(0x1A7E);
+    let image = deployment.random_input(&mut rng);
+    // warm both paths (memoizes the scheduler report, faults pages in)
+    let base = deployment.infer(&op, &image).expect("infer");
+    let tiled = deployment
+        .infer_latency(&op, &image, threads)
+        .expect("infer_latency");
+    assert_eq!(base.logits, tiled.logits, "latency mode changed logits");
+
+    let best_of = |f: &dyn Fn()| {
+        let mut best = f64::INFINITY;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        best
+    };
+    let seq_ms = best_of(&|| {
+        deployment.infer(&op, &image).expect("infer");
+    });
+    let tile_ms = best_of(&|| {
+        deployment
+            .infer_latency(&op, &image, threads)
+            .expect("infer_latency");
+    });
+    Latency { threads, iters, seq_ms, tile_ms }
+}
+
 fn write_json(
     path: &str,
     mode: &str,
     results: &[BenchResult],
     total: f64,
     throughput: &Throughput,
+    latency: &Latency,
 ) {
     let resolved = resolve_out_path(path);
     let path = resolved.display().to_string();
@@ -204,8 +286,10 @@ fn write_json(
     }
     let doc = format!(
         "{{\n \"mode\": \"{mode}\",\n \"total_best_ms\": {total:.3},\n \
-         \"throughput\":\n{},\n \"benches\": [\n{}\n ]\n}}\n",
+         \"throughput\":\n{},\n \"latency\":\n{},\n \
+         \"benches\": [\n{}\n ]\n}}\n",
         throughput.to_json(),
+        latency.to_json(),
         rows.join(",\n")
     );
     if let Err(e) = std::fs::write(path, doc) {
@@ -308,6 +392,20 @@ fn main() {
     println!("\nper-layer setup-vs-compute split (one image)");
     print!("{}", marsellus::metrics::render_setup_compute(&thr.layers));
 
+    // single-image latency: sequential walk vs tile-parallel mode
+    println!("\nsingle-image latency (ResNet-20 mixed, best of N)");
+    let lat = latency_bench(smoke);
+    println!(
+        "  sequential      {:>8.2} ms/img  (1 thread)",
+        lat.seq_ms
+    );
+    println!(
+        "  latency mode    {:>8.2} ms/img  ({} tile workers, {:.2}x)",
+        lat.tile_ms,
+        lat.threads,
+        lat.speedup_tile()
+    );
+
     if let Some(path) = json_path {
         write_json(
             &path,
@@ -315,6 +413,7 @@ fn main() {
             &results,
             total,
             &thr,
+            &lat,
         );
     }
 

@@ -5,9 +5,11 @@
 //! native backend) the immutable [`NetworkPlan`] compiled into the
 //! runtime's bounded, LRU-evicting plan cache. The returned
 //! [`Deployment`] then serves [`Deployment::infer`],
-//! [`Deployment::infer_batch`] and [`Deployment::profile`] as pure
-//! activation streaming: no layer rebuilding, no weight re-derivation,
-//! no cache-key plumbing per call.
+//! [`Deployment::infer_batch`], [`Deployment::infer_latency`]
+//! (single-image latency mode: conv layers tile-split across the worker
+//! pool) and [`Deployment::profile`] as pure activation streaming: no
+//! layer rebuilding, no weight re-derivation, no cache-key plumbing per
+//! call.
 //!
 //! The handle borrows the coordinator, so any number of deployments
 //! (tenants) can coexist over one shared runtime; the plan cache evicts
@@ -194,8 +196,44 @@ impl<'c> Deployment<'c> {
             )
         })?;
         let mut split = Vec::with_capacity(plan.steps().len());
-        let _ = self.coord.run_network_planned(plan, image, Some(&mut split))?;
+        let _ =
+            self.coord.run_network_planned(plan, image, Some(&mut split), 1)?;
         Ok(split)
+    }
+
+    /// [`Self::infer`] in **latency mode**: one image, with every conv
+    /// layer's `(output-row, k_out)` range split across `threads`
+    /// workers of an intra-image tile pool (`ConvPlan::run_tiled`) over
+    /// the shared immutable plan. Requires the plan path (native
+    /// backend).
+    ///
+    /// Logits are bitwise identical to [`Self::infer`] at every worker
+    /// count — tiling only changes which worker computes which disjoint
+    /// output element. Use [`Self::infer_batch`] when *throughput* over
+    /// many queued images matters (data-parallel over images, near-ideal
+    /// scaling); use this when one image's wall-clock latency matters
+    /// (tile-parallel inside the image, scaling bounded by packing /
+    /// elementwise serial fractions).
+    pub fn infer_latency(
+        &self,
+        op: &OperatingPoint,
+        image: &[i32],
+        threads: usize,
+    ) -> Result<InferenceResult> {
+        let plan = self.plan.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "{}: latency mode needs the plan path (native backend)",
+                self.spec
+            )
+        })?;
+        let report = self.report(op)?;
+        let logits =
+            self.coord.run_network_planned(plan, image, None, threads)?;
+        Ok(InferenceResult {
+            logits,
+            report: (*report).clone(),
+            cross_checked: 0,
+        })
     }
 
     /// Run a batch of inputs in parallel over an intra-batch worker pool
@@ -256,7 +294,9 @@ impl<'c> Deployment<'c> {
         let plan = if use_plans { self.plan.as_deref() } else { None };
         let run_one = |img: &[i32]| -> Result<Vec<i32>> {
             match (plan, &params) {
-                (Some(p), _) => self.coord.run_network_planned(p, img, None),
+                (Some(p), _) => {
+                    self.coord.run_network_planned(p, img, None, 1)
+                }
                 (None, Some(pr)) => self
                     .coord
                     .run_network(&self.layers, pr.as_ref(), img, &[])
@@ -310,7 +350,9 @@ impl<'c> Deployment<'c> {
     /// (deploy guarantees exactly one of plan/params is populated).
     fn run_one(&self, image: &[i32]) -> Result<Vec<i32>> {
         match &self.plan {
-            Some(plan) => self.coord.run_network_planned(plan, image, None),
+            Some(plan) => {
+                self.coord.run_network_planned(plan, image, None, 1)
+            }
             None => self
                 .coord
                 .run_network(

@@ -214,13 +214,28 @@ impl Coordinator {
     /// Walk the compiled plan for one image: activation streaming only.
     /// Residual bookkeeping mirrors [`Self::run_network`] exactly. When
     /// `profile` is given, per-layer compute time is recorded next to
-    /// the plan-compile (setup) time.
+    /// the plan-compile (setup) time. `tile_threads > 1` is the
+    /// single-image **latency mode**: each conv layer's
+    /// `(output-row, k_out)` range is split across that many tile
+    /// workers (`ConvPlan::run_tiled`) — bitwise identical to the
+    /// sequential walk, elementwise layers stay serial (they are memory
+    /// bound and a fraction of a percent of the work).
     pub(super) fn run_network_planned(
         &self,
         plan: &NetworkPlan,
         image: &[i32],
         mut profile: Option<&mut Vec<LayerSplit>>,
+        tile_threads: usize,
     ) -> Result<Vec<i32>> {
+        let run_conv = |c: &crate::runtime::ConvPlan,
+                        x: &[i32]|
+         -> Result<Vec<i32>> {
+            if tile_threads > 1 {
+                c.run_tiled(x, tile_threads)
+            } else {
+                c.run(x)
+            }
+        };
         let mut cur = image.to_vec();
         let mut block_in: Vec<i32> = cur.clone();
         let mut down_out: Vec<i32> = Vec::new();
@@ -233,21 +248,18 @@ impl Coordinator {
                         block_in = cur.clone();
                     }
                     let padded = Self::pad1(&cur, l.h, l.h, l.cin);
-                    cur = c
-                        .run(&padded)
+                    cur = run_conv(c, &padded)
                         .with_context(|| format!("layer {}", l.name))?;
                 }
                 (LayerPlan::Conv(c), LayerOp::Conv1x1) => {
-                    down_out = c
-                        .run(&block_in)
+                    down_out = run_conv(c, &block_in)
                         .with_context(|| format!("layer {}", l.name))?;
                 }
                 (
                     LayerPlan::Conv(c),
                     LayerOp::Linear | LayerOp::LinearSigned,
                 ) => {
-                    cur = c
-                        .run(&cur)
+                    cur = run_conv(c, &cur)
                         .with_context(|| format!("layer {}", l.name))?;
                 }
                 (LayerPlan::Add { h, k, shift, o_bits }, _) => {

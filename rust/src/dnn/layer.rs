@@ -168,6 +168,31 @@ pub fn artifact_name(l: &Layer) -> String {
     }
 }
 
+/// Reject schedules that route *signed* activations into the unsigned
+/// bit-serial kernels: every conv/linear/add/avgpool kernel packs (or
+/// clips) its input as unsigned bit-planes, so a signed-output layer
+/// ([`LayerOp::signed_output`]) is only valid as the network head —
+/// anything downstream of one would silently pack the two's-complement
+/// high bits as magnitude. This is the plan-compile-time (structural)
+/// half of the guard; `rbe::functional` additionally rejects negative
+/// activation *values* at the kernel boundary.
+pub fn validate_signed_dataflow(layers: &[Layer]) -> anyhow::Result<()> {
+    for (i, l) in layers.iter().enumerate() {
+        if l.op.signed_output() && i + 1 != layers.len() {
+            anyhow::bail!(
+                "layer {} ({}) produces signed activations but is not the \
+                 network head: downstream layer {} would pack them as \
+                 unsigned bit-planes (mid-network signed activations are \
+                 not supported)",
+                l.name,
+                l.op.as_str(),
+                layers[i + 1].name
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Mirror of `model._shift_for` (must stay numerically identical): a
 /// variance-based shift so random-weight activations stay spread over the
 /// O-bit range through the whole network (see the python docstring).
@@ -231,6 +256,53 @@ mod tests {
         assert!(signed.op.on_rbe());
         assert_eq!(signed.macs(), unsigned.macs());
         assert_eq!(LayerOp::parse("linears"), Some(LayerOp::LinearSigned));
+    }
+
+    /// Regression (ISSUE 4 satellite): a signed-output layer anywhere
+    /// but the network head must be a loud plan-compile error, never a
+    /// schedule that silently packs two's-complement bits as unsigned
+    /// magnitudes downstream.
+    #[test]
+    fn mid_network_signed_activations_rejected_structurally() {
+        let conv = Layer {
+            op: LayerOp::Conv3x3,
+            name: "body.conv0".into(),
+            h: 8,
+            cin: 16,
+            cout: 16,
+            stride: 1,
+            w_bits: 4,
+            i_bits: 4,
+            o_bits: 4,
+            shift: 8,
+            residual_of: None,
+        };
+        let head = Layer {
+            op: LayerOp::LinearSigned,
+            name: "head.fc".into(),
+            h: 0,
+            cin: 16,
+            cout: 10,
+            stride: 1,
+            w_bits: 8,
+            i_bits: 8,
+            o_bits: 8,
+            shift: 7,
+            residual_of: None,
+        };
+        // signed head last: valid
+        validate_signed_dataflow(&[conv.clone(), head.clone()]).unwrap();
+        // signed layer feeding a conv: structural error naming both ends
+        let mid = Layer { name: "mid.fc".into(), ..head };
+        let err = validate_signed_dataflow(&[mid, conv.clone()])
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("mid.fc")
+                && err.contains("body.conv0")
+                && err.contains("signed"),
+            "unhelpful error: {err:?}"
+        );
     }
 
     #[test]

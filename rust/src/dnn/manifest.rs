@@ -186,7 +186,11 @@ impl Manifest {
     /// Check that every layer of a schedule has a manifest entry with a
     /// matching signature — the deploy-time validation of the deployment
     /// API (and, for the AOT subset, the python/rust zoo agreement).
+    /// Also rejects schedules that would stream signed activations into
+    /// the unsigned bit-plane packers
+    /// ([`super::layer::validate_signed_dataflow`]).
     pub fn validate_layers(&self, layers: &[Layer]) -> Result<()> {
+        super::layer::validate_signed_dataflow(layers)?;
         for l in layers {
             let name = l.artifact();
             let Some(e) = self.entries.get(&name) else {
@@ -288,6 +292,21 @@ mod tests {
         let fc = m.get("linear_ci64_co10_w8i8o8").unwrap();
         assert_eq!(fc.full_side(), 1);
         assert_eq!(fc.rbe_job().unwrap().h_in(), 1);
+    }
+
+    /// Deploy-time structural guard: a schedule whose signed-output
+    /// layer is not the head is rejected before any kernel runs (the
+    /// signed-activation-into-unsigned-packing trap).
+    #[test]
+    fn validate_layers_rejects_mid_network_signed_schedule() {
+        let m = Manifest::builtin();
+        let mut layers = crate::dnn::kws_layers(PrecisionConfig::Mixed);
+        m.validate_layers(&layers).unwrap();
+        assert!(layers.last().unwrap().op.signed_output());
+        // rotate the signed head off the end: now mid-network
+        layers.rotate_right(1);
+        let err = m.validate_layers(&layers).unwrap_err().to_string();
+        assert!(err.contains("signed"), "{err}");
     }
 
     #[test]

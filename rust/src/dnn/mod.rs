@@ -20,7 +20,9 @@ pub mod manifest;
 pub mod registry;
 pub mod resnet;
 
-pub use layer::{artifact_name, Layer, LayerOp, PrecisionConfig};
+pub use layer::{
+    artifact_name, validate_signed_dataflow, Layer, LayerOp, PrecisionConfig,
+};
 pub use manifest::{Manifest, ManifestEntry};
 pub use registry::{kws_layers, network, network_ids, NetworkDef, NetworkSpec};
 pub use resnet::{

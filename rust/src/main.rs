@@ -5,7 +5,10 @@
 //! marsellus figure   <id>|all [--fast]        regenerate a paper figure
 //! marsellus infer    [--network ID] [--config uniform8|mixed]
 //!                    [--vdd V] [--seed N] [--check LAYER]
-//!                    [--artifacts DIR]        end-to-end inference
+//!                    [--threads T]            end-to-end inference
+//!                    [--artifacts DIR]        (T > 1: latency mode —
+//!                                             conv tiles split across
+//!                                             T workers)
 //! marsellus batch    [--network ID] [--n N] [--threads T] [--config C]
 //!                    [--seed S]               parallel batch inference
 //! marsellus networks                          list deployable networks
@@ -121,9 +124,23 @@ fn infer(args: &Args) -> Result<()> {
         deployment.layers().len(),
         deployment.input_bits()
     );
+    let threads = args.get_usize("threads", 1)?;
     let res = match args.get("check") {
         // cross-checking forces the per-call path; pick a small layer
-        Some(layer) => deployment.infer_cross_checked(&op, &image, &[layer])?,
+        Some(layer) => {
+            if threads > 1 {
+                println!(
+                    "note: --check forces the sequential per-call path; \
+                     --threads {threads} is ignored"
+                );
+            }
+            deployment.infer_cross_checked(&op, &image, &[layer])?
+        }
+        // latency mode: tile one image's conv layers across workers
+        None if threads > 1 => {
+            println!("latency mode: conv tiles across {threads} workers");
+            deployment.infer_latency(&op, &image, threads)?
+        }
         None => deployment.infer(&op, &image)?,
     };
     println!("logits        = {:?}", res.logits);

@@ -8,11 +8,21 @@
 //! * [`conv_bitserial_packed`] is the same Eq. 1 datapath driven by a
 //!   pre-packed weight operand ([`PackedWeights`], the §II-B3 bit-plane
 //!   layout): the per-channel bit loop collapses into one AND + popcount
-//!   per 32-channel word, which is what makes the precompiled-plan
-//!   serving path fast. Bitwise identical to [`conv_bitserial`] by
-//!   construction — each (i, j) contribution is the same popcount;
+//!   per plane word, which is what makes the precompiled-plan serving
+//!   path fast. The word width is a pack-time parameter
+//!   ([`PlaneWidth`]): 32-lane words are the literal §II-B3 TCDM layout
+//!   (and the parity reference), 64-lane words halve the popcount word
+//!   count for layers wider than one group. Every width is bitwise
+//!   identical to [`conv_bitserial`] by construction — each (i, j)
+//!   contribution is the same popcount total;
 //! * [`conv_reference`] is a plain signed-integer convolution + normquant
 //!   (the specification, mirroring python `ref.py`).
+//!
+//! The packed kernel is additionally *tileable*: activations are packed
+//! once per plane ([`pack_activations`]) and any `(output-row, k_out)`
+//! rectangle of the output can be computed independently
+//! ([`conv_bitserial_packed_tile`]), which is what the single-image
+//! latency mode splits across the worker pool (`ConvPlan::run_tiled`).
 //!
 //! Property tests assert they agree for every precision/shape; integration
 //! tests additionally compare against the PJRT artifact outputs, closing
@@ -29,7 +39,7 @@
 
 use std::borrow::Cow;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::config::{RbeJob, RbeMode};
 
@@ -132,8 +142,26 @@ fn check_activations(job: &RbeJob, x: &[i32]) -> Result<()> {
         bail!("activation len {} != {}", x.len(), want_x);
     }
     let imax = 1 << job.i_bits;
-    if x.iter().any(|&v| v < 0 || v >= imax) {
-        bail!("activation out of unsigned {}-bit range", job.i_bits);
+    if let Some(&v) = x.iter().find(|&&v| v < 0 || v >= imax) {
+        if v < 0 {
+            // A negative value here means a *signed* (mid-network)
+            // activation reached an unsigned kernel: the bit-plane
+            // packer reads raw two's-complement bits, so packing it
+            // would be silent corruption, not a wrong clamp. The plan
+            // compiler refuses such schedules up front
+            // (`dnn::validate_signed_dataflow`); this is the
+            // defense-in-depth value check.
+            bail!(
+                "activation {v} is negative: the RBE kernels pack \
+                 activations as unsigned {}-bit bit-planes and cannot \
+                 represent signed (mid-network) activations",
+                job.i_bits
+            );
+        }
+        bail!(
+            "activation {v} out of unsigned {}-bit range",
+            job.i_bits
+        );
     }
     Ok(())
 }
@@ -172,6 +200,44 @@ fn check_shapes(
     check_normquant(job, nq)
 }
 
+/// A rectangular tile of a conv job's output: output rows
+/// `[row0, row1)` × output channels `[ko0, ko1)`, always spanning the
+/// full `w_out` extent. The unit of intra-image parallelism: disjoint
+/// tiles cover disjoint output elements and can be computed on
+/// different workers, then stitched (`ConvPlan::run_tiled`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvTile {
+    pub row0: usize,
+    pub row1: usize,
+    pub ko0: usize,
+    pub ko1: usize,
+}
+
+impl ConvTile {
+    /// The whole output as one tile.
+    pub fn full(job: &RbeJob) -> Self {
+        Self { row0: 0, row1: job.h_out, ko0: 0, ko1: job.k_out }
+    }
+
+    /// Number of output values this tile produces.
+    pub fn out_len(&self, job: &RbeJob) -> usize {
+        (self.row1 - self.row0) * job.w_out * (self.ko1 - self.ko0)
+    }
+
+    fn validate(&self, job: &RbeJob) -> Result<()> {
+        ensure!(
+            self.row0 < self.row1
+                && self.row1 <= job.h_out
+                && self.ko0 < self.ko1
+                && self.ko1 <= job.k_out,
+            "tile {self:?} out of bounds for {} x {} output",
+            job.h_out,
+            job.k_out
+        );
+        Ok(())
+    }
+}
+
 /// Plain integer convolution + normquant: the oracle.
 pub fn conv_reference(
     job: &RbeJob,
@@ -180,7 +246,7 @@ pub fn conv_reference(
     nq: &NormQuant,
 ) -> Result<Vec<i32>> {
     check_shapes(job, x, w, nq)?;
-    Ok(conv_reference_core(job, x, w, nq))
+    Ok(conv_reference_core(job, x, w, nq, ConvTile::full(job)))
 }
 
 /// Plan-driven oracle entry point: weights (and normquant shapes) were
@@ -195,7 +261,36 @@ pub fn conv_reference_planned(
     check_activations(job, x)?;
     debug_assert!(check_weights(job, w).is_ok());
     debug_assert!(check_normquant(job, nq).is_ok());
-    Ok(conv_reference_core(job, x, w, nq))
+    Ok(conv_reference_core(job, x, w, nq, ConvTile::full(job)))
+}
+
+/// One output tile of the integer oracle — the reference-kernel half of
+/// the tiled latency path. Tile layout: `(rows, w_out, ko-range)`
+/// row-major. Bitwise identical to the matching slice of
+/// [`conv_reference`].
+///
+/// The activation plane is only `debug_assert`ed here: the tile fan-out
+/// shares one plane across many tiles, so the caller validates it once
+/// via [`check_activation_plane`] instead of paying a full range scan
+/// per tile.
+pub fn conv_reference_tile(
+    job: &RbeJob,
+    x: &[i32],
+    w: &[i32],
+    nq: &NormQuant,
+    tile: ConvTile,
+) -> Result<Vec<i32>> {
+    tile.validate(job)?;
+    // the length check stays hard (O(1), and the core indexes by it);
+    // only the O(n) value scan is delegated to the caller
+    let want = job.h_in() * job.w_in() * job.k_in;
+    if x.len() != want {
+        bail!("activation len {} != {want}", x.len());
+    }
+    debug_assert!(check_activations(job, x).is_ok());
+    debug_assert!(check_weights(job, w).is_ok());
+    debug_assert!(check_normquant(job, nq).is_ok());
+    Ok(conv_reference_core(job, x, w, nq, tile))
 }
 
 fn conv_reference_core(
@@ -203,13 +298,15 @@ fn conv_reference_core(
     x: &[i32],
     w: &[i32],
     nq: &NormQuant,
+    tile: ConvTile,
 ) -> Vec<i32> {
     let taps = tap_range(job);
     let (hi, wi) = (job.h_in(), job.w_in());
-    let mut out = vec![0i32; job.h_out * job.w_out * job.k_out];
-    for oy in 0..job.h_out {
+    let kos = tile.ko1 - tile.ko0;
+    let mut out = vec![0i32; tile.out_len(job)];
+    for oy in tile.row0..tile.row1 {
         for ox in 0..job.w_out {
-            for ko in 0..job.k_out {
+            for ko in tile.ko0..tile.ko1 {
                 let mut acc: i64 = 0;
                 for fy in 0..taps {
                     for fx in 0..taps {
@@ -226,7 +323,8 @@ fn conv_reference_core(
                         }
                     }
                 }
-                out[(oy * job.w_out + ox) * job.k_out + ko] =
+                out[((oy - tile.row0) * job.w_out + ox) * kos
+                    + (ko - tile.ko0)] =
                     nq.quantize(ko, acc, job.o_bits);
             }
         }
@@ -282,7 +380,25 @@ pub fn conv_bitserial(
                                 }
                             }
                         }
-                        // dynamic shifter: scale by +/- 2^(i+j)
+                        // Dynamic shifter, scale by ±2^(i+j). Headroom
+                        // audit: `ones <= taps² · k_in` (one set bit per
+                        // channel per tap at most — 64-lane packed words
+                        // raise the per-word popcount ceiling to 64 but
+                        // NOT this total), and the largest shift is
+                        // (w_bits - 1) + (i_bits - 1) <= 14. The i32
+                        // shift is therefore exact — no bits lost —
+                        // whenever
+                        //     taps² · k_in < 2^(31 - (w_bits + i_bits - 2)),
+                        // i.e. k_in <= 14563 for a 3×3 conv at the full
+                        // 8b×8b precision (any deeper layer would also
+                        // wrap the hardware's 32-bit Accum). Past that
+                        // bound `wrapping_shl` + the wrapping add/sub
+                        // below wrap *identically* in the scalar,
+                        // 32-lane and 64-lane packed paths: every path
+                        // accumulates the same per-(i, j) `ones`
+                        // totals, and wrapping i32 addition is
+                        // associative and commutative — see
+                        // `wrapping_parity_at_extreme_bit_widths`.
                         let contrib = ones.wrapping_shl((i + j) as u32);
                         acc = if neg {
                             acc.wrapping_sub(contrib)
@@ -299,120 +415,326 @@ pub fn conv_bitserial(
     Ok(out)
 }
 
-/// Weights pre-packed into 32-channel bit-plane words — the §II-B3 TCDM
-/// layout the streamer feeds the BinConvs from, and the weight half of a
-/// precompiled layer plan.
+/// Lane count of the packed bit-plane words — the plan-time word-width
+/// parameter of the packed bit-serial kernel.
 ///
-/// Bit `c` of `planes[((ko * groups + g) * w_bits + i) * taps² + t]` is
-/// bit `i` of the two's-complement weight for output channel `ko`, input
-/// channel `g * 32 + c`, filter tap `t` (`t = fy * taps + fx`). Ragged
-/// channel tails are zero-padded, contributing nothing to any popcount.
+/// [`PlaneWidth::W32`] is the literal §II-B3 TCDM layout (32 channels
+/// per word, the parity reference); [`PlaneWidth::W64`] packs 64
+/// channels per word, halving the AND+popcount word count for layers
+/// wider than one 32-channel group. Outputs are bitwise identical for
+/// every width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlaneWidth {
+    /// 32 channels per `u32` word (§II-B3 hardware layout).
+    W32,
+    /// 64 channels per `u64` word (wide-word software path).
+    W64,
+}
+
+impl PlaneWidth {
+    /// Channels packed per plane word.
+    pub fn lanes(self) -> usize {
+        match self {
+            PlaneWidth::W32 => 32,
+            PlaneWidth::W64 => 64,
+        }
+    }
+
+    /// Bytes per plane word (the unit of the plan-cache byte model).
+    pub fn word_bytes(self) -> usize {
+        self.lanes() / 8
+    }
+
+    /// Plan-compile width choice for a job: 64-lane words whenever the
+    /// layer spans more than one 32-channel group (they halve the
+    /// popcount word count); the literal 32-lane hardware layout
+    /// otherwise (a lone group gains nothing from wider words).
+    pub fn for_job(job: &RbeJob) -> Self {
+        if job.k_in > 32 {
+            PlaneWidth::W64
+        } else {
+            PlaneWidth::W32
+        }
+    }
+}
+
+impl std::fmt::Display for PlaneWidth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}-lane", self.lanes())
+    }
+}
+
+/// One packed bit-plane word: `LANES` channels per word, one bit each.
+/// The two implementations (`u32`, `u64`) differ only in lane count;
+/// the kernel is generic over this trait and monomorphized per width.
+trait PlaneWord: Copy {
+    const LANES: usize;
+    const ZERO: Self;
+    fn with_bit(self, lane: usize) -> Self;
+    fn and_popcount(self, other: Self) -> u32;
+}
+
+impl PlaneWord for u32 {
+    const LANES: usize = 32;
+    const ZERO: Self = 0;
+    #[inline(always)]
+    fn with_bit(self, lane: usize) -> Self {
+        self | (1u32 << lane)
+    }
+    #[inline(always)]
+    fn and_popcount(self, other: Self) -> u32 {
+        (self & other).count_ones()
+    }
+}
+
+impl PlaneWord for u64 {
+    const LANES: usize = 64;
+    const ZERO: Self = 0;
+    #[inline(always)]
+    fn with_bit(self, lane: usize) -> Self {
+        self | (1u64 << lane)
+    }
+    #[inline(always)]
+    fn and_popcount(self, other: Self) -> u32 {
+        (self & other).count_ones()
+    }
+}
+
+/// Width-tagged storage for packed bit-plane words.
+#[derive(Debug, Clone)]
+enum PlaneVec {
+    W32(Vec<u32>),
+    W64(Vec<u64>),
+}
+
+impl PlaneVec {
+    fn width(&self) -> PlaneWidth {
+        match self {
+            PlaneVec::W32(_) => PlaneWidth::W32,
+            PlaneVec::W64(_) => PlaneWidth::W64,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            PlaneVec::W32(v) => v.len(),
+            PlaneVec::W64(v) => v.len(),
+        }
+    }
+}
+
+/// Weights pre-packed into channel-parallel bit-plane words — the
+/// §II-B3 TCDM layout the streamer feeds the BinConvs from (at 32
+/// lanes), and the weight half of a precompiled layer plan. The lane
+/// count is a pack-time parameter ([`PlaneWidth`]).
+///
+/// Lane `c` of `planes[((ko * groups + g) * w_bits + i) * taps² + t]`
+/// is bit `i` of the two's-complement weight for output channel `ko`,
+/// input channel `g * lanes + c`, filter tap `t` (`t = fy * taps + fx`).
+/// Ragged channel tails are zero-padded, contributing nothing to any
+/// popcount.
 #[derive(Debug, Clone)]
 pub struct PackedWeights {
-    planes: Vec<u32>,
+    words: PlaneVec,
     groups: usize,
+    k_in: usize,
     taps: usize,
     k_out: usize,
     w_bits: usize,
 }
 
 impl PackedWeights {
-    /// Packed bytes held (what the TCDM would store) — the number a
-    /// plan-cache eviction policy would account.
+    /// The lane width these planes were packed at.
+    pub fn width(&self) -> PlaneWidth {
+        self.words.width()
+    }
+
+    /// Packed bytes held (what the TCDM would store) — the number the
+    /// plan-cache eviction policy accounts. Tracks the actual `Vec`
+    /// element size: a 64-lane plan holds half as many words of twice
+    /// the size.
     pub fn bytes(&self) -> usize {
-        self.planes.len() * 4
+        self.words.len() * self.width().word_bytes()
     }
 }
 
-/// Validate + pack a raw `(Kout, Kin, fy, fx)` weight tensor into the
-/// bit-plane layout, once per plan compilation.
-pub fn pack_weights(job: &RbeJob, w: &[i32]) -> Result<PackedWeights> {
-    check_weights(job, w)?;
+fn pack_weight_words<W: PlaneWord>(job: &RbeJob, w: &[i32]) -> Vec<W> {
     let taps = tap_range(job);
     let taps2 = taps * taps;
-    let groups = job.k_in.div_ceil(32);
+    let groups = job.k_in.div_ceil(W::LANES);
     let wmask = (1u32 << job.w_bits) - 1;
-    let mut planes = vec![0u32; job.k_out * groups * job.w_bits * taps2];
+    let mut planes = vec![W::ZERO; job.k_out * groups * job.w_bits * taps2];
     for ko in 0..job.k_out {
         for ki in 0..job.k_in {
-            let (g, c) = (ki / 32, ki % 32);
+            let (g, c) = (ki / W::LANES, ki % W::LANES);
             for t in 0..taps2 {
                 let wv = (w[(ko * job.k_in + ki) * taps2 + t] as u32) & wmask;
                 for i in 0..job.w_bits {
                     if (wv >> i) & 1 == 1 {
-                        planes[((ko * groups + g) * job.w_bits + i) * taps2
-                            + t] |= 1 << c;
+                        let idx = ((ko * groups + g) * job.w_bits + i)
+                            * taps2
+                            + t;
+                        planes[idx] = planes[idx].with_bit(c);
                     }
                 }
             }
         }
     }
+    planes
+}
+
+/// Validate + pack a raw `(Kout, Kin, fy, fx)` weight tensor into the
+/// 32-lane bit-plane layout (the §II-B3 hardware reference), once per
+/// plan compilation. See [`pack_weights_with`] for an explicit width.
+pub fn pack_weights(job: &RbeJob, w: &[i32]) -> Result<PackedWeights> {
+    pack_weights_with(job, w, PlaneWidth::W32)
+}
+
+/// Validate + pack a raw weight tensor into the bit-plane layout at an
+/// explicit lane width. Plan compilation picks the width via
+/// [`PlaneWidth::for_job`]; parity tests pin both widths against the
+/// scalar model.
+pub fn pack_weights_with(
+    job: &RbeJob,
+    w: &[i32],
+    width: PlaneWidth,
+) -> Result<PackedWeights> {
+    check_weights(job, w)?;
+    let words = match width {
+        PlaneWidth::W32 => PlaneVec::W32(pack_weight_words::<u32>(job, w)),
+        PlaneWidth::W64 => PlaneVec::W64(pack_weight_words::<u64>(job, w)),
+    };
     Ok(PackedWeights {
-        planes,
-        groups,
-        taps,
+        words,
+        groups: job.k_in.div_ceil(width.lanes()),
+        k_in: job.k_in,
+        taps: tap_range(job),
         k_out: job.k_out,
         w_bits: job.w_bits,
     })
 }
 
-/// Bit-serial convolution over pre-packed weights: the plan-driven fast
-/// path. Activations are packed into the same 32-channel bit-plane words
-/// on entry (amortized over all `k_out` channels), then every (i, j)
-/// contribution is one AND + popcount per word instead of a per-channel
-/// bit walk. The (i, j) popcount totals are the same integers
-/// [`conv_bitserial`] accumulates, and wrapping 32-bit addition is
-/// associative, so outputs are bitwise identical.
-pub fn conv_bitserial_packed(
+/// An activation plane packed into the same channel-parallel bit-plane
+/// words as [`PackedWeights`]: one word per (pixel, group, input bit).
+/// Packing is amortized — once per layer invocation, shared by every
+/// `k_out` channel and, in the tiled latency path, by every tile
+/// worker.
+#[derive(Debug, Clone)]
+pub struct PackedActivations {
+    words: PlaneVec,
+    groups: usize,
+    k_in: usize,
+    i_bits: usize,
+    pixels: usize,
+}
+
+impl PackedActivations {
+    /// The lane width these planes were packed at.
+    pub fn width(&self) -> PlaneWidth {
+        self.words.width()
+    }
+}
+
+fn pack_activation_words<W: PlaneWord>(job: &RbeJob, x: &[i32]) -> Vec<W> {
+    let groups = job.k_in.div_ceil(W::LANES);
+    let pixels = job.h_in() * job.w_in();
+    let mut xp = vec![W::ZERO; pixels * groups * job.i_bits];
+    for p in 0..pixels {
+        for ki in 0..job.k_in {
+            // non-negative by check_activations: the raw bits ARE the
+            // unsigned magnitude
+            let v = x[p * job.k_in + ki] as u32;
+            let (g, c) = (ki / W::LANES, ki % W::LANES);
+            for j in 0..job.i_bits {
+                if (v >> j) & 1 == 1 {
+                    let idx = (p * groups + g) * job.i_bits + j;
+                    xp[idx] = xp[idx].with_bit(c);
+                }
+            }
+        }
+    }
+    xp
+}
+
+/// Validate + pack one activation plane into bit-plane words at `width`.
+/// Rejects signed (negative) activations loudly — the packer reads raw
+/// unsigned bits and would otherwise corrupt silently.
+pub fn pack_activations(
     job: &RbeJob,
     x: &[i32],
-    pw: &PackedWeights,
-    nq: &NormQuant,
-) -> Result<Vec<i32>> {
+    width: PlaneWidth,
+) -> Result<PackedActivations> {
     check_activations(job, x)?;
-    check_normquant(job, nq)?;
+    let words = match width {
+        PlaneWidth::W32 => {
+            PlaneVec::W32(pack_activation_words::<u32>(job, x))
+        }
+        PlaneWidth::W64 => {
+            PlaneVec::W64(pack_activation_words::<u64>(job, x))
+        }
+    };
+    Ok(PackedActivations {
+        words,
+        groups: job.k_in.div_ceil(width.lanes()),
+        k_in: job.k_in,
+        i_bits: job.i_bits,
+        pixels: job.h_in() * job.w_in(),
+    })
+}
+
+/// Validate one activation plane (length + unsigned range) against a
+/// job — the per-call activation check of the planned entry points,
+/// exposed so the tiled latency path can validate ONCE per layer
+/// instead of once per tile ([`conv_reference_tile`] only
+/// `debug_assert`s it).
+pub fn check_activation_plane(job: &RbeJob, x: &[i32]) -> Result<()> {
+    check_activations(job, x)
+}
+
+fn check_packed_signature(job: &RbeJob, pw: &PackedWeights) -> Result<()> {
     let taps = tap_range(job);
-    let taps2 = taps * taps;
-    let groups = job.k_in.div_ceil(32);
     // Every field that determines the plane layout must match, or the
-    // indexing below reads wrong planes / out of bounds.
+    // indexing below reads wrong planes / out of bounds. k_in is
+    // checked directly, not only via the group count: two ragged
+    // channel counts can share a group (e.g. 33 and 40 at 64 lanes)
+    // and the zero-padded tail would silently popcount as nothing.
     if pw.taps != taps
-        || pw.groups != groups
+        || pw.k_in != job.k_in
         || pw.k_out != job.k_out
         || pw.w_bits != job.w_bits
     {
         bail!(
             "packed weights were built for a different job signature \
-             (taps {} / groups {} / k_out {} / w_bits {} vs \
-             {taps} / {groups} / {} / {})",
+             (taps {} / k_in {} / k_out {} / w_bits {} vs \
+             {taps} / {} / {} / {})",
             pw.taps,
-            pw.groups,
+            pw.k_in,
             pw.k_out,
             pw.w_bits,
+            job.k_in,
             job.k_out,
             job.w_bits
         );
     }
-    let (hi, wi) = (job.h_in(), job.w_in());
+    Ok(())
+}
 
-    // Pack the activation plane: one u32 per (pixel, group, input bit).
-    let mut xp = vec![0u32; hi * wi * groups * job.i_bits];
-    for p in 0..hi * wi {
-        for ki in 0..job.k_in {
-            let v = x[p * job.k_in + ki] as u32;
-            let (g, c) = (ki / 32, ki % 32);
-            for j in 0..job.i_bits {
-                if (v >> j) & 1 == 1 {
-                    xp[(p * groups + g) * job.i_bits + j] |= 1 << c;
-                }
-            }
-        }
-    }
-
-    let mut out = vec![0i32; job.h_out * job.w_out * job.k_out];
-    for oy in 0..job.h_out {
+fn conv_tile_core<W: PlaneWord>(
+    job: &RbeJob,
+    xw: &[W],
+    ww: &[W],
+    groups: usize,
+    taps: usize,
+    nq: &NormQuant,
+    tile: ConvTile,
+) -> Vec<i32> {
+    let taps2 = taps * taps;
+    let wi = job.w_in();
+    let kos = tile.ko1 - tile.ko0;
+    let mut out = vec![0i32; tile.out_len(job)];
+    for oy in tile.row0..tile.row1 {
         for ox in 0..job.w_out {
-            for ko in 0..job.k_out {
+            for ko in tile.ko0..tile.ko1 {
                 let wbase = ko * groups;
                 let mut acc: i32 = 0; // the 32-bit Accum register
                 for i in 0..job.w_bits {
@@ -425,17 +747,23 @@ pub fn conv_bitserial_packed(
                                 let ix = ox * job.stride + fx;
                                 let px = (iy * wi + ix) * groups;
                                 for g in 0..groups {
-                                    let xw = xp[(px + g) * job.i_bits + j];
-                                    let ww = pw.planes[((wbase + g)
-                                        * job.w_bits
-                                        + i)
-                                        * taps2
-                                        + fy * taps
-                                        + fx];
-                                    ones += (xw & ww).count_ones() as i32;
+                                    ones += xw[(px + g) * job.i_bits + j]
+                                        .and_popcount(
+                                            ww[((wbase + g) * job.w_bits
+                                                + i)
+                                                * taps2
+                                                + fy * taps
+                                                + fx],
+                                        )
+                                        as i32;
                                 }
                             }
                         }
+                        // Same ±2^(i+j) dynamic shifter as the scalar
+                        // model; `ones` is the identical per-(i, j)
+                        // total regardless of lane width, so wrapping
+                        // behaviour matches bit for bit — see the
+                        // headroom audit comment in `conv_bitserial`.
                         let contrib = ones.wrapping_shl((i + j) as u32);
                         acc = if neg {
                             acc.wrapping_sub(contrib)
@@ -444,12 +772,96 @@ pub fn conv_bitserial_packed(
                         };
                     }
                 }
-                out[(oy * job.w_out + ox) * job.k_out + ko] =
+                out[((oy - tile.row0) * job.w_out + ox) * kos
+                    + (ko - tile.ko0)] =
                     nq.quantize(ko, acc as i64, job.o_bits);
             }
         }
     }
-    Ok(out)
+    out
+}
+
+/// Bit-serial convolution over pre-packed weights: the plan-driven fast
+/// path. Activations are packed into matching bit-plane words on entry
+/// (amortized over all `k_out` channels), then every (i, j)
+/// contribution is one AND + popcount per word instead of a per-channel
+/// bit walk. The (i, j) popcount totals are the same integers
+/// [`conv_bitserial`] accumulates — at any [`PlaneWidth`] — and
+/// wrapping 32-bit addition is associative, so outputs are bitwise
+/// identical.
+pub fn conv_bitserial_packed(
+    job: &RbeJob,
+    x: &[i32],
+    pw: &PackedWeights,
+    nq: &NormQuant,
+) -> Result<Vec<i32>> {
+    // O(1) shape checks first: a mismatched call must fail before the
+    // O(n) activation pack, not after
+    check_normquant(job, nq)?;
+    check_packed_signature(job, pw)?;
+    let xp = pack_activations(job, x, pw.width())?;
+    conv_bitserial_packed_tile(job, &xp, pw, nq, ConvTile::full(job))
+}
+
+/// One output tile of the packed bit-serial kernel over a pre-packed
+/// activation plane — the unit the single-image latency mode fans out
+/// across workers. Tile layout: `(rows, w_out, ko-range)` row-major.
+/// The full tile reproduces [`conv_bitserial_packed`] exactly; disjoint
+/// tiles stitch to the same output bitwise.
+pub fn conv_bitserial_packed_tile(
+    job: &RbeJob,
+    xp: &PackedActivations,
+    pw: &PackedWeights,
+    nq: &NormQuant,
+    tile: ConvTile,
+) -> Result<Vec<i32>> {
+    check_normquant(job, nq)?;
+    check_packed_signature(job, pw)?;
+    tile.validate(job)?;
+    if xp.k_in != job.k_in
+        || xp.i_bits != job.i_bits
+        || xp.groups != pw.groups
+        || xp.pixels != job.h_in() * job.w_in()
+    {
+        bail!(
+            "packed activations were built for a different job signature \
+             (k_in {} / i_bits {} / groups {} / pixels {} vs \
+             {} / {} / {} / {})",
+            xp.k_in,
+            xp.i_bits,
+            xp.groups,
+            xp.pixels,
+            job.k_in,
+            job.i_bits,
+            pw.groups,
+            job.h_in() * job.w_in()
+        );
+    }
+    match (&xp.words, &pw.words) {
+        (PlaneVec::W32(x), PlaneVec::W32(w)) => Ok(conv_tile_core(
+            job,
+            x.as_slice(),
+            w.as_slice(),
+            pw.groups,
+            pw.taps,
+            nq,
+            tile,
+        )),
+        (PlaneVec::W64(x), PlaneVec::W64(w)) => Ok(conv_tile_core(
+            job,
+            x.as_slice(),
+            w.as_slice(),
+            pw.groups,
+            pw.taps,
+            nq,
+            tile,
+        )),
+        (x, w) => bail!(
+            "packed activations are {} but packed weights are {}",
+            x.width(),
+            w.width()
+        ),
+    }
 }
 
 /// Residual add + requant (`ref.add_requant_ref` with unit scales):
@@ -552,11 +964,14 @@ mod tests {
         // acc = -48; the signed 4-bit clip pins -8 (ReLU would give 0)
         assert_eq!(conv_bitserial(&job, &x, &w, &nq).unwrap(), vec![-8]);
         assert_eq!(conv_reference(&job, &x, &w, &nq).unwrap(), vec![-8]);
-        let pw = pack_weights(&job, &w).unwrap();
-        assert_eq!(
-            conv_bitserial_packed(&job, &x, &pw, &nq).unwrap(),
-            vec![-8]
-        );
+        for width in [PlaneWidth::W32, PlaneWidth::W64] {
+            let pw = pack_weights_with(&job, &w, width).unwrap();
+            assert_eq!(
+                conv_bitserial_packed(&job, &x, &pw, &nq).unwrap(),
+                vec![-8],
+                "{width}"
+            );
+        }
     }
 
     #[test]
@@ -591,6 +1006,34 @@ mod tests {
             .is_err());
     }
 
+    /// Regression (signed-activation packing trap): a negative
+    /// mid-network activation must be a loud, named error in every
+    /// kernel that packs unsigned bit-planes — never silently packed
+    /// garbage high bits.
+    #[test]
+    fn signed_activations_rejected_loudly_not_packed() {
+        let job = RbeJob::conv1x1(1, 1, 4, 1, 1, 4, 4, 4).unwrap();
+        let w = vec![1, 1, 1, 1];
+        let x = vec![3, -2, 3, 3]; // one signed (negative) activation
+        let nq = NormQuant::unit(1);
+        for width in [PlaneWidth::W32, PlaneWidth::W64] {
+            let pw = pack_weights_with(&job, &w, width).unwrap();
+            let err = conv_bitserial_packed(&job, &x, &pw, &nq)
+                .unwrap_err()
+                .to_string();
+            assert!(
+                err.contains("negative") && err.contains("signed"),
+                "{width}: unhelpful error {err:?}"
+            );
+            let err =
+                pack_activations(&job, &x, width).unwrap_err().to_string();
+            assert!(err.contains("negative"), "{width}: {err:?}");
+        }
+        // the scalar kernels reject the same plane with the same message
+        let err = conv_bitserial(&job, &x, &w, &nq).unwrap_err().to_string();
+        assert!(err.contains("negative"), "{err:?}");
+    }
+
     #[test]
     fn strided_conv_matches() {
         let mut rng = Rng::new(7);
@@ -603,8 +1046,9 @@ mod tests {
     }
 
     /// Property: the packed plan-driven datapath is bitwise identical to
-    /// the scalar bit-serial model for every precision, mode, stride and
-    /// ragged channel count (incl. k_in not a multiple of 32).
+    /// the scalar bit-serial model for every precision, mode, stride,
+    /// lane width and ragged channel count (incl. k_in not a multiple of
+    /// 32 or 64, and k_in < 32).
     #[test]
     fn packed_equals_scalar_bitserial_sweep() {
         let mut rng = Rng::new(4242);
@@ -618,7 +1062,7 @@ mod tests {
                 mode,
                 h_out: 1 + rng.index(3),
                 w_out: 1 + rng.index(3),
-                k_in: *rng.pick(&[1, 3, 31, 32, 33, 40, 64]),
+                k_in: *rng.pick(&[1, 3, 31, 32, 33, 40, 63, 64, 65, 96, 129]),
                 k_out: *rng.pick(&[1, 4, 16]),
                 stride: 1 + rng.index(2),
                 w_bits: 2 + rng.index(7),
@@ -626,18 +1070,182 @@ mod tests {
                 o_bits: 2 + rng.index(7),
             };
             let (x, w, nq) = random_job_inputs(&mut rng, &job);
-            let pw = pack_weights(&job, &w).unwrap();
-            assert_eq!(
-                conv_bitserial_packed(&job, &x, &pw, &nq).unwrap(),
-                conv_bitserial(&job, &x, &w, &nq).unwrap(),
-                "job {job:?}"
-            );
+            let scalar = conv_bitserial(&job, &x, &w, &nq).unwrap();
+            for width in [PlaneWidth::W32, PlaneWidth::W64] {
+                let pw = pack_weights_with(&job, &w, width).unwrap();
+                assert_eq!(
+                    conv_bitserial_packed(&job, &x, &pw, &nq).unwrap(),
+                    scalar,
+                    "{width}, job {job:?}"
+                );
+            }
             assert_eq!(
                 conv_reference_planned(&job, &x, &w, &nq).unwrap(),
                 conv_reference(&job, &x, &w, &nq).unwrap(),
                 "planned oracle, job {job:?}"
             );
         }
+    }
+
+    /// Property: any tiling of the output — random row and k_out cut
+    /// points, both lane widths, packed and reference kernels — stitches
+    /// to exactly the full-kernel output.
+    #[test]
+    fn tiles_stitch_to_full_kernel_output() {
+        let mut rng = Rng::new(7331);
+        for _ in 0..25 {
+            let mode = if rng.f64() < 0.5 {
+                RbeMode::Conv3x3
+            } else {
+                RbeMode::Conv1x1
+            };
+            let job = RbeJob {
+                mode,
+                h_out: 2 + rng.index(4),
+                w_out: 2 + rng.index(4),
+                k_in: *rng.pick(&[3, 33, 64]),
+                k_out: *rng.pick(&[2, 5, 16]),
+                stride: 1 + rng.index(2),
+                w_bits: 2 + rng.index(7),
+                i_bits: 2 + rng.index(7),
+                o_bits: 2 + rng.index(7),
+            };
+            let (x, w, nq) = random_job_inputs(&mut rng, &job);
+            let full = conv_bitserial(&job, &x, &w, &nq).unwrap();
+            // random 2x2 tiling: one interior cut per axis
+            let rcut = 1 + rng.index(job.h_out - 1);
+            let kcut = 1 + rng.index(job.k_out - 1);
+            let tiles = [
+                ConvTile { row0: 0, row1: rcut, ko0: 0, ko1: kcut },
+                ConvTile { row0: 0, row1: rcut, ko0: kcut, ko1: job.k_out },
+                ConvTile { row0: rcut, row1: job.h_out, ko0: 0, ko1: kcut },
+                ConvTile {
+                    row0: rcut,
+                    row1: job.h_out,
+                    ko0: kcut,
+                    ko1: job.k_out,
+                },
+            ];
+            let stitch = |parts: &[Vec<i32>]| {
+                let mut out = vec![0i32; full.len()];
+                for (t, part) in tiles.iter().zip(parts) {
+                    let kos = t.ko1 - t.ko0;
+                    for r in 0..t.row1 - t.row0 {
+                        for ox in 0..job.w_out {
+                            for k in 0..kos {
+                                out[(((t.row0 + r) * job.w_out + ox)
+                                    * job.k_out)
+                                    + t.ko0
+                                    + k] = part
+                                    [(r * job.w_out + ox) * kos + k];
+                            }
+                        }
+                    }
+                }
+                out
+            };
+            for width in [PlaneWidth::W32, PlaneWidth::W64] {
+                let pw = pack_weights_with(&job, &w, width).unwrap();
+                let xp = pack_activations(&job, &x, width).unwrap();
+                let parts: Vec<Vec<i32>> = tiles
+                    .iter()
+                    .map(|t| {
+                        conv_bitserial_packed_tile(&job, &xp, &pw, &nq, *t)
+                            .unwrap()
+                    })
+                    .collect();
+                assert_eq!(stitch(&parts), full, "{width}, job {job:?}");
+            }
+            let parts: Vec<Vec<i32>> = tiles
+                .iter()
+                .map(|t| {
+                    conv_reference_tile(&job, &x, &w, &nq, *t).unwrap()
+                })
+                .collect();
+            assert_eq!(stitch(&parts), full, "reference tiles, job {job:?}");
+        }
+    }
+
+    /// The documented dynamic-shifter headroom bound: past
+    /// `taps² · k_in = 2^(31 - (w_bits + i_bits - 2))` the ±2^(i+j)
+    /// contribution wraps the 32-bit Accum — and the scalar, 32-lane and
+    /// 64-lane paths wrap bit-identically (a 64-lane word carries up to
+    /// 2× the ones of a 32-lane word, but the per-(i, j) total is the
+    /// same integer in every path).
+    #[test]
+    fn wrapping_parity_at_extreme_bit_widths() {
+        // all-ones worst case: every AND matches, ones = 9 * k_in =
+        // 147456 > 2^17, so contrib = ones << 14 wraps i32
+        let job = RbeJob::conv3x3(1, 1, 16384, 1, 1, 8, 8, 8).unwrap();
+        let x = vec![255i32; job.h_in() * job.w_in() * job.k_in];
+        let w = vec![-1i32; job.k_out * job.k_in * 9];
+        let ones_max = 9i64 * job.k_in as i64;
+        let top_shift = (job.w_bits + job.i_bits - 2) as i64;
+        assert!(
+            ones_max << top_shift > i32::MAX as i64,
+            "test premise: the top contribution must overflow i32"
+        );
+        let nq = NormQuant::new_signed(vec![1], vec![0], 0);
+        let scalar = conv_bitserial(&job, &x, &w, &nq).unwrap();
+        for width in [PlaneWidth::W32, PlaneWidth::W64] {
+            let pw = pack_weights_with(&job, &w, width).unwrap();
+            assert_eq!(
+                conv_bitserial_packed(&job, &x, &pw, &nq).unwrap(),
+                scalar,
+                "{width} diverged from scalar under Accum wrapping"
+            );
+        }
+        // and a random job just past the documented exactness bound
+        let mut rng = Rng::new(99);
+        let job = RbeJob::conv3x3(1, 1, 14848, 1, 1, 8, 8, 8).unwrap();
+        let x: Vec<i32> = (0..job.h_in() * job.w_in() * job.k_in)
+            .map(|_| rng.range_i32(128, 256))
+            .collect();
+        let w: Vec<i32> = (0..job.k_out * job.k_in * 9)
+            .map(|_| rng.range_i32(-128, 128))
+            .collect();
+        let scalar = conv_bitserial(&job, &x, &w, &nq).unwrap();
+        for width in [PlaneWidth::W32, PlaneWidth::W64] {
+            let pw = pack_weights_with(&job, &w, width).unwrap();
+            assert_eq!(
+                conv_bitserial_packed(&job, &x, &pw, &nq).unwrap(),
+                scalar,
+                "{width} diverged on the random extreme-width job"
+            );
+        }
+    }
+
+    /// The plan-compile width policy: one 32-channel group stays on the
+    /// literal hardware layout, anything wider takes 64-lane words.
+    #[test]
+    fn width_policy_and_byte_accounting() {
+        let narrow = RbeJob::conv3x3(2, 2, 32, 4, 1, 4, 4, 4).unwrap();
+        assert_eq!(PlaneWidth::for_job(&narrow), PlaneWidth::W32);
+        let wide = RbeJob::conv3x3(2, 2, 33, 4, 1, 4, 4, 4).unwrap();
+        assert_eq!(PlaneWidth::for_job(&wide), PlaneWidth::W64);
+
+        // bytes track the actual Vec element size at each width:
+        // k_in = 64 is 2 u32 groups or 1 u64 group — same byte count,
+        // half the words
+        let job = RbeJob::conv3x3(2, 2, 64, 4, 1, 4, 4, 4).unwrap();
+        let w = vec![0i32; job.k_out * job.k_in * 9];
+        let pw32 = pack_weights_with(&job, &w, PlaneWidth::W32).unwrap();
+        let pw64 = pack_weights_with(&job, &w, PlaneWidth::W64).unwrap();
+        assert_eq!(pw32.bytes(), 4 * 2 * 4 * 9 * 4);
+        assert_eq!(pw64.bytes(), 4 * 1 * 4 * 9 * 8);
+        assert_eq!(pw32.bytes(), pw64.bytes());
+        // ragged tail: 33 channels cost a full second u32 group but
+        // only one u64 group
+        let jr = RbeJob::conv1x1(1, 1, 33, 2, 1, 2, 2, 2).unwrap();
+        let wr = vec![0i32; 2 * 33];
+        assert_eq!(
+            pack_weights_with(&jr, &wr, PlaneWidth::W32).unwrap().bytes(),
+            2 * 2 * 2 * 4
+        );
+        assert_eq!(
+            pack_weights_with(&jr, &wr, PlaneWidth::W64).unwrap().bytes(),
+            2 * 1 * 2 * 8
+        );
     }
 
     #[test]
@@ -658,6 +1266,58 @@ mod tests {
         let xk = vec![0i32; jk.h_in() * jk.w_in() * jk.k_in];
         let nq2 = NormQuant::unit(2);
         assert!(conv_bitserial_packed(&jk, &xk, &pw, &nq2).is_err());
+        // lane-width mismatch between activations and weights is loud
+        let zeros = vec![0i32; j3.h_in() * j3.w_in() * 8];
+        let xp64 = pack_activations(&j3, &zeros, PlaneWidth::W64).unwrap();
+        assert!(conv_bitserial_packed_tile(
+            &j3,
+            &xp64,
+            &pw,
+            &nq,
+            ConvTile::full(&j3)
+        )
+        .is_err());
+        // a ragged-channel plane whose GROUP count happens to match is
+        // still a signature mismatch (k_in is checked directly, not
+        // only via groups): 33 and 40 channels are both one 64-lane
+        // group, but channels 33..39 would silently popcount as zero
+        let ja = RbeJob::conv1x1(2, 2, 33, 4, 1, 4, 4, 4).unwrap();
+        let jb = RbeJob::conv1x1(2, 2, 40, 4, 1, 4, 4, 4).unwrap();
+        let xa = vec![0i32; ja.h_in() * ja.w_in() * 33];
+        let xpa = pack_activations(&ja, &xa, PlaneWidth::W64).unwrap();
+        let wb = vec![0i32; 4 * 40];
+        let pwb = pack_weights_with(&jb, &wb, PlaneWidth::W64).unwrap();
+        let nq4 = NormQuant::unit(4);
+        let err = conv_bitserial_packed_tile(
+            &jb,
+            &xpa,
+            &pwb,
+            &nq4,
+            ConvTile::full(&jb),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("k_in 33"), "{err}");
+        // the weights side is checked symmetrically (and fails before
+        // the O(n) activation pack): 40-channel packed weights must not
+        // serve a 33-channel job sharing the group count
+        let err = conv_bitserial_packed(&ja, &xa, &pwb, &nq4)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("k_in 40"), "{err}");
+        // and out-of-bounds tiles are rejected
+        let xp = pack_activations(&j3, &zeros, PlaneWidth::W32).unwrap();
+        for bad in [
+            ConvTile { row0: 0, row1: 3, ko0: 0, ko1: 4 },
+            ConvTile { row0: 1, row1: 1, ko0: 0, ko1: 4 },
+            ConvTile { row0: 0, row1: 2, ko0: 4, ko1: 5 },
+        ] {
+            assert!(
+                conv_bitserial_packed_tile(&j3, &xp, &pw, &nq, bad)
+                    .is_err(),
+                "{bad:?}"
+            );
+        }
     }
 
     #[test]
@@ -665,6 +1325,9 @@ mod tests {
         let job = RbeJob::conv1x1(1, 1, 4, 1, 1, 2, 2, 2).unwrap();
         assert!(pack_weights(&job, &[2, 0, 0, 0]).is_err());
         assert!(pack_weights(&job, &[0, 0, 0]).is_err()); // wrong length
+        assert!(
+            pack_weights_with(&job, &[2, 0, 0, 0], PlaneWidth::W64).is_err()
+        );
     }
 
     /// Requant clamp edge cases across every output precision: extreme

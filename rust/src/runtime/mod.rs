@@ -45,7 +45,7 @@ pub use loader::{Runtime, DEFAULT_PLAN_CACHE_BYTES};
 pub use native::NativeBackend;
 pub use plan::{
     ConvPlan, LayerPlan, NativeNumerics, NetworkPlan, PlanStep,
-    AUTO_BITSERIAL_MACS,
+    AUTO_BITSERIAL_MACS, LATENCY_TILE_MIN_MACS,
 };
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;

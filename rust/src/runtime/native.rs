@@ -13,7 +13,11 @@
 //!
 //! Unlike XLA, the native path *validates* its inputs: wrong arg counts,
 //! wrong shapes, or out-of-range quantized values are loud errors rather
-//! than silent wraparound.
+//! than silent wraparound. In particular, a *negative* activation value
+//! (a signed mid-network activation that escaped the deploy-time
+//! `dnn::validate_signed_dataflow` guard) is rejected by name at the
+//! kernel boundary — the unsigned bit-plane packers must never see
+//! two's-complement bits.
 
 use std::collections::HashMap;
 
@@ -260,6 +264,27 @@ mod tests {
         let want = ((-(1i64 << 20)) >> shift).clamp(-128, 127) as i32;
         assert!(want < 0, "test premise: shift {shift} too large");
         assert_eq!(out[0], vec![want; 12]);
+    }
+
+    /// Regression (ISSUE 4 satellite): a negative activation value
+    /// surfaces the named signed-activation error through backend
+    /// dispatch — defense in depth under the deploy-time dataflow guard.
+    #[test]
+    fn negative_activations_error_loudly_through_dispatch() {
+        let exe = backend().compile("linear_ci64_co10_w8i8o8").unwrap();
+        let mut x = vec![0i32; 64];
+        x[3] = -5;
+        let args = vec![
+            TensorArg::new(x, vec![64]),
+            TensorArg::new(vec![0i32; 10 * 64], vec![10, 64]),
+            TensorArg::scalar_vec(vec![1i32; 10]),
+            TensorArg::scalar_vec(vec![0i32; 10]),
+        ];
+        let err = exe.execute_i32(&args).unwrap_err().to_string();
+        assert!(
+            err.contains("negative") && err.contains("signed"),
+            "unhelpful error: {err:?}"
+        );
     }
 
     #[test]

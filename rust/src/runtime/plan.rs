@@ -5,25 +5,34 @@
 //! re-validates weights and re-reads normquant parameters on every
 //! `execute_i32`, so serving throughput is bounded by setup rather than
 //! compute. A [`LayerPlan`] hoists all of that to network-load time:
-//! weights are validated once and pre-packed into the §II-B3 bit-plane
-//! words ([`PackedWeights`]), the [`RbeJob`] geometry and requant
-//! constants are resolved, and per-call work collapses to activation
-//! checking + streaming through the `*_planned` entry points of
-//! [`crate::rbe::functional`]. Plans are immutable, so a batch worker
-//! pool shares one `Arc<NetworkPlan>` read-only across threads — see
-//! `Coordinator::infer_batch`.
+//! weights are validated once and pre-packed into channel-parallel
+//! bit-plane words ([`PackedWeights`]) at a plan-chosen lane width
+//! ([`PlaneWidth::for_job`]: the literal §II-B3 32-lane layout for
+//! narrow layers, 64-lane words past one group), the [`RbeJob`]
+//! geometry and requant constants are resolved, and per-call work
+//! collapses to activation checking + streaming through the `*_planned`
+//! entry points of [`crate::rbe::functional`]. Plans are immutable, so
+//! a batch worker pool shares one `Arc<NetworkPlan>` read-only across
+//! threads — see `Coordinator::infer_batch` — and the single-image
+//! latency mode splits one layer's `(output-row, k_out)` range across
+//! the same pool ([`ConvPlan::run_tiled`]).
 //!
 //! Bitwise identity with the per-call path is by construction: every
 //! kernel choice evaluates the same Eq. 1–2 integer arithmetic
 //! (property-tested equivalent in `rbe::functional`), only the operand
 //! staging differs.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
 use anyhow::{bail, Result};
 
 use crate::dnn::{Layer, LayerOp, ManifestEntry};
 use crate::rbe::functional::{
-    check_weights, conv_bitserial_packed, conv_reference_planned,
-    pack_weights, trim_input, NormQuant, PackedWeights,
+    check_activation_plane, check_weights, conv_bitserial_packed,
+    conv_bitserial_packed_tile, conv_reference_planned, conv_reference_tile,
+    pack_activations, pack_weights_with, trim_input, ConvTile, NormQuant,
+    PackedActivations, PackedWeights, PlaneWidth,
 };
 use crate::rbe::RbeJob;
 
@@ -60,19 +69,54 @@ impl NativeNumerics {
     /// Plan-compile kernel choice: the packed bit-serial datapath when
     /// it is the literal hardware model (small jobs / `BitSerial`) or
     /// when its inner loop is cheaper than the oracle's — per tap the
-    /// packed path does `w_bits · i_bits · ceil(k_in/32)` AND+popcount
-    /// word ops against the oracle's `k_in` multiplies.
+    /// packed path does `w_bits · i_bits · ceil(k_in/lanes)`
+    /// AND+popcount word ops against the oracle's `k_in` multiplies,
+    /// with `lanes` the word width [`PlaneWidth::for_job`] would pick.
     pub fn packed_for(&self, job: &RbeJob) -> bool {
         match self {
             NativeNumerics::BitSerial => true,
             NativeNumerics::Reference => false,
             NativeNumerics::Auto => {
+                let lanes = PlaneWidth::for_job(job).lanes();
                 job.macs() <= AUTO_BITSERIAL_MACS
-                    || job.w_bits * job.i_bits * job.k_in.div_ceil(32)
+                    || job.w_bits * job.i_bits * job.k_in.div_ceil(lanes)
                         < job.k_in
             }
         }
     }
+}
+
+/// Conv jobs below this MAC count run sequentially even in latency mode:
+/// tiny layers (e.g. the classifier head) finish faster than the worker
+/// handoff costs.
+pub const LATENCY_TILE_MIN_MACS: u64 = 1 << 14;
+
+/// Split a job's output into about `threads` `(output-row, k_out)`
+/// tiles: rows first (they stitch contiguously), output channels only
+/// when there are fewer rows than workers (e.g. linear layers). Tiles
+/// partition the output exactly; each is non-empty.
+fn tile_split(job: &RbeJob, threads: usize) -> Vec<ConvTile> {
+    if threads <= 1 {
+        return vec![ConvTile::full(job)];
+    }
+    let row_chunks = threads.min(job.h_out);
+    let k_chunks = (threads / row_chunks).min(job.k_out).max(1);
+    let mut tiles = Vec::with_capacity(row_chunks * k_chunks);
+    for r in 0..row_chunks {
+        let (row0, row1) = (
+            r * job.h_out / row_chunks,
+            (r + 1) * job.h_out / row_chunks,
+        );
+        for k in 0..k_chunks {
+            tiles.push(ConvTile {
+                row0,
+                row1,
+                ko0: k * job.k_out / k_chunks,
+                ko1: (k + 1) * job.k_out / k_chunks,
+            });
+        }
+    }
+    tiles
 }
 
 /// How a planned conv/linear layer streams activations.
@@ -96,9 +140,13 @@ pub struct ConvPlan {
 }
 
 impl ConvPlan {
-    /// Stream one activation plane through the plan. Per-call work is
-    /// exactly: length check, strided trim, kernel evaluation.
-    pub fn run(&self, x: &[i32]) -> Result<Vec<i32>> {
+    /// Length-check the incoming plane and trim it to the job's strided
+    /// extent — the shared prologue of [`Self::run`] and
+    /// [`Self::run_tiled`].
+    fn checked_trim<'a>(
+        &self,
+        x: &'a [i32],
+    ) -> Result<std::borrow::Cow<'a, [i32]>> {
         let want = self.full * self.full * self.job.k_in;
         if x.len() != want {
             bail!(
@@ -109,7 +157,13 @@ impl ConvPlan {
                 k = self.job.k_in,
             );
         }
-        let x = trim_input(x, self.full, self.job.h_in(), self.job.k_in);
+        Ok(trim_input(x, self.full, self.job.h_in(), self.job.k_in))
+    }
+
+    /// Stream one activation plane through the plan. Per-call work is
+    /// exactly: length check, strided trim, kernel evaluation.
+    pub fn run(&self, x: &[i32]) -> Result<Vec<i32>> {
+        let x = self.checked_trim(x)?;
         match &self.kernel {
             PlanKernel::Packed(pw) => {
                 conv_bitserial_packed(&self.job, &x, pw, &self.nq)
@@ -120,9 +174,108 @@ impl ConvPlan {
         }
     }
 
+    /// Stream one activation plane through the plan with the layer's
+    /// `(output-row, k_out)` range split into tiles pulled by `threads`
+    /// scoped workers — the single-image latency path. For the packed
+    /// kernel the activation plane is packed ONCE and shared read-only
+    /// by every tile worker. Bitwise identical to [`Self::run`]:
+    /// disjoint tiles compute disjoint output elements with the same
+    /// arithmetic, so the stitched result is the sequential result.
+    pub fn run_tiled(&self, x: &[i32], threads: usize) -> Result<Vec<i32>> {
+        // Clamp the fan-out to the machine: more workers than cores only
+        // adds spawn/join overhead, and an absurd operator value
+        // (`--threads 9999`) must degrade, not abort on thread
+        // exhaustion. 2x cores leaves headroom for uneven tile costs.
+        let cores = std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(1);
+        let threads = threads.min(cores.saturating_mul(2));
+        let tiles = tile_split(&self.job, threads);
+        if tiles.len() <= 1 || self.job.macs() < LATENCY_TILE_MIN_MACS {
+            return self.run(x);
+        }
+        let x = self.checked_trim(x)?;
+        // Stage the shared operand once, outside the pool — including
+        // the per-call activation validation (signed-activation guard),
+        // paid once per layer instead of once per tile: packed
+        // activations for the popcount kernel, the validated trimmed
+        // plane itself for the oracle.
+        let staged: Option<PackedActivations> = match &self.kernel {
+            PlanKernel::Packed(pw) => {
+                Some(pack_activations(&self.job, &x, pw.width())?)
+            }
+            PlanKernel::Reference(_) => {
+                check_activation_plane(&self.job, &x)?;
+                None
+            }
+        };
+        let slots: Vec<Mutex<Option<Result<Vec<i32>>>>> =
+            tiles.iter().map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..threads.min(tiles.len()) {
+                let (slots, next, tiles, staged, x) =
+                    (&slots, &next, &tiles, &staged, &x);
+                s.spawn(move || loop {
+                    let t = next.fetch_add(1, Ordering::Relaxed);
+                    if t >= tiles.len() {
+                        break;
+                    }
+                    let res = match (&self.kernel, staged) {
+                        (PlanKernel::Packed(pw), Some(xp)) => {
+                            conv_bitserial_packed_tile(
+                                &self.job, xp, pw, &self.nq, tiles[t],
+                            )
+                        }
+                        (PlanKernel::Reference(w), _) => {
+                            conv_reference_tile(
+                                &self.job, x, w, &self.nq, tiles[t],
+                            )
+                        }
+                        (PlanKernel::Packed(_), None) => {
+                            unreachable!("packed kernel stages activations")
+                        }
+                    };
+                    *slots[t].lock().unwrap() = Some(res);
+                });
+            }
+        });
+        // Stitch: each tile is (rows, w_out, ko-range) row-major; the
+        // full output interleaves k_out per pixel.
+        let mut out =
+            vec![0i32; self.job.h_out * self.job.w_out * self.job.k_out];
+        for (tile, slot) in tiles.iter().zip(slots) {
+            let part = slot
+                .into_inner()
+                .unwrap()
+                .expect("every tile index was pulled by a worker")?;
+            let kos = tile.ko1 - tile.ko0;
+            for r in 0..tile.row1 - tile.row0 {
+                for ox in 0..self.job.w_out {
+                    let src = (r * self.job.w_out + ox) * kos;
+                    let dst = ((tile.row0 + r) * self.job.w_out + ox)
+                        * self.job.k_out
+                        + tile.ko0;
+                    out[dst..dst + kos]
+                        .copy_from_slice(&part[src..src + kos]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
     /// True when this plan streams through the packed bit-serial path.
     pub fn is_packed(&self) -> bool {
         matches!(self.kernel, PlanKernel::Packed(_))
+    }
+
+    /// Lane width of the packed bit-plane words (`None` on the
+    /// reference-oracle staging).
+    pub fn plane_width(&self) -> Option<PlaneWidth> {
+        match &self.kernel {
+            PlanKernel::Packed(pw) => Some(pw.width()),
+            PlanKernel::Reference(_) => None,
+        }
     }
 
     /// Resident bytes of the staged operands: the packed bit-plane words
@@ -182,7 +335,11 @@ impl LayerPlan {
                     signed: e.op.signed_output(),
                 };
                 let kernel = if numerics.packed_for(&job) {
-                    PlanKernel::Packed(pack_weights(&job, w)?)
+                    // word width is a plan-time parameter: wide words
+                    // past one 32-channel group, the literal §II-B3
+                    // layout otherwise
+                    let width = PlaneWidth::for_job(&job);
+                    PlanKernel::Packed(pack_weights_with(&job, w, width)?)
                 } else {
                     check_weights(&job, w)?;
                     PlanKernel::Reference(w.to_vec())
@@ -372,6 +529,124 @@ mod tests {
 
     fn quickstart_test_layer() -> crate::dnn::Layer {
         crate::dnn::quickstart_layer()
+    }
+
+    /// A conv entry wide enough (cin > 32) that plan compilation picks
+    /// 64-lane words and tiling has real work to split.
+    fn wide_entry() -> ManifestEntry {
+        ManifestEntry {
+            name: "conv3x3_h8_ci64_co64_s1_w4i4o4".into(),
+            op: LayerOp::Conv3x3,
+            h: 8,
+            cin: 64,
+            cout: 64,
+            stride: 1,
+            w_bits: 4,
+            i_bits: 4,
+            o_bits: 4,
+            shift: 10,
+        }
+    }
+
+    /// Wide layers compile to 64-lane plans whose reported bytes match
+    /// the actual word allocation exactly (ISSUE 4 satellite: the
+    /// plan-cache LRU must account real `Vec` word sizes, not assume
+    /// 4-byte words).
+    #[test]
+    fn wide_plan_bytes_track_word_size() {
+        let e = wide_entry();
+        let (_, w, scale, bias) = random_conv_inputs(&e, 21);
+        let plan =
+            LayerPlan::compile(&e, &w, &scale, &bias, NativeNumerics::BitSerial)
+                .unwrap();
+        let LayerPlan::Conv(c) = &plan else { panic!() };
+        assert_eq!(c.plane_width(), Some(PlaneWidth::W64));
+        // Kout * ceil(Kin/64) * w_bits * 9 taps * 8 bytes/word + requant
+        assert_eq!(plan.bytes(), 64 * 1 * 4 * 9 * 8 + 2 * 64 * 4);
+        // the narrow quickstart layer stays on the literal 32-lane
+        // §II-B3 layout
+        let q = quickstart_entry();
+        let (_, w, scale, bias) = random_conv_inputs(&q, 22);
+        let plan =
+            LayerPlan::compile(&q, &w, &scale, &bias, NativeNumerics::BitSerial)
+                .unwrap();
+        let LayerPlan::Conv(c) = &plan else { panic!() };
+        assert_eq!(c.plane_width(), Some(PlaneWidth::W32));
+    }
+
+    /// `run_tiled` is bitwise identical to the sequential `run` at every
+    /// thread count, for both kernel stagings.
+    #[test]
+    fn tiled_run_matches_sequential_run() {
+        let e = wide_entry();
+        let (x, w, scale, bias) = random_conv_inputs(&e, 23);
+        for numerics in [NativeNumerics::BitSerial, NativeNumerics::Reference]
+        {
+            let plan =
+                LayerPlan::compile(&e, &w, &scale, &bias, numerics).unwrap();
+            let LayerPlan::Conv(c) = &plan else { panic!() };
+            let want = c.run(&x).unwrap();
+            for threads in [1usize, 2, 3, 5, 8, 64] {
+                assert_eq!(
+                    c.run_tiled(&x, threads).unwrap(),
+                    want,
+                    "{numerics:?} with {threads} workers"
+                );
+            }
+            // bad planes fail the same way as the sequential path
+            assert!(c.run_tiled(&[0i32; 3], 4).is_err());
+        }
+    }
+
+    /// Below the latency-tile MAC floor `run_tiled` degrades to the
+    /// sequential path (no worker handoff for tiny layers) and stays
+    /// bitwise identical.
+    #[test]
+    fn tiny_jobs_skip_the_tile_pool() {
+        let m = Manifest::builtin();
+        let e = m.get("linear_ci64_co10_w8i8o8").unwrap();
+        assert!(e.rbe_job().unwrap().macs() < LATENCY_TILE_MIN_MACS);
+        let mut rng = Rng::new(24);
+        let w: Vec<i32> =
+            (0..10 * 64).map(|_| rng.range_i32(-128, 128)).collect();
+        let x: Vec<i32> = (0..64).map(|_| rng.range_i32(0, 256)).collect();
+        let scale: Vec<i32> = (0..10).map(|_| rng.range_i32(1, 16)).collect();
+        let bias: Vec<i32> =
+            (0..10).map(|_| rng.range_i32(-500, 500)).collect();
+        let plan =
+            LayerPlan::compile(e, &w, &scale, &bias, NativeNumerics::Auto)
+                .unwrap();
+        let LayerPlan::Conv(c) = &plan else { panic!() };
+        assert_eq!(c.run_tiled(&x, 8).unwrap(), c.run(&x).unwrap());
+    }
+
+    /// `tile_split` partitions the output exactly: every (row, k_out)
+    /// cell is covered by exactly one tile at every worker count,
+    /// including spatial-less (h_out = 1) linear-shaped jobs.
+    #[test]
+    fn tile_split_partitions_output_exactly() {
+        for (h_out, k_out) in [(8usize, 64usize), (1, 12), (3, 2), (6, 1)] {
+            let job =
+                RbeJob::conv1x1(h_out, h_out, 4, k_out, 1, 4, 4, 4).unwrap();
+            for threads in 1..=20usize {
+                let tiles = tile_split(&job, threads);
+                let mut cover = vec![0u32; h_out * k_out];
+                for t in &tiles {
+                    assert!(t.row0 < t.row1 && t.ko0 < t.ko1, "{t:?}");
+                    for r in t.row0..t.row1 {
+                        for k in t.ko0..t.ko1 {
+                            cover[r * k_out + k] += 1;
+                        }
+                    }
+                }
+                assert!(
+                    cover.iter().all(|&c| c == 1),
+                    "h_out {h_out} k_out {k_out} threads {threads}: \
+                     non-exact cover {cover:?}"
+                );
+                assert!(tiles.len() <= threads.max(1) * 2);
+            }
+        }
     }
 
     /// A `linears` manifest entry compiles to a signed-clip plan: zero

@@ -1,0 +1,114 @@
+//! Single-image latency mode (`Deployment::infer_latency`): conv layers
+//! tile-split across the worker pool must be bitwise identical to the
+//! sequential `infer` walk at every worker count (ISSUE 4 acceptance
+//! criterion), for unsigned and signed-head networks alike.
+
+#![cfg(feature = "native")]
+
+use marsellus::coordinator::Coordinator;
+use marsellus::dnn::{NetworkSpec, PrecisionConfig};
+use marsellus::power::OperatingPoint;
+use marsellus::runtime::Runtime;
+use marsellus::util::Rng;
+
+fn coordinator() -> Coordinator {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    let rt = Runtime::native(&dir).expect("native runtime");
+    Coordinator::with_runtime(rt).expect("coordinator")
+}
+
+fn op() -> OperatingPoint {
+    OperatingPoint::at_vdd(0.8)
+}
+
+/// Latency mode vs sequential `infer`, bitwise, across 1/4/16 workers,
+/// on both precision configs of ResNet-20 (the wide-word u64 plan path:
+/// every non-stem layer has cin > 32).
+#[test]
+fn latency_mode_matches_sequential_infer_across_worker_counts() {
+    let coord = coordinator();
+    for config in [PrecisionConfig::Mixed, PrecisionConfig::Uniform8] {
+        let spec = NetworkSpec::new("resnet20", config, 42);
+        let d = coord.deploy(&spec).unwrap();
+        let mut rng = Rng::new(31);
+        for i in 0..2 {
+            let image = d.random_input(&mut rng);
+            let base = d.infer(&op(), &image).unwrap();
+            for threads in [1usize, 4, 16] {
+                let lat = d.infer_latency(&op(), &image, threads).unwrap();
+                assert_eq!(
+                    lat.logits, base.logits,
+                    "{spec} image {i}: latency mode with {threads} \
+                     workers diverged from sequential infer"
+                );
+            }
+        }
+    }
+}
+
+/// The signed-head KWS net serves through latency mode too: negative
+/// logits survive tiling (the head itself is tiny and runs sequentially
+/// under the MAC floor, the conv body tiles).
+#[test]
+fn signed_head_network_serves_in_latency_mode() {
+    let coord = coordinator();
+    let d = coord
+        .deploy(&NetworkSpec::new("kws", PrecisionConfig::Mixed, 7))
+        .unwrap();
+    let mut rng = Rng::new(32);
+    let mut saw_negative = false;
+    for i in 0..6 {
+        let image = d.random_input(&mut rng);
+        let base = d.infer(&op(), &image).unwrap();
+        saw_negative |= base.logits.iter().any(|&v| v < 0);
+        for threads in [1usize, 4, 16] {
+            let lat = d.infer_latency(&op(), &image, threads).unwrap();
+            assert_eq!(
+                lat.logits, base.logits,
+                "image {i}, {threads} workers"
+            );
+        }
+    }
+    assert!(
+        saw_negative,
+        "no negative logit in 6 inputs — the signed head is not being \
+         exercised"
+    );
+}
+
+/// Latency mode and the batch worker pool agree image-for-image: the
+/// two parallelism axes (tiles within one image, images across the
+/// batch) are independently bitwise-exact.
+#[test]
+fn latency_mode_agrees_with_batch_pool() {
+    let coord = coordinator();
+    let d = coord
+        .deploy(&NetworkSpec::new("resnet20", PrecisionConfig::Mixed, 3))
+        .unwrap();
+    let mut rng = Rng::new(33);
+    let images: Vec<Vec<i32>> =
+        (0..3).map(|_| d.random_input(&mut rng)).collect();
+    let batch = d.infer_batch(&op(), &images, 4).unwrap();
+    for (i, img) in images.iter().enumerate() {
+        let lat = d.infer_latency(&op(), img, 4).unwrap();
+        assert_eq!(lat.logits, batch[i].logits, "image {i}");
+    }
+}
+
+/// Degenerate worker counts are serviced, not errors: 0 and 1 degrade
+/// to the sequential walk.
+#[test]
+fn degenerate_worker_counts_degrade_to_sequential() {
+    let coord = coordinator();
+    let d = coord
+        .deploy(&NetworkSpec::new("resnet20", PrecisionConfig::Mixed, 9))
+        .unwrap();
+    let mut rng = Rng::new(34);
+    let image = d.random_input(&mut rng);
+    let base = d.infer(&op(), &image).unwrap();
+    for threads in [0usize, 1] {
+        let lat = d.infer_latency(&op(), &image, threads).unwrap();
+        assert_eq!(lat.logits, base.logits, "{threads} workers");
+    }
+}
