@@ -43,6 +43,16 @@ RECORDED = {
         "tile_ms": "latency_tile_ms",
         "threads": "latency_threads",
     },
+    "hybrid": {
+        "speedup_pool": "speedup_pool",
+        "pool_vs_respawn": "pool_vs_respawn",
+        "speedup_hybrid": "speedup_hybrid",
+        "pool_ms": "hybrid_pool_ms",
+        "respawn_ms": "hybrid_respawn_ms",
+        "batch_img_s": "hybrid_batch_img_s",
+        "hybrid_img_s": "hybrid_img_s",
+        "threads": "hybrid_threads",
+    },
 }
 
 

@@ -1,0 +1,263 @@
+#!/usr/bin/env python3
+"""Render the committed bench history into a static trend page.
+
+Reads ``ci/BENCH_history.jsonl`` (one JSON row per main-branch commit,
+appended by ``bench_history.py``) and writes two artifacts:
+
+* ``bench_trend.md`` — a table view of the recent history plus a
+  min/median/latest summary per gated ratio, readable in any terminal
+  or PR comment;
+* ``bench_trend.html`` — small-multiple line charts (one per
+  ``speedup_*`` ratio, single series each, shared x axis of commits) so
+  the trajectories ``check_bench.py`` gates are visible at a glance.
+  Self-contained: no external assets, light/dark via
+  ``prefers-color-scheme``.
+
+The bench-smoke CI job uploads both as the ``bench-trend`` artifact.
+
+Usage: bench_trend.py HISTORY.jsonl [--out-dir DIR]
+"""
+
+import json
+import os
+import sys
+
+# Gated / headline ratios, in render order: (key, chart title).
+SERIES = (
+    ("speedup_planned", "throughput: plan vs per-call"),
+    ("speedup_parallel", "throughput: worker pool vs per-call"),
+    ("speedup_tile", "latency: respawn tiler vs sequential"),
+    ("speedup_pool", "hybrid: persistent pool vs sequential"),
+    ("pool_vs_respawn", "hybrid: pool vs respawn tiler"),
+    ("speedup_hybrid", "hybrid: hybrid vs batch schedule"),
+)
+
+# How many trailing history rows the table shows.
+TABLE_ROWS = 20
+
+# Chart geometry (px).
+W, H = 360, 150
+PAD_L, PAD_R, PAD_T, PAD_B = 44, 16, 24, 22
+
+CSS = """\
+:root {
+  color-scheme: light;
+  --surface-1: #fcfcfb;
+  --text-primary: #0b0b0b;
+  --text-secondary: #52514e;
+  --grid: #e4e3df;
+  --series-1: #2a78d6;
+}
+@media (prefers-color-scheme: dark) {
+  :root {
+    color-scheme: dark;
+    --surface-1: #1a1a19;
+    --text-primary: #ffffff;
+    --text-secondary: #c3c2b7;
+    --grid: #3a3937;
+    --series-1: #3987e5;
+  }
+}
+body {
+  background: var(--surface-1);
+  color: var(--text-primary);
+  font: 13px/1.45 system-ui, sans-serif;
+  margin: 24px;
+}
+h1 { font-size: 17px; }
+p.sub { color: var(--text-secondary); max-width: 60em; }
+.grid { display: flex; flex-wrap: wrap; gap: 20px; }
+figure { margin: 0; }
+figcaption { color: var(--text-secondary); font-size: 12px; }
+svg text { fill: var(--text-secondary); font: 10px system-ui, sans-serif; }
+svg text.val { fill: var(--text-primary); font-weight: 600; }
+svg .axis { stroke: var(--grid); stroke-width: 1; }
+svg .line { stroke: var(--series-1); stroke-width: 2; fill: none; }
+svg .dot { fill: var(--series-1); stroke: var(--surface-1);
+           stroke-width: 2; }
+"""
+
+
+def read_history(path):
+    rows = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    rows.append(json.loads(line))
+    except FileNotFoundError:
+        pass
+    return rows
+
+
+def values_of(rows, key):
+    """(row index, value) pairs for rows that record `key`."""
+    out = []
+    for i, r in enumerate(rows):
+        v = r.get(key)
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            out.append((i, float(v)))
+    return out
+
+
+def median(xs):
+    s = sorted(xs)
+    mid = len(s) // 2
+    return s[mid] if len(s) % 2 else (s[mid - 1] + s[mid]) / 2.0
+
+
+def short_commit(row):
+    c = str(row.get("commit", "?"))
+    return c[:10] if len(c) > 10 else c
+
+
+def chart_svg(rows, key, title):
+    """One single-series line chart (returns '' when the key has no
+    recorded history)."""
+    pts = values_of(rows, key)
+    if not pts:
+        return ""
+    lo = min(v for _, v in pts)
+    hi = max(v for _, v in pts)
+    span = (hi - lo) or max(abs(hi), 0.5)
+    lo, hi = lo - 0.15 * span, hi + 0.15 * span
+    n = len(rows)
+    xw = W - PAD_L - PAD_R
+    yh = H - PAD_T - PAD_B
+
+    def x(i):
+        return PAD_L + (xw / 2 if n <= 1 else i * xw / (n - 1))
+
+    def y(v):
+        return PAD_T + (hi - v) / (hi - lo) * yh
+
+    out = [
+        f'<svg viewBox="0 0 {W} {H}" width="{W}" height="{H}" '
+        f'role="img" aria-label="{title}">'
+    ]
+    # recessive grid: 3 horizontal rules + y tick labels
+    for t in range(3):
+        gv = lo + (hi - lo) * (t + 0.5) / 3
+        gy = y(gv)
+        out.append(
+            f'<line class="axis" x1="{PAD_L}" y1="{gy:.1f}" '
+            f'x2="{W - PAD_R}" y2="{gy:.1f}"/>'
+        )
+        out.append(
+            f'<text x="{PAD_L - 4}" y="{gy + 3:.1f}" '
+            f'text-anchor="end">{gv:.2f}</text>'
+        )
+    # baseline axis
+    out.append(
+        f'<line class="axis" x1="{PAD_L}" y1="{H - PAD_B}" '
+        f'x2="{W - PAD_R}" y2="{H - PAD_B}"/>'
+    )
+    # first/last commit labels on the x axis
+    out.append(
+        f'<text x="{PAD_L}" y="{H - 6}">{short_commit(rows[pts[0][0]])}'
+        "</text>"
+    )
+    if len(pts) > 1:
+        out.append(
+            f'<text x="{W - PAD_R}" y="{H - 6}" text-anchor="end">'
+            f"{short_commit(rows[pts[-1][0]])}</text>"
+        )
+    # the series: 2px line, hoverable >=8px markers, last value labeled
+    path = " ".join(
+        f"{'M' if k == 0 else 'L'}{x(i):.1f},{y(v):.1f}"
+        for k, (i, v) in enumerate(pts)
+    )
+    out.append(f'<path class="line" d="{path}"/>')
+    for i, v in pts:
+        out.append(
+            f'<circle class="dot" cx="{x(i):.1f}" cy="{y(v):.1f}" r="4">'
+            f"<title>{short_commit(rows[i])}: {key} = {v:.3f}</title>"
+            "</circle>"
+        )
+    li, lv = pts[-1]
+    out.append(
+        f'<text class="val" x="{min(x(li) + 6, W - PAD_R):.1f}" '
+        f'y="{max(y(lv) - 7, 10):.1f}" text-anchor="end">{lv:.2f}</text>'
+    )
+    out.append("</svg>")
+    return "".join(out)
+
+
+def render_html(rows):
+    figs = []
+    for key, title in SERIES:
+        svg = chart_svg(rows, key, title)
+        if svg:
+            figs.append(
+                f"<figure>{svg}<figcaption>{title} "
+                f"(<code>{key}</code>)</figcaption></figure>"
+            )
+    return (
+        "<!doctype html><html><head><meta charset='utf-8'>"
+        "<title>bench trend</title>"
+        f"<style>{CSS}</style></head><body>"
+        "<h1>Bench trajectory</h1>"
+        "<p class='sub'>Machine-independent speedup ratios per "
+        "main-branch commit (ci/BENCH_history.jsonl). check_bench.py "
+        "gates each ratio against the median of its recent history, "
+        "floored at the frozen baseline.</p>"
+        f"<div class='grid'>{''.join(figs)}</div>"
+        "</body></html>\n"
+    )
+
+
+def render_markdown(rows):
+    lines = ["# Bench trajectory", ""]
+    keys = [k for k, _ in SERIES if values_of(rows, k)]
+    if not keys:
+        lines.append("_no recorded history yet_")
+        return "\n".join(lines) + "\n"
+    lines.append("| ratio | min | median | latest | n |")
+    lines.append("|---|---|---|---|---|")
+    for k in keys:
+        vs = [v for _, v in values_of(rows, k)]
+        lines.append(
+            f"| `{k}` | {min(vs):.3f} | {median(vs):.3f} | {vs[-1]:.3f} "
+            f"| {len(vs)} |"
+        )
+    lines += ["", f"## Last {min(TABLE_ROWS, len(rows))} commits", ""]
+    lines.append("| commit | mode | " + " | ".join(keys) + " |")
+    lines.append("|---" * (2 + len(keys)) + "|")
+    for r in rows[-TABLE_ROWS:]:
+        cells = [short_commit(r), str(r.get("mode", "?"))]
+        for k in keys:
+            v = r.get(k)
+            cells.append(f"{v:.3f}" if isinstance(v, (int, float)) else "-")
+        lines.append("| " + " | ".join(cells) + " |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv):
+    args = [a for a in argv[1:] if not a.startswith("--")]
+    out_dir = "bench-trend"
+    if "--out-dir" in argv:
+        i = argv.index("--out-dir")
+        if i + 1 >= len(argv):
+            print("error: --out-dir needs a path")
+            return 2
+        out_dir = argv[i + 1]
+        if out_dir in args:
+            args.remove(out_dir)
+    if len(args) != 1:
+        print(__doc__)
+        return 2
+    rows = read_history(args[0])
+    os.makedirs(out_dir, exist_ok=True)
+    md = os.path.join(out_dir, "bench_trend.md")
+    html = os.path.join(out_dir, "bench_trend.html")
+    with open(md, "w") as f:
+        f.write(render_markdown(rows))
+    with open(html, "w") as f:
+        f.write(render_html(rows))
+    print(f"rendered {len(rows)} history rows -> {md}, {html}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

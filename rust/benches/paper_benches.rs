@@ -101,9 +101,10 @@ impl Throughput {
             .map(|l| {
                 format!(
                     "   {{\"name\": \"{}\", \"setup_us\": {:.1}, \
-                     \"compute_us\": {:.1}}}",
+                     \"pack_us\": {:.1}, \"compute_us\": {:.1}}}",
                     json_escape(&l.name),
                     l.setup_us,
+                    l.pack_us,
                     l.compute_us
                 )
             })
@@ -185,8 +186,11 @@ fn throughput_bench(smoke: bool) -> Throughput {
 }
 
 /// Single-image latency measurements: the sequential plan walk vs the
-/// tiled latency mode (`Deployment::infer_latency`) over the worker
-/// pool, best-of-N per mode.
+/// **legacy** spawn-per-layer tiler (`ConvPlan::run_tiled` via
+/// `infer_latency_opts(.., pooled: false)`), best-of-N per mode. The
+/// persistent-pool path is measured separately by the `hybrid` section
+/// so `speedup_tile` keeps its ISSUE-4 meaning and `speedup_pool` can
+/// be gated against it.
 struct Latency {
     threads: usize,
     iters: u32,
@@ -238,8 +242,8 @@ fn latency_bench(smoke: bool) -> Latency {
     // warm both paths (memoizes the scheduler report, faults pages in)
     let base = deployment.infer(&op, &image).expect("infer");
     let tiled = deployment
-        .infer_latency(&op, &image, threads)
-        .expect("infer_latency");
+        .infer_latency_opts(&op, &image, threads, false)
+        .expect("infer_latency_opts");
     assert_eq!(base.logits, tiled.logits, "latency mode changed logits");
 
     let best_of = |f: &dyn Fn()| {
@@ -256,10 +260,157 @@ fn latency_bench(smoke: bool) -> Latency {
     });
     let tile_ms = best_of(&|| {
         deployment
+            .infer_latency_opts(&op, &image, threads, false)
+            .expect("infer_latency_opts");
+    });
+    Latency { threads, iters, seq_ms, tile_ms }
+}
+
+/// Hybrid batch x tile scheduler measurements over the persistent
+/// `ExecPool`: pooled single-image latency (vs the sequential walk and
+/// vs the legacy spawn-per-layer tiler at equal thread count), and
+/// mid-size-batch throughput of the hybrid schedule vs the pure batch
+/// schedule.
+struct Hybrid {
+    threads: usize,
+    images: usize,
+    iters: u32,
+    seq_ms: f64,
+    pool_ms: f64,
+    respawn_ms: f64,
+    batch_img_s: f64,
+    hybrid_img_s: f64,
+}
+
+impl Hybrid {
+    /// Pooled single-image speedup over the sequential walk — the
+    /// persistent-pool analog of `speedup_tile`, trajectory-gated in
+    /// CI.
+    fn speedup_pool(&self) -> f64 {
+        self.seq_ms / self.pool_ms
+    }
+
+    /// Pooled vs legacy spawn-per-layer latency at equal thread count —
+    /// the recovered spawn overhead; gated >= the baseline so the pool
+    /// can never silently lose to respawning.
+    fn pool_vs_respawn(&self) -> f64 {
+        self.respawn_ms / self.pool_ms
+    }
+
+    /// Hybrid vs pure-batch throughput on the mid-size batch
+    /// (informational: the regime where the remainder tiles).
+    fn speedup_hybrid(&self) -> f64 {
+        self.hybrid_img_s / self.batch_img_s
+    }
+
+    fn to_json(&self) -> String {
+        format!(
+            " {{\n  \"threads\": {},\n  \"images\": {},\n  \
+             \"iters\": {},\n  \"seq_ms\": {:.3},\n  \
+             \"pool_ms\": {:.3},\n  \"respawn_ms\": {:.3},\n  \
+             \"batch_img_s\": {:.3},\n  \"hybrid_img_s\": {:.3},\n  \
+             \"speedup_pool\": {:.3},\n  \"pool_vs_respawn\": {:.3},\n  \
+             \"speedup_hybrid\": {:.3}\n }}",
+            self.threads,
+            self.images,
+            self.iters,
+            self.seq_ms,
+            self.pool_ms,
+            self.respawn_ms,
+            self.batch_img_s,
+            self.hybrid_img_s,
+            self.speedup_pool(),
+            self.pool_vs_respawn(),
+            self.speedup_hybrid()
+        )
+    }
+}
+
+/// Measure the pooled scheduler on the ResNet-20 example: single-image
+/// latency through the persistent pool (vs sequential and vs the
+/// legacy per-layer respawn tiler), and a threads + threads/2 mid-size
+/// batch under the hybrid vs the batch schedule — asserting
+/// bitwise-identical logits across every mode along the way.
+fn hybrid_bench(smoke: bool) -> Hybrid {
+    use marsellus::coordinator::{Coordinator, Schedule};
+    use marsellus::dnn::{NetworkSpec, PrecisionConfig};
+    use marsellus::power::OperatingPoint;
+    use marsellus::util::Rng;
+
+    let dir = marsellus::runtime::Runtime::resolve_artifacts_dir(None);
+    let coord = Coordinator::new(dir).expect("coordinator");
+    let spec = NetworkSpec::new("resnet20", PrecisionConfig::Mixed, 42);
+    let op = OperatingPoint::at_vdd(0.8);
+    let threads = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(4);
+    let iters = if smoke { 5 } else { 15 };
+    let deployment = coord.deploy(&spec).expect("deploy");
+    let mut rng = Rng::new(0x9001);
+    let image = deployment.random_input(&mut rng);
+
+    // single image: sequential vs pooled vs legacy respawn, all equal
+    let base = deployment.infer(&op, &image).expect("infer");
+    let pooled = deployment
+        .infer_latency(&op, &image, threads)
+        .expect("infer_latency");
+    assert_eq!(base.logits, pooled.logits, "pooled path changed logits");
+    let best_of = |f: &dyn Fn()| {
+        let mut best = f64::INFINITY;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        best
+    };
+    let seq_ms = best_of(&|| {
+        deployment.infer(&op, &image).expect("infer");
+    });
+    let pool_ms = best_of(&|| {
+        deployment
             .infer_latency(&op, &image, threads)
             .expect("infer_latency");
     });
-    Latency { threads, iters, seq_ms, tile_ms }
+    let respawn_ms = best_of(&|| {
+        deployment
+            .infer_latency_opts(&op, &image, threads, false)
+            .expect("infer_latency_opts");
+    });
+
+    // mid-size batch (threads + threads/2): hybrid vs pure batch
+    let n = threads + (threads / 2).max(1);
+    let images: Vec<Vec<i32>> =
+        (0..n).map(|_| deployment.random_input(&mut rng)).collect();
+    let run = |sched: Schedule| {
+        let t0 = Instant::now();
+        let res = deployment
+            .infer_scheduled(&op, &images, sched)
+            .expect("infer_scheduled");
+        let img_s = n as f64 / t0.elapsed().as_secs_f64();
+        let logits: Vec<Vec<i32>> =
+            res.into_iter().map(|r| r.logits).collect();
+        (img_s, logits)
+    };
+    let (_, warm) = run(Schedule::batch(threads));
+    let (batch_img_s, batch_logits) = run(Schedule::batch(threads));
+    let (hybrid_img_s, hybrid_logits) = run(Schedule::hybrid(threads));
+    assert_eq!(warm, batch_logits, "batch schedule is nondeterministic");
+    assert_eq!(
+        batch_logits, hybrid_logits,
+        "hybrid schedule changed logits"
+    );
+
+    Hybrid {
+        threads,
+        images: n,
+        iters,
+        seq_ms,
+        pool_ms,
+        respawn_ms,
+        batch_img_s,
+        hybrid_img_s,
+    }
 }
 
 fn write_json(
@@ -269,6 +420,7 @@ fn write_json(
     total: f64,
     throughput: &Throughput,
     latency: &Latency,
+    hybrid: &Hybrid,
 ) {
     let resolved = resolve_out_path(path);
     let path = resolved.display().to_string();
@@ -287,9 +439,11 @@ fn write_json(
     let doc = format!(
         "{{\n \"mode\": \"{mode}\",\n \"total_best_ms\": {total:.3},\n \
          \"throughput\":\n{},\n \"latency\":\n{},\n \
+         \"hybrid\":\n{},\n \
          \"benches\": [\n{}\n ]\n}}\n",
         throughput.to_json(),
         latency.to_json(),
+        hybrid.to_json(),
         rows.join(",\n")
     );
     if let Err(e) = std::fs::write(path, doc) {
@@ -400,10 +554,32 @@ fn main() {
         lat.seq_ms
     );
     println!(
-        "  latency mode    {:>8.2} ms/img  ({} tile workers, {:.2}x)",
+        "  respawn tiler   {:>8.2} ms/img  ({} tile workers, {:.2}x, \
+         legacy)",
         lat.tile_ms,
         lat.threads,
         lat.speedup_tile()
+    );
+
+    // persistent pool: pooled latency + hybrid batch x tile scheduling
+    println!("\npersistent-pool scheduler (ResNet-20 mixed, best of N)");
+    let hyb = hybrid_bench(smoke);
+    println!(
+        "  pooled latency  {:>8.2} ms/img  ({} workers, {:.2}x vs seq, \
+         {:.2}x vs respawn)",
+        hyb.pool_ms,
+        hyb.threads,
+        hyb.speedup_pool(),
+        hyb.pool_vs_respawn()
+    );
+    println!(
+        "  batch schedule  {:>8.2} img/s  ({} images, {} workers)",
+        hyb.batch_img_s, hyb.images, hyb.threads
+    );
+    println!(
+        "  hybrid schedule {:>8.2} img/s  ({:.2}x vs batch)",
+        hyb.hybrid_img_s,
+        hyb.speedup_hybrid()
     );
 
     if let Some(path) = json_path {
@@ -414,6 +590,7 @@ fn main() {
             total,
             &thr,
             &lat,
+            &hyb,
         );
     }
 

@@ -15,8 +15,14 @@
 //! (tenants) can coexist over one shared runtime; the plan cache evicts
 //! least-recently-used deployments once its byte budget is exceeded and
 //! a re-deployed evictee rebuilds bit-identically from its spec.
+//!
+//! Serving parallelism is **one** path: [`Deployment::infer_scheduled`]
+//! provisions a persistent `ExecPool` per call (workers spawned once,
+//! fed jobs — never re-spawned per layer) and a [`Schedule`] decides
+//! what the jobs are: whole-image shards, per-layer packing bands +
+//! conv tiles, or the hybrid of both. `infer_batch` and `infer_latency`
+//! are thin presets over it, with bitwise-identical outputs.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Result};
@@ -25,10 +31,90 @@ use crate::dnn::{Layer, NetworkSpec};
 use crate::mapping::NetworkReport;
 use crate::metrics::LayerSplit;
 use crate::power::OperatingPoint;
-use crate::runtime::{BackendKind, NetworkPlan};
+use crate::runtime::{BackendKind, ExecPool, NetworkPlan, PoolTelemetry};
 use crate::util::Rng;
 
-use super::infer::{Coordinator, InferenceResult};
+use super::infer::{ConvExec, Coordinator, InferenceResult};
+
+/// Which parallelism shape [`Deployment::infer_scheduled`] applies.
+/// Every mode is bitwise identical to a sequential per-image walk; they
+/// differ only in how the pool's workers are fed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleMode {
+    /// Pick per call: `Latency` for a single image, `Hybrid` otherwise.
+    Auto,
+    /// Images across workers only — the throughput preset behind
+    /// [`Deployment::infer_batch`].
+    Batch,
+    /// Conv tiles and packing bands within each image, images in
+    /// sequence — the single-image preset behind
+    /// [`Deployment::infer_latency`].
+    Latency,
+    /// Whole-image shards for the pool-aligned bulk of the batch, then
+    /// the small remainder tiled within-image over the same pool — the
+    /// mid-size-batch regime neither pure mode covers.
+    Hybrid,
+}
+
+impl std::str::FromStr for ScheduleMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(ScheduleMode::Auto),
+            "batch" => Ok(ScheduleMode::Batch),
+            "latency" => Ok(ScheduleMode::Latency),
+            "hybrid" => Ok(ScheduleMode::Hybrid),
+            other => anyhow::bail!(
+                "unknown schedule {other:?} (known: auto, batch, latency, \
+                 hybrid)"
+            ),
+        }
+    }
+}
+
+/// A serving schedule: worker count plus parallelism shape. The worker
+/// count includes the calling thread and is clamped to 2x the machine's
+/// cores by the pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Schedule {
+    /// Total workers (the calling thread counts).
+    pub threads: usize,
+    /// Parallelism shape — see [`ScheduleMode`].
+    pub mode: ScheduleMode,
+}
+
+impl Schedule {
+    /// Let the scheduler pick the shape per call.
+    pub fn auto(threads: usize) -> Self {
+        Self { threads, mode: ScheduleMode::Auto }
+    }
+
+    /// Images across workers (throughput preset).
+    pub fn batch(threads: usize) -> Self {
+        Self { threads, mode: ScheduleMode::Batch }
+    }
+
+    /// Tiles within each image (single-image latency preset).
+    pub fn latency(threads: usize) -> Self {
+        Self { threads, mode: ScheduleMode::Latency }
+    }
+
+    /// Image shards + tiled remainder over one pool.
+    pub fn hybrid(threads: usize) -> Self {
+        Self { threads, mode: ScheduleMode::Hybrid }
+    }
+}
+
+/// Effective-tile-speedup estimate bounding the hybrid scheduler's
+/// tiled remainder: remainders of `min(threads, CAP)` images or more
+/// stay image-parallel, strictly smaller ones are tiled. Rationale:
+/// tiling one image across `T` workers yields at most ~`min(T, 8)`
+/// effective speedup on the zoo networks (activation packing and
+/// elementwise layers bound it), so a remainder of `k` images finishes
+/// faster as concurrent whole-image shards (wall = 1 image) once
+/// `k >= min(T, 8)`; below that, tiling each in turn wins.
+pub const HYBRID_TILE_SPEEDUP_CAP: usize = 8;
 
 /// A deployed network: spec resolved, layers staged, plan compiled.
 ///
@@ -185,10 +271,25 @@ impl<'c> Deployment<'c> {
         })
     }
 
-    /// Per-layer setup-vs-compute split on one input: plan-compile cost
-    /// (amortized over the deployment) vs activation-streaming cost
-    /// (paid per inference). Requires the plan path (native backend).
+    /// Per-layer setup/pack/compute split on one input: plan-compile
+    /// cost (amortized over the deployment) vs activation-streaming
+    /// cost (paid per inference), with the activation-packing share of
+    /// compute broken out. Requires the plan path (native backend).
     pub fn profile(&self, image: &[i32]) -> Result<Vec<LayerSplit>> {
+        self.profile_scheduled(image, 1).map(|(split, _)| split)
+    }
+
+    /// [`Self::profile`] over a persistent worker pool of `threads`
+    /// workers, additionally returning the pool telemetry — how many
+    /// threads were spawned (once) and how many per-layer jobs they
+    /// served. The contrast with the pre-pool path (which spawned a
+    /// fresh thread set per tiled conv layer) is the recovered spawn
+    /// overhead `marsellus infer --profile` prints.
+    pub fn profile_scheduled(
+        &self,
+        image: &[i32],
+        threads: usize,
+    ) -> Result<(Vec<LayerSplit>, PoolTelemetry)> {
         let plan = self.plan.as_ref().ok_or_else(|| {
             anyhow::anyhow!(
                 "{}: profiling needs the plan path (native backend)",
@@ -196,29 +297,62 @@ impl<'c> Deployment<'c> {
             )
         })?;
         let mut split = Vec::with_capacity(plan.steps().len());
-        let _ =
-            self.coord.run_network_planned(plan, image, Some(&mut split), 1)?;
-        Ok(split)
+        let telemetry = if threads > 1 {
+            ExecPool::with(threads, |pool| -> Result<PoolTelemetry> {
+                self.coord.run_network_exec(
+                    plan,
+                    image,
+                    Some(&mut split),
+                    ConvExec::Pool(pool),
+                )?;
+                Ok(pool.telemetry())
+            })?
+        } else {
+            self.coord.run_network_exec(
+                plan,
+                image,
+                Some(&mut split),
+                ConvExec::Seq,
+            )?;
+            PoolTelemetry::sequential()
+        };
+        Ok((split, telemetry))
     }
 
     /// [`Self::infer`] in **latency mode**: one image, with every conv
-    /// layer's `(output-row, k_out)` range split across `threads`
-    /// workers of an intra-image tile pool (`ConvPlan::run_tiled`) over
-    /// the shared immutable plan. Requires the plan path (native
-    /// backend).
+    /// layer's activation packing (row bands) and `(output-row, k_out)`
+    /// range (tiles) split across a persistent pool of `threads`
+    /// workers provisioned once for the whole layer walk. Requires the
+    /// plan path (native backend). A thin preset over
+    /// [`Self::infer_scheduled`] ([`Schedule::latency`]).
     ///
     /// Logits are bitwise identical to [`Self::infer`] at every worker
     /// count — tiling only changes which worker computes which disjoint
     /// output element. Use [`Self::infer_batch`] when *throughput* over
     /// many queued images matters (data-parallel over images, near-ideal
     /// scaling); use this when one image's wall-clock latency matters
-    /// (tile-parallel inside the image, scaling bounded by packing /
-    /// elementwise serial fractions).
+    /// (tile-parallel inside the image, scaling bounded by the
+    /// elementwise serial fraction).
     pub fn infer_latency(
         &self,
         op: &OperatingPoint,
         image: &[i32],
         threads: usize,
+    ) -> Result<InferenceResult> {
+        self.infer_latency_opts(op, image, threads, true)
+    }
+
+    /// [`Self::infer_latency`] with an explicit pool choice. `pooled =
+    /// false` runs the **legacy** pre-pool tiler (`ConvPlan::run_tiled`:
+    /// a fresh scoped-thread set spawned and joined per conv layer) —
+    /// kept callable so benches can measure the recovered spawn
+    /// overhead; both choices are bitwise identical.
+    pub fn infer_latency_opts(
+        &self,
+        op: &OperatingPoint,
+        image: &[i32],
+        threads: usize,
+        pooled: bool,
     ) -> Result<InferenceResult> {
         let plan = self.plan.as_ref().ok_or_else(|| {
             anyhow::anyhow!(
@@ -227,8 +361,16 @@ impl<'c> Deployment<'c> {
             )
         })?;
         let report = self.report(op)?;
-        let logits =
-            self.coord.run_network_planned(plan, image, None, threads)?;
+        let logits = if pooled {
+            self.coord.run_network_planned(plan, image, None, threads)?
+        } else {
+            self.coord.run_network_exec(
+                plan,
+                image,
+                None,
+                ConvExec::Respawn(threads),
+            )?
+        };
         Ok(InferenceResult {
             logits,
             report: (*report).clone(),
@@ -237,9 +379,11 @@ impl<'c> Deployment<'c> {
     }
 
     /// Run a batch of inputs in parallel over an intra-batch worker pool
-    /// of `threads` scoped threads sharing this deployment (the backend,
-    /// its caches and the compiled plan are `Send + Sync` and shared
-    /// read-only).
+    /// of `threads` workers sharing this deployment (the backend, its
+    /// caches and the compiled plan are `Send + Sync` and shared
+    /// read-only). A thin preset over [`Self::infer_scheduled`]
+    /// ([`Schedule::batch`]: images across workers, no intra-image
+    /// tiling).
     ///
     /// The batch is N requests against this one deployed model. Results
     /// come back in input order and are bitwise independent of
@@ -268,6 +412,43 @@ impl<'c> Deployment<'c> {
         threads: usize,
         use_plans: bool,
     ) -> Result<Vec<InferenceResult>> {
+        self.infer_scheduled_opts(
+            op,
+            images,
+            Schedule::batch(threads),
+            use_plans,
+        )
+    }
+
+    /// Run a batch of inputs under an explicit [`Schedule`] — the one
+    /// serving path every preset (`infer_batch`, `infer_latency`,
+    /// `Auto`) narrows to. One persistent [`ExecPool`] is provisioned
+    /// for the whole call and fed every job the schedule produces:
+    /// whole-image shards ([`ScheduleMode::Batch`]), per-layer packing
+    /// bands + conv tiles ([`ScheduleMode::Latency`]), or shards for
+    /// the pool-aligned bulk of the batch and tiles for the remainder
+    /// ([`ScheduleMode::Hybrid`]).
+    ///
+    /// Results come back in input order and are bitwise identical to a
+    /// sequential per-image walk for every `(batch, threads, mode)`
+    /// combination — scheduling only moves work between workers, never
+    /// changes arithmetic.
+    pub fn infer_scheduled(
+        &self,
+        op: &OperatingPoint,
+        images: &[Vec<i32>],
+        sched: Schedule,
+    ) -> Result<Vec<InferenceResult>> {
+        self.infer_scheduled_opts(op, images, sched, self.plan.is_some())
+    }
+
+    fn infer_scheduled_opts(
+        &self,
+        op: &OperatingPoint,
+        images: &[Vec<i32>],
+        sched: Schedule,
+        use_plans: bool,
+    ) -> Result<Vec<InferenceResult>> {
         ensure!(
             !use_plans || self.coord.runtime.kind() == BackendKind::Native,
             "plan-driven execution requires the native backend (current \
@@ -284,66 +465,163 @@ impl<'c> Deployment<'c> {
             return Ok(Vec::new());
         }
         let report = self.report(op)?;
-        // Per-network state was prepared ONCE at deploy time; the only
-        // per-batch choice is which staged operands to stream through.
-        let params = if use_plans {
-            None
+        let logits = if use_plans {
+            let plan = self.plan.as_deref().expect("ensured above");
+            self.run_scheduled_planned(plan, images, sched)
         } else {
-            Some(self.params_for_per_call())
-        };
-        let plan = if use_plans { self.plan.as_deref() } else { None };
-        let run_one = |img: &[i32]| -> Result<Vec<i32>> {
-            match (plan, &params) {
-                (Some(p), _) => {
-                    self.coord.run_network_planned(p, img, None, 1)
-                }
-                (None, Some(pr)) => self
-                    .coord
-                    .run_network(&self.layers, pr.as_ref(), img, &[])
-                    .map(|(l, _)| l),
-                (None, None) => unreachable!(),
-            }
-        };
-
-        let threads = threads.clamp(1, n);
-        let logits: Vec<Option<Result<Vec<i32>>>> = if threads == 1 {
-            images.iter().map(|img| Some(run_one(img.as_slice()))).collect()
-        } else {
-            // Worker pool: threads pull the next image index from an
-            // atomic queue, so stragglers don't idle the rest of the
-            // pool. Output order (and every bit of every result) is
-            // independent of the interleaving.
-            let slots: Vec<Mutex<Option<Result<Vec<i32>>>>> =
-                (0..n).map(|_| Mutex::new(None)).collect();
-            let next = AtomicUsize::new(0);
-            std::thread::scope(|s| {
-                for _ in 0..threads {
-                    let (slots, next, run_one) = (&slots, &next, &run_one);
-                    s.spawn(move || loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        *slots[i].lock().unwrap() =
-                            Some(run_one(images[i].as_slice()));
-                    });
-                }
-            });
-            slots.into_iter().map(|slot| slot.into_inner().unwrap()).collect()
+            // the per-call path executes whole artifacts — only the
+            // image axis can parallelize
+            ensure!(
+                matches!(
+                    sched.mode,
+                    ScheduleMode::Auto | ScheduleMode::Batch
+                ),
+                "{}: the {:?} schedule tiles within images, which needs \
+                 the plan path",
+                self.spec,
+                sched.mode
+            );
+            self.run_batch_per_call(images, sched.threads)
         };
         logits
             .into_iter()
-            .enumerate()
-            .map(|(i, slot)| {
-                let l = slot
-                    .unwrap_or_else(|| panic!("batch slot {i} never filled"))?;
+            .map(|l| {
                 Ok(InferenceResult {
-                    logits: l,
+                    logits: l?,
                     report: (*report).clone(),
                     cross_checked: 0,
                 })
             })
             .collect()
+    }
+
+    /// The plan-path scheduler body: provision one pool, feed it the
+    /// schedule's jobs, return per-image results in input order.
+    fn run_scheduled_planned(
+        &self,
+        plan: &NetworkPlan,
+        images: &[Vec<i32>],
+        sched: Schedule,
+    ) -> Vec<Result<Vec<i32>>> {
+        let n = images.len();
+        let threads = sched.threads.max(1);
+        let mode = match sched.mode {
+            ScheduleMode::Auto if n == 1 => ScheduleMode::Latency,
+            ScheduleMode::Auto => ScheduleMode::Hybrid,
+            m => m,
+        };
+        if threads == 1 {
+            return images
+                .iter()
+                .map(|img| {
+                    self.coord.run_network_exec(
+                        plan,
+                        img,
+                        None,
+                        ConvExec::Seq,
+                    )
+                })
+                .collect();
+        }
+        // image shards never benefit from more workers than images
+        let pool_threads = if mode == ScheduleMode::Batch {
+            threads.min(n)
+        } else {
+            threads
+        };
+        let slots: Arc<Vec<Mutex<Option<Result<Vec<i32>>>>>> =
+            Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+        ExecPool::with(pool_threads, |pool| {
+            // whole-image shards: workers pull image indices off the
+            // job queue and run the sequential walk per image
+            let shard_range = |lo: usize, hi: usize| {
+                if lo >= hi {
+                    return;
+                }
+                let slots = slots.clone();
+                pool.scatter(
+                    hi - lo,
+                    Arc::new(move |i| {
+                        let idx = lo + i;
+                        *slots[idx].lock().unwrap() =
+                            Some(self.coord.run_network_exec(
+                                plan,
+                                &images[idx],
+                                None,
+                                ConvExec::Seq,
+                            ));
+                    }),
+                );
+            };
+            // tiled images: the caller walks each image's layers,
+            // fanning every layer's bands + tiles over the same pool
+            let tile_range = |lo: usize, hi: usize| {
+                for idx in lo..hi {
+                    *slots[idx].lock().unwrap() =
+                        Some(self.coord.run_network_exec(
+                            plan,
+                            &images[idx],
+                            None,
+                            ConvExec::Pool(pool),
+                        ));
+                }
+            };
+            match mode {
+                ScheduleMode::Batch => shard_range(0, n),
+                ScheduleMode::Latency => tile_range(0, n),
+                ScheduleMode::Hybrid => {
+                    let w = pool.width();
+                    let rem = if n >= w { n % w } else { n };
+                    let tiled = if rem > 0
+                        && rem < w.min(HYBRID_TILE_SPEEDUP_CAP)
+                    {
+                        rem
+                    } else {
+                        0
+                    };
+                    shard_range(0, n - tiled);
+                    tile_range(n - tiled, n);
+                }
+                ScheduleMode::Auto => unreachable!("resolved above"),
+            }
+        });
+        Self::take_slots(&slots)
+    }
+
+    /// The per-call (pre-plan) batch body: image shards only, over the
+    /// same pool mechanism.
+    fn run_batch_per_call(
+        &self,
+        images: &[Vec<i32>],
+        threads: usize,
+    ) -> Vec<Result<Vec<i32>>> {
+        let n = images.len();
+        // Per-network state was prepared ONCE at deploy time; per-batch
+        // work is only streaming images through it.
+        let params = self.params_for_per_call();
+        let run_one = |img: &[i32]| -> Result<Vec<i32>> {
+            self.coord
+                .run_network(&self.layers, params.as_ref(), img, &[])
+                .map(|(l, _)| l)
+        };
+        let threads = threads.clamp(1, n);
+        if threads == 1 {
+            return images.iter().map(|img| run_one(img)).collect();
+        }
+        let slots: Arc<Vec<Mutex<Option<Result<Vec<i32>>>>>> =
+            Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+        ExecPool::with(threads, |pool| {
+            let task_slots = slots.clone();
+            let run_one = &run_one;
+            pool.scatter(
+                n,
+                Arc::new(move |i| {
+                    *task_slots[i].lock().unwrap() =
+                        Some(run_one(images[i].as_slice()));
+                }),
+            );
+        });
+        Self::take_slots(&slots)
     }
 
     /// One input through whichever staged path this deployment holds
@@ -363,6 +641,22 @@ impl<'c> Deployment<'c> {
                 )
                 .map(|(l, _)| l),
         }
+    }
+
+    /// Drain per-image result slots in input order. Every slot is
+    /// filled by construction — `ExecPool::scatter` is a barrier.
+    fn take_slots(
+        slots: &[Mutex<Option<Result<Vec<i32>>>>],
+    ) -> Vec<Result<Vec<i32>>> {
+        slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                s.lock().unwrap().take().unwrap_or_else(|| {
+                    panic!("batch slot {i} never filled")
+                })
+            })
+            .collect()
     }
 
     /// Seed-derived weights for the per-call path: the staged map when

@@ -33,7 +33,8 @@ use crate::rbe::functional::{
 };
 use crate::rbe::{RbeJob, RbeMode};
 use crate::runtime::{
-    BackendKind, LayerPlan, NetworkPlan, PlanStep, Runtime, TensorArg,
+    BackendKind, ConvRun, ExecPool, LayerPlan, NetworkPlan, PlanStep,
+    Runtime, TensorArg,
 };
 use crate::util::Rng;
 
@@ -48,6 +49,23 @@ pub struct InferenceResult {
     /// Layers whose backend output was cross-checked against the Rust
     /// bit-serial RBE model.
     pub cross_checked: usize,
+}
+
+/// How conv layers of a planned walk fan out — the execution half of a
+/// schedule. Every variant is bitwise identical; they differ only in
+/// wall clock and in how worker threads are provisioned.
+#[derive(Clone, Copy)]
+pub(super) enum ConvExec<'p, 'env> {
+    /// Inline on the calling thread (also the per-image shard mode of
+    /// the batch/hybrid scheduler: parallelism lives across images).
+    Seq,
+    /// Per-layer jobs (packing bands + conv tiles) on a persistent
+    /// worker pool provisioned once for the whole walk.
+    Pool(&'p ExecPool<'env>),
+    /// The legacy pre-pool tiler: a fresh scoped-thread set spawned and
+    /// joined per conv layer. Kept for A/B benches of the recovered
+    /// spawn overhead.
+    Respawn(usize),
 }
 
 /// The system leader.
@@ -213,27 +231,29 @@ impl Coordinator {
 
     /// Walk the compiled plan for one image: activation streaming only.
     /// Residual bookkeeping mirrors [`Self::run_network`] exactly. When
-    /// `profile` is given, per-layer compute time is recorded next to
-    /// the plan-compile (setup) time. `tile_threads > 1` is the
-    /// single-image **latency mode**: each conv layer's
-    /// `(output-row, k_out)` range is split across that many tile
-    /// workers (`ConvPlan::run_tiled`) — bitwise identical to the
-    /// sequential walk, elementwise layers stay serial (they are memory
+    /// `profile` is given, per-layer compute time (and its
+    /// activation-packing share) is recorded next to the plan-compile
+    /// (setup) time. `exec` chooses how each conv layer fans out —
+    /// sequential, over a persistent [`ExecPool`], or over the legacy
+    /// spawn-per-layer tiler; every choice is bitwise identical, and
+    /// elementwise layers stay serial in all of them (they are memory
     /// bound and a fraction of a percent of the work).
-    pub(super) fn run_network_planned(
+    pub(super) fn run_network_exec<'env>(
         &self,
-        plan: &NetworkPlan,
+        plan: &'env NetworkPlan,
         image: &[i32],
         mut profile: Option<&mut Vec<LayerSplit>>,
-        tile_threads: usize,
+        exec: ConvExec<'_, 'env>,
     ) -> Result<Vec<i32>> {
-        let run_conv = |c: &crate::runtime::ConvPlan,
+        let run_conv = |c: &'env crate::runtime::ConvPlan,
                         x: &[i32]|
-         -> Result<Vec<i32>> {
-            if tile_threads > 1 {
-                c.run_tiled(x, tile_threads)
-            } else {
-                c.run(x)
+         -> Result<ConvRun> {
+            match exec {
+                ConvExec::Seq => c.run_scheduled(x, None),
+                ConvExec::Pool(pool) => c.run_scheduled(x, Some(pool)),
+                ConvExec::Respawn(threads) => c
+                    .run_tiled(x, threads)
+                    .map(|out| ConvRun { out, pack_us: 0.0 }),
             }
         };
         let mut cur = image.to_vec();
@@ -242,25 +262,32 @@ impl Coordinator {
         for step in plan.steps() {
             let l = &step.layer;
             let t0 = profile.is_some().then(Instant::now);
+            let mut pack_us = 0.0;
             match (&step.plan, l.op) {
                 (LayerPlan::Conv(c), LayerOp::Conv3x3) => {
                     if l.name.ends_with(".conv0") {
                         block_in = cur.clone();
                     }
                     let padded = Self::pad1(&cur, l.h, l.h, l.cin);
-                    cur = run_conv(c, &padded)
+                    let r = run_conv(c, &padded)
                         .with_context(|| format!("layer {}", l.name))?;
+                    pack_us = r.pack_us;
+                    cur = r.out;
                 }
                 (LayerPlan::Conv(c), LayerOp::Conv1x1) => {
-                    down_out = run_conv(c, &block_in)
+                    let r = run_conv(c, &block_in)
                         .with_context(|| format!("layer {}", l.name))?;
+                    pack_us = r.pack_us;
+                    down_out = r.out;
                 }
                 (
                     LayerPlan::Conv(c),
                     LayerOp::Linear | LayerOp::LinearSigned,
                 ) => {
-                    cur = run_conv(c, &cur)
+                    let r = run_conv(c, &cur)
                         .with_context(|| format!("layer {}", l.name))?;
+                    pack_us = r.pack_us;
+                    cur = r.out;
                 }
                 (LayerPlan::Add { h, k, shift, o_bits }, _) => {
                     let short = match l.residual_of.as_deref() {
@@ -291,11 +318,37 @@ impl Coordinator {
                 prof.push(LayerSplit {
                     name: l.name.clone(),
                     setup_us: step.setup_us,
+                    pack_us,
                     compute_us: t0.elapsed().as_secs_f64() * 1e6,
                 });
             }
         }
         Ok(cur)
+    }
+
+    /// [`Self::run_network_exec`] with the pre-pool calling convention:
+    /// `tile_threads > 1` provisions a persistent [`ExecPool`] for the
+    /// whole layer walk (workers spawned once, fed per-layer jobs) —
+    /// the single-image **latency mode**.
+    pub(super) fn run_network_planned(
+        &self,
+        plan: &NetworkPlan,
+        image: &[i32],
+        profile: Option<&mut Vec<LayerSplit>>,
+        tile_threads: usize,
+    ) -> Result<Vec<i32>> {
+        if tile_threads > 1 {
+            ExecPool::with(tile_threads, |pool| {
+                self.run_network_exec(
+                    plan,
+                    image,
+                    profile,
+                    ConvExec::Pool(pool),
+                )
+            })
+        } else {
+            self.run_network_exec(plan, image, profile, ConvExec::Seq)
+        }
     }
 
     /// Per-layer setup-vs-compute split of the ResNet-20 plan-driven

@@ -18,6 +18,8 @@ mod deploy;
 mod infer;
 mod params;
 
-pub use deploy::Deployment;
+pub use deploy::{
+    Deployment, Schedule, ScheduleMode, HYBRID_TILE_SPEEDUP_CAP,
+};
 pub use infer::{Coordinator, InferenceResult};
 pub use params::{random_image, random_layer_params, LayerParams};

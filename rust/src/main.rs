@@ -5,24 +5,33 @@
 //! marsellus figure   <id>|all [--fast]        regenerate a paper figure
 //! marsellus infer    [--network ID] [--config uniform8|mixed]
 //!                    [--vdd V] [--seed N] [--check LAYER]
-//!                    [--threads T]            end-to-end inference
-//!                    [--artifacts DIR]        (T > 1: latency mode —
-//!                                             conv tiles split across
-//!                                             T workers)
+//!                    [--threads T] [--profile]
+//!                    [--artifacts DIR]        end-to-end inference
+//!                                             (T > 1: latency mode —
+//!                                             packing bands + conv
+//!                                             tiles over a persistent
+//!                                             T-worker pool; --profile
+//!                                             prints the per-layer
+//!                                             setup/pack/compute split
+//!                                             + pool telemetry)
 //! marsellus batch    [--network ID] [--n N] [--threads T] [--config C]
-//!                    [--seed S]               parallel batch inference
+//!                    [--seed S]
+//!                    [--schedule auto|batch|latency|hybrid]
+//!                                             scheduled batch inference
 //! marsellus networks                          list deployable networks
 //! marsellus list                              list figure ids
 //! ```
 //!
 //! `--network` names a `dnn` registry entry (default `resnet20`); the
 //! CLI deploys `Coordinator::deploy(NetworkSpec)` and streams through
-//! the returned handle. Backend selection:
-//! `MARSELLUS_BACKEND=native|pjrt` (default native). Plan-cache bound:
-//! `MARSELLUS_PLAN_CACHE_BYTES` (default 256 MiB).
+//! the returned handle. `--schedule` picks the hybrid batch x tile
+//! scheduler's shape (default `auto`: image shards for the bulk of the
+//! batch, the remainder tiled within-image over the same worker pool).
+//! Backend selection: `MARSELLUS_BACKEND=native|pjrt` (default native).
+//! Plan-cache bound: `MARSELLUS_PLAN_CACHE_BYTES` (default 256 MiB).
 
 use anyhow::{bail, Result};
-use marsellus::coordinator::Coordinator;
+use marsellus::coordinator::{Coordinator, Schedule, ScheduleMode};
 use marsellus::dnn::{NetworkSpec, PrecisionConfig};
 use marsellus::power::OperatingPoint;
 use marsellus::util::Args;
@@ -143,6 +152,24 @@ fn infer(args: &Args) -> Result<()> {
         }
         None => deployment.infer(&op, &image)?,
     };
+    if args.flag("profile") {
+        let (split, pool) =
+            deployment.profile_scheduled(&image, threads)?;
+        print!("{}", marsellus::metrics::render_setup_compute(&split));
+        let conv_layers = deployment
+            .layers()
+            .iter()
+            .filter(|l| l.op.on_rbe())
+            .count();
+        println!(
+            "pool: {} worker(s), {} spawned once, {} job(s) streamed \
+             (pre-pool path: ~{} spawns per image)",
+            pool.width,
+            pool.spawned_threads,
+            pool.jobs,
+            pool.spawned_threads * conv_layers,
+        );
+    }
     println!("logits        = {:?}", res.logits);
     if res.cross_checked > 0 {
         println!(
@@ -165,15 +192,24 @@ fn batch(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 8)?;
     let threads = args.get_usize("threads", 4)?;
     let vdd = args.get_f64("vdd", 0.8)?;
+    let mode: ScheduleMode = args.get_or("schedule", "auto").parse()?;
+    let sched = Schedule { threads, mode };
 
     let deployment = coord.deploy(&spec)?;
     let mut rng = marsellus::util::Rng::new(spec.seed ^ 0xBA7C4);
     let images: Vec<Vec<i32>> =
         (0..n).map(|_| deployment.random_input(&mut rng)).collect();
 
+    println!(
+        "schedule: {:?} over {threads} worker(s) ({n} image(s))",
+        mode
+    );
     let t0 = std::time::Instant::now();
-    let results =
-        deployment.infer_batch(&OperatingPoint::at_vdd(vdd), &images, threads)?;
+    let results = deployment.infer_scheduled(
+        &OperatingPoint::at_vdd(vdd),
+        &images,
+        sched,
+    )?;
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     for (i, r) in results.iter().enumerate() {

@@ -30,17 +30,23 @@ pub fn fj_per_op(power_mw: f64, gops: f64) -> f64 {
 
 /// Per-layer cost split of the plan-driven inference path: one-time
 /// plan compilation (setup — weight packing, geometry resolution,
-/// requant staging) vs per-image activation streaming (compute). The
-/// throughput bench serializes these into `BENCH_*.json` so the
-/// setup-vs-compute trajectory is recorded per commit.
+/// requant staging) vs per-image activation streaming (compute), with
+/// the activation-packing share of compute broken out (pack — the
+/// serial fraction the pool's banded packing attacks; `pack_us` is
+/// *included* in `compute_us`). The throughput bench serializes these
+/// into `BENCH_*.json` so the trajectory is recorded per commit.
 #[derive(Debug, Clone)]
 pub struct LayerSplit {
     pub name: String,
     pub setup_us: f64,
+    /// Activation-packing wall time within `compute_us` (0 for
+    /// elementwise and reference-staged layers).
+    pub pack_us: f64,
     pub compute_us: f64,
 }
 
-/// Render the setup-vs-compute table (one row per layer + a totals row).
+/// Render the setup/pack/compute table (one row per layer + a totals
+/// row).
 pub fn render_setup_compute(rows: &[LayerSplit]) -> String {
     let mut body: Vec<Vec<String>> = rows
         .iter()
@@ -48,19 +54,22 @@ pub fn render_setup_compute(rows: &[LayerSplit]) -> String {
             vec![
                 r.name.clone(),
                 format!("{:.1}", r.setup_us),
+                format!("{:.1}", r.pack_us),
                 format!("{:.1}", r.compute_us),
             ]
         })
         .collect();
-    let (setup, compute): (f64, f64) = rows
-        .iter()
-        .fold((0.0, 0.0), |(s, c), r| (s + r.setup_us, c + r.compute_us));
+    let (setup, pack, compute) =
+        rows.iter().fold((0.0, 0.0, 0.0), |(s, p, c), r| {
+            (s + r.setup_us, p + r.pack_us, c + r.compute_us)
+        });
     body.push(vec![
         "TOTAL".into(),
         format!("{setup:.1}"),
+        format!("{pack:.1}"),
         format!("{compute:.1}"),
     ]);
-    render_table(&["layer", "setup us", "compute us"], &body)
+    render_table(&["layer", "setup us", "pack us", "compute us"], &body)
 }
 
 /// Pretty-print a table: header + rows of equal length.

@@ -141,6 +141,14 @@ fn check_activations(job: &RbeJob, x: &[i32]) -> Result<()> {
     if x.len() != want_x {
         bail!("activation len {} != {}", x.len(), want_x);
     }
+    check_activation_values(job, x)
+}
+
+/// Value-range half of the activation check (no length check): every
+/// value must be unsigned and fit `i_bits`. Band packing validates the
+/// band's own slice with this, so the whole plane is still scanned
+/// exactly once across all bands.
+fn check_activation_values(job: &RbeJob, x: &[i32]) -> Result<()> {
     let imax = 1 << job.i_bits;
     if let Some(&v) = x.iter().find(|&&v| v < 0 || v >= imax) {
         if v < 0 {
@@ -421,14 +429,19 @@ pub fn conv_bitserial(
 /// [`PlaneWidth::W32`] is the literal §II-B3 TCDM layout (32 channels
 /// per word, the parity reference); [`PlaneWidth::W64`] packs 64
 /// channels per word, halving the AND+popcount word count for layers
-/// wider than one 32-channel group. Outputs are bitwise identical for
-/// every width.
+/// wider than one 32-channel group; [`PlaneWidth::W128`] packs 128
+/// channels per word for layers wider than two groups (on a 64-bit
+/// host a `u128` AND+popcount lowers to two machine words, so it
+/// halves the indexing/loop overhead rather than the popcount count).
+/// Outputs are bitwise identical for every width.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PlaneWidth {
     /// 32 channels per `u32` word (§II-B3 hardware layout).
     W32,
     /// 64 channels per `u64` word (wide-word software path).
     W64,
+    /// 128 channels per `u128` word (widest software path).
+    W128,
 }
 
 impl PlaneWidth {
@@ -437,6 +450,7 @@ impl PlaneWidth {
         match self {
             PlaneWidth::W32 => 32,
             PlaneWidth::W64 => 64,
+            PlaneWidth::W128 => 128,
         }
     }
 
@@ -445,12 +459,15 @@ impl PlaneWidth {
         self.lanes() / 8
     }
 
-    /// Plan-compile width choice for a job: 64-lane words whenever the
-    /// layer spans more than one 32-channel group (they halve the
-    /// popcount word count); the literal 32-lane hardware layout
+    /// Plan-compile width choice for a job: the widest word the layer
+    /// can fill — 128-lane words past two 32-channel groups, 64-lane
+    /// words past one (each step halves the word count of the inner
+    /// AND+popcount loop); the literal 32-lane hardware layout
     /// otherwise (a lone group gains nothing from wider words).
     pub fn for_job(job: &RbeJob) -> Self {
-        if job.k_in > 32 {
+        if job.k_in > 64 {
+            PlaneWidth::W128
+        } else if job.k_in > 32 {
             PlaneWidth::W64
         } else {
             PlaneWidth::W32
@@ -500,11 +517,25 @@ impl PlaneWord for u64 {
     }
 }
 
+impl PlaneWord for u128 {
+    const LANES: usize = 128;
+    const ZERO: Self = 0;
+    #[inline(always)]
+    fn with_bit(self, lane: usize) -> Self {
+        self | (1u128 << lane)
+    }
+    #[inline(always)]
+    fn and_popcount(self, other: Self) -> u32 {
+        (self & other).count_ones()
+    }
+}
+
 /// Width-tagged storage for packed bit-plane words.
 #[derive(Debug, Clone)]
 enum PlaneVec {
     W32(Vec<u32>),
     W64(Vec<u64>),
+    W128(Vec<u128>),
 }
 
 impl PlaneVec {
@@ -512,6 +543,7 @@ impl PlaneVec {
         match self {
             PlaneVec::W32(_) => PlaneWidth::W32,
             PlaneVec::W64(_) => PlaneWidth::W64,
+            PlaneVec::W128(_) => PlaneWidth::W128,
         }
     }
 
@@ -519,7 +551,36 @@ impl PlaneVec {
         match self {
             PlaneVec::W32(v) => v.len(),
             PlaneVec::W64(v) => v.len(),
+            PlaneVec::W128(v) => v.len(),
         }
+    }
+
+    /// An empty storage at `width`, pre-sized for `capacity` words —
+    /// the accumulator band assembly appends into.
+    fn empty(width: PlaneWidth, capacity: usize) -> Self {
+        match width {
+            PlaneWidth::W32 => PlaneVec::W32(Vec::with_capacity(capacity)),
+            PlaneWidth::W64 => PlaneVec::W64(Vec::with_capacity(capacity)),
+            PlaneWidth::W128 => {
+                PlaneVec::W128(Vec::with_capacity(capacity))
+            }
+        }
+    }
+
+    /// Append another segment packed at the same width (pure
+    /// concatenation; a width mismatch is a loud error).
+    fn append(&mut self, other: PlaneVec) -> Result<()> {
+        match (self, other) {
+            (PlaneVec::W32(a), PlaneVec::W32(b)) => a.extend(b),
+            (PlaneVec::W64(a), PlaneVec::W64(b)) => a.extend(b),
+            (PlaneVec::W128(a), PlaneVec::W128(b)) => a.extend(b),
+            (a, b) => bail!(
+                "activation band packed at {} cannot join a {} plane",
+                b.width(),
+                a.width()
+            ),
+        }
+        Ok(())
     }
 }
 
@@ -603,6 +664,9 @@ pub fn pack_weights_with(
     let words = match width {
         PlaneWidth::W32 => PlaneVec::W32(pack_weight_words::<u32>(job, w)),
         PlaneWidth::W64 => PlaneVec::W64(pack_weight_words::<u64>(job, w)),
+        PlaneWidth::W128 => {
+            PlaneVec::W128(pack_weight_words::<u128>(job, w))
+        }
     };
     Ok(PackedWeights {
         words,
@@ -635,25 +699,53 @@ impl PackedActivations {
     }
 }
 
-fn pack_activation_words<W: PlaneWord>(job: &RbeJob, x: &[i32]) -> Vec<W> {
+/// Pack the pixel range `[px0, px1)` of an activation plane. The plane
+/// layout is per-pixel contiguous (`(p * groups + g) * i_bits + j`), so
+/// a pixel range packs into an independent contiguous word segment —
+/// the property the band-parallel pack relies on.
+fn pack_activation_words_range<W: PlaneWord>(
+    job: &RbeJob,
+    x: &[i32],
+    px0: usize,
+    px1: usize,
+) -> Vec<W> {
     let groups = job.k_in.div_ceil(W::LANES);
-    let pixels = job.h_in() * job.w_in();
-    let mut xp = vec![W::ZERO; pixels * groups * job.i_bits];
-    for p in 0..pixels {
+    let mut xp = vec![W::ZERO; (px1 - px0) * groups * job.i_bits];
+    for p in px0..px1 {
         for ki in 0..job.k_in {
-            // non-negative by check_activations: the raw bits ARE the
-            // unsigned magnitude
+            // non-negative by check_activation_values: the raw bits ARE
+            // the unsigned magnitude
             let v = x[p * job.k_in + ki] as u32;
             let (g, c) = (ki / W::LANES, ki % W::LANES);
             for j in 0..job.i_bits {
                 if (v >> j) & 1 == 1 {
-                    let idx = (p * groups + g) * job.i_bits + j;
+                    let idx = ((p - px0) * groups + g) * job.i_bits + j;
                     xp[idx] = xp[idx].with_bit(c);
                 }
             }
         }
     }
     xp
+}
+
+fn pack_plane_vec_range(
+    job: &RbeJob,
+    x: &[i32],
+    width: PlaneWidth,
+    px0: usize,
+    px1: usize,
+) -> PlaneVec {
+    match width {
+        PlaneWidth::W32 => {
+            PlaneVec::W32(pack_activation_words_range::<u32>(job, x, px0, px1))
+        }
+        PlaneWidth::W64 => {
+            PlaneVec::W64(pack_activation_words_range::<u64>(job, x, px0, px1))
+        }
+        PlaneWidth::W128 => PlaneVec::W128(
+            pack_activation_words_range::<u128>(job, x, px0, px1),
+        ),
+    }
 }
 
 /// Validate + pack one activation plane into bit-plane words at `width`.
@@ -665,20 +757,100 @@ pub fn pack_activations(
     width: PlaneWidth,
 ) -> Result<PackedActivations> {
     check_activations(job, x)?;
-    let words = match width {
-        PlaneWidth::W32 => {
-            PlaneVec::W32(pack_activation_words::<u32>(job, x))
-        }
-        PlaneWidth::W64 => {
-            PlaneVec::W64(pack_activation_words::<u64>(job, x))
-        }
-    };
+    let pixels = job.h_in() * job.w_in();
     Ok(PackedActivations {
-        words,
+        words: pack_plane_vec_range(job, x, width, 0, pixels),
         groups: job.k_in.div_ceil(width.lanes()),
         k_in: job.k_in,
         i_bits: job.i_bits,
-        pixels: job.h_in() * job.w_in(),
+        pixels,
+    })
+}
+
+/// One contiguous pixel band of a packed activation plane — the unit of
+/// band-parallel packing. Bands are produced independently (one per
+/// pool worker) and stitched back with
+/// [`assemble_activation_bands`]; because the packed layout is
+/// per-pixel contiguous, stitching is pure concatenation and the result
+/// is bitwise identical to [`pack_activations`] over the whole plane.
+#[derive(Debug, Clone)]
+pub struct ActivationBand {
+    words: PlaneVec,
+    px0: usize,
+    px1: usize,
+}
+
+/// Split `n` units (pixel rows, pixels, ...) into at most `parts`
+/// non-empty contiguous ranges of near-equal size that exactly cover
+/// `[0, n)`.
+pub fn band_split(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, n.max(1));
+    (0..parts)
+        .map(|b| (b * n / parts, (b + 1) * n / parts))
+        .filter(|(a, b)| a < b)
+        .collect()
+}
+
+/// Validate + pack the pixel range `[px0, px1)` of an activation plane.
+/// The band checks its own slice's value range, so packing every band
+/// of a [`band_split`] scans the whole plane exactly once — including
+/// the loud signed-activation rejection of [`pack_activations`].
+pub fn pack_activation_band(
+    job: &RbeJob,
+    x: &[i32],
+    width: PlaneWidth,
+    px0: usize,
+    px1: usize,
+) -> Result<ActivationBand> {
+    let pixels = job.h_in() * job.w_in();
+    ensure!(
+        px0 < px1 && px1 <= pixels,
+        "activation band [{px0}, {px1}) out of range for {pixels} pixels"
+    );
+    if x.len() != pixels * job.k_in {
+        bail!("activation len {} != {}", x.len(), pixels * job.k_in);
+    }
+    check_activation_values(job, &x[px0 * job.k_in..px1 * job.k_in])?;
+    Ok(ActivationBand {
+        words: pack_plane_vec_range(job, x, width, px0, px1),
+        px0,
+        px1,
+    })
+}
+
+/// Stitch independently packed pixel bands back into one
+/// [`PackedActivations`] plane. The bands must exactly tile
+/// `[0, pixels)` in order and share `width`; the assembled plane is
+/// bitwise identical to a whole-plane [`pack_activations`] call.
+pub fn assemble_activation_bands(
+    job: &RbeJob,
+    width: PlaneWidth,
+    bands: Vec<ActivationBand>,
+) -> Result<PackedActivations> {
+    let pixels = job.h_in() * job.w_in();
+    let groups = job.k_in.div_ceil(width.lanes());
+    let mut expect = 0usize;
+    let mut words = PlaneVec::empty(width, pixels * groups * job.i_bits);
+    for band in bands {
+        ensure!(
+            band.px0 == expect,
+            "activation bands must tile the plane in order: band starts \
+             at pixel {} but {expect} pixels are assembled",
+            band.px0
+        );
+        expect = band.px1;
+        words.append(band.words)?;
+    }
+    ensure!(
+        expect == pixels,
+        "activation bands cover {expect} of {pixels} pixels"
+    );
+    Ok(PackedActivations {
+        words,
+        groups,
+        k_in: job.k_in,
+        i_bits: job.i_bits,
+        pixels,
     })
 }
 
@@ -856,6 +1028,15 @@ pub fn conv_bitserial_packed_tile(
             nq,
             tile,
         )),
+        (PlaneVec::W128(x), PlaneVec::W128(w)) => Ok(conv_tile_core(
+            job,
+            x.as_slice(),
+            w.as_slice(),
+            pw.groups,
+            pw.taps,
+            nq,
+            tile,
+        )),
         (x, w) => bail!(
             "packed activations are {} but packed weights are {}",
             x.width(),
@@ -964,7 +1145,7 @@ mod tests {
         // acc = -48; the signed 4-bit clip pins -8 (ReLU would give 0)
         assert_eq!(conv_bitserial(&job, &x, &w, &nq).unwrap(), vec![-8]);
         assert_eq!(conv_reference(&job, &x, &w, &nq).unwrap(), vec![-8]);
-        for width in [PlaneWidth::W32, PlaneWidth::W64] {
+        for width in [PlaneWidth::W32, PlaneWidth::W64, PlaneWidth::W128] {
             let pw = pack_weights_with(&job, &w, width).unwrap();
             assert_eq!(
                 conv_bitserial_packed(&job, &x, &pw, &nq).unwrap(),
@@ -1016,7 +1197,7 @@ mod tests {
         let w = vec![1, 1, 1, 1];
         let x = vec![3, -2, 3, 3]; // one signed (negative) activation
         let nq = NormQuant::unit(1);
-        for width in [PlaneWidth::W32, PlaneWidth::W64] {
+        for width in [PlaneWidth::W32, PlaneWidth::W64, PlaneWidth::W128] {
             let pw = pack_weights_with(&job, &w, width).unwrap();
             let err = conv_bitserial_packed(&job, &x, &pw, &nq)
                 .unwrap_err()
@@ -1071,7 +1252,7 @@ mod tests {
             };
             let (x, w, nq) = random_job_inputs(&mut rng, &job);
             let scalar = conv_bitserial(&job, &x, &w, &nq).unwrap();
-            for width in [PlaneWidth::W32, PlaneWidth::W64] {
+            for width in [PlaneWidth::W32, PlaneWidth::W64, PlaneWidth::W128] {
                 let pw = pack_weights_with(&job, &w, width).unwrap();
                 assert_eq!(
                     conv_bitserial_packed(&job, &x, &pw, &nq).unwrap(),
@@ -1144,7 +1325,7 @@ mod tests {
                 }
                 out
             };
-            for width in [PlaneWidth::W32, PlaneWidth::W64] {
+            for width in [PlaneWidth::W32, PlaneWidth::W64, PlaneWidth::W128] {
                 let pw = pack_weights_with(&job, &w, width).unwrap();
                 let xp = pack_activations(&job, &x, width).unwrap();
                 let parts: Vec<Vec<i32>> = tiles
@@ -1187,7 +1368,7 @@ mod tests {
         );
         let nq = NormQuant::new_signed(vec![1], vec![0], 0);
         let scalar = conv_bitserial(&job, &x, &w, &nq).unwrap();
-        for width in [PlaneWidth::W32, PlaneWidth::W64] {
+        for width in [PlaneWidth::W32, PlaneWidth::W64, PlaneWidth::W128] {
             let pw = pack_weights_with(&job, &w, width).unwrap();
             assert_eq!(
                 conv_bitserial_packed(&job, &x, &pw, &nq).unwrap(),
@@ -1205,7 +1386,7 @@ mod tests {
             .map(|_| rng.range_i32(-128, 128))
             .collect();
         let scalar = conv_bitserial(&job, &x, &w, &nq).unwrap();
-        for width in [PlaneWidth::W32, PlaneWidth::W64] {
+        for width in [PlaneWidth::W32, PlaneWidth::W64, PlaneWidth::W128] {
             let pw = pack_weights_with(&job, &w, width).unwrap();
             assert_eq!(
                 conv_bitserial_packed(&job, &x, &pw, &nq).unwrap(),
@@ -1223,6 +1404,11 @@ mod tests {
         assert_eq!(PlaneWidth::for_job(&narrow), PlaneWidth::W32);
         let wide = RbeJob::conv3x3(2, 2, 33, 4, 1, 4, 4, 4).unwrap();
         assert_eq!(PlaneWidth::for_job(&wide), PlaneWidth::W64);
+        // one u64 group exactly stays 64-lane; past it, 128-lane words
+        let two = RbeJob::conv3x3(2, 2, 64, 4, 1, 4, 4, 4).unwrap();
+        assert_eq!(PlaneWidth::for_job(&two), PlaneWidth::W64);
+        let wider = RbeJob::conv3x3(2, 2, 65, 4, 1, 4, 4, 4).unwrap();
+        assert_eq!(PlaneWidth::for_job(&wider), PlaneWidth::W128);
 
         // bytes track the actual Vec element size at each width:
         // k_in = 64 is 2 u32 groups or 1 u64 group — same byte count,
@@ -1245,6 +1431,22 @@ mod tests {
         assert_eq!(
             pack_weights_with(&jr, &wr, PlaneWidth::W64).unwrap().bytes(),
             2 * 1 * 2 * 8
+        );
+        // a u128 plan holds a quarter of the u32 words at 4x the size:
+        // k_in = 128 is 4 u32 groups or 1 u128 group — same byte count
+        let j128 = RbeJob::conv1x1(1, 1, 128, 2, 1, 2, 2, 2).unwrap();
+        let w128 = vec![0i32; 2 * 128];
+        assert_eq!(
+            pack_weights_with(&j128, &w128, PlaneWidth::W32)
+                .unwrap()
+                .bytes(),
+            2 * 4 * 2 * 4
+        );
+        assert_eq!(
+            pack_weights_with(&j128, &w128, PlaneWidth::W128)
+                .unwrap()
+                .bytes(),
+            2 * 1 * 2 * 16
         );
     }
 
@@ -1367,6 +1569,127 @@ mod tests {
         let unit = NormQuant::new(vec![1], vec![0], 1);
         assert_eq!(unit.apply_signed(0, -3, 8), -2);
         assert_eq!(unit.apply(0, -3, 8), 0); // ReLU clips it away
+    }
+
+    /// Property: packing any `band_split` of the pixel range and
+    /// stitching the bands is bitwise identical to the whole-plane pack
+    /// — the packed words agree through the kernel at every width, band
+    /// count and ragged channel count.
+    #[test]
+    fn banded_pack_assembles_bitwise_identical() {
+        let mut rng = Rng::new(9119);
+        for _ in 0..20 {
+            let mode = if rng.f64() < 0.5 {
+                RbeMode::Conv3x3
+            } else {
+                RbeMode::Conv1x1
+            };
+            let job = RbeJob {
+                mode,
+                h_out: 1 + rng.index(4),
+                w_out: 1 + rng.index(4),
+                k_in: *rng.pick(&[1, 3, 33, 64, 65, 129]),
+                k_out: *rng.pick(&[1, 4]),
+                stride: 1 + rng.index(2),
+                w_bits: 2 + rng.index(7),
+                i_bits: 2 + rng.index(7),
+                o_bits: 2 + rng.index(7),
+            };
+            let (x, w, nq) = random_job_inputs(&mut rng, &job);
+            let pixels = job.h_in() * job.w_in();
+            let parts = 1 + rng.index(pixels.min(7));
+            for width in
+                [PlaneWidth::W32, PlaneWidth::W64, PlaneWidth::W128]
+            {
+                let whole = pack_activations(&job, &x, width).unwrap();
+                let bands: Vec<ActivationBand> = band_split(pixels, parts)
+                    .into_iter()
+                    .map(|(p0, p1)| {
+                        pack_activation_band(&job, &x, width, p0, p1)
+                            .unwrap()
+                    })
+                    .collect();
+                let stitched =
+                    assemble_activation_bands(&job, width, bands).unwrap();
+                // words agree through the kernel on the full tile
+                let pw = pack_weights_with(&job, &w, width).unwrap();
+                let full = ConvTile::full(&job);
+                assert_eq!(
+                    conv_bitserial_packed_tile(&job, &stitched, &pw, &nq, full)
+                        .unwrap(),
+                    conv_bitserial_packed_tile(&job, &whole, &pw, &nq, full)
+                        .unwrap(),
+                    "{width}, {parts} bands, job {job:?}"
+                );
+            }
+        }
+    }
+
+    /// `band_split` exactly tiles `[0, n)` with non-empty in-order
+    /// ranges for every part count, including parts > n.
+    #[test]
+    fn band_split_covers_exactly() {
+        for n in [1usize, 2, 5, 16, 97] {
+            for parts in 1..=20usize {
+                let bands = band_split(n, parts);
+                assert!(bands.len() <= parts.min(n));
+                let mut expect = 0;
+                for (a, b) in &bands {
+                    assert_eq!(*a, expect, "n {n} parts {parts}");
+                    assert!(a < b);
+                    expect = *b;
+                }
+                assert_eq!(expect, n, "n {n} parts {parts}");
+            }
+        }
+    }
+
+    /// Band packing keeps every loud failure of the whole-plane pack:
+    /// signed activations in the band's own slice, out-of-range bands,
+    /// and malformed (out-of-order / gappy / mixed-width) assemblies.
+    #[test]
+    fn band_pack_rejects_bad_input() {
+        let job = RbeJob::conv1x1(2, 2, 4, 1, 1, 4, 4, 4).unwrap();
+        let pixels = job.h_in() * job.w_in();
+        let mut x = vec![3i32; pixels * 4];
+        x[2 * 4] = -1; // pixel 2 holds a signed activation
+        // the band containing pixel 2 rejects loudly...
+        let err = pack_activation_band(&job, &x, PlaneWidth::W32, 2, 3)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("negative"), "{err}");
+        // ...a band that excludes it packs fine
+        assert!(pack_activation_band(&job, &x, PlaneWidth::W32, 0, 2).is_ok());
+        // out-of-range / empty bands are rejected
+        assert!(
+            pack_activation_band(&job, &x, PlaneWidth::W32, 0, pixels + 1)
+                .is_err()
+        );
+        assert!(pack_activation_band(&job, &x, PlaneWidth::W32, 1, 1).is_err());
+        // assemblies must tile in order, completely, at one width
+        let ok = vec![0i32; pixels * 4];
+        let band = |p0, p1, w| {
+            pack_activation_band(&job, &ok, w, p0, p1).unwrap()
+        };
+        let w32 = PlaneWidth::W32;
+        assert!(assemble_activation_bands(
+            &job,
+            w32,
+            vec![band(2, pixels, w32), band(0, 2, w32)]
+        )
+        .is_err());
+        assert!(
+            assemble_activation_bands(&job, w32, vec![band(0, 2, w32)])
+                .is_err()
+        );
+        let err = assemble_activation_bands(
+            &job,
+            w32,
+            vec![band(0, 2, w32), band(2, pixels, PlaneWidth::W64)],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("64-lane"), "{err}");
     }
 
     #[test]

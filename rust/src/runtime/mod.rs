@@ -19,7 +19,10 @@
 //! cache (compile once, `Arc`-share thereafter) and the per-deployment
 //! [`NetworkPlan`] cache — precompiled layer plans ([`plan`]) that hoist
 //! weight packing, job-geometry resolution and requant staging out of
-//! the per-inference hot path. The plan cache is keyed by
+//! the per-inference hot path. Serving fan-out goes through a
+//! persistent [`ExecPool`]: workers are provisioned once per serving
+//! call and fed per-layer jobs (packing bands, conv tiles, image
+//! shards) instead of being re-spawned per layer. The plan cache is keyed by
 //! `dnn::NetworkSpec`, byte-accounted and bounded with LRU eviction
 //! (`MARSELLUS_PLAN_CACHE_BYTES`), so many-tenant serving cannot grow
 //! without bound. Both caches are `Send + Sync`, so the coordinator can
@@ -36,6 +39,7 @@ mod native;
 mod plan;
 #[cfg(feature = "pjrt")]
 mod pjrt;
+mod pool;
 mod tensor;
 
 pub use backend::{BackendKind, ExecBackend, LayerExec};
@@ -44,9 +48,10 @@ pub use loader::{Runtime, DEFAULT_PLAN_CACHE_BYTES};
 #[cfg(feature = "native")]
 pub use native::NativeBackend;
 pub use plan::{
-    ConvPlan, LayerPlan, NativeNumerics, NetworkPlan, PlanStep,
+    ConvPlan, ConvRun, LayerPlan, NativeNumerics, NetworkPlan, PlanStep,
     AUTO_BITSERIAL_MACS, LATENCY_TILE_MIN_MACS,
 };
+pub use pool::{ExecPool, PoolTelemetry};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use tensor::TensorArg;

@@ -23,18 +23,22 @@
 //! staging differs.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::dnn::{Layer, LayerOp, ManifestEntry};
 use crate::rbe::functional::{
-    check_activation_plane, check_weights, conv_bitserial_packed,
-    conv_bitserial_packed_tile, conv_reference_planned, conv_reference_tile,
-    pack_activations, pack_weights_with, trim_input, ConvTile, NormQuant,
+    assemble_activation_bands, band_split, check_activation_plane,
+    check_weights, conv_bitserial_packed_tile, conv_reference_planned,
+    conv_reference_tile, pack_activation_band, pack_activations,
+    pack_weights_with, trim_input, ActivationBand, ConvTile, NormQuant,
     PackedActivations, PackedWeights, PlaneWidth,
 };
 use crate::rbe::RbeJob;
+
+use super::pool::ExecPool;
 
 /// Jobs at or below this MAC count run bit-serial under
 /// [`NativeNumerics::Auto`] on the per-call path, and packed bit-serial
@@ -127,6 +131,18 @@ enum PlanKernel {
     Reference(Vec<i32>),
 }
 
+/// Result of one scheduled conv-layer run: the output plane plus the
+/// wall time of its activation-packing phase — the pack half of the
+/// per-layer pack-vs-compute split `Deployment::profile` reports
+/// (0 for the reference staging, which packs nothing).
+pub struct ConvRun {
+    /// The layer's output plane, identical to [`ConvPlan::run`].
+    pub out: Vec<i32>,
+    /// Wall microseconds spent packing the activation plane (banded
+    /// across the pool when one was given).
+    pub pack_us: f64,
+}
+
 /// One conv3x3 / conv1x1 / linear layer, compiled: resolved geometry,
 /// bound weights, requant constants. Immutable after compilation.
 pub struct ConvPlan {
@@ -163,24 +179,202 @@ impl ConvPlan {
     /// Stream one activation plane through the plan. Per-call work is
     /// exactly: length check, strided trim, kernel evaluation.
     pub fn run(&self, x: &[i32]) -> Result<Vec<i32>> {
+        self.run_scheduled(x, None).map(|r| r.out)
+    }
+
+    /// Stream one activation plane through the plan, fanning the
+    /// layer's work over a persistent [`ExecPool`] when one is given:
+    /// the activation plane is packed in row bands across the pool
+    /// (lifting the serial packing fraction of wide layers), then the
+    /// `(output-row, k_out)` range is split into tiles pulled by the
+    /// same workers. Without a pool — or for jobs under
+    /// [`LATENCY_TILE_MIN_MACS`], which degrade gracefully inside the
+    /// pool — the layer runs inline on the calling thread.
+    ///
+    /// Bitwise identical to [`Self::run`] in every configuration:
+    /// banded packing stitches to the exact whole-plane words, and
+    /// disjoint tiles compute disjoint output elements with the same
+    /// arithmetic.
+    pub fn run_scheduled<'env>(
+        &'env self,
+        x: &[i32],
+        pool: Option<&ExecPool<'env>>,
+    ) -> Result<ConvRun> {
         let x = self.checked_trim(x)?;
+        if let Some(pool) = pool.filter(|p| {
+            p.width() > 1 && self.job.macs() >= LATENCY_TILE_MIN_MACS
+        }) {
+            let tiles = tile_split(&self.job, pool.width());
+            if tiles.len() > 1 {
+                return self.run_pooled_trimmed(x, pool, tiles);
+            }
+        }
+        self.run_seq_trimmed(&x)
+    }
+
+    /// Sequential staging over an already-trimmed plane, with the
+    /// activation-packing phase timed for the pack-vs-compute split.
+    fn run_seq_trimmed(&self, x: &[i32]) -> Result<ConvRun> {
         match &self.kernel {
             PlanKernel::Packed(pw) => {
-                conv_bitserial_packed(&self.job, &x, pw, &self.nq)
+                let t0 = Instant::now();
+                let xp = pack_activations(&self.job, x, pw.width())?;
+                let pack_us = t0.elapsed().as_secs_f64() * 1e6;
+                let out = conv_bitserial_packed_tile(
+                    &self.job,
+                    &xp,
+                    pw,
+                    &self.nq,
+                    ConvTile::full(&self.job),
+                )?;
+                Ok(ConvRun { out, pack_us })
             }
-            PlanKernel::Reference(w) => {
-                conv_reference_planned(&self.job, &x, w, &self.nq)
+            PlanKernel::Reference(w) => Ok(ConvRun {
+                out: conv_reference_planned(&self.job, x, w, &self.nq)?,
+                pack_us: 0.0,
+            }),
+        }
+    }
+
+    /// Pool fan-out over an already-trimmed plane: band-parallel pack,
+    /// then tile-parallel conv, both as jobs on the shared pool.
+    /// Per-layer operands are `Arc`-shared into the pool tasks (the
+    /// safe lifetime story — no borrow of this stack frame escapes);
+    /// the one plane copy this costs is small against the conv itself.
+    fn run_pooled_trimmed<'env>(
+        &'env self,
+        x: std::borrow::Cow<'_, [i32]>,
+        pool: &ExecPool<'env>,
+        tiles: Vec<ConvTile>,
+    ) -> Result<ConvRun> {
+        let plane: Arc<Vec<i32>> = Arc::new(x.into_owned());
+        let (staged, pack_us) = match &self.kernel {
+            PlanKernel::Packed(pw) => {
+                let t0 = Instant::now();
+                let xp = self.pack_banded(&plane, pw.width(), pool)?;
+                (Some(Arc::new(xp)), t0.elapsed().as_secs_f64() * 1e6)
+            }
+            PlanKernel::Reference(_) => {
+                // validate the shared plane ONCE; the tile kernel only
+                // debug_asserts it
+                check_activation_plane(&self.job, &plane)?;
+                (None, 0.0)
+            }
+        };
+        let tiles = Arc::new(tiles);
+        let slots: Arc<Vec<Mutex<Option<Result<Vec<i32>>>>>> =
+            Arc::new(tiles.iter().map(|_| Mutex::new(None)).collect());
+        {
+            let (tiles, slots, plane, staged) =
+                (tiles.clone(), slots.clone(), plane.clone(), staged);
+            pool.scatter(
+                tiles.len(),
+                Arc::new(move |t| {
+                    let res = match (&self.kernel, staged.as_deref()) {
+                        (PlanKernel::Packed(pw), Some(xp)) => {
+                            conv_bitserial_packed_tile(
+                                &self.job, xp, pw, &self.nq, tiles[t],
+                            )
+                        }
+                        (PlanKernel::Reference(w), _) => {
+                            conv_reference_tile(
+                                &self.job, &plane, w, &self.nq, tiles[t],
+                            )
+                        }
+                        (PlanKernel::Packed(_), None) => {
+                            unreachable!("packed kernel stages activations")
+                        }
+                    };
+                    *slots[t].lock().unwrap() = Some(res);
+                }),
+            );
+        }
+        let mut out =
+            vec![0i32; self.job.h_out * self.job.w_out * self.job.k_out];
+        for (tile, slot) in tiles.iter().zip(slots.iter()) {
+            let part = slot
+                .lock()
+                .unwrap()
+                .take()
+                .expect("every tile index was pulled by a worker")?;
+            self.stitch_tile(&mut out, tile, &part);
+        }
+        Ok(ConvRun { out, pack_us })
+    }
+
+    /// Pack the activation plane in contiguous row bands across the
+    /// pool and stitch the bands — bitwise identical to a whole-plane
+    /// [`pack_activations`] (band-parity property tests in
+    /// `rbe::functional`).
+    fn pack_banded<'env>(
+        &'env self,
+        plane: &Arc<Vec<i32>>,
+        width: PlaneWidth,
+        pool: &ExecPool<'env>,
+    ) -> Result<PackedActivations> {
+        let rows = band_split(self.job.h_in(), pool.width());
+        if rows.len() <= 1 {
+            return pack_activations(&self.job, plane, width);
+        }
+        let w_in = self.job.w_in();
+        let bands: Arc<Vec<(usize, usize)>> = Arc::new(
+            rows.into_iter()
+                .map(|(r0, r1)| (r0 * w_in, r1 * w_in))
+                .collect(),
+        );
+        let slots: Arc<Vec<Mutex<Option<Result<ActivationBand>>>>> =
+            Arc::new(bands.iter().map(|_| Mutex::new(None)).collect());
+        {
+            let (bands, slots, plane) =
+                (bands.clone(), slots.clone(), plane.clone());
+            pool.scatter(
+                bands.len(),
+                Arc::new(move |b| {
+                    let (p0, p1) = bands[b];
+                    *slots[b].lock().unwrap() = Some(pack_activation_band(
+                        &self.job, &plane, width, p0, p1,
+                    ));
+                }),
+            );
+        }
+        let mut parts = Vec::with_capacity(bands.len());
+        for slot in slots.iter() {
+            parts.push(
+                slot.lock()
+                    .unwrap()
+                    .take()
+                    .expect("every band index was pulled by a worker")?,
+            );
+        }
+        assemble_activation_bands(&self.job, width, parts)
+    }
+
+    /// Copy one `(rows, w_out, ko-range)` row-major tile into its place
+    /// in the interleaved full output.
+    fn stitch_tile(&self, out: &mut [i32], tile: &ConvTile, part: &[i32]) {
+        let kos = tile.ko1 - tile.ko0;
+        for r in 0..tile.row1 - tile.row0 {
+            for ox in 0..self.job.w_out {
+                let src = (r * self.job.w_out + ox) * kos;
+                let dst = ((tile.row0 + r) * self.job.w_out + ox)
+                    * self.job.k_out
+                    + tile.ko0;
+                out[dst..dst + kos].copy_from_slice(&part[src..src + kos]);
             }
         }
     }
 
     /// Stream one activation plane through the plan with the layer's
     /// `(output-row, k_out)` range split into tiles pulled by `threads`
-    /// scoped workers — the single-image latency path. For the packed
-    /// kernel the activation plane is packed ONCE and shared read-only
-    /// by every tile worker. Bitwise identical to [`Self::run`]:
-    /// disjoint tiles compute disjoint output elements with the same
-    /// arithmetic, so the stitched result is the sequential result.
+    /// scoped workers — the **legacy** (pre-pool) latency path, which
+    /// spawns and joins a fresh thread set per call. Kept so benches
+    /// and tests can measure the recovered spawn overhead against
+    /// [`Self::run_scheduled`] over a persistent [`ExecPool`]; serving
+    /// goes through the pool. For the packed kernel the activation
+    /// plane is packed ONCE (serially) and shared read-only by every
+    /// tile worker. Bitwise identical to [`Self::run`]: disjoint tiles
+    /// compute disjoint output elements with the same arithmetic, so
+    /// the stitched result is the sequential result.
     pub fn run_tiled(&self, x: &[i32], threads: usize) -> Result<Vec<i32>> {
         // Clamp the fan-out to the machine: more workers than cores only
         // adds spawn/join overhead, and an absurd operator value
@@ -249,17 +443,7 @@ impl ConvPlan {
                 .into_inner()
                 .unwrap()
                 .expect("every tile index was pulled by a worker")?;
-            let kos = tile.ko1 - tile.ko0;
-            for r in 0..tile.row1 - tile.row0 {
-                for ox in 0..self.job.w_out {
-                    let src = (r * self.job.w_out + ox) * kos;
-                    let dst = ((tile.row0 + r) * self.job.w_out + ox)
-                        * self.job.k_out
-                        + tile.ko0;
-                    out[dst..dst + kos]
-                        .copy_from_slice(&part[src..src + kos]);
-                }
-            }
+            self.stitch_tile(&mut out, tile, &part);
         }
         Ok(out)
     }
@@ -596,6 +780,116 @@ mod tests {
             // bad planes fail the same way as the sequential path
             assert!(c.run_tiled(&[0i32; 3], 4).is_err());
         }
+    }
+
+    /// `run_scheduled` over a persistent pool — banded pack + tile
+    /// fan-out — is bitwise identical to the sequential `run` at every
+    /// pool width, for both kernel stagings, across several layers
+    /// reusing ONE pool (the provision-once/stream-jobs shape).
+    #[test]
+    fn pooled_run_matches_sequential_run() {
+        let e = wide_entry();
+        let (x, w, scale, bias) = random_conv_inputs(&e, 29);
+        for numerics in [NativeNumerics::BitSerial, NativeNumerics::Reference]
+        {
+            let plan =
+                LayerPlan::compile(&e, &w, &scale, &bias, numerics).unwrap();
+            let LayerPlan::Conv(c) = &plan else { panic!() };
+            let want = c.run(&x).unwrap();
+            for threads in [1usize, 2, 3, 5, 8] {
+                ExecPool::with(threads, |pool| {
+                    // several jobs through one pool: reuse is the point
+                    for round in 0..3 {
+                        let got =
+                            c.run_scheduled(&x, Some(pool)).unwrap();
+                        assert_eq!(
+                            got.out, want,
+                            "{numerics:?}, {threads} workers, round {round}"
+                        );
+                    }
+                    // bad planes fail identically through the pool
+                    assert!(c.run_scheduled(&[0i32; 3], Some(pool)).is_err());
+                });
+            }
+        }
+    }
+
+    /// A conv entry past two 32-channel groups compiles to 128-lane
+    /// plans whose bytes track the 16-byte word size.
+    #[test]
+    fn widest_plan_picks_u128_words() {
+        let e = ManifestEntry {
+            name: "conv3x3_h8_ci96_co8_s1_w4i4o4".into(),
+            op: LayerOp::Conv3x3,
+            h: 8,
+            cin: 96,
+            cout: 8,
+            stride: 1,
+            w_bits: 4,
+            i_bits: 4,
+            o_bits: 4,
+            shift: 10,
+        };
+        let (x, w, scale, bias) = random_conv_inputs(&e, 31);
+        let plan =
+            LayerPlan::compile(&e, &w, &scale, &bias, NativeNumerics::BitSerial)
+                .unwrap();
+        let LayerPlan::Conv(c) = &plan else { panic!() };
+        assert_eq!(c.plane_width(), Some(PlaneWidth::W128));
+        // Kout * ceil(96/128) * w_bits * 9 taps * 16 bytes/word + requant
+        assert_eq!(plan.bytes(), 8 * 1 * 4 * 9 * 16 + 2 * 8 * 4);
+        // and the kernel agrees with the oracle bitwise
+        let r =
+            LayerPlan::compile(&e, &w, &scale, &bias, NativeNumerics::Reference)
+                .unwrap();
+        let LayerPlan::Conv(oracle) = &r else { panic!() };
+        let want = oracle.run(&x).unwrap();
+        assert_eq!(c.run(&x).unwrap(), want);
+        ExecPool::with(4, |pool| {
+            assert_eq!(c.run_scheduled(&x, Some(pool)).unwrap().out, want);
+        });
+    }
+
+    /// Below the latency-tile MAC floor a pooled `run_scheduled`
+    /// degrades gracefully to the inline path — no worker handoff, no
+    /// pack job — and stays bitwise identical.
+    #[test]
+    fn tiny_jobs_degrade_inside_the_pool() {
+        let m = Manifest::builtin();
+        let e = m.get("linear_ci64_co10_w8i8o8").unwrap();
+        assert!(e.rbe_job().unwrap().macs() < LATENCY_TILE_MIN_MACS);
+        let (_, w, scale, bias) = random_conv_inputs_linear(e, 26);
+        let mut rng = Rng::new(27);
+        let x: Vec<i32> = (0..64).map(|_| rng.range_i32(0, 256)).collect();
+        let plan =
+            LayerPlan::compile(e, &w, &scale, &bias, NativeNumerics::Auto)
+                .unwrap();
+        let LayerPlan::Conv(c) = &plan else { panic!() };
+        ExecPool::with(8, |pool| {
+            let jobs_before = pool.telemetry().jobs;
+            let got = c.run_scheduled(&x, Some(pool)).unwrap();
+            assert_eq!(got.out, c.run(&x).unwrap());
+            assert_eq!(
+                pool.telemetry().jobs,
+                jobs_before,
+                "a tiny layer must not stream pool jobs"
+            );
+        });
+    }
+
+    fn random_conv_inputs_linear(
+        e: &ManifestEntry,
+        seed: u64,
+    ) -> (Vec<i32>, Vec<i32>, Vec<i32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let half = 1 << (e.w_bits - 1);
+        let x = (0..e.cin).map(|_| rng.range_i32(0, 1 << e.i_bits)).collect();
+        let w = (0..e.cout * e.cin)
+            .map(|_| rng.range_i32(-half, half))
+            .collect();
+        let scale = (0..e.cout).map(|_| rng.range_i32(1, 16)).collect();
+        let bias = (0..e.cout).map(|_| rng.range_i32(-500, 500)).collect();
+        (x, w, scale, bias)
     }
 
     /// Below the latency-tile MAC floor `run_tiled` degrades to the

@@ -1,0 +1,378 @@
+//! Persistent execution pool: provision workers once, stream jobs.
+//!
+//! Marsellus' cluster amortizes its 16-core fan-out across a whole
+//! workload — cores are provisioned once and fed jobs, they are not
+//! re-spawned per layer (paper §IV). The pre-pool serving path did the
+//! opposite: `ConvPlan::run_tiled` spawned and joined a fresh
+//! scoped-thread set for *every* conv layer (~20 spawn/join cycles per
+//! ResNet-20 image). [`ExecPool`] recovers that overhead: workers are
+//! spawned once per serving call ([`ExecPool::with`]), block on a job
+//! queue, and every layer's fan-out ([`ExecPool::scatter`]) is one
+//! condvar wake + an atomic index race instead of a thread spawn.
+//!
+//! A *job* is an indexed task set (`n` items, workers pull the next
+//! index from an atomic counter); `scatter` submits one job, has the
+//! calling thread participate, and returns once every item completed —
+//! the inter-layer barrier of the layer walk. One job runs at a time
+//! (`scatter` is not reentrant from inside a task): the serving layer
+//! walk is sequential between layers by construction, which is exactly
+//! the barrier this models.
+//!
+//! Task payloads are `Arc<dyn Fn(usize) + Send + Sync + 'env>`: per-job
+//! operands are `Arc`-shared into the closure (no lifetime erasure, no
+//! `unsafe`), while long-lived operands (the compiled plan, the
+//! coordinator) are borrowed at the pool's `'env` lifetime.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One indexed task set: workers call `task(i)` for every `i in 0..n`,
+/// each index exactly once.
+type Task<'env> = Arc<dyn Fn(usize) + Send + Sync + 'env>;
+
+struct Job<'env> {
+    task: Task<'env>,
+    n: usize,
+    /// Next item index to pull (shared lock-free with the workers).
+    next: Arc<AtomicUsize>,
+    /// Items not yet completed (guarded by the state mutex so the
+    /// submitter's completion wait cannot miss a wakeup).
+    pending: usize,
+    /// Submission generation, so a worker never re-enters a job it
+    /// already drained.
+    gen: u64,
+}
+
+struct State<'env> {
+    job: Option<Job<'env>>,
+    gen: u64,
+    shutdown: bool,
+}
+
+/// A pool of workers provisioned once and fed per-layer jobs — see the
+/// module docs. Created via [`ExecPool::with`]; `width` counts the
+/// submitting thread, so `with(1, ..)` spawns nothing and `scatter`
+/// degrades to an inline loop.
+pub struct ExecPool<'env> {
+    state: Mutex<State<'env>>,
+    /// Workers wait here for a new job generation (or shutdown).
+    work_ready: Condvar,
+    /// The submitter waits here for the last straggler of its job.
+    job_done: Condvar,
+    width: usize,
+    jobs: AtomicUsize,
+}
+
+/// Pool counters surfaced by `Deployment::profile_scheduled` and the
+/// CLI: how many OS threads served how many per-layer jobs. The
+/// recovered overhead is visible by contrast — the pre-pool path spawned
+/// `width - 1` fresh threads per tiled conv layer instead of
+/// `spawned_threads` once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolTelemetry {
+    /// Worker count including the submitting thread.
+    pub width: usize,
+    /// OS threads actually spawned (once, `width - 1`).
+    pub spawned_threads: usize,
+    /// Jobs streamed through the queue (tile fan-outs + packing bands
+    /// + image shards).
+    pub jobs: usize,
+}
+
+impl PoolTelemetry {
+    /// The telemetry of running without a pool (sequential walk).
+    pub fn sequential() -> Self {
+        Self { width: 1, spawned_threads: 0, jobs: 0 }
+    }
+}
+
+/// Decrements the pending count when dropped — even if the task
+/// panicked, so the submitting thread never deadlocks waiting for an
+/// item that will not complete (the panic then propagates at scope
+/// join).
+struct DoneGuard<'p, 'env> {
+    pool: &'p ExecPool<'env>,
+}
+
+impl Drop for DoneGuard<'_, '_> {
+    fn drop(&mut self) {
+        let mut st = self.pool.state.lock().unwrap();
+        if let Some(job) = st.job.as_mut() {
+            job.pending -= 1;
+            if job.pending == 0 {
+                self.pool.job_done.notify_all();
+            }
+        }
+    }
+}
+
+impl<'env> ExecPool<'env> {
+    /// Provision a pool of `threads` workers (the calling thread
+    /// counts; `threads - 1` OS threads are spawned), run `f` with it,
+    /// then shut the workers down. The fan-out is clamped to 2x the
+    /// machine's cores: more workers than cores only adds handoff
+    /// overhead, and an absurd operator value (`--threads 9999`) must
+    /// degrade, not abort on thread exhaustion.
+    pub fn with<R>(
+        threads: usize,
+        f: impl FnOnce(&ExecPool<'env>) -> R,
+    ) -> R {
+        let cores = std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(1);
+        let width = threads.clamp(1, cores.saturating_mul(2));
+        let pool = ExecPool {
+            state: Mutex::new(State { job: None, gen: 0, shutdown: false }),
+            work_ready: Condvar::new(),
+            job_done: Condvar::new(),
+            width,
+            jobs: AtomicUsize::new(0),
+        };
+        if width == 1 {
+            return f(&pool);
+        }
+        std::thread::scope(|s| {
+            for _ in 0..width - 1 {
+                s.spawn(|| pool.worker_loop());
+            }
+            let out = f(&pool);
+            pool.shutdown();
+            out
+        })
+    }
+
+    /// Worker count, including the submitting thread — what per-layer
+    /// splits (`tile_split`, packing bands) should size against.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Snapshot of the pool counters.
+    pub fn telemetry(&self) -> PoolTelemetry {
+        PoolTelemetry {
+            width: self.width,
+            spawned_threads: self.width - 1,
+            jobs: self.jobs.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run `task(i)` for every `i in 0..n` across the pool and block
+    /// until all items completed (the inter-layer barrier). The calling
+    /// thread participates, so a 1-wide pool (or `n == 1`) degrades to
+    /// an inline loop with no synchronization. Each index is pulled by
+    /// exactly one worker; completion order is unspecified, so tasks
+    /// must write disjoint outputs (slot-per-index).
+    ///
+    /// Must not be called from inside a task of the same pool: one job
+    /// streams at a time.
+    pub fn scatter(&self, n: usize, task: Task<'env>) {
+        if n == 0 {
+            return;
+        }
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        if self.width == 1 || n == 1 {
+            for i in 0..n {
+                task(i);
+            }
+            return;
+        }
+        let next = Arc::new(AtomicUsize::new(0));
+        {
+            let mut st = self.state.lock().unwrap();
+            assert!(
+                st.job.is_none(),
+                "ExecPool::scatter is not reentrant: a job is already \
+                 streaming"
+            );
+            st.gen += 1;
+            st.job = Some(Job {
+                task: task.clone(),
+                n,
+                next: next.clone(),
+                pending: n,
+                gen: st.gen,
+            });
+            self.work_ready.notify_all();
+        }
+        // Participate: the submitter is a full member of the pool.
+        self.pull(&task, n, &next);
+        // Barrier: wait for the stragglers, then retire the job.
+        let mut st = self.state.lock().unwrap();
+        while st.job.as_ref().is_some_and(|j| j.pending > 0) {
+            st = self.job_done.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+
+    /// Pull item indices until the job is drained.
+    fn pull(&self, task: &Task<'env>, n: usize, next: &AtomicUsize) {
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                return;
+            }
+            let guard = DoneGuard { pool: self };
+            task(i);
+            drop(guard);
+        }
+    }
+
+    fn worker_loop(&self) {
+        let mut seen = 0u64;
+        loop {
+            let mut st = self.state.lock().unwrap();
+            let (task, n, next) = loop {
+                if st.shutdown {
+                    return;
+                }
+                let fresh =
+                    st.job.as_ref().is_some_and(|j| j.gen != seen);
+                if fresh {
+                    let j = st.job.as_ref().expect("checked fresh");
+                    seen = j.gen;
+                    break (j.task.clone(), j.n, j.next.clone());
+                }
+                st = self.work_ready.wait(st).unwrap();
+            };
+            drop(st);
+            self.pull(&task, n, &next);
+            // drop the task Arc before sleeping so per-job operands are
+            // released as soon as the job retires
+            drop(task);
+        }
+    }
+
+    fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        self.work_ready.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every index of every job is executed exactly once, across many
+    /// sequential jobs on one pool (the reuse the spawn-per-layer path
+    /// never had), at every width.
+    #[test]
+    fn scatter_runs_each_index_once_across_jobs() {
+        for threads in [1usize, 2, 3, 8] {
+            ExecPool::with(threads, |pool| {
+                for n in [0usize, 1, 5, 64] {
+                    let hits: Arc<Vec<AtomicUsize>> = Arc::new(
+                        (0..n).map(|_| AtomicUsize::new(0)).collect(),
+                    );
+                    let task = {
+                        let hits = hits.clone();
+                        Arc::new(move |i: usize| {
+                            hits[i].fetch_add(1, Ordering::Relaxed);
+                        })
+                    };
+                    pool.scatter(n, task);
+                    for (i, h) in hits.iter().enumerate() {
+                        assert_eq!(
+                            h.load(Ordering::Relaxed),
+                            1,
+                            "threads {threads}, n {n}, index {i}"
+                        );
+                    }
+                }
+            });
+        }
+    }
+
+    /// The barrier holds: after `scatter` returns, every item's side
+    /// effect is visible to the submitter.
+    #[test]
+    fn scatter_is_a_barrier() {
+        ExecPool::with(4, |pool| {
+            for round in 0..50usize {
+                let n = 16;
+                let slots: Arc<Vec<Mutex<Option<usize>>>> =
+                    Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+                let task = {
+                    let slots = slots.clone();
+                    Arc::new(move |i: usize| {
+                        *slots[i].lock().unwrap() = Some(i * i);
+                    })
+                };
+                pool.scatter(n, task);
+                for (i, s) in slots.iter().enumerate() {
+                    assert_eq!(
+                        s.lock().unwrap().take(),
+                        Some(i * i),
+                        "round {round}"
+                    );
+                }
+            }
+        });
+    }
+
+    /// Telemetry: width counts the submitter, spawns happen once, jobs
+    /// count scatters (including degenerate ones).
+    #[test]
+    fn telemetry_counts_spawns_and_jobs() {
+        ExecPool::with(3, |pool| {
+            assert_eq!(pool.telemetry().jobs, 0);
+            for _ in 0..5 {
+                pool.scatter(4, Arc::new(|_: usize| {}));
+            }
+            pool.scatter(0, Arc::new(|_: usize| {})); // no-op, not a job
+            let t = pool.telemetry();
+            assert_eq!(t.width, pool.width());
+            assert_eq!(t.spawned_threads, pool.width() - 1);
+            assert_eq!(t.jobs, 5);
+        });
+        assert_eq!(PoolTelemetry::sequential().spawned_threads, 0);
+    }
+
+    /// An absurd worker request degrades to the 2x-cores clamp instead
+    /// of exhausting the machine; 0 degrades to 1.
+    #[test]
+    fn width_is_clamped_to_the_machine() {
+        let cores = std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(1);
+        ExecPool::with(usize::MAX, |pool| {
+            assert!(pool.width() <= cores * 2);
+        });
+        ExecPool::with(0, |pool| {
+            assert_eq!(pool.width(), 1);
+            // and a 1-wide pool still runs jobs (inline)
+            let ran = Arc::new(AtomicUsize::new(0));
+            let r = ran.clone();
+            pool.scatter(
+                3,
+                Arc::new(move |_: usize| {
+                    r.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            assert_eq!(ran.load(Ordering::Relaxed), 3);
+        });
+    }
+
+    /// Tasks may borrow data at the pool's `'env` lifetime (the
+    /// compiled-plan pattern): a stack value declared outside `with` is
+    /// readable from every worker.
+    #[test]
+    fn tasks_borrow_env_data() {
+        let table: Vec<usize> = (0..32).map(|i| i * 7).collect();
+        let out: Vec<AtomicUsize> =
+            (0..32).map(|_| AtomicUsize::new(0)).collect();
+        ExecPool::with(4, |pool| {
+            let table = &table;
+            let out = &out;
+            pool.scatter(
+                32,
+                Arc::new(move |i| {
+                    out[i].store(table[i], Ordering::Relaxed);
+                }),
+            );
+        });
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(o.load(Ordering::Relaxed), i * 7);
+        }
+    }
+}

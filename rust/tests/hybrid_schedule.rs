@@ -1,0 +1,243 @@
+//! Hybrid batch x tile scheduler acceptance (ISSUE 5): every schedule
+//! over the persistent `ExecPool` must be bitwise identical to the
+//! sequential per-call path across the full (batch, threads) matrix,
+//! including the signed-head KWS network and layers under the
+//! latency-tile MAC floor degrading gracefully inside the pool.
+
+#![cfg(feature = "native")]
+
+use marsellus::coordinator::{Coordinator, Schedule, ScheduleMode};
+use marsellus::dnn::{NetworkSpec, PrecisionConfig};
+use marsellus::power::OperatingPoint;
+use marsellus::runtime::{Runtime, LATENCY_TILE_MIN_MACS};
+use marsellus::util::Rng;
+
+fn coordinator() -> Coordinator {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    let rt = Runtime::native(&dir).expect("native runtime");
+    Coordinator::with_runtime(rt).expect("coordinator")
+}
+
+fn op() -> OperatingPoint {
+    OperatingPoint::at_vdd(0.8)
+}
+
+const MODES: [ScheduleMode; 4] = [
+    ScheduleMode::Auto,
+    ScheduleMode::Batch,
+    ScheduleMode::Latency,
+    ScheduleMode::Hybrid,
+];
+
+/// The full acceptance matrix on the signed-head KWS net: batch sizes
+/// {1, 3, 8, 17} x threads {1, 4, 16} x every mode, all bitwise equal
+/// to the sequential **per-call** path (not merely plan-vs-plan), with
+/// negative logits surviving every schedule.
+#[test]
+fn kws_matrix_matches_sequential_per_call() {
+    let coord = coordinator();
+    let d = coord
+        .deploy(&NetworkSpec::new("kws", PrecisionConfig::Mixed, 7))
+        .unwrap();
+    let mut rng = Rng::new(50);
+    let mut saw_negative = false;
+    for batch in [1usize, 3, 8, 17] {
+        let images: Vec<Vec<i32>> =
+            (0..batch).map(|_| d.random_input(&mut rng)).collect();
+        // sequential per-call reference: 1 thread, pre-plan path
+        let want: Vec<Vec<i32>> = d
+            .infer_batch_opts(&op(), &images, 1, false)
+            .unwrap()
+            .into_iter()
+            .map(|r| r.logits)
+            .collect();
+        saw_negative |=
+            want.iter().any(|l| l.iter().any(|&v| v < 0));
+        for threads in [1usize, 4, 16] {
+            for mode in MODES {
+                let got: Vec<Vec<i32>> = d
+                    .infer_scheduled(
+                        &op(),
+                        &images,
+                        Schedule { threads, mode },
+                    )
+                    .unwrap()
+                    .into_iter()
+                    .map(|r| r.logits)
+                    .collect();
+                assert_eq!(
+                    got, want,
+                    "kws batch {batch}, {threads} threads, {mode:?} \
+                     diverged from sequential per-call"
+                );
+            }
+        }
+    }
+    assert!(
+        saw_negative,
+        "no negative logit anywhere — the signed head is not exercised"
+    );
+}
+
+/// KWS deploys with a layer under the latency-tile MAC floor (the
+/// 16x12 head), so the matrix above also proves tiny layers degrade
+/// gracefully inside the pool. Pin that premise so a zoo change cannot
+/// silently void it.
+#[test]
+fn kws_plan_contains_a_below_floor_layer() {
+    let coord = coordinator();
+    let plan = coord
+        .plan_for(&NetworkSpec::new("kws", PrecisionConfig::Mixed, 7))
+        .unwrap();
+    let macs: Vec<u64> = plan
+        .steps()
+        .iter()
+        .filter_map(|s| match &s.plan {
+            marsellus::runtime::LayerPlan::Conv(c) => Some(c.job.macs()),
+            _ => None,
+        })
+        .collect();
+    assert!(
+        macs.iter().any(|&m| m < LATENCY_TILE_MIN_MACS),
+        "no conv layer under the tile floor in {macs:?}"
+    );
+    assert!(
+        macs.iter().any(|&m| m >= LATENCY_TILE_MIN_MACS),
+        "no conv layer above the tile floor in {macs:?} — the pool \
+         would never tile"
+    );
+}
+
+/// The matrix on ResNet-20 mixed (the wide-word plan path): every
+/// (batch, threads, mode) combination equals the sequential plan walk,
+/// and the plan walk equals the per-call path.
+#[test]
+fn resnet20_matrix_matches_sequential() {
+    let coord = coordinator();
+    let d = coord
+        .deploy(&NetworkSpec::new("resnet20", PrecisionConfig::Mixed, 42))
+        .unwrap();
+    let mut rng = Rng::new(51);
+    for batch in [1usize, 3, 8, 17] {
+        let images: Vec<Vec<i32>> =
+            (0..batch).map(|_| d.random_input(&mut rng)).collect();
+        // sequential plan walk as the in-matrix reference...
+        let want: Vec<Vec<i32>> = images
+            .iter()
+            .map(|img| d.infer(&op(), img).unwrap().logits)
+            .collect();
+        // ...itself pinned to the per-call path on the first image
+        let per_call =
+            d.infer_batch_opts(&op(), &images[..1], 1, false).unwrap();
+        assert_eq!(per_call[0].logits, want[0], "plan vs per-call");
+        for threads in [4usize, 16] {
+            for mode in [ScheduleMode::Hybrid, ScheduleMode::Auto] {
+                let got: Vec<Vec<i32>> = d
+                    .infer_scheduled(
+                        &op(),
+                        &images,
+                        Schedule { threads, mode },
+                    )
+                    .unwrap()
+                    .into_iter()
+                    .map(|r| r.logits)
+                    .collect();
+                assert_eq!(
+                    got, want,
+                    "resnet20 batch {batch}, {threads} threads, {mode:?}"
+                );
+            }
+        }
+    }
+}
+
+/// The presets stay thin wrappers: `infer_batch` == Batch schedule,
+/// `infer_latency` == Latency schedule on a 1-image batch, and the
+/// legacy respawn tiler agrees with both.
+#[test]
+fn presets_equal_their_schedules() {
+    let coord = coordinator();
+    let d = coord
+        .deploy(&NetworkSpec::new("resnet20", PrecisionConfig::Mixed, 5))
+        .unwrap();
+    let mut rng = Rng::new(52);
+    let images: Vec<Vec<i32>> =
+        (0..5).map(|_| d.random_input(&mut rng)).collect();
+    let batch = d.infer_batch(&op(), &images, 4).unwrap();
+    let sched = d
+        .infer_scheduled(&op(), &images, Schedule::batch(4))
+        .unwrap();
+    for (a, b) in batch.iter().zip(&sched) {
+        assert_eq!(a.logits, b.logits, "infer_batch vs Schedule::batch");
+    }
+    let lat = d.infer_latency(&op(), &images[0], 4).unwrap();
+    let lat_sched = d
+        .infer_scheduled(&op(), &images[..1], Schedule::latency(4))
+        .unwrap();
+    assert_eq!(lat.logits, lat_sched[0].logits);
+    let respawn =
+        d.infer_latency_opts(&op(), &images[0], 4, false).unwrap();
+    assert_eq!(lat.logits, respawn.logits, "pooled vs respawn tiler");
+}
+
+/// Pool telemetry through `profile_scheduled`: one provisioning of
+/// `threads - 1` workers serves many per-layer jobs, and the per-layer
+/// split now carries the activation-packing share.
+#[test]
+fn profile_reports_pool_telemetry_and_pack_split() {
+    let coord = coordinator();
+    let d = coord
+        .deploy(&NetworkSpec::new("resnet20", PrecisionConfig::Mixed, 9))
+        .unwrap();
+    let mut rng = Rng::new(53);
+    let image = d.random_input(&mut rng);
+    let (split, pool) = d.profile_scheduled(&image, 4).unwrap();
+    assert_eq!(split.len(), d.layers().len());
+    assert!(pool.width >= 2, "pool collapsed: {pool:?}");
+    assert_eq!(pool.spawned_threads, pool.width - 1);
+    // every tiled conv layer streams 2 jobs (pack bands + conv tiles);
+    // at least the wide body layers must have gone through the pool
+    assert!(pool.jobs >= 2, "{pool:?}");
+    let packed: f64 = split.iter().map(|l| l.pack_us).sum();
+    assert!(packed > 0.0, "no packing time recorded in {split:?}");
+    for l in &split {
+        assert!(
+            l.pack_us <= l.compute_us,
+            "{}: pack {} > compute {}",
+            l.name,
+            l.pack_us,
+            l.compute_us
+        );
+    }
+    // sequential profile records the pack share too, with no pool
+    let (seq_split, seq_pool) = d.profile_scheduled(&image, 1).unwrap();
+    assert_eq!(seq_pool.spawned_threads, 0);
+    assert_eq!(seq_pool.jobs, 0);
+    assert!(seq_split.iter().map(|l| l.pack_us).sum::<f64>() > 0.0);
+}
+
+/// Degenerate schedules are serviced, not errors: empty batches are a
+/// clean no-op and 0 threads degrades to the sequential walk.
+#[test]
+fn schedule_edge_cases() {
+    let coord = coordinator();
+    let d = coord
+        .deploy(&NetworkSpec::new("kws", PrecisionConfig::Mixed, 3))
+        .unwrap();
+    assert!(d
+        .infer_scheduled(&op(), &[], Schedule::hybrid(8))
+        .unwrap()
+        .is_empty());
+    let mut rng = Rng::new(54);
+    let images: Vec<Vec<i32>> =
+        (0..2).map(|_| d.random_input(&mut rng)).collect();
+    // 0 threads degrades to 1 everywhere
+    let got = d
+        .infer_scheduled(&op(), &images, Schedule::auto(0))
+        .unwrap();
+    let want = d.infer_batch(&op(), &images, 1).unwrap();
+    for (a, b) in got.iter().zip(&want) {
+        assert_eq!(a.logits, b.logits, "0-thread schedule");
+    }
+}
