@@ -53,6 +53,13 @@ RECORDED = {
         "hybrid_img_s": "hybrid_img_s",
         "threads": "hybrid_threads",
     },
+    "tuned": {
+        "tuned_vs_heuristic": "tuned_vs_heuristic",
+        "heuristic_ms": "tuned_heuristic_ms",
+        "tuned_ms": "tuned_best_ms",
+        "hybrid_cutover": "tuned_hybrid_cutover",
+        "threads": "tuned_threads",
+    },
 }
 
 

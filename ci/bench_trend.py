@@ -30,6 +30,7 @@ SERIES = (
     ("speedup_pool", "hybrid: persistent pool vs sequential"),
     ("pool_vs_respawn", "hybrid: pool vs respawn tiler"),
     ("speedup_hybrid", "hybrid: hybrid vs batch schedule"),
+    ("tuned_vs_heuristic", "tuned: autotuned vs heuristic config"),
 )
 
 # How many trailing history rows the table shows.

@@ -5,9 +5,11 @@ Compares a freshly produced BENCH json (``cargo bench -- --smoke --json
 BENCH_ci.json``) against the committed baseline and fails when any
 baseline metric regresses by more than the tolerance (default 20%).
 
-Two sections are gated the same way: ``throughput`` (batch serving,
-images/s) and ``latency`` (single-image wall clock, sequential vs the
-tile-parallel latency mode). Absolute images/s and milliseconds vary
+Gated sections: ``throughput`` (batch serving, images/s), ``latency``
+(single-image wall clock, sequential vs the tile-parallel latency
+mode), ``hybrid`` (persistent-pool scheduler), and ``tuned`` (the
+deploy-time autotuner's tuned-vs-heuristic pooled latency, a
+same-machine A/B gated >= 1.0). Absolute images/s and milliseconds vary
 with runner hardware, so the committed baseline pins
 *machine-independent ratios* (the LayerPlan / worker-pool speedups over
 the pre-plan per-call path, and the tile-mode speedup over the
@@ -48,8 +50,12 @@ HISTORY_WINDOW = 5
 # persistent-pool scheduler: speedup_pool (pooled single-image latency
 # over the sequential walk) is trajectory-gated next to speedup_tile,
 # and pool_vs_respawn pins that the pool never loses to the legacy
-# spawn-per-layer tiler at equal thread count.
-SECTIONS = ("throughput", "latency", "hybrid")
+# spawn-per-layer tiler at equal thread count. "tuned" is the
+# deploy-time autotuner: tuned_vs_heuristic (tuned vs heuristic pooled
+# latency, same machine, min-of-N) is gated >= the 1.0 baseline so a
+# tuned configuration can never lose to the fixed heuristics it
+# replaced.
+SECTIONS = ("throughput", "latency", "hybrid", "tuned")
 
 # Only ratio keys are trajectory-gated; raw img/s and ms are
 # machine-dependent.
@@ -58,6 +64,7 @@ TRAJECTORY_KEYS = {
     "speedup_parallel",
     "speedup_tile",
     "speedup_pool",
+    "tuned_vs_heuristic",
 }
 
 # Ratios whose effective baseline is capped at factor * recorded thread

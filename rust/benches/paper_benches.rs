@@ -19,7 +19,10 @@
 //! `infer_latency` mode), recording images/s, per-image milliseconds
 //! and the per-layer setup-vs-compute split into the JSON —
 //! `ci/check_bench.py` gates both the throughput and the latency
-//! sections against the committed baseline.
+//! sections against the committed baseline. The `tuned` section
+//! re-deploys with the deploy-time autotuner and pins
+//! `tuned_vs_heuristic >= 1.0`: a tuned configuration may never lose
+//! to the fixed heuristics it replaced.
 
 use std::time::Instant;
 
@@ -413,6 +416,121 @@ fn hybrid_bench(smoke: bool) -> Hybrid {
     }
 }
 
+/// Deploy-time autotuner measurements: pooled single-image latency of
+/// the heuristically-configured deployment vs the tuned deployment on
+/// the same machine. The tuner only ever keeps a candidate that beat
+/// the heuristic in its own trials (ties keep the heuristic), so the
+/// ratio is >= 1.0 up to timer noise — `ci/check_bench.py` gates it
+/// against the committed 1.0 baseline.
+struct Tuned {
+    threads: usize,
+    iters: u32,
+    trials: u32,
+    heuristic_ms: f64,
+    tuned_ms: f64,
+    hybrid_cutover: usize,
+    tuned_layers: usize,
+}
+
+impl Tuned {
+    /// Tuned vs heuristic pooled latency — the CI-gated floor.
+    fn tuned_vs_heuristic(&self) -> f64 {
+        self.heuristic_ms / self.tuned_ms
+    }
+
+    fn to_json(&self) -> String {
+        format!(
+            " {{\n  \"threads\": {},\n  \"iters\": {},\n  \
+             \"trials\": {},\n  \"heuristic_ms\": {:.3},\n  \
+             \"tuned_ms\": {:.3},\n  \"tuned_vs_heuristic\": {:.3},\n  \
+             \"hybrid_cutover\": {},\n  \"tuned_layers\": {}\n }}",
+            self.threads,
+            self.iters,
+            self.trials,
+            self.heuristic_ms,
+            self.tuned_ms,
+            self.tuned_vs_heuristic(),
+            self.hybrid_cutover,
+            self.tuned_layers
+        )
+    }
+}
+
+/// Measure the autotuner on the ResNet-20 example: deploy with the
+/// fixed heuristics, then re-deploy tuned (in-memory only — the bench
+/// must not depend on persisted state), assert bitwise-identical
+/// logits, and time pooled single-image latency on both deployments.
+fn tuned_bench(smoke: bool) -> Tuned {
+    use marsellus::coordinator::Coordinator;
+    use marsellus::dnn::{NetworkSpec, PrecisionConfig};
+    use marsellus::power::OperatingPoint;
+    use marsellus::runtime::TuneOptions;
+    use marsellus::util::Rng;
+
+    let dir = marsellus::runtime::Runtime::resolve_artifacts_dir(None);
+    let coord = Coordinator::new(dir).expect("coordinator");
+    let spec = NetworkSpec::new("resnet20", PrecisionConfig::Mixed, 42);
+    let op = OperatingPoint::at_vdd(0.8);
+    let threads = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(4);
+    let iters = if smoke { 5 } else { 15 };
+    let trials = if smoke { 2 } else { 3 };
+    // Heuristic deployment FIRST: its Arc keeps the plan alive after
+    // deploy_tuned replaces the cache resident with the tuned plan.
+    let heuristic = coord.deploy(&spec).expect("deploy");
+    let tuned = coord
+        .deploy_tuned(&spec, &TuneOptions::new(threads, trials))
+        .expect("deploy_tuned");
+    let cfg = tuned.tuned().expect("tuned config").clone();
+    let mut rng = Rng::new(0x7E57);
+    let image = heuristic.random_input(&mut rng);
+
+    // tuning changes speed, never logits
+    let base = heuristic.infer(&op, &image).expect("infer");
+    let tuned_seq = tuned.infer(&op, &image).expect("infer");
+    assert_eq!(base.logits, tuned_seq.logits, "tuned plan changed logits");
+    let tuned_pool = tuned
+        .infer_latency(&op, &image, threads)
+        .expect("infer_latency");
+    assert_eq!(
+        base.logits, tuned_pool.logits,
+        "tuned pooled path changed logits"
+    );
+
+    let best_of = |f: &dyn Fn()| {
+        let mut best = f64::INFINITY;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        best
+    };
+    let heuristic_ms = best_of(&|| {
+        heuristic
+            .infer_latency(&op, &image, threads)
+            .expect("infer_latency");
+    });
+    let tuned_ms = best_of(&|| {
+        tuned
+            .infer_latency(&op, &image, threads)
+            .expect("infer_latency");
+    });
+
+    let tuned_layers =
+        cfg.layers.iter().filter(|l| l.speedup() > 1.0).count();
+    Tuned {
+        threads,
+        iters,
+        trials,
+        heuristic_ms,
+        tuned_ms,
+        hybrid_cutover: cfg.hybrid_cutover(),
+        tuned_layers,
+    }
+}
+
 fn write_json(
     path: &str,
     mode: &str,
@@ -421,6 +539,7 @@ fn write_json(
     throughput: &Throughput,
     latency: &Latency,
     hybrid: &Hybrid,
+    tuned: &Tuned,
 ) {
     let resolved = resolve_out_path(path);
     let path = resolved.display().to_string();
@@ -439,11 +558,12 @@ fn write_json(
     let doc = format!(
         "{{\n \"mode\": \"{mode}\",\n \"total_best_ms\": {total:.3},\n \
          \"throughput\":\n{},\n \"latency\":\n{},\n \
-         \"hybrid\":\n{},\n \
+         \"hybrid\":\n{},\n \"tuned\":\n{},\n \
          \"benches\": [\n{}\n ]\n}}\n",
         throughput.to_json(),
         latency.to_json(),
         hybrid.to_json(),
+        tuned.to_json(),
         rows.join(",\n")
     );
     if let Err(e) = std::fs::write(path, doc) {
@@ -582,6 +702,22 @@ fn main() {
         hyb.speedup_hybrid()
     );
 
+    // deploy-time autotuner: tuned vs heuristic pooled latency
+    println!("\ndeploy-time autotuner (ResNet-20 mixed, best of N)");
+    let tun = tuned_bench(smoke);
+    println!(
+        "  heuristic cfg   {:>8.2} ms/img  ({} workers, fixed picks)",
+        tun.heuristic_ms, tun.threads
+    );
+    println!(
+        "  tuned cfg       {:>8.2} ms/img  ({:.2}x vs heuristic, \
+         {} layer pick(s), cutover {}; gated >= 1.0)",
+        tun.tuned_ms,
+        tun.tuned_vs_heuristic(),
+        tun.tuned_layers,
+        tun.hybrid_cutover
+    );
+
     if let Some(path) = json_path {
         write_json(
             &path,
@@ -591,6 +727,7 @@ fn main() {
             &thr,
             &lat,
             &hyb,
+            &tun,
         );
     }
 

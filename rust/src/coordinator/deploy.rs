@@ -106,15 +106,7 @@ impl Schedule {
     }
 }
 
-/// Effective-tile-speedup estimate bounding the hybrid scheduler's
-/// tiled remainder: remainders of `min(threads, CAP)` images or more
-/// stay image-parallel, strictly smaller ones are tiled. Rationale:
-/// tiling one image across `T` workers yields at most ~`min(T, 8)`
-/// effective speedup on the zoo networks (activation packing and
-/// elementwise layers bound it), so a remainder of `k` images finishes
-/// faster as concurrent whole-image shards (wall = 1 image) once
-/// `k >= min(T, 8)`; below that, tiling each in turn wins.
-pub const HYBRID_TILE_SPEEDUP_CAP: usize = 8;
+pub use crate::runtime::HYBRID_TILE_SPEEDUP_CAP;
 
 /// A deployed network: spec resolved, layers staged, plan compiled.
 ///
@@ -167,6 +159,23 @@ impl<'c> Deployment<'c> {
     /// The resolved layer schedule.
     pub fn layers(&self) -> &[Layer] {
         &self.layers
+    }
+
+    /// The autotuned configuration this deployment serves from, if it
+    /// was deployed through `Coordinator::deploy_tuned` (or the
+    /// `MARSELLUS_TUNE` environment opt-in).
+    pub fn tuned(&self) -> Option<&crate::runtime::TunedConfig> {
+        self.plan.as_ref()?.tuned()
+    }
+
+    /// The hybrid batch/tile cutover in force: the measured one when
+    /// this deployment carries a tuned configuration with a real
+    /// tile-vs-sequential measurement, the fixed
+    /// [`HYBRID_TILE_SPEEDUP_CAP`] otherwise.
+    pub fn hybrid_cutover(&self) -> usize {
+        self.tuned()
+            .map(|t| t.hybrid_cutover())
+            .unwrap_or(HYBRID_TILE_SPEEDUP_CAP)
     }
 
     /// (side, channels) of the unpadded input plane the network
@@ -572,8 +581,11 @@ impl<'c> Deployment<'c> {
                 ScheduleMode::Hybrid => {
                     let w = pool.width();
                     let rem = if n >= w { n % w } else { n };
+                    // tiling a remainder image across the pool is worth
+                    // ~cutover concurrent shards: the measured value on
+                    // tuned deployments, the fixed cap otherwise
                     let tiled = if rem > 0
-                        && rem < w.min(HYBRID_TILE_SPEEDUP_CAP)
+                        && rem < w.min(self.hybrid_cutover())
                     {
                         rem
                     } else {

@@ -30,11 +30,14 @@ use crate::metrics::LayerSplit;
 use crate::power::OperatingPoint;
 use crate::rbe::functional::{
     add_requant, avgpool, conv_bitserial, trim_input, NormQuant,
+    PlaneWidth,
 };
 use crate::rbe::{RbeJob, RbeMode};
 use crate::runtime::{
-    BackendKind, ConvRun, ExecPool, LayerPlan, NetworkPlan, PlanStep,
-    Runtime, TensorArg,
+    machine_fingerprint, BackendKind, ConvPlan, ConvRun, ExecPool,
+    LayerPlan, LayerTune, NetworkPlan, PlanStep, Runtime, SplitFactors,
+    TensorArg, TuneOptions, TunedConfig, BAND_FACTOR_CANDIDATES,
+    LATENCY_TILE_MIN_MACS, TILE_FACTOR_CANDIDATES,
 };
 use crate::util::Rng;
 
@@ -67,6 +70,10 @@ pub(super) enum ConvExec<'p, 'env> {
     /// spawn overhead.
     Respawn(usize),
 }
+
+/// Salt decorrelating the autotuner's probe image from any seed a
+/// caller is likely to use for real inputs.
+const TUNE_PROBE_SALT: u64 = 0x7E57_AB1E;
 
 /// The system leader.
 pub struct Coordinator {
@@ -134,6 +141,12 @@ impl Coordinator {
     /// `deploy`, `Deployment::{infer, infer_batch, profile}` are pure
     /// activation streaming with no per-call network plumbing.
     pub fn deploy(&self, spec: &NetworkSpec) -> Result<Deployment<'_>> {
+        if self.runtime.kind() == BackendKind::Native {
+            // opt-in deploy-time autotuning (`MARSELLUS_TUNE=1`)
+            if let Some(opts) = TuneOptions::from_env() {
+                return self.deploy_tuned(spec, &opts);
+            }
+        }
         let layers = spec.layers()?;
         self.manifest
             .validate_layers(&layers)
@@ -144,6 +157,343 @@ impl Coordinator {
             (None, Some(Self::network_params(&layers, spec.seed)))
         };
         Ok(Deployment::new(self, spec.clone(), layers, plan, params))
+    }
+
+    /// [`Self::deploy`] with deploy-time autotuning: candidate
+    /// (width × tile × band) kernel variants are micro-benchmarked per
+    /// conv layer on this machine and the deployment serves from a plan
+    /// compiled to the winners, with the hybrid batch/tile cutover
+    /// derived from the measured tile-vs-sequential speedup. Tuning is
+    /// paid once: a valid persisted config (`opts.persist_dir`, keyed
+    /// by spec + [`machine_fingerprint`]) is reused, and the tuned plan
+    /// enters the runtime's bounded plan cache like any other. Every
+    /// candidate is constrained to configurations already proven
+    /// bitwise identical — and re-checked against the heuristic plan's
+    /// logits during measurement — so tuning changes speed, never
+    /// logits. A trial budget of 0 deploys the exact heuristic
+    /// configuration (useful as an A/B control). Native backend only.
+    pub fn deploy_tuned(
+        &self,
+        spec: &NetworkSpec,
+        opts: &TuneOptions,
+    ) -> Result<Deployment<'_>> {
+        ensure!(
+            self.runtime.kind() == BackendKind::Native,
+            "autotuning requires the native backend (layer plans); \
+             backend is {}",
+            self.runtime.kind().as_str()
+        );
+        let layers = spec.layers()?;
+        self.manifest
+            .validate_layers(&layers)
+            .with_context(|| format!("deploying {spec}"))?;
+        let fp = machine_fingerprint();
+        // a resident plan only satisfies a tuned deploy when it carries
+        // a config for THIS machine — and a measured one, unless the
+        // caller explicitly asked for the heuristic control (trials 0)
+        let accept = |p: &NetworkPlan| {
+            p.tuned().is_some_and(|t| {
+                t.fingerprint == fp && (t.trials > 0 || opts.trials == 0)
+            })
+        };
+        let plan = match self.runtime.cached_network_plan(spec, &accept) {
+            Some(plan) => plan,
+            None => {
+                let cfg = self.tuned_config(spec, &layers, opts, &fp)?;
+                self.runtime.network_plan_replacing(spec, &accept, || {
+                    self.build_plan_with(&layers, spec.seed, Some(&cfg))
+                })?
+            }
+        };
+        Ok(Deployment::new(self, spec.clone(), layers, Some(plan), None))
+    }
+
+    /// Resolve the tuned configuration for a deployment: trial budget 0
+    /// short-circuits to the exact heuristic configuration; otherwise a
+    /// valid persisted config for this spec + machine is reloaded, else
+    /// the network is tuned now and the winner persisted.
+    fn tuned_config(
+        &self,
+        spec: &NetworkSpec,
+        layers: &[Layer],
+        opts: &TuneOptions,
+        fingerprint: &str,
+    ) -> Result<TunedConfig> {
+        if opts.trials == 0 {
+            let plan = self.build_plan(layers, spec.seed)?;
+            return Ok(Self::heuristic_config(
+                spec,
+                &plan,
+                fingerprint,
+                opts.threads.max(1),
+            ));
+        }
+        let spec_key = spec.to_string();
+        if let Some(dir) = &opts.persist_dir {
+            if let Some(cfg) = TunedConfig::load(dir, &spec_key, fingerprint)?
+            {
+                return Ok(cfg);
+            }
+        }
+        let cfg = self.tune_network(spec, layers, opts, fingerprint)?;
+        if let Some(dir) = &opts.persist_dir {
+            cfg.save(dir)?;
+        }
+        Ok(cfg)
+    }
+
+    /// The exact configuration the fixed heuristics pick — what a trial
+    /// budget of 0 resolves to: every conv layer at its compiled width
+    /// with unit split factors, nothing measured (so the hybrid cutover
+    /// stays at the fixed cap).
+    fn heuristic_config(
+        spec: &NetworkSpec,
+        plan: &NetworkPlan,
+        fingerprint: &str,
+        threads: usize,
+    ) -> TunedConfig {
+        let layers = plan
+            .steps()
+            .iter()
+            .filter_map(|s| match &s.plan {
+                LayerPlan::Conv(c) => Some(LayerTune::heuristic(
+                    &s.layer.name,
+                    c.plane_width(),
+                )),
+                _ => None,
+            })
+            .collect();
+        TunedConfig {
+            spec: spec.to_string(),
+            fingerprint: fingerprint.to_string(),
+            threads,
+            trials: 0,
+            tile_speedup: 0.0,
+            layers,
+        }
+    }
+
+    /// Micro-benchmark candidate (width × tile × band) variants for
+    /// every conv layer of `spec` on this machine and return the
+    /// winning configuration.
+    ///
+    /// Structure: a heuristic plan is built and walked once
+    /// sequentially on a deterministic probe image, capturing each conv
+    /// layer's exact input plane (so candidates are timed on real
+    /// mid-network activations, not synthetic ones). Per measurable
+    /// layer — at or above [`LATENCY_TILE_MIN_MACS`], where the pool
+    /// engages — every width variant is compiled up front (plans must
+    /// outlive the pool borrow), then timed under one persistent
+    /// [`ExecPool`]: widths first at unit factors, then the split-
+    /// factor grid on the winning width. The heuristic variant is timed
+    /// first and wins ties (strict `<`), so measurement noise can never
+    /// walk away from the default without evidence. Every candidate's
+    /// first trial is asserted bitwise equal to the heuristic layer
+    /// output, and the final tuned plan's whole-net logits (sequential
+    /// and pooled) are asserted equal to the heuristic plan's — the
+    /// pooled walk also yields the tile-vs-sequential speedup that
+    /// becomes the measured hybrid cutover.
+    fn tune_network(
+        &self,
+        spec: &NetworkSpec,
+        layers: &[Layer],
+        opts: &TuneOptions,
+        fingerprint: &str,
+    ) -> Result<TunedConfig> {
+        let threads = opts.threads.max(1);
+        let trials = opts.trials.max(1);
+        let heuristic = self.build_plan(layers, spec.seed)?;
+        // deterministic probe image from the entry layer's geometry
+        let first = layers
+            .iter()
+            .find(|l| l.op.on_rbe())
+            .context("network has no conv/linear layer to tune")?;
+        let mut rng = Rng::new(spec.seed ^ TUNE_PROBE_SALT);
+        let probe: Vec<i32> = (0..first.h * first.h * first.cin)
+            .map(|_| rng.range_i32(0, 1 << first.i_bits))
+            .collect();
+        // one sequential reference walk, capturing every conv input
+        let steps = heuristic.steps();
+        let mut inputs: Vec<Option<Vec<i32>>> = vec![None; steps.len()];
+        let mut capture = |idx: usize, x: &[i32]| {
+            inputs[idx] = Some(x.to_vec());
+        };
+        let heuristic_logits = self.run_network_exec_obs(
+            &heuristic,
+            &probe,
+            None,
+            ConvExec::Seq,
+            Some(&mut capture),
+        )?;
+        let params = Self::network_params(layers, spec.seed);
+        let numerics = self.runtime.backend().plan_numerics();
+        let mut tuned_layers = Vec::new();
+        for (idx, step) in steps.iter().enumerate() {
+            let LayerPlan::Conv(hc) = &step.plan else { continue };
+            let l = &step.layer;
+            if threads <= 1 || hc.job.macs() < LATENCY_TILE_MIN_MACS {
+                // the pool never engages here: nothing to measure, the
+                // heuristic pick is exact by construction
+                tuned_layers
+                    .push(LayerTune::heuristic(&l.name, hc.plane_width()));
+                continue;
+            }
+            let x = inputs[idx]
+                .as_ref()
+                .with_context(|| format!("no captured input for {}", l.name))?;
+            let reference = hc.run(x)?;
+            // width variants compile BEFORE the pool borrow (candidate
+            // plans must outlive it); heuristic width first, so index 0
+            // is always the control
+            let heur_width = hc.plane_width();
+            let widths: Vec<Option<PlaneWidth>> = match heur_width {
+                Some(hw) => std::iter::once(Some(hw))
+                    .chain(
+                        PlaneWidth::ALL
+                            .into_iter()
+                            .filter(|w| *w != hw)
+                            .map(Some),
+                    )
+                    .collect(),
+                None => vec![None],
+            };
+            let e = self.manifest.get(&l.artifact()).with_context(|| {
+                format!("layer {} has no artifact {}", l.name, l.artifact())
+            })?;
+            let p = &params[&l.name];
+            let mut variants: Vec<(Option<PlaneWidth>, ConvPlan)> =
+                Vec::with_capacity(widths.len());
+            for w in &widths {
+                let pick = LayerTune {
+                    layer: l.name.clone(),
+                    width: *w,
+                    factors: SplitFactors::UNIT,
+                    tuned_us: 0.0,
+                    heuristic_us: 0.0,
+                };
+                let plan = LayerPlan::compile_with(
+                    e,
+                    &p.w,
+                    &p.scale,
+                    &p.bias,
+                    numerics,
+                    Some(&pick),
+                )
+                .with_context(|| format!("variant plan for {}", l.name))?;
+                let LayerPlan::Conv(c) = plan else {
+                    bail!("layer {} variant is not a conv plan", l.name)
+                };
+                variants.push((*w, c));
+            }
+            let tune = ExecPool::with(threads, |pool| -> Result<LayerTune> {
+                let mut time_variant =
+                    |vi: usize, f: SplitFactors| -> Result<f64> {
+                        let c = &variants[vi].1;
+                        let mut best = f64::INFINITY;
+                        for trial in 0..trials {
+                            let t0 = Instant::now();
+                            let r =
+                                c.run_scheduled_factored(x, Some(pool), f)?;
+                            let us = t0.elapsed().as_secs_f64() * 1e6;
+                            if trial == 0 {
+                                ensure!(
+                                    r.out == reference,
+                                    "layer {}: candidate {:?} tile x{} \
+                                     band x{} diverged from the heuristic \
+                                     output",
+                                    l.name,
+                                    variants[vi].0,
+                                    f.tile,
+                                    f.band
+                                );
+                            }
+                            best = best.min(us);
+                        }
+                        Ok(best)
+                    };
+                // stage 1: the width axis at unit factors; the
+                // heuristic (index 0) is timed first and wins ties
+                let heuristic_us = time_variant(0, SplitFactors::UNIT)?;
+                let (mut best_vi, mut best_us) = (0usize, heuristic_us);
+                for vi in 1..variants.len() {
+                    let us = time_variant(vi, SplitFactors::UNIT)?;
+                    if us < best_us {
+                        (best_vi, best_us) = (vi, us);
+                    }
+                }
+                // stage 2: the split-factor grid on the winning width
+                let mut best_f = SplitFactors::UNIT;
+                for tf in TILE_FACTOR_CANDIDATES {
+                    for bf in BAND_FACTOR_CANDIDATES {
+                        let f = SplitFactors { tile: tf, band: bf };
+                        if f == SplitFactors::UNIT {
+                            continue;
+                        }
+                        let us = time_variant(best_vi, f)?;
+                        if us < best_us {
+                            (best_f, best_us) = (f, us);
+                        }
+                    }
+                }
+                Ok(LayerTune {
+                    layer: l.name.clone(),
+                    width: variants[best_vi].1.plane_width(),
+                    factors: best_f,
+                    tuned_us: best_us,
+                    heuristic_us,
+                })
+            })?;
+            tuned_layers.push(tune);
+        }
+        let mut cfg = TunedConfig {
+            spec: spec.to_string(),
+            fingerprint: fingerprint.to_string(),
+            threads,
+            trials,
+            tile_speedup: 0.0,
+            layers: tuned_layers,
+        };
+        // whole-net gate on the assembled winner: the tuned plan's
+        // sequential and pooled walks must reproduce the heuristic
+        // logits exactly — and their timing ratio is the measured
+        // tile-vs-sequential speedup behind the hybrid cutover
+        let tuned_plan = self.build_plan_with(layers, spec.seed, Some(&cfg))?;
+        let mut seq_us = f64::INFINITY;
+        for _ in 0..trials {
+            let t0 = Instant::now();
+            let logits = self.run_network_exec(
+                &tuned_plan,
+                &probe,
+                None,
+                ConvExec::Seq,
+            )?;
+            seq_us = seq_us.min(t0.elapsed().as_secs_f64() * 1e6);
+            ensure!(
+                logits == heuristic_logits,
+                "tuned sequential walk diverged from heuristic logits"
+            );
+        }
+        let mut pool_us = f64::INFINITY;
+        ExecPool::with(threads, |pool| -> Result<()> {
+            for _ in 0..trials {
+                let t0 = Instant::now();
+                let logits = self.run_network_exec(
+                    &tuned_plan,
+                    &probe,
+                    None,
+                    ConvExec::Pool(pool),
+                )?;
+                pool_us = pool_us.min(t0.elapsed().as_secs_f64() * 1e6);
+                ensure!(
+                    logits == heuristic_logits,
+                    "tuned pooled walk diverged from heuristic logits"
+                );
+            }
+            Ok(())
+        })?;
+        cfg.tile_speedup =
+            if pool_us > 0.0 { seq_us / pool_us } else { 1.0 };
+        Ok(cfg)
     }
 
     /// Fetch (or compile, once) the layer-plan pipeline for a deployment
@@ -203,6 +553,19 @@ impl Coordinator {
     /// Compile every layer of the network once: weights packed into RBE
     /// bit-plane words, job geometry resolved, requant constants staged.
     fn build_plan(&self, layers: &[Layer], seed: u64) -> Result<NetworkPlan> {
+        self.build_plan_with(layers, seed, None)
+    }
+
+    /// [`Self::build_plan`], compiling each conv layer to its pick from
+    /// a tuned configuration when one is given; the config rides inside
+    /// the returned plan (`NetworkPlan::tuned`) and joins its byte
+    /// accounting.
+    fn build_plan_with(
+        &self,
+        layers: &[Layer],
+        seed: u64,
+        tuned: Option<&TunedConfig>,
+    ) -> Result<NetworkPlan> {
         let params = Self::network_params(layers, seed);
         let numerics = self.runtime.backend().plan_numerics();
         let empty = LayerParams {
@@ -217,16 +580,23 @@ impl Coordinator {
                 format!("layer {} has no artifact {name}", l.name)
             })?;
             let p = if l.op.on_rbe() { &params[&l.name] } else { &empty };
+            let pick = tuned.and_then(|c| c.layer(&l.name));
             let t0 = Instant::now();
-            let plan = LayerPlan::compile(e, &p.w, &p.scale, &p.bias, numerics)
-                .with_context(|| format!("planning layer {}", l.name))?;
+            let plan = LayerPlan::compile_with(
+                e, &p.w, &p.scale, &p.bias, numerics, pick,
+            )
+            .with_context(|| format!("planning layer {}", l.name))?;
             steps.push(PlanStep {
                 layer: l.clone(),
                 plan,
                 setup_us: t0.elapsed().as_secs_f64() * 1e6,
             });
         }
-        Ok(NetworkPlan::new(steps))
+        let mut plan = NetworkPlan::new(steps);
+        if let Some(cfg) = tuned {
+            plan.set_tuned(cfg.clone());
+        }
+        Ok(plan)
     }
 
     /// Walk the compiled plan for one image: activation streaming only.
@@ -242,8 +612,25 @@ impl Coordinator {
         &self,
         plan: &'env NetworkPlan,
         image: &[i32],
+        profile: Option<&mut Vec<LayerSplit>>,
+        exec: ConvExec<'_, 'env>,
+    ) -> Result<Vec<i32>> {
+        self.run_network_exec_obs(plan, image, profile, exec, None)
+    }
+
+    /// [`Self::run_network_exec`] with an optional per-step observer:
+    /// `observe(step_index, conv_input)` fires for every conv/linear
+    /// step with the exact activation plane the layer receives (padded
+    /// for 3×3, the block input for 1×1 shortcuts). The autotuner uses
+    /// this to capture real mid-network operands for candidate timing
+    /// without duplicating the residual bookkeeping below.
+    pub(super) fn run_network_exec_obs<'env>(
+        &self,
+        plan: &'env NetworkPlan,
+        image: &[i32],
         mut profile: Option<&mut Vec<LayerSplit>>,
         exec: ConvExec<'_, 'env>,
+        mut observe: Option<&mut dyn FnMut(usize, &[i32])>,
     ) -> Result<Vec<i32>> {
         let run_conv = |c: &'env crate::runtime::ConvPlan,
                         x: &[i32]|
@@ -259,7 +646,7 @@ impl Coordinator {
         let mut cur = image.to_vec();
         let mut block_in: Vec<i32> = cur.clone();
         let mut down_out: Vec<i32> = Vec::new();
-        for step in plan.steps() {
+        for (idx, step) in plan.steps().iter().enumerate() {
             let l = &step.layer;
             let t0 = profile.is_some().then(Instant::now);
             let mut pack_us = 0.0;
@@ -269,12 +656,18 @@ impl Coordinator {
                         block_in = cur.clone();
                     }
                     let padded = Self::pad1(&cur, l.h, l.h, l.cin);
+                    if let Some(obs) = observe.as_mut() {
+                        obs(idx, &padded);
+                    }
                     let r = run_conv(c, &padded)
                         .with_context(|| format!("layer {}", l.name))?;
                     pack_us = r.pack_us;
                     cur = r.out;
                 }
                 (LayerPlan::Conv(c), LayerOp::Conv1x1) => {
+                    if let Some(obs) = observe.as_mut() {
+                        obs(idx, &block_in);
+                    }
                     let r = run_conv(c, &block_in)
                         .with_context(|| format!("layer {}", l.name))?;
                     pack_us = r.pack_us;
@@ -284,6 +677,9 @@ impl Coordinator {
                     LayerPlan::Conv(c),
                     LayerOp::Linear | LayerOp::LinearSigned,
                 ) => {
+                    if let Some(obs) = observe.as_mut() {
+                        obs(idx, &cur);
+                    }
                     let r = run_conv(c, &cur)
                         .with_context(|| format!("layer {}", l.name))?;
                     pack_us = r.pack_us;

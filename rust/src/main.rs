@@ -18,6 +18,13 @@
 //!                    [--seed S]
 //!                    [--schedule auto|batch|latency|hybrid]
 //!                                             scheduled batch inference
+//! marsellus tune     [--network ID] [--config C] [--seed S]
+//!                    [--threads T] [--trials N] [--tune-dir DIR]
+//!                    [--json PATH]            deploy-time autotuning:
+//!                                             micro-benchmark kernel
+//!                                             variants per conv layer,
+//!                                             persist + report the
+//!                                             winning config
 //! marsellus networks                          list deployable networks
 //! marsellus list                              list figure ids
 //! ```
@@ -27,13 +34,18 @@
 //! the returned handle. `--schedule` picks the hybrid batch x tile
 //! scheduler's shape (default `auto`: image shards for the bulk of the
 //! batch, the remainder tiled within-image over the same worker pool).
+//! `infer` and `batch` accept `--tune` to serve from an autotuned plan
+//! (tuning once, persisting beside the plan cache); `MARSELLUS_TUNE=1`
+//! opts every deploy in (with `MARSELLUS_TUNE_TRIALS`,
+//! `MARSELLUS_TUNE_THREADS`, `MARSELLUS_TUNE_DIR`).
 //! Backend selection: `MARSELLUS_BACKEND=native|pjrt` (default native).
 //! Plan-cache bound: `MARSELLUS_PLAN_CACHE_BYTES` (default 256 MiB).
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Context, Result};
 use marsellus::coordinator::{Coordinator, Schedule, ScheduleMode};
 use marsellus::dnn::{NetworkSpec, PrecisionConfig};
 use marsellus::power::OperatingPoint;
+use marsellus::runtime::{TuneOptions, TunedConfig, DEFAULT_TUNE_TRIALS};
 use marsellus::util::Args;
 
 fn main() -> Result<()> {
@@ -43,6 +55,7 @@ fn main() -> Result<()> {
         Some("figure") => figure(&args),
         Some("infer") => infer(&args),
         Some("batch") => batch(&args),
+        Some("tune") => tune(&args),
         Some("networks") => {
             for def in marsellus::dnn::registry::NETWORKS {
                 println!("{:<10} {}", def.id, def.description);
@@ -57,8 +70,8 @@ fn main() -> Result<()> {
         }
         other => {
             eprintln!(
-                "usage: marsellus <smoke|figure|infer|batch|networks|list> \
-                 [options]"
+                "usage: marsellus \
+                 <smoke|figure|infer|batch|tune|networks|list> [options]"
             );
             bail!("unknown command {other:?}")
         }
@@ -118,13 +131,35 @@ fn parse_spec(args: &Args) -> Result<NetworkSpec> {
     Ok(NetworkSpec::new(network, parse_config(args)?, seed))
 }
 
+/// Tuning options shared by `marsellus tune` and the `--tune` flags:
+/// `--threads` (default: the machine's cores) x `--trials` (default 3),
+/// persisting under `--tune-dir` (default `<artifacts>/tuned`).
+fn tune_options(args: &Args, threads: usize) -> Result<TuneOptions> {
+    let cores = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(4);
+    let threads = if threads > 1 { threads } else { cores };
+    let trials =
+        args.get_usize("trials", DEFAULT_TUNE_TRIALS as usize)? as u32;
+    let dir = match args.get("tune-dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => artifacts_dir(args).join("tuned"),
+    };
+    Ok(TuneOptions { threads, trials, persist_dir: Some(dir) })
+}
+
 fn infer(args: &Args) -> Result<()> {
     let coord = Coordinator::new(artifacts_dir(args))?;
     let spec = parse_spec(args)?;
     let vdd = args.get_f64("vdd", 0.8)?;
     let op = OperatingPoint::at_vdd(vdd);
 
-    let deployment = coord.deploy(&spec)?;
+    let threads = args.get_usize("threads", 1)?;
+    let deployment = if args.flag("tune") {
+        coord.deploy_tuned(&spec, &tune_options(args, threads)?)?
+    } else {
+        coord.deploy(&spec)?
+    };
     let (h, c) = deployment.input_dims();
     let mut rng = marsellus::util::Rng::new(spec.seed);
     let image = deployment.random_input(&mut rng);
@@ -133,7 +168,15 @@ fn infer(args: &Args) -> Result<()> {
         deployment.layers().len(),
         deployment.input_bits()
     );
-    let threads = args.get_usize("threads", 1)?;
+    if let Some(cfg) = deployment.tuned() {
+        println!(
+            "tuned: {} layer pick(s), predicted {:.2}x vs heuristic, \
+             hybrid cutover {}",
+            cfg.layers.len(),
+            cfg.predicted_speedup(),
+            cfg.hybrid_cutover()
+        );
+    }
     let res = match args.get("check") {
         // cross-checking forces the per-call path; pick a small layer
         Some(layer) => {
@@ -195,7 +238,20 @@ fn batch(args: &Args) -> Result<()> {
     let mode: ScheduleMode = args.get_or("schedule", "auto").parse()?;
     let sched = Schedule { threads, mode };
 
-    let deployment = coord.deploy(&spec)?;
+    let deployment = if args.flag("tune") {
+        coord.deploy_tuned(&spec, &tune_options(args, threads)?)?
+    } else {
+        coord.deploy(&spec)?
+    };
+    if let Some(cfg) = deployment.tuned() {
+        println!(
+            "tuned: {} layer pick(s), predicted {:.2}x vs heuristic, \
+             hybrid cutover {}",
+            cfg.layers.len(),
+            cfg.predicted_speedup(),
+            cfg.hybrid_cutover()
+        );
+    }
     let mut rng = marsellus::util::Rng::new(spec.seed ^ 0xBA7C4);
     let images: Vec<Vec<i32>> =
         (0..n).map(|_| deployment.random_input(&mut rng)).collect();
@@ -244,5 +300,118 @@ fn batch(args: &Args) -> Result<()> {
         coord.runtime.plan_cache_budget() / 1024,
         coord.runtime.plan_evictions(),
     );
+    Ok(())
+}
+
+fn tune(args: &Args) -> Result<()> {
+    let coord = Coordinator::new(artifacts_dir(args))?;
+    let spec = parse_spec(args)?;
+    let threads = args.get_usize("threads", 0)?;
+    let opts = tune_options(args, threads)?;
+    println!(
+        "tuning {spec}: {} trial(s) per candidate over {} worker(s)",
+        opts.trials, opts.threads
+    );
+    let t0 = std::time::Instant::now();
+    let deployment = coord.deploy_tuned(&spec, &opts)?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let cfg = deployment
+        .tuned()
+        .context("tuned deployment carries no config")?;
+    println!(
+        "{:<16} {:>6} {:>5} {:>5} {:>13} {:>9} {:>8}",
+        "layer", "width", "tile", "band", "heuristic_us", "tuned_us",
+        "speedup"
+    );
+    for l in &cfg.layers {
+        let width = l
+            .width
+            .map(|w| w.lanes().to_string())
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:<16} {:>6} {:>5} {:>5} {:>13.1} {:>9.1} {:>7.2}x",
+            l.layer,
+            width,
+            l.factors.tile,
+            l.factors.band,
+            l.heuristic_us,
+            l.tuned_us,
+            l.speedup()
+        );
+    }
+    println!(
+        "predicted speedup {:.2}x over the heuristic config \
+         (measured layers, sum of best trials)",
+        cfg.predicted_speedup()
+    );
+    println!(
+        "tile speedup {:.2} -> hybrid cutover {} (fixed cap {})",
+        cfg.tile_speedup,
+        cfg.hybrid_cutover(),
+        marsellus::runtime::HYBRID_TILE_SPEEDUP_CAP,
+    );
+    println!(
+        "tuned {} in {wall_ms:.0} ms on {}",
+        cfg.spec, cfg.fingerprint
+    );
+    if cfg.trials > 0 {
+        // the persisted sidecar must reproduce this config byte for
+        // byte — the CI tuner-smoke step relies on this check
+        let dir = opts.persist_dir.as_ref().expect("cli always persists");
+        let reloaded = TunedConfig::load(dir, &cfg.spec, &cfg.fingerprint)?
+            .context("persisted tuned config did not reload")?;
+        ensure!(
+            reloaded.to_tsv() == cfg.to_tsv(),
+            "persisted tuned config does not round-trip"
+        );
+        println!(
+            "config persisted + round-tripped: {}",
+            TunedConfig::path_in(dir, &cfg.spec, &cfg.fingerprint)
+                .display()
+        );
+    } else {
+        println!("trial budget 0: heuristic control config, not persisted");
+    }
+    if let Some(path) = args.get("json") {
+        write_tune_json(path, cfg)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn write_tune_json(path: &str, cfg: &TunedConfig) -> Result<()> {
+    let mut layers = String::new();
+    for (i, l) in cfg.layers.iter().enumerate() {
+        if i > 0 {
+            layers.push_str(",\n");
+        }
+        layers.push_str(&format!(
+            "    {{\"layer\": \"{}\", \"width\": {}, \"tile_factor\": {}, \
+             \"band_factor\": {}, \"tuned_us\": {:.1}, \
+             \"heuristic_us\": {:.1}}}",
+            l.layer,
+            l.width.map(|w| w.lanes()).unwrap_or(0),
+            l.factors.tile,
+            l.factors.band,
+            l.tuned_us,
+            l.heuristic_us,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"spec\": \"{}\",\n  \"fingerprint\": \"{}\",\n  \
+         \"threads\": {},\n  \"trials\": {},\n  \
+         \"tile_speedup\": {:.4},\n  \"hybrid_cutover\": {},\n  \
+         \"predicted_speedup\": {:.4},\n  \"layers\": [\n{}\n  ]\n}}\n",
+        cfg.spec,
+        cfg.fingerprint,
+        cfg.threads,
+        cfg.trials,
+        cfg.tile_speedup,
+        cfg.hybrid_cutover(),
+        cfg.predicted_speedup(),
+        layers,
+    );
+    std::fs::write(path, json)
+        .with_context(|| format!("writing {path}"))?;
     Ok(())
 }

@@ -473,6 +473,27 @@ impl PlaneWidth {
             PlaneWidth::W32
         }
     }
+
+    /// Every lane width, narrowest first — the full `PlaneWord` axis
+    /// the deploy-time autotuner enumerates per layer. All widths are
+    /// bitwise identical ([`Self::for_job`] only estimates which is
+    /// fastest), so a tuner may pick any of them on measurement alone.
+    pub const ALL: [PlaneWidth; 3] =
+        [PlaneWidth::W32, PlaneWidth::W64, PlaneWidth::W128];
+
+    /// The width packing `lanes` channels per word — the inverse of
+    /// [`Self::lanes`], for deserializing persisted tuned configs.
+    pub fn from_lanes(lanes: usize) -> Result<Self> {
+        PlaneWidth::ALL
+            .into_iter()
+            .find(|w| w.lanes() == lanes)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no plane width has {lanes} lanes (expected 32, 64 \
+                     or 128)"
+                )
+            })
+    }
 }
 
 impl std::fmt::Display for PlaneWidth {
@@ -1448,6 +1469,22 @@ mod tests {
                 .bytes(),
             2 * 1 * 2 * 16
         );
+    }
+
+    /// The tuner's enumeration axis round-trips: every width in `ALL`
+    /// survives lanes -> `from_lanes`, and unknown lane counts fail
+    /// loudly instead of mapping to a nearby width.
+    #[test]
+    fn width_enumeration_round_trips() {
+        assert_eq!(PlaneWidth::ALL.len(), 3);
+        for w in PlaneWidth::ALL {
+            assert_eq!(PlaneWidth::from_lanes(w.lanes()).unwrap(), w);
+        }
+        for lanes in [0usize, 1, 16, 33, 96, 256] {
+            let err =
+                PlaneWidth::from_lanes(lanes).unwrap_err().to_string();
+            assert!(err.contains("lanes"), "{err}");
+        }
     }
 
     #[test]

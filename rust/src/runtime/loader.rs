@@ -237,10 +237,46 @@ impl Runtime {
         spec: &NetworkSpec,
         build: impl FnOnce() -> Result<NetworkPlan>,
     ) -> Result<Arc<NetworkPlan>> {
-        if let Some(slot) = self.plans.lock().unwrap().get_mut(spec) {
-            slot.last_used = self.plan_clock.fetch_add(1, Ordering::Relaxed);
-            self.plan_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(slot.plan.clone());
+        self.network_plan_replacing(spec, |_| true, build)
+    }
+
+    /// Resident plan for `spec` if one is cached **and** `accept`s —
+    /// the read-only half of [`Self::network_plan_replacing`], letting
+    /// callers probe for (say) a suitably-tuned plan without committing
+    /// to a build. An accepted hit bumps the LRU stamp and counts as a
+    /// cache hit; a rejected resident is left untouched.
+    pub fn cached_network_plan(
+        &self,
+        spec: &NetworkSpec,
+        accept: impl Fn(&NetworkPlan) -> bool,
+    ) -> Option<Arc<NetworkPlan>> {
+        let mut plans = self.plans.lock().unwrap();
+        let slot = plans.get_mut(spec)?;
+        if !accept(&slot.plan) {
+            return None;
+        }
+        slot.last_used = self.plan_clock.fetch_add(1, Ordering::Relaxed);
+        self.plan_hits.fetch_add(1, Ordering::Relaxed);
+        Some(slot.plan.clone())
+    }
+
+    /// [`Self::network_plan`] with an acceptance predicate: a resident
+    /// plan failing `accept` (e.g. an untuned plan when the caller
+    /// requires a tuned one, or vice versa) is **replaced** — the
+    /// rejected resident is removed and un-accounted (this counts as a
+    /// build of the successor, not an eviction, which telemetry
+    /// reserves for budget pressure) and `build`'s result takes its
+    /// slot. The race rules match [`Self::network_plan`], with `accept`
+    /// arbitrating: losing a race to an acceptable plan serves it as a
+    /// hit and discards the duplicate build.
+    pub fn network_plan_replacing(
+        &self,
+        spec: &NetworkSpec,
+        accept: impl Fn(&NetworkPlan) -> bool,
+        build: impl FnOnce() -> Result<NetworkPlan>,
+    ) -> Result<Arc<NetworkPlan>> {
+        if let Some(plan) = self.cached_network_plan(spec, &accept) {
+            return Ok(plan);
         }
         // Build outside the lock: plan compilation packs every weight
         // tensor of the network and must not serialize unrelated worker
@@ -248,10 +284,16 @@ impl Runtime {
         let built = Arc::new(build()?);
         let mut plans = self.plans.lock().unwrap();
         if let Some(slot) = plans.get_mut(spec) {
-            // lost the race: serve the winner's plan, count a hit
-            slot.last_used = self.plan_clock.fetch_add(1, Ordering::Relaxed);
-            self.plan_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(slot.plan.clone());
+            if accept(&slot.plan) {
+                // lost the race to an acceptable plan: serve the
+                // winner's, count a hit
+                slot.last_used =
+                    self.plan_clock.fetch_add(1, Ordering::Relaxed);
+                self.plan_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(slot.plan.clone());
+            }
+            let old = plans.remove(spec).expect("resident slot");
+            self.plan_bytes.fetch_sub(old.bytes, Ordering::Relaxed);
         }
         let bytes = built.bytes();
         self.plan_builds.fetch_add(1, Ordering::Relaxed);

@@ -27,6 +27,10 @@
 //! (`MARSELLUS_PLAN_CACHE_BYTES`), so many-tenant serving cannot grow
 //! without bound. Both caches are `Send + Sync`, so the coordinator can
 //! fan inference batches out across threads over one shared instance.
+//! Deploy-time autotuning ([`TunedConfig`]) replaces the fixed
+//! width/split heuristics with per-layer measurements on the live
+//! machine; tuned configs persist beside the plan cache and ride inside
+//! the cached [`NetworkPlan`].
 //!
 //! Backend selection: [`Runtime::from_env`] honours
 //! `MARSELLUS_BACKEND=native|pjrt`, defaulting to native.
@@ -41,6 +45,7 @@ mod plan;
 mod pjrt;
 mod pool;
 mod tensor;
+mod tune;
 
 pub use backend::{BackendKind, ExecBackend, LayerExec};
 pub use executable::Executable;
@@ -55,3 +60,8 @@ pub use pool::{ExecPool, PoolTelemetry};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use tensor::TensorArg;
+pub use tune::{
+    machine_fingerprint, LayerTune, SplitFactors, TuneOptions, TunedConfig,
+    BAND_FACTOR_CANDIDATES, DEFAULT_TUNE_TRIALS, HYBRID_TILE_SPEEDUP_CAP,
+    MAX_HYBRID_CUTOVER, TILE_FACTOR_CANDIDATES,
+};

@@ -39,6 +39,7 @@ use crate::rbe::functional::{
 use crate::rbe::RbeJob;
 
 use super::pool::ExecPool;
+use super::tune::{LayerTune, SplitFactors, TunedConfig};
 
 /// Jobs at or below this MAC count run bit-serial under
 /// [`NativeNumerics::Auto`] on the per-call path, and packed bit-serial
@@ -153,6 +154,9 @@ pub struct ConvPlan {
     pub full: usize,
     nq: NormQuant,
     kernel: PlanKernel,
+    /// Split-shape multipliers applied on every pooled run — `UNIT`
+    /// unless the plan was compiled from a tuned configuration.
+    factors: SplitFactors,
 }
 
 impl ConvPlan {
@@ -200,13 +204,33 @@ impl ConvPlan {
         x: &[i32],
         pool: Option<&ExecPool<'env>>,
     ) -> Result<ConvRun> {
+        self.run_scheduled_factored(x, pool, self.factors)
+    }
+
+    /// [`Self::run_scheduled`] with explicit split-shape multipliers
+    /// overriding the plan's compiled-in factors for this one call —
+    /// the autotuner's measurement hook: candidate variants are timed
+    /// through the exact serving code path without mutating (or
+    /// recompiling) the shared plan. Factors only re-partition the same
+    /// output and packing ranges, so every value is bitwise identical
+    /// to [`Self::run`].
+    pub fn run_scheduled_factored<'env>(
+        &'env self,
+        x: &[i32],
+        pool: Option<&ExecPool<'env>>,
+        f: SplitFactors,
+    ) -> Result<ConvRun> {
         let x = self.checked_trim(x)?;
         if let Some(pool) = pool.filter(|p| {
             p.width() > 1 && self.job.macs() >= LATENCY_TILE_MIN_MACS
         }) {
-            let tiles = tile_split(&self.job, pool.width());
+            let tiles = tile_split(
+                &self.job,
+                pool.width().saturating_mul(f.tile.max(1)),
+            );
             if tiles.len() > 1 {
-                return self.run_pooled_trimmed(x, pool, tiles);
+                let bands = pool.width().saturating_mul(f.band.max(1));
+                return self.run_pooled_trimmed(x, pool, tiles, bands);
             }
         }
         self.run_seq_trimmed(&x)
@@ -246,12 +270,14 @@ impl ConvPlan {
         x: std::borrow::Cow<'_, [i32]>,
         pool: &ExecPool<'env>,
         tiles: Vec<ConvTile>,
+        bands: usize,
     ) -> Result<ConvRun> {
         let plane: Arc<Vec<i32>> = Arc::new(x.into_owned());
         let (staged, pack_us) = match &self.kernel {
             PlanKernel::Packed(pw) => {
                 let t0 = Instant::now();
-                let xp = self.pack_banded(&plane, pw.width(), pool)?;
+                let xp =
+                    self.pack_banded(&plane, pw.width(), pool, bands)?;
                 (Some(Arc::new(xp)), t0.elapsed().as_secs_f64() * 1e6)
             }
             PlanKernel::Reference(_) => {
@@ -311,8 +337,9 @@ impl ConvPlan {
         plane: &Arc<Vec<i32>>,
         width: PlaneWidth,
         pool: &ExecPool<'env>,
+        bands: usize,
     ) -> Result<PackedActivations> {
-        let rows = band_split(self.job.h_in(), pool.width());
+        let rows = band_split(self.job.h_in(), bands);
         if rows.len() <= 1 {
             return pack_activations(&self.job, plane, width);
         }
@@ -496,6 +523,24 @@ impl LayerPlan {
         bias: &[i32],
         numerics: NativeNumerics,
     ) -> Result<Self> {
+        Self::compile_with(e, w, scale, bias, numerics, None)
+    }
+
+    /// [`Self::compile`] with an optional per-layer tuned pick: plane
+    /// word width and split-shape multipliers come from the autotuner's
+    /// measurement instead of the fixed heuristics. The kernel *choice*
+    /// (packed vs reference) stays with `numerics` — a tuned width only
+    /// reshapes the packed staging, it never moves a layer onto a
+    /// different arithmetic path, so tuned plans remain bitwise
+    /// identical by the same construction as heuristic ones.
+    pub fn compile_with(
+        e: &ManifestEntry,
+        w: &[i32],
+        scale: &[i32],
+        bias: &[i32],
+        numerics: NativeNumerics,
+        tune: Option<&LayerTune>,
+    ) -> Result<Self> {
         match e.op {
             LayerOp::Conv3x3
             | LayerOp::Conv1x1
@@ -519,10 +564,13 @@ impl LayerPlan {
                     signed: e.op.signed_output(),
                 };
                 let kernel = if numerics.packed_for(&job) {
-                    // word width is a plan-time parameter: wide words
-                    // past one 32-channel group, the literal §II-B3
-                    // layout otherwise
-                    let width = PlaneWidth::for_job(&job);
+                    // word width is a plan-time parameter: the tuned
+                    // pick when one was measured, otherwise wide words
+                    // past one 32-channel group and the literal §II-B3
+                    // layout below
+                    let width = tune
+                        .and_then(|t| t.width)
+                        .unwrap_or_else(|| PlaneWidth::for_job(&job));
                     PlanKernel::Packed(pack_weights_with(&job, w, width)?)
                 } else {
                     check_weights(&job, w)?;
@@ -533,6 +581,9 @@ impl LayerPlan {
                     full: e.full_side(),
                     nq,
                     kernel,
+                    factors: tune
+                        .map(|t| t.factors)
+                        .unwrap_or(SplitFactors::UNIT),
                 }))
             }
             LayerOp::Add => Ok(LayerPlan::Add {
@@ -573,12 +624,26 @@ pub struct PlanStep {
 pub struct NetworkPlan {
     steps: Vec<PlanStep>,
     bytes: usize,
+    tuned: Option<TunedConfig>,
 }
 
 impl NetworkPlan {
     pub fn new(steps: Vec<PlanStep>) -> Self {
         let bytes = steps.iter().map(|s| s.plan.bytes()).sum();
-        Self { steps, bytes }
+        Self { steps, bytes, tuned: None }
+    }
+
+    /// Attach the tuned configuration this plan was compiled from. The
+    /// config's serialized size joins [`Self::bytes`] so the plan-cache
+    /// LRU accounts the tuning sidecar alongside the staged operands.
+    pub fn set_tuned(&mut self, cfg: TunedConfig) {
+        self.bytes += cfg.bytes();
+        self.tuned = Some(cfg);
+    }
+
+    /// The tuned configuration this plan was compiled from, if any.
+    pub fn tuned(&self) -> Option<&TunedConfig> {
+        self.tuned.as_ref()
     }
 
     pub fn steps(&self) -> &[PlanStep] {
@@ -811,6 +876,61 @@ mod tests {
                     assert!(c.run_scheduled(&[0i32; 3], Some(pool)).is_err());
                 });
             }
+        }
+    }
+
+    /// `run_scheduled_factored` — the autotuner's measurement hook —
+    /// is bitwise identical to the sequential `run` for every
+    /// (width × tile factor × band factor) candidate the tuner may
+    /// try, through one shared pool per width.
+    #[test]
+    fn factored_run_matches_sequential_for_all_candidates() {
+        use super::super::tune::{
+            BAND_FACTOR_CANDIDATES, TILE_FACTOR_CANDIDATES,
+        };
+        let e = wide_entry();
+        let (x, w, scale, bias) = random_conv_inputs(&e, 33);
+        let mut want: Option<Vec<i32>> = None;
+        for width in PlaneWidth::ALL {
+            let t = LayerTune {
+                layer: e.name.clone(),
+                width: Some(width),
+                factors: SplitFactors { tile: 2, band: 2 },
+                tuned_us: 0.0,
+                heuristic_us: 0.0,
+            };
+            let plan = LayerPlan::compile_with(
+                &e,
+                &w,
+                &scale,
+                &bias,
+                NativeNumerics::BitSerial,
+                Some(&t),
+            )
+            .unwrap();
+            let LayerPlan::Conv(c) = &plan else { panic!() };
+            assert_eq!(c.plane_width(), Some(width), "tuned width applied");
+            let out = c.run(&x).unwrap();
+            let want = want.get_or_insert(out.clone());
+            assert_eq!(&out, want, "{width} sequential");
+            ExecPool::with(4, |pool| {
+                // the compiled-in (2, 2) factors drive run_scheduled...
+                let got = c.run_scheduled(&x, Some(pool)).unwrap();
+                assert_eq!(&got.out, want, "{width} compiled factors");
+                // ...and every candidate override stays identical
+                for tf in TILE_FACTOR_CANDIDATES {
+                    for bf in BAND_FACTOR_CANDIDATES {
+                        let f = SplitFactors { tile: tf, band: bf };
+                        let got = c
+                            .run_scheduled_factored(&x, Some(pool), f)
+                            .unwrap();
+                        assert_eq!(
+                            &got.out, want,
+                            "{width} tile x{tf} band x{bf}"
+                        );
+                    }
+                }
+            });
         }
     }
 

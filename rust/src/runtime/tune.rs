@@ -1,0 +1,597 @@
+//! Deploy-time kernel autotuning configuration.
+//!
+//! Marsellus hits its peak throughput by reconfiguring the RBE per
+//! layer; the software analog has the same per-layer degrees of
+//! freedom — plane word width ([`PlaneWidth`]), tile multiplier, band
+//! multiplier and the hybrid batch/tile cutover — but picks them with
+//! fixed heuristics. This module holds the *configuration* side of the
+//! measured alternative: a [`TunedConfig`] records, per conv layer, the
+//! `(width, tile factor, band factor)` variant that micro-benchmarked
+//! fastest on the live machine (the measurement loop itself lives in
+//! `coordinator::infer`, which owns plan building), plus a whole-net
+//! tile-vs-sequential speedup that replaces the fixed
+//! [`HYBRID_TILE_SPEEDUP_CAP`] in the hybrid scheduler.
+//!
+//! Every candidate the tuner may pick comes from the set already proven
+//! bitwise identical (`rbe::functional` width/band/tile parity property
+//! tests), and the measurement loop re-asserts identity on every
+//! candidate's first trial — tuning changes speed, never logits.
+//!
+//! Configs persist as `#`-metadata-prefixed TSV next to the plan cache
+//! (`TuneOptions::persist_dir`), keyed by `NetworkSpec` **and**
+//! [`machine_fingerprint`] so a config tuned on one machine is never
+//! served on another, and are byte-accounted into `NetworkPlan::bytes`
+//! so the plan-cache LRU sees their footprint.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::rbe::functional::PlaneWidth;
+use crate::util::TsvTable;
+
+/// Effective-tile-speedup estimate bounding the hybrid scheduler's
+/// tiled remainder when no measured value is available: remainders of
+/// `min(threads, CAP)` images or more stay image-parallel, strictly
+/// smaller ones are tiled. Rationale: tiling one image across `T`
+/// workers yields at most ~`min(T, 8)` effective speedup on the zoo
+/// networks (activation packing and elementwise layers bound it), so a
+/// remainder of `k` images finishes faster as concurrent whole-image
+/// shards (wall = 1 image) once `k >= min(T, 8)`; below that, tiling
+/// each in turn wins. A tuned deployment replaces this constant with
+/// [`TunedConfig::hybrid_cutover`], derived from the speedup actually
+/// observed on the serving machine.
+pub const HYBRID_TILE_SPEEDUP_CAP: usize = 8;
+
+/// Largest measured hybrid cutover honoured: beyond this the tiled
+/// remainder could cover the whole batch and the hybrid schedule would
+/// collapse into pure latency mode.
+pub const MAX_HYBRID_CUTOVER: usize = 64;
+
+/// Trial count per candidate when `MARSELLUS_TUNE_TRIALS` is unset.
+/// Minimum-of-3 is enough to reject scheduler-noise outliers while
+/// keeping deploy-time tuning under a second on the zoo networks.
+pub const DEFAULT_TUNE_TRIALS: u32 = 3;
+
+/// Tile-split multipliers the tuner tries on the winning width: the
+/// conv tile count becomes `pool_width * factor`, trading scatter
+/// overhead against tail imbalance (more, smaller tiles drain evenly).
+pub const TILE_FACTOR_CANDIDATES: [usize; 3] = [1, 2, 4];
+
+/// Band-split multipliers for the activation-packing phase, same
+/// trade-off as [`TILE_FACTOR_CANDIDATES`] on the pack half.
+pub const BAND_FACTOR_CANDIDATES: [usize; 2] = [1, 2];
+
+/// On-disk format version; bumped whenever the TSV schema changes.
+const TUNE_FORMAT_VERSION: u32 = 1;
+
+/// Per-layer split-shape multipliers applied when a conv plan fans out
+/// over a pool: the tile count is `pool_width * tile` and the packing
+/// band count `pool_width * band`. `UNIT` is the pre-tuner heuristic
+/// (one tile and one band per worker). Factors only re-partition the
+/// same output range, so every value is bitwise identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SplitFactors {
+    /// Conv tiles per pool worker.
+    pub tile: usize,
+    /// Activation-packing bands per pool worker.
+    pub band: usize,
+}
+
+impl SplitFactors {
+    /// The heuristic split: one tile and one band per worker.
+    pub const UNIT: SplitFactors = SplitFactors { tile: 1, band: 1 };
+}
+
+impl Default for SplitFactors {
+    fn default() -> Self {
+        SplitFactors::UNIT
+    }
+}
+
+/// How a tuning run is conducted: pool width to measure under, trials
+/// per candidate (minimum-of-N), and where winning configs persist.
+#[derive(Debug, Clone)]
+pub struct TuneOptions {
+    /// Pool width the variants are measured under (and that serving is
+    /// assumed to use). 0 degrades to 1.
+    pub threads: usize,
+    /// Trials per candidate; the minimum is kept. **0 skips measurement
+    /// entirely** and yields the exact heuristic configuration.
+    pub trials: u32,
+    /// Directory for persisted configs (`None`: tune in-memory only).
+    pub persist_dir: Option<PathBuf>,
+}
+
+impl TuneOptions {
+    /// Options measuring under `threads` workers with the default trial
+    /// budget, without persistence.
+    pub fn new(threads: usize, trials: u32) -> Self {
+        Self { threads, trials, persist_dir: None }
+    }
+
+    /// Read the opt-in tuning environment: `Some` when `MARSELLUS_TUNE`
+    /// is truthy (`1`/`true`/`on`/`yes`), with `MARSELLUS_TUNE_TRIALS`,
+    /// `MARSELLUS_TUNE_THREADS` (default: the machine's cores) and
+    /// `MARSELLUS_TUNE_DIR` filling the fields.
+    pub fn from_env() -> Option<Self> {
+        let enabled = std::env::var("MARSELLUS_TUNE")
+            .map(|v| env_truthy(&v))
+            .unwrap_or(false);
+        if !enabled {
+            return None;
+        }
+        let cores = std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(4);
+        let threads = std::env::var("MARSELLUS_TUNE_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(cores);
+        let trials = std::env::var("MARSELLUS_TUNE_TRIALS")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(DEFAULT_TUNE_TRIALS);
+        let persist_dir = std::env::var("MARSELLUS_TUNE_DIR")
+            .ok()
+            .filter(|v| !v.trim().is_empty())
+            .map(PathBuf::from);
+        Some(Self { threads, trials, persist_dir })
+    }
+}
+
+/// `MARSELLUS_TUNE`-style opt-in values.
+fn env_truthy(v: &str) -> bool {
+    matches!(
+        v.trim().to_ascii_lowercase().as_str(),
+        "1" | "true" | "on" | "yes"
+    )
+}
+
+/// The tuned pick for one conv layer: the winning kernel variant plus
+/// the measurements that chose it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerTune {
+    /// Layer name (`NetworkPlan` step identity).
+    pub layer: String,
+    /// Winning plane word width (`None`: the layer runs the reference
+    /// staging, which packs no bit-plane words).
+    pub width: Option<PlaneWidth>,
+    /// Winning split-shape multipliers.
+    pub factors: SplitFactors,
+    /// Best trial of the winning variant, wall microseconds (0 when the
+    /// layer was not measured — below the tile floor or trials = 0).
+    pub tuned_us: f64,
+    /// Best trial of the heuristic variant under the same pool.
+    pub heuristic_us: f64,
+}
+
+impl LayerTune {
+    /// The unmeasured heuristic pick for a layer (what the plan
+    /// compiler would choose on its own).
+    pub fn heuristic(layer: &str, width: Option<PlaneWidth>) -> Self {
+        Self {
+            layer: layer.to_string(),
+            width,
+            factors: SplitFactors::UNIT,
+            tuned_us: 0.0,
+            heuristic_us: 0.0,
+        }
+    }
+
+    /// Measured speedup of the tuned variant over the heuristic one
+    /// (1.0 for unmeasured layers).
+    pub fn speedup(&self) -> f64 {
+        if self.tuned_us > 0.0 && self.heuristic_us > 0.0 {
+            self.heuristic_us / self.tuned_us
+        } else {
+            1.0
+        }
+    }
+}
+
+/// The winning configuration of one tuning run: per-layer variants plus
+/// the whole-net tile-vs-sequential speedup, keyed by deployment spec
+/// and serving machine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedConfig {
+    /// `NetworkSpec` display form (`network/config/seedN`).
+    pub spec: String,
+    /// [`machine_fingerprint`] of the machine that measured this.
+    pub fingerprint: String,
+    /// Pool width the measurements ran under.
+    pub threads: usize,
+    /// Trials per candidate (0: the unmeasured heuristic config).
+    pub trials: u32,
+    /// Measured whole-net speedup of the pooled (tile-parallel) walk
+    /// over the sequential walk on the tuned plan; 0.0 when unmeasured.
+    pub tile_speedup: f64,
+    /// Per-conv-layer winners, in plan step order.
+    pub layers: Vec<LayerTune>,
+}
+
+impl TunedConfig {
+    /// The tuned pick for `layer`, if one was recorded.
+    pub fn layer(&self, name: &str) -> Option<&LayerTune> {
+        self.layers.iter().find(|t| t.layer == name)
+    }
+
+    /// Measured hybrid batch/tile cutover: remainders strictly smaller
+    /// than this are tiled, larger ones stay image-parallel. The
+    /// measured tile-vs-sequential speedup *is* the break-even point
+    /// (`k` remainder images finish in `k / tile_speedup` image-walls
+    /// tiled vs 1 image-wall sharded), rounded and clamped to
+    /// `[1, MAX_HYBRID_CUTOVER]`; an unmeasured config (trials = 0)
+    /// falls back to the fixed [`HYBRID_TILE_SPEEDUP_CAP`].
+    pub fn hybrid_cutover(&self) -> usize {
+        if self.tile_speedup <= 0.0 {
+            return HYBRID_TILE_SPEEDUP_CAP;
+        }
+        (self.tile_speedup.round() as usize).clamp(1, MAX_HYBRID_CUTOVER)
+    }
+
+    /// Sum-of-layers predicted speedup of the tuned configuration over
+    /// the heuristic one (1.0 when nothing was measured).
+    pub fn predicted_speedup(&self) -> f64 {
+        let (tuned, heur) = self.layers.iter().fold((0.0, 0.0), |(t, h), l| {
+            (t + l.tuned_us, h + l.heuristic_us)
+        });
+        if tuned > 0.0 && heur > 0.0 {
+            heur / tuned
+        } else {
+            1.0
+        }
+    }
+
+    /// Resident bytes this config adds to its plan — what
+    /// `NetworkPlan::bytes` (and so the plan-cache LRU) accounts for a
+    /// tuned deployment. The serialized form *is* the footprint model:
+    /// it is within a few words of the in-memory size and keeps the
+    /// accounting trivially consistent with what persists.
+    pub fn bytes(&self) -> usize {
+        self.to_tsv().len()
+    }
+
+    /// Serialize to the on-disk form: `#key\tvalue` metadata lines
+    /// (version, spec, fingerprint, threads, trials, tile_speedup)
+    /// followed by a plain TSV table of per-layer picks.
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# marsellus tuned config\n");
+        out.push_str(&format!("#version\t{TUNE_FORMAT_VERSION}\n"));
+        out.push_str(&format!("#spec\t{}\n", self.spec));
+        out.push_str(&format!("#fingerprint\t{}\n", self.fingerprint));
+        out.push_str(&format!("#threads\t{}\n", self.threads));
+        out.push_str(&format!("#trials\t{}\n", self.trials));
+        out.push_str(&format!("#tile_speedup\t{:.4}\n", self.tile_speedup));
+        out.push_str(
+            "layer\twidth\ttile_factor\tband_factor\ttuned_us\theuristic_us\n",
+        );
+        for t in &self.layers {
+            let width = match t.width {
+                Some(w) => w.lanes().to_string(),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{:.1}\t{:.1}\n",
+                t.layer,
+                width,
+                t.factors.tile,
+                t.factors.band,
+                t.tuned_us,
+                t.heuristic_us,
+            ));
+        }
+        out
+    }
+
+    /// Parse the [`Self::to_tsv`] form. Formatting is idempotent:
+    /// `from_tsv(to_tsv(c)).to_tsv() == c.to_tsv()`, which is what the
+    /// round-trip assertions compare.
+    pub fn from_tsv(text: &str) -> Result<Self> {
+        let mut meta = std::collections::HashMap::new();
+        let mut body = String::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix('#') {
+                if let Some((k, v)) = rest.split_once('\t') {
+                    meta.insert(k.trim().to_string(), v.trim().to_string());
+                }
+            } else {
+                body.push_str(line);
+                body.push('\n');
+            }
+        }
+        let get = |k: &str| {
+            meta.get(k)
+                .with_context(|| format!("tuned config missing #{k} line"))
+        };
+        let version: u32 = get("version")?.parse()?;
+        ensure!(
+            version == TUNE_FORMAT_VERSION,
+            "tuned config version {version} (this build reads \
+             {TUNE_FORMAT_VERSION})"
+        );
+        let tile_speedup: f64 = get("tile_speedup")?
+            .parse()
+            .context("tuned config #tile_speedup is not a number")?;
+        let table =
+            TsvTable::parse(&body).context("tuned config layer table")?;
+        let mut layers = Vec::with_capacity(table.len());
+        for row in 0..table.len() {
+            let width = match table.get(row, "width")? {
+                "-" => None,
+                lanes => Some(PlaneWidth::from_lanes(
+                    lanes.parse().with_context(|| {
+                        format!("tuned config row {row}: bad width {lanes:?}")
+                    })?,
+                )?),
+            };
+            let parse_us = |col: &str| -> Result<f64> {
+                table.get(row, col)?.parse().with_context(|| {
+                    format!("tuned config row {row}: bad {col}")
+                })
+            };
+            layers.push(LayerTune {
+                layer: table.get(row, "layer")?.to_string(),
+                width,
+                factors: SplitFactors {
+                    tile: table.get_usize(row, "tile_factor")?.max(1),
+                    band: table.get_usize(row, "band_factor")?.max(1),
+                },
+                tuned_us: parse_us("tuned_us")?,
+                heuristic_us: parse_us("heuristic_us")?,
+            });
+        }
+        Ok(Self {
+            spec: get("spec")?.clone(),
+            fingerprint: get("fingerprint")?.clone(),
+            threads: get("threads")?.parse()?,
+            trials: get("trials")?.parse()?,
+            tile_speedup,
+            layers,
+        })
+    }
+
+    /// On-disk path of the config for `(spec, fingerprint)` under
+    /// `dir`: both keys are slugged into the file name so one shared
+    /// directory can hold configs for many deployments and machines.
+    pub fn path_in(dir: &Path, spec: &str, fingerprint: &str) -> PathBuf {
+        dir.join(format!("TUNE_{}__{}.tsv", slug(spec), slug(fingerprint)))
+    }
+
+    /// Persist beside the plan cache. Unmeasured (trials = 0) configs
+    /// are never written: a persisted heuristic would satisfy later
+    /// lookups and block real tuning forever.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        ensure!(
+            self.trials > 0,
+            "refusing to persist an unmeasured (trials = 0) tuned config"
+        );
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let path = Self::path_in(dir, &self.spec, &self.fingerprint);
+        std::fs::write(&path, self.to_tsv())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load the persisted config for `(spec, fingerprint)` from `dir`.
+    /// Returns `Ok(None)` when no *valid* config is available: the file
+    /// is absent, or its content keys disagree with the request (a
+    /// stale machine fingerprint — e.g. the core count changed — or a
+    /// renamed file), or it records no measurements. Malformed content
+    /// is an error, not a silent re-tune.
+    pub fn load(
+        dir: &Path,
+        spec: &str,
+        fingerprint: &str,
+    ) -> Result<Option<Self>> {
+        let path = Self::path_in(dir, spec, fingerprint);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(None)
+            }
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("reading {}", path.display()))
+            }
+        };
+        let cfg = Self::from_tsv(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        if cfg.spec != spec
+            || cfg.fingerprint != fingerprint
+            || cfg.trials == 0
+        {
+            return Ok(None);
+        }
+        Ok(Some(cfg))
+    }
+}
+
+/// Identity of the serving machine for tuned-config keying: OS, ISA and
+/// core count (plus the format version, so a schema bump reads as a
+/// fresh machine instead of a parse error). Coarse on purpose — it must
+/// change when the measured trade-offs plausibly change (different
+/// machine, different core count) and stay stable across reboots.
+pub fn machine_fingerprint() -> String {
+    let cores = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1);
+    format!(
+        "v{TUNE_FORMAT_VERSION}-{}-{}-{cores}c",
+        std::env::consts::OS,
+        std::env::consts::ARCH,
+    )
+}
+
+/// File-name-safe slug: alphanumerics kept, every other run of
+/// characters collapsed to one `-`.
+fn slug(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut dash = false;
+    for c in s.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c);
+            dash = false;
+        } else if !dash {
+            out.push('-');
+            dash = true;
+        }
+    }
+    out.trim_matches('-').to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TunedConfig {
+        TunedConfig {
+            spec: "resnet20/mixed/seed42".into(),
+            fingerprint: machine_fingerprint(),
+            threads: 4,
+            trials: 3,
+            tile_speedup: 3.4567,
+            layers: vec![
+                LayerTune {
+                    layer: "b1.c0.conv0".into(),
+                    width: Some(PlaneWidth::W64),
+                    factors: SplitFactors { tile: 2, band: 1 },
+                    tuned_us: 123.4,
+                    heuristic_us: 150.0,
+                },
+                LayerTune::heuristic("head.fc", None),
+            ],
+        }
+    }
+
+    #[test]
+    fn tsv_round_trips_exactly() {
+        let cfg = sample();
+        let text = cfg.to_tsv();
+        let back = TunedConfig::from_tsv(&text).unwrap();
+        assert_eq!(back, cfg);
+        // string-level idempotence is what the CLI round-trip asserts
+        assert_eq!(back.to_tsv(), text);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_content() {
+        assert!(TunedConfig::from_tsv("").is_err());
+        // wrong version is a loud error (the fingerprint also embeds
+        // the version, so this only occurs on hand-edited files)
+        let doctored = sample().to_tsv().replace(
+            &format!("#version\t{TUNE_FORMAT_VERSION}"),
+            "#version\t999",
+        );
+        let err = TunedConfig::from_tsv(&doctored).unwrap_err().to_string();
+        assert!(err.contains("version 999"), "{err}");
+        // a bad width is an error, not a fallback pick
+        let doctored = sample().to_tsv().replace("\t64\t", "\t48\t");
+        assert!(TunedConfig::from_tsv(&doctored).is_err());
+    }
+
+    #[test]
+    fn cutover_is_the_rounded_clamped_speedup() {
+        let mut cfg = sample();
+        for (speedup, want) in [
+            (0.0, HYBRID_TILE_SPEEDUP_CAP), // unmeasured sentinel
+            (0.4, 1),                       // never below 1
+            (3.4, 3),
+            (3.6, 4),
+            (1e9, MAX_HYBRID_CUTOVER),
+        ] {
+            cfg.tile_speedup = speedup;
+            assert_eq!(cfg.hybrid_cutover(), want, "speedup {speedup}");
+        }
+    }
+
+    #[test]
+    fn layer_speedup_and_prediction() {
+        let cfg = sample();
+        let t = cfg.layer("b1.c0.conv0").unwrap();
+        assert!((t.speedup() - 150.0 / 123.4).abs() < 1e-9);
+        // unmeasured layers contribute neutrally
+        assert_eq!(cfg.layer("head.fc").unwrap().speedup(), 1.0);
+        assert!((cfg.predicted_speedup() - 150.0 / 123.4).abs() < 1e-9);
+        assert!(cfg.layer("nope").is_none());
+    }
+
+    #[test]
+    fn bytes_track_serialized_size() {
+        let cfg = sample();
+        assert_eq!(cfg.bytes(), cfg.to_tsv().len());
+        assert!(cfg.bytes() > 100);
+    }
+
+    #[test]
+    fn slugged_paths_are_filename_safe() {
+        let p = TunedConfig::path_in(
+            Path::new("/tmp/x"),
+            "resnet20/mixed/seed42",
+            "v1-linux-x86_64-8c",
+        );
+        let name = p.file_name().unwrap().to_str().unwrap();
+        assert_eq!(
+            name,
+            "TUNE_resnet20-mixed-seed42__v1-linux-x86-64-8c.tsv"
+        );
+        assert!(name.chars().all(|c| c.is_ascii_alphanumeric()
+            || matches!(c, '-' | '_' | '.')));
+    }
+
+    #[test]
+    fn save_and_load_honour_the_keys() {
+        let dir = std::env::temp_dir().join(format!(
+            "marsellus-tune-unit-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = sample();
+        cfg.save(&dir).unwrap();
+        let fp = cfg.fingerprint.clone();
+        // exact keys round-trip
+        let got = TunedConfig::load(&dir, &cfg.spec, &fp).unwrap().unwrap();
+        assert_eq!(got, cfg);
+        // other spec / other machine: absent, not someone else's config
+        assert!(TunedConfig::load(&dir, "kws/mixed/seed7", &fp)
+            .unwrap()
+            .is_none());
+        assert!(TunedConfig::load(&dir, &cfg.spec, "v1-other-arch-2c")
+            .unwrap()
+            .is_none());
+        // stale fingerprint *content* (file kept, machine changed — e.g.
+        // a renamed file or copied cache dir) invalidates the config
+        let path = TunedConfig::path_in(&dir, &cfg.spec, &fp);
+        let doctored = std::fs::read_to_string(&path)
+            .unwrap()
+            .replace(&fp, "v1-elsewhere-riscv64-3c");
+        std::fs::write(&path, doctored).unwrap();
+        assert!(TunedConfig::load(&dir, &cfg.spec, &fp)
+            .unwrap()
+            .is_none());
+        // unmeasured configs refuse to persist
+        let mut heuristic = sample();
+        heuristic.trials = 0;
+        assert!(heuristic.save(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn env_truthiness() {
+        for v in ["1", "true", "ON", " yes "] {
+            assert!(env_truthy(v), "{v:?}");
+        }
+        for v in ["", "0", "false", "off", "no", "2", "enable"] {
+            assert!(!env_truthy(v), "{v:?}");
+        }
+    }
+
+    #[test]
+    fn fingerprint_shape() {
+        let fp = machine_fingerprint();
+        assert!(fp.starts_with(&format!("v{TUNE_FORMAT_VERSION}-")));
+        assert!(fp.ends_with('c'));
+    }
+}

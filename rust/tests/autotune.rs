@@ -1,0 +1,302 @@
+//! Deploy-time autotuner acceptance (ISSUE 6): tuning changes speed,
+//! never logits. A trial budget of 0 must resolve to the exact
+//! heuristic configuration, tuned plans must be bitwise identical to
+//! the heuristic path across the full (batch, threads, mode) matrix,
+//! persisted configs must round-trip and invalidate on a stale machine
+//! fingerprint, and the plan cache must account the tuned config's
+//! bytes when the tuned plan replaces the heuristic resident.
+
+#![cfg(feature = "native")]
+
+use marsellus::coordinator::{Coordinator, Schedule, ScheduleMode};
+use marsellus::dnn::{NetworkSpec, PrecisionConfig};
+use marsellus::power::OperatingPoint;
+use marsellus::rbe::functional::PlaneWidth;
+use marsellus::runtime::{
+    machine_fingerprint, LayerPlan, Runtime, SplitFactors, TuneOptions,
+    TunedConfig, HYBRID_TILE_SPEEDUP_CAP, MAX_HYBRID_CUTOVER,
+};
+use marsellus::util::Rng;
+
+fn coordinator() -> Coordinator {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    let rt = Runtime::native(&dir).expect("native runtime");
+    Coordinator::with_runtime(rt).expect("coordinator")
+}
+
+fn op() -> OperatingPoint {
+    OperatingPoint::at_vdd(0.8)
+}
+
+const MODES: [ScheduleMode; 4] = [
+    ScheduleMode::Auto,
+    ScheduleMode::Batch,
+    ScheduleMode::Latency,
+    ScheduleMode::Hybrid,
+];
+
+/// A trial budget of 0 is the A/B control: no measurement happens and
+/// the deployment serves the exact configuration the fixed heuristics
+/// would pick — same widths, unit split factors, fixed hybrid cutover —
+/// with logits bitwise equal to the plain deploy.
+#[test]
+fn trial_budget_zero_is_the_exact_heuristic_config() {
+    let coord = coordinator();
+    let spec = NetworkSpec::new("kws", PrecisionConfig::Mixed, 7);
+    let heuristic = coord.deploy(&spec).unwrap();
+    let hplan = coord.plan_for(&spec).unwrap();
+    let want_widths: Vec<Option<PlaneWidth>> = hplan
+        .steps()
+        .iter()
+        .filter_map(|s| match &s.plan {
+            LayerPlan::Conv(c) => Some(c.plane_width()),
+            _ => None,
+        })
+        .collect();
+
+    let d = coord
+        .deploy_tuned(&spec, &TuneOptions::new(4, 0))
+        .unwrap();
+    let cfg = d.tuned().expect("trials-0 deploy still carries a config");
+    assert_eq!(cfg.trials, 0, "control config must record 0 trials");
+    assert_eq!(cfg.tile_speedup, 0.0, "control config is unmeasured");
+    assert_eq!(
+        d.hybrid_cutover(),
+        HYBRID_TILE_SPEEDUP_CAP,
+        "unmeasured config must fall back to the fixed cutover cap"
+    );
+    assert_eq!(
+        cfg.layers.len(),
+        want_widths.len(),
+        "one pick per conv layer"
+    );
+    for (pick, want) in cfg.layers.iter().zip(&want_widths) {
+        assert_eq!(
+            pick.factors,
+            SplitFactors::UNIT,
+            "{}: control pick must keep unit split factors",
+            pick.layer
+        );
+        assert_eq!(
+            pick.width, *want,
+            "{}: control pick must keep the heuristic width",
+            pick.layer
+        );
+        assert_eq!(pick.speedup(), 1.0, "{}: unmeasured", pick.layer);
+    }
+
+    // and the control plan is bitwise identical to the plain deploy
+    let mut rng = Rng::new(60);
+    let images: Vec<Vec<i32>> =
+        (0..3).map(|_| heuristic.random_input(&mut rng)).collect();
+    let want: Vec<Vec<i32>> = heuristic
+        .infer_batch_opts(&op(), &images, 1, false)
+        .unwrap()
+        .into_iter()
+        .map(|r| r.logits)
+        .collect();
+    for threads in [1usize, 4] {
+        let got: Vec<Vec<i32>> = d
+            .infer_scheduled(&op(), &images, Schedule::hybrid(threads))
+            .unwrap()
+            .into_iter()
+            .map(|r| r.logits)
+            .collect();
+        assert_eq!(got, want, "control plan diverged at {threads} threads");
+    }
+}
+
+/// Measured tuning on the signed-head KWS net: every (batch, threads,
+/// mode) combination of the tuned deployment equals the heuristic
+/// deployment's sequential per-call path, and the measured config is
+/// well-formed (positive tile speedup, cutover within bounds).
+#[test]
+fn tuned_logits_match_heuristic_across_schedule_matrix() {
+    let coord = coordinator();
+    let spec = NetworkSpec::new("kws", PrecisionConfig::Mixed, 7);
+    // heuristic deployment FIRST: its Arc keeps the replaced resident
+    // alive after deploy_tuned swaps the cache entry
+    let heuristic = coord.deploy(&spec).unwrap();
+    let d = coord
+        .deploy_tuned(&spec, &TuneOptions::new(4, 2))
+        .unwrap();
+    let cfg = d.tuned().expect("tuned config").clone();
+    assert!(cfg.trials > 0);
+    assert!(
+        cfg.tile_speedup > 0.0,
+        "measured config must record the pooled speedup"
+    );
+    let cutover = d.hybrid_cutover();
+    assert!(
+        (1..=MAX_HYBRID_CUTOVER).contains(&cutover),
+        "cutover {cutover} out of bounds"
+    );
+
+    let mut rng = Rng::new(61);
+    for batch in [1usize, 3, 8, 17] {
+        let images: Vec<Vec<i32>> =
+            (0..batch).map(|_| heuristic.random_input(&mut rng)).collect();
+        // sequential per-call reference from the HEURISTIC deployment
+        let want: Vec<Vec<i32>> = heuristic
+            .infer_batch_opts(&op(), &images, 1, false)
+            .unwrap()
+            .into_iter()
+            .map(|r| r.logits)
+            .collect();
+        for threads in [1usize, 4, 16] {
+            for mode in MODES {
+                let got: Vec<Vec<i32>> = d
+                    .infer_scheduled(
+                        &op(),
+                        &images,
+                        Schedule { threads, mode },
+                    )
+                    .unwrap()
+                    .into_iter()
+                    .map(|r| r.logits)
+                    .collect();
+                assert_eq!(
+                    got, want,
+                    "tuned kws batch {batch}, {threads} threads, \
+                     {mode:?} diverged from the heuristic per-call path"
+                );
+            }
+        }
+    }
+
+    // lighter pass on the wide-word ResNet-20 plan path
+    let spec = NetworkSpec::new("resnet20", PrecisionConfig::Mixed, 42);
+    let heuristic = coord.deploy(&spec).unwrap();
+    let d = coord
+        .deploy_tuned(&spec, &TuneOptions::new(4, 1))
+        .unwrap();
+    let images: Vec<Vec<i32>> =
+        (0..5).map(|_| heuristic.random_input(&mut rng)).collect();
+    let want: Vec<Vec<i32>> = images
+        .iter()
+        .map(|img| heuristic.infer(&op(), img).unwrap().logits)
+        .collect();
+    for mode in [ScheduleMode::Hybrid, ScheduleMode::Auto] {
+        let got: Vec<Vec<i32>> = d
+            .infer_scheduled(&op(), &images, Schedule { threads: 4, mode })
+            .unwrap()
+            .into_iter()
+            .map(|r| r.logits)
+            .collect();
+        assert_eq!(got, want, "tuned resnet20 {mode:?}");
+    }
+}
+
+/// Persistence: a tuned deploy writes the config beside the plan cache,
+/// the file round-trips byte-for-byte, a stale machine fingerprint in
+/// the content invalidates it, and a fresh deploy re-tunes (and
+/// re-persists) for the current machine.
+#[test]
+fn persisted_config_round_trips_and_stale_fingerprint_invalidates() {
+    let dir = std::env::temp_dir()
+        .join(format!("marsellus-autotune-test-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = NetworkSpec::new("kws", PrecisionConfig::Mixed, 7);
+    let opts = TuneOptions {
+        threads: 4,
+        trials: 1,
+        persist_dir: Some(dir.clone()),
+    };
+    let fp = machine_fingerprint();
+
+    let coord = coordinator();
+    let d = coord.deploy_tuned(&spec, &opts).unwrap();
+    let cfg = d.tuned().expect("tuned config").clone();
+    assert_eq!(cfg.fingerprint, fp);
+
+    // byte-for-byte round trip through the persisted TSV (string-level:
+    // the in-memory config carries full-precision timings, the TSV is
+    // the canonical rounded form and must reproduce itself exactly)
+    let loaded = TunedConfig::load(&dir, &cfg.spec, &fp)
+        .unwrap()
+        .expect("config was persisted");
+    assert_eq!(loaded.to_tsv(), cfg.to_tsv(), "round trip drifted");
+    assert_eq!(loaded.layers.len(), cfg.layers.len());
+    assert_eq!(loaded.threads, cfg.threads);
+    assert_eq!(loaded.trials, cfg.trials);
+
+    // doctor the persisted content to a foreign machine fingerprint:
+    // the stale config must be ignored, not served
+    let path = TunedConfig::path_in(&dir, &cfg.spec, &fp);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let stale = text.replace(&fp, "v1-nowhere-fake-999c");
+    assert_ne!(stale, text, "fingerprint must appear in the content");
+    std::fs::write(&path, stale).unwrap();
+    assert!(
+        TunedConfig::load(&dir, &cfg.spec, &fp).unwrap().is_none(),
+        "stale fingerprint must invalidate the persisted config"
+    );
+
+    // a fresh coordinator (empty plan cache) re-tunes for this machine
+    // and re-persists over the stale file
+    let coord2 = coordinator();
+    let d2 = coord2.deploy_tuned(&spec, &opts).unwrap();
+    assert_eq!(d2.tuned().unwrap().fingerprint, fp);
+    let refreshed = TunedConfig::load(&dir, &cfg.spec, &fp)
+        .unwrap()
+        .expect("re-tuned config was re-persisted");
+    assert!(refreshed.trials > 0);
+    assert_eq!(refreshed.fingerprint, fp);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Plan-cache accounting: a tuned deploy on a spec with a heuristic
+/// resident replaces it (one build, no eviction), the replacement's
+/// byte accounting includes the tuned config (`TunedConfig::bytes`),
+/// a second tuned deploy hits the cache, and the replaced heuristic
+/// deployment keeps serving from its own handle.
+#[test]
+fn tuned_plan_replaces_resident_and_accounts_config_bytes() {
+    let coord = coordinator();
+    let spec = NetworkSpec::new("kws", PrecisionConfig::Mixed, 7);
+    let heuristic = coord.deploy(&spec).unwrap();
+    let hplan = coord.plan_for(&spec).unwrap();
+    let rt = &coord.runtime;
+    assert_eq!(rt.plan_bytes(), hplan.bytes());
+
+    // trials = 0 keeps the exact heuristic widths, so the replacement's
+    // size is exactly the heuristic plan plus the attached config
+    let opts = TuneOptions::new(2, 0);
+    let builds = rt.plan_builds();
+    let evictions = rt.plan_evictions();
+    let d = coord.deploy_tuned(&spec, &opts).unwrap();
+    let cfg = d.tuned().expect("tuned config").clone();
+    assert_eq!(
+        rt.plan_builds(),
+        builds + 1,
+        "replacing the heuristic resident counts as a build"
+    );
+    assert_eq!(
+        rt.plan_evictions(),
+        evictions,
+        "a replacement is not an eviction"
+    );
+    assert_eq!(
+        rt.plan_bytes(),
+        hplan.bytes() + cfg.bytes(),
+        "cache accounting must include the tuned config bytes"
+    );
+
+    // second tuned deploy with the same options is a cache hit
+    let builds = rt.plan_builds();
+    let hits = rt.plan_hits();
+    let d2 = coord.deploy_tuned(&spec, &opts).unwrap();
+    assert_eq!(rt.plan_builds(), builds, "second tuned deploy rebuilt");
+    assert!(rt.plan_hits() > hits, "second tuned deploy missed");
+    assert!(d2.tuned().is_some());
+
+    // the replaced heuristic deployment still serves (its Arc survives)
+    // and stays bitwise equal to the tuned one
+    let mut rng = Rng::new(62);
+    let image = heuristic.random_input(&mut rng);
+    let a = heuristic.infer(&op(), &image).unwrap();
+    let b = d.infer(&op(), &image).unwrap();
+    assert_eq!(a.logits, b.logits, "replacement changed logits");
+}
