@@ -3,9 +3,11 @@
 
 Each CI bench-smoke run on the main branch appends a single JSON line
 to ``ci/BENCH_history.jsonl`` — commit, mode, and the machine-independent
-ratios from both gated sections: throughput (``speedup_planned`` /
-``speedup_parallel`` plus raw img/s context) and single-image latency
-(``speedup_tile`` plus ``latency_*`` ms/thread context). The history
+ratios from every gated section: throughput (``speedup_planned`` /
+``speedup_parallel`` plus raw img/s context), single-image latency
+(``speedup_tile`` plus ``latency_*`` ms/thread context), the hybrid
+scheduler, the autotuner, and the global runtime
+(``reuse_vs_provision`` / ``concurrent_vs_serial``). The history
 turns ``check_bench.py``'s >20% gate into a *trajectory* check: with
 ``--history``, the gate compares against the median of the recent
 entries instead of a single frozen point, so a slowly-eroding hot path
@@ -59,6 +61,15 @@ RECORDED = {
         "tuned_ms": "tuned_best_ms",
         "hybrid_cutover": "tuned_hybrid_cutover",
         "threads": "tuned_threads",
+    },
+    "global": {
+        "reuse_vs_provision": "reuse_vs_provision",
+        "concurrent_vs_serial": "concurrent_vs_serial",
+        "owned_ms": "global_owned_ms",
+        "global_ms": "global_best_ms",
+        "serial_img_s": "global_serial_img_s",
+        "concurrent_img_s": "global_concurrent_img_s",
+        "threads": "global_threads",
     },
 }
 

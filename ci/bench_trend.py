@@ -31,6 +31,8 @@ SERIES = (
     ("pool_vs_respawn", "hybrid: pool vs respawn tiler"),
     ("speedup_hybrid", "hybrid: hybrid vs batch schedule"),
     ("tuned_vs_heuristic", "tuned: autotuned vs heuristic config"),
+    ("reuse_vs_provision", "global: shared fleet vs per-call pool"),
+    ("concurrent_vs_serial", "global: 2 tenants concurrent vs serial"),
 )
 
 # How many trailing history rows the table shows.

@@ -7,9 +7,12 @@ baseline metric regresses by more than the tolerance (default 20%).
 
 Gated sections: ``throughput`` (batch serving, images/s), ``latency``
 (single-image wall clock, sequential vs the tile-parallel latency
-mode), ``hybrid`` (persistent-pool scheduler), and ``tuned`` (the
+mode), ``hybrid`` (persistent-pool scheduler), ``tuned`` (the
 deploy-time autotuner's tuned-vs-heuristic pooled latency, a
-same-machine A/B gated >= 1.0). Absolute images/s and milliseconds vary
+same-machine A/B gated >= 1.0), and ``global`` (the process-wide
+work-stealing runtime: reuse_vs_provision pins that serving on the
+standing worker fleet never loses to provisioning a scoped pool per
+call). Absolute images/s and milliseconds vary
 with runner hardware, so the committed baseline pins
 *machine-independent ratios* (the LayerPlan / worker-pool speedups over
 the pre-plan per-call path, and the tile-mode speedup over the
@@ -54,8 +57,11 @@ HISTORY_WINDOW = 5
 # deploy-time autotuner: tuned_vs_heuristic (tuned vs heuristic pooled
 # latency, same machine, min-of-N) is gated >= the 1.0 baseline so a
 # tuned configuration can never lose to the fixed heuristics it
-# replaced.
-SECTIONS = ("throughput", "latency", "hybrid", "tuned")
+# replaced. "global" is the process-wide work-stealing runtime:
+# reuse_vs_provision (shared-fleet vs per-call-provisioned batch
+# latency, same machine, min-of-N) is gated >= the 1.0 baseline so the
+# global runtime can never lose to the scoped pools it replaced.
+SECTIONS = ("throughput", "latency", "hybrid", "tuned", "global")
 
 # Only ratio keys are trajectory-gated; raw img/s and ms are
 # machine-dependent.
@@ -65,6 +71,7 @@ TRAJECTORY_KEYS = {
     "speedup_tile",
     "speedup_pool",
     "tuned_vs_heuristic",
+    "reuse_vs_provision",
 }
 
 # Ratios whose effective baseline is capped at factor * recorded thread
@@ -75,12 +82,13 @@ THREAD_CAPPED = {
     "speedup_pool": 0.75,
 }
 
-# Keys gated tighter than the global tolerance. pool_vs_respawn is a
-# direct same-machine A/B (pooled vs respawn tiler at equal thread
+# Keys gated tighter than the global tolerance. pool_vs_respawn and
+# reuse_vs_provision are direct same-machine A/Bs (pooled vs respawn
+# tiler, shared fleet vs per-call provisioning — each at equal thread
 # count), so machine variance cancels and only run-to-run noise
-# remains: the persistent pool must never *lose* to respawning a
-# thread set per layer beyond a 5% noise band.
-KEY_TOLERANCE = {"pool_vs_respawn": 0.05}
+# remains: neither may *lose* to the path it replaced beyond a 5%
+# noise band.
+KEY_TOLERANCE = {"pool_vs_respawn": 0.05, "reuse_vs_provision": 0.05}
 
 
 def median(values):

@@ -22,7 +22,11 @@
 //! sections against the committed baseline. The `tuned` section
 //! re-deploys with the deploy-time autotuner and pins
 //! `tuned_vs_heuristic >= 1.0`: a tuned configuration may never lose
-//! to the fixed heuristics it replaced.
+//! to the fixed heuristics it replaced. The `global` section serves the
+//! same batch through a per-call `Owned` pool and the process-wide
+//! work-stealing runtime and pins `reuse_vs_provision >= 1.0`: reusing
+//! the standing worker fleet may never lose to provisioning one per
+//! call; it also measures two tenants submitting concurrently.
 
 use std::time::Instant;
 
@@ -531,6 +535,149 @@ fn tuned_bench(smoke: bool) -> Tuned {
     }
 }
 
+/// Process-wide runtime measurements: the same batch served through a
+/// per-call `Owned` pool (threads provisioned and joined inside the
+/// call) vs the shared `Global` runtime (workers pre-exist the call),
+/// plus two tenants submitting concurrently vs back-to-back.
+struct GlobalRt {
+    threads: usize,
+    images: usize,
+    iters: u32,
+    owned_ms: f64,
+    global_ms: f64,
+    serial_img_s: f64,
+    concurrent_img_s: f64,
+}
+
+impl GlobalRt {
+    /// Shared-runtime vs per-call-provisioned batch latency — the
+    /// recovered provisioning overhead; gated >= 1.0 so the global
+    /// runtime can never silently lose to respawning pools.
+    fn reuse_vs_provision(&self) -> f64 {
+        self.owned_ms / self.global_ms
+    }
+
+    /// Two tenants overlapping on the shared runtime vs serving them
+    /// back-to-back (informational: contention vs pipelining).
+    fn concurrent_vs_serial(&self) -> f64 {
+        self.concurrent_img_s / self.serial_img_s
+    }
+
+    fn to_json(&self) -> String {
+        format!(
+            " {{\n  \"threads\": {},\n  \"images\": {},\n  \
+             \"iters\": {},\n  \"owned_ms\": {:.3},\n  \
+             \"global_ms\": {:.3},\n  \"serial_img_s\": {:.3},\n  \
+             \"concurrent_img_s\": {:.3},\n  \
+             \"reuse_vs_provision\": {:.3},\n  \
+             \"concurrent_vs_serial\": {:.3}\n }}",
+            self.threads,
+            self.images,
+            self.iters,
+            self.owned_ms,
+            self.global_ms,
+            self.serial_img_s,
+            self.concurrent_img_s,
+            self.reuse_vs_provision(),
+            self.concurrent_vs_serial()
+        )
+    }
+}
+
+/// Measure the process-wide runtime: a `threads`-image batch through
+/// the Owned A/B pool vs the Global runtime (bitwise-equal logits
+/// asserted), then two tenants (ResNet-20 + KWS) served back-to-back
+/// vs concurrently on the shared workers.
+fn global_bench(smoke: bool) -> GlobalRt {
+    use marsellus::coordinator::{Coordinator, Schedule};
+    use marsellus::dnn::{NetworkSpec, PrecisionConfig};
+    use marsellus::power::OperatingPoint;
+    use marsellus::runtime::ExecRuntime;
+    use marsellus::util::Rng;
+
+    let dir = marsellus::runtime::Runtime::resolve_artifacts_dir(None);
+    let coord = Coordinator::new(dir).expect("coordinator");
+    let op = OperatingPoint::at_vdd(0.8);
+    let threads = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(4);
+    let iters = if smoke { 5 } else { 15 };
+    let resnet = coord
+        .deploy(&NetworkSpec::new("resnet20", PrecisionConfig::Mixed, 42))
+        .expect("deploy resnet20");
+    let kws = coord
+        .deploy(&NetworkSpec::new("kws", PrecisionConfig::Mixed, 7))
+        .expect("deploy kws");
+    let mut rng = Rng::new(0x610B);
+    let n = threads.max(2);
+    let res_images: Vec<Vec<i32>> =
+        (0..n).map(|_| resnet.random_input(&mut rng)).collect();
+    let kws_images: Vec<Vec<i32>> =
+        (0..n).map(|_| kws.random_input(&mut rng)).collect();
+
+    let batch = |d: &marsellus::coordinator::Deployment<'_>,
+                 images: &[Vec<i32>],
+                 rt: ExecRuntime| {
+        d.infer_scheduled_on(&op, images, Schedule::batch(threads), rt)
+            .expect("infer_scheduled_on")
+            .into_iter()
+            .map(|r| r.logits)
+            .collect::<Vec<_>>()
+    };
+    // warm both paths (spawns the global fleet once) and pin parity
+    let owned_logits = batch(&resnet, &res_images, ExecRuntime::Owned);
+    let global_logits = batch(&resnet, &res_images, ExecRuntime::Global);
+    assert_eq!(
+        owned_logits, global_logits,
+        "Owned and Global runtimes diverged"
+    );
+
+    let best_of = |f: &dyn Fn()| {
+        let mut best = f64::INFINITY;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        best
+    };
+    let owned_ms = best_of(&|| {
+        batch(&resnet, &res_images, ExecRuntime::Owned);
+    });
+    let global_ms = best_of(&|| {
+        batch(&resnet, &res_images, ExecRuntime::Global);
+    });
+
+    // two tenants: back-to-back vs overlapping on the shared runtime
+    let total = 2 * n;
+    let mut serial_img_s = 0.0;
+    let mut concurrent_img_s = 0.0;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        batch(&resnet, &res_images, ExecRuntime::Global);
+        batch(&kws, &kws_images, ExecRuntime::Global);
+        serial_img_s =
+            serial_img_s.max(total as f64 / t0.elapsed().as_secs_f64());
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            s.spawn(|| batch(&resnet, &res_images, ExecRuntime::Global));
+            s.spawn(|| batch(&kws, &kws_images, ExecRuntime::Global));
+        });
+        concurrent_img_s = concurrent_img_s
+            .max(total as f64 / t0.elapsed().as_secs_f64());
+    }
+
+    GlobalRt {
+        threads,
+        images: n,
+        iters,
+        owned_ms,
+        global_ms,
+        serial_img_s,
+        concurrent_img_s,
+    }
+}
+
 fn write_json(
     path: &str,
     mode: &str,
@@ -540,6 +687,7 @@ fn write_json(
     latency: &Latency,
     hybrid: &Hybrid,
     tuned: &Tuned,
+    global_rt: &GlobalRt,
 ) {
     let resolved = resolve_out_path(path);
     let path = resolved.display().to_string();
@@ -558,12 +706,13 @@ fn write_json(
     let doc = format!(
         "{{\n \"mode\": \"{mode}\",\n \"total_best_ms\": {total:.3},\n \
          \"throughput\":\n{},\n \"latency\":\n{},\n \
-         \"hybrid\":\n{},\n \"tuned\":\n{},\n \
+         \"hybrid\":\n{},\n \"tuned\":\n{},\n \"global\":\n{},\n \
          \"benches\": [\n{}\n ]\n}}\n",
         throughput.to_json(),
         latency.to_json(),
         hybrid.to_json(),
         tuned.to_json(),
+        global_rt.to_json(),
         rows.join(",\n")
     );
     if let Err(e) = std::fs::write(path, doc) {
@@ -718,6 +867,33 @@ fn main() {
         tun.hybrid_cutover
     );
 
+    // process-wide runtime: reuse vs per-call provisioning, 2 tenants
+    println!("\nglobal work-stealing runtime (batch of {}, best of N)", {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4).max(2)
+    });
+    let glo = global_bench(smoke);
+    println!(
+        "  owned pool      {:>8.2} ms/batch  ({} workers provisioned \
+         per call)",
+        glo.owned_ms, glo.threads
+    );
+    println!(
+        "  global runtime  {:>8.2} ms/batch  ({:.2}x vs owned; gated \
+         >= 1.0)",
+        glo.global_ms,
+        glo.reuse_vs_provision()
+    );
+    println!(
+        "  2-tenant serial {:>8.2} img/s  (ResNet-20 + KWS back-to-back)",
+        glo.serial_img_s
+    );
+    println!(
+        "  2-tenant concur {:>8.2} img/s  ({:.2}x vs serial, shared \
+         workers)",
+        glo.concurrent_img_s,
+        glo.concurrent_vs_serial()
+    );
+
     if let Some(path) = json_path {
         write_json(
             &path,
@@ -728,6 +904,7 @@ fn main() {
             &lat,
             &hyb,
             &tun,
+            &glo,
         );
     }
 

@@ -17,12 +17,17 @@
 //! a re-deployed evictee rebuilds bit-identically from its spec.
 //!
 //! Serving parallelism is **one** path: [`Deployment::infer_scheduled`]
-//! provisions a persistent `ExecPool` per call (workers spawned once,
-//! fed jobs — never re-spawned per layer) and a [`Schedule`] decides
-//! what the jobs are: whole-image shards, per-layer packing bands +
-//! conv tiles, or the hybrid of both. `infer_batch` and `infer_latency`
-//! are thin presets over it, with bitwise-identical outputs.
+//! streams jobs onto the process-wide work-stealing runtime
+//! ([`crate::runtime::global`] — workers provisioned once per process,
+//! shared by every tenant) and a [`Schedule`] decides what the jobs
+//! are: whole-image shards, per-layer packing bands + conv tiles, or
+//! the hybrid of both. `infer_batch` and `infer_latency` are thin
+//! presets over it, with bitwise-identical outputs. The PR-5 scoped
+//! per-call pool survives as the `Owned` A/B path:
+//! [`Deployment::infer_scheduled_on`] picks per call, `MARSELLUS_EXEC`
+//! picks the process default, and both produce bit-identical logits.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Result};
@@ -31,7 +36,10 @@ use crate::dnn::{Layer, NetworkSpec};
 use crate::mapping::NetworkReport;
 use crate::metrics::LayerSplit;
 use crate::power::OperatingPoint;
-use crate::runtime::{BackendKind, ExecPool, NetworkPlan, PoolTelemetry};
+use crate::runtime::{
+    global, BackendKind, ExecCtx, ExecPool, ExecRuntime, NetworkPlan,
+    PoolTelemetry,
+};
 use crate::util::Rng;
 
 use super::infer::{ConvExec, Coordinator, InferenceResult};
@@ -129,6 +137,9 @@ pub struct Deployment<'c> {
     /// a pure function of (layers, op), so re-serving the same DVFS
     /// set-point costs one comparison instead of a scheduler walk.
     report: Mutex<Option<(OperatingPoint, Arc<NetworkReport>)>>,
+    /// Whether the stale-tuning warning ([`Self::hybrid_cutover_for`])
+    /// already fired — once per deployment, not per call.
+    cutover_warned: AtomicBool,
 }
 
 impl<'c> Deployment<'c> {
@@ -148,6 +159,7 @@ impl<'c> Deployment<'c> {
             plan,
             params,
             report: Mutex::new(None),
+            cutover_warned: AtomicBool::new(false),
         }
     }
 
@@ -176,6 +188,36 @@ impl<'c> Deployment<'c> {
         self.tuned()
             .map(|t| t.hybrid_cutover())
             .unwrap_or(HYBRID_TILE_SPEEDUP_CAP)
+    }
+
+    /// [`Self::hybrid_cutover`] guarded against stale tunings: the
+    /// tuned cutover was *measured* at [`TunedConfig::threads`] workers
+    /// (`crate::runtime::TunedConfig`), so a serving call running at a
+    /// different width would silently apply a measurement from a
+    /// machine shape it never saw. Detect the divergence, warn once
+    /// per deployment, and fall back to the fixed heuristic cap — the
+    /// same behavior as an untuned deployment.
+    ///
+    /// [`TunedConfig::threads`]: crate::runtime::TunedConfig::threads
+    pub fn hybrid_cutover_for(&self, live_threads: usize) -> usize {
+        let live = live_threads.max(1);
+        match self.tuned() {
+            Some(t) if t.threads != live => {
+                if !self.cutover_warned.swap(true, Ordering::Relaxed) {
+                    eprintln!(
+                        "warning: {}: serving at {live} threads but tuned \
+                         at {} — stale split measurements; using the \
+                         heuristic hybrid cutover ({HYBRID_TILE_SPEEDUP_CAP}) \
+                         instead (re-tune at the serving width to clear \
+                         this)",
+                        self.spec, t.threads
+                    );
+                }
+                HYBRID_TILE_SPEEDUP_CAP
+            }
+            Some(t) => t.hybrid_cutover(),
+            None => HYBRID_TILE_SPEEDUP_CAP,
+        }
     }
 
     /// (side, channels) of the unpadded input plane the network
@@ -288,16 +330,31 @@ impl<'c> Deployment<'c> {
         self.profile_scheduled(image, 1).map(|(split, _)| split)
     }
 
-    /// [`Self::profile`] over a persistent worker pool of `threads`
-    /// workers, additionally returning the pool telemetry — how many
-    /// threads were spawned (once) and how many per-layer jobs they
-    /// served. The contrast with the pre-pool path (which spawned a
-    /// fresh thread set per tiled conv layer) is the recovered spawn
-    /// overhead `marsellus infer --profile` prints.
+    /// [`Self::profile`] over `threads` workers, additionally returning
+    /// worker telemetry — how many threads *this call* spawned and how
+    /// many per-layer jobs they served. Runs on the process default
+    /// runtime ([`ExecRuntime::from_env`]); on the global runtime
+    /// `spawned_threads` is 0 (workers pre-exist the call), which is
+    /// the recovered provisioning overhead `marsellus infer --profile`
+    /// prints.
     pub fn profile_scheduled(
         &self,
         image: &[i32],
         threads: usize,
+    ) -> Result<(Vec<LayerSplit>, PoolTelemetry)> {
+        self.profile_scheduled_on(image, threads, ExecRuntime::from_env())
+    }
+
+    /// [`Self::profile_scheduled`] with an explicit runtime choice —
+    /// the telemetry A/B: `Owned` provisions a scoped pool for the call
+    /// and reports its spawns (`width - 1`) and jobs; `Global` streams
+    /// onto the pre-existing process runtime and reports zero spawns
+    /// plus the jobs this call added to it.
+    pub fn profile_scheduled_on(
+        &self,
+        image: &[i32],
+        threads: usize,
+        rt: ExecRuntime,
     ) -> Result<(Vec<LayerSplit>, PoolTelemetry)> {
         let plan = self.plan.as_ref().ok_or_else(|| {
             anyhow::anyhow!(
@@ -306,24 +363,48 @@ impl<'c> Deployment<'c> {
             )
         })?;
         let mut split = Vec::with_capacity(plan.steps().len());
-        let telemetry = if threads > 1 {
-            ExecPool::with(threads, |pool| -> Result<PoolTelemetry> {
-                self.coord.run_network_exec(
-                    plan,
-                    image,
-                    Some(&mut split),
-                    ConvExec::Pool(pool),
-                )?;
-                Ok(pool.telemetry())
-            })?
-        } else {
+        let telemetry = if threads <= 1 {
             self.coord.run_network_exec(
                 plan,
                 image,
                 Some(&mut split),
-                ConvExec::Seq,
+                ConvExec::Ctx(ExecCtx::Seq),
             )?;
             PoolTelemetry::sequential()
+        } else {
+            match rt {
+                ExecRuntime::Owned => {
+                    ExecPool::with(threads, |pool| -> Result<_> {
+                        self.coord.run_network_exec(
+                            plan,
+                            image,
+                            Some(&mut split),
+                            ConvExec::Ctx(ExecCtx::Owned(pool)),
+                        )?;
+                        Ok(pool.telemetry())
+                    })?
+                }
+                ExecRuntime::Global => {
+                    let ctx = ExecCtx::Global(threads);
+                    let before = global().telemetry();
+                    self.coord.run_network_exec(
+                        plan,
+                        image,
+                        Some(&mut split),
+                        ConvExec::Ctx(ctx),
+                    )?;
+                    let after = global().telemetry();
+                    PoolTelemetry {
+                        width: ctx.width(),
+                        // the whole point of the global runtime: a
+                        // serving call provisions no threads
+                        spawned_threads: after
+                            .spawned_threads
+                            .saturating_sub(before.spawned_threads),
+                        jobs: after.jobs.saturating_sub(before.jobs),
+                    }
+                }
+            }
         };
         Ok((split, telemetry))
     }
@@ -363,6 +444,39 @@ impl<'c> Deployment<'c> {
         threads: usize,
         pooled: bool,
     ) -> Result<InferenceResult> {
+        if pooled {
+            self.infer_latency_on(op, image, threads, ExecRuntime::from_env())
+        } else {
+            let plan = self.plan.as_ref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "{}: latency mode needs the plan path (native backend)",
+                    self.spec
+                )
+            })?;
+            let report = self.report(op)?;
+            let logits = self.coord.run_network_exec(
+                plan,
+                image,
+                None,
+                ConvExec::Respawn(threads),
+            )?;
+            Ok(InferenceResult {
+                logits,
+                report: (*report).clone(),
+                cross_checked: 0,
+            })
+        }
+    }
+
+    /// [`Self::infer_latency`] with an explicit runtime choice — the
+    /// Owned-vs-Global A/B for the single-image tiling path.
+    pub fn infer_latency_on(
+        &self,
+        op: &OperatingPoint,
+        image: &[i32],
+        threads: usize,
+        rt: ExecRuntime,
+    ) -> Result<InferenceResult> {
         let plan = self.plan.as_ref().ok_or_else(|| {
             anyhow::anyhow!(
                 "{}: latency mode needs the plan path (native backend)",
@@ -370,16 +484,8 @@ impl<'c> Deployment<'c> {
             )
         })?;
         let report = self.report(op)?;
-        let logits = if pooled {
-            self.coord.run_network_planned(plan, image, None, threads)?
-        } else {
-            self.coord.run_network_exec(
-                plan,
-                image,
-                None,
-                ConvExec::Respawn(threads),
-            )?
-        };
+        let logits =
+            self.coord.run_network_planned(plan, image, None, threads, rt)?;
         Ok(InferenceResult {
             logits,
             report: (*report).clone(),
@@ -426,29 +532,52 @@ impl<'c> Deployment<'c> {
             images,
             Schedule::batch(threads),
             use_plans,
+            ExecRuntime::from_env(),
         )
     }
 
     /// Run a batch of inputs under an explicit [`Schedule`] — the one
     /// serving path every preset (`infer_batch`, `infer_latency`,
-    /// `Auto`) narrows to. One persistent [`ExecPool`] is provisioned
-    /// for the whole call and fed every job the schedule produces:
-    /// whole-image shards ([`ScheduleMode::Batch`]), per-layer packing
-    /// bands + conv tiles ([`ScheduleMode::Latency`]), or shards for
-    /// the pool-aligned bulk of the batch and tiles for the remainder
-    /// ([`ScheduleMode::Hybrid`]).
+    /// `Auto`) narrows to. The schedule's jobs stream onto the
+    /// process-wide work-stealing runtime (no threads are provisioned
+    /// by the call): whole-image shards ([`ScheduleMode::Batch`]),
+    /// per-layer packing bands + conv tiles ([`ScheduleMode::Latency`]),
+    /// or shards for the worker-aligned bulk of the batch and tiles for
+    /// the remainder ([`ScheduleMode::Hybrid`]).
     ///
     /// Results come back in input order and are bitwise identical to a
     /// sequential per-image walk for every `(batch, threads, mode)`
     /// combination — scheduling only moves work between workers, never
-    /// changes arithmetic.
+    /// changes arithmetic. `MARSELLUS_EXEC=owned` opts the process back
+    /// into PR-5 scoped per-call pools ([`Self::infer_scheduled_on`]
+    /// picks per call); logits are bitwise identical either way.
     pub fn infer_scheduled(
         &self,
         op: &OperatingPoint,
         images: &[Vec<i32>],
         sched: Schedule,
     ) -> Result<Vec<InferenceResult>> {
-        self.infer_scheduled_opts(op, images, sched, self.plan.is_some())
+        self.infer_scheduled_on(op, images, sched, ExecRuntime::from_env())
+    }
+
+    /// [`Self::infer_scheduled`] with an explicit runtime choice — the
+    /// Owned-vs-Global A/B: `Owned` provisions a scoped [`ExecPool`]
+    /// for the call (the PR-5 behavior, kept for measurement and parity
+    /// tests), `Global` streams onto the shared process runtime.
+    pub fn infer_scheduled_on(
+        &self,
+        op: &OperatingPoint,
+        images: &[Vec<i32>],
+        sched: Schedule,
+        rt: ExecRuntime,
+    ) -> Result<Vec<InferenceResult>> {
+        self.infer_scheduled_opts(
+            op,
+            images,
+            sched,
+            self.plan.is_some(),
+            rt,
+        )
     }
 
     fn infer_scheduled_opts(
@@ -457,6 +586,7 @@ impl<'c> Deployment<'c> {
         images: &[Vec<i32>],
         sched: Schedule,
         use_plans: bool,
+        rt: ExecRuntime,
     ) -> Result<Vec<InferenceResult>> {
         ensure!(
             !use_plans || self.coord.runtime.kind() == BackendKind::Native,
@@ -476,7 +606,7 @@ impl<'c> Deployment<'c> {
         let report = self.report(op)?;
         let logits = if use_plans {
             let plan = self.plan.as_deref().expect("ensured above");
-            self.run_scheduled_planned(plan, images, sched)
+            self.run_scheduled_planned(plan, images, sched, rt)
         } else {
             // the per-call path executes whole artifacts — only the
             // image axis can parallelize
@@ -490,7 +620,7 @@ impl<'c> Deployment<'c> {
                 self.spec,
                 sched.mode
             );
-            self.run_batch_per_call(images, sched.threads)
+            self.run_batch_per_call(images, sched.threads, rt)
         };
         logits
             .into_iter()
@@ -504,13 +634,15 @@ impl<'c> Deployment<'c> {
             .collect()
     }
 
-    /// The plan-path scheduler body: provision one pool, feed it the
-    /// schedule's jobs, return per-image results in input order.
+    /// The plan-path scheduler body: resolve the schedule, pick the
+    /// execution context (`rt`), feed it the schedule's jobs, return
+    /// per-image results in input order.
     fn run_scheduled_planned(
         &self,
         plan: &NetworkPlan,
         images: &[Vec<i32>],
         sched: Schedule,
+        rt: ExecRuntime,
     ) -> Vec<Result<Vec<i32>>> {
         let n = images.len();
         let threads = sched.threads.max(1);
@@ -527,85 +659,106 @@ impl<'c> Deployment<'c> {
                         plan,
                         img,
                         None,
-                        ConvExec::Seq,
+                        ConvExec::Ctx(ExecCtx::Seq),
                     )
                 })
                 .collect();
         }
         // image shards never benefit from more workers than images
-        let pool_threads = if mode == ScheduleMode::Batch {
+        let lanes = if mode == ScheduleMode::Batch {
             threads.min(n)
         } else {
             threads
         };
+        match rt {
+            ExecRuntime::Owned => ExecPool::with(lanes, |pool| {
+                self.drive_schedule(plan, images, mode, ExecCtx::Owned(pool))
+            }),
+            ExecRuntime::Global => {
+                self.drive_schedule(plan, images, mode, ExecCtx::Global(lanes))
+            }
+        }
+    }
+
+    /// Feed one resolved schedule's jobs to one execution context —
+    /// shared verbatim by the `Owned` and `Global` arms, which is what
+    /// makes their bitwise parity structural rather than maintained.
+    fn drive_schedule<'env>(
+        &'env self,
+        plan: &'env NetworkPlan,
+        images: &'env [Vec<i32>],
+        mode: ScheduleMode,
+        ctx: ExecCtx<'env>,
+    ) -> Vec<Result<Vec<i32>>> {
+        let n = images.len();
         let slots: Arc<Vec<Mutex<Option<Result<Vec<i32>>>>>> =
             Arc::new((0..n).map(|_| Mutex::new(None)).collect());
-        ExecPool::with(pool_threads, |pool| {
-            // whole-image shards: workers pull image indices off the
-            // job queue and run the sequential walk per image
-            let shard_range = |lo: usize, hi: usize| {
-                if lo >= hi {
-                    return;
-                }
-                let slots = slots.clone();
-                pool.scatter(
-                    hi - lo,
-                    Arc::new(move |i| {
-                        let idx = lo + i;
-                        *slots[idx].lock().unwrap() =
-                            Some(self.coord.run_network_exec(
-                                plan,
-                                &images[idx],
-                                None,
-                                ConvExec::Seq,
-                            ));
-                    }),
-                );
-            };
-            // tiled images: the caller walks each image's layers,
-            // fanning every layer's bands + tiles over the same pool
-            let tile_range = |lo: usize, hi: usize| {
-                for idx in lo..hi {
+        // whole-image shards: workers pull image indices off the job
+        // queue and run the sequential walk per image
+        let shard_range = |lo: usize, hi: usize| {
+            if lo >= hi {
+                return;
+            }
+            let slots = slots.clone();
+            ctx.scatter(
+                hi - lo,
+                Arc::new(move |i| {
+                    let idx = lo + i;
                     *slots[idx].lock().unwrap() =
                         Some(self.coord.run_network_exec(
                             plan,
                             &images[idx],
                             None,
-                            ConvExec::Pool(pool),
+                            ConvExec::Ctx(ExecCtx::Seq),
                         ));
-                }
-            };
-            match mode {
-                ScheduleMode::Batch => shard_range(0, n),
-                ScheduleMode::Latency => tile_range(0, n),
-                ScheduleMode::Hybrid => {
-                    let w = pool.width();
-                    let rem = if n >= w { n % w } else { n };
-                    // tiling a remainder image across the pool is worth
-                    // ~cutover concurrent shards: the measured value on
-                    // tuned deployments, the fixed cap otherwise
-                    let tiled = if rem > 0
-                        && rem < w.min(self.hybrid_cutover())
-                    {
+                }),
+            );
+        };
+        // tiled images: the caller walks each image's layers, fanning
+        // every layer's bands + tiles over the same workers
+        let tile_range = |lo: usize, hi: usize| {
+            for idx in lo..hi {
+                *slots[idx].lock().unwrap() =
+                    Some(self.coord.run_network_exec(
+                        plan,
+                        &images[idx],
+                        None,
+                        ConvExec::Ctx(ctx),
+                    ));
+            }
+        };
+        match mode {
+            ScheduleMode::Batch => shard_range(0, n),
+            ScheduleMode::Latency => tile_range(0, n),
+            ScheduleMode::Hybrid => {
+                let w = ctx.width();
+                let rem = if n >= w { n % w } else { n };
+                // tiling a remainder image across the workers is worth
+                // ~cutover concurrent shards: the measured value on
+                // tuned deployments (guarded against width divergence),
+                // the fixed cap otherwise
+                let tiled =
+                    if rem > 0 && rem < w.min(self.hybrid_cutover_for(w)) {
                         rem
                     } else {
                         0
                     };
-                    shard_range(0, n - tiled);
-                    tile_range(n - tiled, n);
-                }
-                ScheduleMode::Auto => unreachable!("resolved above"),
+                shard_range(0, n - tiled);
+                tile_range(n - tiled, n);
             }
-        });
+            ScheduleMode::Auto => unreachable!("resolved by caller"),
+        }
         Self::take_slots(&slots)
     }
 
     /// The per-call (pre-plan) batch body: image shards only, over the
-    /// same pool mechanism.
+    /// same context mechanism — the PJRT route parallelizes across
+    /// images on the shared runtime too.
     fn run_batch_per_call(
         &self,
         images: &[Vec<i32>],
         threads: usize,
+        rt: ExecRuntime,
     ) -> Vec<Result<Vec<i32>>> {
         let n = images.len();
         // Per-network state was prepared ONCE at deploy time; per-batch
@@ -622,17 +775,24 @@ impl<'c> Deployment<'c> {
         }
         let slots: Arc<Vec<Mutex<Option<Result<Vec<i32>>>>>> =
             Arc::new((0..n).map(|_| Mutex::new(None)).collect());
-        ExecPool::with(threads, |pool| {
+        let task: Arc<dyn Fn(usize) + Send + Sync + '_> = {
             let task_slots = slots.clone();
             let run_one = &run_one;
-            pool.scatter(
-                n,
-                Arc::new(move |i| {
-                    *task_slots[i].lock().unwrap() =
-                        Some(run_one(images[i].as_slice()));
-                }),
-            );
-        });
+            Arc::new(move |i: usize| {
+                *task_slots[i].lock().unwrap() =
+                    Some(run_one(images[i].as_slice()));
+            })
+        };
+        match rt {
+            ExecRuntime::Owned => {
+                ExecPool::with(threads, |pool| {
+                    ExecCtx::Owned(pool).scatter(n, task.clone())
+                });
+            }
+            ExecRuntime::Global => {
+                ExecCtx::Global(threads).scatter(n, task)
+            }
+        }
         Self::take_slots(&slots)
     }
 
@@ -640,9 +800,13 @@ impl<'c> Deployment<'c> {
     /// (deploy guarantees exactly one of plan/params is populated).
     fn run_one(&self, image: &[i32]) -> Result<Vec<i32>> {
         match &self.plan {
-            Some(plan) => {
-                self.coord.run_network_planned(plan, image, None, 1)
-            }
+            Some(plan) => self.coord.run_network_planned(
+                plan,
+                image,
+                None,
+                1,
+                ExecRuntime::Global,
+            ),
             None => self
                 .coord
                 .run_network(
@@ -656,7 +820,7 @@ impl<'c> Deployment<'c> {
     }
 
     /// Drain per-image result slots in input order. Every slot is
-    /// filled by construction — `ExecPool::scatter` is a barrier.
+    /// filled by construction — every context's `scatter` is a barrier.
     fn take_slots(
         slots: &[Mutex<Option<Result<Vec<i32>>>>],
     ) -> Vec<Result<Vec<i32>>> {

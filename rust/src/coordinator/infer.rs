@@ -12,9 +12,10 @@
 //! `Coordinator::deploy(spec)` resolves a `dnn::NetworkSpec` once —
 //! layers built, manifest validated, [`NetworkPlan`] compiled into the
 //! runtime's bounded plan cache — and the returned `Deployment` streams
-//! activations per inference with no per-call network plumbing. The
-//! `*_resnet20` methods on this type are thin deprecated wrappers kept
-//! for source compatibility.
+//! activations per inference with no per-call network plumbing. Worker
+//! fan-out flows through [`ExecCtx`]: the process-wide work-stealing
+//! runtime by default, a caller-scoped [`ExecPool`] on the `Owned` A/B
+//! path, inline for single-lane calls.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -22,22 +23,20 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::dnn::{
-    Layer, LayerOp, Manifest, NetworkSpec, PrecisionConfig,
-};
+use crate::dnn::{Layer, LayerOp, Manifest, NetworkSpec};
 use crate::mapping::Scheduler;
 use crate::metrics::LayerSplit;
-use crate::power::OperatingPoint;
 use crate::rbe::functional::{
     add_requant, avgpool, conv_bitserial, trim_input, NormQuant,
     PlaneWidth,
 };
 use crate::rbe::{RbeJob, RbeMode};
 use crate::runtime::{
-    machine_fingerprint, BackendKind, ConvPlan, ConvRun, ExecPool,
-    LayerPlan, LayerTune, NetworkPlan, PlanStep, Runtime, SplitFactors,
-    TensorArg, TuneOptions, TunedConfig, BAND_FACTOR_CANDIDATES,
-    LATENCY_TILE_MIN_MACS, TILE_FACTOR_CANDIDATES,
+    machine_fingerprint, BackendKind, ConvPlan, ConvRun, ExecCtx,
+    ExecPool, ExecRuntime, LayerPlan, LayerTune, NetworkPlan, PlanStep,
+    Runtime, SplitFactors, TensorArg, TuneOptions, TunedConfig,
+    BAND_FACTOR_CANDIDATES, LATENCY_TILE_MIN_MACS,
+    TILE_FACTOR_CANDIDATES,
 };
 use crate::util::Rng;
 
@@ -58,13 +57,13 @@ pub struct InferenceResult {
 /// schedule. Every variant is bitwise identical; they differ only in
 /// wall clock and in how worker threads are provisioned.
 #[derive(Clone, Copy)]
-pub(super) enum ConvExec<'p, 'env> {
-    /// Inline on the calling thread (also the per-image shard mode of
-    /// the batch/hybrid scheduler: parallelism lives across images).
-    Seq,
-    /// Per-layer jobs (packing bands + conv tiles) on a persistent
-    /// worker pool provisioned once for the whole walk.
-    Pool(&'p ExecPool<'env>),
+pub(super) enum ConvExec<'env> {
+    /// Per-layer jobs (packing bands + conv tiles) on an execution
+    /// context: inline ([`ExecCtx::Seq`] — also the per-image shard
+    /// mode of the batch/hybrid scheduler, where parallelism lives
+    /// across images), a caller-scoped pool ([`ExecCtx::Owned`]), or
+    /// the process-wide runtime ([`ExecCtx::Global`]).
+    Ctx(ExecCtx<'env>),
     /// The legacy pre-pool tiler: a fresh scoped-thread set spawned and
     /// joined per conv layer. Kept for A/B benches of the recovered
     /// spawn overhead.
@@ -281,10 +280,10 @@ impl Coordinator {
     /// sequentially on a deterministic probe image, capturing each conv
     /// layer's exact input plane (so candidates are timed on real
     /// mid-network activations, not synthetic ones). Per measurable
-    /// layer — at or above [`LATENCY_TILE_MIN_MACS`], where the pool
-    /// engages — every width variant is compiled up front (plans must
-    /// outlive the pool borrow), then timed under one persistent
-    /// [`ExecPool`]: widths first at unit factors, then the split-
+    /// layer — at or above [`LATENCY_TILE_MIN_MACS`], where the workers
+    /// engage — every width variant is compiled up front, then timed on
+    /// the process-wide runtime (the same workers serving calls use):
+    /// widths first at unit factors, then the split-
     /// factor grid on the winning width. The heuristic variant is timed
     /// first and wins ties (strict `<`), so measurement noise can never
     /// walk away from the default without evidence. Every candidate's
@@ -322,7 +321,7 @@ impl Coordinator {
             &heuristic,
             &probe,
             None,
-            ConvExec::Seq,
+            ConvExec::Ctx(ExecCtx::Seq),
             Some(&mut capture),
         )?;
         let params = Self::network_params(layers, spec.seed);
@@ -342,9 +341,8 @@ impl Coordinator {
                 .as_ref()
                 .with_context(|| format!("no captured input for {}", l.name))?;
             let reference = hc.run(x)?;
-            // width variants compile BEFORE the pool borrow (candidate
-            // plans must outlive it); heuristic width first, so index 0
-            // is always the control
+            // every width variant compiles up front; heuristic width
+            // first, so index 0 is always the control
             let heur_width = hc.plane_width();
             let widths: Vec<Option<PlaneWidth>> = match heur_width {
                 Some(hw) => std::iter::once(Some(hw))
@@ -385,65 +383,64 @@ impl Coordinator {
                 };
                 variants.push((*w, c));
             }
-            let tune = ExecPool::with(threads, |pool| -> Result<LayerTune> {
-                let mut time_variant =
-                    |vi: usize, f: SplitFactors| -> Result<f64> {
-                        let c = &variants[vi].1;
-                        let mut best = f64::INFINITY;
-                        for trial in 0..trials {
-                            let t0 = Instant::now();
-                            let r =
-                                c.run_scheduled_factored(x, Some(pool), f)?;
-                            let us = t0.elapsed().as_secs_f64() * 1e6;
-                            if trial == 0 {
-                                ensure!(
-                                    r.out == reference,
-                                    "layer {}: candidate {:?} tile x{} \
-                                     band x{} diverged from the heuristic \
-                                     output",
-                                    l.name,
-                                    variants[vi].0,
-                                    f.tile,
-                                    f.band
-                                );
-                            }
-                            best = best.min(us);
+            // measured on the process-wide runtime — the same workers
+            // (and the same stealing behavior) serving calls run on
+            let ctx = ExecCtx::Global(threads);
+            let mut time_variant =
+                |vi: usize, f: SplitFactors| -> Result<f64> {
+                    let c = &variants[vi].1;
+                    let mut best = f64::INFINITY;
+                    for trial in 0..trials {
+                        let t0 = Instant::now();
+                        let r = c.run_scheduled_factored(x, ctx, f)?;
+                        let us = t0.elapsed().as_secs_f64() * 1e6;
+                        if trial == 0 {
+                            ensure!(
+                                r.out == reference,
+                                "layer {}: candidate {:?} tile x{} \
+                                 band x{} diverged from the heuristic \
+                                 output",
+                                l.name,
+                                variants[vi].0,
+                                f.tile,
+                                f.band
+                            );
                         }
-                        Ok(best)
-                    };
-                // stage 1: the width axis at unit factors; the
-                // heuristic (index 0) is timed first and wins ties
-                let heuristic_us = time_variant(0, SplitFactors::UNIT)?;
-                let (mut best_vi, mut best_us) = (0usize, heuristic_us);
-                for vi in 1..variants.len() {
-                    let us = time_variant(vi, SplitFactors::UNIT)?;
+                        best = best.min(us);
+                    }
+                    Ok(best)
+                };
+            // stage 1: the width axis at unit factors; the
+            // heuristic (index 0) is timed first and wins ties
+            let heuristic_us = time_variant(0, SplitFactors::UNIT)?;
+            let (mut best_vi, mut best_us) = (0usize, heuristic_us);
+            for vi in 1..variants.len() {
+                let us = time_variant(vi, SplitFactors::UNIT)?;
+                if us < best_us {
+                    (best_vi, best_us) = (vi, us);
+                }
+            }
+            // stage 2: the split-factor grid on the winning width
+            let mut best_f = SplitFactors::UNIT;
+            for tf in TILE_FACTOR_CANDIDATES {
+                for bf in BAND_FACTOR_CANDIDATES {
+                    let f = SplitFactors { tile: tf, band: bf };
+                    if f == SplitFactors::UNIT {
+                        continue;
+                    }
+                    let us = time_variant(best_vi, f)?;
                     if us < best_us {
-                        (best_vi, best_us) = (vi, us);
+                        (best_f, best_us) = (f, us);
                     }
                 }
-                // stage 2: the split-factor grid on the winning width
-                let mut best_f = SplitFactors::UNIT;
-                for tf in TILE_FACTOR_CANDIDATES {
-                    for bf in BAND_FACTOR_CANDIDATES {
-                        let f = SplitFactors { tile: tf, band: bf };
-                        if f == SplitFactors::UNIT {
-                            continue;
-                        }
-                        let us = time_variant(best_vi, f)?;
-                        if us < best_us {
-                            (best_f, best_us) = (f, us);
-                        }
-                    }
-                }
-                Ok(LayerTune {
-                    layer: l.name.clone(),
-                    width: variants[best_vi].1.plane_width(),
-                    factors: best_f,
-                    tuned_us: best_us,
-                    heuristic_us,
-                })
-            })?;
-            tuned_layers.push(tune);
+            }
+            tuned_layers.push(LayerTune {
+                layer: l.name.clone(),
+                width: variants[best_vi].1.plane_width(),
+                factors: best_f,
+                tuned_us: best_us,
+                heuristic_us,
+            });
         }
         let mut cfg = TunedConfig {
             spec: spec.to_string(),
@@ -465,7 +462,7 @@ impl Coordinator {
                 &tuned_plan,
                 &probe,
                 None,
-                ConvExec::Seq,
+                ConvExec::Ctx(ExecCtx::Seq),
             )?;
             seq_us = seq_us.min(t0.elapsed().as_secs_f64() * 1e6);
             ensure!(
@@ -474,23 +471,20 @@ impl Coordinator {
             );
         }
         let mut pool_us = f64::INFINITY;
-        ExecPool::with(threads, |pool| -> Result<()> {
-            for _ in 0..trials {
-                let t0 = Instant::now();
-                let logits = self.run_network_exec(
-                    &tuned_plan,
-                    &probe,
-                    None,
-                    ConvExec::Pool(pool),
-                )?;
-                pool_us = pool_us.min(t0.elapsed().as_secs_f64() * 1e6);
-                ensure!(
-                    logits == heuristic_logits,
-                    "tuned pooled walk diverged from heuristic logits"
-                );
-            }
-            Ok(())
-        })?;
+        for _ in 0..trials {
+            let t0 = Instant::now();
+            let logits = self.run_network_exec(
+                &tuned_plan,
+                &probe,
+                None,
+                ConvExec::Ctx(ExecCtx::Global(threads)),
+            )?;
+            pool_us = pool_us.min(t0.elapsed().as_secs_f64() * 1e6);
+            ensure!(
+                logits == heuristic_logits,
+                "tuned pooled walk diverged from heuristic logits"
+            );
+        }
         cfg.tile_speedup =
             if pool_us > 0.0 { seq_us / pool_us } else { 1.0 };
         Ok(cfg)
@@ -514,40 +508,6 @@ impl Coordinator {
     ) -> Result<Arc<NetworkPlan>> {
         self.runtime
             .network_plan(spec, || self.build_plan(layers, spec.seed))
-    }
-
-    /// Run ResNet-20 end to end. `cross_check_layers` names layers whose
-    /// backend output is re-computed with the Rust bit-serial model and
-    /// compared bit-exactly (expensive; pick small layers).
-    #[deprecated(
-        note = "use Coordinator::deploy(&NetworkSpec) and \
-                Deployment::{infer, infer_cross_checked}"
-    )]
-    pub fn infer_resnet20(
-        &self,
-        config: PrecisionConfig,
-        op: &OperatingPoint,
-        image: &[i32],
-        seed: u64,
-        cross_check_layers: &[&str],
-    ) -> Result<InferenceResult> {
-        let d = self.deploy(&NetworkSpec::new("resnet20", config, seed))?;
-        if cross_check_layers.is_empty() {
-            d.infer(op, image)
-        } else {
-            d.infer_cross_checked(op, image, cross_check_layers)
-        }
-    }
-
-    /// Fetch (or compile, once) the layer-plan pipeline for the deployed
-    /// ResNet-20 `(config, seed)` from the runtime's plan cache.
-    #[deprecated(note = "use Coordinator::plan_for(&NetworkSpec) or deploy")]
-    pub fn network_plan(
-        &self,
-        config: PrecisionConfig,
-        seed: u64,
-    ) -> Result<Arc<NetworkPlan>> {
-        self.plan_for(&NetworkSpec::new("resnet20", config, seed))
     }
 
     /// Compile every layer of the network once: weights packed into RBE
@@ -603,17 +563,17 @@ impl Coordinator {
     /// Residual bookkeeping mirrors [`Self::run_network`] exactly. When
     /// `profile` is given, per-layer compute time (and its
     /// activation-packing share) is recorded next to the plan-compile
-    /// (setup) time. `exec` chooses how each conv layer fans out —
-    /// sequential, over a persistent [`ExecPool`], or over the legacy
-    /// spawn-per-layer tiler; every choice is bitwise identical, and
-    /// elementwise layers stay serial in all of them (they are memory
-    /// bound and a fraction of a percent of the work).
-    pub(super) fn run_network_exec<'env>(
+    /// (setup) time. `exec` chooses how each conv layer fans out — an
+    /// [`ExecCtx`] (inline, scoped pool or the process-wide runtime) or
+    /// the legacy spawn-per-layer tiler; every choice is bitwise
+    /// identical, and elementwise layers stay serial in all of them
+    /// (they are memory bound and a fraction of a percent of the work).
+    pub(super) fn run_network_exec(
         &self,
-        plan: &'env NetworkPlan,
+        plan: &NetworkPlan,
         image: &[i32],
         profile: Option<&mut Vec<LayerSplit>>,
-        exec: ConvExec<'_, 'env>,
+        exec: ConvExec<'_>,
     ) -> Result<Vec<i32>> {
         self.run_network_exec_obs(plan, image, profile, exec, None)
     }
@@ -624,20 +584,17 @@ impl Coordinator {
     /// for 3×3, the block input for 1×1 shortcuts). The autotuner uses
     /// this to capture real mid-network operands for candidate timing
     /// without duplicating the residual bookkeeping below.
-    pub(super) fn run_network_exec_obs<'env>(
+    pub(super) fn run_network_exec_obs(
         &self,
-        plan: &'env NetworkPlan,
+        plan: &NetworkPlan,
         image: &[i32],
         mut profile: Option<&mut Vec<LayerSplit>>,
-        exec: ConvExec<'_, 'env>,
+        exec: ConvExec<'_>,
         mut observe: Option<&mut dyn FnMut(usize, &[i32])>,
     ) -> Result<Vec<i32>> {
-        let run_conv = |c: &'env crate::runtime::ConvPlan,
-                        x: &[i32]|
-         -> Result<ConvRun> {
+        let run_conv = |c: &ConvPlan, x: &[i32]| -> Result<ConvRun> {
             match exec {
-                ConvExec::Seq => c.run_scheduled(x, None),
-                ConvExec::Pool(pool) => c.run_scheduled(x, Some(pool)),
+                ConvExec::Ctx(ctx) => c.run_scheduled(x, ctx),
                 ConvExec::Respawn(threads) => c
                     .run_tiled(x, threads)
                     .map(|out| ConvRun { out, pack_us: 0.0 }),
@@ -722,44 +679,41 @@ impl Coordinator {
         Ok(cur)
     }
 
-    /// [`Self::run_network_exec`] with the pre-pool calling convention:
-    /// `tile_threads > 1` provisions a persistent [`ExecPool`] for the
-    /// whole layer walk (workers spawned once, fed per-layer jobs) —
-    /// the single-image **latency mode**.
+    /// [`Self::run_network_exec`] with the thread-count calling
+    /// convention — the single-image **latency mode**: `tile_threads`
+    /// lanes of per-layer jobs on the runtime `rt` picks (the
+    /// process-wide workers by default; `Owned` provisions a scoped
+    /// [`ExecPool`] for the walk, the PR-5 A/B behavior).
     pub(super) fn run_network_planned(
         &self,
         plan: &NetworkPlan,
         image: &[i32],
         profile: Option<&mut Vec<LayerSplit>>,
         tile_threads: usize,
+        rt: ExecRuntime,
     ) -> Result<Vec<i32>> {
-        if tile_threads > 1 {
-            ExecPool::with(tile_threads, |pool| {
+        match rt {
+            _ if tile_threads <= 1 => self.run_network_exec(
+                plan,
+                image,
+                profile,
+                ConvExec::Ctx(ExecCtx::Seq),
+            ),
+            ExecRuntime::Global => self.run_network_exec(
+                plan,
+                image,
+                profile,
+                ConvExec::Ctx(ExecCtx::Global(tile_threads)),
+            ),
+            ExecRuntime::Owned => ExecPool::with(tile_threads, |pool| {
                 self.run_network_exec(
                     plan,
                     image,
                     profile,
-                    ConvExec::Pool(pool),
+                    ConvExec::Ctx(ExecCtx::Owned(pool)),
                 )
-            })
-        } else {
-            self.run_network_exec(plan, image, profile, ConvExec::Seq)
+            }),
         }
-    }
-
-    /// Per-layer setup-vs-compute split of the ResNet-20 plan-driven
-    /// path on one image.
-    #[deprecated(
-        note = "use Coordinator::deploy(&NetworkSpec) and Deployment::profile"
-    )]
-    pub fn profile_resnet20(
-        &self,
-        config: PrecisionConfig,
-        image: &[i32],
-        seed: u64,
-    ) -> Result<Vec<LayerSplit>> {
-        self.deploy(&NetworkSpec::new("resnet20", config, seed))?
-            .profile(image)
     }
 
     /// Walk the layer schedule for one image against prepared weights.
@@ -853,43 +807,6 @@ impl Coordinator {
         }
         let _ = cur_hw;
         Ok((cur, cross_checked))
-    }
-
-    /// Run a batch of images through ResNet-20 in parallel over the
-    /// intra-batch worker pool (see `Deployment::infer_batch`).
-    #[deprecated(
-        note = "use Coordinator::deploy(&NetworkSpec) and \
-                Deployment::infer_batch"
-    )]
-    pub fn infer_batch(
-        &self,
-        config: PrecisionConfig,
-        op: &OperatingPoint,
-        images: &[Vec<i32>],
-        seed: u64,
-        threads: usize,
-    ) -> Result<Vec<InferenceResult>> {
-        self.deploy(&NetworkSpec::new("resnet20", config, seed))?
-            .infer_batch(op, images, threads)
-    }
-
-    /// ResNet-20 batch with an explicit execution-path choice (see
-    /// `Deployment::infer_batch_opts`).
-    #[deprecated(
-        note = "use Coordinator::deploy(&NetworkSpec) and \
-                Deployment::infer_batch_opts"
-    )]
-    pub fn infer_batch_opts(
-        &self,
-        config: PrecisionConfig,
-        op: &OperatingPoint,
-        images: &[Vec<i32>],
-        seed: u64,
-        threads: usize,
-        use_plans: bool,
-    ) -> Result<Vec<InferenceResult>> {
-        self.deploy(&NetworkSpec::new("resnet20", config, seed))?
-            .infer_batch_opts(op, images, threads, use_plans)
     }
 
     /// Re-compute a conv layer with the Rust bit-serial datapath model

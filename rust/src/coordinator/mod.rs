@@ -6,8 +6,9 @@
 //! Serving is deployment-handle based: [`Coordinator::deploy`] resolves
 //! a `dnn::NetworkSpec` once into a [`Deployment`], after which
 //! `infer`/`infer_batch`/`profile` are pure activation streaming.
-//! Batches fan out over scoped threads sharing one runtime
-//! ([`Deployment::infer_batch`]).
+//! Batches fan out onto the process-wide work-stealing runtime
+//! (`runtime::global`) by default; an owned scoped pool remains as an
+//! A/B path (`MARSELLUS_EXEC=owned`, [`Deployment::infer_scheduled_on`]).
 //!
 //! Python never appears here — layer numerics come either from the
 //! in-tree native backend or from artifacts AOT-compiled at build time;

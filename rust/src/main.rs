@@ -6,16 +6,18 @@
 //! marsellus infer    [--network ID] [--config uniform8|mixed]
 //!                    [--vdd V] [--seed N] [--check LAYER]
 //!                    [--threads T] [--profile]
+//!                    [--exec owned|global]
 //!                    [--artifacts DIR]        end-to-end inference
 //!                                             (T > 1: latency mode —
 //!                                             packing bands + conv
-//!                                             tiles over a persistent
-//!                                             T-worker pool; --profile
+//!                                             tiles over T lanes of
+//!                                             the process-wide
+//!                                             runtime; --profile
 //!                                             prints the per-layer
 //!                                             setup/pack/compute split
-//!                                             + pool telemetry)
+//!                                             + worker telemetry)
 //! marsellus batch    [--network ID] [--n N] [--threads T] [--config C]
-//!                    [--seed S]
+//!                    [--seed S] [--exec owned|global]
 //!                    [--schedule auto|batch|latency|hybrid]
 //!                                             scheduled batch inference
 //! marsellus tune     [--network ID] [--config C] [--seed S]
@@ -38,6 +40,11 @@
 //! (tuning once, persisting beside the plan cache); `MARSELLUS_TUNE=1`
 //! opts every deploy in (with `MARSELLUS_TUNE_TRIALS`,
 //! `MARSELLUS_TUNE_THREADS`, `MARSELLUS_TUNE_DIR`).
+//! Parallel serving runs on the process-wide work-stealing runtime by
+//! default (workers spawned once, sized to cores;
+//! `MARSELLUS_POOL_THREADS` overrides); `--exec owned` (or
+//! `MARSELLUS_EXEC=owned`) opts a call back into the PR-5 scoped
+//! per-call pool — bitwise-identical logits, kept for A/B measurement.
 //! Backend selection: `MARSELLUS_BACKEND=native|pjrt` (default native).
 //! Plan-cache bound: `MARSELLUS_PLAN_CACHE_BYTES` (default 256 MiB).
 
@@ -45,7 +52,9 @@ use anyhow::{bail, ensure, Context, Result};
 use marsellus::coordinator::{Coordinator, Schedule, ScheduleMode};
 use marsellus::dnn::{NetworkSpec, PrecisionConfig};
 use marsellus::power::OperatingPoint;
-use marsellus::runtime::{TuneOptions, TunedConfig, DEFAULT_TUNE_TRIALS};
+use marsellus::runtime::{
+    ExecRuntime, TuneOptions, TunedConfig, DEFAULT_TUNE_TRIALS,
+};
 use marsellus::util::Args;
 
 fn main() -> Result<()> {
@@ -131,6 +140,15 @@ fn parse_spec(args: &Args) -> Result<NetworkSpec> {
     Ok(NetworkSpec::new(network, parse_config(args)?, seed))
 }
 
+/// `--exec owned|global`, falling back to the `MARSELLUS_EXEC` process
+/// default (global).
+fn parse_exec(args: &Args) -> Result<ExecRuntime> {
+    match args.get("exec") {
+        Some(v) => v.parse().map_err(anyhow::Error::msg),
+        None => Ok(ExecRuntime::from_env()),
+    }
+}
+
 /// Tuning options shared by `marsellus tune` and the `--tune` flags:
 /// `--threads` (default: the machine's cores) x `--trials` (default 3),
 /// persisting under `--tune-dir` (default `<artifacts>/tuned`).
@@ -155,6 +173,7 @@ fn infer(args: &Args) -> Result<()> {
     let op = OperatingPoint::at_vdd(vdd);
 
     let threads = args.get_usize("threads", 1)?;
+    let exec = parse_exec(args)?;
     let deployment = if args.flag("tune") {
         coord.deploy_tuned(&spec, &tune_options(args, threads)?)?
     } else {
@@ -190,14 +209,17 @@ fn infer(args: &Args) -> Result<()> {
         }
         // latency mode: tile one image's conv layers across workers
         None if threads > 1 => {
-            println!("latency mode: conv tiles across {threads} workers");
-            deployment.infer_latency(&op, &image, threads)?
+            println!(
+                "latency mode: conv tiles across {threads} lanes \
+                 ({exec:?} runtime)"
+            );
+            deployment.infer_latency_on(&op, &image, threads, exec)?
         }
         None => deployment.infer(&op, &image)?,
     };
     if args.flag("profile") {
         let (split, pool) =
-            deployment.profile_scheduled(&image, threads)?;
+            deployment.profile_scheduled_on(&image, threads, exec)?;
         print!("{}", marsellus::metrics::render_setup_compute(&split));
         let conv_layers = deployment
             .layers()
@@ -205,12 +227,13 @@ fn infer(args: &Args) -> Result<()> {
             .filter(|l| l.op.on_rbe())
             .count();
         println!(
-            "pool: {} worker(s), {} spawned once, {} job(s) streamed \
-             (pre-pool path: ~{} spawns per image)",
+            "exec: {} worker(s), {} spawned by this call, {} job(s) \
+             streamed (per-layer respawning would cost ~{} spawns per \
+             image)",
             pool.width,
             pool.spawned_threads,
             pool.jobs,
-            pool.spawned_threads * conv_layers,
+            pool.width.saturating_sub(1) * conv_layers,
         );
     }
     println!("logits        = {:?}", res.logits);
@@ -236,6 +259,7 @@ fn batch(args: &Args) -> Result<()> {
     let threads = args.get_usize("threads", 4)?;
     let vdd = args.get_f64("vdd", 0.8)?;
     let mode: ScheduleMode = args.get_or("schedule", "auto").parse()?;
+    let exec = parse_exec(args)?;
     let sched = Schedule { threads, mode };
 
     let deployment = if args.flag("tune") {
@@ -257,14 +281,16 @@ fn batch(args: &Args) -> Result<()> {
         (0..n).map(|_| deployment.random_input(&mut rng)).collect();
 
     println!(
-        "schedule: {:?} over {threads} worker(s) ({n} image(s))",
-        mode
+        "schedule: {:?} over {threads} lane(s) ({n} image(s), {:?} \
+         runtime)",
+        mode, exec
     );
     let t0 = std::time::Instant::now();
-    let results = deployment.infer_scheduled(
+    let results = deployment.infer_scheduled_on(
         &OperatingPoint::at_vdd(vdd),
         &images,
         sched,
+        exec,
     )?;
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
 
@@ -300,6 +326,14 @@ fn batch(args: &Args) -> Result<()> {
         coord.runtime.plan_cache_budget() / 1024,
         coord.runtime.plan_evictions(),
     );
+    if exec == ExecRuntime::Global && threads > 1 {
+        let g = marsellus::runtime::global().telemetry();
+        println!(
+            "global runtime: {} worker(s) ({} spawned once per \
+             process), {} job(s) streamed, {} steal(s)",
+            g.width, g.spawned_threads, g.jobs, g.steals,
+        );
+    }
     Ok(())
 }
 

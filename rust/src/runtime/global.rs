@@ -1,0 +1,756 @@
+//! Process-wide work-stealing execution runtime shared by all
+//! deployments.
+//!
+//! The paper's cluster is one set of cores that every workload shares;
+//! the PR-5 [`ExecPool`] still provisioned that fan-out *per serving
+//! call*, so concurrent callers each spawned their own worker set and
+//! oversubscribed the machine. [`GlobalRuntime`] promotes the pool to a
+//! process singleton: workers are spawned once, lazily, on the first
+//! parallel serving call ([`global`]), sized to the machine's cores
+//! (`MARSELLUS_POOL_THREADS` overrides, clamped to 2x cores like the
+//! scoped pool), and every deployment's jobs land on the same threads
+//! for the life of the process — `spawned_threads` telemetry stays flat
+//! from the second call on.
+//!
+//! Scheduling is two-level: an *injector* queue receives jobs submitted
+//! from outside the runtime (serving entry points), and each worker
+//! owns a *deque* that receives jobs submitted from inside a task it is
+//! running (an image-shard task scattering its layer's tile/band
+//! items). Workers drain their own deque newest-first (depth-first into
+//! the image they are already walking), then the injector oldest-first,
+//! then *steal* the oldest items of other workers' deques — so an idle
+//! image-shard worker steals tile/band items from a concurrently
+//! walking image instead of idling at the layer-walk barrier (the `B`
+//! slightly-under-`T` regime the scoped pool rounded away).
+//!
+//! Nesting is bounded by construction: a thread blocked in
+//! [`GlobalRuntime::scatter`] executes items of *its own* job only
+//! (identified by `Arc` pointer), so an image-shard task never recurses
+//! into a second image mid-tile; idle workers take anything. Task
+//! payloads are `Arc<dyn Fn(usize) + Send + Sync>`: `'static` with
+//! `Arc`-shared operands ([`GlobalRuntime::scatter`]) or borrowing the
+//! submitter's stack ([`GlobalRuntime::scatter_scoped`] — sound because
+//! the barrier reclaims the task object before returning, the
+//! `std::thread::scope` argument).
+//!
+//! [`ExecCtx`] is the handle threaded through the serving stack:
+//! `Seq | Owned(&ExecPool) | Global(threads)`. The scoped pool survives
+//! as the `Owned` A/B path (benches and parity tests compare the two);
+//! [`ExecRuntime`] picks the default per process via `MARSELLUS_EXEC`.
+
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use super::pool::ExecPool;
+
+/// One indexed task set: the runtime calls `task(i)` for every
+/// `i in 0..n`, each index exactly once. `'static` — operands are
+/// `Arc`-shared into the closure, never borrowed from the caller.
+pub type GlobalTask = Arc<dyn Fn(usize) + Send + Sync + 'static>;
+
+/// One submitted job: the task, its item count, and the completion /
+/// panic state the submitting thread blocks on.
+struct JobCore {
+    /// The task, reclaimed (taken and dropped) by the submitter once
+    /// the barrier resolves: workers may hold `Arc<JobCore>` clones a
+    /// moment longer, but no reference to the task object itself
+    /// survives [`GlobalRuntime::scatter`] — the guarantee that makes
+    /// the scoped (`'env`-borrowing) submission path sound.
+    task: Mutex<Option<GlobalTask>>,
+    n: usize,
+    /// Items completed (stores happen under the state mutex so a
+    /// submitter checking it there cannot miss the final wakeup).
+    done: AtomicUsize,
+    /// First task panic, re-raised on the submitting thread after the
+    /// barrier — a panicking tile must not kill a detached worker.
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+}
+
+/// One schedulable unit: a single index of a job.
+struct Chunk {
+    job: Arc<JobCore>,
+    index: usize,
+}
+
+/// Queues + counters, all under one mutex: contention is per item-grab,
+/// and items are conv tiles / packing bands / whole image walks — far
+/// coarser than the lock.
+struct Queues {
+    /// Jobs submitted from outside the runtime, oldest first.
+    injector: VecDeque<Chunk>,
+    /// Per-worker deques for nested submissions (back = newest).
+    decks: Vec<VecDeque<Chunk>>,
+    jobs: usize,
+    steals: usize,
+}
+
+struct Inner {
+    width: usize,
+    state: Mutex<Queues>,
+    /// Workers and blocked submitters wait here; notified on every
+    /// submission and every item completion.
+    work: Condvar,
+}
+
+/// Runtime counters surfaced by `Deployment::profile_scheduled` and the
+/// CLI. `spawned_threads` is the whole point: it is `width - 1` after
+/// the first parallel call and **never grows again** for the life of
+/// the process (asserted in the serving tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GlobalTelemetry {
+    /// Worker count including a submitting thread.
+    pub width: usize,
+    /// OS threads ever spawned by the runtime (once, `width - 1`).
+    pub spawned_threads: usize,
+    /// Jobs streamed through the queues since process start.
+    pub jobs: usize,
+    /// Items executed by a worker other than the one whose deque held
+    /// them — cross-image tile/band stealing at the barrier.
+    pub steals: usize,
+}
+
+thread_local! {
+    /// `(runtime identity, worker index)` of the runtime worker this
+    /// thread belongs to, if any — routes nested submissions to the
+    /// submitting worker's own deque. The identity guards against unit
+    /// tests that run private runtimes side by side.
+    static WORKER: Cell<Option<(usize, usize)>> = const { Cell::new(None) };
+}
+
+/// The process-wide runtime; see the module docs. Private instances
+/// exist only in unit tests — serving goes through [`global`].
+pub struct GlobalRuntime {
+    inner: Arc<Inner>,
+}
+
+static GLOBAL: OnceLock<GlobalRuntime> = OnceLock::new();
+
+/// The process-wide runtime, provisioned on first use: worker count
+/// from `MARSELLUS_POOL_THREADS` when set (clamped to `1..=2x cores`),
+/// else the machine's cores.
+pub fn global() -> &'static GlobalRuntime {
+    GLOBAL.get_or_init(|| {
+        let cores = std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(1);
+        let var = std::env::var("MARSELLUS_POOL_THREADS").ok();
+        GlobalRuntime::new(width_from_env(var.as_deref(), cores))
+    })
+}
+
+/// Resolve the runtime width: an explicit positive
+/// `MARSELLUS_POOL_THREADS` clamped to `1..=2x cores` (the [`ExecPool`]
+/// clamp — more workers than that only adds handoff overhead), anything
+/// unset/unparsable/zero means "size to the machine".
+fn width_from_env(var: Option<&str>, cores: usize) -> usize {
+    let cores = cores.max(1);
+    match var.and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(w) if w > 0 => w.min(cores.saturating_mul(2)),
+        _ => cores,
+    }
+}
+
+impl GlobalRuntime {
+    /// A runtime of `width` workers (the submitting thread counts;
+    /// `width - 1` detached OS threads are spawned).
+    fn new(width: usize) -> Self {
+        let width = width.max(1);
+        let inner = Arc::new(Inner {
+            width,
+            state: Mutex::new(Queues {
+                injector: VecDeque::new(),
+                decks: (0..width.saturating_sub(1))
+                    .map(|_| VecDeque::new())
+                    .collect(),
+                jobs: 0,
+                steals: 0,
+            }),
+            work: Condvar::new(),
+        });
+        for id in 0..width.saturating_sub(1) {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name(format!("marsellus-global-{id}"))
+                .spawn(move || worker_loop(&inner, id))
+                .expect("spawn global runtime worker");
+        }
+        Self { inner }
+    }
+
+    /// Worker count, including a submitting thread — what per-layer
+    /// splits (`tile_split`, packing bands) should size against.
+    pub fn width(&self) -> usize {
+        self.inner.width
+    }
+
+    /// Snapshot of the runtime counters.
+    pub fn telemetry(&self) -> GlobalTelemetry {
+        let q = self.inner.state.lock().unwrap();
+        GlobalTelemetry {
+            width: self.inner.width,
+            spawned_threads: self.inner.width - 1,
+            jobs: q.jobs,
+            steals: q.steals,
+        }
+    }
+
+    /// Run `task(i)` for every `i in 0..n` across the runtime and block
+    /// until all items completed (the inter-layer / batch barrier). The
+    /// calling thread participates; a 1-wide runtime (or `n == 1`)
+    /// degrades to an inline loop with no synchronization. Each index
+    /// runs exactly once; completion order is unspecified, so tasks
+    /// must write disjoint outputs (slot-per-index).
+    ///
+    /// Unlike [`ExecPool::scatter`] this IS reentrant: a task may
+    /// scatter a nested job (image shard -> layer tiles). While blocked
+    /// on the nested barrier the thread executes items of that job
+    /// only; idle workers steal anything, from any job.
+    pub fn scatter(&self, n: usize, task: GlobalTask) {
+        if n == 0 {
+            return;
+        }
+        let me = WORKER.with(|w| w.get());
+        let ident = Arc::as_ptr(&self.inner) as usize;
+        if self.inner.width == 1 || n == 1 {
+            self.inner.state.lock().unwrap().jobs += 1;
+            for i in 0..n {
+                task(i);
+            }
+            return;
+        }
+        let job = Arc::new(JobCore {
+            task: Mutex::new(Some(task)),
+            n,
+            done: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut q = self.inner.state.lock().unwrap();
+            q.jobs += 1;
+            let chunks =
+                (0..n).map(|index| Chunk { job: job.clone(), index });
+            match me {
+                // nested submission: onto the submitting worker's own
+                // deque (drained depth-first by it, stolen oldest-first
+                // by idle peers)
+                Some((id, w)) if id == ident => q.decks[w].extend(chunks),
+                _ => q.injector.extend(chunks),
+            }
+            self.inner.work.notify_all();
+        }
+        // Participate, but only in THIS job: nested barriers bottom out
+        // instead of recursing into unrelated work mid-task.
+        loop {
+            let chunk = {
+                let mut q = self.inner.state.lock().unwrap();
+                loop {
+                    if job.done.load(Ordering::Acquire) >= n {
+                        break None;
+                    }
+                    if let Some(c) = take_of_job(&mut q, &job) {
+                        break Some(c);
+                    }
+                    q = self.inner.work.wait(q).unwrap();
+                }
+            };
+            match chunk {
+                Some(c) => self.run_chunk(c),
+                None => break,
+            }
+        }
+        // Reclaim the task before returning (normally or by unwind):
+        // every per-item clone was dropped before its `done` increment,
+        // and `done == n` was observed under the state mutex, so this
+        // take drops the last reference to the task object.
+        drop(job.task.lock().unwrap().take());
+        if let Some(p) = job.panic.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+    }
+
+    /// [`Self::scatter`] for tasks that borrow from the caller's stack
+    /// (`'env` rather than `'static`) — what lets batch sharding lend
+    /// `&Deployment` / `&[Vec<i32>]` to the long-lived workers. Sound
+    /// for the same reason `std::thread::scope` is: `scatter` is a
+    /// strict barrier that both finishes every invocation of the task
+    /// *and* drops every reference to the task object before it
+    /// returns, so nothing the task borrows is reachable afterwards.
+    pub fn scatter_scoped<'env>(
+        &self,
+        n: usize,
+        task: Arc<dyn Fn(usize) + Send + Sync + 'env>,
+    ) {
+        // SAFETY: lifetime erasure only — the fat pointer is unchanged.
+        // The runtime invokes the task only between submission and the
+        // `done == n` barrier inside `scatter`, per-invocation clones
+        // are dropped before their item counts done (`run_chunk`), and
+        // `scatter` reclaims and drops the task object itself before
+        // returning. Hence no use *or drop* of the closure outlives
+        // this call, which is exactly the `'env` contract.
+        let task: GlobalTask = unsafe { std::mem::transmute(task) };
+        self.scatter(n, task);
+    }
+
+    /// Execute one item; count it done under the state mutex (so
+    /// waiters cannot miss the last wakeup) and stash — not propagate —
+    /// any panic.
+    fn run_chunk(&self, c: Chunk) {
+        // Clone the task handle out for the call and drop the clone
+        // BEFORE counting the item done: once `done == n`, the
+        // submitter's reference is provably the last one (see
+        // `scatter_scoped`).
+        let task = c
+            .job
+            .task
+            .lock()
+            .unwrap()
+            .clone()
+            .expect("task reclaimed before barrier");
+        let res = catch_unwind(AssertUnwindSafe(|| task(c.index)));
+        drop(task);
+        if let Err(p) = res {
+            let mut slot = c.job.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        let _q = self.inner.state.lock().unwrap();
+        c.job.done.fetch_add(1, Ordering::Release);
+        self.inner.work.notify_all();
+    }
+}
+
+/// Pull an item of `job` (and only `job`) from any queue.
+fn take_of_job(q: &mut Queues, job: &Arc<JobCore>) -> Option<Chunk> {
+    if let Some(i) =
+        q.injector.iter().position(|c| Arc::ptr_eq(&c.job, job))
+    {
+        return q.injector.remove(i);
+    }
+    for d in q.decks.iter_mut() {
+        if let Some(i) = d.iter().position(|c| Arc::ptr_eq(&c.job, job)) {
+            return d.remove(i);
+        }
+    }
+    None
+}
+
+/// Pull the next item for idle worker `id`: own deque newest-first,
+/// then the injector oldest-first, then steal the oldest item of a
+/// peer's deque.
+fn take_any(q: &mut Queues, id: usize) -> Option<Chunk> {
+    if let Some(c) = q.decks[id].pop_back() {
+        return Some(c);
+    }
+    if let Some(c) = q.injector.pop_front() {
+        return Some(c);
+    }
+    let peers = q.decks.len();
+    for w in 0..peers {
+        if w == id {
+            continue;
+        }
+        if let Some(c) = q.decks[w].pop_front() {
+            q.steals += 1;
+            return Some(c);
+        }
+    }
+    None
+}
+
+/// Detached worker body: take anything, run it, forever. Lives for the
+/// whole process — there is deliberately no shutdown path.
+fn worker_loop(inner: &Arc<Inner>, id: usize) {
+    WORKER.with(|w| w.set(Some((Arc::as_ptr(inner) as usize, id))));
+    let rt = GlobalRuntime { inner: inner.clone() };
+    loop {
+        let chunk = {
+            let mut q = rt.inner.state.lock().unwrap();
+            loop {
+                if let Some(c) = take_any(&mut q, id) {
+                    break c;
+                }
+                q = rt.inner.work.wait(q).unwrap();
+            }
+        };
+        rt.run_chunk(chunk);
+    }
+}
+
+/// Which worker set a parallel serving call runs on — the Owned-vs-
+/// Global A/B switch. `Owned` provisions a scoped [`ExecPool`] per call
+/// (the PR-5 behavior, kept for measurement); `Global` streams onto the
+/// process-wide runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecRuntime {
+    /// Scoped per-call pool (`ExecPool::with` around the call).
+    Owned,
+    /// Process-wide work-stealing runtime ([`global`]).
+    #[default]
+    Global,
+}
+
+impl ExecRuntime {
+    /// Process default: `MARSELLUS_EXEC=owned` opts back into per-call
+    /// pools; anything else (including unset) is `Global`.
+    pub fn from_env() -> Self {
+        match std::env::var("MARSELLUS_EXEC") {
+            Ok(v) => v.parse().unwrap_or(ExecRuntime::Global),
+            Err(_) => ExecRuntime::Global,
+        }
+    }
+}
+
+impl std::str::FromStr for ExecRuntime {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "owned" | "pool" | "scoped" => Ok(ExecRuntime::Owned),
+            "global" | "shared" => Ok(ExecRuntime::Global),
+            other => Err(format!(
+                "unknown exec runtime '{other}' (expected owned|global)"
+            )),
+        }
+    }
+}
+
+/// The pool handle threaded through every parallel entry point — plan
+/// kernels, the network walk, batch sharding, the tuner — so one code
+/// path serves the sequential, scoped-pool and global-runtime cases.
+#[derive(Clone, Copy)]
+pub enum ExecCtx<'env> {
+    /// Inline on the calling thread.
+    Seq,
+    /// A caller-owned scoped pool (the PR-5 A/B path).
+    Owned(&'env ExecPool<'env>),
+    /// The process-wide runtime, with the caller's requested lane
+    /// count: splits size against `min(requested, runtime width)`, so a
+    /// `--threads 4` call shards like a 4-wide owned pool even on a
+    /// 16-wide runtime.
+    Global(usize),
+}
+
+impl<'env> ExecCtx<'env> {
+    /// The context a serving call with `threads` lanes should use under
+    /// runtime choice `rt` when no scoped pool is in hand ([`Seq`] for
+    /// one lane; `Owned` callers build their pool first and wrap it
+    /// themselves).
+    ///
+    /// [`Seq`]: ExecCtx::Seq
+    pub fn for_threads(threads: usize, rt: ExecRuntime) -> ExecCtx<'static> {
+        match rt {
+            _ if threads <= 1 => ExecCtx::Seq,
+            ExecRuntime::Global => ExecCtx::Global(threads),
+            // Owned contexts need a live scoped pool; callers that want
+            // one wrap it explicitly. Requesting Owned without a pool
+            // degrades to the global runtime rather than silently
+            // sequential.
+            ExecRuntime::Owned => ExecCtx::Global(threads),
+        }
+    }
+
+    /// Effective worker count — what `tile_split`, packing bands and
+    /// image shards size against.
+    pub fn width(&self) -> usize {
+        match self {
+            ExecCtx::Seq => 1,
+            ExecCtx::Owned(p) => p.width(),
+            ExecCtx::Global(t) => (*t).min(global().width()).max(1),
+        }
+    }
+
+    /// Run `task(i)` for every `i in 0..n` on this context and block
+    /// until all items completed. Tasks may borrow from the caller's
+    /// scope (`'env`): every arm is a strict barrier — inline for
+    /// [`Seq`](ExecCtx::Seq), the scoped pool's join for `Owned`, and
+    /// [`GlobalRuntime::scatter_scoped`]'s task reclamation for
+    /// `Global`.
+    pub fn scatter(
+        &self,
+        n: usize,
+        task: Arc<dyn Fn(usize) + Send + Sync + 'env>,
+    ) {
+        match self {
+            ExecCtx::Seq => {
+                for i in 0..n {
+                    task(i);
+                }
+            }
+            ExecCtx::Owned(p) => p.scatter(n, task),
+            ExecCtx::Global(_) => global().scatter_scoped(n, task),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every index of every job runs exactly once, across many jobs on
+    /// one runtime, at every width — including width 1 (inline).
+    #[test]
+    fn scatter_runs_each_index_once_across_jobs() {
+        for width in [1usize, 2, 3, 8] {
+            let rt = GlobalRuntime::new(width);
+            for n in [0usize, 1, 5, 64] {
+                let hits: Arc<Vec<AtomicUsize>> =
+                    Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+                let task = {
+                    let hits = hits.clone();
+                    Arc::new(move |i: usize| {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    })
+                };
+                rt.scatter(n, task);
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(
+                        h.load(Ordering::Relaxed),
+                        1,
+                        "width {width}, n {n}, index {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The barrier holds: after `scatter` returns, every item's side
+    /// effect is visible to the submitter.
+    #[test]
+    fn scatter_is_a_barrier() {
+        let rt = GlobalRuntime::new(4);
+        for round in 0..50usize {
+            let n = 16;
+            let slots: Arc<Vec<Mutex<Option<usize>>>> =
+                Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+            let task = {
+                let slots = slots.clone();
+                Arc::new(move |i: usize| {
+                    *slots[i].lock().unwrap() = Some(i * i);
+                })
+            };
+            rt.scatter(n, task);
+            for (i, s) in slots.iter().enumerate() {
+                assert_eq!(
+                    s.lock().unwrap().take(),
+                    Some(i * i),
+                    "round {round}"
+                );
+            }
+        }
+    }
+
+    /// Nested scatter — a task submitting a sub-job and blocking on it,
+    /// the image-shard -> layer-tiles shape — completes, runs every
+    /// inner index exactly once, and never deadlocks, even when every
+    /// outer item nests.
+    #[test]
+    fn nested_scatter_completes() {
+        let rt = Arc::new(GlobalRuntime::new(4));
+        let outer = 6usize;
+        let inner_n = 12usize;
+        let hits: Arc<Vec<AtomicUsize>> = Arc::new(
+            (0..outer * inner_n).map(|_| AtomicUsize::new(0)).collect(),
+        );
+        let task = {
+            let (rt, hits) = (rt.clone(), hits.clone());
+            Arc::new(move |o: usize| {
+                let hits = hits.clone();
+                rt.scatter(
+                    inner_n,
+                    Arc::new(move |i: usize| {
+                        hits[o * inner_n + i]
+                            .fetch_add(1, Ordering::Relaxed);
+                    }),
+                );
+            })
+        };
+        rt.scatter(outer, task);
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    /// Two external threads scattering concurrently onto one runtime
+    /// both complete with exactly-once execution — the multi-tenant
+    /// serving shape.
+    #[test]
+    fn concurrent_submitters_share_the_runtime() {
+        let rt = Arc::new(GlobalRuntime::new(4));
+        let n = 64usize;
+        let counts: Vec<Arc<Vec<AtomicUsize>>> = (0..2)
+            .map(|_| {
+                Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect())
+            })
+            .collect();
+        std::thread::scope(|s| {
+            for hits in &counts {
+                let (rt, hits) = (rt.clone(), hits.clone());
+                s.spawn(move || {
+                    for _ in 0..10 {
+                        let hits = hits.clone();
+                        rt.scatter(
+                            n,
+                            Arc::new(move |i: usize| {
+                                hits[i].fetch_add(1, Ordering::Relaxed);
+                            }),
+                        );
+                    }
+                });
+            }
+        });
+        for hits in &counts {
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 10, "index {i}");
+            }
+        }
+    }
+
+    /// A panicking task reaches the submitter as a panic (after the
+    /// barrier) and the runtime keeps serving afterwards — detached
+    /// workers must survive task panics.
+    #[test]
+    fn task_panic_propagates_to_submitter_and_runtime_survives() {
+        let rt = GlobalRuntime::new(3);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            rt.scatter(
+                8,
+                Arc::new(|i: usize| {
+                    if i == 5 {
+                        panic!("tile 5 exploded");
+                    }
+                }),
+            );
+        }));
+        assert!(caught.is_err(), "panic must cross the barrier");
+        // still serving
+        let ran = Arc::new(AtomicUsize::new(0));
+        let r = ran.clone();
+        rt.scatter(
+            16,
+            Arc::new(move |_| {
+                r.fetch_add(1, Ordering::Relaxed);
+            }),
+        );
+        assert_eq!(ran.load(Ordering::Relaxed), 16);
+    }
+
+    /// Telemetry: spawns happen once at construction and never grow;
+    /// jobs count scatters (degenerate `n == 0` excluded).
+    #[test]
+    fn telemetry_spawns_once_and_counts_jobs() {
+        let rt = GlobalRuntime::new(3);
+        let t0 = rt.telemetry();
+        assert_eq!(t0.width, 3);
+        assert_eq!(t0.spawned_threads, 2);
+        assert_eq!(t0.jobs, 0);
+        for _ in 0..5 {
+            rt.scatter(4, Arc::new(|_: usize| {}));
+        }
+        rt.scatter(0, Arc::new(|_: usize| {})); // no-op, not a job
+        let t = rt.telemetry();
+        assert_eq!(t.jobs, 5);
+        assert_eq!(
+            t.spawned_threads, t0.spawned_threads,
+            "serving calls must not spawn"
+        );
+    }
+
+    /// Width resolution: unset/garbage/zero -> cores; explicit values
+    /// clamp to 2x cores and floor at 1.
+    #[test]
+    fn width_from_env_resolves_and_clamps() {
+        assert_eq!(width_from_env(None, 8), 8);
+        assert_eq!(width_from_env(Some(""), 8), 8);
+        assert_eq!(width_from_env(Some("nope"), 8), 8);
+        assert_eq!(width_from_env(Some("0"), 8), 8);
+        assert_eq!(width_from_env(Some("4"), 8), 4);
+        assert_eq!(width_from_env(Some(" 12 "), 8), 12);
+        assert_eq!(width_from_env(Some("9999"), 8), 16);
+        assert_eq!(width_from_env(Some("3"), 1), 2);
+    }
+
+    /// `ExecCtx` width semantics: `Seq` is 1, `Owned` is the pool's
+    /// width, `Global(t)` caps the request at the runtime width; and
+    /// `scatter` runs inline for `Seq`.
+    #[test]
+    fn exec_ctx_width_and_seq_scatter() {
+        assert_eq!(ExecCtx::Seq.width(), 1);
+        ExecPool::with(3, |pool| {
+            assert_eq!(ExecCtx::Owned(pool).width(), pool.width());
+        });
+        let rt_width = global().width();
+        assert_eq!(ExecCtx::Global(1).width(), 1);
+        assert_eq!(
+            ExecCtx::Global(usize::MAX).width(),
+            rt_width,
+            "requests cap at the runtime width"
+        );
+        let ran = Arc::new(AtomicUsize::new(0));
+        let r = ran.clone();
+        ExecCtx::Seq.scatter(
+            5,
+            Arc::new(move |_| {
+                r.fetch_add(1, Ordering::Relaxed);
+            }),
+        );
+        assert_eq!(ran.load(Ordering::Relaxed), 5);
+    }
+
+    /// `ExecRuntime` parsing: explicit owned/global spellings, errors
+    /// on junk, `for_threads` collapses single-lane calls to `Seq`.
+    #[test]
+    fn exec_runtime_parses_and_routes() {
+        assert_eq!("owned".parse::<ExecRuntime>().unwrap(), ExecRuntime::Owned);
+        assert_eq!("pool".parse::<ExecRuntime>().unwrap(), ExecRuntime::Owned);
+        assert_eq!(
+            " Global ".parse::<ExecRuntime>().unwrap(),
+            ExecRuntime::Global
+        );
+        assert!("turbo".parse::<ExecRuntime>().is_err());
+        assert_eq!(ExecRuntime::default(), ExecRuntime::Global);
+        assert!(matches!(
+            ExecCtx::for_threads(1, ExecRuntime::Global),
+            ExecCtx::Seq
+        ));
+        assert!(matches!(
+            ExecCtx::for_threads(4, ExecRuntime::Global),
+            ExecCtx::Global(4)
+        ));
+    }
+
+    /// Steal accounting: a nested job lands on the submitting worker's
+    /// deque; with idle peers around, at least some of its items are
+    /// stolen (eventually — assert only the counter is consistent with
+    /// completed work, not a racy exact count).
+    #[test]
+    fn steals_are_counted_consistently() {
+        let rt = Arc::new(GlobalRuntime::new(4));
+        let before = rt.telemetry().steals;
+        // many nested jobs with slow-ish outer items give peers time to
+        // go idle and steal from the busy worker's deque
+        let task = {
+            let rt = rt.clone();
+            Arc::new(move |_: usize| {
+                let spin = AtomicUsize::new(0);
+                rt.scatter(
+                    8,
+                    Arc::new(move |_| {
+                        for _ in 0..1000 {
+                            spin.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }),
+                );
+            })
+        };
+        for _ in 0..8 {
+            rt.scatter(4, task.clone());
+        }
+        let t = rt.telemetry();
+        assert!(t.steals >= before, "steal counter must not regress");
+        assert_eq!(t.jobs, 8 + 8 * 4, "outer jobs + one nested job each");
+    }
+}

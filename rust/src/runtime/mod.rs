@@ -19,10 +19,12 @@
 //! cache (compile once, `Arc`-share thereafter) and the per-deployment
 //! [`NetworkPlan`] cache — precompiled layer plans ([`plan`]) that hoist
 //! weight packing, job-geometry resolution and requant staging out of
-//! the per-inference hot path. Serving fan-out goes through a
-//! persistent [`ExecPool`]: workers are provisioned once per serving
-//! call and fed per-layer jobs (packing bands, conv tiles, image
-//! shards) instead of being re-spawned per layer. The plan cache is keyed by
+//! the per-inference hot path. Serving fan-out goes through the
+//! process-wide work-stealing runtime ([`global`]): workers are
+//! provisioned once per *process* and fed per-layer jobs (packing
+//! bands, conv tiles, image shards) from every deployment; the scoped
+//! per-call [`ExecPool`] survives as the `Owned` A/B path behind the
+//! same [`ExecCtx`] handle. The plan cache is keyed by
 //! `dnn::NetworkSpec`, byte-accounted and bounded with LRU eviction
 //! (`MARSELLUS_PLAN_CACHE_BYTES`), so many-tenant serving cannot grow
 //! without bound. Both caches are `Send + Sync`, so the coordinator can
@@ -37,6 +39,7 @@
 
 mod backend;
 mod executable;
+mod global;
 mod loader;
 #[cfg(feature = "native")]
 mod native;
@@ -49,6 +52,10 @@ mod tune;
 
 pub use backend::{BackendKind, ExecBackend, LayerExec};
 pub use executable::Executable;
+pub use global::{
+    global, ExecCtx, ExecRuntime, GlobalRuntime, GlobalTask,
+    GlobalTelemetry,
+};
 pub use loader::{Runtime, DEFAULT_PLAN_CACHE_BYTES};
 #[cfg(feature = "native")]
 pub use native::NativeBackend;

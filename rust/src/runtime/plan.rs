@@ -11,11 +11,15 @@
 //! narrow layers, 64-lane words past one group), the [`RbeJob`]
 //! geometry and requant constants are resolved, and per-call work
 //! collapses to activation checking + streaming through the `*_planned`
-//! entry points of [`crate::rbe::functional`]. Plans are immutable, so
-//! a batch worker pool shares one `Arc<NetworkPlan>` read-only across
-//! threads — see `Coordinator::infer_batch` — and the single-image
-//! latency mode splits one layer's `(output-row, k_out)` range across
-//! the same pool ([`ConvPlan::run_tiled`]).
+//! entry points of [`crate::rbe::functional`]. Plans are immutable and
+//! their hot operands (`PackedWeights`, requant constants) are
+//! `Arc`-staged, so batch workers share one `Arc<NetworkPlan>`
+//! read-only across threads — see `Deployment::infer_batch` — and
+//! every parallel entry point takes an [`ExecCtx`] handle: inline,
+//! a caller-scoped [`super::pool::ExecPool`], or the process-wide
+//! work-stealing runtime ([`super::global`]). The single-image latency
+//! mode splits one layer's `(output-row, k_out)` range across the same
+//! workers ([`ConvPlan::run_scheduled`]).
 //!
 //! Bitwise identity with the per-call path is by construction: every
 //! kernel choice evaluates the same Eq. 1–2 integer arithmetic
@@ -38,7 +42,7 @@ use crate::rbe::functional::{
 };
 use crate::rbe::RbeJob;
 
-use super::pool::ExecPool;
+use super::global::ExecCtx;
 use super::tune::{LayerTune, SplitFactors, TunedConfig};
 
 /// Jobs at or below this MAC count run bit-serial under
@@ -152,8 +156,10 @@ pub struct ConvPlan {
     /// Side of the activation plane the layer receives (padded for 3×3,
     /// 1 for linear).
     pub full: usize,
-    nq: NormQuant,
-    kernel: PlanKernel,
+    /// `Arc`-staged so `'static` runtime tasks can own a handle without
+    /// borrowing the plan's stack frame.
+    nq: Arc<NormQuant>,
+    kernel: Arc<PlanKernel>,
     /// Split-shape multipliers applied on every pooled run — `UNIT`
     /// unless the plan was compiled from a tuned configuration.
     factors: SplitFactors,
@@ -183,28 +189,28 @@ impl ConvPlan {
     /// Stream one activation plane through the plan. Per-call work is
     /// exactly: length check, strided trim, kernel evaluation.
     pub fn run(&self, x: &[i32]) -> Result<Vec<i32>> {
-        self.run_scheduled(x, None).map(|r| r.out)
+        self.run_scheduled(x, ExecCtx::Seq).map(|r| r.out)
     }
 
     /// Stream one activation plane through the plan, fanning the
-    /// layer's work over a persistent [`ExecPool`] when one is given:
-    /// the activation plane is packed in row bands across the pool
-    /// (lifting the serial packing fraction of wide layers), then the
-    /// `(output-row, k_out)` range is split into tiles pulled by the
-    /// same workers. Without a pool — or for jobs under
-    /// [`LATENCY_TILE_MIN_MACS`], which degrade gracefully inside the
-    /// pool — the layer runs inline on the calling thread.
+    /// layer's work over the given execution context when it is wider
+    /// than one lane: the activation plane is packed in row bands
+    /// across the workers (lifting the serial packing fraction of wide
+    /// layers), then the `(output-row, k_out)` range is split into
+    /// tiles pulled by the same workers. On [`ExecCtx::Seq`] — or for
+    /// jobs under [`LATENCY_TILE_MIN_MACS`], which degrade gracefully —
+    /// the layer runs inline on the calling thread.
     ///
     /// Bitwise identical to [`Self::run`] in every configuration:
     /// banded packing stitches to the exact whole-plane words, and
     /// disjoint tiles compute disjoint output elements with the same
     /// arithmetic.
-    pub fn run_scheduled<'env>(
-        &'env self,
+    pub fn run_scheduled(
+        &self,
         x: &[i32],
-        pool: Option<&ExecPool<'env>>,
+        ctx: ExecCtx<'_>,
     ) -> Result<ConvRun> {
-        self.run_scheduled_factored(x, pool, self.factors)
+        self.run_scheduled_factored(x, ctx, self.factors)
     }
 
     /// [`Self::run_scheduled`] with explicit split-shape multipliers
@@ -214,23 +220,22 @@ impl ConvPlan {
     /// recompiling) the shared plan. Factors only re-partition the same
     /// output and packing ranges, so every value is bitwise identical
     /// to [`Self::run`].
-    pub fn run_scheduled_factored<'env>(
-        &'env self,
+    pub fn run_scheduled_factored(
+        &self,
         x: &[i32],
-        pool: Option<&ExecPool<'env>>,
+        ctx: ExecCtx<'_>,
         f: SplitFactors,
     ) -> Result<ConvRun> {
         let x = self.checked_trim(x)?;
-        if let Some(pool) = pool.filter(|p| {
-            p.width() > 1 && self.job.macs() >= LATENCY_TILE_MIN_MACS
-        }) {
+        let width = ctx.width();
+        if width > 1 && self.job.macs() >= LATENCY_TILE_MIN_MACS {
             let tiles = tile_split(
                 &self.job,
-                pool.width().saturating_mul(f.tile.max(1)),
+                width.saturating_mul(f.tile.max(1)),
             );
             if tiles.len() > 1 {
-                let bands = pool.width().saturating_mul(f.band.max(1));
-                return self.run_pooled_trimmed(x, pool, tiles, bands);
+                let bands = width.saturating_mul(f.band.max(1));
+                return self.run_pooled_trimmed(x, ctx, tiles, bands);
             }
         }
         self.run_seq_trimmed(&x)
@@ -239,7 +244,7 @@ impl ConvPlan {
     /// Sequential staging over an already-trimmed plane, with the
     /// activation-packing phase timed for the pack-vs-compute split.
     fn run_seq_trimmed(&self, x: &[i32]) -> Result<ConvRun> {
-        match &self.kernel {
+        match &*self.kernel {
             PlanKernel::Packed(pw) => {
                 let t0 = Instant::now();
                 let xp = pack_activations(&self.job, x, pw.width())?;
@@ -260,24 +265,26 @@ impl ConvPlan {
         }
     }
 
-    /// Pool fan-out over an already-trimmed plane: band-parallel pack,
-    /// then tile-parallel conv, both as jobs on the shared pool.
-    /// Per-layer operands are `Arc`-shared into the pool tasks (the
-    /// safe lifetime story — no borrow of this stack frame escapes);
-    /// the one plane copy this costs is small against the conv itself.
-    fn run_pooled_trimmed<'env>(
-        &'env self,
+    /// Worker fan-out over an already-trimmed plane: band-parallel
+    /// pack, then tile-parallel conv, both as jobs on the context's
+    /// workers. Tasks are `'static`: the job geometry is copied and the
+    /// kernel/requant operands are `Arc`-shared into the closures (the
+    /// safe lifetime story that lets the process-wide runtime outlive
+    /// this call); the one plane copy this costs is small against the
+    /// conv itself.
+    fn run_pooled_trimmed(
+        &self,
         x: std::borrow::Cow<'_, [i32]>,
-        pool: &ExecPool<'env>,
+        ctx: ExecCtx<'_>,
         tiles: Vec<ConvTile>,
         bands: usize,
     ) -> Result<ConvRun> {
         let plane: Arc<Vec<i32>> = Arc::new(x.into_owned());
-        let (staged, pack_us) = match &self.kernel {
+        let (staged, pack_us) = match &*self.kernel {
             PlanKernel::Packed(pw) => {
                 let t0 = Instant::now();
                 let xp =
-                    self.pack_banded(&plane, pw.width(), pool, bands)?;
+                    self.pack_banded(&plane, pw.width(), ctx, bands)?;
                 (Some(Arc::new(xp)), t0.elapsed().as_secs_f64() * 1e6)
             }
             PlanKernel::Reference(_) => {
@@ -293,18 +300,20 @@ impl ConvPlan {
         {
             let (tiles, slots, plane, staged) =
                 (tiles.clone(), slots.clone(), plane.clone(), staged);
-            pool.scatter(
+            let (job, kernel, nq) =
+                (self.job, self.kernel.clone(), self.nq.clone());
+            ctx.scatter(
                 tiles.len(),
                 Arc::new(move |t| {
-                    let res = match (&self.kernel, staged.as_deref()) {
+                    let res = match (&*kernel, staged.as_deref()) {
                         (PlanKernel::Packed(pw), Some(xp)) => {
                             conv_bitserial_packed_tile(
-                                &self.job, xp, pw, &self.nq, tiles[t],
+                                &job, xp, pw, &nq, tiles[t],
                             )
                         }
                         (PlanKernel::Reference(w), _) => {
                             conv_reference_tile(
-                                &self.job, &plane, w, &self.nq, tiles[t],
+                                &job, &plane, w, &nq, tiles[t],
                             )
                         }
                         (PlanKernel::Packed(_), None) => {
@@ -329,14 +338,14 @@ impl ConvPlan {
     }
 
     /// Pack the activation plane in contiguous row bands across the
-    /// pool and stitch the bands — bitwise identical to a whole-plane
-    /// [`pack_activations`] (band-parity property tests in
+    /// context's workers and stitch the bands — bitwise identical to a
+    /// whole-plane [`pack_activations`] (band-parity property tests in
     /// `rbe::functional`).
-    fn pack_banded<'env>(
-        &'env self,
+    fn pack_banded(
+        &self,
         plane: &Arc<Vec<i32>>,
         width: PlaneWidth,
-        pool: &ExecPool<'env>,
+        ctx: ExecCtx<'_>,
         bands: usize,
     ) -> Result<PackedActivations> {
         let rows = band_split(self.job.h_in(), bands);
@@ -354,12 +363,13 @@ impl ConvPlan {
         {
             let (bands, slots, plane) =
                 (bands.clone(), slots.clone(), plane.clone());
-            pool.scatter(
+            let job = self.job;
+            ctx.scatter(
                 bands.len(),
                 Arc::new(move |b| {
                     let (p0, p1) = bands[b];
                     *slots[b].lock().unwrap() = Some(pack_activation_band(
-                        &self.job, &plane, width, p0, p1,
+                        &job, &plane, width, p0, p1,
                     ));
                 }),
             );
@@ -396,8 +406,8 @@ impl ConvPlan {
     /// scoped workers — the **legacy** (pre-pool) latency path, which
     /// spawns and joins a fresh thread set per call. Kept so benches
     /// and tests can measure the recovered spawn overhead against
-    /// [`Self::run_scheduled`] over a persistent [`ExecPool`]; serving
-    /// goes through the pool. For the packed kernel the activation
+    /// [`Self::run_scheduled`] over persistent workers; serving goes
+    /// through [`ExecCtx`]. For the packed kernel the activation
     /// plane is packed ONCE (serially) and shared read-only by every
     /// tile worker. Bitwise identical to [`Self::run`]: disjoint tiles
     /// compute disjoint output elements with the same arithmetic, so
@@ -421,7 +431,7 @@ impl ConvPlan {
         // paid once per layer instead of once per tile: packed
         // activations for the popcount kernel, the validated trimmed
         // plane itself for the oracle.
-        let staged: Option<PackedActivations> = match &self.kernel {
+        let staged: Option<PackedActivations> = match &*self.kernel {
             PlanKernel::Packed(pw) => {
                 Some(pack_activations(&self.job, &x, pw.width())?)
             }
@@ -442,7 +452,7 @@ impl ConvPlan {
                     if t >= tiles.len() {
                         break;
                     }
-                    let res = match (&self.kernel, staged) {
+                    let res = match (&*self.kernel, staged) {
                         (PlanKernel::Packed(pw), Some(xp)) => {
                             conv_bitserial_packed_tile(
                                 &self.job, xp, pw, &self.nq, tiles[t],
@@ -477,13 +487,13 @@ impl ConvPlan {
 
     /// True when this plan streams through the packed bit-serial path.
     pub fn is_packed(&self) -> bool {
-        matches!(self.kernel, PlanKernel::Packed(_))
+        matches!(&*self.kernel, PlanKernel::Packed(_))
     }
 
     /// Lane width of the packed bit-plane words (`None` on the
     /// reference-oracle staging).
     pub fn plane_width(&self) -> Option<PlaneWidth> {
-        match &self.kernel {
+        match &*self.kernel {
             PlanKernel::Packed(pw) => Some(pw.width()),
             PlanKernel::Reference(_) => None,
         }
@@ -493,7 +503,7 @@ impl ConvPlan {
     /// (or raw reference weights) plus the requant constants — what the
     /// plan-cache eviction policy accounts per deployment.
     pub fn bytes(&self) -> usize {
-        let kernel = match &self.kernel {
+        let kernel = match &*self.kernel {
             PlanKernel::Packed(pw) => pw.bytes(),
             PlanKernel::Reference(w) => w.len() * 4,
         };
@@ -579,8 +589,8 @@ impl LayerPlan {
                 Ok(LayerPlan::Conv(ConvPlan {
                     job,
                     full: e.full_side(),
-                    nq,
-                    kernel,
+                    nq: Arc::new(nq),
+                    kernel: Arc::new(kernel),
                     factors: tune
                         .map(|t| t.factors)
                         .unwrap_or(SplitFactors::UNIT),
@@ -659,6 +669,7 @@ impl NetworkPlan {
 
 #[cfg(test)]
 mod tests {
+    use super::super::pool::ExecPool;
     use super::*;
     use crate::dnn::Manifest;
     use crate::rbe::functional::{conv_bitserial, conv_reference};
@@ -865,17 +876,31 @@ mod tests {
                 ExecPool::with(threads, |pool| {
                     // several jobs through one pool: reuse is the point
                     for round in 0..3 {
-                        let got =
-                            c.run_scheduled(&x, Some(pool)).unwrap();
+                        let got = c
+                            .run_scheduled(&x, ExecCtx::Owned(pool))
+                            .unwrap();
                         assert_eq!(
                             got.out, want,
                             "{numerics:?}, {threads} workers, round {round}"
                         );
                     }
                     // bad planes fail identically through the pool
-                    assert!(c.run_scheduled(&[0i32; 3], Some(pool)).is_err());
+                    assert!(c
+                        .run_scheduled(&[0i32; 3], ExecCtx::Owned(pool))
+                        .is_err());
                 });
+                // ...and the process-wide runtime produces the same
+                // words at every requested lane count
+                let got =
+                    c.run_scheduled(&x, ExecCtx::Global(threads)).unwrap();
+                assert_eq!(
+                    got.out, want,
+                    "{numerics:?}, {threads} global lanes"
+                );
             }
+            assert!(c
+                .run_scheduled(&[0i32; 3], ExecCtx::Global(4))
+                .is_err());
         }
     }
 
@@ -915,18 +940,36 @@ mod tests {
             assert_eq!(&out, want, "{width} sequential");
             ExecPool::with(4, |pool| {
                 // the compiled-in (2, 2) factors drive run_scheduled...
-                let got = c.run_scheduled(&x, Some(pool)).unwrap();
+                let got =
+                    c.run_scheduled(&x, ExecCtx::Owned(pool)).unwrap();
                 assert_eq!(&got.out, want, "{width} compiled factors");
                 // ...and every candidate override stays identical
                 for tf in TILE_FACTOR_CANDIDATES {
                     for bf in BAND_FACTOR_CANDIDATES {
                         let f = SplitFactors { tile: tf, band: bf };
                         let got = c
-                            .run_scheduled_factored(&x, Some(pool), f)
+                            .run_scheduled_factored(
+                                &x,
+                                ExecCtx::Owned(pool),
+                                f,
+                            )
                             .unwrap();
                         assert_eq!(
                             &got.out, want,
                             "{width} tile x{tf} band x{bf}"
+                        );
+                        // the global runtime re-partitions to the same
+                        // words for the same candidate
+                        let got = c
+                            .run_scheduled_factored(
+                                &x,
+                                ExecCtx::Global(4),
+                                f,
+                            )
+                            .unwrap();
+                        assert_eq!(
+                            &got.out, want,
+                            "{width} tile x{tf} band x{bf} (global)"
                         );
                     }
                 }
@@ -966,8 +1009,15 @@ mod tests {
         let want = oracle.run(&x).unwrap();
         assert_eq!(c.run(&x).unwrap(), want);
         ExecPool::with(4, |pool| {
-            assert_eq!(c.run_scheduled(&x, Some(pool)).unwrap().out, want);
+            assert_eq!(
+                c.run_scheduled(&x, ExecCtx::Owned(pool)).unwrap().out,
+                want
+            );
         });
+        assert_eq!(
+            c.run_scheduled(&x, ExecCtx::Global(4)).unwrap().out,
+            want
+        );
     }
 
     /// Below the latency-tile MAC floor a pooled `run_scheduled`
@@ -987,7 +1037,7 @@ mod tests {
         let LayerPlan::Conv(c) = &plan else { panic!() };
         ExecPool::with(8, |pool| {
             let jobs_before = pool.telemetry().jobs;
-            let got = c.run_scheduled(&x, Some(pool)).unwrap();
+            let got = c.run_scheduled(&x, ExecCtx::Owned(pool)).unwrap();
             assert_eq!(got.out, c.run(&x).unwrap());
             assert_eq!(
                 pool.telemetry().jobs,

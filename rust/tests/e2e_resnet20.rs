@@ -3,16 +3,15 @@
 //! configurations.
 //!
 //! Runs against the native backend, so no `make artifacts` is needed —
-//! the coordinator falls back to the built-in layer zoo. Exercises the
-//! deprecated `infer_resnet20` wrapper on purpose: this file is the
-//! regression suite for the legacy surface (the deployment API has its
-//! own, `tests/deploy_api.rs`).
+//! the coordinator falls back to the built-in layer zoo. Streams
+//! through `Coordinator::deploy` handles, the one serving surface (the
+//! PR-3 wrapper shims are gone); `tests/deploy_api.rs` covers the
+//! handle lifecycle itself.
 
 #![cfg(feature = "native")]
-#![allow(deprecated)]
 
 use marsellus::coordinator::{random_image, Coordinator};
-use marsellus::dnn::PrecisionConfig;
+use marsellus::dnn::{NetworkSpec, PrecisionConfig};
 use marsellus::power::{OperatingPoint, FBB_MAX_V};
 use marsellus::runtime::Runtime;
 use marsellus::util::Rng;
@@ -28,6 +27,10 @@ fn coordinator() -> Coordinator {
     Coordinator::with_runtime(rt).expect("coordinator")
 }
 
+fn spec(config: PrecisionConfig, seed: u64) -> NetworkSpec {
+    NetworkSpec::new("resnet20", config, seed)
+}
+
 #[test]
 fn inference_runs_and_is_deterministic() {
     let coord = coordinator();
@@ -35,12 +38,9 @@ fn inference_runs_and_is_deterministic() {
     let image = random_image(8, &mut rng);
     let op = OperatingPoint::at_vdd(0.8);
     for config in [PrecisionConfig::Uniform8, PrecisionConfig::Mixed] {
-        let a = coord
-            .infer_resnet20(config, &op, &image, 42, &[])
-            .unwrap();
-        let b = coord
-            .infer_resnet20(config, &op, &image, 42, &[])
-            .unwrap();
+        let d = coord.deploy(&spec(config, 42)).unwrap();
+        let a = d.infer(&op, &image).unwrap();
+        let b = d.infer(&op, &image).unwrap();
         assert_eq!(a.logits, b.logits, "{config:?} determinism");
         assert_eq!(a.logits.len(), 10);
         // O-bit output range of the fc layer
@@ -55,10 +55,14 @@ fn different_weights_give_different_logits() {
     let image = random_image(8, &mut Rng::new(2));
     let op = OperatingPoint::at_vdd(0.8);
     let a = coord
-        .infer_resnet20(PrecisionConfig::Mixed, &op, &image, 1, &[])
+        .deploy(&spec(PrecisionConfig::Mixed, 1))
+        .unwrap()
+        .infer(&op, &image)
         .unwrap();
     let b = coord
-        .infer_resnet20(PrecisionConfig::Mixed, &op, &image, 2, &[])
+        .deploy(&spec(PrecisionConfig::Mixed, 2))
+        .unwrap()
+        .infer(&op, &image)
         .unwrap();
     assert_ne!(a.logits, b.logits);
 }
@@ -70,11 +74,11 @@ fn backend_vs_bitserial_cross_check() {
     let coord = coordinator();
     let image = random_image(8, &mut Rng::new(3));
     let res = coord
-        .infer_resnet20(
-            PrecisionConfig::Mixed,
+        .deploy(&spec(PrecisionConfig::Mixed, 7))
+        .unwrap()
+        .infer_cross_checked(
             &OperatingPoint::at_vdd(0.8),
             &image,
-            7,
             &["stage3.b1.conv0", "stage3.b2.conv1"],
         )
         .unwrap();
@@ -86,31 +90,13 @@ fn backend_vs_bitserial_cross_check() {
 fn operating_point_scaling() {
     let coord = coordinator();
     let image = random_image(8, &mut Rng::new(4));
-    let nominal = coord
-        .infer_resnet20(
-            PrecisionConfig::Mixed,
-            &OperatingPoint::at_vdd(0.8),
-            &image,
-            42,
-            &[],
-        )
-        .unwrap();
-    let low = coord
-        .infer_resnet20(
-            PrecisionConfig::Mixed,
-            &OperatingPoint::at_vdd(0.5),
-            &image,
-            42,
-            &[],
-        )
-        .unwrap();
-    let abb = coord
-        .infer_resnet20(
-            PrecisionConfig::Mixed,
+    let d = coord.deploy(&spec(PrecisionConfig::Mixed, 42)).unwrap();
+    let nominal = d.infer(&OperatingPoint::at_vdd(0.8), &image).unwrap();
+    let low = d.infer(&OperatingPoint::at_vdd(0.5), &image).unwrap();
+    let abb = d
+        .infer(
             &OperatingPoint { vdd: 0.65, freq_mhz: 400.0, fbb_v: FBB_MAX_V },
             &image,
-            42,
-            &[],
         )
         .unwrap();
     // same functional result regardless of operating point

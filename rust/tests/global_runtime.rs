@@ -1,0 +1,226 @@
+//! Process-wide work-stealing runtime acceptance (ISSUE 7): the
+//! `Global` execution path must be bitwise identical to the `Owned`
+//! scoped-pool A/B path across the full (batch, threads, mode) matrix
+//! on both registry networks, concurrent tenants must share the one
+//! runtime without interference, and repeated serving calls must
+//! provision zero new threads (the telemetry that motivates the
+//! refactor).
+
+#![cfg(feature = "native")]
+
+use marsellus::coordinator::{Coordinator, Schedule, ScheduleMode};
+use marsellus::dnn::{NetworkSpec, PrecisionConfig};
+use marsellus::power::OperatingPoint;
+use marsellus::runtime::{global, ExecRuntime, Runtime};
+use marsellus::util::Rng;
+
+fn coordinator() -> Coordinator {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    let rt = Runtime::native(&dir).expect("native runtime");
+    Coordinator::with_runtime(rt).expect("coordinator")
+}
+
+fn op() -> OperatingPoint {
+    OperatingPoint::at_vdd(0.8)
+}
+
+const MODES: [ScheduleMode; 4] = [
+    ScheduleMode::Auto,
+    ScheduleMode::Batch,
+    ScheduleMode::Latency,
+    ScheduleMode::Hybrid,
+];
+
+/// Run the acceptance matrix on one deployed network: batches
+/// {1, 3, 8, 17} x threads {1, 4, 16} x every mode, on **both**
+/// runtimes, every cell bitwise equal to the single-threaded
+/// sequential walk.
+fn assert_owned_global_parity(net: &str, seed: u64, rng_seed: u64) {
+    let coord = coordinator();
+    let d = coord
+        .deploy(&NetworkSpec::new(net, PrecisionConfig::Mixed, seed))
+        .unwrap();
+    let mut rng = Rng::new(rng_seed);
+    for batch in [1usize, 3, 8, 17] {
+        let images: Vec<Vec<i32>> =
+            (0..batch).map(|_| d.random_input(&mut rng)).collect();
+        // the 1-thread cell is the sequential walk on either runtime —
+        // use it as the reference the whole matrix must match
+        let want: Vec<Vec<i32>> = d
+            .infer_scheduled_on(
+                &op(),
+                &images,
+                Schedule::auto(1),
+                ExecRuntime::Global,
+            )
+            .unwrap()
+            .into_iter()
+            .map(|r| r.logits)
+            .collect();
+        for threads in [1usize, 4, 16] {
+            for mode in MODES {
+                for rt in [ExecRuntime::Owned, ExecRuntime::Global] {
+                    let got: Vec<Vec<i32>> = d
+                        .infer_scheduled_on(
+                            &op(),
+                            &images,
+                            Schedule { threads, mode },
+                            rt,
+                        )
+                        .unwrap()
+                        .into_iter()
+                        .map(|r| r.logits)
+                        .collect();
+                    assert_eq!(
+                        got, want,
+                        "{net} batch {batch}, {threads} threads, {mode:?} \
+                         on {rt:?} diverged from the sequential walk"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn kws_owned_vs_global_full_matrix() {
+    assert_owned_global_parity("kws", 7, 60);
+}
+
+#[test]
+fn resnet20_owned_vs_global_full_matrix() {
+    assert_owned_global_parity("resnet20", 42, 61);
+}
+
+/// Multi-tenant serving: two deployments of different networks issue
+/// overlapping `infer_scheduled` calls onto the one global runtime from
+/// separate submitter threads. Every call must match that tenant's
+/// sequential per-call reference bitwise, and no call may provision a
+/// thread.
+#[test]
+fn concurrent_tenants_share_the_global_runtime() {
+    let coord = coordinator();
+    let kws = coord
+        .deploy(&NetworkSpec::new("kws", PrecisionConfig::Mixed, 11))
+        .unwrap();
+    let resnet = coord
+        .deploy(&NetworkSpec::new("resnet20", PrecisionConfig::Mixed, 12))
+        .unwrap();
+    let mut rng = Rng::new(62);
+    let kws_images: Vec<Vec<i32>> =
+        (0..6).map(|_| kws.random_input(&mut rng)).collect();
+    let res_images: Vec<Vec<i32>> =
+        (0..6).map(|_| resnet.random_input(&mut rng)).collect();
+    // per-tenant references: sequential per-call path, no plan, 1 thread
+    let kws_want: Vec<Vec<i32>> = kws
+        .infer_batch_opts(&op(), &kws_images, 1, false)
+        .unwrap()
+        .into_iter()
+        .map(|r| r.logits)
+        .collect();
+    let res_want: Vec<Vec<i32>> = resnet
+        .infer_batch_opts(&op(), &res_images, 1, false)
+        .unwrap()
+        .into_iter()
+        .map(|r| r.logits)
+        .collect();
+    // warm the runtime so its one-time worker spawn is behind us, then
+    // pin the spawn counter across every overlapping call below
+    kws.infer_scheduled_on(
+        &op(),
+        &kws_images[..1],
+        Schedule::hybrid(4),
+        ExecRuntime::Global,
+    )
+    .unwrap();
+    let spawned_before = global().telemetry().spawned_threads;
+    std::thread::scope(|s| {
+        let submit = |d: &marsellus::coordinator::Deployment<'_>,
+                      images: &[Vec<i32>],
+                      want: &[Vec<i32>],
+                      sched: Schedule,
+                      tag: &str| {
+            for round in 0..3 {
+                let got: Vec<Vec<i32>> = d
+                    .infer_scheduled_on(
+                        &op(),
+                        images,
+                        sched,
+                        ExecRuntime::Global,
+                    )
+                    .unwrap()
+                    .into_iter()
+                    .map(|r| r.logits)
+                    .collect();
+                assert_eq!(
+                    got, want,
+                    "{tag} round {round} diverged under concurrent serving"
+                );
+            }
+        };
+        s.spawn(|| {
+            submit(&kws, &kws_images, &kws_want, Schedule::hybrid(4), "kws")
+        });
+        s.spawn(|| {
+            submit(
+                &resnet,
+                &res_images,
+                &res_want,
+                Schedule::batch(4),
+                "resnet20",
+            )
+        });
+    });
+    let after = global().telemetry();
+    assert_eq!(
+        after.spawned_threads, spawned_before,
+        "overlapping serving calls provisioned threads: {after:?}"
+    );
+}
+
+/// The provisioning telemetry the refactor exists for: after the first
+/// warming call, repeated serving calls spawn **zero** new threads —
+/// the worker fleet is a process-lifetime fixture, not a per-call cost.
+#[test]
+fn repeated_calls_spawn_no_threads() {
+    let coord = coordinator();
+    let d = coord
+        .deploy(&NetworkSpec::new("kws", PrecisionConfig::Mixed, 13))
+        .unwrap();
+    let mut rng = Rng::new(63);
+    let images: Vec<Vec<i32>> =
+        (0..4).map(|_| d.random_input(&mut rng)).collect();
+    // first call may lazily spawn the fleet
+    d.infer_scheduled_on(
+        &op(),
+        &images,
+        Schedule::batch(4),
+        ExecRuntime::Global,
+    )
+    .unwrap();
+    let spawned = global().telemetry().spawned_threads;
+    let jobs_before = global().telemetry().jobs;
+    for sched in [
+        Schedule::batch(4),
+        Schedule::latency(4),
+        Schedule::hybrid(4),
+        Schedule::auto(16),
+    ] {
+        d.infer_scheduled_on(&op(), &images, sched, ExecRuntime::Global)
+            .unwrap();
+        let t = global().telemetry();
+        assert_eq!(
+            t.spawned_threads, spawned,
+            "{sched:?} spawned threads on a warm runtime: {t:?}"
+        );
+    }
+    // the calls did stream jobs through the shared fleet (>= because
+    // concurrently running tests may add their own)
+    if global().width() > 1 {
+        assert!(
+            global().telemetry().jobs > jobs_before,
+            "no jobs reached the global runtime"
+        );
+    }
+}

@@ -1,15 +1,17 @@
 //! Hybrid batch x tile scheduler acceptance (ISSUE 5): every schedule
-//! over the persistent `ExecPool` must be bitwise identical to the
-//! sequential per-call path across the full (batch, threads) matrix,
-//! including the signed-head KWS network and layers under the
+//! — now running on the process-wide global runtime by default, with
+//! the owned `ExecPool` as the A/B path — must be bitwise identical to
+//! the sequential per-call path across the full (batch, threads)
+//! matrix, including the signed-head KWS network and layers under the
 //! latency-tile MAC floor degrading gracefully inside the pool.
+//! `tests/global_runtime.rs` pins Owned-vs-Global parity explicitly.
 
 #![cfg(feature = "native")]
 
 use marsellus::coordinator::{Coordinator, Schedule, ScheduleMode};
 use marsellus::dnn::{NetworkSpec, PrecisionConfig};
 use marsellus::power::OperatingPoint;
-use marsellus::runtime::{Runtime, LATENCY_TILE_MIN_MACS};
+use marsellus::runtime::{ExecRuntime, Runtime, LATENCY_TILE_MIN_MACS};
 use marsellus::util::Rng;
 
 fn coordinator() -> Coordinator {
@@ -181,9 +183,10 @@ fn presets_equal_their_schedules() {
     assert_eq!(lat.logits, respawn.logits, "pooled vs respawn tiler");
 }
 
-/// Pool telemetry through `profile_scheduled`: one provisioning of
-/// `threads - 1` workers serves many per-layer jobs, and the per-layer
-/// split now carries the activation-packing share.
+/// Pool telemetry through `profile_scheduled_on`: the owned A/B pool
+/// provisions `threads - 1` workers for many per-layer jobs, the global
+/// runtime spawns nothing per call, and the per-layer split carries the
+/// activation-packing share.
 #[test]
 fn profile_reports_pool_telemetry_and_pack_split() {
     let coord = coordinator();
@@ -192,7 +195,9 @@ fn profile_reports_pool_telemetry_and_pack_split() {
         .unwrap();
     let mut rng = Rng::new(53);
     let image = d.random_input(&mut rng);
-    let (split, pool) = d.profile_scheduled(&image, 4).unwrap();
+    // owned pool: provisioning is per call and visible in the telemetry
+    let (split, pool) =
+        d.profile_scheduled_on(&image, 4, ExecRuntime::Owned).unwrap();
     assert_eq!(split.len(), d.layers().len());
     assert!(pool.width >= 2, "pool collapsed: {pool:?}");
     assert_eq!(pool.spawned_threads, pool.width - 1);
@@ -215,6 +220,22 @@ fn profile_reports_pool_telemetry_and_pack_split() {
     assert_eq!(seq_pool.spawned_threads, 0);
     assert_eq!(seq_pool.jobs, 0);
     assert!(seq_split.iter().map(|l| l.pack_us).sum::<f64>() > 0.0);
+    // global runtime: warm it once, then repeated profiling calls must
+    // not provision any thread — jobs stream onto the shared workers
+    let _ = d
+        .profile_scheduled_on(&image, 4, ExecRuntime::Global)
+        .unwrap();
+    let (g_split, g_pool) = d
+        .profile_scheduled_on(&image, 4, ExecRuntime::Global)
+        .unwrap();
+    assert_eq!(g_split.len(), d.layers().len());
+    assert_eq!(
+        g_pool.spawned_threads, 0,
+        "global runtime spawned per call: {g_pool:?}"
+    );
+    if g_pool.width > 1 {
+        assert!(g_pool.jobs >= 2, "{g_pool:?}");
+    }
 }
 
 /// Degenerate schedules are serviced, not errors: empty batches are a

@@ -3,12 +3,12 @@
 //! regardless of batch size or worker-thread count (batch=1 vs batch=8
 //! on the same spec), and the precompiled-plan parallel path must be
 //! bitwise identical to sequential per-call execution across 1/4/16
-//! worker threads. The deprecated `Coordinator::*_resnet20` wrappers are
-//! pinned to the handle path they delegate to.
+//! worker threads. The presets (`infer_batch`, `profile`) are pinned to
+//! the one `infer_scheduled` path they narrow to.
 
 #![cfg(feature = "native")]
 
-use marsellus::coordinator::Coordinator;
+use marsellus::coordinator::{Coordinator, Schedule};
 use marsellus::dnn::{NetworkSpec, PrecisionConfig};
 use marsellus::power::OperatingPoint;
 use marsellus::runtime::Runtime;
@@ -165,30 +165,26 @@ fn empty_batch_is_ok() {
     assert!(out.is_empty());
 }
 
-/// The deprecated `Coordinator::{infer_batch, infer_resnet20}` wrappers
-/// stay bitwise equal to the handle API they delegate to.
+/// The presets stay pinned to the one serving path they narrow to:
+/// `infer_batch(threads)` equals `infer_scheduled(Schedule::batch)`,
+/// the single-input `infer` agrees with both, and `profile` reports one
+/// split per layer of the deployed schedule.
 #[test]
-#[allow(deprecated)]
-fn legacy_wrappers_match_deployment_api() {
+fn presets_narrow_to_infer_scheduled() {
     let coord = coordinator();
     let op = OperatingPoint::at_vdd(0.8);
     let d = coord.deploy(&spec(PrecisionConfig::Mixed, 3)).unwrap();
     let mut rng = Rng::new(15);
     let images: Vec<Vec<i32>> =
         (0..2).map(|_| d.random_input(&mut rng)).collect();
-    let new = d.infer_batch(&op, &images, 2).unwrap();
-    let old = coord
-        .infer_batch(PrecisionConfig::Mixed, &op, &images, 3, 2)
-        .unwrap();
-    for (a, b) in new.iter().zip(&old) {
+    let preset = d.infer_batch(&op, &images, 2).unwrap();
+    let scheduled =
+        d.infer_scheduled(&op, &images, Schedule::batch(2)).unwrap();
+    for (a, b) in preset.iter().zip(&scheduled) {
         assert_eq!(a.logits, b.logits);
     }
-    let solo = coord
-        .infer_resnet20(PrecisionConfig::Mixed, &op, &images[0], 3, &[])
-        .unwrap();
-    assert_eq!(solo.logits, new[0].logits);
-    let split = coord
-        .profile_resnet20(PrecisionConfig::Mixed, &images[0], 3)
-        .unwrap();
+    let solo = d.infer(&op, &images[0]).unwrap();
+    assert_eq!(solo.logits, preset[0].logits);
+    let split = d.profile(&images[0]).unwrap();
     assert_eq!(split.len(), d.layers().len());
 }
