@@ -6,8 +6,9 @@ to ``ci/BENCH_history.jsonl`` — commit, mode, and the machine-independent
 ratios from every gated section: throughput (``speedup_planned`` /
 ``speedup_parallel`` plus raw img/s context), single-image latency
 (``speedup_tile`` plus ``latency_*`` ms/thread context), the hybrid
-scheduler, the autotuner, and the global runtime
-(``reuse_vs_provision`` / ``concurrent_vs_serial``). The history
+scheduler, the autotuner, the global runtime
+(``reuse_vs_provision`` / ``concurrent_vs_serial``), and the serving
+gateway (``gateway_vs_direct`` / ``fair_p99_ratio``). The history
 turns ``check_bench.py``'s >20% gate into a *trajectory* check: with
 ``--history``, the gate compares against the median of the recent
 entries instead of a single frozen point, so a slowly-eroding hot path
@@ -70,6 +71,15 @@ RECORDED = {
         "serial_img_s": "global_serial_img_s",
         "concurrent_img_s": "global_concurrent_img_s",
         "threads": "global_threads",
+    },
+    "gateway": {
+        "gateway_vs_direct": "gateway_vs_direct",
+        "fair_p99_ratio": "fair_p99_ratio",
+        "direct_ms": "gateway_direct_ms",
+        "gateway_ms": "gateway_best_ms",
+        "a_p99_us": "gateway_a_p99_us",
+        "b_p99_us": "gateway_b_p99_us",
+        "threads": "gateway_threads",
     },
 }
 

@@ -7,9 +7,12 @@ appended by ``bench_history.py``) and writes two artifacts:
 * ``bench_trend.md`` — a table view of the recent history plus a
   min/median/latest summary per gated ratio, readable in any terminal
   or PR comment;
-* ``bench_trend.html`` — small-multiple line charts (one per
-  ``speedup_*`` ratio, single series each, shared x axis of commits) so
-  the trajectories ``check_bench.py`` gates are visible at a glance.
+* ``bench_trend.html`` — small-multiple line charts (one per recorded
+  ratio, single series each, shared x axis of commits) so the
+  trajectories ``check_bench.py`` gates are visible at a glance.
+  Ratios the history records beyond the handcrafted ``SERIES`` list
+  are discovered and rendered with a generic title, so a newly gated
+  section is never silently dropped from the page.
   Self-contained: no external assets, light/dark via
   ``prefers-color-scheme``.
 
@@ -33,7 +36,45 @@ SERIES = (
     ("tuned_vs_heuristic", "tuned: autotuned vs heuristic config"),
     ("reuse_vs_provision", "global: shared fleet vs per-call pool"),
     ("concurrent_vs_serial", "global: 2 tenants concurrent vs serial"),
+    ("gateway_vs_direct", "gateway: via gateway vs direct calls"),
+    ("fair_p99_ratio", "gateway: 2-tenant p99 fairness"),
 )
+
+# Machine-dependent context keys recorded for reading the history, not
+# charted: anything dimensioned (ms / us / img_s), thread counts, and
+# the row identity fields.
+CONTEXT_SUFFIXES = ("_ms", "_us", "_img_s", "_threads", "_cutover")
+CONTEXT_KEYS = {"commit", "mode", "threads"}
+
+
+def discovered_series(rows):
+    """Ratio keys present in the history that SERIES has no entry for.
+
+    A newly gated bench section starts rendering (with a generic title)
+    the moment bench_history.py records its ratio — the page can never
+    silently drop a trajectory because this file lacks a handcrafted
+    template for it.
+    """
+    known = {k for k, _ in SERIES}
+    found = []
+    for r in rows:
+        for k, v in r.items():
+            if (
+                k in known
+                or k in CONTEXT_KEYS
+                or k.endswith(CONTEXT_SUFFIXES)
+                or not isinstance(v, (int, float))
+                or isinstance(v, bool)
+            ):
+                continue
+            known.add(k)
+            found.append((k, f"{k} (recorded ratio)"))
+    return sorted(found)
+
+
+def all_series(rows):
+    """SERIES plus any ratios the history records beyond it."""
+    return tuple(SERIES) + tuple(discovered_series(rows))
 
 # How many trailing history rows the table shows.
 TABLE_ROWS = 20
@@ -189,7 +230,7 @@ def chart_svg(rows, key, title):
 
 def render_html(rows):
     figs = []
-    for key, title in SERIES:
+    for key, title in all_series(rows):
         svg = chart_svg(rows, key, title)
         if svg:
             figs.append(
@@ -212,7 +253,7 @@ def render_html(rows):
 
 def render_markdown(rows):
     lines = ["# Bench trajectory", ""]
-    keys = [k for k, _ in SERIES if values_of(rows, k)]
+    keys = [k for k, _ in all_series(rows) if values_of(rows, k)]
     if not keys:
         lines.append("_no recorded history yet_")
         return "\n".join(lines) + "\n"

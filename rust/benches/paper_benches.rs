@@ -678,6 +678,229 @@ fn global_bench(smoke: bool) -> GlobalRt {
     }
 }
 
+/// Serving-gateway measurements: the same 2-tenant mixed-size workload
+/// served through the admission gateway vs called directly on the
+/// deployment API (logits asserted bitwise equal), plus each tenant's
+/// exact p99 latency under interleaved sustained load.
+struct GatewayBench {
+    threads: usize,
+    images: usize,
+    iters: u32,
+    direct_ms: f64,
+    gateway_ms: f64,
+    a_p99_us: f64,
+    b_p99_us: f64,
+}
+
+impl GatewayBench {
+    /// Direct-call vs through-the-gateway wall clock for the identical
+    /// workload — the admission/dispatch overhead. Gated >= 0.9 (exact,
+    /// no extra tolerance) so the gateway can never cost more than 10%
+    /// of the serving path it fronts.
+    fn gateway_vs_direct(&self) -> f64 {
+        self.direct_ms / self.gateway_ms
+    }
+
+    /// min/max of the two tenants' p99 latencies under interleaved
+    /// equal-priority load — 1.0 is perfectly fair, small values mean
+    /// one tenant starves. Computed from exact per-ticket latencies
+    /// (`Completed::queued + service`), not the telemetry histogram's
+    /// log2 buckets, so the ratio is not quantized to powers of two.
+    fn fair_p99_ratio(&self) -> f64 {
+        let (lo, hi) = if self.a_p99_us <= self.b_p99_us {
+            (self.a_p99_us, self.b_p99_us)
+        } else {
+            (self.b_p99_us, self.a_p99_us)
+        };
+        if hi <= 0.0 {
+            return 1.0;
+        }
+        lo / hi
+    }
+
+    fn to_json(&self) -> String {
+        format!(
+            " {{\n  \"threads\": {},\n  \"images\": {},\n  \
+             \"iters\": {},\n  \"direct_ms\": {:.3},\n  \
+             \"gateway_ms\": {:.3},\n  \"a_p99_us\": {:.1},\n  \
+             \"b_p99_us\": {:.1},\n  \"gateway_vs_direct\": {:.3},\n  \
+             \"fair_p99_ratio\": {:.3}\n }}",
+            self.threads,
+            self.images,
+            self.iters,
+            self.direct_ms,
+            self.gateway_ms,
+            self.a_p99_us,
+            self.b_p99_us,
+            self.gateway_vs_direct(),
+            self.fair_p99_ratio()
+        )
+    }
+}
+
+/// Exact quantile from raw per-ticket latency samples.
+fn quantile(samples: &mut [f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((samples.len() as f64 * q).ceil() as usize)
+        .clamp(1, samples.len())
+        - 1;
+    samples[idx]
+}
+
+/// Measure the serving gateway: two tenants submit an interleaved
+/// mixed-size workload (`interactive`: single-image ResNet-20,
+/// `bulk`: 4-image KWS batches, equal priority) through the gateway
+/// and directly on the deployment API. Asserts the gateway's logits
+/// bitwise equal to the direct path's.
+fn gateway_bench(smoke: bool) -> GatewayBench {
+    use marsellus::coordinator::Coordinator;
+    use marsellus::dnn::{NetworkSpec, PrecisionConfig};
+    use marsellus::gateway::{
+        pick_schedule, Gateway, GatewayConfig, Priority,
+    };
+    use marsellus::power::OperatingPoint;
+    use marsellus::runtime::ExecRuntime;
+    use marsellus::util::Rng;
+    use std::sync::Arc;
+
+    let dir = marsellus::runtime::Runtime::resolve_artifacts_dir(None);
+    let coord =
+        Arc::new(Coordinator::new(dir).expect("coordinator"));
+    let op = OperatingPoint::at_vdd(0.8);
+    let threads = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(4);
+    let iters = if smoke { 3 } else { 8 };
+    let per_tenant = if smoke { 4 } else { 6 };
+
+    let a_spec = NetworkSpec::new("resnet20", PrecisionConfig::Mixed, 42);
+    let b_spec = NetworkSpec::new("kws", PrecisionConfig::Mixed, 7);
+    let resnet = coord.deploy(&a_spec).expect("deploy resnet20");
+    let kws = coord.deploy(&b_spec).expect("deploy kws");
+    let mut rng = Rng::new(0x6A7E);
+    // interleaved a,b,a,b… — (tenant, spec, images) per request
+    let workload: Vec<(&str, &NetworkSpec, Vec<Vec<i32>>)> = (0
+        ..per_tenant)
+        .flat_map(|_| {
+            [
+                ("interactive", &a_spec, vec![resnet
+                    .random_input(&mut rng)]),
+                (
+                    "bulk",
+                    &b_spec,
+                    (0..4).map(|_| kws.random_input(&mut rng)).collect(),
+                ),
+            ]
+        })
+        .collect();
+    let images: usize = workload.iter().map(|(_, _, i)| i.len()).sum();
+
+    let direct = |collect: bool| -> Vec<Vec<Vec<i32>>> {
+        let mut logits = Vec::new();
+        for (_, spec, imgs) in &workload {
+            let d = coord.deploy(spec).expect("deploy");
+            let out = d
+                .infer_scheduled_on(
+                    &op,
+                    imgs,
+                    pick_schedule(imgs.len(), threads),
+                    ExecRuntime::Global,
+                )
+                .expect("direct infer");
+            if collect {
+                logits
+                    .push(out.into_iter().map(|r| r.logits).collect());
+            }
+        }
+        logits
+    };
+    let gateway = Gateway::new(
+        coord.clone(),
+        GatewayConfig {
+            queue_depth: workload.len() * 2,
+            per_tenant_inflight: workload.len(),
+            default_deadline: None,
+            threads: 0,
+            starvation_bound: 4,
+        },
+    )
+    .expect("gateway");
+    let mut a_lat_us: Vec<f64> = Vec::new();
+    let mut b_lat_us: Vec<f64> = Vec::new();
+    let mut through = |collect: bool| -> Vec<Vec<Vec<i32>>> {
+        let tickets: Vec<_> = workload
+            .iter()
+            .map(|(tenant, spec, imgs)| {
+                (
+                    *tenant,
+                    gateway
+                        .submit(
+                            tenant,
+                            spec,
+                            &op,
+                            imgs.clone(),
+                            Priority::Normal,
+                            None,
+                        )
+                        .expect("admission"),
+                )
+            })
+            .collect();
+        let mut logits = Vec::new();
+        for (tenant, ticket) in tickets {
+            let done = ticket.wait().expect("gateway result");
+            let us =
+                (done.queued + done.service).as_secs_f64() * 1e6;
+            if tenant == "interactive" {
+                a_lat_us.push(us);
+            } else {
+                b_lat_us.push(us);
+            }
+            if collect {
+                logits.push(
+                    done.results
+                        .into_iter()
+                        .map(|r| r.logits)
+                        .collect(),
+                );
+            }
+        }
+        logits
+    };
+
+    // warm both paths and pin bitwise parity gateway <-> direct
+    let direct_logits = direct(true);
+    let gateway_logits = through(true);
+    assert_eq!(
+        direct_logits, gateway_logits,
+        "gateway and direct serving paths diverged"
+    );
+
+    let mut direct_ms = f64::INFINITY;
+    let mut gateway_ms = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        direct(false);
+        direct_ms = direct_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+        let t0 = Instant::now();
+        through(false);
+        gateway_ms = gateway_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+
+    GatewayBench {
+        threads,
+        images,
+        iters,
+        direct_ms,
+        gateway_ms,
+        a_p99_us: quantile(&mut a_lat_us, 0.99),
+        b_p99_us: quantile(&mut b_lat_us, 0.99),
+    }
+}
+
 fn write_json(
     path: &str,
     mode: &str,
@@ -688,6 +911,7 @@ fn write_json(
     hybrid: &Hybrid,
     tuned: &Tuned,
     global_rt: &GlobalRt,
+    gateway: &GatewayBench,
 ) {
     let resolved = resolve_out_path(path);
     let path = resolved.display().to_string();
@@ -707,12 +931,13 @@ fn write_json(
         "{{\n \"mode\": \"{mode}\",\n \"total_best_ms\": {total:.3},\n \
          \"throughput\":\n{},\n \"latency\":\n{},\n \
          \"hybrid\":\n{},\n \"tuned\":\n{},\n \"global\":\n{},\n \
-         \"benches\": [\n{}\n ]\n}}\n",
+         \"gateway\":\n{},\n \"benches\": [\n{}\n ]\n}}\n",
         throughput.to_json(),
         latency.to_json(),
         hybrid.to_json(),
         tuned.to_json(),
         global_rt.to_json(),
+        gateway.to_json(),
         rows.join(",\n")
     );
     if let Err(e) = std::fs::write(path, doc) {
@@ -894,6 +1119,27 @@ fn main() {
         glo.concurrent_vs_serial()
     );
 
+    // serving gateway: 2-tenant mixed-size workload, gateway vs direct
+    println!("\nserving gateway (2 tenants, interleaved, best of N)");
+    let gtw = gateway_bench(smoke);
+    println!(
+        "  direct calls    {:>8.2} ms/workload  ({} images, {} lanes)",
+        gtw.direct_ms, gtw.images, gtw.threads
+    );
+    println!(
+        "  via gateway     {:>8.2} ms/workload  ({:.2}x vs direct; \
+         gated >= 0.9)",
+        gtw.gateway_ms,
+        gtw.gateway_vs_direct()
+    );
+    println!(
+        "  tenant p99      {:>8.0} us (interactive) / {:.0} us (bulk), \
+         fairness {:.2}",
+        gtw.a_p99_us,
+        gtw.b_p99_us,
+        gtw.fair_p99_ratio()
+    );
+
     if let Some(path) = json_path {
         write_json(
             &path,
@@ -905,6 +1151,7 @@ fn main() {
             &hyb,
             &tun,
             &glo,
+            &gtw,
         );
     }
 

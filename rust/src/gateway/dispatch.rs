@@ -1,0 +1,343 @@
+//! The [`Gateway`]: admission at the front, a single dispatcher thread
+//! at the back, execution on the process-wide runtime.
+//!
+//! The dispatcher serializes *scheduling* (which request runs next, in
+//! (priority, deadline, arrival) order with aging), not *compute*: each
+//! dispatched request fans its schedule's jobs across the full global
+//! worker fleet, so the machine stays saturated while the gateway
+//! decides only the order. Workers stay owned by
+//! [`crate::runtime::global`] — serving a request spawns zero threads.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{Coordinator, InferenceResult};
+use crate::dnn::NetworkSpec;
+use crate::power::OperatingPoint;
+use crate::runtime::{global, ExecRuntime};
+
+use super::queue::{
+    pop_next, QueueState, ReplySlot, Request, Ticket,
+};
+use super::telemetry::GatewayTelemetry;
+use super::{pick_schedule, GatewayConfig, Overload, Priority};
+
+/// State shared between submitters and the dispatcher thread.
+///
+/// Lock order (when more than one is held): `state` is always taken
+/// first and released before `quotas` or the telemetry tenant map —
+/// no path holds two of them at once.
+struct Shared {
+    coord: Arc<Coordinator>,
+    cfg: GatewayConfig,
+    state: Mutex<QueueState>,
+    work: Condvar,
+    telemetry: GatewayTelemetry,
+    /// Per-tenant plan-cache byte quotas (absent tenant: unlimited).
+    quotas: Mutex<HashMap<String, usize>>,
+}
+
+/// The serving gateway — see the [module docs](crate::gateway).
+///
+/// Construction spawns the one dispatcher thread the gateway ever
+/// owns; requests execute on the global runtime. Dropping the gateway
+/// shuts it down: admission closes, the queue drains, the dispatcher
+/// joins.
+pub struct Gateway {
+    shared: Arc<Shared>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Spawn a gateway over `coord` with the given admission config.
+    pub fn new(
+        coord: Arc<Coordinator>,
+        cfg: GatewayConfig,
+    ) -> Result<Self> {
+        let shared = Arc::new(Shared {
+            coord,
+            cfg,
+            state: Mutex::new(QueueState::new()),
+            work: Condvar::new(),
+            telemetry: GatewayTelemetry::new(),
+            quotas: Mutex::new(HashMap::new()),
+        });
+        let dispatcher = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("marsellus-gateway".into())
+                .spawn(move || dispatch_loop(shared))?
+        };
+        Ok(Self { shared, dispatcher: Some(dispatcher) })
+    }
+
+    /// Submit one request: `images` through `spec` at `op`, scheduled
+    /// by `priority` and the optional relative `deadline` (falling back
+    /// to [`GatewayConfig::default_deadline`]). Returns a [`Ticket`]
+    /// when admitted, a typed [`Overload`] when a bound rejects it —
+    /// nothing ever queues past [`GatewayConfig::queue_depth`].
+    pub fn submit(
+        &self,
+        tenant: &str,
+        spec: &NetworkSpec,
+        op: &OperatingPoint,
+        images: Vec<Vec<i32>>,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket, Overload> {
+        let telemetry = &self.shared.telemetry;
+        telemetry.note_submitted();
+        let mut state = self.shared.state.lock().unwrap();
+        if state.shutdown {
+            drop(state);
+            telemetry.note_rejected_shutdown();
+            return Err(Overload::ShuttingDown);
+        }
+        if state.queue.len() >= self.shared.cfg.queue_depth {
+            drop(state);
+            telemetry.note_rejected_full(tenant);
+            return Err(Overload::QueueFull {
+                depth: self.shared.cfg.queue_depth,
+            });
+        }
+        let inflight = state.inflight.get(tenant).copied().unwrap_or(0);
+        if inflight >= self.shared.cfg.per_tenant_inflight {
+            drop(state);
+            telemetry.note_rejected_tenant(tenant);
+            return Err(Overload::TenantSaturated {
+                tenant: tenant.to_string(),
+                inflight,
+            });
+        }
+        let id = state.next_id;
+        state.next_id += 1;
+        *state.inflight.entry(tenant.to_string()).or_insert(0) += 1;
+        let now = Instant::now();
+        let deadline = deadline
+            .or(self.shared.cfg.default_deadline)
+            .map(|d| now + d);
+        let slot = ReplySlot::new();
+        state.queue.push(Request {
+            id,
+            tenant: tenant.to_string(),
+            spec: spec.clone(),
+            op: *op,
+            images,
+            priority,
+            submitted: now,
+            deadline,
+            reply: slot.clone(),
+        });
+        drop(state);
+        telemetry.note_admitted(tenant, spec);
+        self.shared.work.notify_all();
+        Ok(Ticket { id, slot })
+    }
+
+    /// Cap `tenant`'s resident plan-cache bytes: a dispatched request
+    /// whose tenant's deployed specs hold more resident plan bytes than
+    /// the quota fails loudly (through its ticket) instead of silently
+    /// crowding other tenants out of the LRU.
+    pub fn set_tenant_quota(&self, tenant: &str, bytes: usize) {
+        self.shared
+            .quotas
+            .lock()
+            .unwrap()
+            .insert(tenant.to_string(), bytes);
+    }
+
+    /// Deploy `spec` (warming the plan cache) and pin its plan so LRU
+    /// eviction may not touch it — the latency-tier residency
+    /// guarantee. Fails loudly when pins alone would exceed the cache
+    /// budget (`Runtime::pin_plan`).
+    pub fn pin(&self, spec: &NetworkSpec) -> Result<()> {
+        self.shared.coord.deploy(spec)?;
+        self.shared.coord.runtime.pin_plan(spec)
+    }
+
+    /// Stop popping requests (admission stays open) — deterministic
+    /// backlog for tests and maintenance windows.
+    pub fn pause(&self) {
+        self.shared.state.lock().unwrap().paused = true;
+    }
+
+    /// Resume dispatching after [`Self::pause`].
+    pub fn resume(&self) {
+        self.shared.state.lock().unwrap().paused = false;
+        self.shared.work.notify_all();
+    }
+
+    /// Requests currently waiting in the admission queue.
+    pub fn queued(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// Gateway telemetry: counters + per-tenant latency histograms.
+    pub fn telemetry(&self) -> &GatewayTelemetry {
+        &self.shared.telemetry
+    }
+
+    /// The coordinator this gateway serves over.
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.shared.coord
+    }
+
+    /// Close admission, drain the queue (paused or not), and join the
+    /// dispatcher. Every admitted ticket still receives its result.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work.notify_all();
+        if let Some(handle) = self.dispatcher.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The dispatcher body: wait for work, pop by (priority, deadline,
+/// arrival) with aging, serve outside the lock, repeat. Exits when
+/// shutdown is flagged and the queue is drained — a paused gateway
+/// still drains on shutdown so no ticket waits forever.
+fn dispatch_loop(shared: Arc<Shared>) {
+    loop {
+        let req = {
+            let mut state = shared.state.lock().unwrap();
+            loop {
+                let can_pop = !state.queue.is_empty()
+                    && (!state.paused || state.shutdown);
+                if can_pop {
+                    break pop_next(
+                        &mut state,
+                        shared.cfg.starvation_bound,
+                    )
+                    .expect("queue checked non-empty");
+                }
+                if state.shutdown {
+                    return;
+                }
+                state = shared.work.wait(state).unwrap();
+            }
+        };
+        serve(&shared, req);
+    }
+}
+
+/// Serve one popped request and deliver its result through the reply
+/// slot. Panics inside inference are caught and delivered as errors —
+/// a poisoned request must never hang its waiter or kill the
+/// dispatcher.
+fn serve(shared: &Shared, req: Request) {
+    let queued = req.submitted.elapsed();
+    let t0 = Instant::now();
+    let outcome = std::panic::catch_unwind(
+        std::panic::AssertUnwindSafe(|| run_request(shared, &req)),
+    );
+    let service = t0.elapsed();
+    {
+        let mut state = shared.state.lock().unwrap();
+        if let Some(n) = state.inflight.get_mut(&req.tenant) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                state.inflight.remove(&req.tenant);
+            }
+        }
+    }
+    let result = match outcome {
+        Ok(Ok(results)) => {
+            let deadline_missed =
+                req.deadline.is_some_and(|d| Instant::now() > d);
+            let latency_us = (queued + service).as_micros() as u64;
+            let finish_seq = shared.telemetry.note_completed(
+                &req.tenant,
+                latency_us,
+                deadline_missed,
+            );
+            Ok(super::Completed {
+                results,
+                queued,
+                service,
+                deadline_missed,
+                finish_seq,
+            })
+        }
+        Ok(Err(e)) => {
+            shared.telemetry.note_failed();
+            Err(e)
+        }
+        Err(panic) => {
+            shared.telemetry.note_failed();
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            Err(anyhow!(
+                "request {} ({} for tenant {:?}): inference panicked: \
+                 {msg}",
+                req.id,
+                req.spec,
+                req.tenant
+            ))
+        }
+    };
+    req.reply.fill(result);
+}
+
+/// Deploy (plan-cache hit after the first request per spec), enforce
+/// the tenant's byte quota, pick the schedule shape from the request
+/// size, and run on the global runtime.
+///
+/// Deploying per request — rather than caching `Deployment` handles in
+/// the dispatcher — is deliberate: a cached handle would hold the
+/// plan's `Arc` alive past LRU eviction and quietly void the byte
+/// bound that quotas and pins enforce. A cache hit costs one map
+/// lookup.
+fn run_request(
+    shared: &Shared,
+    req: &Request,
+) -> Result<Vec<InferenceResult>> {
+    let deployment = shared.coord.deploy(&req.spec)?;
+    if let Some(&quota) =
+        shared.quotas.lock().unwrap().get(&req.tenant)
+    {
+        let runtime = &shared.coord.runtime;
+        let resident: usize = shared
+            .telemetry
+            .tenant_specs(&req.tenant)
+            .iter()
+            .filter_map(|s| runtime.plan_bytes_of(s))
+            .sum();
+        if resident > quota {
+            bail!(
+                "tenant {:?} over plan-cache quota: {resident} resident \
+                 plan bytes > {quota} allowed (request {} for {}); \
+                 raise the quota or retire deployments",
+                req.tenant,
+                req.id,
+                req.spec
+            );
+        }
+    }
+    let width = if shared.cfg.threads > 0 {
+        shared.cfg.threads
+    } else {
+        global().width()
+    };
+    let sched = pick_schedule(req.images.len(), width);
+    deployment.infer_scheduled_on(
+        &req.op,
+        &req.images,
+        sched,
+        ExecRuntime::Global,
+    )
+}

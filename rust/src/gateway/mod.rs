@@ -1,0 +1,222 @@
+//! Multi-tenant serving gateway: admission control, per-tenant quotas
+//! and deadline/priority-aware scheduling over the deployment API.
+//!
+//! The compute half of the reproduction (plans, tuner, the process-wide
+//! work-stealing runtime) serves a batch as a blocking method call per
+//! caller; production traffic is many tenants submitting concurrent
+//! requests of mixed size. The gateway is the request front-end over
+//! that machinery — the orchestrator/telemetry split of heterogeneous
+//! serving clusters, kept **out** of the coordinator:
+//!
+//! * **Admission** ([`Gateway::submit`]) — a bounded queue
+//!   ([`GatewayConfig::queue_depth`]) with a per-tenant inflight cap
+//!   ([`GatewayConfig::per_tenant_inflight`]). A full queue or a
+//!   saturated tenant is rejected *at submit time* with a typed
+//!   [`Overload`] error instead of queueing unboundedly — backpressure,
+//!   not OOM. Admitted requests return a [`Ticket`] whose blocking
+//!   [`Ticket::wait`] delivers the result (no async runtime needed).
+//! * **Scheduling** — a single dispatcher thread pops the queue by
+//!   ([`Priority`], deadline, arrival) and picks the [`Schedule`] shape
+//!   per request ([`pick_schedule`]): small interactive requests run in
+//!   latency mode (conv tiles within the image), bulk requests as image
+//!   shards, the in-between as the hybrid — the same
+//!   `Deployment::infer_scheduled` machinery direct callers use.
+//!   Strict priority ordering is aged ([`GatewayConfig::starvation_bound`]):
+//!   every Nth pop takes the globally oldest request regardless of
+//!   priority, so low-priority starvation is bounded, not merely
+//!   unlikely.
+//! * **Execution** — requests run on the process-wide work-stealing
+//!   runtime ([`crate::runtime::global`]). The gateway only *schedules*;
+//!   it owns no workers and a served request spawns **zero** threads.
+//! * **Quotas** ([`Gateway::set_tenant_quota`]) — per-tenant plan-cache
+//!   byte budgets enforced at dispatch, plus plan pinning
+//!   ([`Gateway::pin`] / `Runtime::pin_plan`) so a hot tenant's plan is
+//!   never LRU-evicted mid-request.
+//! * **Telemetry** ([`telemetry::GatewayTelemetry`]) —
+//!   queued/admitted/rejected/deadline-missed counters and per-tenant
+//!   latency histograms (p50/p99), its own module rather than state
+//!   woven through the coordinator.
+//!
+//! Direct `Deployment` calls remain fully supported — the gateway is a
+//! front-end over the same bitwise-deterministic serving path, and its
+//! outputs are asserted bitwise equal to direct `infer_scheduled` calls
+//! in tests and benches.
+
+mod dispatch;
+mod queue;
+pub mod telemetry;
+
+use std::time::Duration;
+
+use crate::coordinator::Schedule;
+
+pub use dispatch::Gateway;
+pub use queue::{Completed, Ticket};
+
+/// Admission/scheduling knobs for a [`Gateway`].
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Maximum requests waiting in the admission queue; a submit beyond
+    /// this is rejected with [`Overload::QueueFull`].
+    pub queue_depth: usize,
+    /// Maximum admitted-but-not-completed requests per tenant; a submit
+    /// beyond this is rejected with [`Overload::TenantSaturated`].
+    pub per_tenant_inflight: usize,
+    /// Deadline applied to requests submitted without one (`None`:
+    /// no default — such requests sort after all deadlined ones).
+    pub default_deadline: Option<Duration>,
+    /// Worker lanes each dispatched request occupies on the global
+    /// runtime; `0` means the full fleet width.
+    pub threads: usize,
+    /// Anti-starvation aging: every Nth pop takes the globally oldest
+    /// request regardless of priority (`0`: strict priority order, no
+    /// aging).
+    pub starvation_bound: usize,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        Self {
+            queue_depth: 64,
+            per_tenant_inflight: 16,
+            default_deadline: None,
+            threads: 0,
+            starvation_bound: 4,
+        }
+    }
+}
+
+/// Typed admission rejection: the caller chose backpressure over
+/// unbounded queueing, and the variant says which bound fired.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Overload {
+    /// The bounded admission queue is at [`GatewayConfig::queue_depth`].
+    QueueFull {
+        /// The configured depth the queue is at.
+        depth: usize,
+    },
+    /// The tenant is at [`GatewayConfig::per_tenant_inflight`] admitted
+    /// requests.
+    TenantSaturated {
+        /// The saturated tenant.
+        tenant: String,
+        /// Its admitted-but-not-completed request count.
+        inflight: usize,
+    },
+    /// The gateway is shutting down and admits nothing new.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for Overload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Overload::QueueFull { depth } => write!(
+                f,
+                "admission queue full ({depth} queued); retry with \
+                 backoff or raise queue_depth"
+            ),
+            Overload::TenantSaturated { tenant, inflight } => write!(
+                f,
+                "tenant {tenant:?} saturated ({inflight} inflight); \
+                 wait for completions or raise per_tenant_inflight"
+            ),
+            Overload::ShuttingDown => {
+                write!(f, "gateway is shutting down")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Overload {}
+
+/// Dispatch priority of a request. Lower rank pops first; ties break by
+/// deadline (requests without one sort last), then arrival order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    /// Interactive traffic: pops before everything else.
+    High,
+    /// The default.
+    Normal,
+    /// Bulk/background traffic: pops last (aging still bounds its wait
+    /// — see [`GatewayConfig::starvation_bound`]).
+    Low,
+}
+
+impl Priority {
+    pub(crate) fn rank(self) -> u8 {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "high" => Ok(Priority::High),
+            "normal" => Ok(Priority::Normal),
+            "low" => Ok(Priority::Low),
+            other => anyhow::bail!(
+                "unknown priority {other:?} (known: high, normal, low)"
+            ),
+        }
+    }
+}
+
+/// The per-request schedule pick: a single image is pure latency mode
+/// (conv tiles within the image), a batch smaller than the lane width
+/// runs the hybrid (shards + tiled remainder), and a full-width-or-more
+/// batch runs as whole-image shards — mirroring where each mode wins in
+/// the bench matrix.
+pub fn pick_schedule(images: usize, width: usize) -> Schedule {
+    let w = width.max(1);
+    if images <= 1 {
+        Schedule::latency(w)
+    } else if images < w {
+        Schedule::hybrid(w)
+    } else {
+        Schedule::batch(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ScheduleMode;
+
+    #[test]
+    fn schedule_pick_matches_request_shape() {
+        assert_eq!(pick_schedule(1, 8).mode, ScheduleMode::Latency);
+        assert_eq!(pick_schedule(0, 8).mode, ScheduleMode::Latency);
+        assert_eq!(pick_schedule(3, 8).mode, ScheduleMode::Hybrid);
+        assert_eq!(pick_schedule(8, 8).mode, ScheduleMode::Batch);
+        assert_eq!(pick_schedule(17, 8).mode, ScheduleMode::Batch);
+        // degenerate width still produces a sane schedule
+        assert_eq!(pick_schedule(4, 0).threads, 1);
+    }
+
+    #[test]
+    fn priority_parses_and_ranks() {
+        assert_eq!("high".parse::<Priority>().unwrap(), Priority::High);
+        assert_eq!("low".parse::<Priority>().unwrap(), Priority::Low);
+        assert!("urgent".parse::<Priority>().is_err());
+        assert!(Priority::High.rank() < Priority::Normal.rank());
+        assert!(Priority::Normal.rank() < Priority::Low.rank());
+    }
+
+    #[test]
+    fn overload_displays_the_bound_that_fired() {
+        let e = Overload::QueueFull { depth: 4 };
+        assert!(e.to_string().contains("4 queued"));
+        let e = Overload::TenantSaturated {
+            tenant: "acme".into(),
+            inflight: 2,
+        };
+        assert!(e.to_string().contains("acme"));
+        assert!(e.to_string().contains("2 inflight"));
+    }
+}

@@ -1,0 +1,265 @@
+//! The admission queue: request records, deadline/priority ordering,
+//! and the blocking [`Ticket`] reply path.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::InferenceResult;
+use crate::dnn::NetworkSpec;
+use crate::power::OperatingPoint;
+
+use super::Priority;
+
+/// One admitted request waiting in (or popped from) the queue.
+pub(super) struct Request {
+    /// Arrival order: monotonically increasing admission id — the
+    /// aging/tie-break key.
+    pub id: u64,
+    pub tenant: String,
+    pub spec: NetworkSpec,
+    pub op: OperatingPoint,
+    pub images: Vec<Vec<i32>>,
+    pub priority: Priority,
+    pub submitted: Instant,
+    /// Absolute completion deadline, if any. A missed deadline is
+    /// *counted* (and flagged on the result), never dropped — partial
+    /// results beat silent loss for end-node workloads.
+    pub deadline: Option<Instant>,
+    pub reply: Arc<ReplySlot>,
+}
+
+/// The rendezvous between the dispatcher and a waiting caller.
+pub(super) struct ReplySlot {
+    result: Mutex<Option<Result<Completed>>>,
+    ready: Condvar,
+}
+
+impl ReplySlot {
+    pub(super) fn new() -> Arc<Self> {
+        Arc::new(Self {
+            result: Mutex::new(None),
+            ready: Condvar::new(),
+        })
+    }
+
+    /// Deliver the result and wake the waiter (dispatcher side).
+    pub(super) fn fill(&self, result: Result<Completed>) {
+        *self.result.lock().unwrap() = Some(result);
+        self.ready.notify_all();
+    }
+
+    fn take_blocking(&self) -> Result<Completed> {
+        let mut guard = self.result.lock().unwrap();
+        loop {
+            if let Some(result) = guard.take() {
+                return result;
+            }
+            guard = self.ready.wait(guard).unwrap();
+        }
+    }
+}
+
+/// Handle to one admitted request; [`Ticket::wait`] blocks until the
+/// dispatcher delivers the result. No async runtime involved — a plain
+/// condvar rendezvous, usable from any thread.
+pub struct Ticket {
+    pub(super) id: u64,
+    pub(super) slot: Arc<ReplySlot>,
+}
+
+impl Ticket {
+    /// The admission id of this request (arrival order).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the request completes (or fails) and return the
+    /// outcome. Consumes the ticket: one request, one result.
+    pub fn wait(self) -> Result<Completed> {
+        self.slot.take_blocking()
+    }
+}
+
+/// A finished request: per-image results plus serving metadata.
+pub struct Completed {
+    /// Per-image inference results, in submit order — bitwise identical
+    /// to a direct `Deployment::infer_scheduled` call on the same
+    /// images.
+    pub results: Vec<InferenceResult>,
+    /// Time spent waiting in the admission queue.
+    pub queued: Duration,
+    /// Time spent executing on the runtime.
+    pub service: Duration,
+    /// Whether completion happened after the request's deadline.
+    pub deadline_missed: bool,
+    /// Global completion order (1-based): the Kth request the gateway
+    /// finished — lets tests pin starvation bounds exactly.
+    pub finish_seq: u64,
+}
+
+/// Mutable queue state behind the gateway's single mutex.
+pub(super) struct QueueState {
+    pub queue: Vec<Request>,
+    /// Admitted-but-not-completed request count per tenant.
+    pub inflight: HashMap<String, usize>,
+    /// While paused the dispatcher pops nothing (tests/maintenance);
+    /// admission stays open.
+    pub paused: bool,
+    pub shutdown: bool,
+    pub next_id: u64,
+    /// Consecutive priority-ordered pops since the last aged pop — the
+    /// starvation-bound counter.
+    pub priority_pops: usize,
+}
+
+impl QueueState {
+    pub(super) fn new() -> Self {
+        Self {
+            queue: Vec::new(),
+            inflight: HashMap::new(),
+            paused: false,
+            shutdown: false,
+            next_id: 0,
+            priority_pops: 0,
+        }
+    }
+}
+
+/// Pop the next request: normally the (priority, deadline, arrival)
+/// minimum; every `starvation_bound`th pop instead takes the globally
+/// oldest request, so a steady high-priority stream cannot starve bulk
+/// traffic forever. Returns `None` on an empty queue.
+pub(super) fn pop_next(
+    state: &mut QueueState,
+    starvation_bound: usize,
+) -> Option<Request> {
+    if state.queue.is_empty() {
+        return None;
+    }
+    let aged = starvation_bound > 0
+        && state.priority_pops + 1 >= starvation_bound;
+    let idx = if aged {
+        state.priority_pops = 0;
+        // oldest admission id wins, priority ignored
+        state
+            .queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, r)| r.id)
+            .map(|(i, _)| i)
+            .expect("non-empty queue")
+    } else {
+        state.priority_pops += 1;
+        state
+            .queue
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.priority
+                    .rank()
+                    .cmp(&b.priority.rank())
+                    .then_with(|| cmp_deadline(a.deadline, b.deadline))
+                    .then_with(|| a.id.cmp(&b.id))
+            })
+            .map(|(i, _)| i)
+            .expect("non-empty queue")
+    };
+    Some(state.queue.swap_remove(idx))
+}
+
+/// Earlier deadlines first; requests without one sort after all
+/// deadlined requests.
+fn cmp_deadline(
+    a: Option<Instant>,
+    b: Option<Instant>,
+) -> std::cmp::Ordering {
+    match (a, b) {
+        (Some(a), Some(b)) => a.cmp(&b),
+        (Some(_), None) => std::cmp::Ordering::Less,
+        (None, Some(_)) => std::cmp::Ordering::Greater,
+        (None, None) => std::cmp::Ordering::Equal,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::PrecisionConfig;
+
+    fn req(
+        id: u64,
+        priority: Priority,
+        deadline_us: Option<u64>,
+        base: Instant,
+    ) -> Request {
+        Request {
+            id,
+            tenant: "t".into(),
+            spec: NetworkSpec::new("kws", PrecisionConfig::Mixed, 1),
+            op: OperatingPoint::at_vdd(0.8),
+            images: Vec::new(),
+            priority,
+            submitted: base,
+            deadline: deadline_us
+                .map(|us| base + Duration::from_micros(us)),
+            reply: ReplySlot::new(),
+        }
+    }
+
+    fn ids_in_pop_order(
+        mut state: QueueState,
+        starvation_bound: usize,
+    ) -> Vec<u64> {
+        let mut out = Vec::new();
+        while let Some(r) = pop_next(&mut state, starvation_bound) {
+            out.push(r.id);
+        }
+        out
+    }
+
+    #[test]
+    fn pops_by_priority_then_deadline_then_arrival() {
+        let base = Instant::now();
+        let mut state = QueueState::new();
+        state.queue.push(req(0, Priority::Low, None, base));
+        state.queue.push(req(1, Priority::Normal, Some(500), base));
+        state.queue.push(req(2, Priority::Normal, Some(100), base));
+        state.queue.push(req(3, Priority::Normal, None, base));
+        state.queue.push(req(4, Priority::High, None, base));
+        // strict order: high first, then normal by deadline (None
+        // last, ties by arrival), low last
+        assert_eq!(ids_in_pop_order(state, 0), vec![4, 2, 1, 3, 0]);
+    }
+
+    #[test]
+    fn aging_bounds_low_priority_wait() {
+        let base = Instant::now();
+        let mut state = QueueState::new();
+        // oldest request is low priority; seven high follow
+        state.queue.push(req(0, Priority::Low, None, base));
+        for id in 1..8 {
+            state.queue.push(req(id, Priority::High, None, base));
+        }
+        // every 4th pop takes the oldest: the low request lands 4th
+        let order = ids_in_pop_order(state, 4);
+        assert_eq!(order[3], 0, "aged pop must take the oldest: {order:?}");
+        // without aging it would be dead last
+        let base = Instant::now();
+        let mut state = QueueState::new();
+        state.queue.push(req(0, Priority::Low, None, base));
+        for id in 1..8 {
+            state.queue.push(req(id, Priority::High, None, base));
+        }
+        assert_eq!(*ids_in_pop_order(state, 0).last().unwrap(), 0);
+    }
+
+    #[test]
+    fn empty_queue_pops_nothing() {
+        let mut state = QueueState::new();
+        assert!(pop_next(&mut state, 4).is_none());
+        assert!(pop_next(&mut state, 0).is_none());
+    }
+}

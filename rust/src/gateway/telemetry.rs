@@ -1,0 +1,333 @@
+//! Gateway telemetry: admission counters and per-tenant latency
+//! histograms, kept out of the coordinator (the orchestrator/telemetry
+//! split — serving metrics are their own module, not state woven
+//! through the compute path).
+//!
+//! Counters are lock-free atomics bumped on the submit/dispatch path;
+//! per-tenant state (histograms, served specs) sits behind one mutex
+//! touched once per admission and once per completion. Reading is
+//! always through an immutable [`GatewaySnapshot`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::dnn::NetworkSpec;
+
+/// Log2-bucketed latency histogram: bucket `i` holds samples in
+/// `[2^i, 2^(i+1))` microseconds, 40 buckets (~18 minutes) — enough
+/// range for queue + service latency without unbounded memory.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: [u64; 40],
+    count: u64,
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self { buckets: [0; 40], count: 0 }
+    }
+
+    /// Record one latency sample in microseconds.
+    pub fn record(&mut self, us: u64) {
+        let idx = (63 - us.max(1).leading_zeros() as usize).min(39);
+        self.buckets[idx] += 1;
+        self.count += 1;
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Upper bound (µs) of the bucket holding the q-quantile sample
+    /// (0 when empty). Log2 buckets: quantiles are order-of-magnitude
+    /// reads, exact percentiles come from the caller's own samples.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil()
+            as u64)
+            .max(1);
+        let mut seen = 0;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return (1u64 << (i + 1)) - 1;
+            }
+        }
+        (1u64 << 40) - 1
+    }
+
+    /// Median bucket upper bound (µs).
+    pub fn p50_us(&self) -> u64 {
+        self.quantile_us(0.50)
+    }
+
+    /// 99th-percentile bucket upper bound (µs).
+    pub fn p99_us(&self) -> u64 {
+        self.quantile_us(0.99)
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-tenant mutable state behind the telemetry mutex.
+#[derive(Debug, Default)]
+struct TenantStats {
+    admitted: u64,
+    completed: u64,
+    rejected: u64,
+    deadline_missed: u64,
+    /// Distinct specs this tenant has served through the gateway — the
+    /// quota-accounting set (a plan-cache "tenant share" is the bytes
+    /// of the specs it deploys).
+    specs: Vec<NetworkSpec>,
+    /// End-to-end latency (queue + service), microseconds.
+    hist: LatencyHistogram,
+}
+
+/// Gateway-wide counters plus per-tenant stats.
+pub struct GatewayTelemetry {
+    submitted: AtomicU64,
+    admitted: AtomicU64,
+    rejected_full: AtomicU64,
+    rejected_tenant: AtomicU64,
+    rejected_shutdown: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    deadline_missed: AtomicU64,
+    finish_seq: AtomicU64,
+    tenants: Mutex<HashMap<String, TenantStats>>,
+}
+
+impl GatewayTelemetry {
+    /// Fresh telemetry, all zeros.
+    pub fn new() -> Self {
+        Self {
+            submitted: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            rejected_full: AtomicU64::new(0),
+            rejected_tenant: AtomicU64::new(0),
+            rejected_shutdown: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            deadline_missed: AtomicU64::new(0),
+            finish_seq: AtomicU64::new(0),
+            tenants: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub(super) fn note_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn note_rejected_full(&self, tenant: &str) {
+        self.rejected_full.fetch_add(1, Ordering::Relaxed);
+        self.tenant_mut(tenant, |t| t.rejected += 1);
+    }
+
+    pub(super) fn note_rejected_tenant(&self, tenant: &str) {
+        self.rejected_tenant.fetch_add(1, Ordering::Relaxed);
+        self.tenant_mut(tenant, |t| t.rejected += 1);
+    }
+
+    pub(super) fn note_rejected_shutdown(&self) {
+        self.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn note_admitted(&self, tenant: &str, spec: &NetworkSpec) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        self.tenant_mut(tenant, |t| {
+            t.admitted += 1;
+            if !t.specs.contains(spec) {
+                t.specs.push(spec.clone());
+            }
+        });
+    }
+
+    pub(super) fn note_completed(
+        &self,
+        tenant: &str,
+        latency_us: u64,
+        missed_deadline: bool,
+    ) -> u64 {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        if missed_deadline {
+            self.deadline_missed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.tenant_mut(tenant, |t| {
+            t.completed += 1;
+            if missed_deadline {
+                t.deadline_missed += 1;
+            }
+            t.hist.record(latency_us);
+        });
+        self.finish_seq.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    pub(super) fn note_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Distinct specs `tenant` has served — the byte-quota accounting
+    /// set ([`crate::gateway::Gateway::set_tenant_quota`]).
+    pub fn tenant_specs(&self, tenant: &str) -> Vec<NetworkSpec> {
+        self.tenants
+            .lock()
+            .unwrap()
+            .get(tenant)
+            .map(|t| t.specs.clone())
+            .unwrap_or_default()
+    }
+
+    fn tenant_mut(&self, tenant: &str, f: impl FnOnce(&mut TenantStats)) {
+        let mut tenants = self.tenants.lock().unwrap();
+        f(tenants.entry(tenant.to_string()).or_default());
+    }
+
+    /// An immutable point-in-time view of all counters and tenants.
+    pub fn snapshot(&self) -> GatewaySnapshot {
+        let tenants = self.tenants.lock().unwrap();
+        let mut rows: Vec<TenantSnapshot> = tenants
+            .iter()
+            .map(|(name, t)| TenantSnapshot {
+                tenant: name.clone(),
+                admitted: t.admitted,
+                completed: t.completed,
+                rejected: t.rejected,
+                deadline_missed: t.deadline_missed,
+                p50_us: t.hist.p50_us(),
+                p99_us: t.hist.p99_us(),
+            })
+            .collect();
+        rows.sort_by(|a, b| a.tenant.cmp(&b.tenant));
+        GatewaySnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected_full: self.rejected_full.load(Ordering::Relaxed),
+            rejected_tenant: self.rejected_tenant.load(Ordering::Relaxed),
+            rejected_shutdown: self
+                .rejected_shutdown
+                .load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
+            tenants: rows,
+        }
+    }
+}
+
+impl Default for GatewayTelemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Point-in-time gateway counters (see [`GatewayTelemetry::snapshot`]).
+#[derive(Debug, Clone)]
+pub struct GatewaySnapshot {
+    /// Submit attempts, admitted or not.
+    pub submitted: u64,
+    /// Requests accepted into the queue.
+    pub admitted: u64,
+    /// Rejections from a full admission queue.
+    pub rejected_full: u64,
+    /// Rejections from a saturated tenant.
+    pub rejected_tenant: u64,
+    /// Rejections during shutdown.
+    pub rejected_shutdown: u64,
+    /// Requests completed successfully.
+    pub completed: u64,
+    /// Requests that failed during dispatch (deploy/quota/inference
+    /// error).
+    pub failed: u64,
+    /// Completions after their deadline (still served and counted).
+    pub deadline_missed: u64,
+    /// Per-tenant rows, sorted by tenant name.
+    pub tenants: Vec<TenantSnapshot>,
+}
+
+impl GatewaySnapshot {
+    /// Total rejections across all bounds.
+    pub fn rejected(&self) -> u64 {
+        self.rejected_full + self.rejected_tenant + self.rejected_shutdown
+    }
+}
+
+/// One tenant's row in a [`GatewaySnapshot`].
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    /// Tenant name as submitted.
+    pub tenant: String,
+    /// Requests admitted for this tenant.
+    pub admitted: u64,
+    /// Requests completed for this tenant.
+    pub completed: u64,
+    /// Requests rejected for this tenant (queue or tenant bound).
+    pub rejected: u64,
+    /// Completions past their deadline.
+    pub deadline_missed: u64,
+    /// Median end-to-end latency (µs, log2-bucket upper bound).
+    pub p50_us: u64,
+    /// 99th-percentile end-to-end latency (µs, log2-bucket upper
+    /// bound).
+    pub p99_us: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::PrecisionConfig;
+
+    #[test]
+    fn histogram_buckets_are_log2_and_quantiles_monotone() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.p50_us(), 0);
+        for us in [1u64, 2, 3, 900, 1000, 1100, 64_000] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 7);
+        // p50 lands in the ~1ms cluster, p99 at the 64ms outlier
+        assert!(h.p50_us() >= 511 && h.p50_us() <= 2047, "{}", h.p50_us());
+        assert!(h.p99_us() >= 64_000, "{}", h.p99_us());
+        assert!(h.p50_us() <= h.p99_us());
+        // zero records as the first bucket, not a panic
+        h.record(0);
+        assert_eq!(h.count(), 8);
+    }
+
+    #[test]
+    fn snapshot_aggregates_per_tenant() {
+        let t = GatewayTelemetry::new();
+        let spec = NetworkSpec::new("kws", PrecisionConfig::Mixed, 1);
+        t.note_submitted();
+        t.note_admitted("b", &spec);
+        t.note_submitted();
+        t.note_admitted("a", &spec);
+        t.note_submitted();
+        t.note_rejected_full("a");
+        assert_eq!(t.note_completed("a", 100, false), 1);
+        assert_eq!(t.note_completed("b", 5000, true), 2);
+        let snap = t.snapshot();
+        assert_eq!(snap.submitted, 3);
+        assert_eq!(snap.admitted, 2);
+        assert_eq!(snap.rejected(), 1);
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.deadline_missed, 1);
+        // rows sorted by tenant name
+        assert_eq!(snap.tenants.len(), 2);
+        assert_eq!(snap.tenants[0].tenant, "a");
+        assert_eq!(snap.tenants[0].rejected, 1);
+        assert_eq!(snap.tenants[1].deadline_missed, 1);
+        assert!(snap.tenants[1].p99_us >= 5000);
+        assert_eq!(t.tenant_specs("a"), vec![spec]);
+        assert!(t.tenant_specs("nobody").is_empty());
+    }
+}

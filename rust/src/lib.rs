@@ -25,6 +25,9 @@
 //! * [`coordinator`] — top-level scheduler tying cores, RBE, DMA and ABB
 //!   together; the entry point for examples and the figure harness, with
 //!   multi-threaded batch serving (`Coordinator::infer_batch`).
+//! * [`gateway`] — multi-tenant serving front-end over the deployment
+//!   API: bounded admission, per-tenant quotas, deadline/priority-aware
+//!   dispatch onto the process-wide runtime, with its own telemetry.
 
 // Simulator idiom: hardware-signature functions carry many scalar
 // parameters and loop nests use explicit index math; clippy's preferred
@@ -39,6 +42,7 @@ pub mod coordinator;
 pub mod core;
 pub mod dnn;
 pub mod figures;
+pub mod gateway;
 pub mod isa;
 pub mod kernels;
 pub mod mapping;

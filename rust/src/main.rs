@@ -27,7 +27,22 @@
 //!                                             variants per conv layer,
 //!                                             persist + report the
 //!                                             winning config
-//! marsellus networks                          list deployable networks
+//! marsellus serve    [--trace TSV] [--requests N] [--queue-depth D]
+//!                    [--inflight I] [--threads T] [--deadline-us U]
+//!                    [--starve-bound K] [--vdd V]
+//!                    [--artifacts DIR]        multi-tenant serving
+//!                                             through the admission
+//!                                             gateway: replay a
+//!                                             traffic trace (or a
+//!                                             synthetic 2-tenant mix)
+//!                                             and report admission /
+//!                                             per-tenant latency
+//!                                             telemetry + the plan-
+//!                                             cache residency split
+//! marsellus networks [--plans]                list deployable networks
+//!                                             (--plans: deploy each and
+//!                                             print the per-deployment
+//!                                             plan-cache byte split)
 //! marsellus list                              list figure ids
 //! ```
 //!
@@ -65,9 +80,13 @@ fn main() -> Result<()> {
         Some("infer") => infer(&args),
         Some("batch") => batch(&args),
         Some("tune") => tune(&args),
+        Some("serve") => serve(&args),
         Some("networks") => {
             for def in marsellus::dnn::registry::NETWORKS {
                 println!("{:<10} {}", def.id, def.description);
+            }
+            if args.flag("plans") {
+                networks_plans(&args)?;
             }
             Ok(())
         }
@@ -80,7 +99,8 @@ fn main() -> Result<()> {
         other => {
             eprintln!(
                 "usage: marsellus \
-                 <smoke|figure|infer|batch|tune|networks|list> [options]"
+                 <smoke|figure|infer|batch|tune|serve|networks|list> \
+                 [options]"
             );
             bail!("unknown command {other:?}")
         }
@@ -447,5 +467,264 @@ fn write_tune_json(path: &str, cfg: &TunedConfig) -> Result<()> {
     );
     std::fs::write(path, json)
         .with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+/// One request of a serving trace: who asks for what, how big, how
+/// urgent.
+struct TraceReq {
+    tenant: String,
+    spec: NetworkSpec,
+    images: usize,
+    priority: marsellus::gateway::Priority,
+    deadline: Option<std::time::Duration>,
+}
+
+/// Parse a whitespace-separated trace file: one request per line,
+/// `tenant network config seed images priority deadline_us`
+/// (`deadline_us` 0 = none); `#` starts a comment.
+fn parse_trace(path: &str) -> Result<Vec<TraceReq>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {path}"))?;
+    let mut reqs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        ensure!(
+            fields.len() == 7,
+            "{path}:{}: expected 7 fields (tenant network config seed \
+             images priority deadline_us), got {}",
+            lineno + 1,
+            fields.len()
+        );
+        let config = match fields[2] {
+            "uniform8" => PrecisionConfig::Uniform8,
+            "mixed" => PrecisionConfig::Mixed,
+            other => bail!("{path}:{}: unknown config {other}", lineno + 1),
+        };
+        let seed: u64 = fields[3]
+            .parse()
+            .with_context(|| format!("{path}:{}: seed", lineno + 1))?;
+        let images: usize = fields[4]
+            .parse()
+            .with_context(|| format!("{path}:{}: images", lineno + 1))?;
+        let deadline_us: u64 = fields[6].parse().with_context(|| {
+            format!("{path}:{}: deadline_us", lineno + 1)
+        })?;
+        reqs.push(TraceReq {
+            tenant: fields[0].to_string(),
+            spec: NetworkSpec::new(fields[1], config, seed),
+            images: images.max(1),
+            priority: fields[5].parse()?,
+            deadline: (deadline_us > 0)
+                .then(|| std::time::Duration::from_micros(deadline_us)),
+        });
+    }
+    ensure!(!reqs.is_empty(), "{path}: trace holds no requests");
+    Ok(reqs)
+}
+
+/// The built-in 2-tenant traffic mix when no `--trace` is given:
+/// `interactive` submits high-priority single-image ResNet-20 requests
+/// with a deadline, `bulk` submits normal-priority 4-image KWS batches.
+fn synthetic_trace(requests: usize) -> Vec<TraceReq> {
+    (0..requests.max(1))
+        .map(|i| {
+            if i % 2 == 0 {
+                TraceReq {
+                    tenant: "interactive".into(),
+                    spec: NetworkSpec::new(
+                        "resnet20",
+                        PrecisionConfig::Mixed,
+                        42,
+                    ),
+                    images: 1,
+                    priority: marsellus::gateway::Priority::High,
+                    deadline: Some(std::time::Duration::from_secs(30)),
+                }
+            } else {
+                TraceReq {
+                    tenant: "bulk".into(),
+                    spec: NetworkSpec::new(
+                        "kws",
+                        PrecisionConfig::Mixed,
+                        7,
+                    ),
+                    images: 4,
+                    priority: marsellus::gateway::Priority::Normal,
+                    deadline: None,
+                }
+            }
+        })
+        .collect()
+}
+
+fn serve(args: &Args) -> Result<()> {
+    use marsellus::gateway::{Gateway, GatewayConfig};
+
+    let coord =
+        std::sync::Arc::new(Coordinator::new(artifacts_dir(args))?);
+    let cfg = GatewayConfig {
+        queue_depth: args.get_usize("queue-depth", 32)?,
+        per_tenant_inflight: args.get_usize("inflight", 16)?,
+        default_deadline: {
+            let us = args.get_usize("deadline-us", 0)? as u64;
+            (us > 0).then(|| std::time::Duration::from_micros(us))
+        },
+        threads: args.get_usize("threads", 0)?,
+        starvation_bound: args.get_usize("starve-bound", 4)?,
+    };
+    let op = OperatingPoint::at_vdd(args.get_f64("vdd", 0.8)?);
+    let reqs = match args.get("trace") {
+        Some(path) => {
+            let reqs = parse_trace(path)?;
+            println!("replaying {} request(s) from {path}", reqs.len());
+            reqs
+        }
+        None => {
+            let n = args.get_usize("requests", 12)?;
+            println!(
+                "synthetic 2-tenant trace: {n} request(s) \
+                 (interactive resnet20 x1 / bulk kws x4)"
+            );
+            synthetic_trace(n)
+        }
+    };
+
+    // deploy each spec up front (warms the plan cache so the replay
+    // measures serving, not first-touch compiles) and pre-generate
+    // every request's images
+    let mut rng = marsellus::util::Rng::new(0x5E44E);
+    let mut images: Vec<Vec<Vec<i32>>> = Vec::with_capacity(reqs.len());
+    for r in &reqs {
+        let d = coord.deploy(&r.spec)?;
+        images.push(
+            (0..r.images).map(|_| d.random_input(&mut rng)).collect(),
+        );
+    }
+    println!(
+        "gateway: queue_depth {}, per-tenant inflight {}, {} lane(s), \
+         starvation bound {}",
+        cfg.queue_depth,
+        cfg.per_tenant_inflight,
+        if cfg.threads > 0 {
+            cfg.threads
+        } else {
+            marsellus::runtime::global().width()
+        },
+        cfg.starvation_bound,
+    );
+
+    let gateway = Gateway::new(coord.clone(), cfg)?;
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::new();
+    let mut rejected = 0usize;
+    for (r, imgs) in reqs.iter().zip(images) {
+        match gateway.submit(
+            &r.tenant,
+            &r.spec,
+            &op,
+            imgs,
+            r.priority,
+            r.deadline,
+        ) {
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                rejected += 1;
+                println!("rejected ({}, {}): {e}", r.tenant, r.spec);
+            }
+        }
+    }
+    let mut served_images = 0usize;
+    for t in tickets {
+        let done = t.wait()?;
+        served_images += done.results.len();
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let snap = gateway.telemetry().snapshot();
+    println!(
+        "served {served_images} image(s) in {wall_ms:.0} ms \
+         ({rejected} rejected at admission)"
+    );
+    println!(
+        "gateway: {} submitted / {} admitted / {} rejected (full {}, \
+         tenant {}, shutdown {}), {} completed, {} failed, {} \
+         deadline-missed",
+        snap.submitted,
+        snap.admitted,
+        snap.rejected(),
+        snap.rejected_full,
+        snap.rejected_tenant,
+        snap.rejected_shutdown,
+        snap.completed,
+        snap.failed,
+        snap.deadline_missed,
+    );
+    println!(
+        "{:<14} {:>8} {:>9} {:>8} {:>7} {:>9} {:>9}",
+        "tenant", "admitted", "completed", "rejected", "missed",
+        "p50_us", "p99_us"
+    );
+    for t in &snap.tenants {
+        println!(
+            "{:<14} {:>8} {:>9} {:>8} {:>7} {:>9} {:>9}",
+            t.tenant,
+            t.admitted,
+            t.completed,
+            t.rejected,
+            t.deadline_missed,
+            t.p50_us,
+            t.p99_us,
+        );
+    }
+    print_plan_residency(&coord);
+    let g = marsellus::runtime::global().telemetry();
+    println!(
+        "global runtime: {} worker(s) ({} spawned once per process), \
+         {} job(s) streamed",
+        g.width, g.spawned_threads, g.jobs,
+    );
+    Ok(())
+}
+
+/// The per-deployment plan-cache byte split (`marsellus networks
+/// --plans` and the tail of `marsellus serve`).
+fn print_plan_residency(coord: &Coordinator) {
+    let rt = &coord.runtime;
+    println!(
+        "plan cache: {} deployment(s), {} KiB resident / {} KiB \
+         budget, {} KiB pinned, {} eviction(s)",
+        rt.cached_plans(),
+        rt.plan_bytes() / 1024,
+        rt.plan_cache_budget() / 1024,
+        rt.pinned_plan_bytes() / 1024,
+        rt.plan_evictions(),
+    );
+    for row in rt.plan_residency() {
+        println!(
+            "  {:<28} {:>8} KiB{}",
+            row.spec.to_string(),
+            row.bytes / 1024,
+            if row.pinned { "  [pinned]" } else { "" },
+        );
+    }
+}
+
+/// `marsellus networks --plans`: deploy every registry network once
+/// (mixed precision, seed 42) and print the per-deployment byte split
+/// of the plan cache — the per-tenant half of the `plan_bytes`
+/// telemetry.
+fn networks_plans(args: &Args) -> Result<()> {
+    let coord = Coordinator::new(artifacts_dir(args))?;
+    for def in marsellus::dnn::registry::NETWORKS {
+        let spec =
+            NetworkSpec::new(def.id, PrecisionConfig::Mixed, 42);
+        coord.deploy(&spec)?;
+    }
+    print_plan_residency(&coord);
     Ok(())
 }

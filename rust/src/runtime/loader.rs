@@ -25,6 +25,24 @@ struct PlanSlot {
     bytes: usize,
     /// Logical LRU timestamp: bumped from `plan_clock` on every hit.
     last_used: u64,
+    /// Pinned plans are exempt from LRU eviction ([`Runtime::pin_plan`])
+    /// but still counted against the byte budget.
+    pinned: bool,
+}
+
+/// One row of [`Runtime::plan_residency`]: the per-deployment byte
+/// split of the plan cache (today `plan_bytes` alone is the global
+/// total).
+#[derive(Debug, Clone)]
+pub struct PlanResidency {
+    /// The deployment this row accounts.
+    pub spec: NetworkSpec,
+    /// Resident bytes of its compiled plan.
+    pub bytes: usize,
+    /// Whether the plan is pinned against LRU eviction.
+    pub pinned: bool,
+    /// Logical LRU timestamp of the last hit (higher = more recent).
+    pub last_used: u64,
 }
 
 /// An execution backend plus a cache of compiled executables keyed by
@@ -283,6 +301,7 @@ impl Runtime {
         // threads.
         let built = Arc::new(build()?);
         let mut plans = self.plans.lock().unwrap();
+        let mut pinned = false;
         if let Some(slot) = plans.get_mut(spec) {
             if accept(&slot.plan) {
                 // lost the race to an acceptable plan: serve the
@@ -294,6 +313,9 @@ impl Runtime {
             }
             let old = plans.remove(spec).expect("resident slot");
             self.plan_bytes.fetch_sub(old.bytes, Ordering::Relaxed);
+            // a replaced resident keeps its pin: the residency
+            // guarantee follows the spec, not one compiled artifact
+            pinned = old.pinned;
         }
         let bytes = built.bytes();
         self.plan_builds.fetch_add(1, Ordering::Relaxed);
@@ -304,6 +326,7 @@ impl Runtime {
                 plan: built.clone(),
                 bytes,
                 last_used: self.plan_clock.fetch_add(1, Ordering::Relaxed),
+                pinned,
             },
         );
         self.evict_lru_over_budget(&mut plans);
@@ -311,22 +334,126 @@ impl Runtime {
     }
 
     /// Drop least-recently-used deployments until the resident total is
-    /// back under budget (or only one plan remains). Caller holds the
-    /// cache lock.
+    /// back under budget (or no evictable plan remains). Caller holds
+    /// the cache lock. Pinned plans and a sole resident are never
+    /// victims: the bound sheds *other* tenants, it never evicts a plan
+    /// a request may be streaming through ([`Self::pin_plan`]) or
+    /// refuses the one active deployment.
     fn evict_lru_over_budget(&self, plans: &mut HashMap<NetworkSpec, PlanSlot>) {
         let budget = self.plan_budget.load(Ordering::Relaxed);
         while plans.len() > 1
             && self.plan_bytes.load(Ordering::Relaxed) > budget
         {
-            let victim = plans
+            let Some(victim) = plans
                 .iter()
+                .filter(|(_, slot)| !slot.pinned)
                 .min_by_key(|(_, slot)| slot.last_used)
                 .map(|(spec, _)| spec.clone())
-                .expect("non-empty cache has an LRU entry");
+            else {
+                // every resident is pinned: nothing evictable, stay
+                // over budget rather than break a residency guarantee
+                break;
+            };
             let slot = plans.remove(&victim).expect("victim is resident");
             self.plan_bytes.fetch_sub(slot.bytes, Ordering::Relaxed);
             self.plan_evictions.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Pin `spec`'s resident plan: LRU eviction may no longer touch it,
+    /// so a latency-tier tenant's plan can never be evicted mid-request
+    /// by other tenants' churn. Pinned bytes stay counted against the
+    /// budget; pinning fails loudly when the pinned set alone would
+    /// exceed it (a quota nobody can serve under must be an error, not
+    /// a silent over-commit). Errors also when `spec` is not resident —
+    /// deploy first, then pin.
+    pub fn pin_plan(&self, spec: &NetworkSpec) -> Result<()> {
+        let mut plans = self.plans.lock().unwrap();
+        let pinned_total: usize = plans
+            .values()
+            .filter(|slot| slot.pinned)
+            .map(|slot| slot.bytes)
+            .sum();
+        let budget = self.plan_budget.load(Ordering::Relaxed);
+        let Some(slot) = plans.get_mut(spec) else {
+            anyhow::bail!(
+                "cannot pin {spec}: no resident plan (deploy it first)"
+            );
+        };
+        if slot.pinned {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            pinned_total + slot.bytes <= budget,
+            "cannot pin {spec}: pinned plans would hold {} bytes, \
+             exceeding the {budget}-byte plan-cache budget — unpin \
+             another plan or raise MARSELLUS_PLAN_CACHE_BYTES",
+            pinned_total + slot.bytes,
+        );
+        slot.pinned = true;
+        Ok(())
+    }
+
+    /// Make `spec`'s plan evictable again. Returns `true` when a
+    /// resident pin was actually cleared.
+    pub fn unpin_plan(&self, spec: &NetworkSpec) -> bool {
+        let mut plans = self.plans.lock().unwrap();
+        match plans.get_mut(spec) {
+            Some(slot) if slot.pinned => {
+                slot.pinned = false;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Total bytes held by pinned plans (counted inside
+    /// [`Self::plan_bytes`], never evictable).
+    pub fn pinned_plan_bytes(&self) -> usize {
+        self.plans
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|slot| slot.pinned)
+            .map(|slot| slot.bytes)
+            .sum()
+    }
+
+    /// Specs of the currently pinned plans (arbitrary order).
+    pub fn pinned_plan_specs(&self) -> Vec<NetworkSpec> {
+        self.plans
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, slot)| slot.pinned)
+            .map(|(spec, _)| spec.clone())
+            .collect()
+    }
+
+    /// Resident plan bytes of one deployment, `None` when not cached —
+    /// the per-tenant half of the `plan_bytes` telemetry (gateway
+    /// quotas sum this over a tenant's specs).
+    pub fn plan_bytes_of(&self, spec: &NetworkSpec) -> Option<usize> {
+        self.plans.lock().unwrap().get(spec).map(|slot| slot.bytes)
+    }
+
+    /// Per-deployment residency rows (bytes, pin state, recency),
+    /// sorted by spec for stable display — the split `marsellus
+    /// networks --plans` prints. Row bytes always sum to
+    /// [`Self::plan_bytes`].
+    pub fn plan_residency(&self) -> Vec<PlanResidency> {
+        let plans = self.plans.lock().unwrap();
+        let mut rows: Vec<PlanResidency> = plans
+            .iter()
+            .map(|(spec, slot)| PlanResidency {
+                spec: spec.clone(),
+                bytes: slot.bytes,
+                pinned: slot.pinned,
+                last_used: slot.last_used,
+            })
+            .collect();
+        rows.sort_by_key(|r| r.spec.to_string());
+        rows
     }
 
     /// Number of plan-cache hits served so far (including builds

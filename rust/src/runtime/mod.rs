@@ -56,7 +56,7 @@ pub use global::{
     global, ExecCtx, ExecRuntime, GlobalRuntime, GlobalTask,
     GlobalTelemetry,
 };
-pub use loader::{Runtime, DEFAULT_PLAN_CACHE_BYTES};
+pub use loader::{PlanResidency, Runtime, DEFAULT_PLAN_CACHE_BYTES};
 #[cfg(feature = "native")]
 pub use native::NativeBackend;
 pub use plan::{

@@ -1,0 +1,403 @@
+//! Serving-gateway integration tests: bitwise parity with the direct
+//! deployment path, zero threads spawned per served request, bounded
+//! admission (queue depth + per-tenant inflight), bounded low-priority
+//! starvation, deadline accounting, plan-cache quotas, and drain-on-
+//! shutdown semantics (ISSUE 8).
+
+#![cfg(feature = "native")]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use marsellus::coordinator::Coordinator;
+use marsellus::dnn::{NetworkSpec, PrecisionConfig};
+use marsellus::gateway::{
+    pick_schedule, Gateway, GatewayConfig, Overload, Priority,
+};
+use marsellus::power::OperatingPoint;
+use marsellus::runtime::{global, ExecRuntime, Runtime};
+use marsellus::util::Rng;
+
+fn coordinator() -> Arc<Coordinator> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    let rt = Runtime::native(&dir).expect("native runtime");
+    Arc::new(Coordinator::with_runtime(rt).expect("coordinator"))
+}
+
+fn kws(seed: u64) -> NetworkSpec {
+    NetworkSpec::new("kws", PrecisionConfig::Mixed, seed)
+}
+
+fn op() -> OperatingPoint {
+    OperatingPoint::at_vdd(0.8)
+}
+
+fn config(queue_depth: usize, inflight: usize) -> GatewayConfig {
+    GatewayConfig {
+        queue_depth,
+        per_tenant_inflight: inflight,
+        default_deadline: None,
+        threads: 2,
+        starvation_bound: 4,
+    }
+}
+
+/// Mixed-size 2-tenant load through the gateway: logits bitwise equal
+/// to direct `infer_scheduled_on` calls, and the process-wide fleet
+/// spawns zero additional threads while serving.
+#[test]
+fn gateway_matches_direct_path_and_spawns_nothing() {
+    let coord = coordinator();
+    let spec = kws(1);
+    let d = coord.deploy(&spec).unwrap();
+    let mut rng = Rng::new(50);
+    // request sizes exercising all three schedule picks
+    let sizes = [1usize, 3, 4, 1, 2];
+    let batches: Vec<Vec<Vec<i32>>> = sizes
+        .iter()
+        .map(|&n| (0..n).map(|_| d.random_input(&mut rng)).collect())
+        .collect();
+
+    // direct path (also warms the global fleet so the spawn counter
+    // below measures serving, not first-touch provisioning)
+    let width = global().width();
+    let direct: Vec<Vec<Vec<i32>>> = batches
+        .iter()
+        .map(|imgs| {
+            d.infer_scheduled_on(
+                &op(),
+                imgs,
+                pick_schedule(imgs.len(), width),
+                ExecRuntime::Global,
+            )
+            .unwrap()
+            .into_iter()
+            .map(|r| r.logits)
+            .collect()
+        })
+        .collect();
+    let spawned_before = global().telemetry().spawned_threads;
+
+    let gateway = Gateway::new(coord.clone(), GatewayConfig {
+        threads: 0,
+        ..config(16, 16)
+    })
+    .unwrap();
+    let tickets: Vec<_> = batches
+        .iter()
+        .enumerate()
+        .map(|(i, imgs)| {
+            let tenant = if i % 2 == 0 { "a" } else { "b" };
+            gateway
+                .submit(
+                    tenant,
+                    &spec,
+                    &op(),
+                    imgs.clone(),
+                    Priority::Normal,
+                    None,
+                )
+                .expect("admission")
+        })
+        .collect();
+    let served: Vec<Vec<Vec<i32>>> = tickets
+        .into_iter()
+        .map(|t| {
+            t.wait()
+                .unwrap()
+                .results
+                .into_iter()
+                .map(|r| r.logits)
+                .collect()
+        })
+        .collect();
+
+    assert_eq!(direct, served, "gateway diverged from the direct path");
+    assert_eq!(
+        global().telemetry().spawned_threads,
+        spawned_before,
+        "serving through the gateway must spawn zero worker threads"
+    );
+}
+
+/// A full admission queue rejects with a typed `QueueFull` instead of
+/// queueing unboundedly; the backlog still completes.
+#[test]
+fn full_queue_rejects_instead_of_queueing_unboundedly() {
+    let coord = coordinator();
+    let spec = kws(2);
+    let d = coord.deploy(&spec).unwrap();
+    let mut rng = Rng::new(51);
+    let img = d.random_input(&mut rng);
+
+    let gateway = Gateway::new(coord.clone(), config(2, 16)).unwrap();
+    gateway.pause();
+    let t1 = gateway
+        .submit("a", &spec, &op(), vec![img.clone()], Priority::Normal, None)
+        .expect("first fits");
+    let t2 = gateway
+        .submit("a", &spec, &op(), vec![img.clone()], Priority::Normal, None)
+        .expect("second fits");
+    let err = gateway
+        .submit("a", &spec, &op(), vec![img.clone()], Priority::Normal, None)
+        .expect_err("third must be rejected");
+    assert_eq!(err, Overload::QueueFull { depth: 2 });
+    assert_eq!(gateway.queued(), 2);
+
+    gateway.resume();
+    assert_eq!(t1.wait().unwrap().results.len(), 1);
+    assert_eq!(t2.wait().unwrap().results.len(), 1);
+    let snap = gateway.telemetry().snapshot();
+    assert_eq!(snap.submitted, 3);
+    assert_eq!(snap.admitted, 2);
+    assert_eq!(snap.rejected_full, 1);
+    assert_eq!(snap.completed, 2);
+}
+
+/// The per-tenant inflight cap rejects the saturating tenant only;
+/// other tenants keep being admitted.
+#[test]
+fn saturated_tenant_is_rejected_others_admitted() {
+    let coord = coordinator();
+    let spec = kws(3);
+    let d = coord.deploy(&spec).unwrap();
+    let mut rng = Rng::new(52);
+    let img = d.random_input(&mut rng);
+
+    let gateway = Gateway::new(coord.clone(), config(16, 1)).unwrap();
+    gateway.pause();
+    let t1 = gateway
+        .submit("hog", &spec, &op(), vec![img.clone()], Priority::Normal, None)
+        .expect("first fits");
+    let err = gateway
+        .submit("hog", &spec, &op(), vec![img.clone()], Priority::Normal, None)
+        .expect_err("tenant is saturated");
+    assert_eq!(
+        err,
+        Overload::TenantSaturated { tenant: "hog".into(), inflight: 1 }
+    );
+    let t2 = gateway
+        .submit("other", &spec, &op(), vec![img.clone()], Priority::Normal, None)
+        .expect("other tenants unaffected");
+
+    gateway.resume();
+    t1.wait().unwrap();
+    t2.wait().unwrap();
+    let snap = gateway.telemetry().snapshot();
+    assert_eq!(snap.rejected_tenant, 1);
+    assert_eq!(snap.completed, 2);
+    // inflight released on completion: the tenant admits again
+    gateway
+        .submit("hog", &spec, &op(), vec![img], Priority::Normal, None)
+        .expect("capacity released after completion")
+        .wait()
+        .unwrap();
+}
+
+/// Sustained 2-tenant load: every admitted request completes, counters
+/// and per-tenant telemetry add up, and the per-tenant split is
+/// reported (p50 <= p99).
+#[test]
+fn two_tenant_sustained_load_completes_with_telemetry() {
+    let coord = coordinator();
+    let spec_a = kws(4);
+    let spec_b = kws(5);
+    let da = coord.deploy(&spec_a).unwrap();
+    let db = coord.deploy(&spec_b).unwrap();
+    let mut rng = Rng::new(53);
+
+    let gateway = Gateway::new(coord.clone(), config(64, 32)).unwrap();
+    let mut tickets = Vec::new();
+    for round in 0..6 {
+        let a_imgs: Vec<Vec<i32>> =
+            (0..1).map(|_| da.random_input(&mut rng)).collect();
+        let b_imgs: Vec<Vec<i32>> =
+            (0..3).map(|_| db.random_input(&mut rng)).collect();
+        tickets.push(
+            gateway
+                .submit(
+                    "alpha",
+                    &spec_a,
+                    &op(),
+                    a_imgs,
+                    Priority::High,
+                    Some(Duration::from_secs(60)),
+                )
+                .unwrap_or_else(|e| panic!("round {round}: {e}")),
+        );
+        tickets.push(
+            gateway
+                .submit("beta", &spec_b, &op(), b_imgs, Priority::Low, None)
+                .unwrap_or_else(|e| panic!("round {round}: {e}")),
+        );
+    }
+    let mut images = 0;
+    for t in tickets {
+        images += t.wait().expect("admitted requests complete").results.len();
+    }
+    assert_eq!(images, 6 * (1 + 3));
+
+    let snap = gateway.telemetry().snapshot();
+    assert_eq!(snap.submitted, 12);
+    assert_eq!(snap.admitted, 12);
+    assert_eq!(snap.completed, 12);
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.rejected(), 0);
+    assert_eq!(snap.tenants.len(), 2);
+    for t in &snap.tenants {
+        assert_eq!(t.admitted, 6, "{}", t.tenant);
+        assert_eq!(t.completed, 6, "{}", t.tenant);
+        assert!(t.p50_us <= t.p99_us, "{}: p50 > p99", t.tenant);
+        assert!(t.p99_us > 0, "{}: latency not recorded", t.tenant);
+    }
+}
+
+/// Aging bounds low-priority starvation deterministically: with
+/// starvation_bound 4 the oldest (low) request is the 4th completion
+/// even under a high-priority backlog; with 0 (strict priority) it is
+/// dead last.
+#[test]
+fn starvation_bound_caps_low_priority_wait() {
+    for (bound, expected_seq) in [(4usize, 4u64), (0, 8)] {
+        let coord = coordinator();
+        let spec = kws(6);
+        let d = coord.deploy(&spec).unwrap();
+        let mut rng = Rng::new(54);
+        let img = d.random_input(&mut rng);
+
+        let gateway = Gateway::new(coord.clone(), GatewayConfig {
+            starvation_bound: bound,
+            ..config(16, 16)
+        })
+        .unwrap();
+        gateway.pause();
+        let low = gateway
+            .submit("bulk", &spec, &op(), vec![img.clone()], Priority::Low, None)
+            .expect("low admitted");
+        let highs: Vec<_> = (0..7)
+            .map(|_| {
+                gateway
+                    .submit(
+                        "hot",
+                        &spec,
+                        &op(),
+                        vec![img.clone()],
+                        Priority::High,
+                        None,
+                    )
+                    .expect("high admitted")
+            })
+            .collect();
+        gateway.resume();
+        let done = low.wait().unwrap();
+        assert_eq!(
+            done.finish_seq, expected_seq,
+            "bound {bound}: low-priority request finished at the wrong \
+             position"
+        );
+        for t in highs {
+            t.wait().unwrap();
+        }
+    }
+}
+
+/// A missed deadline is counted and flagged on the result — never
+/// dropped.
+#[test]
+fn missed_deadlines_are_counted_not_dropped() {
+    let coord = coordinator();
+    let spec = kws(7);
+    let d = coord.deploy(&spec).unwrap();
+    let mut rng = Rng::new(55);
+    let img = d.random_input(&mut rng);
+
+    let gateway = Gateway::new(coord.clone(), config(16, 16)).unwrap();
+    let done = gateway
+        .submit(
+            "t",
+            &spec,
+            &op(),
+            vec![img],
+            Priority::High,
+            Some(Duration::from_nanos(1)),
+        )
+        .expect("admitted")
+        .wait()
+        .expect("still served");
+    assert!(done.deadline_missed, "1ns deadline cannot be met");
+    assert_eq!(done.results.len(), 1, "missed != dropped");
+    let snap = gateway.telemetry().snapshot();
+    assert_eq!(snap.deadline_missed, 1);
+    assert_eq!(snap.completed, 1);
+}
+
+/// A tenant over its plan-cache byte quota fails loudly through its
+/// ticket — a typed error naming the quota, not a silent eviction
+/// of other tenants.
+#[test]
+fn over_quota_tenant_fails_loudly() {
+    let coord = coordinator();
+    let spec = kws(8);
+    let d = coord.deploy(&spec).unwrap();
+    let mut rng = Rng::new(56);
+    let img = d.random_input(&mut rng);
+
+    let gateway = Gateway::new(coord.clone(), config(16, 16)).unwrap();
+    gateway.set_tenant_quota("cheap", 1);
+    let err = gateway
+        .submit("cheap", &spec, &op(), vec![img.clone()], Priority::Normal, None)
+        .expect("admission is not where quotas bite")
+        .wait()
+        .expect_err("1-byte quota cannot hold a plan");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("over plan-cache quota"), "got: {msg}");
+    assert_eq!(gateway.telemetry().snapshot().failed, 1);
+
+    // an unquota'd tenant serving the same spec is unaffected
+    gateway
+        .submit("rich", &spec, &op(), vec![img], Priority::Normal, None)
+        .expect("admitted")
+        .wait()
+        .expect("no quota, no failure");
+}
+
+/// Shutdown drains the backlog (every admitted ticket gets its result)
+/// and then rejects new submissions with `ShuttingDown`.
+#[test]
+fn shutdown_drains_backlog_then_rejects() {
+    let coord = coordinator();
+    let spec = kws(9);
+    let d = coord.deploy(&spec).unwrap();
+    let mut rng = Rng::new(57);
+    let img = d.random_input(&mut rng);
+
+    let mut gateway = Gateway::new(coord.clone(), config(16, 16)).unwrap();
+    gateway.pause();
+    let tickets: Vec<_> = (0..3)
+        .map(|_| {
+            gateway
+                .submit(
+                    "t",
+                    &spec,
+                    &op(),
+                    vec![img.clone()],
+                    Priority::Normal,
+                    None,
+                )
+                .expect("admitted")
+        })
+        .collect();
+    // shutdown must drain even a paused gateway: no ticket waits forever
+    gateway.shutdown();
+    for t in tickets {
+        assert_eq!(t.wait().expect("drained on shutdown").results.len(), 1);
+    }
+    let err = gateway
+        .submit("t", &spec, &op(), vec![img], Priority::Normal, None)
+        .expect_err("admission is closed");
+    assert_eq!(err, Overload::ShuttingDown);
+    let snap = gateway.telemetry().snapshot();
+    assert_eq!(snap.completed, 3);
+    assert_eq!(snap.rejected_shutdown, 1);
+}

@@ -155,3 +155,100 @@ fn many_tenants_stay_under_the_bound() {
     assert_eq!(rt.plan_builds(), 9);
     assert_eq!(rt.plan_evictions(), 7);
 }
+
+/// A pinned plan is never the LRU victim: under budget pressure the
+/// sweep takes the oldest *unpinned* resident instead, even when the
+/// pinned plan is the least recently used. Unpinning restores
+/// evictability.
+#[test]
+fn pinned_plan_survives_cache_pressure() {
+    let coord = coordinator();
+    let rt = &coord.runtime;
+
+    coord.deploy(&kws(1)).unwrap();
+    let one = rt.plan_bytes();
+    rt.set_plan_cache_budget(2 * one + one / 2);
+    rt.pin_plan(&kws(1)).expect("resident plan pins");
+    assert_eq!(rt.pinned_plan_bytes(), one);
+    assert_eq!(rt.pinned_plan_specs(), vec![kws(1)]);
+
+    // tenants 2 and 3: tenant 1 is the LRU, but pinned — tenant 2
+    // (oldest unpinned) must be the victim instead
+    coord.deploy(&kws(2)).unwrap();
+    coord.deploy(&kws(3)).unwrap();
+    assert_eq!(rt.plan_evictions(), 1);
+    let resident: Vec<u64> =
+        rt.cached_plan_specs().into_iter().map(|s| s.seed).collect();
+    assert!(resident.contains(&1), "pinned LRU plan was evicted");
+    assert!(resident.contains(&3), "fresh tenant evicted");
+    assert!(!resident.contains(&2), "oldest unpinned tenant survived");
+
+    // unpin: tenant 1 becomes the ordinary LRU victim again
+    assert!(rt.unpin_plan(&kws(1)), "pin was set");
+    assert!(!rt.unpin_plan(&kws(1)), "second unpin is a no-op");
+    coord.deploy(&kws(4)).unwrap();
+    assert_eq!(rt.plan_evictions(), 2);
+    assert!(
+        !rt.cached_plan_specs().iter().any(|s| s.seed == 1),
+        "unpinned plan must be evictable again"
+    );
+}
+
+/// Pinning fails loudly when the pinned set alone would exceed the
+/// cache budget, and when the spec has no resident plan; a failed pin
+/// changes nothing.
+#[test]
+fn over_budget_and_non_resident_pins_fail_loudly() {
+    let coord = coordinator();
+    let rt = &coord.runtime;
+
+    let err = rt.pin_plan(&kws(1)).expect_err("nothing resident yet");
+    assert!(
+        format!("{err:#}").contains("deploy it first"),
+        "got: {err:#}"
+    );
+
+    coord.deploy(&kws(1)).unwrap();
+    let one = rt.plan_bytes();
+    coord.deploy(&kws(2)).unwrap();
+    rt.set_plan_cache_budget(one + one / 2);
+    rt.pin_plan(&kws(1)).expect("first pin fits the budget");
+    rt.pin_plan(&kws(1)).expect("re-pinning is idempotent");
+    let err = rt
+        .pin_plan(&kws(2))
+        .expect_err("two pins cannot fit a 1.5-plan budget");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("exceeding"), "got: {msg}");
+    assert!(msg.contains("MARSELLUS_PLAN_CACHE_BYTES"), "got: {msg}");
+    assert_eq!(rt.pinned_plan_bytes(), one, "failed pin must not stick");
+
+    // an all-pinned cache over budget stays over budget rather than
+    // breaking the residency guarantee
+    assert_eq!(rt.cached_plans(), 2);
+    assert!(rt.plan_bytes() > rt.plan_cache_budget());
+}
+
+/// The per-deployment residency split: rows carry bytes + pin state,
+/// sum to the cache total, and `plan_bytes_of` reads one tenant's
+/// share.
+#[test]
+fn residency_rows_sum_to_the_cache_total() {
+    let coord = coordinator();
+    let rt = &coord.runtime;
+    coord.deploy(&kws(1)).unwrap();
+    coord.deploy(&kws(2)).unwrap();
+    rt.pin_plan(&kws(2)).unwrap();
+
+    let rows = rt.plan_residency();
+    assert_eq!(rows.len(), 2);
+    assert_eq!(
+        rows.iter().map(|r| r.bytes).sum::<usize>(),
+        rt.plan_bytes(),
+        "residency rows must sum to plan_bytes"
+    );
+    for r in &rows {
+        assert_eq!(r.pinned, r.spec.seed == 2, "{}", r.spec);
+        assert_eq!(rt.plan_bytes_of(&r.spec), Some(r.bytes));
+    }
+    assert_eq!(rt.plan_bytes_of(&kws(99)), None, "not resident");
+}
