@@ -1,0 +1,370 @@
+#!/usr/bin/env python3
+"""Repo-invariant lint: the conventions the concurrency layer depends on.
+
+Walks ``rust/src`` and fails (exit 1) on violations of four rules that
+keep the hand-rolled concurrency auditable. They are *project*
+invariants, not general style — each one guards an argument the runtime
+or gateway correctness story leans on:
+
+R1  **unsafe-needs-SAFETY** — every ``unsafe`` keyword must have a
+    ``SAFETY:`` comment on the same line or within the few lines above
+    it. The repo's single transmute is sound only by a multi-step
+    protocol argument; that argument must live next to the code.
+    (``clippy::undocumented_unsafe_blocks`` is the warn-level second
+    line of defense in ``lib.rs``.)
+
+R2  **thread containment** — ``thread::spawn`` / ``thread::scope`` /
+    ``thread::Builder`` may appear only under ``runtime/``, in
+    ``gateway/dispatch.rs`` (the one dispatcher thread), and under
+    ``analysis/`` (the explorer's model threads). "A served request
+    spawns zero threads" stays checkable by grep.
+
+R3  **gateway panic hygiene** — no ``.unwrap()`` in non-test gateway
+    code, and every ``.expect(`` message must start with
+    ``invariant:`` (naming the invariant that makes it infallible).
+    Poisoned-lock recovery goes through ``analysis::sync::lock_recover``
+    / ``wait_recover``; a panicking dispatcher must never strand a
+    blocked ``Ticket::wait`` caller.
+
+R4  **no façade bypass** — ``runtime/global.rs``, ``runtime/pool.rs``
+    and everything under ``gateway/`` must take ``Mutex``/``Condvar``
+    from ``crate::analysis::sync``, never from ``std::sync`` directly,
+    or the interleaving explorer silently loses sight of their yield
+    points.
+
+Test code (from a ``#[cfg(test)]`` line to end of file, the repo's
+test-module convention) is exempt from R2 and R3.
+
+Usage::
+
+    python3 ci/lint_invariants.py              # lint rust/src
+    python3 ci/lint_invariants.py --self-test  # prove each rule fires
+
+Stdlib-only, like the other ``ci/*.py`` gates.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+# R1: lines above an `unsafe` that may carry the SAFETY tag.
+SAFETY_LOOKBACK = 3
+
+# R2: path prefixes (relative to rust/src, "/"-separated) allowed to
+# spawn threads.
+THREAD_ALLOWED = ("runtime/", "analysis/", "gateway/dispatch.rs")
+
+# R4: files that must import Mutex/Condvar via the analysis::sync
+# façade instead of std::sync.
+FACADE_FILES = ("runtime/global.rs", "runtime/pool.rs")
+FACADE_DIRS = ("gateway/",)
+
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+THREAD_RE = re.compile(r"\bthread::(spawn|scope|Builder)\b")
+UNWRAP_RE = re.compile(r"\.unwrap\(\)")
+EXPECT_RE = re.compile(r'\.expect\(\s*$|\.expect\("')
+EXPECT_MSG_RE = re.compile(r'\.expect\(\s*"(?P<msg>[^"]*)')
+FACADE_BYPASS_RE = re.compile(
+    r"std::sync::(\{[^}]*\b(Mutex|Condvar)\b[^}]*\}|(Mutex|Condvar)\b)"
+)
+CFG_TEST_RE = re.compile(r"#\[cfg\(test\)\]")
+
+
+def strip_comment(line: str) -> str:
+    """Drop a trailing ``//`` comment (string-literal `//` is rare
+    enough in this tree that the approximation is acceptable — and it
+    only ever *relaxes* R2/R4, never fakes a violation)."""
+    idx = line.find("//")
+    return line if idx < 0 else line[:idx]
+
+
+def test_section_start(lines: list[str]) -> int:
+    """Index of the first ``#[cfg(test)]`` line (the repo keeps test
+    modules at the bottom of each file), or ``len(lines)``."""
+    for i, line in enumerate(lines):
+        if CFG_TEST_RE.search(line):
+            return i
+    return len(lines)
+
+
+def check_unsafe_safety(rel: str, lines: list[str]) -> list[str]:
+    """R1: every `unsafe` needs a `// SAFETY:` comment — on the same
+    line, in the contiguous comment block directly above (a multi-line
+    SAFETY argument tags its first line), or within the short lookback
+    window."""
+    problems = []
+    for i, line in enumerate(lines):
+        code = strip_comment(line)
+        if not UNSAFE_RE.search(code):
+            continue
+        context = lines[max(0, i - SAFETY_LOOKBACK) : i + 1]
+        j = i - 1
+        while j >= 0 and lines[j].lstrip().startswith("//"):
+            context.append(lines[j])
+            j -= 1
+        if any("SAFETY:" in c for c in context):
+            continue
+        problems.append(
+            f"{rel}:{i + 1}: R1 `unsafe` without a `// SAFETY:` comment "
+            f"on the same line or the comment block above"
+        )
+    return problems
+
+
+def check_thread_containment(rel: str, lines: list[str]) -> list[str]:
+    """R2: thread spawn/scope/Builder only in the allowed locations."""
+    if any(
+        rel == allowed or rel.startswith(allowed)
+        for allowed in THREAD_ALLOWED
+    ):
+        return []
+    problems = []
+    cutoff = test_section_start(lines)
+    for i, line in enumerate(lines[:cutoff]):
+        code = strip_comment(line)
+        m = THREAD_RE.search(code)
+        if m:
+            problems.append(
+                f"{rel}:{i + 1}: R2 thread::{m.group(1)} outside "
+                f"{THREAD_ALLOWED} — workers belong to the runtime"
+            )
+    return problems
+
+
+def check_gateway_hygiene(rel: str, lines: list[str]) -> list[str]:
+    """R3: gateway hot path free of `.unwrap()`; `.expect` messages
+    must name their invariant."""
+    if not rel.startswith("gateway/"):
+        return []
+    problems = []
+    cutoff = test_section_start(lines)
+    for i, line in enumerate(lines[:cutoff]):
+        code = strip_comment(line)
+        if UNWRAP_RE.search(code):
+            problems.append(
+                f"{rel}:{i + 1}: R3 `.unwrap()` in gateway non-test "
+                f"code — use analysis::sync::lock_recover/wait_recover "
+                f"or a typed error"
+            )
+        m = EXPECT_MSG_RE.search(code)
+        if m and not m.group("msg").startswith("invariant:"):
+            problems.append(
+                f"{rel}:{i + 1}: R3 `.expect(\"{m.group('msg')}\")` — "
+                f'message must start with "invariant:" naming why it '
+                f"cannot fire"
+            )
+    return problems
+
+
+def check_facade_bypass(rel: str, lines: list[str]) -> list[str]:
+    """R4: façade files must not reach std::sync::{Mutex, Condvar}."""
+    in_scope = rel in FACADE_FILES or any(
+        rel.startswith(d) for d in FACADE_DIRS
+    )
+    if not in_scope:
+        return []
+    problems = []
+    for i, line in enumerate(lines):
+        code = strip_comment(line)
+        if FACADE_BYPASS_RE.search(code):
+            problems.append(
+                f"{rel}:{i + 1}: R4 direct std::sync Mutex/Condvar in a "
+                f"façade file — import from crate::analysis::sync so "
+                f"the interleaving explorer sees the yield points"
+            )
+    return problems
+
+
+CHECKS = (
+    check_unsafe_safety,
+    check_thread_containment,
+    check_gateway_hygiene,
+    check_facade_bypass,
+)
+
+
+def lint_tree(root: Path) -> list[str]:
+    """Run every check over every .rs file under `root` (rust/src)."""
+    problems: list[str] = []
+    for path in sorted(root.rglob("*.rs")):
+        rel = path.relative_to(root).as_posix()
+        lines = path.read_text(encoding="utf-8").splitlines()
+        for check in CHECKS:
+            problems.extend(check(rel, lines))
+    return problems
+
+
+# --- self-test -------------------------------------------------------
+# Synthetic snippets: each rule must fire on its violation and stay
+# quiet on the compliant twin. Keeps the gate honest — a regex edit
+# that silently stops matching fails CI here, not in production.
+
+SELF_TEST_CASES = [
+    (
+        "R1 fires on bare unsafe",
+        check_unsafe_safety,
+        "runtime/x.rs",
+        ["let p = unsafe { transmute(q) };"],
+        True,
+    ),
+    (
+        "R1 quiet with SAFETY above",
+        check_unsafe_safety,
+        "runtime/x.rs",
+        ["// SAFETY: lifetime erasure only; see the barrier argument.",
+         "let p = unsafe { transmute(q) };"],
+        False,
+    ),
+    (
+        "R1 quiet with SAFETY atop a long comment block",
+        check_unsafe_safety,
+        "runtime/x.rs",
+        ["// SAFETY: this transmute erases only the lifetime:",
+         "// 1. the task is reachable only through queued chunks,",
+         "// 2. clones drop before their done count,",
+         "// 3. the submitter reclaims after the barrier,",
+         "// 4. panics keep the chain intact.",
+         "let p = unsafe { transmute(q) };"],
+        False,
+    ),
+    (
+        "R1 quiet on unsafe in a comment",
+        check_unsafe_safety,
+        "runtime/x.rs",
+        ["// no unsafe here, just prose"],
+        False,
+    ),
+    (
+        "R2 fires outside the allowed set",
+        check_thread_containment,
+        "dnn/x.rs",
+        ["std::thread::spawn(|| {});"],
+        True,
+    ),
+    (
+        "R2 quiet under runtime/",
+        check_thread_containment,
+        "runtime/pool.rs",
+        ["std::thread::scope(|s| {});"],
+        False,
+    ),
+    (
+        "R2 quiet in a test module",
+        check_thread_containment,
+        "dnn/x.rs",
+        ["#[cfg(test)]", "mod tests {", "std::thread::spawn(|| {});", "}"],
+        False,
+    ),
+    (
+        "R3 fires on gateway unwrap",
+        check_gateway_hygiene,
+        "gateway/dispatch.rs",
+        ["let g = shared.state.lock().unwrap();"],
+        True,
+    ),
+    (
+        "R3 fires on a non-invariant expect",
+        check_gateway_hygiene,
+        "gateway/queue.rs",
+        ['let x = it.next().expect("non-empty queue");'],
+        True,
+    ),
+    (
+        "R3 quiet on an invariant-naming expect",
+        check_gateway_hygiene,
+        "gateway/queue.rs",
+        ['let x = it.next().expect("invariant: non-empty queue");'],
+        False,
+    ),
+    (
+        "R3 quiet outside gateway",
+        check_gateway_hygiene,
+        "runtime/global.rs",
+        ["let g = state.lock().unwrap();"],
+        False,
+    ),
+    (
+        "R4 fires on a std::sync Mutex import",
+        check_facade_bypass,
+        "gateway/telemetry.rs",
+        ["use std::sync::Mutex;"],
+        True,
+    ),
+    (
+        "R4 fires on a braced import",
+        check_facade_bypass,
+        "runtime/global.rs",
+        ["use std::sync::{Arc, Condvar, Mutex};"],
+        True,
+    ),
+    (
+        "R4 quiet on Arc-only std::sync",
+        check_facade_bypass,
+        "gateway/dispatch.rs",
+        ["use std::sync::Arc;"],
+        False,
+    ),
+    (
+        "R4 quiet outside the façade set",
+        check_facade_bypass,
+        "coordinator/deploy.rs",
+        ["use std::sync::{Arc, Mutex};"],
+        False,
+    ),
+]
+
+
+def self_test() -> int:
+    """Exercise every rule on synthetic snippets; exit non-zero if any
+    rule fails to fire (or fires spuriously)."""
+    failures = 0
+    for name, check, rel, lines, should_fire in SELF_TEST_CASES:
+        fired = bool(check(rel, lines))
+        if fired != should_fire:
+            failures += 1
+            print(
+                f"self-test FAIL: {name} — expected "
+                f"{'a finding' if should_fire else 'silence'}, got "
+                f"{'a finding' if fired else 'silence'}"
+            )
+    if failures:
+        print(f"lint_invariants self-test: {failures} case(s) failed")
+        return 1
+    print(f"lint_invariants self-test: {len(SELF_TEST_CASES)} cases ok")
+    return 0
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--root",
+        default="rust/src",
+        help="source tree to lint (default: rust/src)",
+    )
+    parser.add_argument(
+        "--self-test",
+        action="store_true",
+        help="run the rule self-test instead of linting the tree",
+    )
+    args = parser.parse_args()
+    if args.self_test:
+        return self_test()
+    root = Path(args.root)
+    if not root.is_dir():
+        print(f"lint_invariants: no such directory: {root}")
+        return 2
+    problems = lint_tree(root)
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"lint_invariants: {len(problems)} violation(s)")
+        return 1
+    print("lint_invariants: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,925 @@
+//! Deterministic interleaving explorer — a bounded, seeded mini-loom
+//! built in-repo (vendored deps are only `anyhow` + the xla stub, so no
+//! external model checker).
+//!
+//! A *model* is a closure that spawns 2–4 model threads ([`spawn`]) and
+//! coordinates them through the instrumented sync shims
+//! (`analysis::sync` under `cfg(any(test, feature = "interleave"))`).
+//! [`explore`] runs the model under every schedule a bounded DFS can
+//! reach: model threads are real OS threads, but exactly one runs at a
+//! time, and at every *yield point* (lock acquire/release, condvar
+//! wait/notify, atomic op, [`yield_now`]) the scheduler picks which
+//! thread continues. Each run records its decision sequence; the next
+//! run replays a prefix and takes the first unexplored branch —
+//! loom-style stateless DFS with replay.
+//!
+//! Bounds that keep the search tractable:
+//!
+//! * **Preemption bound** ([`ExploreOpts::preemption_bound`]): at most
+//!   N involuntary switches away from a runnable thread per schedule.
+//!   Most concurrency bugs need 1–2 preemptions (the classic result
+//!   behind CHESS-style bounded search), so a small bound finds them
+//!   while cutting the schedule space from exponential to polynomial.
+//! * **Schedule budget** ([`ExploreOpts::max_schedules`]): DFS stops
+//!   after this many runs even with branches left ([`ExploreReport`]
+//!   says whether the space was exhausted).
+//! * **Step limit** ([`ExploreOpts::max_steps`]): a schedule that keeps
+//!   yielding without finishing (live-lock, unfair spin) fails loudly
+//!   instead of hanging the suite.
+//! * **Seeded mode** ([`ExploreOpts::seed`]): instead of DFS, run
+//!   `max_schedules` independent schedules driven by a seeded xoshiro
+//!   PRNG — a cheap way to smoke much larger models where DFS cannot
+//!   finish any interesting prefix.
+//!
+//! Failures — a panicked model thread, a deadlock (no runnable thread
+//! while some are blocked), or a step-limit hit — abort the exploration
+//! and report the full decision trace of the failing schedule, so a
+//! finding is a *reproducible* schedule, not a flaky observation.
+//!
+//! What is modeled: mutexes (without reentrancy), condvars (without
+//! spurious wakeups — every user in the tree loops on its condition
+//! anyway, and the explorer's job is finding *ordering* bugs), atomics
+//! (sequentially consistent — serialized execution cannot model weak
+//! memory; TSan and Miri cover that axis in CI), and thread join.
+//! Model threads must not block through any other channel.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex};
+
+use crate::util::Rng;
+
+/// Sentinel for "no thread scheduled" (run over / failure).
+const DONE: usize = usize::MAX;
+
+/// Bounds for one [`explore`] call. The defaults exhaust small models
+/// (2–3 threads, a handful of yield points each) and stay under a
+/// second even for branchy ones.
+#[derive(Debug, Clone)]
+pub struct ExploreOpts {
+    /// Maximum schedules to run; DFS stops here even with branches
+    /// left.
+    pub max_schedules: usize,
+    /// Maximum involuntary context switches per schedule.
+    pub preemption_bound: usize,
+    /// Per-schedule yield-point limit (live-lock guard).
+    pub max_steps: usize,
+    /// `Some(seed)`: seeded random walk instead of exhaustive DFS.
+    pub seed: Option<u64>,
+}
+
+impl Default for ExploreOpts {
+    fn default() -> Self {
+        Self {
+            max_schedules: 4096,
+            preemption_bound: 2,
+            max_steps: 20_000,
+            seed: None,
+        }
+    }
+}
+
+/// What an exploration covered (returned on success).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExploreReport {
+    /// Schedules actually run.
+    pub schedules: usize,
+    /// Whether the bounded schedule space was fully explored (always
+    /// `false` in seeded mode).
+    pub exhausted: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TState {
+    Runnable,
+    /// Blocked acquiring the model lock with this id.
+    Lock(usize),
+    /// Waiting on the model condvar with this id.
+    Cond(usize),
+    /// Waiting for this thread id to finish.
+    Join(usize),
+    Finished,
+}
+
+/// One recorded scheduling (or notify-victim) decision.
+#[derive(Debug, Clone, Copy)]
+struct Decision {
+    chosen: usize,
+    options: usize,
+    /// Forced decisions (single option, preemption bound hit, seeded
+    /// mode) are not DFS branch points.
+    forced: bool,
+}
+
+struct Core {
+    states: Vec<TState>,
+    running: usize,
+    /// Model lock id -> holding thread id (absent = free).
+    holders: HashMap<usize, usize>,
+    trace: Vec<String>,
+    decisions: Vec<Decision>,
+    preemptions: usize,
+    steps: usize,
+    failure: Option<String>,
+    rng: Option<Rng>,
+}
+
+/// Panic payload used to unwind model threads once a failure is
+/// recorded; never surfaces to the user.
+struct ExplorerAbort;
+
+pub(crate) struct Scheduler {
+    core: StdMutex<Core>,
+    cv: StdCondvar,
+    prefix: Vec<usize>,
+    preemption_bound: usize,
+    max_steps: usize,
+    handles: StdMutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+thread_local! {
+    /// The active exploration this thread is a model thread of, if any.
+    static CTX: RefCell<Option<(Arc<Scheduler>, usize)>> =
+        const { RefCell::new(None) };
+}
+
+/// The current thread's model context (`None` outside an exploration —
+/// the sync shims then delegate straight to `std`).
+pub(crate) fn current() -> Option<(Arc<Scheduler>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+fn set_ctx(ctx: Option<(Arc<Scheduler>, usize)>) {
+    CTX.with(|c| *c.borrow_mut() = ctx);
+}
+
+/// Fresh unique id for a shim object (mutex/condvar); uniqueness is all
+/// that matters, ids are only resource keys inside one schedule.
+pub(crate) fn next_obj_id() -> usize {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static NEXT: AtomicUsize = AtomicUsize::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+fn payload_str(p: &(dyn Any + Send)) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".into())
+}
+
+impl Scheduler {
+    fn new(opts: &ExploreOpts, prefix: Vec<usize>, iter: usize) -> Self {
+        Self {
+            core: StdMutex::new(Core {
+                states: vec![TState::Runnable],
+                running: 0,
+                holders: HashMap::new(),
+                trace: Vec::new(),
+                decisions: Vec::new(),
+                preemptions: 0,
+                steps: 0,
+                failure: None,
+                rng: opts.seed.map(|s| {
+                    Rng::new(s ^ (iter as u64).wrapping_mul(0x9E3779B97F4A7C15))
+                }),
+            }),
+            cv: StdCondvar::new(),
+            prefix,
+            preemption_bound: opts.preemption_bound,
+            max_steps: opts.max_steps,
+            handles: StdMutex::new(Vec::new()),
+        }
+    }
+
+    /// Panic out of a model thread once the exploration has failed —
+    /// unless already unwinding (drop paths must not double-panic).
+    fn abort(&self) {
+        if !std::thread::panicking() {
+            std::panic::panic_any(ExplorerAbort);
+        }
+    }
+
+    fn fail_locked(&self, core: &mut Core, msg: String) {
+        if core.failure.is_none() {
+            let tail: Vec<&str> = core
+                .trace
+                .iter()
+                .rev()
+                .take(120)
+                .map(String::as_str)
+                .collect();
+            let tail: Vec<&str> = tail.into_iter().rev().collect();
+            core.failure = Some(format!(
+                "{msg}\nlast {} schedule step(s):\n{}",
+                tail.len(),
+                tail.join("\n")
+            ));
+        }
+        core.running = DONE;
+        self.cv.notify_all();
+    }
+
+    /// Record a decision among `options` choices and return the chosen
+    /// index: replayed from the prefix, drawn from the seeded RNG, or
+    /// defaulting to 0 (DFS explores the rest by prefix increment).
+    fn decide(&self, core: &mut Core, options: usize, can_branch: bool) -> usize {
+        let k = core.decisions.len();
+        let idx = if options == 1 {
+            0
+        } else if k < self.prefix.len() {
+            self.prefix[k]
+        } else if let Some(rng) = core.rng.as_mut() {
+            (rng.next_u64() % options as u64) as usize
+        } else {
+            0
+        };
+        if idx >= options {
+            self.fail_locked(
+                core,
+                format!(
+                    "schedule replay diverged at decision {k}: prefix \
+                     chose {idx} of {options} options — the model is \
+                     nondeterministic (wall clock, hash order, real \
+                     threads?)"
+                ),
+            );
+            return 0;
+        }
+        let forced = options == 1
+            || core.rng.is_some()
+            || (!can_branch && k >= self.prefix.len());
+        core.decisions.push(Decision { chosen: idx, options, forced });
+        idx
+    }
+
+    /// Hand the CPU to the next thread: the scheduling decision at the
+    /// heart of the explorer. `from` is the thread giving up control
+    /// (it may itself still be runnable — staying with it is the
+    /// default, switching away is a preemption).
+    fn pick(&self, core: &mut Core, from: usize) {
+        core.steps += 1;
+        if core.steps > self.max_steps {
+            self.fail_locked(
+                core,
+                format!(
+                    "step limit {} exceeded — model live-locks or spins \
+                     without a condvar",
+                    self.max_steps
+                ),
+            );
+            return;
+        }
+        if core.failure.is_some() {
+            core.running = DONE;
+            self.cv.notify_all();
+            return;
+        }
+        let mut options: Vec<usize> = (0..core.states.len())
+            .filter(|&t| core.states[t] == TState::Runnable)
+            .collect();
+        if options.is_empty() {
+            if core.states.iter().all(|s| *s == TState::Finished) {
+                core.running = DONE;
+                self.cv.notify_all();
+                return;
+            }
+            let states = core.states.clone();
+            self.fail_locked(
+                core,
+                format!("deadlock: no runnable thread; states: {states:?}"),
+            );
+            return;
+        }
+        // "Continue with the yielding thread" is option 0 when legal, so
+        // the DFS base schedule is switch-free and every alternative is
+        // an explicit preemption.
+        let from_runnable =
+            from != DONE && core.states.get(from) == Some(&TState::Runnable);
+        if from_runnable {
+            let p = options
+                .iter()
+                .position(|&t| t == from)
+                .expect("runnable `from` is an option");
+            options.remove(p);
+            options.insert(0, from);
+        }
+        let can_branch =
+            !(from_runnable && core.preemptions >= self.preemption_bound);
+        let idx = self.decide(core, options.len(), can_branch);
+        if core.failure.is_some() {
+            return;
+        }
+        let chosen = options[idx];
+        if from_runnable && chosen != from {
+            core.preemptions += 1;
+        }
+        core.running = chosen;
+        self.cv.notify_all();
+    }
+
+    /// Park the calling thread until it is scheduled (or the
+    /// exploration fails, in which case it unwinds).
+    fn wait_turn<'a>(
+        &'a self,
+        mut core: std::sync::MutexGuard<'a, Core>,
+        me: usize,
+    ) {
+        loop {
+            if core.failure.is_some() {
+                drop(core);
+                self.abort();
+                return;
+            }
+            if core.running == me && core.states[me] == TState::Runnable {
+                return;
+            }
+            core = self.cv.wait(core).expect("scheduler core never poisons");
+        }
+    }
+
+    fn lock_core(&self) -> std::sync::MutexGuard<'_, Core> {
+        self.core.lock().expect("scheduler core never poisons")
+    }
+
+    /// A plain yield point: a scheduling decision with no state change.
+    pub(crate) fn yield_point(&self, me: usize, label: &str) {
+        let mut core = self.lock_core();
+        if core.failure.is_some() {
+            drop(core);
+            self.abort();
+            return;
+        }
+        core.trace.push(format!("t{me}: {label}"));
+        self.pick(&mut core, me);
+        self.wait_turn(core, me);
+    }
+
+    /// Acquire model lock `id` (blocking virtually while held).
+    pub(crate) fn acquire(&self, me: usize, id: usize, what: &str) {
+        loop {
+            self.yield_point(me, &format!("{what} L{id}"));
+            let mut core = self.lock_core();
+            if core.failure.is_some() {
+                drop(core);
+                self.abort();
+                return;
+            }
+            match core.holders.get(&id) {
+                None => {
+                    core.holders.insert(id, me);
+                    return;
+                }
+                Some(&holder) => {
+                    debug_assert_ne!(
+                        holder, me,
+                        "model mutex L{id} is not reentrant"
+                    );
+                    core.states[me] = TState::Lock(id);
+                    core.trace.push(format!("t{me}: blocked on L{id}"));
+                    self.pick(&mut core, me);
+                    self.wait_turn(core, me);
+                    // woken by a release — retry the acquire
+                }
+            }
+        }
+    }
+
+    /// Release model lock `id`; wakes blocked acquirers and yields (so
+    /// a freshly woken waiter can win the lock over the releaser).
+    pub(crate) fn release(&self, me: usize, id: usize) {
+        let mut core = self.lock_core();
+        core.holders.remove(&id);
+        for s in core.states.iter_mut() {
+            if *s == TState::Lock(id) {
+                *s = TState::Runnable;
+            }
+        }
+        core.trace.push(format!("t{me}: release L{id}"));
+        if core.failure.is_some() || std::thread::panicking() {
+            // Unwinding guard drops must neither schedule nor panic.
+            self.cv.notify_all();
+            return;
+        }
+        self.pick(&mut core, me);
+        self.wait_turn(core, me);
+    }
+
+    /// Atomically release lock `lock` and wait on condvar `cv` (the
+    /// atomicity is free: execution is serialized, and no yield happens
+    /// between the release and the wait registration). The caller
+    /// reacquires the lock afterwards.
+    pub(crate) fn cond_wait(&self, me: usize, cv: usize, lock: usize) {
+        let mut core = self.lock_core();
+        if core.failure.is_some() {
+            drop(core);
+            self.abort();
+            return;
+        }
+        core.trace
+            .push(format!("t{me}: wait C{cv} (releases L{lock})"));
+        core.holders.remove(&lock);
+        for s in core.states.iter_mut() {
+            if *s == TState::Lock(lock) {
+                *s = TState::Runnable;
+            }
+        }
+        core.states[me] = TState::Cond(cv);
+        self.pick(&mut core, me);
+        self.wait_turn(core, me);
+    }
+
+    /// Wake every waiter of condvar `cv` (they still contend on the
+    /// lock), then yield.
+    pub(crate) fn notify_all(&self, me: usize, cv: usize) {
+        let mut core = self.lock_core();
+        let mut woken = 0;
+        for s in core.states.iter_mut() {
+            if *s == TState::Cond(cv) {
+                *s = TState::Runnable;
+                woken += 1;
+            }
+        }
+        core.trace
+            .push(format!("t{me}: notify_all C{cv} (woke {woken})"));
+        if core.failure.is_some() || std::thread::panicking() {
+            self.cv.notify_all();
+            return;
+        }
+        self.pick(&mut core, me);
+        self.wait_turn(core, me);
+    }
+
+    /// Wake one waiter of condvar `cv` — *which* one is a scheduling
+    /// decision the DFS branches over, then yield.
+    pub(crate) fn notify_one(&self, me: usize, cv: usize) {
+        let mut core = self.lock_core();
+        let waiters: Vec<usize> = (0..core.states.len())
+            .filter(|&t| core.states[t] == TState::Cond(cv))
+            .collect();
+        if !waiters.is_empty() {
+            let idx = self.decide(&mut core, waiters.len(), true);
+            if core.failure.is_some() {
+                drop(core);
+                self.abort();
+                return;
+            }
+            let victim = waiters[idx];
+            core.states[victim] = TState::Runnable;
+            core.trace
+                .push(format!("t{me}: notify_one C{cv} -> t{victim}"));
+        } else {
+            core.trace
+                .push(format!("t{me}: notify_one C{cv} (no waiter)"));
+        }
+        if core.failure.is_some() || std::thread::panicking() {
+            self.cv.notify_all();
+            return;
+        }
+        self.pick(&mut core, me);
+        self.wait_turn(core, me);
+    }
+
+    /// Block until thread `target` finishes.
+    fn join_wait(&self, me: usize, target: usize) {
+        loop {
+            let mut core = self.lock_core();
+            if core.failure.is_some() {
+                drop(core);
+                self.abort();
+                return;
+            }
+            if core.states[target] == TState::Finished {
+                return;
+            }
+            core.states[me] = TState::Join(target);
+            core.trace.push(format!("t{me}: join t{target}"));
+            self.pick(&mut core, me);
+            self.wait_turn(core, me);
+        }
+    }
+
+    /// Mark `me` finished, wake its joiners and hand off the CPU.
+    fn finish(&self, me: usize) {
+        let mut core = self.lock_core();
+        core.states[me] = TState::Finished;
+        for s in core.states.iter_mut() {
+            if *s == TState::Join(me) {
+                *s = TState::Runnable;
+            }
+        }
+        core.trace.push(format!("t{me}: finished"));
+        if core.failure.is_some() {
+            self.cv.notify_all();
+            return;
+        }
+        self.pick(&mut core, me);
+    }
+
+    /// Finish without scheduling — the failure path, where the run is
+    /// already being torn down.
+    fn finish_quiet(&self, me: usize) {
+        let mut core = self.lock_core();
+        core.states[me] = TState::Finished;
+        self.cv.notify_all();
+    }
+
+    fn fail(&self, msg: String) {
+        let mut core = self.lock_core();
+        self.fail_locked(&mut core, msg);
+    }
+}
+
+/// Handle to a model thread spawned with [`spawn`]; [`join`] blocks
+/// (virtually) until it finishes and returns its result.
+///
+/// [`join`]: ModelHandle::join
+pub struct ModelHandle<T> {
+    tid: usize,
+    result: Arc<StdMutex<Option<T>>>,
+}
+
+impl<T> ModelHandle<T> {
+    /// Wait for the thread to finish and take its result. A panicked
+    /// model thread fails the whole exploration instead of returning.
+    pub fn join(self) -> T {
+        let (sched, me) =
+            current().expect("ModelHandle::join outside an exploration");
+        sched.join_wait(me, self.tid);
+        self.result
+            .lock()
+            .expect("model result slot never poisons")
+            .take()
+            .expect("joined model thread left a result")
+    }
+}
+
+/// Spawn a model thread inside an active exploration. The closure runs
+/// on a real OS thread, but only when the scheduler picks it; it must
+/// synchronize exclusively through the instrumented shims (and
+/// [`yield_now`]) so every blocking edge is visible to the explorer.
+pub fn spawn<T, F>(f: F) -> ModelHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let (sched, me) = current().expect("explore::spawn outside an exploration");
+    let tid = {
+        let mut core = sched.lock_core();
+        core.states.push(TState::Runnable);
+        core.trace.push(format!(
+            "t{me}: spawn t{}",
+            core.states.len() - 1
+        ));
+        core.states.len() - 1
+    };
+    let result: Arc<StdMutex<Option<T>>> = Arc::new(StdMutex::new(None));
+    let thread_result = result.clone();
+    let thread_sched = sched.clone();
+    let handle = std::thread::Builder::new()
+        .name(format!("model-t{tid}"))
+        .spawn(move || {
+            set_ctx(Some((thread_sched.clone(), tid)));
+            {
+                // Park until first scheduled.
+                let core = thread_sched.lock_core();
+                thread_sched.wait_turn(core, tid);
+            }
+            match catch_unwind(AssertUnwindSafe(f)) {
+                Ok(v) => {
+                    *thread_result
+                        .lock()
+                        .expect("model result slot never poisons") = Some(v);
+                    thread_sched.finish(tid);
+                }
+                Err(p) if p.downcast_ref::<ExplorerAbort>().is_some() => {
+                    thread_sched.finish_quiet(tid);
+                }
+                Err(p) => {
+                    thread_sched.fail(format!(
+                        "model thread t{tid} panicked: {}",
+                        payload_str(p.as_ref())
+                    ));
+                    thread_sched.finish_quiet(tid);
+                }
+            }
+            set_ctx(None);
+        })
+        .expect("spawn model OS thread");
+    sched
+        .handles
+        .lock()
+        .expect("handle list never poisons")
+        .push(handle);
+    // Yield so schedules where the child runs before the spawner
+    // continues are reachable.
+    sched.yield_point(me, "post-spawn");
+    ModelHandle { tid, result }
+}
+
+/// An explicit yield point — a no-op outside an exploration.
+pub fn yield_now() {
+    if let Some((sched, me)) = current() {
+        sched.yield_point(me, "yield_now");
+    }
+}
+
+/// Run `body` under every schedule the bounded DFS reaches, returning
+/// the failing schedule's report instead of panicking. `Ok` carries how
+/// much was explored; `Err` carries the failure plus its full decision
+/// trace.
+pub fn explore_collect<F: Fn()>(
+    opts: ExploreOpts,
+    body: F,
+) -> Result<ExploreReport, String> {
+    assert!(
+        current().is_none(),
+        "explore() does not nest inside an exploration"
+    );
+    let mut prefix: Vec<usize> = Vec::new();
+    let mut schedules = 0usize;
+    loop {
+        if schedules >= opts.max_schedules {
+            return Ok(ExploreReport { schedules, exhausted: false });
+        }
+        let sched = Arc::new(Scheduler::new(&opts, prefix.clone(), schedules));
+        set_ctx(Some((sched.clone(), 0)));
+        let outcome = catch_unwind(AssertUnwindSafe(&body));
+        match outcome {
+            Ok(()) => sched.finish(0),
+            Err(p) if p.downcast_ref::<ExplorerAbort>().is_some() => {
+                sched.finish_quiet(0);
+            }
+            Err(p) => {
+                sched.fail(format!(
+                    "model main thread panicked: {}",
+                    payload_str(p.as_ref())
+                ));
+                sched.finish_quiet(0);
+            }
+        }
+        let handles = std::mem::take(
+            &mut *sched.handles.lock().expect("handle list never poisons"),
+        );
+        for h in handles {
+            let _ = h.join();
+        }
+        set_ctx(None);
+        let core = sched.lock_core();
+        if let Some(failure) = core.failure.as_ref() {
+            return Err(format!(
+                "schedule {} failed:\n{failure}",
+                schedules + 1
+            ));
+        }
+        schedules += 1;
+        if opts.seed.is_some() {
+            // Seeded mode: independent runs, no DFS bookkeeping.
+            continue;
+        }
+        match next_prefix(&core.decisions) {
+            Some(p) => {
+                drop(core);
+                prefix = p;
+            }
+            None => return Ok(ExploreReport { schedules, exhausted: true }),
+        }
+    }
+}
+
+/// [`explore_collect`], panicking with the schedule trace on failure —
+/// the assertion form used directly in tests.
+pub fn explore<F: Fn()>(opts: ExploreOpts, body: F) -> ExploreReport {
+    match explore_collect(opts, body) {
+        Ok(report) => report,
+        Err(failure) => panic!(
+            "interleaving explorer found a failing schedule:\n{failure}"
+        ),
+    }
+}
+
+/// The deepest non-forced decision with an untaken alternative becomes
+/// the next DFS prefix; `None` when the bounded space is exhausted.
+fn next_prefix(decisions: &[Decision]) -> Option<Vec<usize>> {
+    for k in (0..decisions.len()).rev() {
+        let d = decisions[k];
+        if !d.forced && d.chosen + 1 < d.options {
+            let mut p: Vec<usize> =
+                decisions[..k].iter().map(|d| d.chosen).collect();
+            p.push(d.chosen + 1);
+            return Some(p);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::sync::{AtomicUsize, Condvar, Mutex};
+    use std::sync::atomic::Ordering;
+
+    fn opts(max: usize) -> ExploreOpts {
+        ExploreOpts { max_schedules: max, ..ExploreOpts::default() }
+    }
+
+    /// The classic lost update: two threads doing a non-atomic
+    /// read-modify-write through shim atomics. The explorer must find
+    /// the interleaving where both read the same value.
+    #[test]
+    fn finds_lost_update_race() {
+        let err = explore_collect(opts(2000), || {
+            let a = Arc::new(AtomicUsize::new(0));
+            let a2 = a.clone();
+            let h = spawn(move || {
+                let v = a2.load(Ordering::SeqCst);
+                a2.store(v + 1, Ordering::SeqCst);
+            });
+            let v = a.load(Ordering::SeqCst);
+            a.store(v + 1, Ordering::SeqCst);
+            h.join();
+            assert_eq!(a.load(Ordering::SeqCst), 2, "lost update");
+        })
+        .expect_err("explorer must find the lost update");
+        assert!(err.contains("lost update"), "{err}");
+    }
+
+    /// The mutex-protected version of the same counter passes every
+    /// explored schedule — and the space is small enough to exhaust.
+    #[test]
+    fn mutex_protected_counter_passes() {
+        let report = explore(opts(4000), || {
+            let a = Arc::new(Mutex::new(0usize));
+            let a2 = a.clone();
+            let h = spawn(move || {
+                *a2.lock().unwrap() += 1;
+            });
+            *a.lock().unwrap() += 1;
+            h.join();
+            assert_eq!(*a.lock().unwrap(), 2);
+        });
+        assert!(report.exhausted, "small model should exhaust: {report:?}");
+        assert!(report.schedules > 1, "must explore > 1 schedule");
+    }
+
+    /// AB/BA lock ordering: the explorer reports the deadlock cycle
+    /// rather than hanging.
+    #[test]
+    fn detects_lock_order_deadlock() {
+        let err = explore_collect(opts(2000), || {
+            let a = Arc::new(Mutex::new(()));
+            let b = Arc::new(Mutex::new(()));
+            let (a2, b2) = (a.clone(), b.clone());
+            let h = spawn(move || {
+                let _gb = b2.lock().unwrap();
+                let _ga = a2.lock().unwrap();
+            });
+            let _ga = a.lock().unwrap();
+            let _gb = b.lock().unwrap();
+            drop(_gb);
+            drop(_ga);
+            h.join();
+        })
+        .expect_err("explorer must find the AB/BA deadlock");
+        assert!(err.contains("deadlock"), "{err}");
+    }
+
+    /// A signaller that sets the flag but never notifies: the waiter
+    /// sleeps forever and the explorer flags the lost wakeup as a
+    /// deadlock.
+    #[test]
+    fn detects_lost_wakeup() {
+        let err = explore_collect(opts(2000), || {
+            let flag = Arc::new((Mutex::new(false), Condvar::new()));
+            let f2 = flag.clone();
+            let h = spawn(move || {
+                let mut g = f2.0.lock().unwrap();
+                while !*g {
+                    g = f2.1.wait(g).unwrap();
+                }
+            });
+            *flag.0.lock().unwrap() = true; // bug: no notify
+            h.join();
+        })
+        .expect_err("explorer must find the missed wakeup");
+        assert!(err.contains("deadlock"), "{err}");
+    }
+
+    /// The correctly-notified version passes and exhausts.
+    #[test]
+    fn condvar_handshake_passes() {
+        let report = explore(opts(4000), || {
+            let flag = Arc::new((Mutex::new(false), Condvar::new()));
+            let f2 = flag.clone();
+            let h = spawn(move || {
+                let mut g = f2.0.lock().unwrap();
+                while !*g {
+                    g = f2.1.wait(g).unwrap();
+                }
+            });
+            {
+                let mut g = flag.0.lock().unwrap();
+                *g = true;
+                flag.1.notify_all();
+            }
+            h.join();
+        });
+        assert!(report.exhausted, "{report:?}");
+    }
+
+    /// notify_one picks its victim nondeterministically: with two
+    /// waiters and one notify, some schedule leaves the "wrong" waiter
+    /// asleep — the explorer must reach it.
+    #[test]
+    fn notify_one_victim_is_explored() {
+        let err = explore_collect(opts(4000), || {
+            let pair = Arc::new((Mutex::new(0usize), Condvar::new()));
+            let mut handles = Vec::new();
+            for _ in 0..2 {
+                let p = pair.clone();
+                handles.push(spawn(move || {
+                    let mut g = p.0.lock().unwrap();
+                    while *g == 0 {
+                        g = p.1.wait(g).unwrap();
+                    }
+                    *g -= 1;
+                }));
+            }
+            {
+                let mut g = pair.0.lock().unwrap();
+                *g = 2;
+                pair.1.notify_one(); // bug: two consumers, one notify
+            }
+            for h in handles {
+                h.join();
+            }
+        })
+        .expect_err("one notify for two waiters must strand one");
+        assert!(err.contains("deadlock"), "{err}");
+    }
+
+    /// Trivial bodies explore exactly one schedule and report
+    /// exhaustion; seeded mode runs the full budget instead.
+    #[test]
+    fn report_counts_schedules() {
+        let report = explore(opts(100), || {});
+        assert_eq!(
+            report,
+            ExploreReport { schedules: 1, exhausted: true }
+        );
+        let seeded = explore(
+            ExploreOpts { seed: Some(7), ..opts(5) },
+            || {
+                let a = Arc::new(AtomicUsize::new(0));
+                let a2 = a.clone();
+                let h = spawn(move || {
+                    a2.fetch_add(1, Ordering::SeqCst);
+                });
+                a.fetch_add(1, Ordering::SeqCst);
+                h.join();
+            },
+        );
+        assert_eq!(seeded.schedules, 5);
+        assert!(!seeded.exhausted);
+    }
+
+    /// A panicking model thread fails the exploration with its message
+    /// and the schedule trace, and every OS thread is reaped (the next
+    /// exploration starts clean).
+    #[test]
+    fn model_panic_is_reported_with_trace() {
+        let err = explore_collect(opts(100), || {
+            let h = spawn(|| panic!("tile 5 exploded"));
+            h.join();
+        })
+        .expect_err("panic must fail the exploration");
+        assert!(err.contains("tile 5 exploded"), "{err}");
+        assert!(err.contains("schedule step"), "{err}");
+        // and the harness still works afterwards
+        explore(opts(10), || {});
+    }
+
+    /// The step limit catches unfair spin loops instead of hanging.
+    #[test]
+    fn step_limit_catches_spin() {
+        let err = explore_collect(
+            ExploreOpts { max_steps: 200, ..opts(10) },
+            || {
+                let a = Arc::new(AtomicUsize::new(0));
+                let a2 = a.clone();
+                let _h = spawn(move || {
+                    a2.store(1, Ordering::SeqCst);
+                });
+                // spin-wait with no condvar: the continue-first default
+                // schedule never runs the writer
+                while a.load(Ordering::SeqCst) == 0 {
+                    yield_now();
+                }
+            },
+        )
+        .expect_err("spin loop must hit the step limit");
+        assert!(err.contains("step limit"), "{err}");
+    }
+}

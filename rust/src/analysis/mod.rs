@@ -1,0 +1,37 @@
+//! Concurrency-correctness harness: the sync façade and the
+//! deterministic interleaving explorer.
+//!
+//! The serving stack rests on hand-rolled concurrency — the
+//! work-stealing global runtime's task-reclaim barrier (a protocol
+//! that soundly erases a `'env` lifetime with one `unsafe transmute`)
+//! and the gateway's ticket/queue coordination. This module gives
+//! those protocols a mechanized checking layer, the software analogue
+//! of the on-chip monitoring blocks the Marsellus SoC bakes into
+//! silicon: a system pushed to its operating limits needs continuous
+//! self-checking, not spot audits.
+//!
+//! Three layers, each catching what the others cannot:
+//!
+//! * **`sync`** — the façade the runtime and gateway lock through.
+//!   `std::sync` in normal builds; instrumented shims under
+//!   `cfg(any(test, feature = "interleave"))`. Also home of the
+//!   poison-recovery helpers (`lock_recover`, `wait_recover`).
+//! * **`explore`** (same cfg) — a bounded, seeded schedule explorer
+//!   (mini-loom) that runs 2–4 model threads through every reachable
+//!   interleaving of their lock/condvar/atomic operations, with DFS
+//!   replay, a preemption bound, and deadlock/live-lock detection.
+//!   `rust/tests/interleave.rs` drives the reclaim, ticket, shutdown
+//!   and pop-order protocols through it.
+//! * **CI lanes outside this module** — `cargo miri test` (UB on the
+//!   transmute-bearing paths) and ThreadSanitizer (real weak-memory
+//!   races the serialized explorer cannot express), plus
+//!   `ci/lint_invariants.py` (SAFETY comments, thread containment,
+//!   gateway unwrap ban, façade bypass).
+
+pub mod sync;
+
+#[cfg(any(test, feature = "interleave"))]
+pub mod explore;
+
+#[cfg(any(test, feature = "interleave"))]
+mod shim;

@@ -1,0 +1,250 @@
+//! Instrumented drop-in replacements for `std::sync::{Mutex, Condvar}`
+//! and `AtomicUsize`, active only under
+//! `cfg(any(test, feature = "interleave"))` via the
+//! [`crate::analysis::sync`] façade.
+//!
+//! Outside an exploration (no thread-local scheduler context) every
+//! operation delegates straight to `std` — normal tests and production
+//! code pay one thread-local read per lock op and behave identically.
+//! Inside an exploration each operation becomes a *yield point*: the
+//! shim first acquires/releases/waits **virtually** through the
+//! [`explore`] scheduler, and only then touches the real primitive.
+//!
+//! The invariant that keeps this sound: a model thread takes the inner
+//! `std` mutex only after its virtual acquisition succeeded, so the
+//! real lock is always uncontended (std-held ⊆ virtually-held) and no
+//! model thread ever blocks in the OS where the serialized scheduler
+//! cannot see it.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicUsize as StdAtomicUsize, Ordering};
+use std::sync::{
+    Condvar as StdCondvar, LockResult, Mutex as StdMutex,
+    MutexGuard as StdMutexGuard, PoisonError,
+};
+
+use super::explore::{current, next_obj_id};
+
+/// A `std::sync::Mutex` that reports its lock/unlock edges to the
+/// interleaving explorer when one is active.
+pub struct Mutex<T: ?Sized> {
+    id: usize,
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    /// Create a new instrumented mutex.
+    pub fn new(value: T) -> Self {
+        Self { id: next_obj_id(), inner: StdMutex::new(value) }
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    /// Acquire, virtually first when a model context is active. Poison
+    /// is surfaced exactly like `std` (the guard rides inside the
+    /// error).
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        let virtual_held = if let Some((sched, me)) = current() {
+            sched.acquire(me, self.id, "lock");
+            true
+        } else {
+            false
+        };
+        // Under a model context the inner lock is uncontended by the
+        // std-held ⊆ virtually-held invariant, so this never blocks the
+        // OS thread outside the scheduler's sight.
+        match self.inner.lock() {
+            Ok(inner) => Ok(MutexGuard {
+                lock: self,
+                inner: Some(inner),
+                virtual_held,
+            }),
+            Err(poison) => Err(PoisonError::new(MutexGuard {
+                lock: self,
+                inner: Some(poison.into_inner()),
+                virtual_held,
+            })),
+        }
+    }
+}
+
+impl<T: ?Sized + fmt::Debug> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Mutex").field("inner", &self.inner).finish()
+    }
+}
+
+/// Guard for [`Mutex`]; releases virtually (a scheduler yield point)
+/// after dropping the real guard.
+pub struct MutexGuard<'a, T: ?Sized> {
+    lock: &'a Mutex<T>,
+    inner: Option<StdMutexGuard<'a, T>>,
+    virtual_held: bool,
+}
+
+impl<T: ?Sized> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard holds until drop")
+    }
+}
+
+impl<T: ?Sized> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard holds until drop")
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Real release strictly before the virtual one: once the
+        // scheduler hands the lock to another model thread, the std
+        // mutex must already be free.
+        drop(self.inner.take());
+        if self.virtual_held {
+            if let Some((sched, me)) = current() {
+                sched.release(me, self.lock.id);
+            }
+        }
+    }
+}
+
+impl<T: ?Sized + fmt::Debug> fmt::Debug for MutexGuard<'_, T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&**self, f)
+    }
+}
+
+/// A `std::sync::Condvar` that routes wait/notify through the explorer
+/// when a model context is active (no spurious wakeups in model mode —
+/// every caller in the tree loops on its condition anyway).
+pub struct Condvar {
+    id: usize,
+    inner: StdCondvar,
+}
+
+impl Condvar {
+    /// Create a new instrumented condvar.
+    pub fn new() -> Self {
+        Self { id: next_obj_id(), inner: StdCondvar::new() }
+    }
+
+    /// Wait on this condvar, releasing `guard`'s mutex for the
+    /// duration; the returned guard holds the mutex again.
+    pub fn wait<'a, T: ?Sized>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+    ) -> LockResult<MutexGuard<'a, T>> {
+        if let Some((sched, me)) = current() {
+            let lock = guard.lock;
+            // Hand the real+virtual lock back without the guard's Drop
+            // scheduling a release yield point: cond_wait models the
+            // release+sleep as one atomic step, like the real condvar.
+            guard.virtual_held = false;
+            drop(guard.inner.take());
+            drop(guard);
+            sched.cond_wait(me, self.id, lock.id);
+            // Woken: contend for the lock again (a fresh decision).
+            sched.acquire(me, lock.id, "relock after wait");
+            return match lock.inner.lock() {
+                Ok(inner) => Ok(MutexGuard {
+                    lock,
+                    inner: Some(inner),
+                    virtual_held: true,
+                }),
+                Err(poison) => Err(PoisonError::new(MutexGuard {
+                    lock,
+                    inner: Some(poison.into_inner()),
+                    virtual_held: true,
+                })),
+            };
+        }
+        let lock = guard.lock;
+        let inner = guard.inner.take().expect("guard holds until drop");
+        std::mem::forget(guard);
+        match self.inner.wait(inner) {
+            Ok(inner) => Ok(MutexGuard {
+                lock,
+                inner: Some(inner),
+                virtual_held: false,
+            }),
+            Err(poison) => Err(PoisonError::new(MutexGuard {
+                lock,
+                inner: Some(poison.into_inner()),
+                virtual_held: false,
+            })),
+        }
+    }
+
+    /// Wake all waiters.
+    pub fn notify_all(&self) {
+        if let Some((sched, me)) = current() {
+            sched.notify_all(me, self.id);
+        }
+        self.inner.notify_all();
+    }
+
+    /// Wake one waiter (which one is a scheduling decision in model
+    /// mode).
+    pub fn notify_one(&self) {
+        if let Some((sched, me)) = current() {
+            sched.notify_one(me, self.id);
+        }
+        self.inner.notify_one();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Condvar").finish_non_exhaustive()
+    }
+}
+
+/// An `AtomicUsize` whose every operation is a yield point in model
+/// mode, so races on lock-free counters (like the reclaim barrier's
+/// `done`) are explorable. Sequentially consistent under the model —
+/// serialized execution cannot express weak orderings; Miri/TSan cover
+/// that axis.
+#[derive(Debug)]
+pub struct AtomicUsize {
+    inner: StdAtomicUsize,
+}
+
+impl AtomicUsize {
+    /// Create a new instrumented atomic.
+    pub const fn new(v: usize) -> Self {
+        Self { inner: StdAtomicUsize::new(v) }
+    }
+
+    fn hook(&self, what: &str) {
+        if let Some((sched, me)) = current() {
+            sched.yield_point(me, what);
+        }
+    }
+
+    /// Load (yield point in model mode).
+    pub fn load(&self, order: Ordering) -> usize {
+        self.hook("atomic load");
+        self.inner.load(order)
+    }
+
+    /// Store (yield point in model mode).
+    pub fn store(&self, v: usize, order: Ordering) {
+        self.hook("atomic store");
+        self.inner.store(v, order)
+    }
+
+    /// Atomic add returning the previous value (yield point in model
+    /// mode; the read-modify-write itself stays indivisible).
+    pub fn fetch_add(&self, v: usize, order: Ordering) -> usize {
+        self.hook("atomic fetch_add");
+        self.inner.fetch_add(v, order)
+    }
+}

@@ -1,0 +1,45 @@
+//! The sync façade: the lock/condvar/atomic surface the runtime and
+//! gateway synchronize through.
+//!
+//! In a normal build this module *is* `std::sync` — pure re-exports,
+//! zero cost. Under `cfg(any(test, feature = "interleave"))` the same
+//! names resolve to the instrumented shims in
+//! [`shim`](super::shim), which delegate to `std` until a
+//! deterministic exploration ([`super::explore`]) is active on the
+//! current thread — so unit tests and production behavior are
+//! unchanged, while interleaving tests can drive the *real*
+//! synchronization protocols through every bounded schedule.
+//!
+//! Code that must use this façade instead of importing
+//! `std::sync::{Mutex, Condvar}` directly: `runtime/global.rs`,
+//! `runtime/pool.rs`, and everything under `gateway/`. The
+//! `ci/lint_invariants.py` gate enforces this.
+
+#[cfg(not(any(test, feature = "interleave")))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(not(any(test, feature = "interleave")))]
+pub use std::sync::atomic::AtomicUsize;
+
+#[cfg(any(test, feature = "interleave"))]
+pub use super::shim::{AtomicUsize, Condvar, Mutex, MutexGuard};
+
+/// Lock `m`, recovering from poison: a panic on another thread while
+/// it held the lock must not cascade — the protected state is either
+/// repaired by the caller's own invariant checks or simple enough
+/// (counters, queues of owned values) that observing it mid-update is
+/// safe. This is the gateway's "a panicking dispatcher must not strand
+/// blocked `Ticket::wait` callers" policy in one place.
+pub fn lock_recover<'a, T: ?Sized>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`] with the same poison-recovery policy as
+/// [`lock_recover`].
+pub fn wait_recover<'a, T: ?Sized>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard)
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+}

@@ -9,11 +9,13 @@
 //! [`crate::runtime::global`] — serving a request spawns zero threads.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
+
+use crate::analysis::sync::{lock_recover, wait_recover, Condvar, Mutex};
 
 use crate::coordinator::{Coordinator, InferenceResult};
 use crate::dnn::NetworkSpec;
@@ -91,7 +93,7 @@ impl Gateway {
     ) -> Result<Ticket, Overload> {
         let telemetry = &self.shared.telemetry;
         telemetry.note_submitted();
-        let mut state = self.shared.state.lock().unwrap();
+        let mut state = lock_recover(&self.shared.state);
         if state.shutdown {
             drop(state);
             telemetry.note_rejected_shutdown();
@@ -143,10 +145,7 @@ impl Gateway {
     /// the quota fails loudly (through its ticket) instead of silently
     /// crowding other tenants out of the LRU.
     pub fn set_tenant_quota(&self, tenant: &str, bytes: usize) {
-        self.shared
-            .quotas
-            .lock()
-            .unwrap()
+        lock_recover(&self.shared.quotas)
             .insert(tenant.to_string(), bytes);
     }
 
@@ -162,18 +161,18 @@ impl Gateway {
     /// Stop popping requests (admission stays open) — deterministic
     /// backlog for tests and maintenance windows.
     pub fn pause(&self) {
-        self.shared.state.lock().unwrap().paused = true;
+        lock_recover(&self.shared.state).paused = true;
     }
 
     /// Resume dispatching after [`Self::pause`].
     pub fn resume(&self) {
-        self.shared.state.lock().unwrap().paused = false;
+        lock_recover(&self.shared.state).paused = false;
         self.shared.work.notify_all();
     }
 
     /// Requests currently waiting in the admission queue.
     pub fn queued(&self) -> usize {
-        self.shared.state.lock().unwrap().queue.len()
+        lock_recover(&self.shared.state).queue.len()
     }
 
     /// Gateway telemetry: counters + per-tenant latency histograms.
@@ -190,7 +189,7 @@ impl Gateway {
     /// dispatcher. Every admitted ticket still receives its result.
     /// Idempotent; also runs on drop.
     pub fn shutdown(&mut self) {
-        self.shared.state.lock().unwrap().shutdown = true;
+        lock_recover(&self.shared.state).shutdown = true;
         self.shared.work.notify_all();
         if let Some(handle) = self.dispatcher.take() {
             let _ = handle.join();
@@ -211,7 +210,7 @@ impl Drop for Gateway {
 fn dispatch_loop(shared: Arc<Shared>) {
     loop {
         let req = {
-            let mut state = shared.state.lock().unwrap();
+            let mut state = lock_recover(&shared.state);
             loop {
                 let can_pop = !state.queue.is_empty()
                     && (!state.paused || state.shutdown);
@@ -220,12 +219,15 @@ fn dispatch_loop(shared: Arc<Shared>) {
                         &mut state,
                         shared.cfg.starvation_bound,
                     )
-                    .expect("queue checked non-empty");
+                    .expect(
+                        "invariant: pop_next is Some on the queue just \
+                         checked non-empty under this lock",
+                    );
                 }
                 if state.shutdown {
                     return;
                 }
-                state = shared.work.wait(state).unwrap();
+                state = wait_recover(&shared.work, state);
             }
         };
         serve(&shared, req);
@@ -244,7 +246,7 @@ fn serve(shared: &Shared, req: Request) {
     );
     let service = t0.elapsed();
     {
-        let mut state = shared.state.lock().unwrap();
+        let mut state = lock_recover(&shared.state);
         if let Some(n) = state.inflight.get_mut(&req.tenant) {
             *n = n.saturating_sub(1);
             if *n == 0 {
@@ -308,7 +310,7 @@ fn run_request(
 ) -> Result<Vec<InferenceResult>> {
     let deployment = shared.coord.deploy(&req.spec)?;
     if let Some(&quota) =
-        shared.quotas.lock().unwrap().get(&req.tenant)
+        lock_recover(&shared.quotas).get(&req.tenant)
     {
         let runtime = &shared.coord.runtime;
         let resident: usize = shared

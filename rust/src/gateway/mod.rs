@@ -53,6 +53,15 @@ use crate::coordinator::Schedule;
 pub use dispatch::Gateway;
 pub use queue::{Completed, Ticket};
 
+/// Feature-gated re-exports of the queue internals so
+/// `tests/interleave.rs` can drive the *real* admission/rendezvous
+/// protocols (not copies of them) under the deterministic interleaving
+/// explorer (`analysis::explore`).
+#[cfg(any(test, feature = "interleave"))]
+pub mod model {
+    pub use super::queue::{pop_next, QueueState, ReplySlot, Request};
+}
+
 /// Admission/scheduling knobs for a [`Gateway`].
 #[derive(Debug, Clone)]
 pub struct GatewayConfig {

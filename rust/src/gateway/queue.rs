@@ -1,9 +1,17 @@
 //! The admission queue: request records, deadline/priority ordering,
 //! and the blocking [`Ticket`] reply path.
+//!
+//! Synchronization goes through the `analysis::sync` façade, and every
+//! lock/wait uses the poison-recovering helpers: a dispatcher that
+//! panicked while holding a lock must never strand a blocked
+//! [`Ticket::wait`] caller (the protected values — a result slot, a
+//! queue of owned requests — are valid at every yield point).
 
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::analysis::sync::{lock_recover, wait_recover, Condvar, Mutex};
 
 use anyhow::Result;
 
@@ -14,7 +22,11 @@ use crate::power::OperatingPoint;
 use super::Priority;
 
 /// One admitted request waiting in (or popped from) the queue.
-pub(super) struct Request {
+///
+/// `pub` (inside a private module) rather than `pub(super)` so the
+/// feature-gated [`crate::gateway::model`] re-export can hand the real
+/// type to the interleaving tests.
+pub struct Request {
     /// Arrival order: monotonically increasing admission id — the
     /// aging/tie-break key.
     pub id: u64,
@@ -32,13 +44,19 @@ pub(super) struct Request {
 }
 
 /// The rendezvous between the dispatcher and a waiting caller.
-pub(super) struct ReplySlot {
+///
+/// Protocol invariant (checked under the interleaving explorer): the
+/// waiter is only ever woken *after* the result was stored under the
+/// same mutex — store-then-notify, with the waiter re-checking the slot
+/// in a loop. Either order of fill vs. wait delivers exactly once.
+pub struct ReplySlot {
     result: Mutex<Option<Result<Completed>>>,
     ready: Condvar,
 }
 
 impl ReplySlot {
-    pub(super) fn new() -> Arc<Self> {
+    /// A fresh, empty slot.
+    pub fn new() -> Arc<Self> {
         Arc::new(Self {
             result: Mutex::new(None),
             ready: Condvar::new(),
@@ -46,18 +64,20 @@ impl ReplySlot {
     }
 
     /// Deliver the result and wake the waiter (dispatcher side).
-    pub(super) fn fill(&self, result: Result<Completed>) {
-        *self.result.lock().unwrap() = Some(result);
+    /// Poison-recovering: a dispatcher unwinding through other locks
+    /// must still complete this delivery.
+    pub fn fill(&self, result: Result<Completed>) {
+        *lock_recover(&self.result) = Some(result);
         self.ready.notify_all();
     }
 
     fn take_blocking(&self) -> Result<Completed> {
-        let mut guard = self.result.lock().unwrap();
+        let mut guard = lock_recover(&self.result);
         loop {
             if let Some(result) = guard.take() {
                 return result;
             }
-            guard = self.ready.wait(guard).unwrap();
+            guard = wait_recover(&self.ready, guard);
         }
     }
 }
@@ -81,6 +101,14 @@ impl Ticket {
     pub fn wait(self) -> Result<Completed> {
         self.slot.take_blocking()
     }
+
+    /// Build a ticket over an explicit slot — for the interleaving
+    /// tests, which drive the real wait/fill rendezvous under the
+    /// schedule explorer without a gateway around it.
+    #[cfg(any(test, feature = "interleave"))]
+    pub fn for_model(id: u64, slot: Arc<ReplySlot>) -> Self {
+        Self { id, slot }
+    }
 }
 
 /// A finished request: per-image results plus serving metadata.
@@ -101,7 +129,7 @@ pub struct Completed {
 }
 
 /// Mutable queue state behind the gateway's single mutex.
-pub(super) struct QueueState {
+pub struct QueueState {
     pub queue: Vec<Request>,
     /// Admitted-but-not-completed request count per tenant.
     pub inflight: HashMap<String, usize>,
@@ -116,7 +144,8 @@ pub(super) struct QueueState {
 }
 
 impl QueueState {
-    pub(super) fn new() -> Self {
+    /// Fresh, empty queue state.
+    pub fn new() -> Self {
         Self {
             queue: Vec::new(),
             inflight: HashMap::new(),
@@ -128,11 +157,17 @@ impl QueueState {
     }
 }
 
+impl Default for QueueState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Pop the next request: normally the (priority, deadline, arrival)
 /// minimum; every `starvation_bound`th pop instead takes the globally
 /// oldest request, so a steady high-priority stream cannot starve bulk
 /// traffic forever. Returns `None` on an empty queue.
-pub(super) fn pop_next(
+pub fn pop_next(
     state: &mut QueueState,
     starvation_bound: usize,
 ) -> Option<Request> {
@@ -150,7 +185,7 @@ pub(super) fn pop_next(
             .enumerate()
             .min_by_key(|(_, r)| r.id)
             .map(|(i, _)| i)
-            .expect("non-empty queue")
+            .expect("invariant: a non-empty queue has a minimum")
     } else {
         state.priority_pops += 1;
         state
@@ -165,7 +200,7 @@ pub(super) fn pop_next(
                     .then_with(|| a.id.cmp(&b.id))
             })
             .map(|(i, _)| i)
-            .expect("non-empty queue")
+            .expect("invariant: a non-empty queue has a minimum")
     };
     Some(state.queue.swap_remove(idx))
 }
@@ -261,5 +296,28 @@ mod tests {
         let mut state = QueueState::new();
         assert!(pop_next(&mut state, 4).is_none());
         assert!(pop_next(&mut state, 0).is_none());
+    }
+
+    /// Regression (issue 9 satellite): a thread that panics while
+    /// holding the reply-slot mutex poisons it — fill and wait must
+    /// recover and still deliver, never strand the waiter or cascade
+    /// the panic.
+    #[test]
+    fn poisoned_reply_slot_still_delivers() {
+        let slot = ReplySlot::new();
+        let poisoner = slot.clone();
+        let panicked = std::thread::spawn(move || {
+            let _guard = poisoner.result.lock();
+            panic!("dispatcher died mid-delivery");
+        })
+        .join();
+        assert!(panicked.is_err(), "the poisoner must have panicked");
+        // dispatcher side: fill recovers the poisoned lock
+        slot.fill(Err(anyhow::anyhow!("request failed")));
+        // caller side: wait recovers too and gets the result
+        match Ticket::for_model(7, slot).wait() {
+            Err(e) => assert_eq!(e.to_string(), "request failed"),
+            Ok(_) => panic!("expected the filled error to come through"),
+        }
     }
 }

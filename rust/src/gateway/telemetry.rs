@@ -10,8 +10,8 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
+use crate::analysis::sync::{lock_recover, Mutex};
 use crate::dnn::NetworkSpec;
 
 /// Log2-bucketed latency histogram: bucket `i` holds samples in
@@ -179,22 +179,20 @@ impl GatewayTelemetry {
     /// Distinct specs `tenant` has served — the byte-quota accounting
     /// set ([`crate::gateway::Gateway::set_tenant_quota`]).
     pub fn tenant_specs(&self, tenant: &str) -> Vec<NetworkSpec> {
-        self.tenants
-            .lock()
-            .unwrap()
+        lock_recover(&self.tenants)
             .get(tenant)
             .map(|t| t.specs.clone())
             .unwrap_or_default()
     }
 
     fn tenant_mut(&self, tenant: &str, f: impl FnOnce(&mut TenantStats)) {
-        let mut tenants = self.tenants.lock().unwrap();
+        let mut tenants = lock_recover(&self.tenants);
         f(tenants.entry(tenant.to_string()).or_default());
     }
 
     /// An immutable point-in-time view of all counters and tenants.
     pub fn snapshot(&self) -> GatewaySnapshot {
-        let tenants = self.tenants.lock().unwrap();
+        let tenants = lock_recover(&self.tenants);
         let mut rows: Vec<TenantSnapshot> = tenants
             .iter()
             .map(|(name, t)| TenantSnapshot {

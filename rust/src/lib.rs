@@ -35,8 +35,12 @@
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::type_complexity)]
+// Second line of defense behind ci/lint_invariants.py: every unsafe
+// block must carry a `// SAFETY:` argument.
+#![warn(clippy::undocumented_unsafe_blocks)]
 
 pub mod abb;
+pub mod analysis;
 pub mod cluster;
 pub mod coordinator;
 pub mod core;

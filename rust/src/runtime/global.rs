@@ -42,8 +42,10 @@ use std::any::Any;
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, OnceLock};
+
+use crate::analysis::sync::{AtomicUsize, Condvar, Mutex};
 
 use super::pool::ExecPool;
 
@@ -266,7 +268,29 @@ impl GlobalRuntime {
         // every per-item clone was dropped before its `done` increment,
         // and `done == n` was observed under the state mutex, so this
         // take drops the last reference to the task object.
-        drop(job.task.lock().unwrap().take());
+        debug_assert!(
+            job.done.load(Ordering::Acquire) == job.n,
+            "invariant: reclaim only after the barrier (done == n)"
+        );
+        let reclaimed = job.task.lock().unwrap().take();
+        debug_assert!(
+            reclaimed.is_some(),
+            "invariant: the task slot holds the task until this \
+             (single) reclaim — nothing else takes it"
+        );
+        if let Some(t) = reclaimed.as_ref() {
+            // Workers may still hold `Arc<JobCore>` clones, but every
+            // per-item *task* clone was dropped before its `done`
+            // increment — so with `done == n` observed, this handle is
+            // provably the last one. This count is what makes
+            // `scatter_scoped`'s lifetime erasure sound.
+            debug_assert_eq!(
+                Arc::strong_count(t),
+                1,
+                "invariant: no task clone survives the barrier"
+            );
+        }
+        drop(reclaimed);
         if let Some(p) = job.panic.lock().unwrap().take() {
             resume_unwind(p);
         }
@@ -284,13 +308,36 @@ impl GlobalRuntime {
         n: usize,
         task: Arc<dyn Fn(usize) + Send + Sync + 'env>,
     ) {
-        // SAFETY: lifetime erasure only — the fat pointer is unchanged.
-        // The runtime invokes the task only between submission and the
-        // `done == n` barrier inside `scatter`, per-invocation clones
-        // are dropped before their item counts done (`run_chunk`), and
-        // `scatter` reclaims and drops the task object itself before
-        // returning. Hence no use *or drop* of the closure outlives
-        // this call, which is exactly the `'env` contract.
+        // SAFETY: this transmute erases ONLY the closure's `'env`
+        // lifetime bound — `Arc<dyn Fn(usize) + Send + Sync + 'env>`
+        // to `... + 'static`. Both are `Arc<dyn Trait>` fat pointers
+        // with identical layout (same data pointer, same vtable);
+        // nothing about the value's representation changes, so the
+        // only obligation is proving no use of the closure escapes
+        // `'env`. The reclaim protocol bounds every such use inside
+        // this very call:
+        //
+        // 1. The task object lives in `JobCore::task` and is reachable
+        //    only through per-item `Chunk`s queued by `scatter`.
+        // 2. A worker running an item clones the task `Arc` out, calls
+        //    it, and drops the clone BEFORE counting the item `done` —
+        //    and that count happens under the state mutex
+        //    (`run_chunk`), so it happens-before any observation of
+        //    `done == n` made under the same mutex.
+        // 3. `scatter` returns only after observing `done == n` and
+        //    then taking + dropping the task from its slot; at that
+        //    point step 2 guarantees the slot held the LAST strong
+        //    reference (debug-asserted on the reclaim path), so the
+        //    closure — and every `'env` borrow inside it — is dead
+        //    before `scatter_scoped` returns.
+        // 4. Panics don't break the chain: a panicking item still
+        //    drops its clone (the clone is consumed by the
+        //    `catch_unwind` scope) and still counts `done`; the
+        //    submitter re-raises only after reclaiming.
+        //
+        // This is the `std::thread::scope` argument: a strict barrier
+        // that both finishes every invocation and destroys every
+        // handle before the borrowed scope ends.
         let task: GlobalTask = unsafe { std::mem::transmute(task) };
         self.scatter(n, task);
     }
@@ -319,7 +366,11 @@ impl GlobalRuntime {
             }
         }
         let _q = self.inner.state.lock().unwrap();
-        c.job.done.fetch_add(1, Ordering::Release);
+        let prev = c.job.done.fetch_add(1, Ordering::Release);
+        debug_assert!(
+            prev < c.job.n,
+            "invariant: done <= n — each queued index counts once"
+        );
         self.inner.work.notify_all();
     }
 }
@@ -752,5 +803,47 @@ mod tests {
         let t = rt.telemetry();
         assert!(t.steals >= before, "steal counter must not regress");
         assert_eq!(t.jobs, 8 + 8 * 4, "outer jobs + one nested job each");
+    }
+
+    /// The transmute path under direct test (and the prime Miri
+    /// target): a `'env` task borrowing the submitter's stack, pushed
+    /// through `scatter_scoped`'s lifetime erasure. Reading the
+    /// borrowed data after the barrier is exactly what the reclaim
+    /// protocol must make sound.
+    #[test]
+    fn scatter_scoped_borrows_stack_data() {
+        let rt = GlobalRuntime::new(4);
+        let inputs: Vec<usize> = (0..32).collect();
+        let outputs: Vec<AtomicUsize> =
+            (0..32).map(|_| AtomicUsize::new(0)).collect();
+        {
+            let (inputs, outputs) = (&inputs, &outputs);
+            rt.scatter_scoped(
+                32,
+                Arc::new(move |i: usize| {
+                    outputs[i].store(inputs[i] * 3, Ordering::Relaxed);
+                }),
+            );
+        }
+        for (i, o) in outputs.iter().enumerate() {
+            assert_eq!(o.load(Ordering::Relaxed), i * 3);
+        }
+        // a second scoped job over fresh borrows — the erased closure
+        // from round one must be fully dead (Miri would flag any
+        // dangling use)
+        let flags: Vec<AtomicUsize> =
+            (0..8).map(|_| AtomicUsize::new(0)).collect();
+        {
+            let flags = &flags;
+            rt.scatter_scoped(
+                8,
+                Arc::new(move |i: usize| {
+                    flags[i].fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+        }
+        assert!(flags
+            .iter()
+            .all(|f| f.load(Ordering::Relaxed) == 1));
     }
 }

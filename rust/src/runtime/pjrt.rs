@@ -76,10 +76,12 @@ struct PjrtExec {
     name: String,
 }
 
-// The xla crate wraps C++ objects behind raw pointers without Send/Sync
-// markers; PJRT CPU client objects are documented thread-safe for
-// execute().
+// SAFETY: the xla crate wraps C++ objects behind raw pointers without
+// Send/Sync markers; PJRT CPU client objects are documented thread-safe
+// for execute(), and PjrtExec exposes nothing else.
 unsafe impl Send for PjrtExec {}
+// SAFETY: same argument as Send — shared-reference use is limited to
+// execute(), which PJRT documents as thread-safe.
 unsafe impl Sync for PjrtExec {}
 
 impl PjrtExec {

@@ -23,8 +23,10 @@
 //! `unsafe`), while long-lived operands (the compiled plan, the
 //! coordinator) are borrowed at the pool's `'env` lifetime.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::analysis::sync::{AtomicUsize, Condvar, Mutex};
 
 /// One indexed task set: workers call `task(i)` for every `i in 0..n`,
 /// each index exactly once.

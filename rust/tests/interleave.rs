@@ -1,0 +1,524 @@
+//! Interleaving tests: the runtime/gateway synchronization protocols
+//! driven through the deterministic schedule explorer
+//! (`analysis::explore`). Run with:
+//!
+//! ```text
+//! cargo test --features interleave --test interleave
+//! ```
+//!
+//! Two kinds of test live here:
+//!
+//! * **Protocol models** — the exact lock/condvar/atomic shape of a
+//!   production protocol (the global runtime's task-reclaim barrier,
+//!   the panic stash) rebuilt over the instrumented shims, in both the
+//!   real shape (must pass every explored schedule) and a deliberately
+//!   broken shape (the explorer must find the failing schedule). The
+//!   broken variants are the harness's own regression tests: if a
+//!   refactor ever blinds the explorer, these fail first.
+//! * **Real-code drives** — the actual `ReplySlot`/`Ticket` rendezvous
+//!   and the actual `QueueState`/`pop_next` admission queue (via the
+//!   feature-gated `gateway::model` re-exports) run under the explorer,
+//!   so the invariants hold for the shipped code, not a copy of it.
+
+#![cfg(feature = "interleave")]
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use marsellus::analysis::explore::{
+    explore, explore_collect, spawn, ExploreOpts,
+};
+use marsellus::analysis::sync::{AtomicUsize, Condvar, Mutex};
+use marsellus::dnn::{NetworkSpec, PrecisionConfig};
+use marsellus::gateway::model::{
+    pop_next, QueueState, ReplySlot, Request,
+};
+use marsellus::gateway::{Completed, Priority, Ticket};
+use marsellus::power::OperatingPoint;
+
+fn opts(max_schedules: usize) -> ExploreOpts {
+    ExploreOpts { max_schedules, ..ExploreOpts::default() }
+}
+
+// ---------------------------------------------------------------------
+// Task-reclaim barrier (runtime/global.rs JobCore protocol)
+// ---------------------------------------------------------------------
+
+/// Model of `JobCore`: the task slot, the `done` barrier counter
+/// guarded-by-convention under the state mutex, and the wakeup condvar.
+/// The task stand-in is an `Arc<()>` so `Arc::strong_count` observes
+/// clone lifetime exactly like the real `GlobalTask`.
+struct ReclaimModel {
+    task: Mutex<Option<Arc<()>>>,
+    done: AtomicUsize,
+    n: usize,
+    state: Mutex<()>,
+    barrier: Condvar,
+}
+
+impl ReclaimModel {
+    fn new(n: usize) -> Arc<Self> {
+        Arc::new(Self {
+            task: Mutex::new(Some(Arc::new(()))),
+            done: AtomicUsize::new(0),
+            n,
+            state: Mutex::new(()),
+            barrier: Condvar::new(),
+        })
+    }
+
+    /// One worker serving one item, the shipped shape: clone the task
+    /// out, run it, drop the clone, THEN count the item done under the
+    /// state mutex (`run_chunk`).
+    fn run_item_correct(&self) {
+        let task = self
+            .task
+            .lock()
+            .unwrap()
+            .clone()
+            .expect("task reclaimed before barrier");
+        // (the item body would run here)
+        drop(task);
+        let _g = self.state.lock().unwrap();
+        self.done.fetch_add(1, Ordering::SeqCst);
+        self.barrier.notify_all();
+    }
+
+    /// The seeded bug: count `done` (and wake the submitter) while the
+    /// task clone is still alive. A submitter that reclaims on
+    /// `done == n` can then observe a surviving clone — the exact
+    /// soundness hole the real protocol's drop-before-count closes.
+    fn run_item_broken(&self) {
+        let task = self
+            .task
+            .lock()
+            .unwrap()
+            .clone()
+            .expect("task reclaimed before barrier");
+        {
+            let _g = self.state.lock().unwrap();
+            self.done.fetch_add(1, Ordering::SeqCst);
+            self.barrier.notify_all();
+        }
+        drop(task); // too late: the barrier may already have resolved
+    }
+
+    /// The submitter side of `scatter`: wait out the barrier under the
+    /// state mutex, then reclaim the task and assert it holds the last
+    /// reference — the invariant `scatter_scoped`'s transmute rests on.
+    fn reclaim_after_barrier(&self) {
+        let mut g = self.state.lock().unwrap();
+        while self.done.load(Ordering::SeqCst) < self.n {
+            g = self.barrier.wait(g).unwrap();
+        }
+        drop(g);
+        let task = self
+            .task
+            .lock()
+            .unwrap()
+            .take()
+            .expect("invariant: task reclaimed exactly once");
+        assert_eq!(
+            Arc::strong_count(&task),
+            1,
+            "invariant: task clone survived the barrier"
+        );
+    }
+}
+
+fn drive_reclaim(model: &Arc<ReclaimModel>, broken: bool) {
+    let mut workers = Vec::new();
+    for _ in 0..model.n {
+        let m = model.clone();
+        workers.push(spawn(move || {
+            if broken {
+                m.run_item_broken();
+            } else {
+                m.run_item_correct();
+            }
+        }));
+    }
+    model.reclaim_after_barrier();
+    for w in workers {
+        w.join();
+    }
+}
+
+/// The shipped drop-before-count protocol: every explored schedule
+/// reclaims exactly once, after the barrier, with no clone surviving.
+#[test]
+fn reclaim_protocol_holds_under_all_schedules() {
+    let report = explore(opts(20_000), || {
+        let model = ReclaimModel::new(2);
+        drive_reclaim(&model, false);
+    });
+    assert!(report.schedules > 10, "trivial exploration: {report:?}");
+}
+
+/// Acceptance gate: the deliberately broken variant (count before
+/// drop) must fail in some explored schedule — proof the explorer can
+/// see the bug class the real protocol is defending against.
+#[test]
+fn reclaim_counting_before_drop_is_caught() {
+    let err = explore_collect(opts(20_000), || {
+        let model = ReclaimModel::new(2);
+        drive_reclaim(&model, true);
+    })
+    .expect_err("explorer must catch the premature done-count");
+    assert!(
+        err.contains("task clone survived the barrier"),
+        "unexpected failure: {err}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Panic stash (JobCore::panic — first panic wins, resumed exactly once)
+// ---------------------------------------------------------------------
+
+/// Model of the pool/runtime panic protocol: panicking items stash
+/// their payload (first wins) and still count done; the submitter
+/// resumes the stash exactly once, after the barrier.
+#[test]
+fn panic_stash_resumes_exactly_once() {
+    let report = explore(opts(20_000), || {
+        struct PanicModel {
+            stash: Mutex<Option<&'static str>>,
+            done: AtomicUsize,
+            state: Mutex<()>,
+            barrier: Condvar,
+        }
+        let m = Arc::new(PanicModel {
+            stash: Mutex::new(None),
+            done: AtomicUsize::new(0),
+            state: Mutex::new(()),
+            barrier: Condvar::new(),
+        });
+        let mut workers = Vec::new();
+        for name in ["tile 3 exploded", "tile 7 exploded"] {
+            let m = m.clone();
+            workers.push(spawn(move || {
+                // catch_unwind equivalent: the panic becomes a stash
+                // entry, first one wins, the item still counts done
+                {
+                    let mut stash = m.stash.lock().unwrap();
+                    if stash.is_none() {
+                        *stash = Some(name);
+                    }
+                }
+                let _g = m.state.lock().unwrap();
+                m.done.fetch_add(1, Ordering::SeqCst);
+                m.barrier.notify_all();
+            }));
+        }
+        // submitter: barrier, then resume the stash exactly once
+        {
+            let mut g = m.state.lock().unwrap();
+            while m.done.load(Ordering::SeqCst) < 2 {
+                g = m.barrier.wait(g).unwrap();
+            }
+        }
+        let first = m.stash.lock().unwrap().take();
+        assert!(
+            first.is_some(),
+            "invariant: a stashed panic is resumed after the barrier"
+        );
+        let second = m.stash.lock().unwrap().take();
+        assert!(
+            second.is_none(),
+            "invariant: panics are resumed exactly once"
+        );
+        for w in workers {
+            w.join();
+        }
+    });
+    assert!(report.schedules > 10, "trivial exploration: {report:?}");
+}
+
+// ---------------------------------------------------------------------
+// Ticket rendezvous (real ReplySlot under the explorer)
+// ---------------------------------------------------------------------
+
+fn completed(finish_seq: u64) -> Completed {
+    Completed {
+        results: Vec::new(),
+        queued: Duration::ZERO,
+        service: Duration::ZERO,
+        deadline_missed: false,
+        finish_seq,
+    }
+}
+
+/// The real `ReplySlot`/`Ticket` rendezvous: fill racing wait delivers
+/// the result exactly once in every explored schedule — no ticket is
+/// woken without a result, no result is lost.
+#[test]
+fn real_reply_slot_delivers_under_all_schedules() {
+    let report = explore(opts(20_000), || {
+        let slot = ReplySlot::new();
+        let filler = slot.clone();
+        let dispatcher = spawn(move || {
+            filler.fill(Ok(completed(41)));
+        });
+        let out = Ticket::for_model(1, slot)
+            .wait()
+            .expect("filled Ok must arrive as Ok");
+        assert_eq!(out.finish_seq, 41, "wrong result delivered");
+        dispatcher.join();
+    });
+    assert!(report.schedules > 1, "trivial exploration: {report:?}");
+}
+
+/// Counter-model: a rendezvous with the two classic bugs — notify
+/// before store, and a single-check (`if`, not `while`) wait. The
+/// explorer must find a schedule where the waiter wakes without a
+/// result or sleeps through a lost wakeup.
+#[test]
+fn broken_rendezvous_is_caught() {
+    struct BrokenSlot {
+        result: Mutex<Option<u32>>,
+        ready: Condvar,
+    }
+    let err = explore_collect(opts(20_000), || {
+        let slot = Arc::new(BrokenSlot {
+            result: Mutex::new(None),
+            ready: Condvar::new(),
+        });
+        let filler = slot.clone();
+        let h = spawn(move || {
+            filler.ready.notify_all(); // BROKEN: notify before store
+            *filler.result.lock().unwrap() = Some(99);
+        });
+        let mut g = slot.result.lock().unwrap();
+        if g.is_none() {
+            // BROKEN: single check — a wakeup is trusted blindly
+            g = slot.ready.wait(g).unwrap();
+        }
+        let v = g.take().expect("woken without a result");
+        assert_eq!(v, 99);
+        drop(g);
+        h.join();
+    })
+    .expect_err("explorer must catch the broken rendezvous");
+    assert!(
+        err.contains("woken without a result") || err.contains("deadlock"),
+        "unexpected failure: {err}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Shutdown vs. submit (real QueueState + pop_next under the explorer)
+// ---------------------------------------------------------------------
+
+fn model_request(id: u64, priority: Priority) -> Request {
+    Request {
+        id,
+        tenant: "t".into(),
+        spec: NetworkSpec::new("kws", PrecisionConfig::Mixed, 1),
+        op: OperatingPoint::at_vdd(0.8),
+        images: Vec::new(),
+        priority,
+        submitted: Instant::now(),
+        deadline: None,
+        reply: ReplySlot::new(),
+    }
+}
+
+/// Dispatcher model over the REAL `QueueState`/`pop_next`: the shipped
+/// `dispatch_loop` shape — pop while non-empty, exit only when
+/// shutdown AND drained, serve through the real `ReplySlot`.
+fn dispatcher_drains(
+    state: &Arc<(Mutex<QueueState>, Condvar)>,
+    drain_before_exit: bool,
+) {
+    let mut seq = 0u64;
+    loop {
+        let req = {
+            let mut st = state.0.lock().unwrap();
+            loop {
+                if !drain_before_exit && st.shutdown {
+                    // BROKEN: exit on the flag alone, stranding
+                    // whatever was admitted before the flag flipped
+                    return;
+                }
+                if !st.queue.is_empty() {
+                    break pop_next(&mut st, 2)
+                        .expect("invariant: non-empty queue pops");
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = state.1.wait(st).unwrap();
+            }
+        };
+        seq += 1;
+        req.reply.fill(Ok(completed(seq)));
+    }
+}
+
+/// Submit racing shutdown must end in exactly one of: a served result,
+/// or a typed shutdown rejection. Never a hang — the explorer turns a
+/// stranded waiter into a reported deadlock.
+#[test]
+fn shutdown_vs_submit_never_strands_a_ticket() {
+    let report = explore(opts(30_000), || {
+        let state =
+            Arc::new((Mutex::new(QueueState::new()), Condvar::new()));
+        let disp_state = state.clone();
+        let dispatcher = spawn(move || dispatcher_drains(&disp_state, true));
+        let shut_state = state.clone();
+        let shutter = spawn(move || {
+            shut_state.0.lock().unwrap().shutdown = true;
+            shut_state.1.notify_all();
+        });
+        // submitter (the model main thread): the shipped submit shape
+        let ticket = {
+            let mut st = state.0.lock().unwrap();
+            if st.shutdown {
+                None // typed ShuttingDown rejection
+            } else {
+                let req = model_request(st.next_id, Priority::Normal);
+                st.next_id += 1;
+                let slot = req.reply.clone();
+                st.queue.push(req);
+                drop(st);
+                state.1.notify_all();
+                Some(Ticket::for_model(0, slot))
+            }
+        };
+        if let Some(t) = ticket {
+            // admitted: the ticket MUST resolve even though shutdown
+            // raced the submission
+            t.wait().expect("admitted request must be served");
+        }
+        shutter.join();
+        dispatcher.join();
+    });
+    assert!(report.schedules > 10, "trivial exploration: {report:?}");
+}
+
+/// Counter-model: a dispatcher that exits on the shutdown flag without
+/// draining strands the racing submitter's ticket — the explorer must
+/// find that schedule and report the stranded waiter as a deadlock.
+#[test]
+fn non_draining_shutdown_is_caught() {
+    let err = explore_collect(opts(30_000), || {
+        let state =
+            Arc::new((Mutex::new(QueueState::new()), Condvar::new()));
+        let disp_state = state.clone();
+        let dispatcher =
+            spawn(move || dispatcher_drains(&disp_state, false));
+        let shut_state = state.clone();
+        let shutter = spawn(move || {
+            shut_state.0.lock().unwrap().shutdown = true;
+            shut_state.1.notify_all();
+        });
+        let ticket = {
+            let mut st = state.0.lock().unwrap();
+            if st.shutdown {
+                None
+            } else {
+                let req = model_request(st.next_id, Priority::Normal);
+                st.next_id += 1;
+                let slot = req.reply.clone();
+                st.queue.push(req);
+                drop(st);
+                state.1.notify_all();
+                Some(Ticket::for_model(0, slot))
+            }
+        };
+        if let Some(t) = ticket {
+            t.wait().expect("admitted request must be served");
+        }
+        shutter.join();
+        dispatcher.join();
+    })
+    .expect_err("explorer must catch the stranded ticket");
+    assert!(err.contains("deadlock"), "unexpected failure: {err}");
+}
+
+// ---------------------------------------------------------------------
+// Pop order (real pop_next: priority order within the starvation bound)
+// ---------------------------------------------------------------------
+
+/// `Priority::rank` mirrored for the spec check (the crate keeps the
+/// real one `pub(crate)`).
+fn rank(p: Priority) -> u8 {
+    match p {
+        Priority::High => 0,
+        Priority::Normal => 1,
+        Priority::Low => 2,
+    }
+}
+
+/// Concurrent submitters + a popping dispatcher over the real
+/// `pop_next`: in every explored schedule, every pop is either the
+/// (priority, deadline, arrival) minimum of the queue at that moment,
+/// or — exactly at the starvation bound — the globally oldest request.
+#[test]
+fn pop_order_spec_holds_under_concurrent_submission() {
+    const BOUND: usize = 2;
+    let report = explore(opts(30_000), || {
+        let state =
+            Arc::new((Mutex::new(QueueState::new()), Condvar::new()));
+        let mut submitters = Vec::new();
+        for prios in [
+            [Priority::High, Priority::Low],
+            [Priority::Normal, Priority::High],
+        ] {
+            let s = state.clone();
+            submitters.push(spawn(move || {
+                for p in prios {
+                    let mut st = s.0.lock().unwrap();
+                    let req = model_request(st.next_id, p);
+                    st.next_id += 1;
+                    st.queue.push(req);
+                    drop(st);
+                    s.1.notify_all();
+                }
+            }));
+        }
+        // dispatcher (model main thread): pop all four, checking each
+        // pop against the spec computed from the queue AT THAT MOMENT
+        let mut served = 0;
+        while served < 4 {
+            let mut st = state.0.lock().unwrap();
+            if st.queue.is_empty() {
+                let _ = state.1.wait(st).unwrap();
+                continue;
+            }
+            let aged = st.priority_pops + 1 >= BOUND;
+            let oldest = st
+                .queue
+                .iter()
+                .map(|r| r.id)
+                .min()
+                .expect("invariant: non-empty queue has an oldest");
+            let best = st
+                .queue
+                .iter()
+                .map(|r| (rank(r.priority), r.id))
+                .min()
+                .expect("invariant: non-empty queue has a minimum");
+            let popped = pop_next(&mut st, BOUND)
+                .expect("invariant: non-empty queue pops");
+            if aged {
+                assert_eq!(
+                    popped.id, oldest,
+                    "aged pop must take the globally oldest"
+                );
+            } else {
+                assert_eq!(
+                    (rank(popped.priority), popped.id),
+                    best,
+                    "ordered pop must take the (priority, arrival) min"
+                );
+            }
+            served += 1;
+        }
+        for s in submitters {
+            s.join();
+        }
+    });
+    assert!(report.schedules > 10, "trivial exploration: {report:?}");
+}
