@@ -8,7 +8,8 @@ ratios from every gated section: throughput (``speedup_planned`` /
 (``speedup_tile`` plus ``latency_*`` ms/thread context), the hybrid
 scheduler, the autotuner, the global runtime
 (``reuse_vs_provision`` / ``concurrent_vs_serial``), and the serving
-gateway (``gateway_vs_direct`` / ``fair_p99_ratio``). The history
+gateway (``gateway_vs_direct`` / ``fair_p99_ratio`` /
+``reap_overhead``). The history
 turns ``check_bench.py``'s >20% gate into a *trajectory* check: with
 ``--history``, the gate compares against the median of the recent
 entries instead of a single frozen point, so a slowly-eroding hot path
@@ -75,10 +76,13 @@ RECORDED = {
     "gateway": {
         "gateway_vs_direct": "gateway_vs_direct",
         "fair_p99_ratio": "fair_p99_ratio",
+        "reap_overhead": "reap_overhead",
         "direct_ms": "gateway_direct_ms",
         "gateway_ms": "gateway_best_ms",
         "a_p99_us": "gateway_a_p99_us",
         "b_p99_us": "gateway_b_p99_us",
+        "reap_enabled_ms": "gateway_reap_enabled_ms",
+        "reap_disabled_ms": "gateway_reap_disabled_ms",
         "threads": "gateway_threads",
     },
 }

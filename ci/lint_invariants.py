@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Repo-invariant lint: the conventions the concurrency layer depends on.
 
-Walks ``rust/src`` and fails (exit 1) on violations of four rules that
+Walks ``rust/src`` and fails (exit 1) on violations of five rules that
 keep the hand-rolled concurrency auditable. They are *project*
 invariants, not general style — each one guards an argument the runtime
 or gateway correctness story leans on:
@@ -32,8 +32,17 @@ R4  **no façade bypass** — ``runtime/global.rs``, ``runtime/pool.rs``
     or the interleaving explorer silently loses sight of their yield
     points.
 
+R5  **failpoints never reach release builds** — outside
+    ``analysis/failpoint.rs`` itself, any direct call into
+    ``analysis::failpoint::`` must sit under a
+    ``cfg(... feature = "chaos" ...)`` gate within the few lines above.
+    Production sites go through the ``failpoint!`` /
+    ``failpoint_shed!`` macros, which carry the gate internally and are
+    exempt — the rule catches a hand-written probe that would compile
+    fault-injection hooks into a release binary.
+
 Test code (from a ``#[cfg(test)]`` line to end of file, the repo's
-test-module convention) is exempt from R2 and R3.
+test-module convention) is exempt from R2, R3 and R5.
 
 Usage::
 
@@ -71,6 +80,14 @@ FACADE_BYPASS_RE = re.compile(
     r"std::sync::(\{[^}]*\b(Mutex|Condvar)\b[^}]*\}|(Mutex|Condvar)\b)"
 )
 CFG_TEST_RE = re.compile(r"#\[cfg\(test\)\]")
+
+# R5: lines above a direct failpoint call that may carry the chaos cfg
+# gate, and the patterns for both. The canonical gate is
+# `#[cfg(any(test, feature = "chaos"))]`, so matching on the feature
+# token alone accepts every accepted spelling.
+CHAOS_LOOKBACK = 3
+FAILPOINT_CALL_RE = re.compile(r"\banalysis::failpoint::")
+CHAOS_CFG_RE = re.compile(r'cfg\([^)]*feature\s*=\s*"chaos"')
 
 
 def strip_comment(line: str) -> str:
@@ -178,11 +195,36 @@ def check_facade_bypass(rel: str, lines: list[str]) -> list[str]:
     return problems
 
 
+def check_failpoint_gating(rel: str, lines: list[str]) -> list[str]:
+    """R5: direct ``analysis::failpoint::`` calls need a chaos cfg gate
+    in the lookback window (the failpoint module itself is exempt; the
+    self-gating macros never match this pattern)."""
+    if rel == "analysis/failpoint.rs":
+        return []
+    problems = []
+    cutoff = test_section_start(lines)
+    for i, line in enumerate(lines[:cutoff]):
+        code = strip_comment(line)
+        if not FAILPOINT_CALL_RE.search(code):
+            continue
+        context = lines[max(0, i - CHAOS_LOOKBACK) : i + 1]
+        if any(CHAOS_CFG_RE.search(c) for c in context):
+            continue
+        problems.append(
+            f"{rel}:{i + 1}: R5 direct analysis::failpoint call without "
+            f'a cfg(feature = "chaos") gate above — use the failpoint! / '
+            f"failpoint_shed! macros (self-gating) or gate the call, or "
+            f"release builds ship fault-injection hooks"
+        )
+    return problems
+
+
 CHECKS = (
     check_unsafe_safety,
     check_thread_containment,
     check_gateway_hygiene,
     check_facade_bypass,
+    check_failpoint_gating,
 )
 
 
@@ -312,6 +354,45 @@ SELF_TEST_CASES = [
         check_facade_bypass,
         "coordinator/deploy.rs",
         ["use std::sync::{Arc, Mutex};"],
+        False,
+    ),
+    (
+        "R5 fires on an ungated failpoint call",
+        check_failpoint_gating,
+        "gateway/dispatch.rs",
+        ['crate::analysis::failpoint::fire("dispatch::pop");'],
+        True,
+    ),
+    (
+        "R5 quiet under the chaos cfg gate",
+        check_failpoint_gating,
+        "analysis/mod.rs",
+        ['#[cfg(any(test, feature = "chaos"))]',
+         'crate::analysis::failpoint::fire("dispatch::pop");'],
+        False,
+    ),
+    (
+        "R5 quiet on the self-gating macro",
+        check_failpoint_gating,
+        "gateway/dispatch.rs",
+        ['crate::failpoint!("dispatch::pop");'],
+        False,
+    ),
+    (
+        "R5 quiet inside the failpoint module itself",
+        check_failpoint_gating,
+        "analysis/failpoint.rs",
+        ['crate::analysis::failpoint::fire("x");'],
+        False,
+    ),
+    (
+        "R5 quiet in a test module",
+        check_failpoint_gating,
+        "gateway/mod.rs",
+        ["#[cfg(test)]",
+         "mod tests {",
+         'crate::analysis::failpoint::fire("x");',
+         "}"],
         False,
     ),
 ]

@@ -690,6 +690,8 @@ struct GatewayBench {
     gateway_ms: f64,
     a_p99_us: f64,
     b_p99_us: f64,
+    reap_enabled_ms: f64,
+    reap_disabled_ms: f64,
 }
 
 impl GatewayBench {
@@ -718,13 +720,24 @@ impl GatewayBench {
         lo / hi
     }
 
+    /// Non-reaping vs reaping gateway wall clock for the identical
+    /// far-deadline workload (nothing ever expires, so the two do the
+    /// same serving work). Gated >= 0.95 (exact) so the deadline
+    /// reaper's sweeps and timed wakeups can never cost more than 5%
+    /// on a workload where it sheds nothing.
+    fn reap_overhead(&self) -> f64 {
+        self.reap_disabled_ms / self.reap_enabled_ms
+    }
+
     fn to_json(&self) -> String {
         format!(
             " {{\n  \"threads\": {},\n  \"images\": {},\n  \
              \"iters\": {},\n  \"direct_ms\": {:.3},\n  \
              \"gateway_ms\": {:.3},\n  \"a_p99_us\": {:.1},\n  \
-             \"b_p99_us\": {:.1},\n  \"gateway_vs_direct\": {:.3},\n  \
-             \"fair_p99_ratio\": {:.3}\n }}",
+             \"b_p99_us\": {:.1},\n  \"reap_enabled_ms\": {:.3},\n  \
+             \"reap_disabled_ms\": {:.3},\n  \
+             \"gateway_vs_direct\": {:.3},\n  \
+             \"fair_p99_ratio\": {:.3},\n  \"reap_overhead\": {:.3}\n }}",
             self.threads,
             self.images,
             self.iters,
@@ -732,8 +745,11 @@ impl GatewayBench {
             self.gateway_ms,
             self.a_p99_us,
             self.b_p99_us,
+            self.reap_enabled_ms,
+            self.reap_disabled_ms,
             self.gateway_vs_direct(),
-            self.fair_p99_ratio()
+            self.fair_p99_ratio(),
+            self.reap_overhead()
         )
     }
 }
@@ -817,17 +833,14 @@ fn gateway_bench(smoke: bool) -> GatewayBench {
         }
         logits
     };
-    let gateway = Gateway::new(
-        coord.clone(),
-        GatewayConfig {
-            queue_depth: workload.len() * 2,
-            per_tenant_inflight: workload.len(),
-            default_deadline: None,
-            threads: 0,
-            starvation_bound: 4,
-        },
-    )
-    .expect("gateway");
+    let cfg = GatewayConfig {
+        queue_depth: workload.len() * 2,
+        per_tenant_inflight: workload.len(),
+        threads: 0,
+        ..GatewayConfig::default()
+    };
+    let gateway =
+        Gateway::new(coord.clone(), cfg.clone()).expect("gateway");
     let mut a_lat_us: Vec<f64> = Vec::new();
     let mut b_lat_us: Vec<f64> = Vec::new();
     let mut through = |collect: bool| -> Vec<Vec<Vec<i32>>> {
@@ -890,6 +903,51 @@ fn gateway_bench(smoke: bool) -> GatewayBench {
         gateway_ms = gateway_ms.min(t0.elapsed().as_secs_f64() * 1e3);
     }
 
+    // deadline-reap overhead: the identical workload under far (60s)
+    // deadlines — nothing ever expires, so a reaping and a non-reaping
+    // gateway do the same serving work and the wall-clock ratio
+    // isolates the reaper's sweep + timed-wakeup cost.
+    use std::time::Duration;
+    let timed = |gw: &Gateway| -> f64 {
+        let t0 = Instant::now();
+        let tickets: Vec<_> = workload
+            .iter()
+            .map(|(tenant, spec, imgs)| {
+                gw.submit(
+                    tenant,
+                    spec,
+                    &op,
+                    imgs.clone(),
+                    Priority::Normal,
+                    Some(Duration::from_secs(60)),
+                )
+                .expect("admission")
+            })
+            .collect();
+        for t in tickets {
+            t.wait().expect("gateway result");
+        }
+        t0.elapsed().as_secs_f64() * 1e3
+    };
+    let reaping = Gateway::new(
+        coord.clone(),
+        GatewayConfig { shed_expired: true, ..cfg.clone() },
+    )
+    .expect("gateway (reap on)");
+    let non_reaping = Gateway::new(
+        coord.clone(),
+        GatewayConfig { shed_expired: false, ..cfg },
+    )
+    .expect("gateway (reap off)");
+    timed(&reaping); // warm both
+    timed(&non_reaping);
+    let mut reap_enabled_ms = f64::INFINITY;
+    let mut reap_disabled_ms = f64::INFINITY;
+    for _ in 0..iters {
+        reap_enabled_ms = reap_enabled_ms.min(timed(&reaping));
+        reap_disabled_ms = reap_disabled_ms.min(timed(&non_reaping));
+    }
+
     GatewayBench {
         threads,
         images,
@@ -898,6 +956,8 @@ fn gateway_bench(smoke: bool) -> GatewayBench {
         gateway_ms,
         a_p99_us: quantile(&mut a_lat_us, 0.99),
         b_p99_us: quantile(&mut b_lat_us, 0.99),
+        reap_enabled_ms,
+        reap_disabled_ms,
     }
 }
 
@@ -1138,6 +1198,13 @@ fn main() {
         gtw.a_p99_us,
         gtw.b_p99_us,
         gtw.fair_p99_ratio()
+    );
+    println!(
+        "  deadline reaper {:>8.2} ms/workload on vs {:.2} ms off \
+         ({:.2}x; gated >= 0.95)",
+        gtw.reap_enabled_ms,
+        gtw.reap_disabled_ms,
+        gtw.reap_overhead()
     );
 
     if let Some(path) = json_path {

@@ -1,0 +1,305 @@
+//! Deterministic, seeded fault injection: named sites in the gateway
+//! and runtime that tests (and `marsellus serve --chaos`) can arm to
+//! panic, delay, or force a shed exactly where a real fault would
+//! land.
+//!
+//! The module is the software analogue of scan-chain fault insertion:
+//! instead of waiting for an overload, a cancellation race or a
+//! panicking kernel to happen by accident, a test *provokes* it at a
+//! named site and asserts the lifecycle invariants hold (every ticket
+//! resolves, counters reconcile, inflight slots release).
+//!
+//! Compiled only under `cfg(any(test, feature = "chaos"))` — release
+//! builds without the `chaos` feature contain no registry, no site
+//! lookups, nothing (the [`crate::failpoint!`] macro expands to a
+//! no-op; `ci/lint_invariants.py` rule R5 enforces that no call
+//! bypasses the gate). Everything here is process-global and
+//! deterministic: armed actions fire in arming order, and seeded mode
+//! decides each hit from a pure hash of `(seed, site, hit index)` so
+//! a chaos run replays exactly from its seed.
+//!
+//! This module deliberately uses `std::sync` directly rather than the
+//! [`super::sync`] façade: the registry is test scaffolding, not a
+//! protocol under exploration, and routing its locks through the shims
+//! would add yield points to every failpoint probe inside interleave
+//! models.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// What an armed failpoint does when its site is hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailAction {
+    /// Panic at the site (exercises catch_unwind / poison paths).
+    Panic,
+    /// Sleep this many microseconds at the site (widens race windows).
+    DelayUs(u64),
+    /// Report "shed this request" to sites that poll
+    /// [`should_shed`] (forced deadline-reap).
+    Shed,
+}
+
+struct Armed {
+    action: FailAction,
+    /// `None` = fire on every hit; `Some(n)` = fire `n` more times.
+    remaining: Option<u64>,
+}
+
+#[derive(Default)]
+struct Registry {
+    armed: HashMap<String, Armed>,
+    /// Seeded chaos mode: when set, *unarmed* sites also fire
+    /// pseudo-randomly from a pure hash of (seed, site, hit index).
+    seed: Option<u64>,
+    /// Per-site hit counters (every probe counts, fired or not).
+    hits: HashMap<String, u64>,
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Registry::default()))
+}
+
+fn lock() -> std::sync::MutexGuard<'static, Registry> {
+    // A panic injected by `fire` unwinds while this lock is *not*
+    // held (we drop before panicking), but a panicking test body can
+    // still poison it; recover like the gateway does.
+    registry().lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Arm `site` with `action` for every subsequent hit (until
+/// [`disarm_all`] or a re-arm).
+pub fn arm(site: &str, action: FailAction) {
+    lock().armed.insert(site.to_string(), Armed { action, remaining: None });
+}
+
+/// Arm `site` with `action` for exactly one hit; after it fires the
+/// site is disarmed (so a test can inject one panic, then prove the
+/// system recovered by driving the same path again).
+pub fn arm_once(site: &str, action: FailAction) {
+    lock()
+        .armed
+        .insert(site.to_string(), Armed { action, remaining: Some(1) });
+}
+
+/// Enter seeded chaos mode: every site decides per-hit from a pure
+/// hash of `(seed, site, hit index)` whether to fire, and which
+/// action. Deterministic — the same seed over the same request
+/// sequence replays the same faults.
+pub fn arm_seed(seed: u64) {
+    lock().seed = Some(seed);
+}
+
+/// Disarm every site, leave seeded mode, and reset hit counters.
+pub fn disarm_all() {
+    let mut reg = lock();
+    reg.armed.clear();
+    reg.seed = None;
+    reg.hits.clear();
+}
+
+/// How many times `site` has been probed (armed or not).
+pub fn hits(site: &str) -> u64 {
+    lock().hits.get(site).copied().unwrap_or(0)
+}
+
+/// SplitMix64 — a tiny, high-quality pure mix so seeded decisions are
+/// a function of nothing but their inputs.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+fn seeded_hash(seed: u64, site: &str, hit: u64) -> u64 {
+    let mut h = mix(seed);
+    for b in site.as_bytes() {
+        h = mix(h ^ u64::from(*b));
+    }
+    mix(h ^ hit)
+}
+
+/// Seeded decision for non-shed sites: mostly do nothing, sometimes
+/// delay, rarely panic — panics only at sites that declare themselves
+/// panic-safe (inside a `catch_unwind`).
+fn seeded_action(seed: u64, site: &str, hit: u64) -> Option<FailAction> {
+    let h = seeded_hash(seed, site, hit);
+    // ~1 in 4 hits fire at all; of those, panic-safe sites panic on a
+    // further 1-in-4, everything else delays 50..850us.
+    if h % 4 != 0 {
+        return None;
+    }
+    let panic_safe = site == "dispatch::serve";
+    if panic_safe && (h >> 8) % 4 == 0 {
+        Some(FailAction::Panic)
+    } else {
+        Some(FailAction::DelayUs(50 + (h >> 16) % 800))
+    }
+}
+
+/// Count a hit at `site` and return the action to perform, if any.
+/// Decrements one-shot arms. Drops the registry lock before returning
+/// so the caller can panic/sleep without holding it.
+fn decide(site: &str) -> Option<FailAction> {
+    let mut reg = lock();
+    let hit = reg.hits.entry(site.to_string()).or_insert(0);
+    let this_hit = *hit;
+    *hit += 1;
+    if let Some(armed) = reg.armed.get_mut(site) {
+        let action = armed.action;
+        match &mut armed.remaining {
+            None => return Some(action),
+            Some(n) => {
+                *n -= 1;
+                if *n == 0 {
+                    reg.armed.remove(site);
+                }
+                return Some(action);
+            }
+        }
+    }
+    let seed = reg.seed?;
+    seeded_action(seed, site, this_hit)
+}
+
+/// Probe `site`: panic or delay if armed (or if seeded chaos decides
+/// to). `Shed` arms are ignored here — they only answer
+/// [`should_shed`]. Call through the [`crate::failpoint!`] macro, not
+/// directly, so release builds compile the probe out.
+pub fn fire(site: &str) {
+    match decide(site) {
+        Some(FailAction::Panic) => {
+            panic!("failpoint {site:?}: injected panic")
+        }
+        Some(FailAction::DelayUs(us)) => {
+            std::thread::sleep(Duration::from_micros(us))
+        }
+        Some(FailAction::Shed) | None => {}
+    }
+}
+
+/// Probe `site` as a shed decision: `true` when a `Shed` action is
+/// armed there (or seeded chaos picks one). Call through the
+/// [`crate::failpoint_shed!`] macro.
+pub fn should_shed(site: &str) -> bool {
+    let mut reg = lock();
+    let hit = reg.hits.entry(site.to_string()).or_insert(0);
+    let this_hit = *hit;
+    *hit += 1;
+    if let Some(armed) = reg.armed.get_mut(site) {
+        if armed.action == FailAction::Shed {
+            match &mut armed.remaining {
+                None => return true,
+                Some(n) => {
+                    *n -= 1;
+                    if *n == 0 {
+                        reg.armed.remove(site);
+                    }
+                    return true;
+                }
+            }
+        }
+        return false;
+    }
+    match reg.seed {
+        // Forced sheds are rarer than delays: ~1 in 8 probes.
+        Some(seed) => seeded_hash(seed, site, this_hit) % 8 == 0,
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::MutexGuard;
+
+    /// The registry is process-global; serialize tests that touch it.
+    fn serial() -> MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    #[test]
+    fn unarmed_site_is_silent_and_counted() {
+        let _g = serial();
+        disarm_all();
+        fire("test::silent");
+        fire("test::silent");
+        assert_eq!(hits("test::silent"), 2);
+        assert!(!should_shed("test::silent"));
+        disarm_all();
+    }
+
+    #[test]
+    fn arm_once_fires_exactly_once() {
+        let _g = serial();
+        disarm_all();
+        arm_once("test::once", FailAction::Panic);
+        let err = std::panic::catch_unwind(|| fire("test::once"))
+            .expect_err("armed panic must fire");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("test::once"), "panic names the site: {msg}");
+        // Disarmed after one shot: the second probe is silent.
+        fire("test::once");
+        assert_eq!(hits("test::once"), 2);
+        disarm_all();
+    }
+
+    #[test]
+    fn shed_arms_only_answer_should_shed() {
+        let _g = serial();
+        disarm_all();
+        arm("test::shed", FailAction::Shed);
+        // `fire` ignores Shed actions entirely.
+        fire("test::shed");
+        assert!(should_shed("test::shed"));
+        assert!(should_shed("test::shed"), "persistent arm keeps firing");
+        disarm_all();
+        assert!(!should_shed("test::shed"));
+        disarm_all();
+    }
+
+    #[test]
+    fn seeded_decisions_replay_from_the_seed() {
+        let _g = serial();
+        disarm_all();
+        arm_seed(42);
+        let run_a: Vec<bool> =
+            (0..64).map(|_| should_shed("test::seeded")).collect();
+        disarm_all();
+        arm_seed(42);
+        let run_b: Vec<bool> =
+            (0..64).map(|_| should_shed("test::seeded")).collect();
+        disarm_all();
+        assert_eq!(run_a, run_b, "same seed, same trace");
+        assert!(run_a.iter().any(|&b| b), "seed 42 sheds at least once in 64");
+        assert!(!run_a.iter().all(|&b| b), "…but not every time");
+    }
+
+    #[test]
+    fn seeded_panics_are_confined_to_panic_safe_sites() {
+        // Pure-function check, no registry: seeded_action must never
+        // pick Panic outside the catch_unwind-protected serve site.
+        for seed in [1u64, 7, 42, 0xdead] {
+            for hit in 0..256 {
+                if let Some(FailAction::Panic) =
+                    seeded_action(seed, "gateway::submit", hit)
+                {
+                    panic!("submit site must never draw a seeded panic");
+                }
+            }
+            assert!(
+                (0..4096).any(|hit| matches!(
+                    seeded_action(seed, "dispatch::serve", hit),
+                    Some(FailAction::Panic)
+                )),
+                "serve site draws a seeded panic eventually (seed {seed})"
+            );
+        }
+    }
+}

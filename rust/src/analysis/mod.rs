@@ -22,11 +22,19 @@
 //!   replay, a preemption bound, and deadlock/live-lock detection.
 //!   `rust/tests/interleave.rs` drives the reclaim, ticket, shutdown
 //!   and pop-order protocols through it.
+//! * **`failpoint`** (under `cfg(any(test, feature = "chaos"))`) —
+//!   deterministic fault injection: named sites in the gateway and
+//!   runtime that tests and `marsellus serve --chaos` arm to panic,
+//!   delay, or force a shed exactly where a real fault would land.
+//!   The explorer proves protocols correct under every schedule; the
+//!   failpoints prove the *recovery* paths (panicked request, shed
+//!   deadline, cancel race) are actually reachable and leave the
+//!   telemetry reconciled.
 //! * **CI lanes outside this module** — `cargo miri test` (UB on the
 //!   transmute-bearing paths) and ThreadSanitizer (real weak-memory
 //!   races the serialized explorer cannot express), plus
 //!   `ci/lint_invariants.py` (SAFETY comments, thread containment,
-//!   gateway unwrap ban, façade bypass).
+//!   gateway unwrap ban, façade bypass, failpoint release gating).
 
 pub mod sync;
 
@@ -35,3 +43,36 @@ pub mod explore;
 
 #[cfg(any(test, feature = "interleave"))]
 mod shim;
+
+#[cfg(any(test, feature = "chaos"))]
+pub mod failpoint;
+
+/// Probe a named failpoint site: panic or delay there when a test or
+/// `--chaos` run armed it. Expands to nothing in builds without the
+/// harness, so production binaries carry no site lookups at all.
+#[macro_export]
+macro_rules! failpoint {
+    ($site:expr) => {{
+        #[cfg(any(test, feature = "chaos"))]
+        $crate::analysis::failpoint::fire($site);
+        #[cfg(not(any(test, feature = "chaos")))]
+        let _ = $site;
+    }};
+}
+
+/// Probe a named failpoint site for a forced-shed decision; evaluates
+/// to `false` (no shed) in builds without the harness.
+#[macro_export]
+macro_rules! failpoint_shed {
+    ($site:expr) => {{
+        #[cfg(any(test, feature = "chaos"))]
+        {
+            $crate::analysis::failpoint::should_shed($site)
+        }
+        #[cfg(not(any(test, feature = "chaos")))]
+        {
+            let _ = $site;
+            false
+        }
+    }};
+}

@@ -177,6 +177,60 @@ impl Condvar {
         }
     }
 
+    /// Wait with a timeout. Unlike `std`, the timed-out flag is not
+    /// returned (`std::sync::WaitTimeoutResult` has no public
+    /// constructor, so the shim could not fabricate one in model
+    /// mode); every caller in the tree re-checks its condition under
+    /// the lock anyway. In model mode the wait is modeled as an
+    /// *immediate timeout* — release, one yield point, re-acquire —
+    /// because virtual time does not advance inside an exploration and
+    /// a modeled sleep would just be a lost-wakeup false positive.
+    pub fn wait_timeout<'a, T: ?Sized>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: std::time::Duration,
+    ) -> LockResult<MutexGuard<'a, T>> {
+        if let Some((sched, me)) = current() {
+            let lock = guard.lock;
+            guard.virtual_held = false;
+            drop(guard.inner.take());
+            drop(guard);
+            sched.release(me, lock.id);
+            sched.yield_point(me, "timed wait (modeled as immediate timeout)");
+            sched.acquire(me, lock.id, "relock after timed wait");
+            return match lock.inner.lock() {
+                Ok(inner) => Ok(MutexGuard {
+                    lock,
+                    inner: Some(inner),
+                    virtual_held: true,
+                }),
+                Err(poison) => Err(PoisonError::new(MutexGuard {
+                    lock,
+                    inner: Some(poison.into_inner()),
+                    virtual_held: true,
+                })),
+            };
+        }
+        let lock = guard.lock;
+        let inner = guard.inner.take().expect("guard holds until drop");
+        std::mem::forget(guard);
+        match self.inner.wait_timeout(inner, dur) {
+            Ok((inner, _timed_out)) => Ok(MutexGuard {
+                lock,
+                inner: Some(inner),
+                virtual_held: false,
+            }),
+            Err(poison) => {
+                let (inner, _timed_out) = poison.into_inner();
+                Err(PoisonError::new(MutexGuard {
+                    lock,
+                    inner: Some(inner),
+                    virtual_held: false,
+                }))
+            }
+        }
+    }
+
     /// Wake all waiters.
     pub fn notify_all(&self) {
         if let Some((sched, me)) = current() {

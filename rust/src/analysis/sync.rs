@@ -43,3 +43,33 @@ pub fn wait_recover<'a, T: ?Sized>(
     cv.wait(guard)
         .unwrap_or_else(std::sync::PoisonError::into_inner)
 }
+
+/// `Condvar::wait_timeout` with the same poison-recovery policy as
+/// [`lock_recover`]. The timed-out flag is deliberately not returned:
+/// every caller in the tree (the dispatcher's reap tick) re-checks its
+/// condition under the lock, and the shim cannot fabricate a
+/// `std::sync::WaitTimeoutResult` in model mode anyway.
+#[cfg(not(any(test, feature = "interleave")))]
+pub fn wait_timeout_recover<'a, T: ?Sized>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: std::time::Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, dur) {
+        Ok((guard, _timed_out)) => guard,
+        Err(poison) => poison.into_inner().0,
+    }
+}
+
+/// `Condvar::wait_timeout` with the same poison-recovery policy as
+/// [`lock_recover`] (shim flavor: the instrumented condvar already
+/// drops the timed-out flag).
+#[cfg(any(test, feature = "interleave"))]
+pub fn wait_timeout_recover<'a, T: ?Sized>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: std::time::Duration,
+) -> MutexGuard<'a, T> {
+    cv.wait_timeout(guard, dur)
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+}

@@ -13,9 +13,11 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
-use crate::analysis::sync::{lock_recover, wait_recover, Condvar, Mutex};
+use crate::analysis::sync::{
+    lock_recover, wait_recover, wait_timeout_recover, Condvar, Mutex,
+};
 
 use crate::coordinator::{Coordinator, InferenceResult};
 use crate::dnn::NetworkSpec;
@@ -23,17 +25,26 @@ use crate::power::OperatingPoint;
 use crate::runtime::{global, ExecRuntime};
 
 use super::queue::{
-    pop_next, QueueState, ReplySlot, Request, Ticket,
+    cancel_queued, pop_next, release_inflight, shed_expired,
+    CancelOutcome, QueueState, ReplySlot, Request, Ticket,
 };
 use super::telemetry::GatewayTelemetry;
-use super::{pick_schedule, GatewayConfig, Overload, Priority};
+use super::{
+    degraded_lanes, pick_schedule, GatewayConfig, Overload, Priority,
+    ServeError,
+};
 
 /// State shared between submitters and the dispatcher thread.
 ///
 /// Lock order (when more than one is held): `state` is always taken
 /// first and released before `quotas` or the telemetry tenant map —
-/// no path holds two of them at once.
-struct Shared {
+/// no path holds two of them at once. Reply slots are filled strictly
+/// after `state` is released (cancel, shed, and completion all follow
+/// store-then-notify outside the queue lock).
+///
+/// `pub(super)` (fields stay private) so [`Ticket`] can hold a
+/// `Weak<Shared>` back-reference for [`Ticket::cancel`].
+pub(super) struct Shared {
     coord: Arc<Coordinator>,
     cfg: GatewayConfig,
     state: Mutex<QueueState>,
@@ -93,6 +104,10 @@ impl Gateway {
     ) -> Result<Ticket, Overload> {
         let telemetry = &self.shared.telemetry;
         telemetry.note_submitted();
+        // Chaos site: delay here widens the submit-vs-pop and
+        // submit-vs-shutdown windows (outside the lock, so an injected
+        // delay stalls only this submitter).
+        crate::failpoint!("gateway::submit");
         let mut state = lock_recover(&self.shared.state);
         if state.shutdown {
             drop(state);
@@ -105,6 +120,16 @@ impl Gateway {
             return Err(Overload::QueueFull {
                 depth: self.shared.cfg.queue_depth,
             });
+        }
+        let watermark = self.shared.cfg.brownout_watermark;
+        if watermark > 0
+            && state.queue.len() >= watermark
+            && priority == Priority::Low
+        {
+            let depth = state.queue.len();
+            drop(state);
+            telemetry.note_rejected_brownout(tenant);
+            return Err(Overload::Brownout { depth, watermark });
         }
         let inflight = state.inflight.get(tenant).copied().unwrap_or(0);
         if inflight >= self.shared.cfg.per_tenant_inflight {
@@ -137,7 +162,11 @@ impl Gateway {
         drop(state);
         telemetry.note_admitted(tenant, spec);
         self.shared.work.notify_all();
-        Ok(Ticket { id, slot })
+        Ok(Ticket {
+            id,
+            slot,
+            shared: Arc::downgrade(&self.shared),
+        })
     }
 
     /// Cap `tenant`'s resident plan-cache bytes: a dispatched request
@@ -203,19 +232,86 @@ impl Drop for Gateway {
     }
 }
 
-/// The dispatcher body: wait for work, pop by (priority, deadline,
-/// arrival) with aging, serve outside the lock, repeat. Exits when
-/// shutdown is flagged and the queue is drained — a paused gateway
-/// still drains on shutdown so no ticket waits forever.
+/// Caller-side cancellation (the gateway half of [`Ticket::cancel`]):
+/// remove the request from the queue if it is still there, release its
+/// inflight slot, count it, and resolve its ticket with a typed
+/// [`ServeError::Cancelled`] — all without ever touching a request the
+/// dispatcher already popped (that one runs to its natural outcome).
+/// The reply slot is filled *after* the queue lock drops.
+pub(super) fn cancel_request(
+    shared: &Arc<Shared>,
+    id: u64,
+) -> CancelOutcome {
+    let cancelled = {
+        let mut state = lock_recover(&shared.state);
+        cancel_queued(&mut state, id)
+    };
+    match cancelled {
+        Some(req) => {
+            shared.telemetry.note_cancelled(&req.tenant);
+            req.reply.fill(Err(ServeError::Cancelled { id }.into()));
+            CancelOutcome::Cancelled
+        }
+        None => CancelOutcome::AlreadyStarted,
+    }
+}
+
+/// One decision of the dispatcher's inner wait loop, carried out of
+/// the queue lock.
+enum Work {
+    /// Serve this request; `usize` is the queue depth observed at pop
+    /// time (the brownout monitor input).
+    Serve(Box<Request>, usize),
+    /// Resolve these expired requests as shed (deadline reaper).
+    Shed(Vec<Request>),
+    /// Shutdown flagged and the queue is drained.
+    Exit,
+}
+
+/// The dispatcher body: wait for work, reap expired deadlines, pop by
+/// (priority, deadline, arrival) with aging, serve outside the lock,
+/// repeat. Exits when shutdown is flagged and the queue is drained — a
+/// paused gateway still drains on shutdown so no ticket waits forever.
+///
+/// The deadline reaper runs here on both edges: every loop iteration
+/// sheds already-expired requests before popping, and while the
+/// dispatcher is otherwise idle (paused, or nothing poppable) the wait
+/// becomes a timed one ([`GatewayConfig::reap_interval`]) so queued
+/// deadlines still expire on time — but only when a deadlined request
+/// is actually waiting, so deadline-free workloads never pay a
+/// periodic wakeup.
 fn dispatch_loop(shared: Arc<Shared>) {
     loop {
-        let req = {
+        let work = {
             let mut state = lock_recover(&shared.state);
             loop {
+                if shared.cfg.shed_expired {
+                    let mut expired =
+                        shed_expired(&mut state, Instant::now());
+                    // Chaos site: force-shed the oldest queued request
+                    // as if its deadline had passed.
+                    if crate::failpoint_shed!("queue::reap") {
+                        let oldest = state
+                            .queue
+                            .iter()
+                            .enumerate()
+                            .min_by_key(|(_, r)| r.id)
+                            .map(|(i, _)| i);
+                        if let Some(i) = oldest {
+                            let req = state.queue.swap_remove(i);
+                            release_inflight(&mut state, &req.tenant);
+                            expired.push(req);
+                        }
+                    }
+                    if !expired.is_empty() {
+                        break Work::Shed(expired);
+                    }
+                }
                 let can_pop = !state.queue.is_empty()
                     && (!state.paused || state.shutdown);
                 if can_pop {
-                    break pop_next(
+                    let depth = state.queue.len();
+                    let req = pop_next(
                         &mut state,
                         shared.cfg.starvation_bound,
                     )
@@ -223,42 +319,89 @@ fn dispatch_loop(shared: Arc<Shared>) {
                         "invariant: pop_next is Some on the queue just \
                          checked non-empty under this lock",
                     );
+                    break Work::Serve(Box::new(req), depth);
                 }
                 if state.shutdown {
-                    return;
+                    break Work::Exit;
                 }
-                state = wait_recover(&shared.work, state);
+                let reap_pending = shared.cfg.shed_expired
+                    && state.queue.iter().any(|r| r.deadline.is_some());
+                state = if reap_pending {
+                    wait_timeout_recover(
+                        &shared.work,
+                        state,
+                        shared.cfg.reap_interval,
+                    )
+                } else {
+                    wait_recover(&shared.work, state)
+                };
             }
         };
-        serve(&shared, req);
+        match work {
+            Work::Exit => return,
+            Work::Shed(expired) => {
+                let now = Instant::now();
+                for req in expired {
+                    shared.telemetry.note_shed(&req.tenant);
+                    let late_us = req
+                        .deadline
+                        .map(|d| {
+                            now.saturating_duration_since(d).as_micros()
+                                as u64
+                        })
+                        .unwrap_or(0);
+                    req.reply.fill(Err(ServeError::DeadlineExceeded {
+                        id: req.id,
+                        late_us,
+                    }
+                    .into()));
+                }
+            }
+            Work::Serve(req, depth) => {
+                // Chaos site: a delay here (after the pop, before the
+                // reply) widens the cancel-after-pop window the
+                // interleave suite models.
+                crate::failpoint!("dispatch::pop");
+                let base = if shared.cfg.threads > 0 {
+                    shared.cfg.threads
+                } else {
+                    global().width()
+                };
+                let watermark = shared.cfg.brownout_watermark;
+                let width = if watermark > 0 && depth >= watermark {
+                    shared.telemetry.note_degraded();
+                    degraded_lanes(base, shared.cfg.brownout_lanes)
+                } else {
+                    base
+                };
+                serve(&shared, *req, width);
+            }
+        }
     }
 }
 
-/// Serve one popped request and deliver its result through the reply
-/// slot. Panics inside inference are caught and delivered as errors —
-/// a poisoned request must never hang its waiter or kill the
-/// dispatcher.
-fn serve(shared: &Shared, req: Request) {
+/// Serve one popped request on `width` lanes and deliver its result
+/// through the reply slot. Panics inside inference are caught and
+/// delivered as typed [`ServeError::Panicked`] errors — a poisoned
+/// request must never hang its waiter or kill the dispatcher, and it
+/// still records its end-to-end latency and deadline telemetry and
+/// releases its inflight slot like every other terminal transition.
+fn serve(shared: &Shared, req: Request, width: usize) {
     let queued = req.submitted.elapsed();
     let t0 = Instant::now();
     let outcome = std::panic::catch_unwind(
-        std::panic::AssertUnwindSafe(|| run_request(shared, &req)),
+        std::panic::AssertUnwindSafe(|| run_request(shared, &req, width)),
     );
     let service = t0.elapsed();
     {
         let mut state = lock_recover(&shared.state);
-        if let Some(n) = state.inflight.get_mut(&req.tenant) {
-            *n = n.saturating_sub(1);
-            if *n == 0 {
-                state.inflight.remove(&req.tenant);
-            }
-        }
+        release_inflight(&mut state, &req.tenant);
     }
+    let deadline_missed =
+        req.deadline.is_some_and(|d| Instant::now() > d);
+    let latency_us = (queued + service).as_micros() as u64;
     let result = match outcome {
         Ok(Ok(results)) => {
-            let deadline_missed =
-                req.deadline.is_some_and(|d| Instant::now() > d);
-            let latency_us = (queued + service).as_micros() as u64;
             let finish_seq = shared.telemetry.note_completed(
                 &req.tenant,
                 latency_us,
@@ -277,19 +420,24 @@ fn serve(shared: &Shared, req: Request) {
             Err(e)
         }
         Err(panic) => {
-            shared.telemetry.note_failed();
+            shared.telemetry.note_panicked(
+                &req.tenant,
+                latency_us,
+                deadline_missed,
+            );
             let msg = panic
                 .downcast_ref::<&str>()
                 .map(|s| s.to_string())
                 .or_else(|| panic.downcast_ref::<String>().cloned())
                 .unwrap_or_else(|| "non-string panic payload".into());
-            Err(anyhow!(
-                "request {} ({} for tenant {:?}): inference panicked: \
-                 {msg}",
-                req.id,
-                req.spec,
-                req.tenant
-            ))
+            Err(ServeError::Panicked {
+                id: req.id,
+                msg: format!(
+                    "{msg} (serving {} for tenant {:?})",
+                    req.spec, req.tenant
+                ),
+            }
+            .into())
         }
     };
     req.reply.fill(result);
@@ -307,7 +455,12 @@ fn serve(shared: &Shared, req: Request) {
 fn run_request(
     shared: &Shared,
     req: &Request,
+    width: usize,
 ) -> Result<Vec<InferenceResult>> {
+    // Chaos site: the one place an injected panic is caught by the
+    // dispatcher's catch_unwind, exercising the panicked-request
+    // lifecycle end to end.
+    crate::failpoint!("dispatch::serve");
     let deployment = shared.coord.deploy(&req.spec)?;
     if let Some(&quota) =
         lock_recover(&shared.quotas).get(&req.tenant)
@@ -330,11 +483,6 @@ fn run_request(
             );
         }
     }
-    let width = if shared.cfg.threads > 0 {
-        shared.cfg.threads
-    } else {
-        global().width()
-    };
     let sched = pick_schedule(req.images.len(), width);
     deployment.infer_scheduled_on(
         &req.op,

@@ -36,6 +36,22 @@
 //!   queued/admitted/rejected/deadline-missed counters and per-tenant
 //!   latency histograms (p50/p99), its own module rather than state
 //!   woven through the coordinator.
+//! * **Lifecycle** — every admitted request moves `queued → {running,
+//!   cancelled, shed}` and a running request ends `{completed,
+//!   panicked}`; each terminal state is a distinct typed outcome
+//!   through the ticket ([`Completed`], [`ServeError`]) and a distinct
+//!   telemetry counter, so `submitted == admitted + rejected` and
+//!   `admitted == completed + failed + cancelled + shed + panicked`
+//!   reconcile exactly
+//!   ([`telemetry::GatewaySnapshot::reconciles`]). Callers cancel
+//!   queued work ([`Ticket::cancel`]); the dispatcher sheds requests
+//!   whose deadline already passed ([`GatewayConfig::shed_expired`])
+//!   instead of serving results nobody reads; past a queue-depth
+//!   high-watermark the gateway browns out — low-priority submits get
+//!   typed early rejections and admitted requests run on fewer lanes
+//!   ([`GatewayConfig::brownout_watermark`]) — degrading gracefully
+//!   the way the SoC's on-chip monitors adapt body bias under stress
+//!   rather than failing at the operating limit.
 //!
 //! Direct `Deployment` calls remain fully supported — the gateway is a
 //! front-end over the same bitwise-deterministic serving path, and its
@@ -51,7 +67,7 @@ use std::time::Duration;
 use crate::coordinator::Schedule;
 
 pub use dispatch::Gateway;
-pub use queue::{Completed, Ticket};
+pub use queue::{CancelOutcome, Completed, Ticket};
 
 /// Feature-gated re-exports of the queue internals so
 /// `tests/interleave.rs` can drive the *real* admission/rendezvous
@@ -59,7 +75,10 @@ pub use queue::{Completed, Ticket};
 /// explorer (`analysis::explore`).
 #[cfg(any(test, feature = "interleave"))]
 pub mod model {
-    pub use super::queue::{pop_next, QueueState, ReplySlot, Request};
+    pub use super::queue::{
+        cancel_queued, pop_next, release_inflight, shed_expired,
+        QueueState, ReplySlot, Request,
+    };
 }
 
 /// Admission/scheduling knobs for a [`Gateway`].
@@ -81,6 +100,25 @@ pub struct GatewayConfig {
     /// request regardless of priority (`0`: strict priority order, no
     /// aging).
     pub starvation_bound: usize,
+    /// Shed queued requests whose deadline already passed (typed
+    /// [`ServeError::DeadlineExceeded`] through the ticket) instead of
+    /// serving a result nobody reads. `false` restores the serve-anyway
+    /// behavior: a missed deadline is counted and flagged on the
+    /// [`Completed`], never dropped.
+    pub shed_expired: bool,
+    /// How often the dispatcher sweeps an *idle* queue for expired
+    /// deadlines when [`Self::shed_expired`] is on (shedding at pop
+    /// time happens regardless of this interval). Only paid while
+    /// deadlined requests are actually waiting.
+    pub reap_interval: Duration,
+    /// Brownout high-watermark on queue depth: at or beyond this many
+    /// queued requests, [`Priority::Low`] submits are rejected with
+    /// [`Overload::Brownout`] and admitted requests run degraded
+    /// ([`Self::brownout_lanes`]). `0` disables brownout.
+    pub brownout_watermark: usize,
+    /// Worker lanes a request dispatched during brownout occupies;
+    /// `0` means half the configured width (minimum 1).
+    pub brownout_lanes: usize,
 }
 
 impl Default for GatewayConfig {
@@ -91,6 +129,10 @@ impl Default for GatewayConfig {
             default_deadline: None,
             threads: 0,
             starvation_bound: 4,
+            shed_expired: true,
+            reap_interval: Duration::from_millis(2),
+            brownout_watermark: 0,
+            brownout_lanes: 0,
         }
     }
 }
@@ -114,6 +156,16 @@ pub enum Overload {
     },
     /// The gateway is shutting down and admits nothing new.
     ShuttingDown,
+    /// The queue is at or past [`GatewayConfig::brownout_watermark`]
+    /// and this submission is [`Priority::Low`]: under brownout, bulk
+    /// traffic is rejected early so interactive traffic keeps its
+    /// latency.
+    Brownout {
+        /// Queue depth at rejection time.
+        depth: usize,
+        /// The configured high-watermark that fired.
+        watermark: usize,
+    },
 }
 
 impl std::fmt::Display for Overload {
@@ -132,11 +184,72 @@ impl std::fmt::Display for Overload {
             Overload::ShuttingDown => {
                 write!(f, "gateway is shutting down")
             }
+            Overload::Brownout { depth, watermark } => write!(
+                f,
+                "gateway in brownout ({depth} queued >= watermark \
+                 {watermark}): low-priority traffic rejected until the \
+                 backlog drains"
+            ),
         }
     }
 }
 
 impl std::error::Error for Overload {}
+
+/// Typed terminal outcome of an admitted request that did *not*
+/// complete: delivered through [`Ticket::wait`] as a downcastable
+/// `anyhow` error, so callers can branch on the lifecycle state
+/// (`err.downcast_ref::<ServeError>()`) instead of parsing messages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The caller cancelled the request while it was still queued
+    /// ([`Ticket::cancel`]).
+    Cancelled {
+        /// Admission id of the cancelled request.
+        id: u64,
+    },
+    /// The queue-side reaper shed the request because its deadline
+    /// passed before execution started
+    /// ([`GatewayConfig::shed_expired`]).
+    DeadlineExceeded {
+        /// Admission id of the shed request.
+        id: u64,
+        /// How far past the deadline the request was when shed (µs).
+        late_us: u64,
+    },
+    /// Inference panicked mid-request; the dispatcher caught the
+    /// unwind, recorded latency + deadline telemetry, released the
+    /// inflight slot, and delivered this instead of stranding the
+    /// waiter.
+    Panicked {
+        /// Admission id of the panicked request.
+        id: u64,
+        /// The panic payload (or a placeholder for non-string
+        /// payloads).
+        msg: String,
+    },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Cancelled { id } => {
+                write!(f, "request {id} cancelled by caller while queued")
+            }
+            ServeError::DeadlineExceeded { id, late_us } => write!(
+                f,
+                "request {id} shed: deadline exceeded by {late_us}us \
+                 before execution started (set shed_expired=false to \
+                 serve expired requests anyway)"
+            ),
+            ServeError::Panicked { id, msg } => {
+                write!(f, "request {id}: inference panicked: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// Dispatch priority of a request. Lower rank pops first; ties break by
 /// deadline (requests without one sort last), then arrival order.
@@ -192,6 +305,20 @@ pub fn pick_schedule(images: usize, width: usize) -> Schedule {
     }
 }
 
+/// Lane width for a request dispatched during brownout: the configured
+/// [`GatewayConfig::brownout_lanes`] when set, else half the base
+/// width — never zero, never wider than the base. Schedules stay
+/// bitwise-deterministic at any width, so degrading only trades
+/// latency for fleet headroom.
+pub(crate) fn degraded_lanes(base: usize, brownout_lanes: usize) -> usize {
+    let base = base.max(1);
+    if brownout_lanes > 0 {
+        brownout_lanes.min(base)
+    } else {
+        (base / 2).max(1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -227,5 +354,37 @@ mod tests {
         };
         assert!(e.to_string().contains("acme"));
         assert!(e.to_string().contains("2 inflight"));
+        let e = Overload::Brownout { depth: 9, watermark: 8 };
+        assert!(e.to_string().contains("9 queued"));
+        assert!(e.to_string().contains("watermark"));
+    }
+
+    #[test]
+    fn serve_errors_name_the_request_and_state() {
+        let e = ServeError::Cancelled { id: 3 };
+        assert!(e.to_string().contains("request 3"));
+        assert!(e.to_string().contains("cancelled"));
+        let e = ServeError::DeadlineExceeded { id: 4, late_us: 120 };
+        assert!(e.to_string().contains("120us"));
+        assert!(e.to_string().contains("shed"));
+        let e = ServeError::Panicked { id: 5, msg: "boom".into() };
+        assert!(e.to_string().contains("boom"));
+        // delivered as anyhow errors; the typed variant must survive
+        // the round-trip so callers can branch on it
+        let any: anyhow::Error = ServeError::Cancelled { id: 7 }.into();
+        assert_eq!(
+            any.downcast_ref::<ServeError>(),
+            Some(&ServeError::Cancelled { id: 7 })
+        );
+    }
+
+    #[test]
+    fn degraded_lanes_halves_or_clamps() {
+        assert_eq!(degraded_lanes(8, 0), 4);
+        assert_eq!(degraded_lanes(1, 0), 1);
+        assert_eq!(degraded_lanes(8, 2), 2);
+        // explicit lanes never exceed the base width
+        assert_eq!(degraded_lanes(2, 6), 2);
+        assert_eq!(degraded_lanes(0, 0), 1);
     }
 }

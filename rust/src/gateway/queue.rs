@@ -8,7 +8,7 @@
 //! queue of owned requests — are valid at every yield point).
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Weak};
 use std::time::{Duration, Instant};
 
 use crate::analysis::sync::{lock_recover, wait_recover, Condvar, Mutex};
@@ -36,9 +36,12 @@ pub struct Request {
     pub images: Vec<Vec<i32>>,
     pub priority: Priority,
     pub submitted: Instant,
-    /// Absolute completion deadline, if any. A missed deadline is
-    /// *counted* (and flagged on the result), never dropped — partial
-    /// results beat silent loss for end-node workloads.
+    /// Absolute completion deadline, if any. When
+    /// [`super::GatewayConfig::shed_expired`] is on (the default) a
+    /// request still queued past its deadline is shed with a typed
+    /// error; with it off the miss is *counted* (and flagged on the
+    /// result) but still served — partial results beat silent loss for
+    /// end-node workloads that want them.
     pub deadline: Option<Instant>,
     pub reply: Arc<ReplySlot>,
 }
@@ -82,12 +85,27 @@ impl ReplySlot {
     }
 }
 
+/// Outcome of a [`Ticket::cancel`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// The request was still queued and has been removed; its
+    /// [`Ticket::wait`] resolves to [`super::ServeError::Cancelled`].
+    Cancelled,
+    /// The dispatcher already popped the request (or the gateway is
+    /// gone): cancellation is acknowledged but the request runs to its
+    /// natural outcome — no mid-inference abort, no torn state.
+    AlreadyStarted,
+}
+
 /// Handle to one admitted request; [`Ticket::wait`] blocks until the
 /// dispatcher delivers the result. No async runtime involved — a plain
 /// condvar rendezvous, usable from any thread.
 pub struct Ticket {
     pub(super) id: u64,
     pub(super) slot: Arc<ReplySlot>,
+    /// Back-reference for [`Self::cancel`]; `Weak` so an outstanding
+    /// ticket never keeps a dropped gateway's dispatcher state alive.
+    pub(super) shared: Weak<super::dispatch::Shared>,
 }
 
 impl Ticket {
@@ -102,12 +120,28 @@ impl Ticket {
         self.slot.take_blocking()
     }
 
+    /// Cancel this request if it is still queued: the request is
+    /// removed, its inflight slot released, and [`Self::wait`] resolves
+    /// immediately with a typed [`super::ServeError::Cancelled`]. Once
+    /// execution has started the cancel is acknowledged but ignored
+    /// ([`CancelOutcome::AlreadyStarted`]) — the result still arrives.
+    /// Borrowing (not consuming): cancel-then-wait is the intended
+    /// call sequence.
+    pub fn cancel(&self) -> CancelOutcome {
+        match self.shared.upgrade() {
+            Some(shared) => super::dispatch::cancel_request(&shared, self.id),
+            None => CancelOutcome::AlreadyStarted,
+        }
+    }
+
     /// Build a ticket over an explicit slot — for the interleaving
     /// tests, which drive the real wait/fill rendezvous under the
-    /// schedule explorer without a gateway around it.
+    /// schedule explorer without a gateway around it. Its
+    /// [`Self::cancel`] always reports [`CancelOutcome::AlreadyStarted`]
+    /// (no gateway to cancel through).
     #[cfg(any(test, feature = "interleave"))]
     pub fn for_model(id: u64, slot: Arc<ReplySlot>) -> Self {
-        Self { id, slot }
+        Self { id, slot, shared: Weak::new() }
     }
 }
 
@@ -205,6 +239,51 @@ pub fn pop_next(
     Some(state.queue.swap_remove(idx))
 }
 
+/// Release one unit of `tenant`'s inflight count — the bookkeeping
+/// shared by every terminal transition (completion, panic, cancel,
+/// shed). Must run under the queue lock, exactly once per admitted
+/// request.
+pub fn release_inflight(state: &mut QueueState, tenant: &str) {
+    if let Some(n) = state.inflight.get_mut(tenant) {
+        *n = n.saturating_sub(1);
+        if *n == 0 {
+            state.inflight.remove(tenant);
+        }
+    }
+}
+
+/// Remove the still-queued request with admission id `id`, releasing
+/// its inflight slot. `None` when no such request is queued (already
+/// popped, shed, or never admitted) — the caller-side half of
+/// [`super::Ticket::cancel`]. The reply slot is *not* filled here:
+/// the caller fills it outside the queue lock.
+pub fn cancel_queued(state: &mut QueueState, id: u64) -> Option<Request> {
+    let idx = state.queue.iter().position(|r| r.id == id)?;
+    let req = state.queue.swap_remove(idx);
+    release_inflight(state, &req.tenant);
+    Some(req)
+}
+
+/// Remove every queued request whose deadline is strictly before
+/// `now`, releasing each inflight slot — the queue-side half of the
+/// deadline reaper. Reply slots are *not* filled here: the dispatcher
+/// fills them outside the queue lock. `now` is a parameter (not read
+/// inside) so interleave models stay control-flow deterministic.
+pub fn shed_expired(state: &mut QueueState, now: Instant) -> Vec<Request> {
+    let mut shed = Vec::new();
+    let mut i = 0;
+    while i < state.queue.len() {
+        if state.queue[i].deadline.is_some_and(|d| now > d) {
+            let req = state.queue.swap_remove(i);
+            release_inflight(state, &req.tenant);
+            shed.push(req);
+        } else {
+            i += 1;
+        }
+    }
+    shed
+}
+
 /// Earlier deadlines first; requests without one sort after all
 /// deadlined requests.
 fn cmp_deadline(
@@ -296,6 +375,51 @@ mod tests {
         let mut state = QueueState::new();
         assert!(pop_next(&mut state, 4).is_none());
         assert!(pop_next(&mut state, 0).is_none());
+    }
+
+    #[test]
+    fn cancel_queued_removes_and_releases_inflight() {
+        let base = Instant::now();
+        let mut state = QueueState::new();
+        state.queue.push(req(0, Priority::Normal, None, base));
+        state.queue.push(req(1, Priority::Normal, None, base));
+        state.inflight.insert("t".into(), 2);
+        let cancelled = cancel_queued(&mut state, 0)
+            .expect("id 0 is queued");
+        assert_eq!(cancelled.id, 0);
+        assert_eq!(state.queue.len(), 1);
+        assert_eq!(state.inflight.get("t"), Some(&1));
+        // unknown id: no-op
+        assert!(cancel_queued(&mut state, 99).is_none());
+        assert_eq!(state.queue.len(), 1);
+        // last release removes the tenant entry entirely
+        cancel_queued(&mut state, 1).expect("id 1 is queued");
+        assert!(state.inflight.is_empty());
+    }
+
+    #[test]
+    fn shed_expired_takes_only_past_deadlines() {
+        let base = Instant::now();
+        let mut state = QueueState::new();
+        state.queue.push(req(0, Priority::Normal, Some(10), base));
+        state.queue.push(req(1, Priority::Normal, None, base));
+        state.queue.push(req(2, Priority::Low, Some(50), base));
+        state.queue.push(req(3, Priority::High, Some(10_000_000), base));
+        state.inflight.insert("t".into(), 4);
+        let now = base + Duration::from_micros(100);
+        let mut shed_ids: Vec<u64> =
+            shed_expired(&mut state, now).iter().map(|r| r.id).collect();
+        shed_ids.sort_unstable();
+        assert_eq!(shed_ids, vec![0, 2], "only the expired two go");
+        assert_eq!(state.queue.len(), 2);
+        assert_eq!(state.inflight.get("t"), Some(&2));
+        // nothing newly expired: a second sweep is a no-op
+        assert!(shed_expired(&mut state, now).is_empty());
+        // a deadline exactly at `now` is not yet expired (strictly
+        // after only)
+        let mut state = QueueState::new();
+        state.queue.push(req(0, Priority::Normal, Some(100), base));
+        assert!(shed_expired(&mut state, now).is_empty());
     }
 
     /// Regression (issue 9 satellite): a thread that panics while

@@ -85,6 +85,8 @@ struct TenantStats {
     completed: u64,
     rejected: u64,
     deadline_missed: u64,
+    cancelled: u64,
+    shed: u64,
     /// Distinct specs this tenant has served through the gateway — the
     /// quota-accounting set (a plan-cache "tenant share" is the bytes
     /// of the specs it deploys).
@@ -100,8 +102,13 @@ pub struct GatewayTelemetry {
     rejected_full: AtomicU64,
     rejected_tenant: AtomicU64,
     rejected_shutdown: AtomicU64,
+    rejected_brownout: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
+    cancelled: AtomicU64,
+    shed: AtomicU64,
+    panicked: AtomicU64,
+    degraded: AtomicU64,
     deadline_missed: AtomicU64,
     finish_seq: AtomicU64,
     tenants: Mutex<HashMap<String, TenantStats>>,
@@ -116,8 +123,13 @@ impl GatewayTelemetry {
             rejected_full: AtomicU64::new(0),
             rejected_tenant: AtomicU64::new(0),
             rejected_shutdown: AtomicU64::new(0),
+            rejected_brownout: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            panicked: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
             deadline_missed: AtomicU64::new(0),
             finish_seq: AtomicU64::new(0),
             tenants: Mutex::new(HashMap::new()),
@@ -176,6 +188,46 @@ impl GatewayTelemetry {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub(super) fn note_rejected_brownout(&self, tenant: &str) {
+        self.rejected_brownout.fetch_add(1, Ordering::Relaxed);
+        self.tenant_mut(tenant, |t| t.rejected += 1);
+    }
+
+    pub(super) fn note_cancelled(&self, tenant: &str) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+        self.tenant_mut(tenant, |t| t.cancelled += 1);
+    }
+
+    pub(super) fn note_shed(&self, tenant: &str) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        self.tenant_mut(tenant, |t| t.shed += 1);
+    }
+
+    /// A panicked request still records its end-to-end latency and
+    /// deadline outcome — a crash is an observation, not a telemetry
+    /// hole.
+    pub(super) fn note_panicked(
+        &self,
+        tenant: &str,
+        latency_us: u64,
+        missed_deadline: bool,
+    ) {
+        self.panicked.fetch_add(1, Ordering::Relaxed);
+        if missed_deadline {
+            self.deadline_missed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.tenant_mut(tenant, |t| {
+            if missed_deadline {
+                t.deadline_missed += 1;
+            }
+            t.hist.record(latency_us);
+        });
+    }
+
+    pub(super) fn note_degraded(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Distinct specs `tenant` has served — the byte-quota accounting
     /// set ([`crate::gateway::Gateway::set_tenant_quota`]).
     pub fn tenant_specs(&self, tenant: &str) -> Vec<NetworkSpec> {
@@ -201,6 +253,8 @@ impl GatewayTelemetry {
                 completed: t.completed,
                 rejected: t.rejected,
                 deadline_missed: t.deadline_missed,
+                cancelled: t.cancelled,
+                shed: t.shed,
                 p50_us: t.hist.p50_us(),
                 p99_us: t.hist.p99_us(),
             })
@@ -214,8 +268,15 @@ impl GatewayTelemetry {
             rejected_shutdown: self
                 .rejected_shutdown
                 .load(Ordering::Relaxed),
+            rejected_brownout: self
+                .rejected_brownout
+                .load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            panicked: self.panicked.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
             deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
             tenants: rows,
         }
@@ -241,12 +302,24 @@ pub struct GatewaySnapshot {
     pub rejected_tenant: u64,
     /// Rejections during shutdown.
     pub rejected_shutdown: u64,
+    /// Low-priority rejections while past the brownout watermark.
+    pub rejected_brownout: u64,
     /// Requests completed successfully.
     pub completed: u64,
     /// Requests that failed during dispatch (deploy/quota/inference
     /// error).
     pub failed: u64,
-    /// Completions after their deadline (still served and counted).
+    /// Queued requests removed by [`crate::gateway::Ticket::cancel`].
+    pub cancelled: u64,
+    /// Queued requests shed by the deadline reaper
+    /// ([`crate::gateway::GatewayConfig::shed_expired`]).
+    pub shed: u64,
+    /// Requests whose inference panicked (caught, typed, delivered).
+    pub panicked: u64,
+    /// Requests dispatched on degraded (brownout) lane widths.
+    pub degraded: u64,
+    /// Completions (or panics) after their deadline, plus nothing from
+    /// shed requests — those are counted in `shed`, not here.
     pub deadline_missed: u64,
     /// Per-tenant rows, sorted by tenant name.
     pub tenants: Vec<TenantSnapshot>,
@@ -255,7 +328,24 @@ pub struct GatewaySnapshot {
 impl GatewaySnapshot {
     /// Total rejections across all bounds.
     pub fn rejected(&self) -> u64 {
-        self.rejected_full + self.rejected_tenant + self.rejected_shutdown
+        self.rejected_full
+            + self.rejected_tenant
+            + self.rejected_shutdown
+            + self.rejected_brownout
+    }
+
+    /// The lifecycle ledger balances: every submit was either rejected
+    /// or admitted, and every admitted request reached exactly one
+    /// terminal state. Checked after draining (a request still queued
+    /// or running is admitted but not yet terminal).
+    pub fn reconciles(&self) -> bool {
+        self.submitted == self.admitted + self.rejected()
+            && self.admitted
+                == self.completed
+                    + self.failed
+                    + self.cancelled
+                    + self.shed
+                    + self.panicked
     }
 }
 
@@ -268,10 +358,15 @@ pub struct TenantSnapshot {
     pub admitted: u64,
     /// Requests completed for this tenant.
     pub completed: u64,
-    /// Requests rejected for this tenant (queue or tenant bound).
+    /// Requests rejected for this tenant (queue, tenant, or brownout
+    /// bound).
     pub rejected: u64,
     /// Completions past their deadline.
     pub deadline_missed: u64,
+    /// Queued requests this tenant cancelled.
+    pub cancelled: u64,
+    /// Queued requests the reaper shed for this tenant.
+    pub shed: u64,
     /// Median end-to-end latency (µs, log2-bucket upper bound).
     pub p50_us: u64,
     /// 99th-percentile end-to-end latency (µs, log2-bucket upper
@@ -327,5 +422,48 @@ mod tests {
         assert!(snap.tenants[1].p99_us >= 5000);
         assert_eq!(t.tenant_specs("a"), vec![spec]);
         assert!(t.tenant_specs("nobody").is_empty());
+    }
+
+    #[test]
+    fn lifecycle_counters_reconcile_exactly() {
+        let t = GatewayTelemetry::new();
+        let spec = NetworkSpec::new("kws", PrecisionConfig::Mixed, 1);
+        // 6 submits: 1 brownout rejection + 5 admitted, each admitted
+        // reaching a distinct terminal state.
+        t.note_submitted();
+        t.note_rejected_brownout("bulk");
+        for _ in 0..5 {
+            t.note_submitted();
+            t.note_admitted("acme", &spec);
+        }
+        t.note_completed("acme", 100, false);
+        t.note_failed();
+        t.note_cancelled("acme");
+        t.note_shed("acme");
+        t.note_panicked("acme", 700, true);
+        t.note_degraded();
+        let snap = t.snapshot();
+        assert!(snap.reconciles(), "{snap:?}");
+        assert_eq!(snap.rejected(), 1);
+        assert_eq!(snap.rejected_brownout, 1);
+        assert_eq!(snap.cancelled, 1);
+        assert_eq!(snap.shed, 1);
+        assert_eq!(snap.panicked, 1);
+        assert_eq!(snap.degraded, 1);
+        // the panic recorded latency + deadline miss
+        assert_eq!(snap.deadline_missed, 1);
+        let acme = snap
+            .tenants
+            .iter()
+            .find(|r| r.tenant == "acme")
+            .expect("acme row");
+        assert_eq!(acme.cancelled, 1);
+        assert_eq!(acme.shed, 1);
+        assert_eq!(acme.deadline_missed, 1);
+        assert!(acme.p99_us >= 700, "panic latency recorded");
+        // an in-flight (undrained) ledger must not reconcile
+        t.note_submitted();
+        t.note_admitted("acme", &spec);
+        assert!(!t.snapshot().reconciles());
     }
 }

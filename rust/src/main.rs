@@ -30,15 +30,27 @@
 //! marsellus serve    [--trace TSV] [--requests N] [--queue-depth D]
 //!                    [--inflight I] [--threads T] [--deadline-us U]
 //!                    [--starve-bound K] [--vdd V]
+//!                    [--serve-expired] [--reap-us U]
+//!                    [--brownout W] [--brownout-lanes L]
+//!                    [--chaos SEED]
 //!                    [--artifacts DIR]        multi-tenant serving
 //!                                             through the admission
 //!                                             gateway: replay a
 //!                                             traffic trace (or a
 //!                                             synthetic 2-tenant mix)
 //!                                             and report admission /
-//!                                             per-tenant latency
-//!                                             telemetry + the plan-
-//!                                             cache residency split
+//!                                             lifecycle / per-tenant
+//!                                             latency telemetry + the
+//!                                             plan-cache residency
+//!                                             split. --serve-expired
+//!                                             serves past-deadline
+//!                                             requests instead of
+//!                                             shedding; --brownout W
+//!                                             sets the overload
+//!                                             high-watermark; --chaos
+//!                                             arms seeded fault
+//!                                             injection (needs
+//!                                             --features chaos)
 //! marsellus networks [--plans]                list deployable networks
 //!                                             (--plans: deploy each and
 //!                                             print the per-deployment
@@ -478,11 +490,16 @@ struct TraceReq {
     images: usize,
     priority: marsellus::gateway::Priority,
     deadline: Option<std::time::Duration>,
+    /// Replay-side cancellation: submit this request, then cancel its
+    /// ticket before waiting (exercises `Ticket::cancel` from a trace).
+    cancel: bool,
 }
 
 /// Parse a whitespace-separated trace file: one request per line,
-/// `tenant network config seed images priority deadline_us`
-/// (`deadline_us` 0 = none); `#` starts a comment.
+/// `tenant network config seed images priority deadline_us [cancel]`
+/// (`deadline_us` 0 = none; the optional 8th column is `cancel`/`1` to
+/// cancel the ticket after submit, `-`/`0` or absent to wait normally
+/// — 7-column traces stay valid); `#` starts a comment.
 fn parse_trace(path: &str) -> Result<Vec<TraceReq>> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading trace {path}"))?;
@@ -494,9 +511,9 @@ fn parse_trace(path: &str) -> Result<Vec<TraceReq>> {
         }
         let fields: Vec<&str> = line.split_whitespace().collect();
         ensure!(
-            fields.len() == 7,
-            "{path}:{}: expected 7 fields (tenant network config seed \
-             images priority deadline_us), got {}",
+            fields.len() == 7 || fields.len() == 8,
+            "{path}:{}: expected 7 or 8 fields (tenant network config \
+             seed images priority deadline_us [cancel]), got {}",
             lineno + 1,
             fields.len()
         );
@@ -514,6 +531,15 @@ fn parse_trace(path: &str) -> Result<Vec<TraceReq>> {
         let deadline_us: u64 = fields[6].parse().with_context(|| {
             format!("{path}:{}: deadline_us", lineno + 1)
         })?;
+        let cancel = match fields.get(7).copied() {
+            None | Some("-") | Some("0") => false,
+            Some("cancel") | Some("1") => true,
+            Some(other) => bail!(
+                "{path}:{}: unknown cancel flag {other:?} (use \
+                 cancel/1 to cancel, -/0 to wait)",
+                lineno + 1
+            ),
+        };
         reqs.push(TraceReq {
             tenant: fields[0].to_string(),
             spec: NetworkSpec::new(fields[1], config, seed),
@@ -521,6 +547,7 @@ fn parse_trace(path: &str) -> Result<Vec<TraceReq>> {
             priority: fields[5].parse()?,
             deadline: (deadline_us > 0)
                 .then(|| std::time::Duration::from_micros(deadline_us)),
+            cancel,
         });
     }
     ensure!(!reqs.is_empty(), "{path}: trace holds no requests");
@@ -544,6 +571,7 @@ fn synthetic_trace(requests: usize) -> Vec<TraceReq> {
                     images: 1,
                     priority: marsellus::gateway::Priority::High,
                     deadline: Some(std::time::Duration::from_secs(30)),
+                    cancel: false,
                 }
             } else {
                 TraceReq {
@@ -556,15 +584,45 @@ fn synthetic_trace(requests: usize) -> Vec<TraceReq> {
                     images: 4,
                     priority: marsellus::gateway::Priority::Normal,
                     deadline: None,
+                    cancel: false,
                 }
             }
         })
         .collect()
 }
 
-fn serve(args: &Args) -> Result<()> {
-    use marsellus::gateway::{Gateway, GatewayConfig};
+/// `--chaos <seed>`: arm the deterministic fault-injection harness for
+/// the whole serve run. Only available when the binary was built with
+/// `--features chaos` (the harness is compiled out of plain release
+/// builds); without the feature the flag fails loudly rather than
+/// silently serving fault-free.
+fn arm_chaos(args: &Args) -> Result<bool> {
+    let Some(raw) = args.get("chaos") else {
+        return Ok(false);
+    };
+    let seed: u64 = raw
+        .parse()
+        .with_context(|| format!("--chaos seed {raw:?}"))?;
+    #[cfg(feature = "chaos")]
+    {
+        marsellus::analysis::failpoint::arm_seed(seed);
+        println!("chaos: failpoints armed from seed {seed}");
+        Ok(true)
+    }
+    #[cfg(not(feature = "chaos"))]
+    {
+        let _ = seed;
+        bail!(
+            "--chaos needs the fault-injection harness: rebuild with \
+             `cargo build --features chaos`"
+        );
+    }
+}
 
+fn serve(args: &Args) -> Result<()> {
+    use marsellus::gateway::{Gateway, GatewayConfig, ServeError};
+
+    let chaos = arm_chaos(args)?;
     let coord =
         std::sync::Arc::new(Coordinator::new(artifacts_dir(args))?);
     let cfg = GatewayConfig {
@@ -576,6 +634,12 @@ fn serve(args: &Args) -> Result<()> {
         },
         threads: args.get_usize("threads", 0)?,
         starvation_bound: args.get_usize("starve-bound", 4)?,
+        shed_expired: !args.flag("serve-expired"),
+        reap_interval: std::time::Duration::from_micros(
+            args.get_usize("reap-us", 2000)? as u64,
+        ),
+        brownout_watermark: args.get_usize("brownout", 0)?,
+        brownout_lanes: args.get_usize("brownout-lanes", 0)?,
     };
     let op = OperatingPoint::at_vdd(args.get_f64("vdd", 0.8)?);
     let reqs = match args.get("trace") {
@@ -607,7 +671,7 @@ fn serve(args: &Args) -> Result<()> {
     }
     println!(
         "gateway: queue_depth {}, per-tenant inflight {}, {} lane(s), \
-         starvation bound {}",
+         starvation bound {}, {}{}",
         cfg.queue_depth,
         cfg.per_tenant_inflight,
         if cfg.threads > 0 {
@@ -616,6 +680,16 @@ fn serve(args: &Args) -> Result<()> {
             marsellus::runtime::global().width()
         },
         cfg.starvation_bound,
+        if cfg.shed_expired {
+            "shed expired deadlines"
+        } else {
+            "serve expired deadlines"
+        },
+        if cfg.brownout_watermark > 0 {
+            format!(", brownout watermark {}", cfg.brownout_watermark)
+        } else {
+            String::new()
+        },
     );
 
     let gateway = Gateway::new(coord.clone(), cfg)?;
@@ -631,55 +705,99 @@ fn serve(args: &Args) -> Result<()> {
             r.priority,
             r.deadline,
         ) {
-            Ok(t) => tickets.push(t),
+            Ok(t) => tickets.push((r.cancel, t)),
             Err(e) => {
                 rejected += 1;
                 println!("rejected ({}, {}): {e}", r.tenant, r.spec);
             }
         }
     }
+    // replay-side cancellations first (while the backlog is still
+    // queued), then wait every ticket to its typed outcome
+    for (want_cancel, t) in &tickets {
+        if *want_cancel {
+            println!("cancel request {}: {:?}", t.id(), t.cancel());
+        }
+    }
     let mut served_images = 0usize;
-    for t in tickets {
-        let done = t.wait()?;
-        served_images += done.results.len();
+    let mut cancelled = 0usize;
+    let mut shed = 0usize;
+    let mut panicked = 0usize;
+    for (_, t) in tickets {
+        match t.wait() {
+            Ok(done) => served_images += done.results.len(),
+            Err(err) => match err.downcast_ref::<ServeError>() {
+                Some(ServeError::Cancelled { .. }) => cancelled += 1,
+                Some(ServeError::DeadlineExceeded { id, late_us }) => {
+                    println!("shed request {id}: {late_us}us late");
+                    shed += 1;
+                }
+                Some(ServeError::Panicked { id, .. }) => {
+                    println!("panicked request {id} (caught, typed)");
+                    panicked += 1;
+                }
+                // anything untyped (deploy/quota failure) aborts the
+                // replay loudly
+                None => return Err(err),
+            },
+        }
     }
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     let snap = gateway.telemetry().snapshot();
     println!(
         "served {served_images} image(s) in {wall_ms:.0} ms \
-         ({rejected} rejected at admission)"
+         ({rejected} rejected at admission, {cancelled} cancelled, \
+         {shed} shed, {panicked} panicked)"
     );
     println!(
         "gateway: {} submitted / {} admitted / {} rejected (full {}, \
-         tenant {}, shutdown {}), {} completed, {} failed, {} \
-         deadline-missed",
+         tenant {}, shutdown {}, brownout {}), {} completed, {} \
+         failed, {} cancelled, {} shed, {} panicked, {} \
+         deadline-missed, {} degraded dispatch(es)",
         snap.submitted,
         snap.admitted,
         snap.rejected(),
         snap.rejected_full,
         snap.rejected_tenant,
         snap.rejected_shutdown,
+        snap.rejected_brownout,
         snap.completed,
         snap.failed,
+        snap.cancelled,
+        snap.shed,
+        snap.panicked,
         snap.deadline_missed,
+        snap.degraded,
     );
     println!(
-        "{:<14} {:>8} {:>9} {:>8} {:>7} {:>9} {:>9}",
-        "tenant", "admitted", "completed", "rejected", "missed",
-        "p50_us", "p99_us"
+        "{:<14} {:>8} {:>9} {:>8} {:>9} {:>6} {:>7} {:>9} {:>9}",
+        "tenant", "admitted", "completed", "rejected", "cancelled",
+        "shed", "missed", "p50_us", "p99_us"
     );
     for t in &snap.tenants {
         println!(
-            "{:<14} {:>8} {:>9} {:>8} {:>7} {:>9} {:>9}",
+            "{:<14} {:>8} {:>9} {:>8} {:>9} {:>6} {:>7} {:>9} {:>9}",
             t.tenant,
             t.admitted,
             t.completed,
             t.rejected,
+            t.cancelled,
+            t.shed,
             t.deadline_missed,
             t.p50_us,
             t.p99_us,
         );
+    }
+    // the lifecycle ledger must balance after a full drain — under
+    // --chaos this is the assertion the CI smoke leans on
+    ensure!(
+        snap.reconciles(),
+        "gateway lifecycle counters do not reconcile after drain: \
+         {snap:?}"
+    );
+    if chaos {
+        println!("chaos: lifecycle counters reconcile after drain");
     }
     print_plan_residency(&coord);
     let g = marsellus::runtime::global().telemetry();

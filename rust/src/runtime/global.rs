@@ -215,6 +215,10 @@ impl GlobalRuntime {
         if n == 0 {
             return;
         }
+        // Chaos site (delay-only — a panic here would kill a fleet
+        // worker): stretches the submit-to-barrier window so gateway
+        // lifecycle races overlap real execution.
+        crate::failpoint!("runtime::scatter");
         let me = WORKER.with(|w| w.get());
         let ident = Arc::as_ptr(&self.inner) as usize;
         if self.inner.width == 1 || n == 1 {

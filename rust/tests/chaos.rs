@@ -1,0 +1,234 @@
+//! Fault-injection regression tests (`--features chaos`): a panicking
+//! request must leave the gateway fully accounted — latency and
+//! deadline telemetry recorded, inflight slot released — and a seeded
+//! chaos storm over a 2-tenant trace must resolve every ticket to
+//! exactly one typed outcome with counters reconciling exactly and
+//! completed logits bitwise equal to the direct path.
+
+#![cfg(all(feature = "chaos", feature = "native"))]
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use marsellus::analysis::failpoint::{
+    arm_once, arm_seed, disarm_all, FailAction,
+};
+use marsellus::coordinator::Coordinator;
+use marsellus::dnn::{NetworkSpec, PrecisionConfig};
+use marsellus::gateway::{
+    pick_schedule, CancelOutcome, Gateway, GatewayConfig, Priority,
+    ServeError,
+};
+use marsellus::power::OperatingPoint;
+use marsellus::runtime::{global, ExecRuntime, Runtime};
+use marsellus::util::Rng;
+
+/// The failpoint registry is process-global; serialize the tests that
+/// arm it.
+fn serial() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn coordinator() -> Arc<Coordinator> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    let rt = Runtime::native(&dir).expect("native runtime");
+    Arc::new(Coordinator::with_runtime(rt).expect("coordinator"))
+}
+
+fn kws(seed: u64) -> NetworkSpec {
+    NetworkSpec::new("kws", PrecisionConfig::Mixed, seed)
+}
+
+fn op() -> OperatingPoint {
+    OperatingPoint::at_vdd(0.8)
+}
+
+/// An injected panic inside inference is delivered as a typed
+/// `ServeError::Panicked`, records end-to-end latency and deadline
+/// telemetry like any other terminal transition, and releases the
+/// tenant's inflight slot — proven by re-admitting the same tenant
+/// under an inflight cap of 1.
+#[test]
+fn dispatcher_panic_records_latency_and_releases_slot() {
+    let _g = serial();
+    disarm_all();
+
+    let coord = coordinator();
+    let spec = kws(20);
+    let d = coord.deploy(&spec).unwrap();
+    let mut rng = Rng::new(70);
+    let img = d.random_input(&mut rng);
+
+    // serve-anyway mode so the 1ns deadline reaches the (panicking)
+    // serve path instead of the reaper
+    let gateway = Gateway::new(coord.clone(), GatewayConfig {
+        queue_depth: 16,
+        per_tenant_inflight: 1,
+        threads: 2,
+        shed_expired: false,
+        ..GatewayConfig::default()
+    })
+    .unwrap();
+
+    arm_once("dispatch::serve", FailAction::Panic);
+    let err = gateway
+        .submit(
+            "t",
+            &spec,
+            &op(),
+            vec![img.clone()],
+            Priority::Normal,
+            Some(Duration::from_nanos(1)),
+        )
+        .expect("admitted")
+        .wait()
+        .expect_err("injected panic must surface as an error");
+    match err.downcast_ref::<ServeError>() {
+        Some(ServeError::Panicked { id: _, msg }) => {
+            assert!(msg.contains("injected panic"), "got: {msg}");
+        }
+        other => panic!("expected Panicked, got {other:?}"),
+    }
+    let snap = gateway.telemetry().snapshot();
+    assert_eq!(snap.panicked, 1);
+    assert_eq!(snap.completed, 0);
+    assert_eq!(
+        snap.deadline_missed, 1,
+        "a panicked request still records its deadline outcome"
+    );
+    assert!(snap.reconciles(), "counters must reconcile: {snap:?}");
+
+    // failpoint was one-shot: the same tenant (inflight cap 1) admits
+    // and completes, proving the panic released its slot
+    gateway
+        .submit("t", &spec, &op(), vec![img], Priority::Normal, None)
+        .expect("panic must release the tenant's inflight slot")
+        .wait()
+        .expect("disarmed path serves normally");
+    assert_eq!(gateway.telemetry().snapshot().completed, 1);
+    disarm_all();
+}
+
+/// Seeded chaos storm over a 2-tenant request mix with caller-side
+/// cancellations: every ticket resolves to exactly one typed outcome
+/// (no stranded waiter), counters reconcile exactly, every completed
+/// result is bitwise equal to the direct path, and the storm spawns
+/// zero threads.
+#[test]
+fn chaos_storm_reconciles_and_stays_bitwise() {
+    let _g = serial();
+    disarm_all();
+
+    let coord = coordinator();
+    let spec = kws(21);
+    let d = coord.deploy(&spec).unwrap();
+    let mut rng = Rng::new(71);
+    let sizes = [1usize, 2, 3, 1, 2, 3, 1, 2, 3, 1, 2, 3];
+    let batches: Vec<Vec<Vec<i32>>> = sizes
+        .iter()
+        .map(|&n| (0..n).map(|_| d.random_input(&mut rng)).collect())
+        .collect();
+
+    // direct-path reference (also warms the fleet so the spawn counter
+    // below measures the storm, not provisioning)
+    let width = global().width();
+    let direct: Vec<Vec<Vec<i32>>> = batches
+        .iter()
+        .map(|imgs| {
+            d.infer_scheduled_on(
+                &op(),
+                imgs,
+                pick_schedule(imgs.len(), width),
+                ExecRuntime::Global,
+            )
+            .unwrap()
+            .into_iter()
+            .map(|r| r.logits)
+            .collect()
+        })
+        .collect();
+    let spawned_before = global().telemetry().spawned_threads;
+
+    arm_seed(0xC0FFEE);
+    let gateway = Gateway::new(coord.clone(), GatewayConfig {
+        queue_depth: 32,
+        per_tenant_inflight: 32,
+        threads: 2,
+        ..GatewayConfig::default()
+    })
+    .unwrap();
+    let tickets: Vec<_> = batches
+        .iter()
+        .enumerate()
+        .map(|(i, imgs)| {
+            let tenant = if i % 2 == 0 { "alpha" } else { "beta" };
+            let prio =
+                if i % 3 == 0 { Priority::High } else { Priority::Normal };
+            // far deadlines: only the seeded reaper sheds
+            gateway
+                .submit(
+                    tenant,
+                    &spec,
+                    &op(),
+                    imgs.clone(),
+                    prio,
+                    Some(Duration::from_secs(60)),
+                )
+                .expect("admission is not under chaos here")
+        })
+        .collect();
+    // caller-side cancellations racing the dispatcher: either outcome
+    // of the race is legal, both must stay accounted
+    for (i, t) in tickets.iter().enumerate() {
+        if i % 5 == 0 {
+            match t.cancel() {
+                CancelOutcome::Cancelled
+                | CancelOutcome::AlreadyStarted => {}
+            }
+        }
+    }
+
+    let (mut ok, mut cancelled, mut shed, mut panicked) = (0u64, 0, 0, 0);
+    for (i, t) in tickets.into_iter().enumerate() {
+        // the invariant under test: wait() always resolves, to exactly
+        // one typed outcome
+        match t.wait() {
+            Ok(done) => {
+                let logits: Vec<Vec<i32>> = done
+                    .results
+                    .into_iter()
+                    .map(|r| r.logits)
+                    .collect();
+                assert_eq!(
+                    logits, direct[i],
+                    "request {i}: chaos changed the bits"
+                );
+                ok += 1;
+            }
+            Err(e) => match e.downcast_ref::<ServeError>() {
+                Some(ServeError::Cancelled { .. }) => cancelled += 1,
+                Some(ServeError::DeadlineExceeded { .. }) => shed += 1,
+                Some(ServeError::Panicked { .. }) => panicked += 1,
+                None => panic!("untyped failure under chaos: {e:#}"),
+            },
+        }
+    }
+    disarm_all();
+
+    let snap = gateway.telemetry().snapshot();
+    assert_eq!(snap.submitted, 12);
+    assert_eq!(snap.admitted, 12);
+    assert_eq!(snap.completed, ok);
+    assert_eq!(snap.cancelled, cancelled);
+    assert_eq!(snap.shed, shed);
+    assert_eq!(snap.panicked, panicked);
+    assert_eq!(snap.failed, 0);
+    assert!(snap.reconciles(), "lifecycle identity broken: {snap:?}");
+    assert_eq!(
+        global().telemetry().spawned_threads,
+        spawned_before,
+        "the chaos storm must spawn zero worker threads"
+    );
+}

@@ -1,8 +1,10 @@
 //! Serving-gateway integration tests: bitwise parity with the direct
 //! deployment path, zero threads spawned per served request, bounded
 //! admission (queue depth + per-tenant inflight), bounded low-priority
-//! starvation, deadline accounting, plan-cache quotas, and drain-on-
-//! shutdown semantics (ISSUE 8).
+//! starvation, deadline accounting, plan-cache quotas, drain-on-
+//! shutdown semantics (ISSUE 8), and the request lifecycle —
+//! cancellation, deadline shedding, brownout, counter reconciliation
+//! (ISSUE 10).
 
 #![cfg(feature = "native")]
 
@@ -12,7 +14,8 @@ use std::time::Duration;
 use marsellus::coordinator::Coordinator;
 use marsellus::dnn::{NetworkSpec, PrecisionConfig};
 use marsellus::gateway::{
-    pick_schedule, Gateway, GatewayConfig, Overload, Priority,
+    pick_schedule, CancelOutcome, Gateway, GatewayConfig, Overload,
+    Priority, ServeError,
 };
 use marsellus::power::OperatingPoint;
 use marsellus::runtime::{global, ExecRuntime, Runtime};
@@ -37,9 +40,8 @@ fn config(queue_depth: usize, inflight: usize) -> GatewayConfig {
     GatewayConfig {
         queue_depth,
         per_tenant_inflight: inflight,
-        default_deadline: None,
         threads: 2,
-        starvation_bound: 4,
+        ..GatewayConfig::default()
     }
 }
 
@@ -302,8 +304,8 @@ fn starvation_bound_caps_low_priority_wait() {
     }
 }
 
-/// A missed deadline is counted and flagged on the result — never
-/// dropped.
+/// With `shed_expired: false` (the serve-anyway knob) a missed
+/// deadline is counted and flagged on the result — never dropped.
 #[test]
 fn missed_deadlines_are_counted_not_dropped() {
     let coord = coordinator();
@@ -312,7 +314,11 @@ fn missed_deadlines_are_counted_not_dropped() {
     let mut rng = Rng::new(55);
     let img = d.random_input(&mut rng);
 
-    let gateway = Gateway::new(coord.clone(), config(16, 16)).unwrap();
+    let gateway = Gateway::new(coord.clone(), GatewayConfig {
+        shed_expired: false,
+        ..config(16, 16)
+    })
+    .unwrap();
     let done = gateway
         .submit(
             "t",
@@ -400,4 +406,247 @@ fn shutdown_drains_backlog_then_rejects() {
     let snap = gateway.telemetry().snapshot();
     assert_eq!(snap.completed, 3);
     assert_eq!(snap.rejected_shutdown, 1);
+}
+
+/// With `shed_expired: true` (the default) an expired request is shed
+/// by the queue-side reaper with a typed `DeadlineExceeded` — even on
+/// a paused gateway, proving the periodic idle sweep fires without a
+/// pop driving it.
+#[test]
+fn expired_deadline_is_shed_with_typed_error() {
+    let coord = coordinator();
+    let spec = kws(10);
+    let d = coord.deploy(&spec).unwrap();
+    let mut rng = Rng::new(58);
+    let img = d.random_input(&mut rng);
+
+    let gateway = Gateway::new(coord.clone(), config(16, 16)).unwrap();
+    gateway.pause();
+    let ticket = gateway
+        .submit(
+            "t",
+            &spec,
+            &op(),
+            vec![img],
+            Priority::High,
+            Some(Duration::from_nanos(1)),
+        )
+        .expect("admitted");
+    // never resumed: only the idle sweep can resolve this ticket
+    let err = ticket.wait().expect_err("expired before start must shed");
+    match err.downcast_ref::<ServeError>() {
+        Some(ServeError::DeadlineExceeded { id: _, late_us: _ }) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    let snap = gateway.telemetry().snapshot();
+    assert_eq!(snap.shed, 1);
+    assert_eq!(snap.completed, 0);
+    assert_eq!(snap.admitted, 1);
+    assert!(snap.reconciles(), "counters must reconcile: {snap:?}");
+    assert_eq!(gateway.queued(), 0, "shed request left the queue");
+}
+
+/// `Ticket::cancel` on a still-queued request removes it: the caller
+/// gets `CancelOutcome::Cancelled`, `wait` resolves to a typed
+/// `ServeError::Cancelled`, the tenant's inflight slot is released
+/// (a follow-up submit under a cap of 1 is admitted), and a second
+/// cancel is acknowledged-but-ignored.
+#[test]
+fn cancel_removes_queued_request_and_releases_inflight() {
+    let coord = coordinator();
+    let spec = kws(11);
+    let d = coord.deploy(&spec).unwrap();
+    let mut rng = Rng::new(59);
+    let img = d.random_input(&mut rng);
+
+    let gateway = Gateway::new(coord.clone(), config(16, 1)).unwrap();
+    gateway.pause();
+    let victim = gateway
+        .submit("t", &spec, &op(), vec![img.clone()], Priority::Normal, None)
+        .expect("admitted");
+    assert_eq!(victim.cancel(), CancelOutcome::Cancelled);
+    assert_eq!(
+        victim.cancel(),
+        CancelOutcome::AlreadyStarted,
+        "second cancel finds nothing queued and is ignored"
+    );
+    // inflight released while still paused: with per_tenant_inflight 1
+    // the same tenant admits again only if the cancel freed its slot
+    let survivor = gateway
+        .submit("t", &spec, &op(), vec![img], Priority::Normal, None)
+        .expect("cancel must release the tenant's inflight slot");
+    gateway.resume();
+
+    let err = victim.wait().expect_err("cancelled tickets resolve to Err");
+    match err.downcast_ref::<ServeError>() {
+        Some(ServeError::Cancelled { id: _ }) => {}
+        other => panic!("expected Cancelled, got {other:?}"),
+    }
+    assert_eq!(survivor.wait().unwrap().results.len(), 1);
+
+    let snap = gateway.telemetry().snapshot();
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(snap.completed, 1);
+    assert!(snap.reconciles(), "counters must reconcile: {snap:?}");
+    let row = snap.tenants.iter().find(|t| t.tenant == "t").unwrap();
+    assert_eq!(row.cancelled, 1);
+}
+
+/// Cancelling after the dispatcher already popped the request is
+/// acknowledged-but-ignored: the caller still gets the completed
+/// result.
+#[test]
+fn cancel_after_start_is_ignored() {
+    let coord = coordinator();
+    let spec = kws(12);
+    let d = coord.deploy(&spec).unwrap();
+    let mut rng = Rng::new(60);
+    let img = d.random_input(&mut rng);
+
+    let gateway = Gateway::new(coord.clone(), config(16, 16)).unwrap();
+    let ticket = gateway
+        .submit("t", &spec, &op(), vec![img], Priority::Normal, None)
+        .expect("admitted");
+    // wait for the request to finish, then cancel: it is long gone from
+    // the queue, so the cancel must be a no-op acknowledgement
+    while gateway.telemetry().snapshot().completed == 0 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(ticket.cancel(), CancelOutcome::AlreadyStarted);
+    assert_eq!(ticket.wait().expect("result survives the cancel").results.len(), 1);
+    let snap = gateway.telemetry().snapshot();
+    assert_eq!(snap.cancelled, 0);
+    assert_eq!(snap.completed, 1);
+}
+
+/// Brownout: past the queue-depth watermark, low-priority submissions
+/// are rejected with a typed `Overload::Brownout` while high-priority
+/// requests are admitted, served on a degraded (narrower) schedule,
+/// and still produce logits bitwise equal to the direct path.
+#[test]
+fn brownout_rejects_low_and_degrades_admitted_bitwise_equal() {
+    let coord = coordinator();
+    let spec = kws(13);
+    let d = coord.deploy(&spec).unwrap();
+    let mut rng = Rng::new(61);
+    let imgs: Vec<Vec<i32>> = (0..3).map(|_| d.random_input(&mut rng)).collect();
+
+    // direct path at full width: degraded serving must not change bits
+    let width = global().width();
+    let direct: Vec<Vec<i32>> = d
+        .infer_scheduled_on(
+            &op(),
+            &imgs,
+            pick_schedule(imgs.len(), width),
+            ExecRuntime::Global,
+        )
+        .unwrap()
+        .into_iter()
+        .map(|r| r.logits)
+        .collect();
+
+    let gateway = Gateway::new(coord.clone(), GatewayConfig {
+        brownout_watermark: 1,
+        brownout_lanes: 1,
+        ..config(16, 16)
+    })
+    .unwrap();
+    gateway.pause();
+    let high = gateway
+        .submit("hot", &spec, &op(), imgs.clone(), Priority::High, None)
+        .expect("high admitted below watermark");
+    // depth is now 1 >= watermark 1: low is browned out, high is not
+    let err = gateway
+        .submit("bulk", &spec, &op(), imgs.clone(), Priority::Low, None)
+        .expect_err("low-priority must be browned out");
+    assert_eq!(err, Overload::Brownout { depth: 1, watermark: 1 });
+    let high2 = gateway
+        .submit("hot", &spec, &op(), imgs.clone(), Priority::High, None)
+        .expect("high admitted during brownout");
+    gateway.resume();
+
+    let served: Vec<Vec<i32>> = high
+        .wait()
+        .unwrap()
+        .results
+        .into_iter()
+        .map(|r| r.logits)
+        .collect();
+    assert_eq!(direct, served, "degraded schedule changed the bits");
+    high2.wait().unwrap();
+
+    let snap = gateway.telemetry().snapshot();
+    assert_eq!(snap.rejected_brownout, 1);
+    assert!(
+        snap.degraded >= 1,
+        "popping above the watermark must count degraded serves: {snap:?}"
+    );
+    assert_eq!(snap.completed, 2);
+    assert!(snap.reconciles(), "counters must reconcile: {snap:?}");
+}
+
+/// One trace mixing every lifecycle outcome — completed, cancelled,
+/// shed, and brownout-rejected — reconciles exactly:
+/// submitted == admitted + rejected() and
+/// admitted == completed + failed + cancelled + shed + panicked.
+#[test]
+fn counters_reconcile_under_mixed_outcomes() {
+    let coord = coordinator();
+    let spec = kws(14);
+    let d = coord.deploy(&spec).unwrap();
+    let mut rng = Rng::new(62);
+    let img = d.random_input(&mut rng);
+
+    let gateway = Gateway::new(coord.clone(), GatewayConfig {
+        brownout_watermark: 1,
+        ..config(16, 16)
+    })
+    .unwrap();
+    gateway.pause();
+    // stays queued (no deadline, paused) until cancelled below
+    let cancelled = gateway
+        .submit("a", &spec, &op(), vec![img.clone()], Priority::High, None)
+        .expect("admitted");
+    // depth >= 1: low priority is browned out deterministically
+    gateway
+        .submit("b", &spec, &op(), vec![img.clone()], Priority::Low, None)
+        .expect_err("browned out");
+    // expired before it can start: shed by the idle sweep
+    let shed = gateway
+        .submit(
+            "a",
+            &spec,
+            &op(),
+            vec![img.clone()],
+            Priority::High,
+            Some(Duration::from_nanos(1)),
+        )
+        .expect("admitted");
+    // no deadline: completes after resume
+    let completed = gateway
+        .submit("b", &spec, &op(), vec![img], Priority::High, None)
+        .expect("admitted");
+    assert_eq!(cancelled.cancel(), CancelOutcome::Cancelled);
+    gateway.resume();
+
+    assert!(matches!(
+        cancelled.wait().unwrap_err().downcast_ref::<ServeError>(),
+        Some(ServeError::Cancelled { .. })
+    ));
+    assert!(matches!(
+        shed.wait().unwrap_err().downcast_ref::<ServeError>(),
+        Some(ServeError::DeadlineExceeded { .. })
+    ));
+    assert_eq!(completed.wait().unwrap().results.len(), 1);
+
+    let snap = gateway.telemetry().snapshot();
+    assert_eq!(snap.submitted, 4);
+    assert_eq!(snap.admitted, 3);
+    assert_eq!(snap.rejected(), 1);
+    assert_eq!(snap.rejected_brownout, 1);
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(snap.shed, 1);
+    assert_eq!(snap.panicked, 0);
+    assert!(snap.reconciles(), "lifecycle identity broken: {snap:?}");
 }

@@ -32,9 +32,10 @@ use marsellus::analysis::explore::{
 use marsellus::analysis::sync::{AtomicUsize, Condvar, Mutex};
 use marsellus::dnn::{NetworkSpec, PrecisionConfig};
 use marsellus::gateway::model::{
-    pop_next, QueueState, ReplySlot, Request,
+    cancel_queued, pop_next, release_inflight, shed_expired, QueueState,
+    ReplySlot, Request,
 };
-use marsellus::gateway::{Completed, Priority, Ticket};
+use marsellus::gateway::{Completed, Priority, ServeError, Ticket};
 use marsellus::power::OperatingPoint;
 
 fn opts(max_schedules: usize) -> ExploreOpts {
@@ -519,6 +520,207 @@ fn pop_order_spec_holds_under_concurrent_submission() {
         for s in submitters {
             s.join();
         }
+    });
+    assert!(report.schedules > 10, "trivial exploration: {report:?}");
+}
+
+// ---------------------------------------------------------------------
+// Cancellation and deadline-reap races (real cancel_queued /
+// shed_expired / release_inflight under the explorer)
+// ---------------------------------------------------------------------
+
+/// `Ticket::cancel` racing the dispatcher's pop, over the REAL
+/// `cancel_queued`: in every explored schedule exactly one side fills
+/// the reply slot (the canceller only when the request was still
+/// queued), the waiter resolves, and the inflight slot releases
+/// exactly once.
+#[test]
+fn cancel_vs_pop_resolves_exactly_once() {
+    let report = explore(opts(30_000), || {
+        let state = Arc::new(Mutex::new(QueueState::new()));
+        let fills = Arc::new(AtomicUsize::new(0));
+        let slot = {
+            let mut st = state.lock().unwrap();
+            let req = model_request(0, Priority::Normal);
+            let slot = req.reply.clone();
+            *st.inflight.entry("t".into()).or_insert(0) += 1;
+            st.queue.push(req);
+            slot
+        };
+        // dispatcher: pop if still queued, release inflight under the
+        // lock, fill Ok outside it (the shipped serve shape)
+        let disp_state = state.clone();
+        let disp_fills = fills.clone();
+        let dispatcher = spawn(move || {
+            let popped = {
+                let mut st = disp_state.lock().unwrap();
+                let popped = pop_next(&mut st, 2);
+                if let Some(req) = &popped {
+                    release_inflight(&mut st, &req.tenant);
+                }
+                popped
+            };
+            if let Some(req) = popped {
+                disp_fills.fetch_add(1, Ordering::SeqCst);
+                req.reply.fill(Ok(completed(1)));
+            }
+        });
+        // canceller: the shipped cancel_request shape — fill ONLY when
+        // cancel_queued actually removed the request
+        let cxl_state = state.clone();
+        let cxl_fills = fills.clone();
+        let canceller = spawn(move || {
+            let cancelled = {
+                let mut st = cxl_state.lock().unwrap();
+                cancel_queued(&mut st, 0)
+            };
+            if let Some(req) = cancelled {
+                cxl_fills.fetch_add(1, Ordering::SeqCst);
+                req.reply
+                    .fill(Err(ServeError::Cancelled { id: 0 }.into()));
+            }
+        });
+        // waiter: either outcome of the race is legal; resolving is not
+        // optional
+        let _ = Ticket::for_model(0, slot).wait();
+        dispatcher.join();
+        canceller.join();
+        assert_eq!(
+            fills.load(Ordering::SeqCst),
+            1,
+            "invariant: exactly one terminal fill per request"
+        );
+        assert!(
+            state.lock().unwrap().inflight.is_empty(),
+            "invariant: inflight slot released exactly once"
+        );
+    });
+    assert!(report.schedules > 10, "trivial exploration: {report:?}");
+}
+
+/// Counter-model: a cancel that fills the reply slot without checking
+/// whether the dispatcher already popped the request mutates a slot it
+/// no longer owns — in the schedule where the pop wins, the request
+/// resolves twice. The explorer must find that schedule.
+#[test]
+fn cancel_after_pop_mutating_the_slot_is_caught() {
+    let err = explore_collect(opts(30_000), || {
+        let state = Arc::new(Mutex::new(QueueState::new()));
+        let fills = Arc::new(AtomicUsize::new(0));
+        let slot = {
+            let mut st = state.lock().unwrap();
+            let req = model_request(0, Priority::Normal);
+            let slot = req.reply.clone();
+            st.queue.push(req);
+            slot
+        };
+        let disp_state = state.clone();
+        let disp_fills = fills.clone();
+        let dispatcher = spawn(move || {
+            let popped = {
+                let mut st = disp_state.lock().unwrap();
+                pop_next(&mut st, 2)
+            };
+            if let Some(req) = popped {
+                disp_fills.fetch_add(1, Ordering::SeqCst);
+                req.reply.fill(Ok(completed(1)));
+            }
+        });
+        let cxl_state = state.clone();
+        let cxl_fills = fills.clone();
+        let cxl_slot = slot.clone();
+        let canceller = spawn(move || {
+            {
+                let mut st = cxl_state.lock().unwrap();
+                let _ = cancel_queued(&mut st, 0);
+            }
+            // BROKEN: fill unconditionally — even when cancel_queued
+            // returned None because the pop already won the race
+            cxl_fills.fetch_add(1, Ordering::SeqCst);
+            cxl_slot.fill(Err(ServeError::Cancelled { id: 0 }.into()));
+        });
+        let _ = Ticket::for_model(0, slot).wait();
+        dispatcher.join();
+        canceller.join();
+        assert_eq!(
+            fills.load(Ordering::SeqCst),
+            1,
+            "invariant: exactly one terminal fill per request"
+        );
+    })
+    .expect_err("explorer must catch the double fill");
+    assert!(
+        err.contains("exactly one terminal fill"),
+        "unexpected failure: {err}"
+    );
+}
+
+/// The deadline reaper racing the dispatcher's pop, over the REAL
+/// `shed_expired`: the expired request is resolved exactly once —
+/// either shed with `DeadlineExceeded` or served (serve-anyway pop) —
+/// and its inflight slot releases exactly once. The sweep time is a
+/// parameter (`shed_expired` never reads the clock), keeping every
+/// explored schedule control-flow deterministic.
+#[test]
+fn reaper_vs_completion_resolves_exactly_once() {
+    let report = explore(opts(30_000), || {
+        let state = Arc::new(Mutex::new(QueueState::new()));
+        let fills = Arc::new(AtomicUsize::new(0));
+        let (slot, reap_now) = {
+            let mut st = state.lock().unwrap();
+            let mut req = model_request(0, Priority::Normal);
+            // expired relative to the reaper's sweep instant below
+            req.deadline = Some(req.submitted);
+            let reap_now = req.submitted + Duration::from_secs(1);
+            let slot = req.reply.clone();
+            *st.inflight.entry("t".into()).or_insert(0) += 1;
+            st.queue.push(req);
+            (slot, reap_now)
+        };
+        let disp_state = state.clone();
+        let disp_fills = fills.clone();
+        let dispatcher = spawn(move || {
+            let popped = {
+                let mut st = disp_state.lock().unwrap();
+                let popped = pop_next(&mut st, 2);
+                if let Some(req) = &popped {
+                    release_inflight(&mut st, &req.tenant);
+                }
+                popped
+            };
+            if let Some(req) = popped {
+                disp_fills.fetch_add(1, Ordering::SeqCst);
+                req.reply.fill(Ok(completed(1)));
+            }
+        });
+        let reap_state = state.clone();
+        let reap_fills = fills.clone();
+        let reaper = spawn(move || {
+            let expired = {
+                let mut st = reap_state.lock().unwrap();
+                shed_expired(&mut st, reap_now)
+            };
+            for req in expired {
+                reap_fills.fetch_add(1, Ordering::SeqCst);
+                req.reply.fill(Err(ServeError::DeadlineExceeded {
+                    id: req.id,
+                    late_us: 0,
+                }
+                .into()));
+            }
+        });
+        let _ = Ticket::for_model(0, slot).wait();
+        dispatcher.join();
+        reaper.join();
+        assert_eq!(
+            fills.load(Ordering::SeqCst),
+            1,
+            "invariant: exactly one terminal fill per request"
+        );
+        assert!(
+            state.lock().unwrap().inflight.is_empty(),
+            "invariant: inflight slot released exactly once"
+        );
     });
     assert!(report.schedules > 10, "trivial exploration: {report:?}");
 }
